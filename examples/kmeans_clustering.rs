@@ -1,0 +1,95 @@
+//! K-means clustering on the PIM device: iterate assignment (PIM,
+//! AOT-compiled kernel) + centroid update (host) until the centroids
+//! stop moving, then report inertia and how well the generating blob
+//! centers were recovered.
+//!
+//! Run: `cargo run --release --example kmeans_clustering [points]`
+
+use simplepim::pim::PimConfig;
+use simplepim::workloads::kmeans::{self, DIM, K};
+use simplepim::{PimSystem, Result};
+
+fn inertia(x: &[i32], c: &[i32], k: usize, dim: usize) -> f64 {
+    let n = x.len() / dim;
+    (0..n)
+        .map(|i| {
+            let row = &x[i * dim..(i + 1) * dim];
+            (0..k)
+                .map(|cc| {
+                    row.iter()
+                        .zip(&c[cc * dim..(cc + 1) * dim])
+                        .map(|(a, b)| ((a - b) as f64).powi(2))
+                        .sum::<f64>()
+                })
+                .fold(f64::MAX, f64::min)
+        })
+        .sum::<f64>()
+        / n as f64
+}
+
+/// Greedy-match recovered centroids to generating centers; mean L2.
+fn recovery_error(found: &[i32], truth: &[i32], k: usize, dim: usize) -> f64 {
+    let mut used = vec![false; k];
+    let mut total = 0f64;
+    for c in 0..k {
+        let row = &truth[c * dim..(c + 1) * dim];
+        let (mut best, mut best_d) = (0usize, f64::MAX);
+        for f in 0..k {
+            if used[f] {
+                continue;
+            }
+            let d: f64 = row
+                .iter()
+                .zip(&found[f * dim..(f + 1) * dim])
+                .map(|(a, b)| ((a - b) as f64).powi(2))
+                .sum();
+            if d < best_d {
+                best_d = d;
+                best = f;
+            }
+        }
+        used[best] = true;
+        total += best_d.sqrt();
+    }
+    total / k as f64
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let n_points: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(60_000);
+
+    println!("=== SimplePIM K-means: {n_points} points, {K} clusters, {DIM} dims ===\n");
+    let (x, true_centers) = kmeans::generate(7, n_points, K, DIM);
+
+    let mut sys = PimSystem::new(PimConfig::upmem(64))?;
+    kmeans::setup(&mut sys, &x, DIM)?;
+
+    // Initialize from the first K points (deterministic).
+    let mut c: Vec<i32> = x[..K * DIM].to_vec();
+    println!("iter   inertia        moved");
+    for iter in 0..50 {
+        let next = kmeans::iterate(&mut sys, &c, K, DIM, iter)?;
+        let moved: i64 = next
+            .iter()
+            .zip(&c)
+            .map(|(a, b)| ((a - b) as i64).abs())
+            .sum();
+        println!("{iter:>4}   {:>12.1}   {moved:>6}", inertia(&x, &next, K, DIM));
+        let converged = next == c;
+        c = next;
+        if converged {
+            println!("converged after {iter} iterations");
+            break;
+        }
+    }
+    kmeans::teardown(&mut sys)?;
+
+    let err = recovery_error(&c, &true_centers, K, DIM);
+    println!("\nmean distance recovered-centroid -> generating-center: {err:.2} (feature range 0..256)");
+    assert!(err < 24.0, "centroids should land near the generating blobs");
+
+    let t = sys.timeline();
+    println!("modeled PIM time: {:.1} ms across {} launches", t.total_s() * 1e3, t.launches);
+    println!("kmeans_clustering OK");
+    Ok(())
+}

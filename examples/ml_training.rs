@@ -1,0 +1,107 @@
+//! End-to-end driver: quantized logistic-regression training on the
+//! full three-layer stack (DESIGN.md §6's validation experiment).
+//!
+//! Trains on a synthetic binary-classification corpus for several
+//! hundred SGD steps.  Every gradient is computed by the AOT-compiled
+//! Pallas/XLA kernel running under the Rust coordinator on the
+//! simulated PIM machine; the host merges per-DPU partials and updates
+//! the weights (the paper's training pattern for pim-ml workloads).
+//! Logs the loss curve, final accuracy, and the modeled PIM time, and
+//! cross-checks the final weights against a pure-host training run
+//! (bit-identical, since the whole stack is integer-exact).
+//!
+//! Run: `cargo run --release --example ml_training [steps] [points]`
+
+use simplepim::pim::PimConfig;
+use simplepim::workloads::fixed::{from_fixed, sigmoid_fixed, ONE};
+use simplepim::workloads::{golden, logreg};
+use simplepim::{PimSystem, Result};
+
+/// Fixed-point cross-entropy-ish loss (mean |sigmoid(pred) - y|).
+fn loss(x: &[i32], y: &[i32], w: &[i32], dim: usize) -> f64 {
+    let n = y.len();
+    let mut acc = 0f64;
+    for i in 0..n {
+        let s = sigmoid_fixed(golden::pred_fixed(&x[i * dim..(i + 1) * dim], w));
+        acc += (s - y[i]).abs() as f64 / ONE as f64;
+    }
+    acc / n as f64
+}
+
+fn accuracy(x: &[i32], y: &[i32], w: &[i32], dim: usize) -> f64 {
+    let n = y.len();
+    let ok = (0..n)
+        .filter(|&i| {
+            let s = sigmoid_fixed(golden::pred_fixed(&x[i * dim..(i + 1) * dim], w));
+            (s >= ONE / 2) == (y[i] == ONE)
+        })
+        .count();
+    ok as f64 / n as f64
+}
+
+/// One SGD update, integer-exact (shift-based learning rate).
+fn update(w: &mut [i32], grad: &[i32], n: i64) {
+    for (wi, gi) in w.iter_mut().zip(grad) {
+        *wi = wi.wrapping_sub((*gi as i64 * 32 / n.max(1)) as i32);
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let steps: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(300);
+    let n_points: usize = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(40_000);
+    let dim = logreg::DIM;
+
+    println!("=== SimplePIM end-to-end: logistic regression training ===");
+    println!("corpus: {n_points} points x {dim} features (int32 fixed-point)");
+    println!("steps : {steps}\n");
+
+    let (x, y, true_w) = logreg::generate(2024, n_points, dim);
+
+    // --- PIM training (XLA kernels under the Rust coordinator).
+    let mut sys = PimSystem::new(PimConfig::upmem(64))?;
+    logreg::setup(&mut sys, &x, &y, dim)?;
+    let mut w = vec![0i32; dim];
+    println!(
+        "init       loss {:.4}  acc {:.3}",
+        loss(&x, &y, &w, dim),
+        accuracy(&x, &y, &w, dim)
+    );
+    let t0 = std::time::Instant::now();
+    for step in 0..steps {
+        let grad = logreg::gradient_step(&mut sys, &w, step)?;
+        update(&mut w, &grad, n_points as i64);
+        if step % (steps / 10).max(1) == 0 || step + 1 == steps {
+            println!(
+                "step {step:>4}  loss {:.4}  acc {:.3}",
+                loss(&x, &y, &w, dim),
+                accuracy(&x, &y, &w, dim)
+            );
+        }
+    }
+    let wall = t0.elapsed();
+    logreg::teardown(&mut sys)?;
+
+    // --- Host replay: the integer-exact stack must reproduce the same
+    //     trajectory bit-for-bit.
+    let mut w_host = vec![0i32; dim];
+    for _ in 0..steps {
+        let grad = golden::logreg_grad(&x, &y, &w_host, dim);
+        update(&mut w_host, &grad, n_points as i64);
+    }
+    assert_eq!(w, w_host, "PIM training must be bit-identical to host replay");
+
+    let t = sys.timeline();
+    let stats = sys.exec_stats();
+    println!("\nfinal weights (dequantized) vs generating weights:");
+    for (wi, ti) in w.iter().zip(&true_w) {
+        println!("  {:>8.4}   (true {:>8.4})", from_fixed(*wi), from_fixed(*ti));
+    }
+    println!("\nfinal: loss {:.4}, accuracy {:.3}", loss(&x, &y, &w, dim), accuracy(&x, &y, &w, dim));
+    println!("bit-identical host replay: OK");
+    println!("\nmodeled PIM time for {steps} steps: {:.1} ms ({:.3} ms/step)", t.total_s() * 1e3, t.total_s() * 1e3 / steps as f64);
+    println!("  kernel {:.1} ms | h2p {:.1} ms | p2h {:.1} ms | merge {:.1} ms | {} launches",
+        t.kernel_s * 1e3, t.host_to_pim_s * 1e3, t.pim_to_host_s * 1e3, t.host_merge_s * 1e3, t.launches);
+    println!("executor: {} XLA calls ({} compiles) in {:.2} s wall", stats.calls, stats.compiles, wall.as_secs_f64());
+    Ok(())
+}

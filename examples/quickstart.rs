@@ -1,0 +1,67 @@
+//! Quickstart: the SimplePIM programming model in one file.
+//!
+//! Mirrors the paper's §3 walk-through: scatter arrays to the PIM
+//! device, zip them lazily, run map/reduce iterators (AOT-compiled XLA
+//! kernels on the request path), gather results, and inspect the
+//! modeled PIM timeline.
+//!
+//! Run: `cargo run --release --example quickstart`
+//! (requires `make artifacts`; add `--host-only` logic via
+//! `PimSystem::host_only` if artifacts are unavailable.)
+
+use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
+use simplepim::pim::PimConfig;
+use simplepim::workloads::golden;
+use simplepim::Result;
+
+fn main() -> Result<()> {
+    // A 64-DPU UPMEM-like machine (one rank).
+    let mut sys = PimSystem::new(PimConfig::upmem(64))?;
+    println!("machine: {} DPUs, XLA runtime: {}", sys.machine.n_dpus(), sys.has_runtime());
+
+    // --- 1. Host -> PIM: scatter two vectors across the DPU banks.
+    let n = 1 << 20;
+    let x: Vec<i32> = (0..n).map(|i| i % 1000).collect();
+    let y: Vec<i32> = (0..n).map(|i| 2 * (i % 500) + 1).collect();
+    sys.scatter("x", &x, 4)?;
+    sys.scatter("y", &y, 4)?;
+    println!("scattered 2 x {n} i32 across {} DPUs", sys.machine.n_dpus());
+
+    // --- 2. Lazy zip + map: elementwise add without materializing the
+    //        zipped array (paper §4.2.3).
+    sys.array_zip("x", "y", "xy")?;
+    let add = sys.create_handle(PimFunc::VecAdd, TransformKind::Map, vec![])?;
+    sys.array_map("xy", "sum", &add)?;
+
+    // --- 3. Map with broadcast context: out = 3*sum + 7.
+    let affine = sys.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![3, 7])?;
+    sys.array_map("sum", "scaled", &affine)?;
+
+    // --- 4. General reduction: total of the scaled array.
+    let red = sys.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![])?;
+    let total = sys.array_red("scaled", "total", 1, &red)?[0];
+
+    // --- 5. PIM -> host: gather and verify against the host golden.
+    let scaled = sys.gather("scaled")?;
+    let want: Vec<i32> = golden::map_affine(&golden::vecadd(&x, &y), 3, 7);
+    assert_eq!(scaled, want, "XLA path must match the host golden");
+    assert_eq!(total, golden::reduce_sum(&want));
+    println!("verified {} elements; reduction total = {total}", scaled.len());
+
+    // --- 6. The modeled PIM timeline for everything above.
+    let t = sys.timeline();
+    println!("\nmodeled PIM timeline:");
+    println!("  host->pim   {:>9.3} ms ({} B)", t.host_to_pim_s * 1e3, t.bytes_h2p);
+    println!("  kernels     {:>9.3} ms ({} launches)", t.kernel_s * 1e3, t.launches);
+    println!("  pim->host   {:>9.3} ms ({} B)", t.pim_to_host_s * 1e3, t.bytes_p2h);
+    println!("  host merge  {:>9.3} ms", t.host_merge_s * 1e3);
+    println!("  total       {:>9.3} ms", t.total_s() * 1e3);
+
+    // --- 7. Clean up (management interface: free).
+    for id in ["x", "y", "xy", "sum", "scaled", "total"] {
+        sys.free_array(id)?;
+    }
+    assert_eq!(sys.machine.mram_used(), 0);
+    println!("\nquickstart OK");
+    Ok(())
+}

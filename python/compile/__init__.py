@@ -1,0 +1,5 @@
+"""Build-time compile path: L1 Pallas kernels + L2 JAX models + AOT.
+
+Nothing in this package is imported at runtime; the Rust binary consumes
+only the ``artifacts/`` directory this package produces.
+"""

@@ -1,0 +1,88 @@
+"""AOT lowering: JAX/Pallas -> HLO **text** artifacts + manifest.
+
+Emits one ``<name>.hlo.txt`` per :class:`~compile.model.ArtifactSpec` and a
+``manifest.json`` that the Rust runtime (``rust/src/runtime/artifact.rs``)
+reads to know the input/output shapes and workload parameters.
+
+HLO *text* — not ``HloModuleProto.serialize()`` — is the interchange
+format: jax >= 0.5 emits protos with 64-bit instruction ids which the xla
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly.  Lowered with
+``return_tuple=True`` so the Rust side always unwraps a tuple.
+
+Usage (from the ``python/`` directory, normally via ``make artifacts``):
+
+    python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import build_specs
+
+
+def to_hlo_text(lowered, return_tuple: bool) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=return_tuple
+    )
+    return comp.as_hlo_text()
+
+
+def lower_spec(spec) -> str:
+    lowered = jax.jit(spec.fn).lower(*spec.input_specs())
+    # Single-output executables are lowered WITHOUT the tuple wrapper so
+    # the Rust runtime can pull results with the zero-intermediate
+    # `copy_raw_to_host_sync` path (EXPERIMENTS.md §Perf); multi-output
+    # ones (kmeans) keep the tuple.
+    return to_hlo_text(lowered, return_tuple=len(spec.outputs) != 1)
+
+
+def main() -> None:
+    parser = argparse.ArgumentParser(description="AOT-lower SimplePIM kernels")
+    parser.add_argument("--out", default="../artifacts", help="output directory")
+    parser.add_argument(
+        "--only", default=None, help="comma-separated artifact-name filter (substring match)"
+    )
+    args = parser.parse_args()
+
+    os.makedirs(args.out, exist_ok=True)
+    filters = args.only.split(",") if args.only else None
+
+    manifest = {"format": 1, "artifacts": []}
+    for spec in build_specs():
+        if filters and not any(f in spec.name for f in filters):
+            continue
+        text = lower_spec(spec)
+        fname = f"{spec.name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"].append(
+            {
+                "name": spec.name,
+                "file": fname,
+                "workload": spec.workload,
+                "params": spec.params,
+                "inputs": [{"shape": list(s), "dtype": d} for s, d in spec.inputs],
+                "outputs": [{"shape": list(s), "dtype": d} for s, d in spec.outputs],
+                "sha256_16": digest,
+            }
+        )
+        print(f"  lowered {spec.name:36s} -> {fname} ({len(text)} chars)", file=sys.stderr)
+
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['artifacts'])} artifacts to {args.out}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

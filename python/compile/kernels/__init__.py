@@ -1,0 +1,24 @@
+"""L1: Pallas kernels for the SimplePIM workloads' compute hot-spots.
+
+One kernel per paper workload (plus the affine map used by the
+quickstart), all int32, all tiled by BlockSpecs that mirror the UPMEM
+WRAM batching schedule (see DESIGN.md §4 Hardware-Adaptation).
+``ref`` holds the pure-numpy oracle the kernels are tested against.
+"""
+
+from .elementwise import map_affine, vecadd
+from .ml import kmeans_partial, linreg_grad, logreg_grad
+from .reduction import histogram, reduce_sum
+from .scan import add_base, scan_local
+
+__all__ = [
+    "vecadd",
+    "map_affine",
+    "reduce_sum",
+    "histogram",
+    "linreg_grad",
+    "logreg_grad",
+    "kmeans_partial",
+    "scan_local",
+    "add_base",
+]

@@ -1,0 +1,82 @@
+"""Shared constants and helpers for the SimplePIM Pallas kernels (L1).
+
+All workloads operate on 32-bit integers, matching the paper's setup: the
+UPMEM DPU emulates floating point in software (tens to ~2000 cycles per
+op), so the paper's ML workloads quantize to int32 fixed-point with
+shift-based rescaling.  We reproduce that arithmetic *exactly* so that the
+Pallas kernels, the pure-jnp/numpy reference oracle (ref.py), and the Rust
+host goldens all produce bit-identical results.
+
+Fixed-point format
+------------------
+``FRAC`` fractional bits, ``ONE = 1 << FRAC``.  Multiplication of two
+fixed-point values is ``(a * b) >> FRAC`` (arithmetic shift, i32
+wraparound semantics — XLA, numpy, and Rust ``i32`` all agree on this).
+
+The sigmoid used by logistic regression is the Taylor approximation the
+paper adopts from pim-ml (Qin et al. [79]):
+
+    sigmoid(z) ~= 1/2 + z/4 - z^3/48        (|z| clamped to 2.0)
+
+with the 1/48 division realized as a fixed-point multiply by
+``INV48 = round(ONE / 48)`` — branch-free and division-free, exactly as a
+DPU implementation would do it (the DPU has no integer divide either).
+
+WRAM-batch mapping (Hardware Adaptation, DESIGN.md §4)
+------------------------------------------------------
+``BLOCK_*`` are the per-grid-step block sizes.  They play the role of the
+UPMEM WRAM batch: the paper streams MRAM->WRAM in the largest aligned
+batches that fit the 64 KB scratchpad; our BlockSpecs tile HBM->VMEM the
+same way, and every kernel's working set is kept under the same 64 KB
+budget (see ``wram_footprint`` below, asserted at AOT time).
+"""
+
+import jax.numpy as jnp
+
+# --- fixed-point format (must match rust/src/workloads/fixed.rs) ---------
+FRAC = 10
+ONE = 1 << FRAC
+HALF = ONE // 2
+INV48 = round(ONE / 48)  # 21 for FRAC=10
+SIG_CLAMP = 2 * ONE  # clamp |z| <= 2.0 before the Taylor expansion
+
+# --- histogram key function (paper §3.3: 12-bit pixel values) ------------
+HIST_VALUE_BITS = 12  # input values are in [0, 4095]
+
+# --- default block (WRAM batch) sizes, in elements ------------------------
+# 2048 int32 elements = 8 KB per buffer; with <=4 live buffers this is well
+# under the 64 KB WRAM budget and 4x the SDK's 2,048-*byte* DMA ceiling,
+# i.e. one block corresponds to 4 back-to-back maximal mram_read calls —
+# the schedule SimplePIM's transfer planner picks on real hardware.
+BLOCK_1D = 2048
+BLOCK_POINTS = 256  # ML workloads: points per block (x block is 256xD)
+
+WRAM_BYTES = 64 * 1024
+
+
+def wram_footprint(block_shapes) -> int:
+    """Total bytes of the int32 blocks live in one grid step."""
+    total = 0
+    for shape in block_shapes:
+        n = 1
+        for d in shape:
+            n *= d
+        total += 4 * n
+    return total
+
+
+def fxmul(a, b):
+    """Fixed-point multiply: (a * b) >> FRAC with i32 wraparound."""
+    return (a * b) >> FRAC
+
+
+def sigmoid_fixed(z):
+    """Taylor-approximated sigmoid on FRAC-bit fixed point (jnp i32).
+
+    Mirrors ``ref.sigmoid_fixed_np`` and the Rust golden bit-for-bit.
+    """
+    zc = jnp.clip(z, -SIG_CLAMP, SIG_CLAMP)
+    z2 = (zc * zc) >> FRAC
+    z3 = (z2 * zc) >> FRAC
+    s = HALF + (zc >> 2) - ((z3 * INV48) >> FRAC)
+    return jnp.clip(s, 0, ONE)

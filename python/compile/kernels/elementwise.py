@@ -1,0 +1,76 @@
+"""L1 Pallas kernels for the elementwise workloads: vector addition and
+affine map.
+
+Vector addition is the paper's canonical zip+map workload: SimplePIM zips
+the two input arrays lazily and streams both through WRAM in one loop
+(§4.2.3), which is exactly what a fused two-input Pallas block achieves —
+both operand blocks are resident in VMEM for the same grid step and the
+output is produced without an intermediate zipped array ever being
+materialized in HBM/MRAM.
+
+The affine map (``o = a*x + b``) demonstrates the paper's *context*
+mechanism (``simple_pim_create_handle(..., data, data_size)``): the
+coefficients arrive as a small broadcast array that every grid step (every
+"tasklet batch") can read, the same way UPMEM kernels read broadcast
+context from the start of their MRAM heap.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK_1D
+
+
+def _vecadd_kernel(x_ref, y_ref, o_ref):
+    o_ref[...] = x_ref[...] + y_ref[...]
+
+
+def vecadd(x, y, *, block: int = BLOCK_1D):
+    """Elementwise i32 add over a gang of DPU-local arrays.
+
+    Args:
+      x, y: ``[G, N]`` i32 — one row per DPU in the gang.
+      block: WRAM-batch size in elements; ``N`` must be a multiple.
+
+    Returns:
+      ``[G, N]`` i32, ``x + y``.
+    """
+    g, n = x.shape
+    assert n % block == 0, f"N={n} not a multiple of block={block}"
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _vecadd_kernel,
+        grid=(g, n // block),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((g, n), jnp.int32),
+        interpret=True,
+    )(x, y)
+
+
+def _affine_kernel(x_ref, ctx_ref, o_ref):
+    a = ctx_ref[0]
+    b = ctx_ref[1]
+    o_ref[...] = a * x_ref[...] + b
+
+
+def map_affine(x, ctx, *, block: int = BLOCK_1D):
+    """Affine map ``o = ctx[0]*x + ctx[1]`` over a gang of local arrays.
+
+    Args:
+      x: ``[G, N]`` i32.
+      ctx: ``[2]`` i32 — broadcast context (the handle's ``data``).
+    """
+    g, n = x.shape
+    assert n % block == 0
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    ctx_spec = pl.BlockSpec((2,), lambda i, j: (0,))
+    return pl.pallas_call(
+        _affine_kernel,
+        grid=(g, n // block),
+        in_specs=[spec, ctx_spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((g, n), jnp.int32),
+        interpret=True,
+    )(x, ctx)

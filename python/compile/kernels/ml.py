@@ -1,0 +1,153 @@
+"""L1 Pallas kernels for the quantized ML workloads: linear regression,
+logistic regression, and K-means.
+
+These reproduce the pim-ml arithmetic the paper benchmarks against
+([10-12] in the paper): all-int32 fixed-point with shift rescaling
+(``common.FRAC`` bits) and the Taylor-series sigmoid for logistic
+regression.  Each kernel computes the *per-DPU partial* of one training
+step — the gradient (LR/LogReg) or the per-centroid sums+counts
+(K-means).  The cross-DPU combine is the host-side half of the paper's
+``allreduce`` (L3, ``coordinator/collectives.rs``).
+
+Model parameters (weights / centroids) arrive as *broadcast context*
+(paper §3.3, ``create_handle(..., data, data_size)``): a small array with
+a constant index map, resident in VMEM across all grid steps, just as the
+UPMEM kernels keep the broadcast weights at a fixed WRAM address.
+
+Padding: the ``mask`` input is 1 for valid points and 0 for padding rows;
+it multiplies the per-point contribution, keeping the inner loop
+branch-free (paper §4.3 optimization 3: no boundary checks).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK_POINTS, FRAC, sigmoid_fixed
+
+
+def _linreg_kernel(x_ref, y_ref, m_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    px = x_ref[0]  # (B, D) i32
+    w = w_ref[...]  # (D,) i32
+    dot = jnp.dot(px, w, preferred_element_type=jnp.int32)  # (B,)
+    pred = dot >> FRAC
+    err = (pred - y_ref[0, :]) * m_ref[0, :]
+    contrib = (err[:, None] * px) >> FRAC  # (B, D)
+    o_ref[...] += jnp.sum(contrib, axis=0)[None, :]
+
+
+def _logreg_kernel(x_ref, y_ref, m_ref, w_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    px = x_ref[0]
+    w = w_ref[...]
+    dot = jnp.dot(px, w, preferred_element_type=jnp.int32)
+    z = dot >> FRAC
+    s = sigmoid_fixed(z)
+    err = (s - y_ref[0, :]) * m_ref[0, :]
+    contrib = (err[:, None] * px) >> FRAC
+    o_ref[...] += jnp.sum(contrib, axis=0)[None, :]
+
+
+def _grad_call(kernel, x, y, mask, w, block):
+    g, n, d = x.shape
+    assert n % block == 0
+    x_spec = pl.BlockSpec((1, block, d), lambda i, j: (i, j, 0))
+    v_spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    w_spec = pl.BlockSpec((d,), lambda i, j: (0,))
+    return pl.pallas_call(
+        kernel,
+        grid=(g, n // block),
+        in_specs=[x_spec, v_spec, v_spec, w_spec],
+        out_specs=pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, d), jnp.int32),
+        interpret=True,
+    )(x, y, mask, w)
+
+
+def linreg_grad(x, y, mask, w, *, block: int = BLOCK_POINTS):
+    """Per-DPU linear-regression gradient partial.
+
+    Args:
+      x: ``[G, N, D]`` i32 fixed-point features.
+      y: ``[G, N]`` i32 fixed-point targets.
+      mask: ``[G, N]`` i32 validity (1 valid / 0 padding).
+      w: ``[D]`` i32 fixed-point weights (broadcast context).
+
+    Returns:
+      ``[G, D]`` i32: ``sum_i mask_i * ((pred_i - y_i) * x_i >> FRAC)``
+      with ``pred_i = (x_i . w) >> FRAC``.
+    """
+    return _grad_call(_linreg_kernel, x, y, mask, w, block)
+
+
+def logreg_grad(x, y, mask, w, *, block: int = BLOCK_POINTS):
+    """Per-DPU logistic-regression gradient partial.
+
+    Same contract as :func:`linreg_grad` but with the Taylor sigmoid
+    applied to the prediction; ``y`` must be 0 or ``ONE``.
+    """
+    return _grad_call(_logreg_kernel, x, y, mask, w, block)
+
+
+def _kmeans_kernel(x_ref, m_ref, c_ref, sums_ref, counts_ref, *, k: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        sums_ref[...] = jnp.zeros_like(sums_ref)
+        counts_ref[...] = jnp.zeros_like(counts_ref)
+
+    px = x_ref[0]  # (B, D)
+    c = c_ref[...]  # (K, D)
+    diff = px[:, None, :] - c[None, :, :]  # (B, K, D)
+    dist = jnp.sum(diff * diff, axis=2)  # (B, K)
+    assign = jnp.argmin(dist, axis=1).astype(jnp.int32)  # first-min ties
+    lanes = jax.lax.iota(jnp.int32, k)
+    onehot = (assign[:, None] == lanes[None, :]).astype(jnp.int32)
+    onehot = onehot * m_ref[0, :][:, None]  # (B, K)
+    counts_ref[...] += jnp.sum(onehot, axis=0)[None, :]
+    sums_ref[...] += jnp.dot(onehot.T, px, preferred_element_type=jnp.int32)[None, :, :]
+
+
+def kmeans_partial(x, mask, centroids, *, block: int = BLOCK_POINTS):
+    """Per-DPU K-means assignment partial: per-centroid sums and counts.
+
+    Args:
+      x: ``[G, N, D]`` i32 quantized features (small magnitudes; squared
+         distances must stay below 2^31).
+      mask: ``[G, N]`` i32 validity.
+      centroids: ``[K, D]`` i32 (broadcast context).  Ties break to the
+        lowest centroid index (matches the Rust golden).
+
+    Returns:
+      ``(sums [G, K, D] i32, counts [G, K] i32)``.
+    """
+    g, n, d = x.shape
+    k, dc = centroids.shape
+    assert dc == d and n % block == 0
+    x_spec = pl.BlockSpec((1, block, d), lambda i, j: (i, j, 0))
+    v_spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    c_spec = pl.BlockSpec((k, d), lambda i, j: (0, 0))
+
+    def kernel(x_ref, m_ref, c_ref, sums_ref, counts_ref):
+        return _kmeans_kernel(x_ref, m_ref, c_ref, sums_ref, counts_ref, k=k)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(g, n // block),
+        in_specs=[x_spec, v_spec, c_spec],
+        out_specs=(
+            pl.BlockSpec((1, k, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, k), lambda i, j: (i, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((g, k, d), jnp.int32),
+            jax.ShapeDtypeStruct((g, k), jnp.int32),
+        ),
+        interpret=True,
+    )(x, mask, centroids)

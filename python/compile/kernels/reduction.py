@@ -1,0 +1,101 @@
+"""L1 Pallas kernels for the reduction workloads: sum and histogram.
+
+These are instances of the paper's *general reduction* iterator
+(``simple_pim_array_red``, §3.3): every input element is mapped to an
+(index, value) pair by ``map_to_val_func`` and accumulated into the
+indexed output slot by a commutative ``acc_func``.
+
+  * ``reduce_sum``  — output array of one element, identity map, add.
+  * ``histogram``   — output array of ``bins`` elements, key function
+                      ``idx = (d * bins) >> 12`` (12-bit values, the
+                      PrIM/paper convention), value 1, add.
+
+Accumulator mapping (DESIGN.md §4): the per-DPU accumulator lives in the
+*output block*, which the BlockSpec pins to the same VMEM-resident slot
+for every grid step of a given gang row — the Pallas analogue of the
+paper's *thread-private in-scratchpad accumulator* (§4.2.2).  The
+cross-DPU merge is done by the host (L3), exactly as in the paper.
+
+The histogram accumulation is a compare-broadcast: a ``(bins, block)``
+one-hot matrix summed along the block axis.  On a real vector unit this is
+the layout that keeps the update vectorizable instead of a serial
+scatter-add; padding elements are encoded as ``-1`` whose key is negative
+and therefore matches no bin (branch-free padding, no boundary checks in
+the inner loop — paper §4.3 optimization 3).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK_1D, HIST_VALUE_BITS
+
+
+def _sum_kernel(x_ref, o_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.sum(x_ref[...], axis=1, keepdims=True)
+
+
+def reduce_sum(x, *, block: int = BLOCK_1D):
+    """Per-DPU i32 sum (wraparound) over a gang of local arrays.
+
+    Args:
+      x: ``[G, N]`` i32; pad with 0.
+
+    Returns:
+      ``[G, 1]`` i32 partial sums (host merges across DPUs).
+    """
+    g, n = x.shape
+    assert n % block == 0
+    return pl.pallas_call(
+        _sum_kernel,
+        grid=(g, n // block),
+        in_specs=[pl.BlockSpec((1, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, 1), jnp.int32),
+        interpret=True,
+    )(x)
+
+
+def _histogram_kernel(x_ref, o_ref, *, bins: int):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    d = x_ref[0, :]  # (block,) i32
+    # map_to_val_func: key = (d * bins) >> 12, value = 1.
+    idx = (d * bins) >> HIST_VALUE_BITS
+    lanes = jax.lax.iota(jnp.int32, bins)
+    onehot = (idx[None, :] == lanes[:, None]).astype(jnp.int32)  # (bins, block)
+    o_ref[...] += jnp.sum(onehot, axis=1)[None, :]
+
+
+def histogram(x, *, bins: int = 256, block: int = BLOCK_1D):
+    """Per-DPU histogram of 12-bit values over a gang of local arrays.
+
+    Args:
+      x: ``[G, N]`` i32 with values in ``[0, 4096)``; pad with ``-1``
+         (negative keys land in no bin).
+      bins: number of output bins (power of two, <= 4096).
+
+    Returns:
+      ``[G, bins]`` i32 per-DPU histograms (host merges across DPUs).
+    """
+    g, n = x.shape
+    assert n % block == 0
+    assert bins & (bins - 1) == 0 and 0 < bins <= 1 << HIST_VALUE_BITS
+
+    def kernel(x_ref, o_ref):
+        return _histogram_kernel(x_ref, o_ref, bins=bins)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(g, n // block),
+        in_specs=[pl.BlockSpec((1, block), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, bins), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((g, bins), jnp.int32),
+        interpret=True,
+    )(x)

@@ -1,0 +1,105 @@
+"""Pure-numpy correctness oracle for every L1 kernel.
+
+This is the single source of truth for the workloads' integer semantics.
+The Pallas kernels (pytest, build time) and the Rust host goldens
+(``rust/src/workloads/golden.rs``, cargo test) are both checked against
+the arithmetic defined here, so all three implementations must stay
+bit-identical.  Everything is int32 with wraparound and arithmetic right
+shifts.
+"""
+
+import numpy as np
+
+from .common import FRAC, HALF, HIST_VALUE_BITS, INV48, ONE, SIG_CLAMP
+
+I32 = np.int32
+
+
+def _i32(a):
+    """Cast through int64 and truncate — explicit i32 wraparound."""
+    return np.asarray(a, dtype=np.int64).astype(I32)
+
+
+def vecadd_ref(x, y):
+    """Elementwise wraparound add; shapes [G, N]."""
+    return _i32(x.astype(np.int64) + y.astype(np.int64))
+
+
+def map_affine_ref(x, ctx):
+    """o = ctx[0]*x + ctx[1] (wraparound)."""
+    a, b = np.int64(ctx[0]), np.int64(ctx[1])
+    return _i32(a * x.astype(np.int64) + b)
+
+
+def reduce_sum_ref(x):
+    """Per-row wraparound sum; [G, N] -> [G, 1]."""
+    # Sum in int64 then truncate: addition is associative under wraparound,
+    # so one final truncation equals element-at-a-time i32 accumulation.
+    return _i32(x.astype(np.int64).sum(axis=1, keepdims=True))
+
+
+def histogram_ref(x, bins):
+    """Per-row histogram with key (d*bins)>>12; out-of-range keys ignored."""
+    g = x.shape[0]
+    out = np.zeros((g, bins), dtype=I32)
+    for i in range(g):
+        idx = (x[i].astype(np.int64) * bins) >> HIST_VALUE_BITS
+        valid = (idx >= 0) & (idx < bins)
+        np.add.at(out[i], idx[valid], 1)
+    return out
+
+
+def sigmoid_fixed_ref(z):
+    """Fixed-point Taylor sigmoid; mirrors common.sigmoid_fixed."""
+    z = np.asarray(z, dtype=I32)
+    zc = np.clip(z, -SIG_CLAMP, SIG_CLAMP).astype(np.int64)
+    z2 = _i32(zc * zc).astype(np.int64) >> FRAC
+    z3 = _i32(z2 * zc).astype(np.int64) >> FRAC
+    s = _i32(HALF + (zc >> 2) - (_i32(z3 * INV48) >> FRAC))
+    return np.clip(s, 0, ONE).astype(I32)
+
+
+def _pred_fixed(x, w):
+    """(x . w) >> FRAC per point, wraparound i32; x [.., D], w [D]."""
+    acc = np.zeros(x.shape[:-1], dtype=np.int64)
+    for d in range(x.shape[-1]):
+        acc += _i32(x[..., d].astype(np.int64) * np.int64(w[d])).astype(np.int64)
+    return _i32(acc) >> FRAC
+
+
+def linreg_grad_ref(x, y, mask, w):
+    """Per-row LR gradient partial; x [G,N,D], y/mask [G,N], w [D] -> [G,D]."""
+    pred = _pred_fixed(x, w)
+    err = _i32((pred.astype(np.int64) - y.astype(np.int64)) * mask.astype(np.int64))
+    contrib = _i32(err[..., None].astype(np.int64) * x.astype(np.int64)) >> FRAC
+    return _i32(contrib.astype(np.int64).sum(axis=1))
+
+
+def logreg_grad_ref(x, y, mask, w):
+    """Per-row LogReg gradient partial (Taylor sigmoid); y in {0, ONE}."""
+    pred = _pred_fixed(x, w)
+    s = sigmoid_fixed_ref(pred)
+    err = _i32((s.astype(np.int64) - y.astype(np.int64)) * mask.astype(np.int64))
+    contrib = _i32(err[..., None].astype(np.int64) * x.astype(np.int64)) >> FRAC
+    return _i32(contrib.astype(np.int64).sum(axis=1))
+
+
+def kmeans_partial_ref(x, mask, centroids):
+    """Per-row K-means partials; ties break to lowest centroid index.
+
+    Returns (sums [G,K,D], counts [G,K]).
+    """
+    g, n, d = x.shape
+    k = centroids.shape[0]
+    sums = np.zeros((g, k, d), dtype=np.int64)
+    counts = np.zeros((g, k), dtype=np.int64)
+    for i in range(g):
+        diff = x[i][:, None, :].astype(np.int64) - centroids[None, :, :].astype(np.int64)
+        dist = _i32((diff * diff).sum(axis=2))  # i32 wraparound like the kernel
+        assign = np.argmin(dist, axis=1)  # first occurrence of min
+        for p in range(n):
+            if mask[i, p] != 0:
+                a = assign[p]
+                counts[i, a] += 1
+                sums[i, a] += x[i, p].astype(np.int64)
+    return _i32(sums), _i32(counts)

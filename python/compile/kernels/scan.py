@@ -1,0 +1,73 @@
+"""L1 Pallas kernels for the §6 extension iterators: local prefix sum
+and per-row base addition.
+
+The global scan is two-level (DESIGN.md experiment index "§6
+extensions"): every DPU scans its local slice and reports its total
+(``scan_local``); the host exclusive-scans the totals into per-DPU
+bases; a second pass adds each DPU's base (``add_base``).  The carry
+across WRAM batches lives in the second output block, pinned in
+VMEM across grid steps — the same private-accumulator mapping the
+reductions use.
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import BLOCK_1D
+
+
+def _scan_kernel(x_ref, o_ref, c_ref):
+    @pl.when(pl.program_id(1) == 0)
+    def _init():
+        c_ref[...] = jnp.zeros_like(c_ref)
+
+    x = x_ref[0, :]
+    cs = jnp.cumsum(x, dtype=jnp.int32)
+    carry = c_ref[0, 0]
+    o_ref[0, :] = cs + carry
+    c_ref[0, 0] = carry + cs[-1]
+
+
+def scan_local(x, *, block: int = BLOCK_1D):
+    """Per-DPU inclusive prefix sum (i32 wraparound).
+
+    Args:
+      x: ``[G, N]`` i32; pad with 0 (padding does not disturb the carry).
+
+    Returns:
+      ``(scanned [G, N], totals [G, 1])``.
+    """
+    g, n = x.shape
+    assert n % block == 0
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _scan_kernel,
+        grid=(g, n // block),
+        in_specs=[spec],
+        out_specs=(spec, pl.BlockSpec((1, 1), lambda i, j: (i, 0))),
+        out_shape=(
+            jax.ShapeDtypeStruct((g, n), jnp.int32),
+            jax.ShapeDtypeStruct((g, 1), jnp.int32),
+        ),
+        interpret=True,
+    )(x)
+
+
+def _add_base_kernel(x_ref, b_ref, o_ref):
+    o_ref[...] = x_ref[...] + b_ref[0, 0]
+
+
+def add_base(x, base, *, block: int = BLOCK_1D):
+    """Add a per-row scalar: ``o[g, :] = x[g, :] + base[g, 0]``."""
+    g, n = x.shape
+    assert n % block == 0
+    spec = pl.BlockSpec((1, block), lambda i, j: (i, j))
+    return pl.pallas_call(
+        _add_base_kernel,
+        grid=(g, n // block),
+        in_specs=[spec, pl.BlockSpec((1, 1), lambda i, j: (i, 0))],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct((g, n), jnp.int32),
+        interpret=True,
+    )(x, base)

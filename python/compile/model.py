@@ -1,0 +1,210 @@
+"""L2: per-DPU JAX compute graphs for the SimplePIM workloads.
+
+Each *artifact spec* describes one AOT-compiled executable: a jitted JAX
+function over a **gang** of DPUs (leading dimension ``G``) with a fixed
+per-DPU local length ``N``.  The L3 Rust coordinator groups simulated
+DPUs into gangs of ``G`` and calls the executable once per gang — the
+paper's "launch all PIM cores" step — instead of once per DPU, which
+amortizes PJRT dispatch (see DESIGN.md §8 Perf).
+
+The functions call the L1 Pallas kernels directly, so the WRAM-batch
+tiling (BlockSpec) lowers into the same HLO the Rust runtime loads.
+Everything here is build-time only; nothing from this package runs on the
+request path.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from . import kernels as K
+from . import refmodel as R
+from .kernels.common import BLOCK_1D, BLOCK_POINTS, wram_footprint, WRAM_BYTES
+
+I32 = jnp.int32
+
+
+@dataclass(frozen=True)
+class ArtifactSpec:
+    """One AOT executable: jax function + example input shapes + metadata."""
+
+    name: str
+    workload: str
+    fn: Callable
+    inputs: Tuple[Tuple[Tuple[int, ...], str], ...]  # ((shape, dtype), ...)
+    outputs: Tuple[Tuple[Tuple[int, ...], str], ...]
+    params: Dict[str, int] = field(default_factory=dict)
+
+    def input_specs(self) -> List[jax.ShapeDtypeStruct]:
+        return [jax.ShapeDtypeStruct(s, jnp.dtype(d)) for s, d in self.inputs]
+
+
+# Gang width: DPUs per executable call.  8 keeps literal sizes moderate
+# while cutting dispatch count 8x vs per-DPU calls.
+GANG = 8
+
+# Per-DPU local lengths compiled ahead of time.  The coordinator's
+# transfer planner pads each DPU's slice up to the smallest fitting
+# variant (identity padding), so two sizes per workload cover both the
+# small functional tests and the example workloads.
+ELEMWISE_SIZES = (8192, 65536)
+ML_SIZES = (1024, 4096)
+FEATURE_DIM = 16  # paper uses 10 features; padded to 16 for alignment
+KMEANS_K = 16  # paper uses 10 centroids; host parks the pads far away
+HIST_BINS = 256  # paper's functional default; other bin counts are
+#                  timing-model-only (Fig. 11)
+
+
+def _i32_in(*shapes):
+    return tuple((s, "int32") for s in shapes)
+
+
+# Engines (DESIGN.md §8 Perf): every workload is lowered twice —
+#   "pallas": the L1 kernel under interpret=True (the hardware artifact;
+#             BlockSpec = WRAM/VMEM schedule; correctness path on CPU);
+#   "xla":    the same semantics from refmodel.py, which XLA-CPU fuses
+#             and vectorizes (the serving engine on CPU-PJRT).
+# pytest pins both to kernels/ref.py bit-for-bit.
+ENGINES = ("pallas", "xla")
+
+
+def build_specs() -> List[ArtifactSpec]:
+    """The full artifact registry, in deterministic order."""
+    specs: List[ArtifactSpec] = []
+
+    def add(base: str, workload: str, fns, inputs, outputs, params):
+        for engine in ENGINES:
+            specs.append(
+                ArtifactSpec(
+                    name=f"{base}_{engine}",
+                    workload=workload,
+                    fn=fns[engine],
+                    inputs=inputs,
+                    outputs=outputs,
+                    params={**params, "pallas": 1 if engine == "pallas" else 0},
+                )
+            )
+
+    for n in ELEMWISE_SIZES:
+        block = min(BLOCK_1D, n)
+        # --- vecadd: zip + map (paper §5.1) ---
+        add(
+            f"vecadd_g{GANG}_n{n}",
+            "vecadd",
+            {"pallas": lambda x, y, _b=block: K.vecadd(x, y, block=_b), "xla": R.vecadd},
+            _i32_in((GANG, n), (GANG, n)),
+            _i32_in((GANG, n)),
+            {"gang": GANG, "n": n, "block": block},
+        )
+        # --- affine map with broadcast context ---
+        add(
+            f"map_affine_g{GANG}_n{n}",
+            "map_affine",
+            {
+                "pallas": lambda x, ctx, _b=block: K.map_affine(x, ctx, block=_b),
+                "xla": R.map_affine,
+            },
+            _i32_in((GANG, n), (2,)),
+            _i32_in((GANG, n)),
+            {"gang": GANG, "n": n, "block": block},
+        )
+        # --- reduction to a single accumulator ---
+        add(
+            f"reduce_sum_g{GANG}_n{n}",
+            "reduce_sum",
+            {
+                "pallas": lambda x, _b=block: K.reduce_sum(x, block=_b),
+                "xla": R.reduce_sum,
+            },
+            _i32_in((GANG, n)),
+            _i32_in((GANG, 1)),
+            {"gang": GANG, "n": n, "block": block},
+        )
+        # --- local prefix sum + per-row base (§6 extension: scan) ---
+        add(
+            f"scan_local_g{GANG}_n{n}",
+            "scan_local",
+            {
+                "pallas": lambda x, _b=block: K.scan_local(x, block=_b),
+                "xla": R.scan_local,
+            },
+            _i32_in((GANG, n)),
+            _i32_in((GANG, n), (GANG, 1)),
+            {"gang": GANG, "n": n, "block": block},
+        )
+        add(
+            f"add_base_g{GANG}_n{n}",
+            "add_base",
+            {
+                "pallas": lambda x, b, _b=block: K.add_base(x, b, block=_b),
+                "xla": R.add_base,
+            },
+            _i32_in((GANG, n), (GANG, 1)),
+            _i32_in((GANG, n)),
+            {"gang": GANG, "n": n, "block": block},
+        )
+        # --- histogram (general reduction, 256 bins) ---
+        add(
+            f"histogram_g{GANG}_n{n}_b{HIST_BINS}",
+            "histogram",
+            {
+                "pallas": lambda x, _b=block: K.histogram(x, bins=HIST_BINS, block=_b),
+                "xla": lambda x: R.histogram(x, bins=HIST_BINS),
+            },
+            _i32_in((GANG, n)),
+            _i32_in((GANG, HIST_BINS)),
+            {"gang": GANG, "n": n, "block": block, "bins": HIST_BINS},
+        )
+
+    d = FEATURE_DIM
+    for n in ML_SIZES:
+        block = min(BLOCK_POINTS, n)
+        assert wram_footprint([(block, d)] * 2 + [(block,)] * 3 + [(d,)]) <= WRAM_BYTES
+        # --- linear regression gradient partial ---
+        add(
+            f"linreg_g{GANG}_n{n}_d{d}",
+            "linreg",
+            {
+                "pallas": lambda x, y, m, w, _b=block: K.linreg_grad(x, y, m, w, block=_b),
+                "xla": R.linreg_grad,
+            },
+            _i32_in((GANG, n, d), (GANG, n), (GANG, n), (d,)),
+            _i32_in((GANG, d)),
+            {"gang": GANG, "n": n, "block": block, "dim": d},
+        )
+        # --- logistic regression gradient partial ---
+        add(
+            f"logreg_g{GANG}_n{n}_d{d}",
+            "logreg",
+            {
+                "pallas": lambda x, y, m, w, _b=block: K.logreg_grad(x, y, m, w, block=_b),
+                "xla": R.logreg_grad,
+            },
+            _i32_in((GANG, n, d), (GANG, n), (GANG, n), (d,)),
+            _i32_in((GANG, d)),
+            {"gang": GANG, "n": n, "block": block, "dim": d},
+        )
+        # --- K-means assignment partials ---
+        k = KMEANS_K
+        add(
+            f"kmeans_g{GANG}_n{n}_d{d}_k{k}",
+            "kmeans",
+            {
+                "pallas": lambda x, m, c, _b=block: K.kmeans_partial(x, m, c, block=_b),
+                "xla": R.kmeans_partial,
+            },
+            _i32_in((GANG, n, d), (GANG, n), (k, d)),
+            _i32_in((GANG, k, d), (GANG, k)),
+            {"gang": GANG, "n": n, "block": block, "dim": d, "k": k},
+        )
+
+    return specs
+
+
+def spec_by_name(name: str) -> ArtifactSpec:
+    for s in build_specs():
+        if s.name == name:
+            return s
+    raise KeyError(name)

@@ -1,0 +1,105 @@
+"""L2 alternative lowering: pure-jnp compute graphs, bit-identical to
+the L1 Pallas kernels.
+
+Two engines are AOT-compiled for every workload (DESIGN.md §8 Perf):
+
+* ``pallas`` — the L1 kernel under ``interpret=True``.  This is the
+  *hardware* artifact: its BlockSpec tiling is the WRAM/VMEM schedule a
+  real TPU (Mosaic) or UPMEM backend would execute.  On CPU-PJRT the
+  interpret lowering emulates the grid step-by-step with dynamic
+  slices, which costs ~ms per grid step — a correctness path, not a
+  performance path (the guide: interpret-mode wallclock is NOT a TPU
+  proxy).
+* ``xla`` — the same integer semantics expressed directly in jnp, which
+  XLA-CPU fuses and vectorizes.  The Rust runtime serves this engine on
+  CPU; pytest pins both engines to ``kernels/ref.py`` bit-for-bit.
+
+Keep every function here in lock-step with ``kernels/ref.py``.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.common import FRAC, HIST_VALUE_BITS, sigmoid_fixed
+
+I32 = jnp.int32
+
+
+def vecadd(x, y):
+    """[G,N] + [G,N] with i32 wraparound."""
+    return x + y
+
+
+def map_affine(x, ctx):
+    """ctx[0]*x + ctx[1]."""
+    return ctx[0] * x + ctx[1]
+
+
+def reduce_sum(x):
+    """Per-row sum -> [G,1] (XLA i32 reduce wraps like the kernel)."""
+    return jnp.sum(x, axis=1, keepdims=True, dtype=I32)
+
+
+def histogram(x, *, bins: int):
+    """Per-row histogram via scatter-add; negative keys are dropped."""
+    idx = (x * bins) >> HIST_VALUE_BITS
+    valid = ((idx >= 0) & (idx < bins)).astype(I32)
+    idx = jnp.clip(idx, 0, bins - 1)
+
+    def row(ix, w):
+        return jax.ops.segment_sum(w, ix, num_segments=bins)
+
+    return jax.vmap(row)(idx, valid).astype(I32)
+
+
+def _pred(x, w):
+    """(x . w) >> FRAC per point; [G,N,D] x [D] -> [G,N]."""
+    dot = jax.lax.dot_general(
+        x, w, dimension_numbers=(((2,), (0,)), ((), ())),
+        preferred_element_type=I32,
+    )
+    return dot >> FRAC
+
+
+def linreg_grad(x, y, mask, w):
+    """Per-row LR gradient partial; same contract as the kernel."""
+    err = (_pred(x, w) - y) * mask  # [G,N]
+    contrib = (err[:, :, None] * x) >> FRAC  # [G,N,D]
+    return jnp.sum(contrib, axis=1, dtype=I32)
+
+
+def logreg_grad(x, y, mask, w):
+    """Per-row LogReg gradient partial (Taylor sigmoid)."""
+    s = sigmoid_fixed(_pred(x, w))
+    err = (s - y) * mask
+    contrib = (err[:, :, None] * x) >> FRAC
+    return jnp.sum(contrib, axis=1, dtype=I32)
+
+
+def scan_local(x):
+    """Per-row inclusive prefix sum + totals; [G,N] -> ([G,N], [G,1])."""
+    cs = jnp.cumsum(x, axis=1, dtype=I32)
+    return cs, cs[:, -1:]
+
+
+def add_base(x, base):
+    """o[g,:] = x[g,:] + base[g,0]."""
+    return x + base
+
+
+def kmeans_partial(x, mask, centroids):
+    """Per-row K-means partials (sums, counts); first-min ties."""
+    g, n, d = x.shape
+    k = centroids.shape[0]
+    diff = x[:, :, None, :] - centroids[None, None, :, :]  # [G,N,K,D]
+    dist = jnp.sum(diff * diff, axis=3, dtype=I32)  # [G,N,K]
+    assign = jnp.argmin(dist, axis=2).astype(I32)  # [G,N]
+    lanes = jax.lax.iota(I32, k)
+    onehot = (assign[:, :, None] == lanes[None, None, :]).astype(I32)
+    onehot = onehot * mask[:, :, None]  # [G,N,K]
+    counts = jnp.sum(onehot, axis=1, dtype=I32)  # [G,K]
+    sums = jax.lax.dot_general(
+        onehot, x, dimension_numbers=(((1,), (1,)), ((0,), (0,))),
+        preferred_element_type=I32,
+    )  # [G,K,D]
+    return sums, counts

@@ -1,0 +1,8 @@
+"""Make the `compile` package importable regardless of invocation
+directory (`pytest python/tests/` from the repo root, or `pytest tests/`
+from `python/`)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))

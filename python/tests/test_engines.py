@@ -1,0 +1,97 @@
+"""pytest: the two AOT engines (pallas kernels vs refmodel jnp graphs)
+must be bit-identical — this is the guarantee that lets the Rust
+runtime serve the fused `xla` engine while the `pallas` engine remains
+the hardware artifact.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile import refmodel as R
+from compile.kernels.common import ONE
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), g=st.integers(1, 4))
+def test_vecadd_engines_agree(seed, g):
+    rng = rng_for(seed)
+    x = rng.integers(-(2**31), 2**31 - 1, (g, 2048)).astype(np.int32)
+    y = rng.integers(-(2**31), 2**31 - 1, (g, 2048)).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(K.vecadd(x, y)), np.asarray(R.vecadd(x, y)))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_affine_and_sum_engines_agree(seed):
+    rng = rng_for(seed)
+    x = rng.integers(-(2**20), 2**20, (2, 2048)).astype(np.int32)
+    ctx = rng.integers(-100, 100, (2,)).astype(np.int32)
+    np.testing.assert_array_equal(
+        np.asarray(K.map_affine(x, ctx)), np.asarray(R.map_affine(x, ctx))
+    )
+    np.testing.assert_array_equal(
+        np.asarray(K.reduce_sum(x)), np.asarray(R.reduce_sum(x))
+    )
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), bins=st.sampled_from([16, 256, 1024]))
+def test_histogram_engines_agree(seed, bins):
+    rng = rng_for(seed)
+    x = rng.integers(0, 4096, (3, 2048)).astype(np.int32)
+    x[0, :7] = -1  # padding must be dropped identically
+    np.testing.assert_array_equal(
+        np.asarray(K.histogram(x, bins=bins)), np.asarray(R.histogram(x, bins=bins))
+    )
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1), logistic=st.booleans())
+def test_gradient_engines_agree(seed, logistic):
+    rng = rng_for(seed)
+    g, n, d = 2, 512, 16
+    x = rng.integers(-2 * ONE, 2 * ONE, (g, n, d)).astype(np.int32)
+    y = rng.integers(-4 * ONE, 4 * ONE, (g, n)).astype(np.int32)
+    m = (rng.random((g, n)) < 0.9).astype(np.int32)
+    w = rng.integers(-ONE, ONE, (d,)).astype(np.int32)
+    if logistic:
+        got_k = K.logreg_grad(x, y, m, w)
+        got_r = R.logreg_grad(x, y, m, w)
+    else:
+        got_k = K.linreg_grad(x, y, m, w)
+        got_r = R.linreg_grad(x, y, m, w)
+    np.testing.assert_array_equal(np.asarray(got_k), np.asarray(got_r))
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_kmeans_engines_agree(seed):
+    rng = rng_for(seed)
+    g, n, d, k = 2, 512, 16, 16
+    x = rng.integers(0, 256, (g, n, d)).astype(np.int32)
+    m = (rng.random((g, n)) < 0.9).astype(np.int32)
+    c = rng.integers(0, 256, (k, d)).astype(np.int32)
+    sk, ck = K.kmeans_partial(x, m, c)
+    sr, cr = R.kmeans_partial(x, m, c)
+    np.testing.assert_array_equal(np.asarray(sk), np.asarray(sr))
+    np.testing.assert_array_equal(np.asarray(ck), np.asarray(cr))
+
+
+def test_manifest_contains_both_engines():
+    from compile.model import build_specs
+
+    specs = build_specs()
+    names = {s.name for s in specs}
+    pallas = {n for n in names if n.endswith("_pallas")}
+    xla = {n for n in names if n.endswith("_xla")}
+    assert len(pallas) == len(xla) == len(names) / 2
+    for p in pallas:
+        assert p.replace("_pallas", "_xla") in xla

@@ -1,0 +1,252 @@
+"""pytest: Pallas kernels (interpret mode) vs the pure-numpy oracle.
+
+This is the CORE correctness signal for L1: every kernel must match
+``compile.kernels.ref`` bit-for-bit on int32.  Hypothesis sweeps shapes,
+block sizes, and value ranges (including wraparound-provoking magnitudes).
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref as R
+from compile.kernels.common import FRAC, ONE
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def rng_for(seed):
+    return np.random.default_rng(seed)
+
+
+# --------------------------------------------------------------------------
+# vecadd / map_affine
+# --------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(
+    g=st.integers(1, 4),
+    blocks=st.integers(1, 4),
+    block=st.sampled_from([64, 256, 2048]),
+    seed=st.integers(0, 2**31 - 1),
+    lo_hi=st.sampled_from([(-100, 100), (-(2**31), 2**31 - 1)]),
+)
+def test_vecadd_matches_ref(g, blocks, block, seed, lo_hi):
+    lo, hi = lo_hi
+    n = blocks * block
+    rng = rng_for(seed)
+    x = rng.integers(lo, hi, (g, n)).astype(np.int32)
+    y = rng.integers(lo, hi, (g, n)).astype(np.int32)
+    got = np.asarray(K.vecadd(x, y, block=block))
+    np.testing.assert_array_equal(got, R.vecadd_ref(x, y))
+
+
+@settings(**SETTINGS)
+@given(
+    g=st.integers(1, 4),
+    blocks=st.integers(1, 3),
+    block=st.sampled_from([64, 512]),
+    a=st.integers(-(2**15), 2**15),
+    b=st.integers(-(2**20), 2**20),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_map_affine_matches_ref(g, blocks, block, a, b, seed):
+    n = blocks * block
+    rng = rng_for(seed)
+    x = rng.integers(-(2**15), 2**15, (g, n)).astype(np.int32)
+    ctx = np.array([a, b], dtype=np.int32)
+    got = np.asarray(K.map_affine(x, ctx, block=block))
+    np.testing.assert_array_equal(got, R.map_affine_ref(x, ctx))
+
+
+# --------------------------------------------------------------------------
+# reduction
+# --------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(
+    g=st.integers(1, 4),
+    blocks=st.integers(1, 5),
+    block=st.sampled_from([64, 256, 2048]),
+    seed=st.integers(0, 2**31 - 1),
+    wrap=st.booleans(),
+)
+def test_reduce_sum_matches_ref(g, blocks, block, seed, wrap):
+    n = blocks * block
+    rng = rng_for(seed)
+    hi = 2**31 - 1 if wrap else 1000
+    x = rng.integers(-hi, hi, (g, n)).astype(np.int32)
+    got = np.asarray(K.reduce_sum(x, block=block))
+    np.testing.assert_array_equal(got, R.reduce_sum_ref(x))
+
+
+def test_reduce_sum_zero_padding_is_identity():
+    x = np.arange(4096, dtype=np.int32).reshape(2, 2048)
+    padded = np.concatenate([x, np.zeros((2, 2048), np.int32)], axis=1)
+    np.testing.assert_array_equal(
+        np.asarray(K.reduce_sum(x)), np.asarray(K.reduce_sum(padded))
+    )
+
+
+# --------------------------------------------------------------------------
+# histogram
+# --------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(
+    g=st.integers(1, 3),
+    blocks=st.integers(1, 3),
+    block=st.sampled_from([64, 512]),
+    bins=st.sampled_from([16, 256, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_histogram_matches_ref(g, blocks, block, bins, seed):
+    n = blocks * block
+    rng = rng_for(seed)
+    x = rng.integers(0, 4096, (g, n)).astype(np.int32)
+    got = np.asarray(K.histogram(x, bins=bins, block=block))
+    np.testing.assert_array_equal(got, R.histogram_ref(x, bins))
+
+
+def test_histogram_ignores_negative_padding():
+    x = np.full((1, 2048), -1, dtype=np.int32)
+    x[0, :5] = [0, 16, 16, 4095, 2048]
+    got = np.asarray(K.histogram(x, bins=256))
+    assert got.sum() == 5
+    np.testing.assert_array_equal(got, R.histogram_ref(x, 256))
+
+
+def test_histogram_counts_total():
+    rng = rng_for(7)
+    x = rng.integers(0, 4096, (4, 4096)).astype(np.int32)
+    got = np.asarray(K.histogram(x, bins=256))
+    np.testing.assert_array_equal(got.sum(axis=1), np.full(4, 4096))
+
+
+# --------------------------------------------------------------------------
+# sigmoid building block
+# --------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_sigmoid_fixed_matches_ref(seed):
+    rng = rng_for(seed)
+    z = rng.integers(-8 * ONE, 8 * ONE, (512,)).astype(np.int32)
+    import jax.numpy as jnp
+    from compile.kernels.common import sigmoid_fixed
+
+    got = np.asarray(sigmoid_fixed(jnp.asarray(z)))
+    np.testing.assert_array_equal(got, R.sigmoid_fixed_ref(z))
+
+
+def test_sigmoid_fixed_endpoints():
+    import jax.numpy as jnp
+    from compile.kernels.common import sigmoid_fixed
+
+    z = np.array([0, 10 * ONE, -10 * ONE], dtype=np.int32)
+    s = np.asarray(sigmoid_fixed(jnp.asarray(z)))
+    assert s[0] == ONE // 2  # sigmoid(0) = 0.5
+    assert 0 <= s[2] <= s[0] <= s[1] <= ONE
+
+
+# --------------------------------------------------------------------------
+# ML gradients
+# --------------------------------------------------------------------------
+def _ml_data(seed, g, n, d, logistic):
+    rng = rng_for(seed)
+    x = rng.integers(-2 * ONE, 2 * ONE, (g, n, d)).astype(np.int32)
+    if logistic:
+        y = (rng.random((g, n)) < 0.5).astype(np.int32) * ONE
+    else:
+        y = rng.integers(-4 * ONE, 4 * ONE, (g, n)).astype(np.int32)
+    mask = (rng.random((g, n)) < 0.9).astype(np.int32)
+    w = rng.integers(-ONE, ONE, (d,)).astype(np.int32)
+    return x, y, mask, w
+
+
+@settings(**SETTINGS)
+@given(
+    g=st.integers(1, 3),
+    blocks=st.integers(1, 3),
+    block=st.sampled_from([32, 256]),
+    d=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_linreg_grad_matches_ref(g, blocks, block, d, seed):
+    n = blocks * block
+    x, y, mask, w = _ml_data(seed, g, n, d, logistic=False)
+    got = np.asarray(K.linreg_grad(x, y, mask, w, block=block))
+    np.testing.assert_array_equal(got, R.linreg_grad_ref(x, y, mask, w))
+
+
+@settings(**SETTINGS)
+@given(
+    g=st.integers(1, 3),
+    blocks=st.integers(1, 3),
+    block=st.sampled_from([32, 256]),
+    d=st.sampled_from([4, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_logreg_grad_matches_ref(g, blocks, block, d, seed):
+    n = blocks * block
+    x, y, mask, w = _ml_data(seed, g, n, d, logistic=True)
+    got = np.asarray(K.logreg_grad(x, y, mask, w, block=block))
+    np.testing.assert_array_equal(got, R.logreg_grad_ref(x, y, mask, w))
+
+
+def test_linreg_grad_mask_zero_rows_do_not_contribute():
+    x, y, _, w = _ml_data(3, 1, 256, 8, logistic=False)
+    mask0 = np.zeros((1, 256), np.int32)
+    got = np.asarray(K.linreg_grad(x, y, mask0, w, block=256))
+    np.testing.assert_array_equal(got, np.zeros((1, 8), np.int32))
+
+
+def test_linreg_grad_zero_error_is_zero_gradient():
+    # If y equals the prediction exactly, the gradient must be 0.
+    g, n, d = 1, 128, 4
+    rng = rng_for(11)
+    x = rng.integers(-ONE, ONE, (g, n, d)).astype(np.int32)
+    w = rng.integers(-ONE, ONE, (d,)).astype(np.int32)
+    y = R._pred_fixed(x, w)
+    mask = np.ones((g, n), np.int32)
+    got = np.asarray(K.linreg_grad(x, y, mask, w, block=128))
+    np.testing.assert_array_equal(got, np.zeros((g, d), np.int32))
+
+
+# --------------------------------------------------------------------------
+# K-means
+# --------------------------------------------------------------------------
+@settings(**SETTINGS)
+@given(
+    g=st.integers(1, 3),
+    blocks=st.integers(1, 3),
+    block=st.sampled_from([32, 256]),
+    d=st.sampled_from([2, 16]),
+    k=st.sampled_from([2, 16]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_kmeans_partial_matches_ref(g, blocks, block, d, k, seed):
+    n = blocks * block
+    rng = rng_for(seed)
+    x = rng.integers(0, 256, (g, n, d)).astype(np.int32)
+    mask = (rng.random((g, n)) < 0.9).astype(np.int32)
+    c = rng.integers(0, 256, (k, d)).astype(np.int32)
+    sums, counts = K.kmeans_partial(x, mask, c, block=block)
+    rs, rc = R.kmeans_partial_ref(x, mask, c)
+    np.testing.assert_array_equal(np.asarray(sums), rs)
+    np.testing.assert_array_equal(np.asarray(counts), rc)
+
+
+def test_kmeans_tie_breaks_to_lowest_index():
+    # Two identical centroids: all points must be assigned to index 0.
+    x = np.full((1, 32, 2), 5, dtype=np.int32)
+    mask = np.ones((1, 32), np.int32)
+    c = np.array([[5, 5], [5, 5]], dtype=np.int32)
+    sums, counts = K.kmeans_partial(x, mask, c, block=32)
+    assert np.asarray(counts)[0, 0] == 32 and np.asarray(counts)[0, 1] == 0
+
+
+def test_kmeans_counts_preserved():
+    rng = rng_for(5)
+    x = rng.integers(0, 128, (2, 512, 4)).astype(np.int32)
+    mask = np.ones((2, 512), np.int32)
+    c = rng.integers(0, 128, (8, 4)).astype(np.int32)
+    _, counts = K.kmeans_partial(x, mask, c, block=256)
+    np.testing.assert_array_equal(np.asarray(counts).sum(axis=1), [512, 512])

@@ -1,0 +1,55 @@
+"""pytest: scan/add_base kernels (§6 extension) vs numpy, both engines."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile import refmodel as R
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+@settings(**SETTINGS)
+@given(
+    g=st.integers(1, 4),
+    blocks=st.integers(1, 4),
+    block=st.sampled_from([64, 512, 2048]),
+    seed=st.integers(0, 2**31 - 1),
+    wrap=st.booleans(),
+)
+def test_scan_local_matches_numpy_cumsum(g, blocks, block, seed, wrap):
+    n = blocks * block
+    rng = np.random.default_rng(seed)
+    hi = 2**31 - 1 if wrap else 1000
+    x = rng.integers(-hi, hi, (g, n)).astype(np.int32)
+    want = np.cumsum(x.astype(np.int64), axis=1).astype(np.int32)
+    cs, tot = K.scan_local(x, block=block)
+    np.testing.assert_array_equal(np.asarray(cs), want)
+    np.testing.assert_array_equal(np.asarray(tot), want[:, -1:])
+    csr, totr = R.scan_local(x)
+    np.testing.assert_array_equal(np.asarray(csr), want)
+    np.testing.assert_array_equal(np.asarray(totr), want[:, -1:])
+
+
+@settings(**SETTINGS)
+@given(
+    g=st.integers(1, 4),
+    block=st.sampled_from([64, 1024]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_add_base_engines_agree(g, block, seed):
+    rng = np.random.default_rng(seed)
+    x = rng.integers(-(2**20), 2**20, (g, 2 * block)).astype(np.int32)
+    b = rng.integers(-(2**20), 2**20, (g, 1)).astype(np.int32)
+    want = (x.astype(np.int64) + b.astype(np.int64)).astype(np.int32)
+    np.testing.assert_array_equal(np.asarray(K.add_base(x, b, block=block)), want)
+    np.testing.assert_array_equal(np.asarray(R.add_base(x, b)), want)
+
+
+def test_scan_carry_crosses_blocks():
+    # A value in block 0 must influence block 3's scan.
+    x = np.zeros((1, 4 * 64), np.int32)
+    x[0, 0] = 7
+    cs, tot = K.scan_local(x, block=64)
+    assert np.all(np.asarray(cs) == 7)
+    assert np.asarray(tot)[0, 0] == 7

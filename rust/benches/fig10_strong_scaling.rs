@@ -1,0 +1,32 @@
+//! Bench target regenerating paper Fig. 10 (strong scaling with
+//! speedup-over-608-DPUs annotations).
+//!
+//! Run: `cargo bench --bench fig10_strong_scaling`
+
+use simplepim::report::figures;
+
+fn main() {
+    let t = figures::fig10();
+    println!("{}", t.render());
+
+    // Paper headline: reduction only 1.6x/2.6x at 2x/4x DPUs; the other
+    // five exceed 1.8x/3x; vecadd/logreg/kmeans beat baseline by
+    // 1.15x/1.22x/1.43x on average.
+    let scaling = |wl: &str, dpus: &str| -> f64 {
+        t.rows
+            .iter()
+            .find(|r| r[0] == wl && r[1] == dpus)
+            .map(|r| r[5].trim_end_matches('x').parse().unwrap())
+            .unwrap()
+    };
+    println!("scaling check (paper -> measured):");
+    println!("  reduction @2x  1.6x -> {:.2}x", scaling("reduction", "1216"));
+    println!("  reduction @4x  2.6x -> {:.2}x", scaling("reduction", "2432"));
+    for wl in ["vecadd", "histogram", "linreg", "logreg", "kmeans"] {
+        println!(
+            "  {wl:<9} @2x >1.8x -> {:.2}x   @4x >3x -> {:.2}x",
+            scaling(wl, "1216"),
+            scaling(wl, "2432")
+        );
+    }
+}

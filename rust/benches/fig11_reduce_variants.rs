@@ -1,0 +1,33 @@
+//! Bench target regenerating paper Fig. 11 (shared-accumulator vs
+//! thread-private reduction across histogram bin counts, with active
+//! PIM thread counts), plus the paper's two §5.4 observations checked
+//! explicitly.
+//!
+//! Run: `cargo bench --bench fig11_reduce_variants`
+
+use simplepim::pim::PimConfig;
+use simplepim::report::figures;
+use simplepim::timing::ReduceVariant;
+use simplepim::workloads::{histogram, Impl};
+
+fn main() {
+    println!("{}", figures::fig11().render());
+
+    let cfg = PimConfig::upmem(608);
+    let total = 608 * 1_572_864u64;
+    let time = |bins, v| {
+        histogram::model_time_variant(&cfg, total, bins, Impl::SimplePim, Some(v))
+            .0
+            .total_s()
+    };
+
+    // Observation 1: private wins by ~1.70x while 12 threads fit.
+    let gap = time(256, ReduceVariant::SharedAcc) / time(256, ReduceVariant::PrivateAcc);
+    println!("private advantage at 256 bins (paper ~1.70x): {gap:.2}x");
+
+    // Observation 2: each halving of active threads doubles time.
+    let r1 = time(2048, ReduceVariant::PrivateAcc) / time(1024, ReduceVariant::PrivateAcc);
+    let r2 = time(4096, ReduceVariant::PrivateAcc) / time(2048, ReduceVariant::PrivateAcc);
+    println!("private 2048/1024 bins (paper ~2x): {r1:.2}x");
+    println!("private 4096/2048 bins (paper ~2x): {r2:.2}x");
+}

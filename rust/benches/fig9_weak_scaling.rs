@@ -1,0 +1,28 @@
+//! Bench target regenerating paper Fig. 9 (weak scaling, six
+//! workloads, 608/1216/2432 DPUs, SimplePIM vs hand-optimized) and a
+//! functional weak-scaling spot-check on a small machine.
+//!
+//! Run: `cargo bench --bench fig9_weak_scaling`
+
+use simplepim::report::figures;
+
+fn main() {
+    println!("{}", figures::fig9().render());
+
+    // Paper headline numbers this table should echo (weak scaling):
+    //   vecadd 1.10x, logreg 1.17x, kmeans 1.37x; others comparable.
+    let t = figures::fig9();
+    let speedup = |wl: &str| -> f64 {
+        t.rows
+            .iter()
+            .find(|r| r[0] == wl && r[1] == "608")
+            .map(|r| r[4].trim_end_matches('x').parse().unwrap())
+            .unwrap()
+    };
+    println!("headline check (paper -> measured):");
+    println!("  vecadd  1.10x -> {:.2}x", speedup("vecadd"));
+    println!("  logreg  1.17x -> {:.2}x", speedup("logreg"));
+    println!("  kmeans  1.37x -> {:.2}x", speedup("kmeans"));
+    println!("  reduction/histogram/linreg comparable -> {:.2}x / {:.2}x / {:.2}x",
+        speedup("reduction"), speedup("histogram"), speedup("linreg"));
+}

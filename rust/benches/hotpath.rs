@@ -1,0 +1,114 @@
+//! Real wall-clock microbenchmarks of the request-path hot spots — the
+//! measurements behind EXPERIMENTS.md §Perf.
+//!
+//! Unlike the fig* benches (which regenerate the paper's *modeled*
+//! results), this measures the actual Rust + PJRT implementation on
+//! this machine: scatter/gather marshalling, executor dispatch (gang
+//! batching, literal construction, readback), iterator end-to-end
+//! latency, and the host merge.
+//!
+//! Run: `cargo bench --bench hotpath`
+
+use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
+use simplepim::pim::PimConfig;
+use simplepim::report::bench::{measure, report};
+use simplepim::workloads::{histogram, linreg, vecadd};
+
+fn main() {
+    let dpus = 16;
+    let n = 1 << 20; // 1M i32
+
+    // --- scatter / gather marshalling throughput.
+    {
+        let mut sys = PimSystem::host_only(PimConfig::upmem(dpus));
+        let data = vecadd::generate(1, n).0;
+        let mut i = 0u32;
+        let m = measure(2, 10, || {
+            let id = format!("s{i}");
+            sys.scatter(&id, &data, 4).unwrap();
+            sys.free_array(&id).unwrap();
+            i += 1;
+        });
+        report("scatter 1M i32 / 16 DPUs", m, Some((n as u64, "elem")));
+
+        sys.scatter("g", &data, 4).unwrap();
+        let m = measure(2, 10, || {
+            std::hint::black_box(sys.gather("g").unwrap());
+        });
+        report("gather 1M i32 / 16 DPUs", m, Some((n as u64, "elem")));
+    }
+
+    // --- XLA executor dispatch: vecadd map end-to-end (functional).
+    match PimSystem::new(PimConfig::upmem(dpus)) {
+        Ok(mut sys) => {
+            let (x, y) = vecadd::generate(2, n);
+            sys.scatter("x", &x, 4).unwrap();
+            sys.scatter("y", &y, 4).unwrap();
+            sys.array_zip("x", "y", "xy").unwrap();
+            let h = sys.create_handle(PimFunc::VecAdd, TransformKind::Map, vec![]).unwrap();
+            let mut i = 0u32;
+            // Warm the executable cache first.
+            let m = measure(2, 8, || {
+                let id = format!("out{i}");
+                sys.array_map("xy", &id, &h).unwrap();
+                sys.free_array(&id).unwrap();
+                i += 1;
+            });
+            report("array_map vecadd 1M i32 (XLA path)", m, Some((n as u64, "elem")));
+            let s = sys.exec_stats();
+            println!(
+                "    executor split: literal {:.1}% | execute {:.1}% | readback {:.1}%",
+                100.0 * s.literal_s / (s.literal_s + s.execute_s + s.readback_s),
+                100.0 * s.execute_s / (s.literal_s + s.execute_s + s.readback_s),
+                100.0 * s.readback_s / (s.literal_s + s.execute_s + s.readback_s)
+            );
+
+            // --- reduction partials + host merge.
+            let px = histogram::generate(3, n);
+            sys.scatter("px", &px, 4).unwrap();
+            let hh = sys
+                .create_handle(PimFunc::Histogram { bins: 256 }, TransformKind::Red, vec![])
+                .unwrap();
+            let mut i = 0u32;
+            let m = measure(1, 6, || {
+                let id = format!("hb{i}");
+                sys.array_red("px", &id, 256, &hh).unwrap();
+                sys.free_array(&id).unwrap();
+                i += 1;
+            });
+            report("array_red histogram 1M px (XLA path)", m, Some((n as u64, "elem")));
+
+            // --- ML gradient step (the training hot loop).
+            let (xm, ym, _) = linreg::generate(4, 100_000, linreg::DIM);
+            linreg::setup(&mut sys, &xm, &ym, linreg::DIM).unwrap();
+            let w = vec![100i32; linreg::DIM];
+            let mut step = 1000usize;
+            let m = measure(1, 6, || {
+                std::hint::black_box(linreg::gradient_step(&mut sys, &w, step).unwrap());
+                step += 1;
+            });
+            report("linreg gradient_step 100K pts (XLA path)", m, Some((100_000, "pt")));
+        }
+        Err(e) => {
+            println!("(skipping XLA-path benches: {e}; run `make artifacts`)");
+        }
+    }
+
+    // --- host-fallback comparison (same iterator, golden engine).
+    {
+        let mut sys = PimSystem::host_only(PimConfig::upmem(dpus));
+        let (x, y) = vecadd::generate(2, n);
+        sys.scatter("x", &x, 4).unwrap();
+        sys.scatter("y", &y, 4).unwrap();
+        sys.array_zip("x", "y", "xy").unwrap();
+        let h = sys.create_handle(PimFunc::VecAdd, TransformKind::Map, vec![]).unwrap();
+        let mut i = 0u32;
+        let m = measure(2, 8, || {
+            let id = format!("out{i}");
+            sys.array_map("xy", &id, &h).unwrap();
+            sys.free_array(&id).unwrap();
+            i += 1;
+        });
+        report("array_map vecadd 1M i32 (host fallback)", m, Some((n as u64, "elem")));
+    }
+}

@@ -1,0 +1,30 @@
+//! Bench target regenerating paper Table 1 (lines of effective
+//! PIM-related code), counted live from this repository's sources.
+//!
+//! Run: `cargo bench --bench table1_loc`
+
+use simplepim::report::loc;
+
+fn main() {
+    let t = loc::table1().expect("repo sources readable");
+    println!("{}", t.render());
+
+    let ratios: Vec<f64> = t
+        .rows
+        .iter()
+        .map(|r| {
+            let sp: f64 = r[1].parse().unwrap();
+            let bl: f64 = r[2].parse().unwrap();
+            bl / sp
+        })
+        .collect();
+    let mean = ratios.iter().sum::<f64>() / ratios.len() as f64;
+    let (lo, hi) = (
+        ratios.iter().copied().fold(f64::MAX, f64::min),
+        ratios.iter().copied().fold(0.0f64, f64::max),
+    );
+    println!("LoC reduction: {lo:.2}x - {hi:.2}x, mean {mean:.2}x");
+    println!("paper:         2.98x - 5.93x, mean 4.4x");
+    println!("(our built-in kernel families subsume some per-element code the");
+    println!(" paper's C users still write, so our ratios skew slightly higher)");
+}

@@ -1,0 +1,142 @@
+//! Hand-rolled CLI (clap is unavailable offline).
+//!
+//! Subcommands:
+//!   run <workload> [--dpus N]        run one workload end-to-end
+//!   figures <fig9|fig10|fig11|ablations>   regenerate a paper figure
+//!   table1                            regenerate the LoC table
+//!   info [--dpus N]                   print the machine model
+//!   selftest                          quick functional check vs goldens
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+pub struct Args {
+    pub cmd: String,
+    pub positional: Vec<String>,
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    pub fn parse(argv: &[String]) -> Args {
+        let cmd = argv.first().cloned().unwrap_or_else(|| "help".into());
+        let mut positional = Vec::new();
+        let mut flags = Vec::new();
+        let mut it = argv.iter().skip(1).peekable();
+        while let Some(a) = it.next() {
+            if let Some(name) = a.strip_prefix("--") {
+                let val = it.peek().filter(|v| !v.starts_with("--")).map(|v| v.to_string());
+                if val.is_some() {
+                    it.next();
+                }
+                flags.push((name.to_string(), val));
+            } else {
+                positional.push(a.clone());
+            }
+        }
+        Args { cmd, positional, flags }
+    }
+
+    pub fn flag(&self, name: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .find(|(n, _)| n == name)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    pub fn flag_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.flag(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::msg(format!("--{name} expects an integer, got `{v}`"))),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.iter().any(|(n, _)| n == name)
+    }
+}
+
+const HELP: &str = "\
+SimplePIM — a software framework for processing-in-memory (reproduction)
+
+USAGE: simplepim <command> [options]
+
+COMMANDS:
+  run <workload>    run one workload end-to-end on the simulated machine
+                    workloads: reduction vecadd histogram linreg logreg kmeans
+                    options: --dpus N (default 16) --elems N --host-only
+  figures <which>   regenerate a paper figure from the timing model
+                    which: fig9 fig10 fig11 ablations all
+                    options: --csv (emit CSV instead of tables)
+  table1            regenerate the lines-of-code table (Table 1)
+  info              print the machine model   options: --dpus N
+  selftest          functional check: XLA path vs host goldens
+  help              this text
+";
+
+/// CLI entry point.
+pub fn run() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = Args::parse(&argv);
+    match args.cmd.as_str() {
+        "run" => crate::report::figures::cmd_run(&args),
+        "figures" => crate::report::figures::cmd_figures(&args),
+        "table1" => crate::report::loc::cmd_table1(&args),
+        "info" => cmd_info(&args),
+        "selftest" => crate::report::figures::cmd_selftest(&args),
+        "help" | "--help" | "-h" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => Err(Error::msg(format!("unknown command `{other}`; try `help`"))),
+    }
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dpus = args.flag_usize("dpus", 2432)?;
+    let cfg = crate::PimConfig::upmem(dpus);
+    println!("UPMEM-like machine model");
+    println!("  DPUs                : {}", cfg.n_dpus);
+    println!("  ranks               : {}", cfg.n_ranks());
+    println!("  clock               : {} MHz", cfg.freq_hz / 1e6);
+    println!("  pipeline depth      : {}", cfg.pipeline_depth);
+    println!("  default tasklets    : {}", cfg.default_tasklets);
+    println!("  WRAM / DPU          : {} KB", cfg.wram_bytes / 1024);
+    println!("  MRAM / DPU          : {} MB", cfg.mram_bytes / (1024 * 1024));
+    println!("  DMA                 : {}-byte aligned, <= {} B", cfg.dma_align, cfg.dma_max_bytes);
+    println!("  parallel xfer bw    : {:.1} GB/s", cfg.parallel_bw() / 1e9);
+    println!("  peak compute        : {:.2} TOPS", cfg.n_dpus as f64 * cfg.freq_hz / 1e12);
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn args(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>())
+    }
+
+    #[test]
+    fn parses_command_and_flags() {
+        let a = args(&["run", "vecadd", "--dpus", "32", "--host-only"]);
+        assert_eq!(a.cmd, "run");
+        assert_eq!(a.positional, vec!["vecadd"]);
+        assert_eq!(a.flag("dpus"), Some("32"));
+        assert!(a.has("host-only"));
+        assert_eq!(a.flag_usize("dpus", 16).unwrap(), 32);
+        assert_eq!(a.flag_usize("elems", 7).unwrap(), 7);
+    }
+
+    #[test]
+    fn bad_int_flag_errors() {
+        let a = args(&["run", "--dpus", "xyz"]);
+        assert!(a.flag_usize("dpus", 1).is_err());
+    }
+
+    #[test]
+    fn empty_is_help() {
+        assert_eq!(args(&[]).cmd, "help");
+    }
+}

@@ -1,0 +1,76 @@
+//! The SimplePIM **communication interface**, PIM<->PIM half
+//! (paper §3.2): `allreduce` and `allgather`.
+//!
+//! UPMEM has no hardware channel between DPUs (paper §2), so both
+//! collectives route through the host root — gather the pieces, combine
+//! or concatenate centrally, push the result back — exactly as the
+//! paper's implementation does (§4.1, and the §6 discussion of future
+//! inter-DIMM links).
+
+use crate::error::{Error, Result};
+use crate::util::round_up;
+
+use super::comm::{bytes_to_words, words_to_bytes};
+use super::handle::Handle;
+use super::management::Layout;
+use super::PimSystem;
+
+impl PimSystem {
+    /// `simple_pim_array_allreduce`: every DPU holds an equal-length
+    /// local array under `id`; combine them elementwise with the
+    /// handle's accumulative function and leave the combined array on
+    /// every DPU (in place).
+    pub fn allreduce(&mut self, id: &str, handle: &Handle) -> Result<()> {
+        let meta = self.management.lookup(id)?.clone();
+        if !matches!(meta.layout, Layout::Broadcast) {
+            return Err(Error::Handle(format!(
+                "allreduce needs equal-length per-DPU arrays (broadcast layout); `{id}` is {:?}",
+                meta.layout
+            )));
+        }
+        let bytes = meta.len * meta.type_size as u64;
+        let padded = round_up(bytes, 8).max(8);
+
+        // Gather every DPU's copy (timed parallel pull).
+        let pulled = self.machine.pull_parallel(meta.addr, padded, self.machine.n_dpus())?;
+
+        // Host root combines elementwise.
+        let acc = handle.func.acc();
+        let mut merged = vec![0i32; (bytes / 4) as usize];
+        let mut first = true;
+        for buf in &pulled {
+            let words = bytes_to_words(&buf[..bytes as usize]);
+            if first {
+                merged.copy_from_slice(&words);
+                first = false;
+            } else {
+                for (m, v) in merged.iter_mut().zip(words) {
+                    *m = acc(*m, v);
+                }
+            }
+        }
+        self.machine.charge_host_merge(merged.len() as u64 * self.machine.n_dpus() as u64);
+
+        // Push the combined array back in place (timed broadcast).
+        let mut buf = words_to_bytes(&merged);
+        buf.resize(padded as usize, 0);
+        self.machine.push_broadcast(meta.addr, &buf)?;
+        Ok(())
+    }
+
+    /// `simple_pim_array_allgather`: collect the scattered pieces of
+    /// `id` and give every DPU the complete array under `new_id`.
+    pub fn allgather(&mut self, id: &str, new_id: &str) -> Result<()> {
+        let meta = self.management.lookup(id)?.clone();
+        if !matches!(meta.layout, Layout::Scattered) {
+            return Err(Error::Handle(format!(
+                "allgather needs a scattered array; `{id}` is {:?}",
+                meta.layout
+            )));
+        }
+        // Gather (timed) ...
+        let full = self.gather(id)?;
+        // ... and broadcast the complete array (timed + registered).
+        self.broadcast(new_id, &full, meta.type_size)
+    }
+}

@@ -1,0 +1,172 @@
+//! The SimplePIM **communication interface**, host<->PIM half
+//! (paper §3.2): `broadcast`, `scatter`, `gather`.
+//!
+//! All three hide the UPMEM transfer rules: the scatter planner pads
+//! chunks so every DPU pushes/pulls an equal-sized 8-byte-aligned buffer
+//! (the precondition for the fast *parallel* transfer commands, §4.1),
+//! and no element is ever split across DPUs.
+
+use crate::error::{Error, Result};
+use crate::util::round_up;
+
+use super::management::{ArrayMeta, Layout};
+use super::planner::plan_scatter;
+use super::PimSystem;
+
+impl PimSystem {
+    /// `simple_pim_array_broadcast`: copy `data` (elements of
+    /// `type_size` bytes, given as packed i32 words) to every DPU and
+    /// register it under `id`.
+    pub fn broadcast(&mut self, id: &str, data: &[i32], type_size: u32) -> Result<()> {
+        let bytes = words_to_bytes(data);
+        let len = check_elems(&bytes, type_size)?;
+        let padded = round_up(bytes.len() as u64, self.machine.cfg.dma_align);
+        let addr = self.machine.alloc(padded.max(8))?;
+        let mut buf = bytes;
+        buf.resize(padded as usize, 0);
+        self.machine.push_broadcast(addr, &buf)?;
+        self.management.register(ArrayMeta {
+            id: id.to_string(),
+            len,
+            type_size,
+            per_dpu: vec![len; self.machine.n_dpus()],
+            addr,
+            padded_bytes: padded,
+            layout: Layout::Broadcast,
+        })
+    }
+
+    /// `simple_pim_array_scatter`: split `data` evenly across the DPUs
+    /// (alignment-aware, equal padded buffers) and register it.
+    pub fn scatter(&mut self, id: &str, data: &[i32], type_size: u32) -> Result<()> {
+        let bytes = words_to_bytes(data);
+        let len = check_elems(&bytes, type_size)?;
+        let plan = plan_scatter(&self.machine.cfg, len, type_size as u64);
+        let addr = self.machine.alloc(plan.padded_bytes.max(8))?;
+
+        let ts = type_size as usize;
+        let mut bufs = Vec::with_capacity(self.machine.n_dpus());
+        let mut off = 0usize;
+        for &elems in &plan.per_dpu_elems {
+            let take = elems as usize * ts;
+            let mut b = vec![0u8; plan.padded_bytes as usize];
+            b[..take].copy_from_slice(&bytes[off..off + take]);
+            off += take;
+            bufs.push(b);
+        }
+        self.machine.push_parallel(addr, &bufs)?;
+        self.management.register(ArrayMeta {
+            id: id.to_string(),
+            len,
+            type_size,
+            per_dpu: plan.per_dpu_elems,
+            addr,
+            padded_bytes: plan.padded_bytes,
+            layout: Layout::Scattered,
+        })
+    }
+
+    /// `simple_pim_array_gather`: reassemble a scattered array on the
+    /// host (or fetch one copy of a broadcast array).  Returns packed
+    /// i32 words.
+    pub fn gather(&mut self, id: &str) -> Result<Vec<i32>> {
+        let meta = self.management.lookup(id)?.clone();
+        match &meta.layout {
+            Layout::Scattered => {
+                let bufs = self.machine.pull_parallel(
+                    meta.addr,
+                    meta.padded_bytes,
+                    self.machine.n_dpus(),
+                )?;
+                let mut out = Vec::with_capacity((meta.len * meta.type_size as u64 / 4) as usize);
+                for (dpu, buf) in bufs.iter().enumerate() {
+                    let take = meta.bytes_on(dpu) as usize;
+                    out.extend(bytes_to_words(&buf[..take]));
+                }
+                Ok(out)
+            }
+            Layout::Broadcast => {
+                let bytes = meta.len * meta.type_size as u64;
+                let buf = self.machine.pull_serial(0, meta.addr, round_up(bytes, 8))?;
+                Ok(bytes_to_words(&buf[..bytes as usize]))
+            }
+            Layout::LazyZip { a, b } => Err(Error::Handle(format!(
+                "cannot gather lazily zipped `{id}`; gather `{a}`/`{b}` or map it first"
+            ))),
+        }
+    }
+
+    /// `simple_pim_array_free`: unregister and release MRAM.
+    pub fn free_array(&mut self, id: &str) -> Result<()> {
+        let meta = self.management.free(id)?;
+        if !matches!(meta.layout, Layout::LazyZip { .. }) {
+            self.machine.free(meta.addr)?;
+        }
+        Ok(())
+    }
+}
+
+/// Pack i32 words into little-endian bytes.
+///
+/// Hot path (every scatter/gather/map marshals through this), so on
+/// little-endian targets it is a single memcpy; the portable
+/// per-element path covers big-endian.
+pub(crate) fn words_to_bytes(words: &[i32]) -> Vec<u8> {
+    if cfg!(target_endian = "little") {
+        let mut out = vec![0u8; words.len() * 4];
+        // SAFETY: i32 -> u8 reinterpretation of initialized memory;
+        // lengths match; on LE the byte order is already to_le_bytes.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                words.as_ptr() as *const u8,
+                out.as_mut_ptr(),
+                out.len(),
+            );
+        }
+        out
+    } else {
+        let mut out = Vec::with_capacity(words.len() * 4);
+        for w in words {
+            out.extend_from_slice(&w.to_le_bytes());
+        }
+        out
+    }
+}
+
+/// Unpack little-endian bytes into i32 words (length must be 4-aligned).
+pub(crate) fn bytes_to_words(bytes: &[u8]) -> Vec<i32> {
+    debug_assert_eq!(bytes.len() % 4, 0);
+    if cfg!(target_endian = "little") {
+        let mut out = vec![0i32; bytes.len() / 4];
+        // SAFETY: u8 -> i32 of initialized memory; dst is correctly
+        // sized; LE layout matches from_le_bytes.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                bytes.as_ptr(),
+                out.as_mut_ptr() as *mut u8,
+                bytes.len(),
+            );
+        }
+        out
+    } else {
+        bytes
+            .chunks_exact(4)
+            .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+            .collect()
+    }
+}
+
+fn check_elems(bytes: &[u8], type_size: u32) -> Result<u64> {
+    if type_size == 0 || type_size % 4 != 0 {
+        return Err(Error::Alignment(format!(
+            "type_size {type_size} must be a positive multiple of 4 (i32-packed framework)"
+        )));
+    }
+    if bytes.len() % type_size as usize != 0 {
+        return Err(Error::Alignment(format!(
+            "{} bytes is not a whole number of {type_size}-byte elements",
+            bytes.len()
+        )));
+    }
+    Ok((bytes.len() / type_size as usize) as u64)
+}

@@ -1,0 +1,577 @@
+//! Functional execution engine: run a handle's kernel over per-DPU data.
+//!
+//! The request path: per-DPU slices are gang-batched (leading dimension
+//! `G` from the artifact), padded with the kernel's identity element to
+//! the artifact's fixed per-DPU capacity `N`, and pushed through the AOT
+//! XLA executable.  Oversized arrays are processed in `N`-element
+//! chunks: map chunks concatenate, reduction chunks accumulate (all
+//! shipped reductions are commutative/associative adds).
+//!
+//! When no artifact fits (custom `HostMap`/`HostRed` functions, exotic
+//! histogram bin counts) or the system was built without a runtime, the
+//! bit-identical host goldens run instead — the framework is
+//! functionally complete either way, and the integration tests pin the
+//! two paths to each other.
+
+use crate::error::{Error, Result};
+use crate::runtime::{Runtime, TensorRef};
+use crate::workloads::golden;
+
+use super::handle::PimFunc;
+
+/// Padded-centroid distance anchor for K-means (see DESIGN.md): far
+/// enough that no real point (features in `[0, ~4096)`) ever picks a
+/// padding centroid, small enough that squared distances stay in i32.
+pub const KMEANS_FAR: i32 = 8192;
+
+/// Per-DPU inputs to one kernel execution.
+pub enum Inputs {
+    /// One local array per DPU.
+    One(Vec<Vec<i32>>),
+    /// A lazily zipped pair: both constituents, per DPU.
+    Two(Vec<Vec<i32>>, Vec<Vec<i32>>),
+}
+
+impl Inputs {
+    pub fn n_dpus(&self) -> usize {
+        match self {
+            Inputs::One(a) => a.len(),
+            Inputs::Two(a, _) => a.len(),
+        }
+    }
+
+    fn first(&self) -> &[Vec<i32>] {
+        match self {
+            Inputs::One(a) => a,
+            Inputs::Two(a, _) => a,
+        }
+    }
+
+    fn second(&self) -> Option<&[Vec<i32>]> {
+        match self {
+            Inputs::One(_) => None,
+            Inputs::Two(_, b) => Some(b),
+        }
+    }
+}
+
+/// Execute `func` with broadcast context `ctx` over per-DPU inputs.
+/// Returns per-DPU outputs (map: transformed arrays; red: partials of
+/// `func.red_output_len()` elements).
+pub fn execute_func(
+    runtime: Option<&Runtime>,
+    func: &PimFunc,
+    ctx: &[i32],
+    inputs: &Inputs,
+) -> Result<Vec<Vec<i32>>> {
+    if let Some(rt) = runtime {
+        match func {
+            PimFunc::AffineMap => {
+                return run_1d(rt, "map_affine", inputs.first(), None, Some(ctx), 0, Mode::Map)
+            }
+            PimFunc::VecAdd => {
+                let b = inputs.second().ok_or_else(|| {
+                    Error::Handle("VecAdd needs a zipped pair input".into())
+                })?;
+                return run_1d(rt, "vecadd", inputs.first(), Some(b), None, 0, Mode::Map);
+            }
+            PimFunc::SumReduce => {
+                return run_1d(rt, "reduce_sum", inputs.first(), None, None, 0, Mode::Red(1))
+            }
+            PimFunc::Histogram { bins } => {
+                // Only the AOT-compiled bin count runs on the XLA path;
+                // other bin counts take the host fallback below.
+                if let Ok(meta) = rt.manifest.select("histogram", 1) {
+                    if meta.param("bins")? == *bins as i64 {
+                        return run_1d(
+                            rt,
+                            "histogram",
+                            inputs.first(),
+                            None,
+                            None,
+                            -1,
+                            Mode::Red(*bins as usize),
+                        );
+                    }
+                }
+            }
+            PimFunc::LinregGrad { dim } => {
+                let y = inputs.second().ok_or_else(|| {
+                    Error::Handle("LinregGrad needs zip(points, targets)".into())
+                })?;
+                return run_grad(rt, "linreg", inputs.first(), y, ctx, *dim as usize);
+            }
+            PimFunc::LogregGrad { dim } => {
+                let y = inputs.second().ok_or_else(|| {
+                    Error::Handle("LogregGrad needs zip(points, targets)".into())
+                })?;
+                return run_grad(rt, "logreg", inputs.first(), y, ctx, *dim as usize);
+            }
+            PimFunc::KmeansAssign { k, dim } => {
+                return run_kmeans(rt, inputs.first(), ctx, *k as usize, *dim as usize)
+            }
+            PimFunc::HostMap(_) | PimFunc::HostRed { .. } | PimFunc::HostAcc(_) => {}
+        }
+    }
+    host_fallback(func, ctx, inputs)
+}
+
+/// Host fallback: the bit-identical goldens, per DPU.
+fn host_fallback(func: &PimFunc, ctx: &[i32], inputs: &Inputs) -> Result<Vec<Vec<i32>>> {
+    let n = inputs.n_dpus();
+    let mut out = Vec::with_capacity(n);
+    for dpu in 0..n {
+        let a = &inputs.first()[dpu];
+        let result = match func {
+            PimFunc::AffineMap => golden::map_affine(a, ctx[0], ctx[1]),
+            PimFunc::VecAdd => {
+                let b = &inputs.second().ok_or_else(|| {
+                    Error::Handle("VecAdd needs a zipped pair input".into())
+                })?[dpu];
+                golden::vecadd(a, b)
+            }
+            PimFunc::SumReduce => vec![golden::reduce_sum(a)],
+            PimFunc::Histogram { bins } => golden::histogram(a, *bins),
+            PimFunc::LinregGrad { dim } => {
+                let y = &inputs.second().ok_or_else(|| {
+                    Error::Handle("LinregGrad needs zip(points, targets)".into())
+                })?[dpu];
+                golden::linreg_grad(a, y, ctx, *dim as usize)
+            }
+            PimFunc::LogregGrad { dim } => {
+                let y = &inputs.second().ok_or_else(|| {
+                    Error::Handle("LogregGrad needs zip(points, targets)".into())
+                })?[dpu];
+                golden::logreg_grad(a, y, ctx, *dim as usize)
+            }
+            PimFunc::KmeansAssign { k, dim } => {
+                golden::kmeans_partial(a, ctx, *k as usize, *dim as usize)
+            }
+            PimFunc::HostMap(f) => f(a, ctx),
+            PimFunc::HostRed { output_len, init, func } => {
+                let mut acc = vec![*init; *output_len as usize];
+                func(a, ctx, &mut acc);
+                acc
+            }
+            PimFunc::HostAcc(_) => {
+                return Err(Error::Handle(
+                    "HostAcc handles drive allreduce, not map/red iterators".into(),
+                ))
+            }
+        };
+        out.push(result);
+    }
+    Ok(out)
+}
+
+/// Per-DPU local prefix sum through the `scan_local` artifact family
+/// (§6 extension).  Returns (scanned per DPU, per-DPU totals).
+/// Oversized arrays are chunked; the inter-chunk carry is folded in on
+/// the host (chunking only triggers past the largest compiled N).
+pub(crate) fn run_scan_local(
+    rt: &Runtime,
+    a: &[Vec<i32>],
+) -> Result<(Vec<Vec<i32>>, Vec<i32>)> {
+    let n_dpus = a.len();
+    let max_len = a.iter().map(|v| v.len()).max().unwrap_or(0);
+    let meta = rt.manifest.select("scan_local", max_len)?;
+    let (gang, cap) = (meta.gang(), meta.n());
+    let name = meta.name.clone();
+
+    let mut scanned: Vec<Vec<i32>> = a.iter().map(|v| Vec::with_capacity(v.len())).collect();
+    let mut totals = vec![0i32; n_dpus];
+    let chunks = max_len.div_ceil(cap).max(1);
+    let shape = [gang, cap];
+    let mut xbuf = vec![0i32; gang * cap];
+
+    for chunk in 0..chunks {
+        let lo = chunk * cap;
+        for gang_start in (0..n_dpus).step_by(gang) {
+            let slots = gang.min(n_dpus - gang_start);
+            xbuf.fill(0);
+            for s in 0..slots {
+                let src = &a[gang_start + s];
+                if lo < src.len() {
+                    let hi = (lo + cap).min(src.len());
+                    xbuf[s * cap..s * cap + (hi - lo)].copy_from_slice(&src[lo..hi]);
+                }
+            }
+            let result = rt.execute_i32(&name, &[TensorRef::new(&xbuf, &shape)])?;
+            let (cs, tot) = (&result[0], &result[1]);
+            for s in 0..slots {
+                let dpu = gang_start + s;
+                let want = a[dpu].len();
+                if lo < want {
+                    let hi = (lo + cap).min(want);
+                    let carry = totals[dpu];
+                    scanned[dpu].extend(
+                        cs[s * cap..s * cap + (hi - lo)]
+                            .iter()
+                            .map(|&v| v.wrapping_add(carry)),
+                    );
+                    // Chunk total = scan value at the last *valid* lane
+                    // (zero padding does not disturb it).
+                    totals[dpu] = carry.wrapping_add(cs[s * cap + (hi - lo) - 1]);
+                    let _ = tot; // per-call totals subsumed by the above
+                }
+            }
+        }
+    }
+    Ok((scanned, totals))
+}
+
+/// Per-row base addition through the `add_base` artifact family.
+pub(crate) fn run_add_base(
+    rt: &Runtime,
+    a: &[Vec<i32>],
+    bases: &[i32],
+) -> Result<Vec<Vec<i32>>> {
+    let n_dpus = a.len();
+    let max_len = a.iter().map(|v| v.len()).max().unwrap_or(0);
+    let meta = rt.manifest.select("add_base", max_len)?;
+    let (gang, cap) = (meta.gang(), meta.n());
+    let name = meta.name.clone();
+
+    let mut out: Vec<Vec<i32>> = a.iter().map(|v| Vec::with_capacity(v.len())).collect();
+    let chunks = max_len.div_ceil(cap).max(1);
+    let shape = [gang, cap];
+    let b_shape = [gang, 1];
+    let mut xbuf = vec![0i32; gang * cap];
+    let mut bbuf = vec![0i32; gang];
+
+    for chunk in 0..chunks {
+        let lo = chunk * cap;
+        for gang_start in (0..n_dpus).step_by(gang) {
+            let slots = gang.min(n_dpus - gang_start);
+            xbuf.fill(0);
+            bbuf.fill(0);
+            for s in 0..slots {
+                let src = &a[gang_start + s];
+                bbuf[s] = bases[gang_start + s];
+                if lo < src.len() {
+                    let hi = (lo + cap).min(src.len());
+                    xbuf[s * cap..s * cap + (hi - lo)].copy_from_slice(&src[lo..hi]);
+                }
+            }
+            let result = rt.execute_i32(
+                &name,
+                &[TensorRef::new(&xbuf, &shape), TensorRef::new(&bbuf, &b_shape)],
+            )?;
+            for s in 0..slots {
+                let dpu = gang_start + s;
+                let want = a[dpu].len();
+                if lo < want {
+                    let hi = (lo + cap).min(want);
+                    out[dpu].extend_from_slice(&result[0][s * cap..s * cap + (hi - lo)]);
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// Map vs reduction plumbing for the 1-D families.
+#[derive(Clone, Copy)]
+enum Mode {
+    Map,
+    Red(usize),
+}
+
+/// Run a 1-D family (`vecadd`, `map_affine`, `reduce_sum`, `histogram`)
+/// over per-DPU arrays, gang-batching and chunking as needed.
+fn run_1d(
+    rt: &Runtime,
+    family: &str,
+    a: &[Vec<i32>],
+    b: Option<&[Vec<i32>]>,
+    ctx: Option<&[i32]>,
+    pad: i32,
+    mode: Mode,
+) -> Result<Vec<Vec<i32>>> {
+    let n_dpus = a.len();
+    let max_len = a.iter().map(|v| v.len()).max().unwrap_or(0);
+    let meta = rt.manifest.select(family, max_len)?;
+    let (gang, cap) = (meta.gang(), meta.n());
+    let name = meta.name.clone();
+
+    let mut outputs: Vec<Vec<i32>> = match mode {
+        Mode::Map => a.iter().map(|v| Vec::with_capacity(v.len())).collect(),
+        Mode::Red(out_len) => vec![vec![0i32; out_len]; n_dpus],
+    };
+
+    let chunks = max_len.div_ceil(cap).max(1);
+    let gang_shape = [gang, cap];
+    let ctx_shape = ctx.map(|c| [c.len()]);
+    let mut xbuf = vec![pad; gang * cap];
+    let mut ybuf = vec![pad; gang * cap];
+
+    for chunk in 0..chunks {
+        let lo = chunk * cap;
+        for gang_start in (0..n_dpus).step_by(gang) {
+            let slots = gang.min(n_dpus - gang_start);
+            // Marshal this gang's chunk (identity-padded).
+            xbuf.fill(pad);
+            if b.is_some() {
+                ybuf.fill(pad);
+            }
+            for s in 0..slots {
+                let src = &a[gang_start + s];
+                if lo < src.len() {
+                    let hi = (lo + cap).min(src.len());
+                    xbuf[s * cap..s * cap + (hi - lo)].copy_from_slice(&src[lo..hi]);
+                }
+                if let Some(bb) = b {
+                    let srcb = &bb[gang_start + s];
+                    if lo < srcb.len() {
+                        let hi = (lo + cap).min(srcb.len());
+                        ybuf[s * cap..s * cap + (hi - lo)].copy_from_slice(&srcb[lo..hi]);
+                    }
+                }
+            }
+            let mut tensors: Vec<TensorRef> = vec![TensorRef::new(&xbuf, &gang_shape)];
+            if b.is_some() {
+                tensors.push(TensorRef::new(&ybuf, &gang_shape));
+            }
+            if let (Some(c), Some(shape)) = (ctx, ctx_shape.as_ref()) {
+                tensors.push(TensorRef::new(c, shape));
+            }
+            let result = rt.execute_i32(&name, &tensors)?;
+            let out0 = &result[0];
+
+            for s in 0..slots {
+                let dpu = gang_start + s;
+                match mode {
+                    Mode::Map => {
+                        let want = a[dpu].len();
+                        if lo < want {
+                            let hi = (lo + cap).min(want);
+                            outputs[dpu].extend_from_slice(&out0[s * cap..s * cap + (hi - lo)]);
+                        }
+                    }
+                    Mode::Red(out_len) => {
+                        let row = &out0[s * out_len..(s + 1) * out_len];
+                        for (acc, v) in outputs[dpu].iter_mut().zip(row) {
+                            *acc = acc.wrapping_add(*v);
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(outputs)
+}
+
+/// Run the `linreg`/`logreg` gradient families: inputs are row-major
+/// point arrays (`n*dim` i32 per DPU) zipped with targets (`n` i32).
+fn run_grad(
+    rt: &Runtime,
+    family: &str,
+    x: &[Vec<i32>],
+    y: &[Vec<i32>],
+    w: &[i32],
+    dim: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let n_dpus = x.len();
+    let max_pts = y.iter().map(|v| v.len()).max().unwrap_or(0);
+    let meta = rt.manifest.select(family, max_pts)?;
+    let (gang, cap) = (meta.gang(), meta.n());
+    let d_art = meta.param("dim")? as usize;
+    if dim > d_art {
+        return Err(Error::Handle(format!(
+            "feature dim {dim} exceeds compiled dim {d_art}; regenerate artifacts"
+        )));
+    }
+    let name = meta.name.clone();
+
+    let mut outputs = vec![vec![0i32; dim]; n_dpus];
+    let chunks = max_pts.div_ceil(cap).max(1);
+
+    let x_shape = [gang, cap, d_art];
+    let v_shape = [gang, cap];
+    let w_shape = [d_art];
+    let mut wbuf = vec![0i32; d_art];
+    wbuf[..dim].copy_from_slice(w);
+
+    let mut xbuf = vec![0i32; gang * cap * d_art];
+    let mut ybuf = vec![0i32; gang * cap];
+    let mut mbuf = vec![0i32; gang * cap];
+
+    for chunk in 0..chunks {
+        let lo = chunk * cap;
+        for gang_start in (0..n_dpus).step_by(gang) {
+            let slots = gang.min(n_dpus - gang_start);
+            xbuf.fill(0);
+            ybuf.fill(0);
+            mbuf.fill(0);
+            for s in 0..slots {
+                let dpu = gang_start + s;
+                let pts = y[dpu].len();
+                if lo >= pts {
+                    continue;
+                }
+                let hi = (lo + cap).min(pts);
+                for (row, p) in (lo..hi).enumerate() {
+                    let src = &x[dpu][p * dim..(p + 1) * dim];
+                    let dst = (s * cap + row) * d_art;
+                    xbuf[dst..dst + dim].copy_from_slice(src);
+                    ybuf[s * cap + row] = y[dpu][p];
+                    mbuf[s * cap + row] = 1;
+                }
+            }
+            let result = rt.execute_i32(
+                &name,
+                &[
+                    TensorRef::new(&xbuf, &x_shape),
+                    TensorRef::new(&ybuf, &v_shape),
+                    TensorRef::new(&mbuf, &v_shape),
+                    TensorRef::new(&wbuf, &w_shape),
+                ],
+            )?;
+            for s in 0..slots {
+                let dpu = gang_start + s;
+                let row = &result[0][s * d_art..s * d_art + dim];
+                for (acc, v) in outputs[dpu].iter_mut().zip(row) {
+                    *acc = acc.wrapping_add(*v);
+                }
+            }
+        }
+    }
+    Ok(outputs)
+}
+
+/// Run the K-means family; returns packed `[sums (k*dim) | counts (k)]`
+/// per DPU.
+fn run_kmeans(
+    rt: &Runtime,
+    x: &[Vec<i32>],
+    centroids: &[i32],
+    k: usize,
+    dim: usize,
+) -> Result<Vec<Vec<i32>>> {
+    let n_dpus = x.len();
+    let max_pts = x.iter().map(|v| v.len() / dim.max(1)).max().unwrap_or(0);
+    let meta = rt.manifest.select("kmeans", max_pts)?;
+    let (gang, cap) = (meta.gang(), meta.n());
+    let d_art = meta.param("dim")? as usize;
+    let k_art = meta.param("k")? as usize;
+    if dim > d_art || k > k_art {
+        return Err(Error::Handle(format!(
+            "kmeans k={k}/dim={dim} exceeds compiled k={k_art}/dim={d_art}"
+        )));
+    }
+    let name = meta.name.clone();
+
+    // Park padding centroids far away so no real point selects them.
+    let mut cbuf = vec![KMEANS_FAR; k_art * d_art];
+    for c in 0..k {
+        // Real centroids: pad feature dims with 0 (points pad with 0 too,
+        // so padded dims contribute no distance).
+        for j in 0..d_art {
+            cbuf[c * d_art + j] = if j < dim { centroids[c * dim + j] } else { 0 };
+        }
+    }
+
+    let x_shape = [gang, cap, d_art];
+    let v_shape = [gang, cap];
+    let c_shape = [k_art, d_art];
+    let mut xbuf = vec![0i32; gang * cap * d_art];
+    let mut mbuf = vec![0i32; gang * cap];
+
+    let mut outputs = vec![vec![0i32; k * dim + k]; n_dpus];
+    let chunks = max_pts.div_ceil(cap).max(1);
+
+    for chunk in 0..chunks {
+        let lo = chunk * cap;
+        for gang_start in (0..n_dpus).step_by(gang) {
+            let slots = gang.min(n_dpus - gang_start);
+            xbuf.fill(0);
+            mbuf.fill(0);
+            for s in 0..slots {
+                let dpu = gang_start + s;
+                let pts = x[dpu].len() / dim.max(1);
+                if lo >= pts {
+                    continue;
+                }
+                let hi = (lo + cap).min(pts);
+                for (row, p) in (lo..hi).enumerate() {
+                    let src = &x[dpu][p * dim..(p + 1) * dim];
+                    let dst = (s * cap + row) * d_art;
+                    xbuf[dst..dst + dim].copy_from_slice(src);
+                    mbuf[s * cap + row] = 1;
+                }
+            }
+            let result = rt.execute_i32(
+                &name,
+                &[
+                    TensorRef::new(&xbuf, &x_shape),
+                    TensorRef::new(&mbuf, &v_shape),
+                    TensorRef::new(&cbuf, &c_shape),
+                ],
+            )?;
+            let (sums, counts) = (&result[0], &result[1]);
+            for s in 0..slots {
+                let dpu = gang_start + s;
+                let out = &mut outputs[dpu];
+                for c in 0..k {
+                    for j in 0..dim {
+                        let v = sums[(s * k_art + c) * d_art + j];
+                        out[c * dim + j] = out[c * dim + j].wrapping_add(v);
+                    }
+                    out[k * dim + c] = out[k * dim + c].wrapping_add(counts[s * k_art + c]);
+                }
+            }
+        }
+    }
+    Ok(outputs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Host-fallback tests (no artifacts needed); the artifact path is
+    // covered by rust/tests/integration.rs.
+
+    #[test]
+    fn host_fallback_vecadd() {
+        let inputs = Inputs::Two(vec![vec![1, 2], vec![3]], vec![vec![10, 20], vec![30]]);
+        let out = execute_func(None, &PimFunc::VecAdd, &[], &inputs).unwrap();
+        assert_eq!(out, vec![vec![11, 22], vec![33]]);
+    }
+
+    #[test]
+    fn host_fallback_sum_and_hist() {
+        let inputs = Inputs::One(vec![vec![1, 2, 3], vec![4]]);
+        let out = execute_func(None, &PimFunc::SumReduce, &[], &inputs).unwrap();
+        assert_eq!(out, vec![vec![6], vec![4]]);
+
+        let inputs = Inputs::One(vec![vec![0, 16, 4095]]);
+        let out =
+            execute_func(None, &PimFunc::Histogram { bins: 256 }, &[], &inputs).unwrap();
+        assert_eq!(out[0][0], 1);
+        assert_eq!(out[0][1], 1);
+        assert_eq!(out[0][255], 1);
+    }
+
+    #[test]
+    fn host_fallback_custom_red() {
+        // A programmer-defined min-reduction via HostRed.
+        fn min_red(xs: &[i32], _ctx: &[i32], acc: &mut [i32]) {
+            for &x in xs {
+                if x < acc[0] {
+                    acc[0] = x;
+                }
+            }
+        }
+        let f = PimFunc::HostRed { output_len: 1, init: i32::MAX, func: min_red };
+        let inputs = Inputs::One(vec![vec![5, -3, 7], vec![2, 9]]);
+        let out = execute_func(None, &f, &[], &inputs).unwrap();
+        assert_eq!(out, vec![vec![-3], vec![2]]);
+    }
+
+    #[test]
+    fn vecadd_without_pair_errors() {
+        let inputs = Inputs::One(vec![vec![1]]);
+        assert!(execute_func(None, &PimFunc::VecAdd, &[], &inputs).is_err());
+    }
+}

@@ -1,0 +1,304 @@
+//! Extension iterators — the paper's §6: "Other parallel patterns,
+//! such as prefix sum and filter, can be easily incorporated."
+//!
+//! Both follow the framework's two-phase host-root pattern:
+//!
+//! * **scan** (inclusive prefix sum): each DPU scans its local slice
+//!   and reports its local total; the host exclusive-scans the totals
+//!   and pushes one base offset per DPU; a second local pass adds the
+//!   base.  Classic two-level scan, with the host as the root node —
+//!   exactly how the paper's collectives are structured.
+//! * **filter**: each DPU compacts its local slice through a
+//!   programmer-defined predicate; the per-DPU counts become the (now
+//!   ragged) distribution of the output array, which `gather`
+//!   reassembles densely.
+//!
+//! Functional execution uses the host engine (these patterns have no
+//! AOT artifact family yet); timing is charged through the same
+//! substrate model as the core iterators.
+
+use crate::error::Result;
+use crate::pim::InstrMix;
+use crate::timing::{self, KernelProfile};
+use crate::util::round_up;
+
+use super::comm::words_to_bytes;
+use super::management::{ArrayMeta, Layout};
+use super::PimSystem;
+
+/// Instruction profile of one local-scan pass (load, add-accumulate,
+/// store per element).
+fn scan_profile() -> KernelProfile {
+    KernelProfile {
+        compute: InstrMix { ialu: 1.0, ..Default::default() },
+        wram_loads: 1.0,
+        wram_stores: 1.0,
+        addr_calcs: 1.0,
+        loop_ops: 1.0,
+        has_user_fn: false,
+        bytes_in: 4.0,
+        bytes_out: 4.0,
+        elem_bytes: 4,
+    }
+}
+
+/// Profile of the predicate+compact pass (load, predicate, conditional
+/// store).
+fn filter_profile() -> KernelProfile {
+    KernelProfile {
+        compute: InstrMix { ialu: 2.0, branch: 1.0, ..Default::default() },
+        wram_loads: 1.0,
+        wram_stores: 0.6, // compaction stores only survivors (est.)
+        addr_calcs: 1.0,
+        loop_ops: 1.0,
+        has_user_fn: true,
+        bytes_in: 4.0,
+        bytes_out: 2.4,
+        elem_bytes: 4,
+    }
+}
+
+impl PimSystem {
+    /// Inclusive prefix sum across the whole scattered array
+    /// (`dest[i] = x[0] + ... + x[i]`, i32 wraparound), registered
+    /// under `dest_id` with the same distribution.
+    pub fn array_scan(&mut self, src_id: &str, dest_id: &str) -> Result<()> {
+        let meta = self.management.lookup(src_id)?.clone();
+        let locals = self.read_local(&meta)?;
+        let elems = meta.max_per_dpu();
+
+        // Phase 1: local scans + totals (one launch) — through the
+        // `scan_local` AOT artifact when the runtime is present, else
+        // the bit-identical host engine.
+        let (mut scanned, totals) = match self.runtime.as_ref() {
+            Some(rt) => super::exec::run_scan_local(rt, &locals)?,
+            None => {
+                let mut scanned = Vec::with_capacity(locals.len());
+                let mut totals = Vec::with_capacity(locals.len());
+                for local in &locals {
+                    let mut acc = 0i32;
+                    let mut s = Vec::with_capacity(local.len());
+                    for &v in local {
+                        acc = acc.wrapping_add(v);
+                        s.push(acc);
+                    }
+                    scanned.push(s);
+                    totals.push(acc);
+                }
+                (scanned, totals)
+            }
+        };
+        let t = timing::map_kernel(
+            &self.machine.cfg,
+            &scan_profile(),
+            &self.opts,
+            self.dma_policy,
+            elems,
+            self.tasklets,
+        );
+        self.machine.charge_kernel(t.seconds);
+
+        // Host root: gather totals (small parallel pull), exclusive-scan
+        // them into per-DPU bases, push one base per DPU.
+        let scratch = self.machine.alloc(8)?;
+        for (dpu, &tot) in totals.iter().enumerate() {
+            self.machine.write_bytes(dpu, scratch, &words_to_bytes(&[tot, 0]))?;
+        }
+        self.machine.pull_parallel(scratch, 8, self.machine.n_dpus())?;
+        let mut bases = vec![0i32; totals.len()];
+        let mut acc = 0i32;
+        for (b, &tot) in bases.iter_mut().zip(&totals) {
+            *b = acc;
+            acc = acc.wrapping_add(tot);
+        }
+        self.machine.charge_host_merge(totals.len() as u64);
+        let base_bufs: Vec<Vec<u8>> =
+            bases.iter().map(|&b| words_to_bytes(&[b, 0])).collect();
+        self.machine.push_parallel(scratch, &base_bufs)?;
+        self.machine.free(scratch)?;
+
+        // Phase 2: add the base to every local element (second launch),
+        // through the `add_base` artifact when available.
+        match self.runtime.as_ref() {
+            Some(rt) => scanned = super::exec::run_add_base(rt, &scanned, &bases)?,
+            None => {
+                for (s, &b) in scanned.iter_mut().zip(&bases) {
+                    for v in s.iter_mut() {
+                        *v = v.wrapping_add(b);
+                    }
+                }
+            }
+        }
+        let t2 = timing::map_kernel(
+            &self.machine.cfg,
+            &scan_profile(),
+            &self.opts,
+            self.dma_policy,
+            elems,
+            self.tasklets,
+        );
+        self.machine.charge_kernel(t2.seconds);
+
+        // Register + store the output.
+        let padded = round_up(elems * 4, 8).max(8);
+        let addr = self.machine.alloc(padded)?;
+        for (dpu, s) in scanned.iter().enumerate() {
+            self.machine.write_bytes(dpu, addr, &words_to_bytes(s))?;
+        }
+        self.management.register(ArrayMeta {
+            id: dest_id.to_string(),
+            len: meta.len,
+            type_size: 4,
+            per_dpu: meta.per_dpu.clone(),
+            addr,
+            padded_bytes: padded,
+            layout: Layout::Scattered,
+        })
+    }
+
+    /// Keep only the elements satisfying `pred`; the output keeps the
+    /// source's DPU placement (ragged) and gathers densely in order.
+    /// Returns the number of surviving elements.
+    pub fn array_filter(
+        &mut self,
+        src_id: &str,
+        dest_id: &str,
+        pred: fn(i32) -> bool,
+    ) -> Result<u64> {
+        let meta = self.management.lookup(src_id)?.clone();
+        let locals = self.read_local(&meta)?;
+        let elems = meta.max_per_dpu();
+
+        let kept: Vec<Vec<i32>> = locals
+            .iter()
+            .map(|l| l.iter().copied().filter(|&v| pred(v)).collect())
+            .collect();
+        let t = timing::map_kernel(
+            &self.machine.cfg,
+            &filter_profile(),
+            &self.opts,
+            self.dma_policy,
+            elems,
+            self.tasklets,
+        );
+        self.machine.charge_kernel(t.seconds);
+
+        let max_kept = kept.iter().map(|k| k.len()).max().unwrap_or(0) as u64;
+        let padded = round_up(max_kept * 4, 8).max(8);
+        let addr = self.machine.alloc(padded)?;
+        for (dpu, k) in kept.iter().enumerate() {
+            self.machine.write_bytes(dpu, addr, &words_to_bytes(k))?;
+        }
+        let per_dpu: Vec<u64> = kept.iter().map(|k| k.len() as u64).collect();
+        let total: u64 = per_dpu.iter().sum();
+        self.management.register(ArrayMeta {
+            id: dest_id.to_string(),
+            len: total,
+            type_size: 4,
+            per_dpu,
+            addr,
+            padded_bytes: padded,
+            layout: Layout::Scattered,
+        })?;
+        Ok(total)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::PimConfig;
+    use crate::util::prng::Prng;
+
+    fn sys(dpus: usize) -> PimSystem {
+        PimSystem::host_only(PimConfig::tiny(dpus))
+    }
+
+    #[test]
+    fn scan_matches_sequential_prefix_sum() {
+        let mut rng = Prng::new(1);
+        for n in [0usize, 1, 7, 1000, 4097] {
+            let data = rng.vec_i32(n, -1000, 1000);
+            let mut s = sys(5);
+            s.scatter("x", &data, 4).unwrap();
+            s.array_scan("x", "xs").unwrap();
+            let got = s.gather("xs").unwrap();
+            let mut acc = 0i32;
+            let want: Vec<i32> = data
+                .iter()
+                .map(|&v| {
+                    acc = acc.wrapping_add(v);
+                    acc
+                })
+                .collect();
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn scan_wraps_like_i32() {
+        let mut s = sys(2);
+        s.scatter("x", &[i32::MAX, 1, 1], 4).unwrap();
+        s.array_scan("x", "xs").unwrap();
+        assert_eq!(
+            s.gather("xs").unwrap(),
+            vec![i32::MAX, i32::MIN, i32::MIN.wrapping_add(1)]
+        );
+    }
+
+    #[test]
+    fn scan_charges_two_launches() {
+        let mut s = sys(3);
+        s.scatter("x", &Prng::new(2).vec_i32(3000, 0, 10), 4).unwrap();
+        s.array_scan("x", "xs").unwrap();
+        assert_eq!(s.timeline().launches, 2);
+        assert!(s.timeline().host_merge_s > 0.0);
+    }
+
+    #[test]
+    fn filter_keeps_order_and_counts() {
+        let mut rng = Prng::new(3);
+        for n in [0usize, 1, 999, 4096] {
+            let data = rng.vec_i32(n, -100, 100);
+            let mut s = sys(4);
+            s.scatter("x", &data, 4).unwrap();
+            let kept = s.array_filter("x", "pos", |v| v > 0).unwrap();
+            let got = s.gather("pos").unwrap();
+            let want: Vec<i32> = data.iter().copied().filter(|&v| v > 0).collect();
+            assert_eq!(kept, want.len() as u64);
+            assert_eq!(got, want, "n={n}");
+        }
+    }
+
+    #[test]
+    fn filter_output_is_ragged_but_consistent() {
+        let mut s = sys(4);
+        let data: Vec<i32> = (0..1000).collect();
+        s.scatter("x", &data, 4).unwrap();
+        s.array_filter("x", "big", |v| v >= 900).unwrap();
+        let meta = s.management.lookup("big").unwrap().clone();
+        assert_eq!(meta.len, 100);
+        assert_eq!(meta.per_dpu.iter().sum::<u64>(), 100);
+        // Survivors all live on the last DPU(s).
+        assert_eq!(s.gather("big").unwrap(), (900..1000).collect::<Vec<i32>>());
+    }
+
+    #[test]
+    fn filter_then_scan_composes() {
+        let mut s = sys(3);
+        let data: Vec<i32> = (1..=100).collect();
+        s.scatter("x", &data, 4).unwrap();
+        s.array_filter("x", "even", |v| v % 2 == 0).unwrap();
+        s.array_scan("even", "csum").unwrap();
+        let got = s.gather("csum").unwrap();
+        let mut acc = 0;
+        let want: Vec<i32> = (1..=100)
+            .filter(|v| v % 2 == 0)
+            .map(|v| {
+                acc += v;
+                acc
+            })
+            .collect();
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,340 @@
+//! Function handles (paper §3.3, `simple_pim_create_handle`).
+//!
+//! On UPMEM, PIM functions live in separate source files compiled by a
+//! different compiler; `create_handle` compiles them together with the
+//! iterator skeleton (enabling inlining, §4.3.4) and hands the host an
+//! opaque handle to pass to iterators.  In this three-layer stack the
+//! "PIM binary" is an AOT-compiled XLA executable: a handle names a
+//! *kernel family* ([`PimFunc`]), carries the broadcast **context**
+//! (model weights, centroids, map coefficients — the paper's `data`
+//! argument), and exposes the instruction profile the timing model
+//! charges for it.
+
+use crate::error::{Error, Result};
+use crate::pim::InstrMix;
+use crate::timing::KernelProfile;
+
+/// Which iterator a handle drives (paper: `transformation_type`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TransformKind {
+    Map,
+    Red,
+    Zip,
+}
+
+/// The kernel families shipped with the framework.  Each maps to an AOT
+/// artifact family (see `python/compile/model.py`); `HostMap`/`HostRed`
+/// allow arbitrary programmer-defined functions executed by the host
+/// fallback path (functionally identical, no artifact required).
+#[derive(Clone)]
+pub enum PimFunc {
+    /// `o = ctx[0] * x + ctx[1]` elementwise.
+    AffineMap,
+    /// Elementwise add of a lazily zipped pair.
+    VecAdd,
+    /// Sum all elements into a single accumulator.
+    SumReduce,
+    /// Histogram of 12-bit values into `bins` buckets.
+    Histogram { bins: u32 },
+    /// Linear-regression gradient partial; ctx = fixed-point weights.
+    LinregGrad { dim: u32 },
+    /// Logistic-regression gradient partial; ctx = weights.
+    LogregGrad { dim: u32 },
+    /// K-means assignment partials; ctx = flattened centroids `[k*dim]`.
+    /// Output layout: `[sums (k*dim) | counts (k)]`.
+    KmeansAssign { k: u32, dim: u32 },
+    /// Programmer-defined map: `f(element_slice, ctx) -> output elems`.
+    HostMap(fn(&[i32], &[i32]) -> Vec<i32>),
+    /// Programmer-defined general reduction:
+    /// `f(element_slice, ctx, accumulator)`.
+    HostRed {
+        output_len: u32,
+        init: i32,
+        func: fn(&[i32], &[i32], &mut [i32]),
+    },
+    /// Elementwise accumulator for `allreduce` (paper §3.2: the
+    /// programmer registers an accumulative function); built-in
+    /// reduction handles default to wraparound addition.
+    HostAcc(fn(i32, i32) -> i32),
+}
+
+impl std::fmt::Debug for PimFunc {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            PimFunc::AffineMap => write!(f, "AffineMap"),
+            PimFunc::VecAdd => write!(f, "VecAdd"),
+            PimFunc::SumReduce => write!(f, "SumReduce"),
+            PimFunc::Histogram { bins } => write!(f, "Histogram({bins})"),
+            PimFunc::LinregGrad { dim } => write!(f, "LinregGrad({dim})"),
+            PimFunc::LogregGrad { dim } => write!(f, "LogregGrad({dim})"),
+            PimFunc::KmeansAssign { k, dim } => write!(f, "KmeansAssign({k},{dim})"),
+            PimFunc::HostMap(_) => write!(f, "HostMap(..)"),
+            PimFunc::HostRed { output_len, .. } => write!(f, "HostRed(len={output_len})"),
+            PimFunc::HostAcc(_) => write!(f, "HostAcc(..)"),
+        }
+    }
+}
+
+impl PimFunc {
+    /// Logical element size in bytes (a "point" for the ML kernels).
+    pub fn elem_bytes(&self) -> u64 {
+        match self {
+            PimFunc::LinregGrad { dim } | PimFunc::LogregGrad { dim } => {
+                (*dim as u64 + 1) * 4 // point row + zipped target
+            }
+            PimFunc::KmeansAssign { dim, .. } => *dim as u64 * 4,
+            _ => 4,
+        }
+    }
+
+    /// The elementwise accumulator used when merging across DPUs
+    /// (host-side `acc_func`): wraparound add for every built-in.
+    pub fn acc(&self) -> fn(i32, i32) -> i32 {
+        match self {
+            PimFunc::HostAcc(f) => *f,
+            _ => i32::wrapping_add,
+        }
+    }
+
+    /// Default reduction output length (elements).
+    pub fn red_output_len(&self) -> Result<u64> {
+        match self {
+            PimFunc::SumReduce => Ok(1),
+            PimFunc::Histogram { bins } => Ok(*bins as u64),
+            PimFunc::LinregGrad { dim } | PimFunc::LogregGrad { dim } => Ok(*dim as u64),
+            PimFunc::KmeansAssign { k, dim } => Ok((*k * (*dim + 1)) as u64),
+            PimFunc::HostRed { output_len, .. } => Ok(*output_len as u64),
+            other => Err(Error::Handle(format!("{other:?} is not a reduction function"))),
+        }
+    }
+
+    /// Per-element instruction profile (SimplePIM-generated code).  The
+    /// per-workload derivations are documented in `workloads/`.
+    pub fn profile(&self) -> KernelProfile {
+        match self {
+            PimFunc::AffineMap => KernelProfile {
+                compute: InstrMix { ialu: 1.0, imul_short: 1.0, ..Default::default() },
+                wram_loads: 1.0,
+                wram_stores: 1.0,
+                addr_calcs: 1.0,
+                loop_ops: 1.0,
+                has_user_fn: true,
+                bytes_in: 4.0,
+                bytes_out: 4.0,
+                elem_bytes: 4,
+            },
+            PimFunc::VecAdd | PimFunc::HostMap(_) => KernelProfile {
+                compute: InstrMix { ialu: 1.0, ..Default::default() },
+                wram_loads: 2.0,
+                wram_stores: 1.0,
+                addr_calcs: 1.0,
+                loop_ops: 1.0,
+                has_user_fn: true,
+                bytes_in: 8.0,
+                bytes_out: 4.0,
+                elem_bytes: 4,
+            },
+            PimFunc::SumReduce => KernelProfile {
+                compute: InstrMix { ialu: 1.0, ..Default::default() },
+                wram_loads: 1.0,
+                wram_stores: 0.0, // register accumulator
+                addr_calcs: 1.0,
+                loop_ops: 1.0,
+                has_user_fn: true,
+                bytes_in: 4.0,
+                bytes_out: 0.0,
+                elem_bytes: 4,
+            },
+            PimFunc::Histogram { .. } | PimFunc::HostRed { .. } | PimFunc::HostAcc(_) => KernelProfile {
+                // map_to_val: key = (d * bins) >> 12 — two shifts after
+                // strength reduction; acc: load bin, add, store.
+                compute: InstrMix { ialu: 1.0, shift: 2.0, ..Default::default() },
+                wram_loads: 2.0,
+                wram_stores: 1.0,
+                addr_calcs: 1.0,
+                loop_ops: 1.0,
+                has_user_fn: true,
+                bytes_in: 4.0,
+                bytes_out: 0.0,
+                elem_bytes: 4,
+            },
+            PimFunc::LinregGrad { dim } => {
+                let d = *dim as f64;
+                KernelProfile {
+                    // dot: d quantized muls + d adds + shift; err: sub;
+                    // grad: d muls + d shifts + d adds.
+                    compute: InstrMix {
+                        imul_short: 2.0 * d,
+                        ialu: 2.0 * d + 2.0,
+                        shift: d + 1.0,
+                        ..Default::default()
+                    },
+                    wram_loads: 2.0 * d + 1.0, // point + weights + target
+                    wram_stores: d,            // gradient accumulator
+                    addr_calcs: 2.0,
+                    loop_ops: 1.0,
+                    has_user_fn: true,
+                    bytes_in: (d + 1.0) * 4.0,
+                    bytes_out: 0.0,
+                    elem_bytes: (*dim as u64 + 1) * 4,
+                }
+            }
+            PimFunc::LogregGrad { dim } => {
+                let d = *dim as f64;
+                let mut p = PimFunc::LinregGrad { dim: *dim }.profile();
+                // Taylor sigmoid: clamp (2 alu) + z^2, z^3, *INV48
+                // (3 muls) + 3 shifts + 2 clips (4 alu).
+                p.compute = p.compute.plus(&InstrMix {
+                    imul_short: 3.0,
+                    ialu: 6.0,
+                    shift: 3.0,
+                    ..Default::default()
+                });
+                p.bytes_in = (d + 1.0) * 4.0;
+                p
+            }
+            PimFunc::KmeansAssign { k, dim } => {
+                let (kf, d) = (*k as f64, *dim as f64);
+                KernelProfile {
+                    // distances: k*d (sub, mul, acc) + k min-compares;
+                    // update: d adds + count.
+                    compute: InstrMix {
+                        imul_short: kf * d,
+                        ialu: 2.0 * kf * d + kf + d + 1.0,
+                        ..Default::default()
+                    },
+                    wram_loads: kf * d + d + d, // centroids + point + sums
+                    wram_stores: d + 1.0,
+                    addr_calcs: kf - 2.0, // per-centroid row offsets
+                    loop_ops: 1.0 + kf,   // outer + per-centroid loop
+                    has_user_fn: true,
+                    bytes_in: d * 4.0,
+                    bytes_out: 0.0,
+                    elem_bytes: *dim as u64 * 4,
+                }
+            }
+        }
+    }
+}
+
+/// A compiled function handle (paper: `handle_t`).
+#[derive(Debug, Clone)]
+pub struct Handle {
+    pub kind: TransformKind,
+    pub func: PimFunc,
+    /// Broadcast context: the paper's `data`/`data_size` argument,
+    /// shipped to every PIM core before the launch.
+    pub ctx: Vec<i32>,
+    pub profile: KernelProfile,
+}
+
+impl Handle {
+    /// Build a handle (paper: `simple_pim_create_handle`).  Validates
+    /// kind/function agreement the way the SDK compile step would.
+    pub fn create(func: PimFunc, kind: TransformKind, ctx: Vec<i32>) -> Result<Handle> {
+        let is_red_func = matches!(
+            func,
+            PimFunc::SumReduce
+                | PimFunc::Histogram { .. }
+                | PimFunc::LinregGrad { .. }
+                | PimFunc::LogregGrad { .. }
+                | PimFunc::KmeansAssign { .. }
+                | PimFunc::HostRed { .. }
+                | PimFunc::HostAcc(_)
+        );
+        match kind {
+            TransformKind::Red if !is_red_func => {
+                return Err(Error::Handle(format!("{func:?} cannot drive a reduction")))
+            }
+            TransformKind::Map if is_red_func => {
+                return Err(Error::Handle(format!("{func:?} cannot drive a map")))
+            }
+            _ => {}
+        }
+        // Context arity checks (the "compile" step of handle creation).
+        match &func {
+            PimFunc::AffineMap if ctx.len() != 2 => {
+                return Err(Error::Handle("AffineMap needs ctx = [a, b]".into()))
+            }
+            PimFunc::LinregGrad { dim } | PimFunc::LogregGrad { dim }
+                if ctx.len() != *dim as usize =>
+            {
+                return Err(Error::Handle(format!(
+                    "gradient handle needs ctx = weights[{dim}], got {}",
+                    ctx.len()
+                )))
+            }
+            PimFunc::KmeansAssign { k, dim } if ctx.len() != (*k * *dim) as usize => {
+                return Err(Error::Handle(format!(
+                    "kmeans handle needs ctx = centroids[{}], got {}",
+                    k * dim,
+                    ctx.len()
+                )))
+            }
+            _ => {}
+        }
+        let profile = func.profile();
+        Ok(Handle { kind, func, ctx, profile })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_function_agreement_enforced() {
+        assert!(Handle::create(PimFunc::SumReduce, TransformKind::Map, vec![]).is_err());
+        assert!(Handle::create(PimFunc::VecAdd, TransformKind::Red, vec![]).is_err());
+        assert!(Handle::create(PimFunc::SumReduce, TransformKind::Red, vec![]).is_ok());
+        assert!(Handle::create(PimFunc::VecAdd, TransformKind::Map, vec![]).is_ok());
+    }
+
+    #[test]
+    fn context_arity_checked() {
+        assert!(Handle::create(PimFunc::AffineMap, TransformKind::Map, vec![1]).is_err());
+        assert!(Handle::create(PimFunc::AffineMap, TransformKind::Map, vec![2, 3]).is_ok());
+        assert!(
+            Handle::create(PimFunc::LinregGrad { dim: 10 }, TransformKind::Red, vec![0; 9])
+                .is_err()
+        );
+        assert!(
+            Handle::create(PimFunc::LinregGrad { dim: 10 }, TransformKind::Red, vec![0; 10])
+                .is_ok()
+        );
+        assert!(Handle::create(
+            PimFunc::KmeansAssign { k: 4, dim: 2 },
+            TransformKind::Red,
+            vec![0; 8]
+        )
+        .is_ok());
+    }
+
+    #[test]
+    fn red_output_lengths() {
+        assert_eq!(PimFunc::SumReduce.red_output_len().unwrap(), 1);
+        assert_eq!(PimFunc::Histogram { bins: 256 }.red_output_len().unwrap(), 256);
+        assert_eq!(PimFunc::LinregGrad { dim: 10 }.red_output_len().unwrap(), 10);
+        assert_eq!(
+            PimFunc::KmeansAssign { k: 10, dim: 10 }.red_output_len().unwrap(),
+            110
+        );
+        assert!(PimFunc::VecAdd.red_output_len().is_err());
+    }
+
+    #[test]
+    fn ml_profiles_scale_with_dim() {
+        let p10 = PimFunc::LinregGrad { dim: 10 }.profile();
+        let p20 = PimFunc::LinregGrad { dim: 20 }.profile();
+        let o = crate::timing::OptFlags::simplepim();
+        assert!(p20.per_elem_mix(&o).total_slots() > 1.5 * p10.per_elem_mix(&o).total_slots());
+    }
+
+    #[test]
+    fn logreg_costs_more_than_linreg() {
+        let o = crate::timing::OptFlags::simplepim();
+        let lin = PimFunc::LinregGrad { dim: 10 }.profile().per_elem_mix(&o).total_slots();
+        let log = PimFunc::LogregGrad { dim: 10 }.profile().per_elem_mix(&o).total_slots();
+        assert!(log > lin);
+    }
+}

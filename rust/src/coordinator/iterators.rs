@@ -1,0 +1,320 @@
+//! The SimplePIM **processing interface** (paper §3.3): the `map`,
+//! general `red`, and lazy `zip` iterators.
+//!
+//! Each iterator call does two synchronized things (DESIGN.md §7):
+//! *functional* execution through the AOT XLA executables (or the
+//! bit-identical host fallback), and *timing* accounting through the
+//! substrate's analytic model, using the handle's instruction profile,
+//! the planner's batch size, and the scheduler's active-thread count.
+
+use crate::error::{Error, Result};
+use crate::timing;
+use crate::util::round_up;
+
+use super::comm::{bytes_to_words, words_to_bytes};
+use super::exec::{execute_func, Inputs};
+use super::handle::{Handle, TransformKind};
+use super::management::{ArrayMeta, Layout};
+use super::PimSystem;
+
+impl PimSystem {
+    /// Read the per-DPU i32 words of a *physical* (non-lazy) array.
+    pub(crate) fn read_local(&self, meta: &ArrayMeta) -> Result<Vec<Vec<i32>>> {
+        let n = self.machine.n_dpus();
+        let mut out = Vec::with_capacity(n);
+        for dpu in 0..n {
+            let bytes = match meta.layout {
+                Layout::Broadcast => meta.len * meta.type_size as u64,
+                _ => meta.bytes_on(dpu),
+            };
+            let raw = self.machine.read_bytes(dpu, meta.addr, bytes)?;
+            out.push(bytes_to_words(&raw));
+        }
+        Ok(out)
+    }
+
+    /// Build kernel inputs for an array id (resolving one lazy-zip
+    /// level).
+    fn inputs_for(&self, id: &str) -> Result<(Inputs, ArrayMeta)> {
+        let meta = self.management.lookup(id)?.clone();
+        match &meta.layout {
+            Layout::Scattered | Layout::Broadcast => {
+                Ok((Inputs::One(self.read_local(&meta)?), meta))
+            }
+            Layout::LazyZip { a, b } => {
+                let ma = self.management.lookup(a)?.clone();
+                let mb = self.management.lookup(b)?.clone();
+                Ok((Inputs::Two(self.read_local(&ma)?, self.read_local(&mb)?), meta))
+            }
+        }
+    }
+
+    /// Broadcast a handle's context (paper: handle `data` shipped to all
+    /// PIM cores before the launch).  Charged as a broadcast transfer.
+    fn ship_context(&mut self, handle: &Handle) -> Result<()> {
+        if handle.ctx.is_empty() {
+            return Ok(());
+        }
+        let bytes = words_to_bytes(&handle.ctx);
+        let padded = round_up(bytes.len() as u64, 8);
+        let addr = self.machine.alloc(padded)?;
+        let mut buf = bytes;
+        buf.resize(padded as usize, 0);
+        self.machine.push_broadcast(addr, &buf)?;
+        self.machine.free(addr)?; // scratch: freed after the launch
+        Ok(())
+    }
+
+    /// Logical elements per DPU for timing.  Arrays are registered with
+    /// their true element size (a whole point row for the ML workloads),
+    /// so the registered per-DPU count *is* the logical element count;
+    /// a lazy zip inherits its constituents' distribution.
+    fn logical_elems(&self, meta: &ArrayMeta, _handle: &Handle) -> u64 {
+        meta.max_per_dpu()
+    }
+
+    /// `simple_pim_array_map`: apply `handle` to every element of
+    /// `src_id`, producing `dest_id` with the same distribution.
+    pub fn array_map(&mut self, src_id: &str, dest_id: &str, handle: &Handle) -> Result<()> {
+        if handle.kind != TransformKind::Map {
+            return Err(Error::Handle("array_map requires a Map handle".into()));
+        }
+        let (inputs, src) = self.inputs_for(src_id)?;
+
+        // --- timing: eager-zip pass if lazy zip is disabled (ablation).
+        let elems = self.logical_elems(&src, handle);
+        if matches!(src.layout, Layout::LazyZip { .. }) && !self.opts.lazy_zip {
+            let zip_t = timing::eager_zip_kernel(
+                &self.machine.cfg,
+                handle.profile.elem_bytes,
+                &self.opts,
+                self.dma_policy,
+                elems,
+                self.tasklets,
+            );
+            self.machine.charge_kernel(zip_t.seconds);
+        }
+
+        // --- functional execution.
+        self.ship_context(handle)?;
+        let outputs = execute_func(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?;
+
+        // --- timing: the map launch itself.
+        let t = timing::map_kernel(
+            &self.machine.cfg,
+            &handle.profile,
+            &self.opts,
+            self.dma_policy,
+            elems,
+            self.tasklets,
+        );
+        self.machine.charge_kernel(t.seconds);
+
+        // --- register + store the output (stays PIM-resident).
+        let out_max_words = outputs.iter().map(|o| o.len()).max().unwrap_or(0);
+        let padded = round_up(out_max_words as u64 * 4, 8).max(8);
+        let addr = self.machine.alloc(padded)?;
+        for (dpu, out) in outputs.iter().enumerate() {
+            self.machine.write_bytes(dpu, addr, &words_to_bytes(out))?;
+        }
+        let per_dpu: Vec<u64> = outputs.iter().map(|o| o.len() as u64).collect();
+        let len = per_dpu.iter().sum();
+        self.management.register(ArrayMeta {
+            id: dest_id.to_string(),
+            len,
+            type_size: 4,
+            per_dpu,
+            addr,
+            padded_bytes: padded,
+            layout: match src.layout {
+                Layout::Broadcast => Layout::Broadcast,
+                _ => Layout::Scattered,
+            },
+        })
+    }
+
+    /// `simple_pim_array_red`: general reduction of `src_id` into an
+    /// `output_len`-entry accumulator; per-DPU partials are gathered,
+    /// merged on the host with the handle's `acc_func`, and the merged
+    /// result is registered under `dest_id` (broadcast back to PIM, so
+    /// later iterators can use it).  Also returns the merged values.
+    pub fn array_red(
+        &mut self,
+        src_id: &str,
+        dest_id: &str,
+        output_len: u64,
+        handle: &Handle,
+    ) -> Result<Vec<i32>> {
+        if handle.kind != TransformKind::Red {
+            return Err(Error::Handle("array_red requires a Red handle".into()));
+        }
+        let expected = handle.func.red_output_len()?;
+        if output_len != expected {
+            return Err(Error::Handle(format!(
+                "output_len {output_len} does not match {:?} (expects {expected})",
+                handle.func
+            )));
+        }
+        let (inputs, src) = self.inputs_for(src_id)?;
+        let elems = self.logical_elems(&src, handle);
+
+        // --- functional execution: per-DPU partials.
+        self.ship_context(handle)?;
+        let partials =
+            execute_func(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?;
+
+        // --- timing: reduction launch (variant choice is automatic
+        //     unless overridden, paper §4.2.2).
+        let variant = self.red_variant_override.unwrap_or_else(|| {
+            timing::choose_reduce_variant(
+                &self.machine.cfg,
+                &handle.profile,
+                &self.opts,
+                self.dma_policy,
+                elems,
+                self.tasklets,
+                output_len,
+                4,
+            )
+        });
+        let t = timing::reduce_kernel(
+            &self.machine.cfg,
+            &handle.profile,
+            &self.opts,
+            self.dma_policy,
+            elems,
+            self.tasklets,
+            output_len,
+            4,
+            variant,
+        );
+        self.machine.charge_kernel(t.seconds);
+        self.last_red_variant = Some((variant, t.active_tasklets));
+
+        // --- PIM -> host: partials land in a scratch region, then the
+        //     timed parallel gather pulls them (the paper's "gathered to
+        //     the host and combined using a host version of acc_func").
+        let part_bytes = round_up(output_len * 4, 8).max(8);
+        let scratch = self.machine.alloc(part_bytes)?;
+        for (dpu, p) in partials.iter().enumerate() {
+            self.machine.write_bytes(dpu, scratch, &words_to_bytes(p))?;
+        }
+        let pulled = self.machine.pull_parallel(scratch, part_bytes, self.machine.n_dpus())?;
+        self.machine.free(scratch)?;
+
+        // --- host merge (OpenMP analog; modeled + functional).
+        let acc = handle.func.acc();
+        let mut merged = vec![0i32; output_len as usize];
+        for buf in &pulled {
+            let words = bytes_to_words(&buf[..(output_len * 4) as usize]);
+            for (m, v) in merged.iter_mut().zip(words) {
+                *m = acc(*m, v);
+            }
+        }
+        self.machine.charge_host_merge(output_len * self.machine.n_dpus() as u64);
+
+        // --- register the merged result as a broadcast array.
+        let addr = self.machine.alloc(part_bytes)?;
+        let mut buf = words_to_bytes(&merged);
+        buf.resize(part_bytes as usize, 0);
+        self.machine.push_broadcast(addr, &buf)?;
+        self.management.register(ArrayMeta {
+            id: dest_id.to_string(),
+            len: output_len,
+            type_size: 4,
+            per_dpu: vec![output_len; self.machine.n_dpus()],
+            addr,
+            padded_bytes: part_bytes,
+            layout: Layout::Broadcast,
+        })?;
+        Ok(merged)
+    }
+
+    /// `simple_pim_array_zip`: lazily zip two same-length arrays
+    /// (paper §4.2.3).  Zipping an already-zipped array physically
+    /// materializes it first (one level of laziness).
+    pub fn array_zip(&mut self, a_id: &str, b_id: &str, dest_id: &str) -> Result<()> {
+        let a = self.management.lookup(a_id)?.clone();
+        let b = self.management.lookup(b_id)?.clone();
+
+        // Materialize lazy constituents (streamed, batched, recombined —
+        // charged as an eager zip pass).
+        let a_id = if matches!(a.layout, Layout::LazyZip { .. }) {
+            self.materialize_zip(a_id)?
+        } else {
+            a_id.to_string()
+        };
+        let b_id = if matches!(b.layout, Layout::LazyZip { .. }) {
+            self.materialize_zip(b_id)?
+        } else {
+            b_id.to_string()
+        };
+
+        let a = self.management.lookup(&a_id)?.clone();
+        let b = self.management.lookup(&b_id)?.clone();
+        if a.per_dpu != b.per_dpu {
+            return Err(Error::Handle(format!(
+                "zip requires identical distributions ({a_id} vs {b_id})"
+            )));
+        }
+        self.management.register(ArrayMeta {
+            id: dest_id.to_string(),
+            len: a.len,
+            type_size: a.type_size + b.type_size,
+            per_dpu: a.per_dpu.clone(),
+            addr: 0,
+            padded_bytes: 0,
+            layout: Layout::LazyZip { a: a_id, b: b_id },
+        })
+    }
+
+    /// Physically combine a lazily zipped array into an interleaved
+    /// PIM-resident array; returns the new (internal) id.
+    fn materialize_zip(&mut self, id: &str) -> Result<String> {
+        let meta = self.management.lookup(id)?.clone();
+        let Layout::LazyZip { a, b } = &meta.layout else {
+            return Ok(id.to_string());
+        };
+        let ma = self.management.lookup(a)?.clone();
+        let mb = self.management.lookup(b)?.clone();
+        let va = self.read_local(&ma)?;
+        let vb = self.read_local(&mb)?;
+
+        let wa = (ma.type_size / 4) as usize;
+        let wb = (mb.type_size / 4) as usize;
+        let padded = round_up(meta.max_per_dpu() * (ma.type_size + mb.type_size) as u64, 8).max(8);
+        let addr = self.machine.alloc(padded)?;
+        for dpu in 0..self.machine.n_dpus() {
+            let n = meta.per_dpu[dpu] as usize;
+            let mut inter = Vec::with_capacity(n * (wa + wb));
+            for e in 0..n {
+                inter.extend_from_slice(&va[dpu][e * wa..(e + 1) * wa]);
+                inter.extend_from_slice(&vb[dpu][e * wb..(e + 1) * wb]);
+            }
+            self.machine.write_bytes(dpu, addr, &words_to_bytes(&inter))?;
+        }
+
+        // Timing: one streamed combine pass.
+        let t = timing::eager_zip_kernel(
+            &self.machine.cfg,
+            (ma.type_size + mb.type_size) as u64,
+            &self.opts,
+            self.dma_policy,
+            meta.max_per_dpu(),
+            self.tasklets,
+        );
+        self.machine.charge_kernel(t.seconds);
+
+        let new_id = format!("__mat_{id}");
+        self.management.register(ArrayMeta {
+            id: new_id.clone(),
+            len: meta.len,
+            type_size: ma.type_size + mb.type_size,
+            per_dpu: meta.per_dpu.clone(),
+            addr,
+            padded_bytes: padded,
+            layout: Layout::Scattered,
+        })?;
+        Ok(new_id)
+    }
+}

@@ -1,0 +1,162 @@
+//! The SimplePIM **management interface** (paper §3.1): centralized,
+//! host-side tracking of PIM-resident arrays.
+//!
+//! Mirrors the paper's `array_meta_data_t` / `simple_pim_management_t`:
+//! each registered array has a unique string id, a length, an element
+//! size, and the physical MRAM address of its data (the same offset on
+//! every bank, UPMEM-style).  `lookup`, `register`, and `free` are used
+//! by the communication and processing interfaces; programmers refer to
+//! arrays purely by id.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Physical placement of a registered array.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Layout {
+    /// Split across DPUs: DPU `i` holds `per_dpu[i]` elements.
+    Scattered,
+    /// Every DPU holds a full copy of all `len` elements.
+    Broadcast,
+    /// Lazily zipped pair (paper §4.2.3): no physical data; iterators
+    /// stream both constituents.  One level deep by design.
+    LazyZip { a: String, b: String },
+}
+
+/// Metadata for one PIM-resident array (paper: `array_meta_data_t`).
+#[derive(Debug, Clone)]
+pub struct ArrayMeta {
+    /// Unique id chosen by the programmer.
+    pub id: String,
+    /// Total element count: global for `Scattered`, per-copy for
+    /// `Broadcast`.
+    pub len: u64,
+    /// Element size in bytes.
+    pub type_size: u32,
+    /// Elements held by each DPU (`Scattered`); for `Broadcast` every
+    /// entry equals `len`.
+    pub per_dpu: Vec<u64>,
+    /// MRAM address of the data on every bank (0 for lazy zips).
+    pub addr: u64,
+    /// Equal per-DPU buffer size in bytes (parallel-transfer rule).
+    pub padded_bytes: u64,
+    pub layout: Layout,
+}
+
+impl ArrayMeta {
+    /// Bytes of live data on DPU `i`.
+    pub fn bytes_on(&self, dpu: usize) -> u64 {
+        self.per_dpu.get(dpu).copied().unwrap_or(0) * self.type_size as u64
+    }
+
+    /// Largest per-DPU element count (sizing for gang execution).
+    pub fn max_per_dpu(&self) -> u64 {
+        self.per_dpu.iter().copied().max().unwrap_or(0)
+    }
+}
+
+/// Host-side registry of all PIM-resident arrays
+/// (paper: `simple_pim_management_t`).
+#[derive(Debug, Default)]
+pub struct Management {
+    arrays: BTreeMap<String, ArrayMeta>,
+}
+
+impl Management {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Register a new array id (paper: `register`).  Ids are unique; the
+    /// paper's interfaces register output arrays on the programmer's
+    /// behalf and fail loudly on collisions.
+    pub fn register(&mut self, meta: ArrayMeta) -> Result<()> {
+        if self.arrays.contains_key(&meta.id) {
+            return Err(Error::DuplicateArray(meta.id));
+        }
+        self.arrays.insert(meta.id.clone(), meta);
+        Ok(())
+    }
+
+    /// Retrieve an array's metadata by id (paper: `lookup`).
+    pub fn lookup(&self, id: &str) -> Result<&ArrayMeta> {
+        self.arrays.get(id).ok_or_else(|| Error::UnknownArray(id.to_string()))
+    }
+
+    /// Remove an id from the registry (paper: `free`); returns the meta
+    /// so the caller can release the MRAM allocation.
+    pub fn free(&mut self, id: &str) -> Result<ArrayMeta> {
+        self.arrays.remove(id).ok_or_else(|| Error::UnknownArray(id.to_string()))
+    }
+
+    /// Ids currently registered (deterministic order).
+    pub fn ids(&self) -> Vec<&str> {
+        self.arrays.keys().map(|s| s.as_str()).collect()
+    }
+
+    pub fn contains(&self, id: &str) -> bool {
+        self.arrays.contains_key(id)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn meta(id: &str) -> ArrayMeta {
+        ArrayMeta {
+            id: id.to_string(),
+            len: 100,
+            type_size: 4,
+            per_dpu: vec![50, 50],
+            addr: 0,
+            padded_bytes: 200,
+            layout: Layout::Scattered,
+        }
+    }
+
+    #[test]
+    fn register_lookup_free_cycle() {
+        let mut m = Management::new();
+        m.register(meta("t1")).unwrap();
+        assert_eq!(m.lookup("t1").unwrap().len, 100);
+        assert!(m.contains("t1"));
+        let freed = m.free("t1").unwrap();
+        assert_eq!(freed.id, "t1");
+        assert!(m.lookup("t1").is_err());
+        // Re-registering after free is allowed.
+        m.register(meta("t1")).unwrap();
+    }
+
+    #[test]
+    fn duplicate_ids_rejected() {
+        let mut m = Management::new();
+        m.register(meta("x")).unwrap();
+        assert!(matches!(m.register(meta("x")), Err(Error::DuplicateArray(_))));
+    }
+
+    #[test]
+    fn free_unknown_errors() {
+        let mut m = Management::new();
+        assert!(matches!(m.free("nope"), Err(Error::UnknownArray(_))));
+    }
+
+    #[test]
+    fn per_dpu_accessors() {
+        let mut am = meta("t");
+        am.per_dpu = vec![60, 40, 0];
+        assert_eq!(am.bytes_on(0), 240);
+        assert_eq!(am.bytes_on(2), 0);
+        assert_eq!(am.bytes_on(99), 0);
+        assert_eq!(am.max_per_dpu(), 60);
+    }
+
+    #[test]
+    fn ids_sorted() {
+        let mut m = Management::new();
+        m.register(meta("b")).unwrap();
+        m.register(meta("a")).unwrap();
+        assert_eq!(m.ids(), vec!["a", "b"]);
+    }
+}

@@ -1,0 +1,120 @@
+//! L3: the SimplePIM framework — the paper's contribution.
+//!
+//! [`PimSystem`] bundles the three paper interfaces over the simulated
+//! machine and the AOT runtime:
+//!
+//! * **management** (§3.1): [`management::Management`] —
+//!   register/lookup/free of PIM-resident arrays by id;
+//! * **communication** (§3.2): [`comm`] (host<->PIM broadcast / scatter
+//!   / gather) and [`collectives`] (PIM<->PIM allreduce / allgather via
+//!   the host root);
+//! * **processing** (§3.3): [`iterators`] (map, general reduction with
+//!   shared/private accumulator variants, lazy zip), driven by
+//!   [`handle::Handle`]s created from [`handle::PimFunc`] kernel
+//!   families.
+//!
+//! Supporting machinery: [`scheduler`] (tasklet partitioning +
+//! WRAM-pressure thread laddering), [`planner`] (scatter padding +
+//! dynamic DMA batch sizing), [`exec`] (gang-batched functional
+//! execution through PJRT).
+
+pub mod collectives;
+pub mod comm;
+pub mod exec;
+pub mod extensions;
+pub mod handle;
+pub mod iterators;
+pub mod management;
+pub mod planner;
+pub mod scheduler;
+
+pub use handle::{Handle, PimFunc, TransformKind};
+pub use management::{ArrayMeta, Layout, Management};
+
+use crate::error::Result;
+use crate::pim::{PimConfig, PimMachine, Timeline};
+use crate::runtime::Runtime;
+use crate::timing::{DmaPolicy, OptFlags, ReduceVariant};
+
+/// The assembled SimplePIM system: one simulated PIM machine, the
+/// host-side management registry, and (optionally) the PJRT runtime
+/// executing the AOT-compiled kernels.
+pub struct PimSystem {
+    pub machine: PimMachine,
+    pub management: Management,
+    pub(crate) runtime: Option<Runtime>,
+    /// Code-optimization flags the framework "compiles" kernels with
+    /// (all on by default; the ablation bench toggles them).
+    pub opts: OptFlags,
+    /// Tasklets requested per DPU (paper default: 12).
+    pub tasklets: u32,
+    /// DMA batch policy (Dynamic unless ablating §4.3.5).
+    pub dma_policy: DmaPolicy,
+    /// Force a reduction variant (Fig. 11 sweeps); `None` = automatic.
+    pub red_variant_override: Option<ReduceVariant>,
+    /// Variant + active tasklets of the most recent `array_red`.
+    pub last_red_variant: Option<(ReduceVariant, u32)>,
+}
+
+impl PimSystem {
+    /// Build a system with the AOT runtime loaded from the default
+    /// artifact directory (`$SIMPLEPIM_ARTIFACTS` or `./artifacts`).
+    pub fn new(cfg: PimConfig) -> Result<Self> {
+        let runtime = Runtime::load(Runtime::default_dir())?;
+        Ok(Self::with_runtime(cfg, Some(runtime)))
+    }
+
+    /// Build a system that executes kernels with the bit-identical host
+    /// goldens instead of PJRT (no artifacts needed; used by unit tests
+    /// and available as a deployment mode).
+    pub fn host_only(cfg: PimConfig) -> Self {
+        Self::with_runtime(cfg, None)
+    }
+
+    /// Build with an explicit (possibly shared) runtime decision.
+    pub fn with_runtime(cfg: PimConfig, runtime: Option<Runtime>) -> Self {
+        let tasklets = cfg.default_tasklets;
+        PimSystem {
+            machine: PimMachine::new(cfg),
+            management: Management::new(),
+            runtime,
+            opts: OptFlags::simplepim(),
+            tasklets,
+            dma_policy: DmaPolicy::Dynamic,
+            red_variant_override: None,
+            last_red_variant: None,
+        }
+    }
+
+    /// Create a function handle
+    /// (paper: `simple_pim_create_handle(filepath, type, data, size)`).
+    pub fn create_handle(
+        &self,
+        func: PimFunc,
+        kind: TransformKind,
+        ctx: Vec<i32>,
+    ) -> Result<Handle> {
+        Handle::create(func, kind, ctx)
+    }
+
+    /// Modeled end-to-end timeline so far.
+    pub fn timeline(&self) -> Timeline {
+        self.machine.timeline()
+    }
+
+    /// Reset the modeled timeline (functional state is kept).
+    pub fn reset_timeline(&mut self) {
+        self.machine.reset_timeline();
+    }
+
+    /// Whether kernels execute through the PJRT runtime (vs host
+    /// fallback).
+    pub fn has_runtime(&self) -> bool {
+        self.runtime.is_some()
+    }
+
+    /// Executor statistics (zero when running host-only).
+    pub fn exec_stats(&self) -> crate::runtime::ExecStats {
+        self.runtime.as_ref().map(|r| r.stats()).unwrap_or_default()
+    }
+}

@@ -1,0 +1,169 @@
+//! Transfer planner: padding/alignment for host<->PIM scatter and
+//! dynamic WRAM<->MRAM batch sizing.
+//!
+//! Paper §4.1: parallel transfer commands need equal-sized, aligned
+//! buffers on every DPU, and no element may be split across DPUs.
+//! Paper §4.3 optimization 5: the scratchpad<->DRAM transfer size is
+//! chosen dynamically from the element size and WRAM budget instead of
+//! being hard-coded.
+
+use crate::pim::PimConfig;
+use crate::util::{lcm, round_up};
+
+/// How a host array is split across DPUs.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ScatterPlan {
+    /// Elements assigned to each DPU (sums to the array length).
+    pub per_dpu_elems: Vec<u64>,
+    /// Equal padded buffer size in bytes pushed to every DPU.
+    pub padded_bytes: u64,
+    /// Number of DPUs that received at least one element.
+    pub active_dpus: usize,
+}
+
+/// Plan an even, alignment-respecting scatter of `len` elements of
+/// `type_size` bytes over `n_dpus` DPUs.
+///
+/// Invariants (tested):
+/// * every element lands on exactly one DPU (no splits, full coverage);
+/// * per-DPU element counts differ by at most one "alignment quantum";
+/// * the pushed buffer size is the same for all DPUs and 8-byte aligned.
+pub fn plan_scatter(cfg: &PimConfig, len: u64, type_size: u64) -> ScatterPlan {
+    assert!(type_size > 0);
+    let n = cfg.n_dpus as u64;
+    // Elements per DPU depends only on the element *count*, never on the
+    // element size: arrays scattered with the same length always get the
+    // same distribution, which is what makes `zip(points, targets)`
+    // line up (the paper's multi-input iterators rely on this).  The
+    // 8-byte DMA alignment is satisfied by padding the per-DPU buffer,
+    // not by skewing the split.
+    let chunk = len.div_ceil(n); // elements per full DPU
+
+    let mut per_dpu = Vec::with_capacity(cfg.n_dpus);
+    let mut remaining = len;
+    for _ in 0..cfg.n_dpus {
+        let take = remaining.min(chunk);
+        per_dpu.push(take);
+        remaining -= take;
+    }
+    debug_assert_eq!(remaining, 0);
+
+    let padded_bytes = round_up(chunk * type_size, cfg.dma_align);
+    let active = per_dpu.iter().filter(|&&e| e > 0).count();
+    ScatterPlan { per_dpu_elems: per_dpu, padded_bytes, active_dpus: active }
+}
+
+/// Choose the WRAM<->MRAM streaming batch size (bytes) for elements of
+/// `elem_bytes`, given `buffers` live streaming buffers per tasklet and
+/// `tasklets` threads sharing WRAM.
+///
+/// Picks the largest batch that (a) holds whole elements, (b) is a
+/// multiple of the DMA alignment, (c) stays within the per-DMA cap, and
+/// (d) fits the per-tasklet WRAM share.
+pub fn stream_batch_bytes(cfg: &PimConfig, elem_bytes: u64, tasklets: u32, buffers: u64) -> u64 {
+    assert!(elem_bytes > 0 && buffers > 0);
+    let per_tasklet_wram = cfg.wram_available() / tasklets.max(1) as u64;
+    let cap = cfg.dma_max_bytes.min(per_tasklet_wram / buffers);
+    // Batch must hold whole elements and respect DMA alignment.
+    let unit = lcm(elem_bytes, cfg.dma_align);
+    if cap < unit {
+        return unit; // degenerate: one (padded) element per transfer
+    }
+    cap / unit * unit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn cfg(n: usize) -> PimConfig {
+        PimConfig::upmem(n)
+    }
+
+    #[test]
+    fn scatter_covers_all_elements_exactly() {
+        let c = cfg(7);
+        for len in [0u64, 1, 6, 7, 8, 100, 4096, 4099] {
+            for ts in [1u64, 2, 4, 8, 12] {
+                let plan = plan_scatter(&c, len, ts);
+                assert_eq!(plan.per_dpu_elems.iter().sum::<u64>(), len);
+                assert_eq!(plan.per_dpu_elems.len(), 7);
+                assert_eq!(plan.padded_bytes % c.dma_align, 0);
+                // No DPU buffer smaller than its data.
+                for &e in &plan.per_dpu_elems {
+                    assert!(e * ts <= plan.padded_bytes);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn scatter_is_nearly_even() {
+        let c = cfg(10);
+        let plan = plan_scatter(&c, 1003, 4);
+        let max = *plan.per_dpu_elems.iter().max().unwrap();
+        let min_nonzero =
+            plan.per_dpu_elems.iter().copied().filter(|&e| e > 0).min().unwrap();
+        // All active DPUs except possibly the last get the same chunk.
+        assert!(max - min_nonzero <= max);
+        let full: Vec<_> =
+            plan.per_dpu_elems.iter().filter(|&&e| e == max).collect();
+        assert!(full.len() >= plan.active_dpus - 1);
+    }
+
+    #[test]
+    fn scatter_never_splits_elements_random() {
+        // Property test: random lengths/type sizes; chunk boundaries must
+        // be element boundaries and buffers 8-byte aligned.
+        let mut rng = Prng::new(0xD15EA5E);
+        for _ in 0..500 {
+            let n = 1 + rng.below(64) as usize;
+            let c = cfg(n);
+            let len = rng.below(1 << 16);
+            let ts = [1u64, 2, 3, 4, 8, 16][rng.below(6) as usize];
+            let plan = plan_scatter(&c, len, ts);
+            assert_eq!(plan.per_dpu_elems.iter().sum::<u64>(), len);
+            assert_eq!(plan.padded_bytes % c.dma_align, 0);
+            for &e in &plan.per_dpu_elems {
+                assert!(e * ts <= plan.padded_bytes);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_respects_all_constraints() {
+        let c = cfg(8);
+        for &ts in &[1u64, 2, 4, 8, 12, 40, 64] {
+            for &t in &[1u32, 4, 12, 24] {
+                for &b in &[1u64, 2, 3] {
+                    let batch = stream_batch_bytes(&c, ts, t, b);
+                    assert_eq!(batch % ts, 0, "holds whole elements");
+                    assert_eq!(batch % c.dma_align, 0, "aligned");
+                    // Within cap unless a single element overflows it.
+                    if ts <= c.dma_max_bytes {
+                        assert!(batch <= c.dma_max_bytes.max(lcm(ts, 8)));
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batch_shrinks_under_wram_pressure() {
+        let c = cfg(8);
+        let roomy = stream_batch_bytes(&c, 4, 1, 1);
+        let tight = stream_batch_bytes(&c, 4, 24, 4);
+        assert!(roomy >= tight);
+        assert_eq!(roomy, c.dma_max_bytes); // plenty of WRAM: use the cap
+    }
+
+    #[test]
+    fn odd_element_sizes_get_lcm_units() {
+        let c = cfg(8);
+        // 12-byte elements: batches must be multiples of lcm(12,8)=24.
+        let b = stream_batch_bytes(&c, 12, 12, 2);
+        assert_eq!(b % 24, 0);
+        assert!(b > 0);
+    }
+}

@@ -1,0 +1,173 @@
+//! Tasklet scheduling: even pre-partitioning of per-DPU work across
+//! threads and WRAM-occupancy-driven thread-count selection.
+//!
+//! Two paper mechanisms live here:
+//!
+//! 1. **Even pre-partitioning with a separate trailing part** (§4.3
+//!    optimization 3): elements are split so every tasklet runs a
+//!    boundary-check-free main loop; the remainder is processed
+//!    separately.
+//! 2. **Active-thread reduction under WRAM pressure** (§5.4 / Fig. 11):
+//!    the thread-private reduction variant needs `T x (output array +
+//!    streaming buffers)` bytes of WRAM; when that exceeds the 64 KB
+//!    scratchpad the framework steps the thread count down the
+//!    {12, 8, 4, 2, 1} ladder, and the pipeline model turns fewer
+//!    threads into linearly more time.
+
+use crate::pim::PimConfig;
+
+/// One tasklet's contiguous slice of the per-DPU array.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TaskletRange {
+    pub tasklet: u32,
+    pub start: u64,
+    /// Elements in the boundary-check-free main part.
+    pub main: u64,
+    /// Trailing elements this tasklet handles separately (only the last
+    /// tasklet gets a non-zero tail).
+    pub tail: u64,
+}
+
+/// Evenly pre-partition `elems` across `tasklets`.
+///
+/// Every tasklet gets `elems / tasklets` main elements; the remainder
+/// goes to the *last* tasklet as an explicit tail, processed after the
+/// main loop (no per-iteration boundary checks anywhere).
+pub fn partition(elems: u64, tasklets: u32) -> Vec<TaskletRange> {
+    assert!(tasklets >= 1);
+    let t = tasklets as u64;
+    let main = elems / t;
+    let tail = elems % t;
+    (0..tasklets)
+        .map(|i| TaskletRange {
+            tasklet: i,
+            start: i as u64 * main,
+            main,
+            tail: if i as u64 == t - 1 { tail } else { 0 },
+        })
+        .collect()
+}
+
+/// The discrete thread-count ladder the framework steps down under WRAM
+/// pressure.  Matches the paper's observed 12 -> 8 -> 4 -> 2 sequence.
+pub const THREAD_LADDER: [u32; 5] = [12, 8, 4, 2, 1];
+
+/// WRAM bytes one tasklet of the *thread-private* reduction variant
+/// needs: its private output array plus its input streaming window.
+pub fn private_reduce_tasklet_bytes(
+    output_len: u64,
+    type_size: u64,
+    stream_batch_bytes: u64,
+) -> u64 {
+    output_len * type_size + stream_batch_bytes
+}
+
+/// Number of active tasklets for the thread-private reduction variant:
+/// the largest ladder step whose private arrays + buffers fit WRAM.
+pub fn private_reduce_active_tasklets(
+    cfg: &PimConfig,
+    requested: u32,
+    output_len: u64,
+    type_size: u64,
+    stream_batch_bytes: u64,
+) -> u32 {
+    let per_tasklet = private_reduce_tasklet_bytes(output_len, type_size, stream_batch_bytes);
+    let budget = cfg.wram_available();
+    for &t in THREAD_LADDER.iter() {
+        if t <= requested && (t as u64) * per_tasklet <= budget {
+            return t;
+        }
+    }
+    1
+}
+
+/// WRAM bytes the *shared-accumulator* variant needs on the whole DPU:
+/// one output array + one 4-byte lock per entry + per-tasklet buffers.
+pub fn shared_reduce_dpu_bytes(
+    output_len: u64,
+    type_size: u64,
+    tasklets: u32,
+    stream_batch_bytes: u64,
+) -> u64 {
+    output_len * (type_size + 4) + tasklets as u64 * 2 * stream_batch_bytes
+}
+
+/// Whether the shared variant fits WRAM at the requested thread count.
+pub fn shared_reduce_fits(
+    cfg: &PimConfig,
+    tasklets: u32,
+    output_len: u64,
+    type_size: u64,
+    stream_batch_bytes: u64,
+) -> bool {
+    shared_reduce_dpu_bytes(output_len, type_size, tasklets, stream_batch_bytes)
+        <= cfg.wram_available()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_everything_without_overlap() {
+        for elems in [0u64, 1, 11, 12, 127, 4096, 4097] {
+            for t in [1u32, 2, 11, 12] {
+                let parts = partition(elems, t);
+                assert_eq!(parts.len(), t as usize);
+                let total: u64 = parts.iter().map(|p| p.main + p.tail).sum();
+                assert_eq!(total, elems, "elems={elems} t={t}");
+                // Ranges are contiguous and ordered.
+                for w in parts.windows(2) {
+                    assert_eq!(w[0].start + w[0].main, w[1].start);
+                }
+                // Only the last tasklet may have a tail.
+                for p in &parts[..parts.len() - 1] {
+                    assert_eq!(p.tail, 0);
+                }
+            }
+        }
+    }
+
+    fn cfg() -> PimConfig {
+        PimConfig::upmem(64)
+    }
+
+    #[test]
+    fn fig11_thread_ladder() {
+        // Paper §5.4: with 2 KB streaming batches and 4-byte bins, the
+        // private variant runs 12 threads at 256/512 bins, 8 at 1024,
+        // 4 at 2048, 2 at 4096.
+        let c = cfg();
+        let batch = 2048;
+        let active =
+            |bins: u64| private_reduce_active_tasklets(&c, 12, bins, 4, batch);
+        assert_eq!(active(256), 12);
+        assert_eq!(active(512), 12);
+        assert_eq!(active(1024), 8);
+        assert_eq!(active(2048), 4);
+        assert_eq!(active(4096), 2);
+    }
+
+    #[test]
+    fn shared_variant_keeps_full_threads_longer() {
+        // The shared variant has ONE output array, so it still fits at
+        // 4096 bins with 12 threads — that is why it wins Fig. 11's
+        // right side.
+        let c = cfg();
+        assert!(shared_reduce_fits(&c, 12, 4096, 4, 1024));
+        assert!(!shared_reduce_fits(&c, 12, 65536, 4, 2048));
+    }
+
+    #[test]
+    fn requested_thread_cap_respected() {
+        let c = cfg();
+        assert_eq!(private_reduce_active_tasklets(&c, 8, 256, 4, 2048), 8);
+        assert_eq!(private_reduce_active_tasklets(&c, 2, 256, 4, 2048), 2);
+    }
+
+    #[test]
+    fn huge_outputs_degrade_to_one_thread() {
+        let c = cfg();
+        assert_eq!(private_reduce_active_tasklets(&c, 12, 14_000, 4, 2048), 1);
+    }
+}

@@ -1,0 +1,57 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by the SimplePIM framework.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Error bubbled up from the XLA/PJRT runtime.
+    #[error("xla: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// I/O error (artifact files, source files for LoC counting, ...).
+    #[error("io: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Malformed manifest or other JSON input.
+    #[error("json: {0}")]
+    Json(String),
+
+    /// Lookup of an array id that is not registered (paper: `lookup`).
+    #[error("unknown array id: {0}")]
+    UnknownArray(String),
+
+    /// An array id was registered twice without an intervening `free`.
+    #[error("duplicate array id: {0}")]
+    DuplicateArray(String),
+
+    /// Data transfer violating the PIM system's alignment constraints.
+    #[error("alignment: {0}")]
+    Alignment(String),
+
+    /// Out of MRAM/WRAM capacity on a simulated bank.
+    #[error("capacity: {0}")]
+    Capacity(String),
+
+    /// No AOT artifact satisfies the request (wrong shape family, missing
+    /// manifest entry, or `make artifacts` not run).
+    #[error("artifact: {0}")]
+    Artifact(String),
+
+    /// Handle/iterator misuse (wrong transformation type, arity, ...).
+    #[error("handle: {0}")]
+    Handle(String),
+
+    /// Anything else.
+    #[error("{0}")]
+    Msg(String),
+}
+
+impl Error {
+    pub fn msg(s: impl Into<String>) -> Self {
+        Error::Msg(s.into())
+    }
+}
+
+/// Crate-wide result alias.
+pub type Result<T, E = Error> = std::result::Result<T, E>;

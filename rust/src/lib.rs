@@ -1,0 +1,31 @@
+//! # SimplePIM — a software framework for processing-in-memory
+//!
+//! Reproduction of *SimplePIM: A Software Framework for Productive and
+//! Efficient Processing-in-Memory* (Chen et al., 2023) as a three-layer
+//! Rust + JAX + Pallas system:
+//!
+//! * **L3 (this crate)** — the SimplePIM framework itself: the
+//!   management, communication, and processing interfaces
+//!   ([`coordinator`]), running against a simulated UPMEM-like machine
+//!   ([`pim`]) and executing workload kernels through AOT-compiled XLA
+//!   executables ([`runtime`]).
+//! * **L2/L1 (build time)** — `python/compile/` holds the JAX compute
+//!   graphs and Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
+//!   Python never runs on the request path.
+//!
+//! See DESIGN.md for the system inventory and the per-experiment index,
+//! and EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cli;
+pub mod coordinator;
+pub mod error;
+pub mod pim;
+pub mod report;
+pub mod runtime;
+pub mod timing;
+pub mod util;
+pub mod workloads;
+
+pub use coordinator::PimSystem;
+pub use error::{Error, Result};
+pub use pim::PimConfig;

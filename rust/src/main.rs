@@ -1,0 +1,9 @@
+//! SimplePIM CLI — run workloads, regenerate the paper's tables and
+//! figures, inspect the machine model.
+
+fn main() {
+    if let Err(e) = simplepim::cli::run() {
+        eprintln!("error: {e}");
+        std::process::exit(1);
+    }
+}

@@ -1,0 +1,161 @@
+//! Machine description of the simulated UPMEM-like PIM system.
+//!
+//! Constants follow the first-generation UPMEM architecture as described
+//! in the paper (§2) and the PrIM characterization papers [26, 53]:
+//! 450 MHz DPUs with an 11-stage fine-grained multithreaded pipeline, a
+//! 64 KB WRAM scratchpad, a 24 KB IRAM, one 64 MB MRAM bank per DPU,
+//! 8-byte-aligned WRAM<->MRAM DMA capped at 2,048 bytes per transfer, and
+//! host<->PIM parallel transfer commands whose bandwidth scales with the
+//! number of ranks.
+
+/// Full machine description (PIM side + host side).
+#[derive(Debug, Clone)]
+pub struct PimConfig {
+    /// Number of DPUs (PIM cores) in the system.
+    pub n_dpus: usize,
+    /// DPUs per rank (UPMEM: 64 = 8 chips x 8 banks).
+    pub dpus_per_rank: usize,
+    /// DPU clock frequency in Hz (UPMEM: 450 MHz).
+    pub freq_hz: f64,
+    /// Pipeline depth; >= this many tasklets fully utilize the core.
+    pub pipeline_depth: u32,
+    /// Maximum hardware tasklets per DPU (UPMEM: 24).
+    pub max_tasklets: u32,
+    /// Default tasklets launched by SimplePIM iterators (paper: 12).
+    pub default_tasklets: u32,
+    /// WRAM scratchpad bytes per DPU (UPMEM: 64 KB).
+    pub wram_bytes: u64,
+    /// WRAM bytes reserved for stack/runtime, unavailable to accumulators
+    /// and streaming buffers.
+    pub wram_reserved_bytes: u64,
+    /// IRAM bytes per DPU (UPMEM: 24 KB) — bounds unrolling depth.
+    pub iram_bytes: u64,
+    /// MRAM bank bytes per DPU (UPMEM: 64 MB).
+    pub mram_bytes: u64,
+    /// Required alignment for WRAM<->MRAM DMA (UPMEM: 8 bytes).
+    pub dma_align: u64,
+    /// Maximum bytes per single WRAM<->MRAM DMA (UPMEM: 2,048).
+    pub dma_max_bytes: u64,
+    /// Fixed DMA issue cost in DPU cycles (per `mram_read`/`mram_write`).
+    pub dma_setup_cycles: u64,
+    /// DMA streaming throughput in bytes per DPU cycle once started.
+    /// ~800 MB/s per bank at 450 MHz ~= 1.78 B/cycle.
+    pub dma_bytes_per_cycle: f64,
+    /// Host->PIM / PIM->host parallel-transfer bandwidth per rank (B/s).
+    pub xfer_rank_bw: f64,
+    /// Ceiling on aggregate host<->PIM bandwidth across ranks (B/s).
+    pub xfer_bw_ceiling: f64,
+    /// Serial (single-DPU) transfer bandwidth (B/s).
+    pub xfer_serial_bw: f64,
+    /// Fixed software latency per host<->PIM transfer command (s).
+    pub xfer_latency_s: f64,
+    /// Fixed cost of launching a PIM kernel on all DPUs (s).
+    pub launch_latency_s: f64,
+    /// Host CPU: threads used for merging partials (OpenMP analog).
+    pub host_threads: usize,
+    /// Host CPU: sustained merge throughput per thread (elements/s).
+    pub host_merge_rate: f64,
+}
+
+impl PimConfig {
+    /// UPMEM-like machine with `n_dpus` DPUs and paper-calibrated
+    /// constants.
+    pub fn upmem(n_dpus: usize) -> Self {
+        PimConfig {
+            n_dpus,
+            dpus_per_rank: 64,
+            freq_hz: 450e6,
+            pipeline_depth: 11,
+            max_tasklets: 24,
+            default_tasklets: 12,
+            wram_bytes: 64 * 1024,
+            wram_reserved_bytes: 4 * 1024,
+            iram_bytes: 24 * 1024,
+            mram_bytes: 64 * 1024 * 1024,
+            dma_align: 8,
+            dma_max_bytes: 2048,
+            // PrIM [26]: MRAM latency is ~ linear in size with a fixed
+            // setup; 2,048 B transfers reach ~2 B/cycle peak.
+            dma_setup_cycles: 64,
+            dma_bytes_per_cycle: 2.0,
+            // PrIM [26]: parallel transfers scale with ranks;
+            // ~350 MB/s/rank effective, saturating around 16 GB/s.
+            xfer_rank_bw: 350e6,
+            xfer_bw_ceiling: 16e9,
+            xfer_serial_bw: 600e6,
+            xfer_latency_s: 20e-6,
+            launch_latency_s: 0.25e-3,
+            host_threads: 32,
+            host_merge_rate: 400e6,
+        }
+    }
+
+    /// The 608-DPU configuration the paper's scaling study starts from.
+    pub fn upmem_608() -> Self {
+        Self::upmem(608)
+    }
+
+    /// The full evaluated system (paper: 2,432 DPUs).
+    pub fn upmem_2432() -> Self {
+        Self::upmem(2432)
+    }
+
+    /// A tiny machine for functional tests: few DPUs, small MRAM so
+    /// capacity errors are reachable, same alignment rules.
+    pub fn tiny(n_dpus: usize) -> Self {
+        let mut cfg = Self::upmem(n_dpus);
+        cfg.mram_bytes = 8 * 1024 * 1024;
+        cfg
+    }
+
+    /// Number of ranks (ceil division: a partial rank still burns a rank
+    /// slot on the bus).
+    pub fn n_ranks(&self) -> usize {
+        self.n_dpus.div_ceil(self.dpus_per_rank)
+    }
+
+    /// Effective aggregate parallel-transfer bandwidth in B/s.
+    pub fn parallel_bw(&self) -> f64 {
+        (self.n_ranks() as f64 * self.xfer_rank_bw).min(self.xfer_bw_ceiling)
+    }
+
+    /// WRAM bytes usable by iterator buffers/accumulators.
+    pub fn wram_available(&self) -> u64 {
+        self.wram_bytes - self.wram_reserved_bytes
+    }
+}
+
+impl Default for PimConfig {
+    fn default() -> Self {
+        Self::upmem_2432()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rank_count() {
+        assert_eq!(PimConfig::upmem(608).n_ranks(), 10);
+        assert_eq!(PimConfig::upmem(2432).n_ranks(), 38);
+        assert_eq!(PimConfig::upmem(64).n_ranks(), 1);
+        assert_eq!(PimConfig::upmem(65).n_ranks(), 2);
+    }
+
+    #[test]
+    fn parallel_bw_scales_then_saturates() {
+        let small = PimConfig::upmem(64);
+        let mid = PimConfig::upmem(608);
+        let big = PimConfig::upmem(4096);
+        assert!(small.parallel_bw() < mid.parallel_bw());
+        assert_eq!(big.parallel_bw(), big.xfer_bw_ceiling);
+    }
+
+    #[test]
+    fn wram_budget_positive() {
+        let cfg = PimConfig::default();
+        assert!(cfg.wram_available() > 0);
+        assert!(cfg.wram_available() < cfg.wram_bytes);
+    }
+}

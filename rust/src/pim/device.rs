@@ -1,0 +1,277 @@
+//! `PimMachine`: the assembled simulated PIM system.
+//!
+//! Owns the per-DPU MRAM banks (functional state), a machine-level MRAM
+//! allocator (UPMEM-style same-offset-on-every-bank layout), and the
+//! running `Timeline` of modeled costs.  Everything above (the SimplePIM
+//! coordinator, the hand-optimized baselines) manipulates PIM state
+//! through this type, so functional bytes and modeled seconds stay in
+//! sync by construction.
+
+use crate::error::{Error, Result};
+
+use super::config::PimConfig;
+use super::memory::{MramAllocator, MramBank};
+use super::xfer::{transfer_seconds, XferKind};
+
+/// Accumulated modeled time, split by phase (the split the paper's
+/// figures discuss: kernel vs communication).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct Timeline {
+    /// Host -> PIM transfer seconds (scatter/broadcast).
+    pub host_to_pim_s: f64,
+    /// PIM -> host transfer seconds (gather).
+    pub pim_to_host_s: f64,
+    /// PIM kernel seconds (max over DPUs per launch, summed over
+    /// launches).
+    pub kernel_s: f64,
+    /// Host-side merge seconds (the "host version of acc_func" work).
+    pub host_merge_s: f64,
+    /// Fixed kernel-launch overheads.
+    pub launch_s: f64,
+    /// Number of kernel launches.
+    pub launches: u64,
+    /// Total bytes moved host->PIM.
+    pub bytes_h2p: u64,
+    /// Total bytes moved PIM->host.
+    pub bytes_p2h: u64,
+}
+
+impl Timeline {
+    /// End-to-end modeled seconds.
+    pub fn total_s(&self) -> f64 {
+        self.host_to_pim_s + self.pim_to_host_s + self.kernel_s + self.host_merge_s + self.launch_s
+    }
+
+    /// Communication-only seconds (both directions + merge).
+    pub fn comm_s(&self) -> f64 {
+        self.host_to_pim_s + self.pim_to_host_s + self.host_merge_s
+    }
+}
+
+/// The simulated machine.
+pub struct PimMachine {
+    pub cfg: PimConfig,
+    banks: Vec<MramBank>,
+    allocator: MramAllocator,
+    timeline: Timeline,
+}
+
+impl PimMachine {
+    pub fn new(cfg: PimConfig) -> Self {
+        let banks = (0..cfg.n_dpus).map(|_| MramBank::new(cfg.mram_bytes)).collect();
+        let allocator = MramAllocator::new(cfg.mram_bytes, cfg.dma_align);
+        PimMachine { cfg, banks, allocator, timeline: Timeline::default() }
+    }
+
+    pub fn n_dpus(&self) -> usize {
+        self.banks.len()
+    }
+
+    pub fn timeline(&self) -> Timeline {
+        self.timeline
+    }
+
+    /// Reset the modeled timeline (keeps functional state).
+    pub fn reset_timeline(&mut self) {
+        self.timeline = Timeline::default();
+    }
+
+    /// Allocate `bytes` at the same offset on every bank.
+    pub fn alloc(&mut self, bytes: u64) -> Result<u64> {
+        self.allocator.alloc(bytes)
+    }
+
+    /// Free a machine-level allocation.
+    pub fn free(&mut self, addr: u64) -> Result<()> {
+        self.allocator.free(addr)
+    }
+
+    /// Bytes allocated per bank.
+    pub fn mram_used(&self) -> u64 {
+        self.allocator.used()
+    }
+
+    fn bank(&self, dpu: usize) -> Result<&MramBank> {
+        self.banks
+            .get(dpu)
+            .ok_or_else(|| Error::msg(format!("DPU {dpu} out of range ({})", self.banks.len())))
+    }
+
+    fn bank_mut(&mut self, dpu: usize) -> Result<&mut MramBank> {
+        let n = self.banks.len();
+        self.banks
+            .get_mut(dpu)
+            .ok_or_else(|| Error::msg(format!("DPU {dpu} out of range ({n})")))
+    }
+
+    // ---------------------------------------------------------------
+    // Functional state (no timing): used by the coordinator internals.
+    // ---------------------------------------------------------------
+
+    /// Raw read from one DPU's bank.
+    pub fn read_bytes(&self, dpu: usize, addr: u64, len: u64) -> Result<Vec<u8>> {
+        Ok(self.bank(dpu)?.read(addr, len)?.to_vec())
+    }
+
+    /// Raw write to one DPU's bank.
+    pub fn write_bytes(&mut self, dpu: usize, addr: u64, bytes: &[u8]) -> Result<()> {
+        self.bank_mut(dpu)?.write(addr, bytes)
+    }
+
+    // ---------------------------------------------------------------
+    // Timed host<->PIM operations (the communication interface's
+    // engine room).
+    // ---------------------------------------------------------------
+
+    /// Parallel push: write `per_dpu[i]` to DPU `i` at `addr`; all
+    /// buffers must be the same length (UPMEM parallel-command rule).
+    pub fn push_parallel(&mut self, addr: u64, per_dpu: &[Vec<u8>]) -> Result<()> {
+        let Some(first) = per_dpu.first() else { return Ok(()) };
+        let len = first.len();
+        if per_dpu.iter().any(|b| b.len() != len) {
+            return Err(Error::Alignment(
+                "parallel transfer requires equal-sized buffers on all DPUs".into(),
+            ));
+        }
+        for (dpu, buf) in per_dpu.iter().enumerate() {
+            self.bank_mut(dpu)?.write(addr, buf)?;
+        }
+        let t = transfer_seconds(&self.cfg, XferKind::Parallel, per_dpu.len(), len as u64);
+        self.timeline.host_to_pim_s += t;
+        self.timeline.bytes_h2p += (per_dpu.len() * len) as u64;
+        Ok(())
+    }
+
+    /// Parallel pull: read `len` bytes at `addr` from the first
+    /// `n_dpus` DPUs.
+    pub fn pull_parallel(&mut self, addr: u64, len: u64, n_dpus: usize) -> Result<Vec<Vec<u8>>> {
+        let mut out = Vec::with_capacity(n_dpus);
+        for dpu in 0..n_dpus {
+            out.push(self.bank(dpu)?.read(addr, len)?.to_vec());
+        }
+        let t = transfer_seconds(&self.cfg, XferKind::Parallel, n_dpus, len);
+        self.timeline.pim_to_host_s += t;
+        self.timeline.bytes_p2h += n_dpus as u64 * len;
+        Ok(out)
+    }
+
+    /// Broadcast: same bytes to every DPU at `addr`.
+    pub fn push_broadcast(&mut self, addr: u64, bytes: &[u8]) -> Result<()> {
+        for dpu in 0..self.n_dpus() {
+            self.bank_mut(dpu)?.write(addr, bytes)?;
+        }
+        let t =
+            transfer_seconds(&self.cfg, XferKind::Broadcast, self.n_dpus(), bytes.len() as u64);
+        self.timeline.host_to_pim_s += t;
+        self.timeline.bytes_h2p += bytes.len() as u64; // counted once
+        Ok(())
+    }
+
+    /// Serial pull from a single DPU (used by debugging paths and the
+    /// baseline codes that didn't arrange data for parallel commands).
+    pub fn pull_serial(&mut self, dpu: usize, addr: u64, len: u64) -> Result<Vec<u8>> {
+        let out = self.bank(dpu)?.read(addr, len)?.to_vec();
+        let t = transfer_seconds(&self.cfg, XferKind::Serial, 1, len);
+        self.timeline.pim_to_host_s += t;
+        self.timeline.bytes_p2h += len;
+        Ok(out)
+    }
+
+    // ---------------------------------------------------------------
+    // Timed kernel accounting.
+    // ---------------------------------------------------------------
+
+    /// Charge one kernel launch whose slowest DPU takes `max_dpu_s`.
+    pub fn charge_kernel(&mut self, max_dpu_s: f64) {
+        self.timeline.kernel_s += max_dpu_s;
+        self.timeline.launch_s += self.cfg.launch_latency_s;
+        self.timeline.launches += 1;
+    }
+
+    /// Charge host-side merge work of `elems` accumulator elements
+    /// (parallelized over `host_threads`, OpenMP-style).
+    pub fn charge_host_merge(&mut self, elems: u64) {
+        let threads = self.cfg.host_threads.max(1) as f64;
+        let per_thread = elems as f64 / threads;
+        self.timeline.host_merge_s += per_thread / self.cfg.host_merge_rate;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn machine() -> PimMachine {
+        PimMachine::new(PimConfig::tiny(4))
+    }
+
+    #[test]
+    fn push_pull_roundtrip() {
+        let mut m = machine();
+        let addr = m.alloc(16).unwrap();
+        let bufs: Vec<Vec<u8>> = (0..4).map(|d| vec![d as u8; 16]).collect();
+        m.push_parallel(addr, &bufs).unwrap();
+        let back = m.pull_parallel(addr, 16, 4).unwrap();
+        assert_eq!(back, bufs);
+        assert!(m.timeline().host_to_pim_s > 0.0);
+        assert!(m.timeline().pim_to_host_s > 0.0);
+        assert_eq!(m.timeline().bytes_h2p, 64);
+        assert_eq!(m.timeline().bytes_p2h, 64);
+    }
+
+    #[test]
+    fn parallel_requires_equal_sizes() {
+        let mut m = machine();
+        let addr = m.alloc(16).unwrap();
+        let bufs = vec![vec![0u8; 16], vec![0u8; 8], vec![0u8; 16], vec![0u8; 16]];
+        assert!(m.push_parallel(addr, &bufs).is_err());
+    }
+
+    #[test]
+    fn broadcast_reaches_every_dpu() {
+        let mut m = machine();
+        let addr = m.alloc(8).unwrap();
+        m.push_broadcast(addr, &[7u8; 8]).unwrap();
+        for d in 0..4 {
+            assert_eq!(m.read_bytes(d, addr, 8).unwrap(), vec![7u8; 8]);
+        }
+        // Broadcast counts payload once, not per-DPU.
+        assert_eq!(m.timeline().bytes_h2p, 8);
+    }
+
+    #[test]
+    fn kernel_charging_accumulates() {
+        let mut m = machine();
+        m.charge_kernel(0.5);
+        m.charge_kernel(0.25);
+        let t = m.timeline();
+        assert_eq!(t.kernel_s, 0.75);
+        assert_eq!(t.launches, 2);
+        assert!(t.launch_s > 0.0);
+        assert!(t.total_s() > 0.75);
+    }
+
+    #[test]
+    fn alloc_addresses_shared_across_banks() {
+        let mut m = machine();
+        let a = m.alloc(64).unwrap();
+        let b = m.alloc(64).unwrap();
+        assert_ne!(a, b);
+        m.write_bytes(0, a, &[1; 64]).unwrap();
+        m.write_bytes(1, a, &[2; 64]).unwrap();
+        assert_eq!(m.read_bytes(0, a, 1).unwrap()[0], 1);
+        assert_eq!(m.read_bytes(1, a, 1).unwrap()[0], 2);
+        m.free(a).unwrap();
+        assert_eq!(m.mram_used(), 64);
+    }
+
+    #[test]
+    fn reset_timeline_keeps_state() {
+        let mut m = machine();
+        let addr = m.alloc(8).unwrap();
+        m.push_broadcast(addr, &[9u8; 8]).unwrap();
+        m.reset_timeline();
+        assert_eq!(m.timeline(), Timeline::default());
+        assert_eq!(m.read_bytes(2, addr, 8).unwrap(), vec![9u8; 8]);
+    }
+}

@@ -1,0 +1,122 @@
+//! WRAM<->MRAM DMA engine: constraint checking + cost model.
+//!
+//! UPMEM's `mram_read`/`mram_write` require 8-byte alignment and cap a
+//! single transfer at 2,048 bytes; latency is a fixed setup plus a
+//! per-byte streaming cost, so *larger batches amortize the setup* — the
+//! mechanism behind paper §4.3 optimization 5 (dynamic transfer sizing)
+//! and the PrIM observation that transfer size strongly affects
+//! bandwidth.
+
+use crate::error::{Error, Result};
+
+use super::config::PimConfig;
+
+/// Validate one DMA transfer against the hardware constraints.
+pub fn check_transfer(cfg: &PimConfig, mram_addr: u64, bytes: u64) -> Result<()> {
+    if bytes == 0 {
+        return Err(Error::Alignment("zero-length DMA".into()));
+    }
+    if mram_addr % cfg.dma_align != 0 {
+        return Err(Error::Alignment(format!(
+            "MRAM address {mram_addr:#x} not {}-byte aligned",
+            cfg.dma_align
+        )));
+    }
+    if bytes % cfg.dma_align != 0 {
+        return Err(Error::Alignment(format!(
+            "DMA size {bytes} not a multiple of {}",
+            cfg.dma_align
+        )));
+    }
+    if bytes > cfg.dma_max_bytes {
+        return Err(Error::Alignment(format!(
+            "DMA size {bytes} exceeds the {}-byte limit",
+            cfg.dma_max_bytes
+        )));
+    }
+    Ok(())
+}
+
+/// Cycles for a single DMA of `bytes` (must already satisfy constraints).
+pub fn transfer_cycles(cfg: &PimConfig, bytes: u64) -> f64 {
+    cfg.dma_setup_cycles as f64 + bytes as f64 / cfg.dma_bytes_per_cycle
+}
+
+/// Cycles to stream `total_bytes` through WRAM in batches of
+/// `batch_bytes` (the planner guarantees `batch_bytes` is legal).
+///
+/// The last batch may be short; it still pays the full setup.
+pub fn stream_cycles(cfg: &PimConfig, total_bytes: u64, batch_bytes: u64) -> f64 {
+    if total_bytes == 0 {
+        return 0.0;
+    }
+    let batch = batch_bytes.clamp(cfg.dma_align, cfg.dma_max_bytes);
+    let full = total_bytes / batch;
+    let tail = total_bytes % batch;
+    let mut cycles = full as f64 * transfer_cycles(cfg, batch);
+    if tail > 0 {
+        cycles += transfer_cycles(cfg, crate::util::round_up(tail, cfg.dma_align));
+    }
+    cycles
+}
+
+/// Effective DMA bandwidth (bytes/cycle) at a given batch size — useful
+/// for reporting and for the ablation bench.
+pub fn effective_bandwidth(cfg: &PimConfig, batch_bytes: u64) -> f64 {
+    batch_bytes as f64 / transfer_cycles(cfg, batch_bytes)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PimConfig {
+        PimConfig::upmem(64)
+    }
+
+    #[test]
+    fn rejects_misaligned() {
+        let c = cfg();
+        assert!(check_transfer(&c, 4, 64).is_err()); // bad address
+        assert!(check_transfer(&c, 8, 60).is_err()); // bad size
+        assert!(check_transfer(&c, 8, 0).is_err()); // zero
+        assert!(check_transfer(&c, 8, 4096).is_err()); // over the cap
+        assert!(check_transfer(&c, 8, 2048).is_ok());
+    }
+
+    #[test]
+    fn bigger_batches_amortize_setup() {
+        // The crux of paper §4.3 optimization 5.
+        let c = cfg();
+        let bw_small = effective_bandwidth(&c, 64);
+        let bw_big = effective_bandwidth(&c, 2048);
+        assert!(bw_big > 2.0 * bw_small, "{bw_big} vs {bw_small}");
+    }
+
+    #[test]
+    fn stream_accounts_tail() {
+        let c = cfg();
+        let full_only = stream_cycles(&c, 4096, 2048);
+        let with_tail = stream_cycles(&c, 4096 + 8, 2048);
+        assert!(with_tail > full_only);
+        // Tail costs one extra setup plus 8 bytes of streaming.
+        let expected = full_only + transfer_cycles(&c, 8);
+        assert!((with_tail - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn zero_bytes_cost_nothing() {
+        assert_eq!(stream_cycles(&cfg(), 0, 2048), 0.0);
+    }
+
+    #[test]
+    fn streaming_monotone_in_total() {
+        let c = cfg();
+        let mut last = 0.0;
+        for kb in 1..16 {
+            let t = stream_cycles(&c, kb * 1024, 2048);
+            assert!(t > last);
+            last = t;
+        }
+    }
+}

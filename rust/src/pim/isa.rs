@@ -1,0 +1,182 @@
+//! DPU instruction cost table.
+//!
+//! The UPMEM DPU is an in-order scalar core: with a full pipeline it
+//! retires one instruction per cycle for simple integer ops, but 32-bit
+//! multiply/divide are emulated by a hardware loop (up to 32 cycles, §2
+//! of the paper) and floating point is emulated in software (tens to
+//! ~2,000 cycles [26]).  These per-op *issue-slot* costs are what the
+//! pipeline model multiplies out; they are the mechanism behind the
+//! paper's strength-reduction optimization (§4.3.1) and the
+//! integer-quantization of the ML workloads (§5.1).
+
+/// Instruction classes the timing model distinguishes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Op {
+    /// Integer add/sub/logic/compare/move — single issue slot.
+    IAlu,
+    /// Shift by constant or register — single slot (the strength-reduced
+    /// replacement for multiplies).
+    Shift,
+    /// 8/16-bit multiply (hardware-assisted, short loop).
+    IMulShort,
+    /// Full 32-bit multiply (emulated loop, up to 32 slots).
+    IMul32,
+    /// 32-bit divide (emulated, worst case).
+    IDiv32,
+    /// WRAM load.
+    Load,
+    /// WRAM store.
+    Store,
+    /// Conditional branch (includes the compare fused before it).
+    Branch,
+    /// Function call + return overhead (register save/restore).
+    CallRet,
+    /// Software-emulated FP add.
+    FAdd,
+    /// Software-emulated FP multiply.
+    FMul,
+    /// Software-emulated FP divide (paper: up to ~2,000 cycles).
+    FDiv,
+    /// Mutex acquire+release pair (shared-accumulator reduction).
+    LockPair,
+    /// Barrier wait (per participating tasklet).
+    Barrier,
+}
+
+/// Issue-slot cost of one instruction of class `op`.
+pub fn slots(op: Op) -> u64 {
+    match op {
+        Op::IAlu => 1,
+        Op::Shift => 1,
+        Op::IMulShort => 4,
+        Op::IMul32 => 32,
+        Op::IDiv32 => 48,
+        Op::Load => 1,
+        Op::Store => 1,
+        Op::Branch => 1,
+        Op::CallRet => 12,
+        Op::FAdd => 60,
+        Op::FMul => 110,
+        Op::FDiv => 2000,
+        Op::LockPair => 5,
+        Op::Barrier => 32,
+    }
+}
+
+/// A weighted instruction mix — typically "per input element of the
+/// inner loop".  Costs are accumulated in issue slots; the pipeline model
+/// converts slots to cycles given the tasklet count.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct InstrMix {
+    pub ialu: f64,
+    pub shift: f64,
+    pub imul_short: f64,
+    pub imul32: f64,
+    pub idiv32: f64,
+    pub load: f64,
+    pub store: f64,
+    pub branch: f64,
+    pub call_ret: f64,
+    pub fadd: f64,
+    pub fmul: f64,
+    pub fdiv: f64,
+    pub lock_pair: f64,
+    pub barrier: f64,
+}
+
+impl InstrMix {
+    /// Total issue slots for this mix.
+    pub fn total_slots(&self) -> f64 {
+        self.ialu * slots(Op::IAlu) as f64
+            + self.shift * slots(Op::Shift) as f64
+            + self.imul_short * slots(Op::IMulShort) as f64
+            + self.imul32 * slots(Op::IMul32) as f64
+            + self.idiv32 * slots(Op::IDiv32) as f64
+            + self.load * slots(Op::Load) as f64
+            + self.store * slots(Op::Store) as f64
+            + self.branch * slots(Op::Branch) as f64
+            + self.call_ret * slots(Op::CallRet) as f64
+            + self.fadd * slots(Op::FAdd) as f64
+            + self.fmul * slots(Op::FMul) as f64
+            + self.fdiv * slots(Op::FDiv) as f64
+            + self.lock_pair * slots(Op::LockPair) as f64
+            + self.barrier * slots(Op::Barrier) as f64
+    }
+
+    /// Component-wise sum of two mixes.
+    pub fn plus(&self, other: &InstrMix) -> InstrMix {
+        InstrMix {
+            ialu: self.ialu + other.ialu,
+            shift: self.shift + other.shift,
+            imul_short: self.imul_short + other.imul_short,
+            imul32: self.imul32 + other.imul32,
+            idiv32: self.idiv32 + other.idiv32,
+            load: self.load + other.load,
+            store: self.store + other.store,
+            branch: self.branch + other.branch,
+            call_ret: self.call_ret + other.call_ret,
+            fadd: self.fadd + other.fadd,
+            fmul: self.fmul + other.fmul,
+            fdiv: self.fdiv + other.fdiv,
+            lock_pair: self.lock_pair + other.lock_pair,
+            barrier: self.barrier + other.barrier,
+        }
+    }
+
+    /// Scale every count by `k` (e.g. per-element mix -> per-batch mix).
+    pub fn scaled(&self, k: f64) -> InstrMix {
+        InstrMix {
+            ialu: self.ialu * k,
+            shift: self.shift * k,
+            imul_short: self.imul_short * k,
+            imul32: self.imul32 * k,
+            idiv32: self.idiv32 * k,
+            load: self.load * k,
+            store: self.store * k,
+            branch: self.branch * k,
+            call_ret: self.call_ret * k,
+            fadd: self.fadd * k,
+            fmul: self.fmul * k,
+            fdiv: self.fdiv * k,
+            lock_pair: self.lock_pair * k,
+            barrier: self.barrier * k,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alu_is_single_slot_mul_is_expensive() {
+        assert_eq!(slots(Op::IAlu), 1);
+        assert!(slots(Op::IMul32) >= 16);
+        assert!(slots(Op::FDiv) > slots(Op::FMul));
+    }
+
+    #[test]
+    fn mix_totals() {
+        let m = InstrMix { ialu: 2.0, imul32: 1.0, ..Default::default() };
+        assert_eq!(m.total_slots(), 2.0 + 32.0);
+    }
+
+    #[test]
+    fn mix_plus_and_scale() {
+        let a = InstrMix { load: 1.0, ..Default::default() };
+        let b = InstrMix { store: 2.0, ..Default::default() };
+        let c = a.plus(&b).scaled(3.0);
+        assert_eq!(c.load, 3.0);
+        assert_eq!(c.store, 6.0);
+        assert_eq!(c.total_slots(), 9.0);
+    }
+
+    #[test]
+    fn strength_reduction_saves_slots() {
+        // A multiply-based address computation vs the shifted one: this
+        // inequality is the entire basis of paper §4.3 optimization 1.
+        let with_mul = InstrMix { imul32: 1.0, ..Default::default() };
+        let with_shift = InstrMix { shift: 1.0, ..Default::default() };
+        assert!(with_mul.total_slots() > 8.0 * with_shift.total_slots());
+    }
+}

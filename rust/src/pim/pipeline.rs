@@ -1,0 +1,84 @@
+//! The DPU's 11-stage fine-grained multithreaded pipeline model.
+//!
+//! The UPMEM DPU interleaves tasklets in a "revolver" scheme: a given
+//! tasklet may have at most one instruction in flight, so it can issue at
+//! most once every `pipeline_depth` (11) cycles.  With `T` tasklets the
+//! core's issue throughput is `min(T, 11) / 11` instructions per cycle —
+//! at least 11 tasklets keep the pipeline full (paper §2, [26, 53]).
+//!
+//! This single mechanism produces the paper's Fig. 11 behaviour: when the
+//! thread-private reduction variant must drop from 12 to 8/4/2 active
+//! tasklets (WRAM pressure), execution time grows inversely with the
+//! issue rate — "the reduction in the number of active threads causes a
+//! linear increase of the execution time".
+
+use super::config::PimConfig;
+
+/// Issue throughput in instructions/cycle for `tasklets` active threads.
+pub fn issue_rate(cfg: &PimConfig, tasklets: u32) -> f64 {
+    assert!(tasklets >= 1, "at least one tasklet must run");
+    let t = tasklets.min(cfg.pipeline_depth);
+    t as f64 / cfg.pipeline_depth as f64
+}
+
+/// Cycles to retire `slots` issue slots with `tasklets` active threads.
+///
+/// `slots` is the *total* over all tasklets (the work is pre-partitioned
+/// evenly, so per-tasklet imbalance is at most one batch and ignored
+/// here; the scheduler accounts for the trailing remainder separately).
+pub fn cycles(cfg: &PimConfig, slots: f64, tasklets: u32) -> f64 {
+    slots / issue_rate(cfg, tasklets)
+}
+
+/// Seconds to retire `slots` issue slots with `tasklets` active threads.
+pub fn seconds(cfg: &PimConfig, slots: f64, tasklets: u32) -> f64 {
+    cycles(cfg, slots, tasklets) / cfg.freq_hz
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PimConfig {
+        PimConfig::upmem(64)
+    }
+
+    #[test]
+    fn full_pipeline_at_depth_threads() {
+        let c = cfg();
+        assert_eq!(issue_rate(&c, 11), 1.0);
+        assert_eq!(issue_rate(&c, 12), 1.0); // 12 is the paper's default
+        assert_eq!(issue_rate(&c, 24), 1.0);
+    }
+
+    #[test]
+    fn partial_pipeline_is_linear_in_threads() {
+        let c = cfg();
+        let r1 = issue_rate(&c, 1);
+        let r4 = issue_rate(&c, 4);
+        let r8 = issue_rate(&c, 8);
+        assert!((r4 / r1 - 4.0).abs() < 1e-12);
+        assert!((r8 / r4 - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fig11_halving_threads_doubles_time() {
+        // Paper §5.4: "the execution time of the 2048-bin histogram (with
+        // 4 threads) is roughly twice as high as that of the 1024-bin
+        // histogram (with 8 threads)" — same total work, half the rate.
+        let c = cfg();
+        let slots = 1e9;
+        let t8 = cycles(&c, slots, 8);
+        let t4 = cycles(&c, slots, 4);
+        let t2 = cycles(&c, slots, 2);
+        assert!((t4 / t8 - 2.0).abs() < 1e-9);
+        assert!((t2 / t4 - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn seconds_uses_frequency() {
+        let c = cfg();
+        let s = seconds(&c, c.freq_hz, 12); // freq_hz slots at full rate
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+}

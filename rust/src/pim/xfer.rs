@@ -1,0 +1,109 @@
+//! Host<->PIM transfer model (the DIMM bus side).
+//!
+//! UPMEM exposes *serial* commands (one DPU at a time) and *parallel*
+//! commands (same-sized buffers pushed to / pulled from many DPUs at
+//! once, rank by rank).  Parallel bandwidth grows with the number of
+//! ranks and "can be orders of magnitude higher than the serial transfer
+//! bandwidth" (paper §4.1).  SimplePIM always arranges data so the
+//! parallel commands are usable; hand-written code that falls back to
+//! serial transfers pays for it here.
+
+use super::config::PimConfig;
+
+/// Which transfer command a communication step uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum XferKind {
+    /// `dpu_push_xfer`-style parallel transfer: every DPU sends/receives
+    /// the same number of bytes simultaneously.
+    Parallel,
+    /// Per-DPU serial copy.
+    Serial,
+    /// Broadcast: the same buffer goes to every DPU (parallel command,
+    /// bytes counted once per rank on the bus).
+    Broadcast,
+}
+
+/// Seconds to move `bytes_per_dpu` bytes to/from each of `n_dpus` DPUs.
+pub fn transfer_seconds(
+    cfg: &PimConfig,
+    kind: XferKind,
+    n_dpus: usize,
+    bytes_per_dpu: u64,
+) -> f64 {
+    if n_dpus == 0 || bytes_per_dpu == 0 {
+        return 0.0;
+    }
+    let ranks_used = n_dpus.div_ceil(cfg.dpus_per_rank) as f64;
+    let bw = (ranks_used * cfg.xfer_rank_bw).min(cfg.xfer_bw_ceiling);
+    match kind {
+        XferKind::Parallel => {
+            let total = n_dpus as f64 * bytes_per_dpu as f64;
+            cfg.xfer_latency_s + total / bw
+        }
+        XferKind::Serial => {
+            // One command per DPU, each at single-DPU bandwidth.
+            n_dpus as f64 * (cfg.xfer_latency_s + bytes_per_dpu as f64 / cfg.xfer_serial_bw)
+        }
+        XferKind::Broadcast => {
+            // The buffer is replicated on the bus once per rank in
+            // parallel: time is governed by one rank's share.
+            cfg.xfer_latency_s + (ranks_used * bytes_per_dpu as f64) / bw
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg() -> PimConfig {
+        PimConfig::upmem(608) // 10 ranks
+    }
+
+    #[test]
+    fn parallel_beats_serial() {
+        // Paper §4.1: parallel command bandwidth grows with ranks and
+        // leaves per-DPU serial copies far behind.
+        let c = cfg();
+        let p = transfer_seconds(&c, XferKind::Parallel, 608, 1 << 20);
+        let s = transfer_seconds(&c, XferKind::Serial, 608, 1 << 20);
+        assert!(s > 5.0 * p, "serial should be much slower: {s} vs {p}");
+    }
+
+    #[test]
+    fn parallel_scales_with_ranks() {
+        let small = PimConfig::upmem(64); // 1 rank
+        let big = PimConfig::upmem(640); // 10 ranks
+        let per_dpu = 1u64 << 20;
+        let t_small = transfer_seconds(&small, XferKind::Parallel, 64, per_dpu);
+        let t_big = transfer_seconds(&big, XferKind::Parallel, 640, per_dpu);
+        // 10x the data across 10x the ranks => roughly the same time.
+        assert!((t_big / t_small) < 1.3);
+    }
+
+    #[test]
+    fn broadcast_cheaper_than_scatter_of_same_total() {
+        let c = cfg();
+        // Broadcasting 1 MB to all DPUs moves ~1 MB per *rank*, while
+        // scattering 1 MB per DPU moves 1 MB per *DPU*.
+        let b = transfer_seconds(&c, XferKind::Broadcast, 608, 1 << 20);
+        let p = transfer_seconds(&c, XferKind::Parallel, 608, 1 << 20);
+        assert!(b < p);
+    }
+
+    #[test]
+    fn zero_work_is_free() {
+        let c = cfg();
+        assert_eq!(transfer_seconds(&c, XferKind::Parallel, 0, 1024), 0.0);
+        assert_eq!(transfer_seconds(&c, XferKind::Parallel, 8, 0), 0.0);
+    }
+
+    #[test]
+    fn ceiling_binds_at_scale() {
+        let big = PimConfig::upmem(64 * 64); // 64 ranks >> ceiling
+        let t = transfer_seconds(&big, XferKind::Parallel, big.n_dpus, 1 << 20);
+        let total = big.n_dpus as f64 * (1u64 << 20) as f64;
+        let floor = total / big.xfer_bw_ceiling;
+        assert!(t >= floor);
+    }
+}

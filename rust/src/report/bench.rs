@@ -1,0 +1,69 @@
+//! Minimal wall-clock benchmark harness (criterion is unavailable in
+//! this offline environment).  Warmup + N timed iterations, reporting
+//! mean / min / max.  Used by the `cargo bench` targets in
+//! `rust/benches/`.
+
+use std::time::Instant;
+
+/// Result of one measured benchmark.
+#[derive(Debug, Clone, Copy)]
+pub struct Measurement {
+    pub iters: usize,
+    pub mean_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl Measurement {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_s * 1e3
+    }
+}
+
+/// Time `f` over `iters` iterations after `warmup` unrecorded runs.
+pub fn measure<F: FnMut()>(warmup: usize, iters: usize, mut f: F) -> Measurement {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        times.push(t0.elapsed().as_secs_f64());
+    }
+    let sum: f64 = times.iter().sum();
+    Measurement {
+        iters,
+        mean_s: sum / iters as f64,
+        min_s: times.iter().copied().fold(f64::MAX, f64::min),
+        max_s: times.iter().copied().fold(0.0, f64::max),
+    }
+}
+
+/// Print one benchmark line.
+pub fn report(name: &str, m: Measurement, work_items: Option<(u64, &str)>) {
+    let rate = work_items
+        .map(|(n, unit)| format!("  ({:.1} M{unit}/s)", n as f64 / m.mean_s / 1e6))
+        .unwrap_or_default();
+    println!(
+        "{name:<44} mean {:>9.3} ms   min {:>9.3} ms   max {:>9.3} ms{rate}",
+        m.mean_ms(),
+        m.min_s * 1e3,
+        m.max_s * 1e3
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        let m = measure(1, 3, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert_eq!(m.iters, 3);
+        assert!(m.mean_s > 0.0);
+        assert!(m.min_s <= m.mean_s && m.mean_s <= m.max_s);
+    }
+}

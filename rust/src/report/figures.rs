@@ -1,0 +1,293 @@
+//! Regeneration of the paper's figures (Figs. 9, 10, 11 + the §4.3
+//! in-text ablations) from the timing model, and the `run`/`selftest`
+//! CLI commands that exercise the full functional stack.
+
+use crate::cli::Args;
+use crate::error::{Error, Result};
+use crate::pim::PimConfig;
+use crate::timing::{self, DmaPolicy, OptFlags, ReduceVariant};
+use crate::workloads::{self, histogram, Impl};
+use crate::{coordinator::PimSystem, report::table::Table};
+
+/// DPU counts of the paper's scaling studies.
+pub const SCALING_DPUS: [usize; 3] = [608, 1216, 2432];
+
+/// Fig. 9: weak scaling — per-DPU input fixed, DPUs grow.
+pub fn fig9() -> Table {
+    let mut t = Table::new(
+        "Fig. 9 — Weak scaling (per-DPU input fixed; runtime in ms)",
+        &["workload", "dpus", "simplepim", "baseline", "speedup"],
+    );
+    for w in workloads::all() {
+        for &dpus in &SCALING_DPUS {
+            let cfg = PimConfig::upmem(dpus);
+            let total = dpus as u64 * w.weak_elems_per_dpu;
+            let sp = (w.model)(&cfg, total, Impl::SimplePim).total_s();
+            let bl = (w.model)(&cfg, total, Impl::Baseline).total_s();
+            t.row(vec![
+                w.name.into(),
+                dpus.to_string(),
+                format!("{:.2}", sp * 1e3),
+                format!("{:.2}", bl * 1e3),
+                format!("{:.2}x", bl / sp),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 10: strong scaling — total input fixed at the 608-DPU size.
+pub fn fig10() -> Table {
+    let mut t = Table::new(
+        "Fig. 10 — Strong scaling (total input fixed; runtime in ms)",
+        &["workload", "dpus", "simplepim", "baseline", "speedup", "vs 608"],
+    );
+    for w in workloads::all() {
+        let mut base_sp = 0.0;
+        for &dpus in &SCALING_DPUS {
+            let cfg = PimConfig::upmem(dpus);
+            let sp = (w.model)(&cfg, w.strong_total_elems, Impl::SimplePim).total_s();
+            let bl = (w.model)(&cfg, w.strong_total_elems, Impl::Baseline).total_s();
+            if dpus == 608 {
+                base_sp = sp;
+            }
+            t.row(vec![
+                w.name.into(),
+                dpus.to_string(),
+                format!("{:.2}", sp * 1e3),
+                format!("{:.2}", bl * 1e3),
+                format!("{:.2}x", bl / sp),
+                format!("{:.2}x", base_sp / sp),
+            ]);
+        }
+    }
+    t
+}
+
+/// Fig. 11: shared vs thread-private reduction across histogram sizes,
+/// with the active-thread counts (the red/blue lines).
+pub fn fig11() -> Table {
+    let mut t = Table::new(
+        "Fig. 11 — Histogram reduction variants (608 DPUs; runtime in ms)",
+        &["bins", "shared", "threads", "private", "threads", "winner"],
+    );
+    let cfg = PimConfig::upmem(608);
+    let total = 608 * 1_572_864u64;
+    for bins in [256u64, 512, 1024, 2048, 4096] {
+        let (ts, _, at_s) = histogram::model_time_variant(
+            &cfg,
+            total,
+            bins,
+            Impl::SimplePim,
+            Some(ReduceVariant::SharedAcc),
+        );
+        let (tp, _, at_p) = histogram::model_time_variant(
+            &cfg,
+            total,
+            bins,
+            Impl::SimplePim,
+            Some(ReduceVariant::PrivateAcc),
+        );
+        let winner = if tp.total_s() <= ts.total_s() { "private" } else { "shared" };
+        t.row(vec![
+            bins.to_string(),
+            format!("{:.2}", ts.total_s() * 1e3),
+            at_s.to_string(),
+            format!("{:.2}", tp.total_s() * 1e3),
+            at_p.to_string(),
+            winner.into(),
+        ]);
+    }
+    t
+}
+
+/// §4.3 in-text ablations on vector addition: each optimization
+/// disabled in isolation (paper: unrolling ~20%, boundary checks >10%,
+/// inlining >2x, lazy zip >2x, transfer sizing).
+pub fn ablations() -> Table {
+    let mut t = Table::new(
+        "§4.3 ablations — vector addition, 608 DPUs (kernel ms)",
+        &["variant", "kernel", "slowdown"],
+    );
+    let cfg = PimConfig::upmem(608);
+    let elems = 1_000_000u64;
+    let profile = crate::coordinator::PimFunc::VecAdd.profile();
+    let run = |opts: &OptFlags, policy: DmaPolicy, zip_pass: bool| -> f64 {
+        let mut s = timing::map_kernel(&cfg, &profile, opts, policy, elems, 12).seconds;
+        if zip_pass {
+            s += timing::eager_zip_kernel(&cfg, 4, opts, policy, elems, 12).seconds;
+        }
+        s
+    };
+    let full = run(&OptFlags::simplepim(), DmaPolicy::Dynamic, false);
+    let mut row = |name: &str, s: f64| {
+        t.row(vec![name.into(), format!("{:.2}", s * 1e3), format!("{:.2}x", s / full)]);
+    };
+    row("all optimizations", full);
+    let mut o = OptFlags::simplepim();
+    o.loop_unrolling = false;
+    row("no loop unrolling", run(&o, DmaPolicy::Dynamic, false));
+    let mut o = OptFlags::simplepim();
+    o.avoid_boundary_checks = false;
+    row("boundary checks in loop", run(&o, DmaPolicy::Dynamic, false));
+    let mut o = OptFlags::simplepim();
+    o.inline_functions = false;
+    row("no function inlining", run(&o, DmaPolicy::Dynamic, false));
+    let mut o = OptFlags::simplepim();
+    o.lazy_zip = false;
+    row("eager zip", run(&o, DmaPolicy::Dynamic, true));
+    let mut o = OptFlags::simplepim();
+    o.dynamic_transfer_size = false;
+    row("fixed 64B transfers", run(&o, DmaPolicy::Fixed(64), false));
+    let mut o = OptFlags::simplepim();
+    o.strength_reduction = false;
+    row("no strength reduction", run(&o, DmaPolicy::Dynamic, false));
+    t
+}
+
+/// `figures` subcommand.
+pub fn cmd_figures(args: &Args) -> Result<()> {
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let tables: Vec<Table> = match which {
+        "fig9" => vec![fig9()],
+        "fig10" => vec![fig10()],
+        "fig11" => vec![fig11()],
+        "ablations" => vec![ablations()],
+        "all" => vec![fig9(), fig10(), fig11(), ablations()],
+        other => return Err(Error::msg(format!("unknown figure `{other}`"))),
+    };
+    for t in tables {
+        if args.has("csv") {
+            println!("# {}", t.title);
+            print!("{}", t.to_csv());
+        } else {
+            println!("{}", t.render());
+        }
+    }
+    Ok(())
+}
+
+/// `run` subcommand: run one workload end-to-end on a small simulated
+/// machine through the full stack (PJRT unless --host-only).
+pub fn cmd_run(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .first()
+        .ok_or_else(|| Error::msg("usage: run <workload>"))?
+        .clone();
+    let dpus = args.flag_usize("dpus", 16)?;
+    let cfg = PimConfig::upmem(dpus);
+    let mut sys = if args.has("host-only") {
+        PimSystem::host_only(cfg)
+    } else {
+        PimSystem::new(cfg)?
+    };
+    let elems = args.flag_usize("elems", 0)?;
+    run_workload(&mut sys, &name, elems)?;
+    let t = sys.timeline();
+    println!("\nmodeled timeline ({} DPUs):", dpus);
+    println!("  host->pim : {:>10.3} ms ({} B)", t.host_to_pim_s * 1e3, t.bytes_h2p);
+    println!("  kernel    : {:>10.3} ms ({} launches)", t.kernel_s * 1e3, t.launches);
+    println!("  pim->host : {:>10.3} ms ({} B)", t.pim_to_host_s * 1e3, t.bytes_p2h);
+    println!("  host merge: {:>10.3} ms", t.host_merge_s * 1e3);
+    println!("  total     : {:>10.3} ms", t.total_s() * 1e3);
+    let stats = sys.exec_stats();
+    if stats.calls > 0 {
+        println!(
+            "executor: {} calls, {} compiles, literal {:.1} ms, execute {:.1} ms, readback {:.1} ms",
+            stats.calls,
+            stats.compiles,
+            stats.literal_s * 1e3,
+            stats.execute_s * 1e3,
+            stats.readback_s * 1e3
+        );
+    }
+    Ok(())
+}
+
+fn run_workload(sys: &mut PimSystem, name: &str, elems: usize) -> Result<()> {
+    use crate::workloads::*;
+    match name {
+        "vecadd" => {
+            let n = if elems > 0 { elems } else { 1 << 20 };
+            let (x, y) = vecadd::generate(1, n);
+            let out = vecadd::run_simplepim(sys, &x, &y)?;
+            let ok = out == golden::vecadd(&x, &y);
+            println!("vecadd: {n} elements, golden match: {ok}");
+            if !ok {
+                return Err(Error::msg("vecadd mismatch vs golden"));
+            }
+        }
+        "reduction" => {
+            let n = if elems > 0 { elems } else { 1 << 20 };
+            let x = reduction::generate(2, n);
+            let got = reduction::run_simplepim(sys, &x)?;
+            let want = golden::reduce_sum(&x);
+            println!("reduction: {n} elements, sum {got}, golden match: {}", got == want);
+            if got != want {
+                return Err(Error::msg("reduction mismatch vs golden"));
+            }
+        }
+        "histogram" => {
+            let n = if elems > 0 { elems } else { 1 << 20 };
+            let px = histogram::generate(3, n);
+            let got = histogram::run_simplepim(sys, &px, 256)?;
+            let ok = got == golden::histogram(&px, 256);
+            println!("histogram: {n} pixels into 256 bins, golden match: {ok}");
+            if !ok {
+                return Err(Error::msg("histogram mismatch vs golden"));
+            }
+        }
+        "linreg" | "logreg" => {
+            let n = if elems > 0 { elems } else { 40_000 };
+            let dim = 10;
+            let logistic = name == "logreg";
+            let (x, y, _) = if logistic {
+                logreg::generate(4, n, dim)
+            } else {
+                linreg::generate(4, n, dim)
+            };
+            if logistic {
+                logreg::setup(sys, &x, &y, dim)?;
+            } else {
+                linreg::setup(sys, &x, &y, dim)?;
+            }
+            let w = vec![ONE / 8; dim];
+            let (got, want) = if logistic {
+                (logreg::gradient_step(sys, &w, 0)?, golden::logreg_grad(&x, &y, &w, dim))
+            } else {
+                (linreg::gradient_step(sys, &w, 0)?, golden::linreg_grad(&x, &y, &w, dim))
+            };
+            println!("{name}: {n} points (dim {dim}), gradient match: {}", got == want);
+            if got != want {
+                return Err(Error::msg("gradient mismatch vs golden"));
+            }
+        }
+        "kmeans" => {
+            let n = if elems > 0 { elems } else { 40_000 };
+            let (k, dim) = (10, 10);
+            let (x, _) = kmeans::generate(5, n, k, dim);
+            kmeans::setup(sys, &x, dim)?;
+            let c0: Vec<i32> = x[..k * dim].to_vec();
+            let c1 = kmeans::iterate(sys, &c0, k, dim, 0)?;
+            println!("kmeans: {n} points, first iteration moved centroids: {}", c1 != c0);
+        }
+        other => return Err(Error::msg(format!("unknown workload `{other}`"))),
+    }
+    Ok(())
+}
+
+/// `selftest`: run every workload at a small size through the current
+/// execution path and verify against goldens.
+pub fn cmd_selftest(args: &Args) -> Result<()> {
+    let dpus = args.flag_usize("dpus", 12)?;
+    let host_only = args.has("host-only");
+    for name in ["vecadd", "reduction", "histogram", "linreg", "logreg", "kmeans"] {
+        let cfg = PimConfig::upmem(dpus);
+        let mut sys =
+            if host_only { PimSystem::host_only(cfg) } else { PimSystem::new(cfg)? };
+        run_workload(&mut sys, name, 30_000)?;
+    }
+    println!("selftest OK ({})", if host_only { "host goldens" } else { "PJRT/XLA path" });
+    Ok(())
+}

@@ -1,0 +1,8 @@
+//! Table/figure renderers for the paper's experiments (ASCII + CSV).
+
+pub mod bench;
+pub mod figures;
+pub mod loc;
+pub mod table;
+
+pub use table::Table;

@@ -1,0 +1,233 @@
+//! Artifact manifest: what `python/compile/aot.py` produced.
+//!
+//! The manifest (`artifacts/manifest.json`) lists every AOT-compiled HLO
+//! module with its workload family, fixed shapes, and parameters.  The
+//! coordinator asks [`Manifest::select`] for the smallest variant whose
+//! per-DPU capacity fits the live data; the transfer planner then pads
+//! each DPU's slice up to that capacity with the workload's identity
+//! element.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Shape+dtype of one executable input/output.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<Self> {
+        let shape = j
+            .field("shape")?
+            .as_arr()?
+            .iter()
+            .map(|d| d.as_usize())
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j.field("dtype")?.as_str()?.to_string();
+        Ok(TensorMeta { shape, dtype })
+    }
+}
+
+/// One AOT artifact (one `.hlo.txt` file).
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub workload: String,
+    pub params: BTreeMap<String, i64>,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+}
+
+impl ArtifactMeta {
+    /// The gang width `G` (DPUs per executable call).
+    pub fn gang(&self) -> usize {
+        self.params.get("gang").copied().unwrap_or(1) as usize
+    }
+
+    /// Per-DPU capacity `N` (elements or points).
+    pub fn n(&self) -> usize {
+        self.params.get("n").copied().unwrap_or(0) as usize
+    }
+
+    pub fn param(&self, key: &str) -> Result<i64> {
+        self.params
+            .get(key)
+            .copied()
+            .ok_or_else(|| Error::Artifact(format!("{}: missing param `{key}`", self.name)))
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path).map_err(|e| {
+            Error::Artifact(format!(
+                "cannot read {} ({e}); run `make artifacts` first",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text, dir)
+    }
+
+    /// Parse manifest text (separated out for tests).
+    pub fn parse(text: &str, dir: PathBuf) -> Result<Self> {
+        let doc = Json::parse(text)?;
+        let mut artifacts = Vec::new();
+        for a in doc.field("artifacts")?.as_arr()? {
+            let mut params = BTreeMap::new();
+            for (k, v) in a.field("params")?.as_obj()? {
+                params.insert(k.clone(), v.as_i64()?);
+            }
+            artifacts.push(ArtifactMeta {
+                name: a.field("name")?.as_str()?.to_string(),
+                file: a.field("file")?.as_str()?.to_string(),
+                workload: a.field("workload")?.as_str()?.to_string(),
+                params,
+                inputs: a
+                    .field("inputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorMeta::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+                outputs: a
+                    .field("outputs")?
+                    .as_arr()?
+                    .iter()
+                    .map(TensorMeta::from_json)
+                    .collect::<Result<Vec<_>>>()?,
+            });
+        }
+        Ok(Manifest { dir, artifacts })
+    }
+
+    /// Find an artifact by exact name.
+    pub fn by_name(&self, name: &str) -> Result<&ArtifactMeta> {
+        self.artifacts
+            .iter()
+            .find(|a| a.name == name)
+            .ok_or_else(|| Error::Artifact(format!("no artifact named `{name}`")))
+    }
+
+    /// Preferred execution engine: artifacts are AOT-compiled twice
+    /// (DESIGN.md §8 Perf) — `pallas` (the L1 kernel under
+    /// interpret=True: the hardware artifact, step-emulated on CPU) and
+    /// `xla` (the same integer semantics lowered from plain jnp, which
+    /// XLA-CPU fuses/vectorizes; ~50x faster to execute here).  Serving
+    /// defaults to `xla`; set `SIMPLEPIM_ENGINE=pallas` to exercise the
+    /// kernel lowering end-to-end.
+    pub fn preferred_engine() -> &'static str {
+        match std::env::var("SIMPLEPIM_ENGINE").as_deref() {
+            Ok("pallas") => "pallas",
+            _ => "xla",
+        }
+    }
+
+    /// Select the smallest variant of `workload` with per-DPU capacity
+    /// `>= min_n`, preferring the serving engine; falls back to the
+    /// largest available (the executor will then be called repeatedly
+    /// over chunks).
+    pub fn select(&self, workload: &str, min_n: usize) -> Result<&ArtifactMeta> {
+        let want_pallas = (Self::preferred_engine() == "pallas") as i64;
+        let mut candidates: Vec<&ArtifactMeta> =
+            self.artifacts.iter().filter(|a| a.workload == workload).collect();
+        if candidates.is_empty() {
+            return Err(Error::Artifact(format!("no artifacts for workload `{workload}`")));
+        }
+        // Engine preference first (manifests without the `pallas` param
+        // predate dual lowering and are treated as engine-neutral),
+        // then smallest fitting capacity.
+        let preferred: Vec<&ArtifactMeta> = candidates
+            .iter()
+            .copied()
+            .filter(|a| a.params.get("pallas").map(|&p| p == want_pallas).unwrap_or(true))
+            .collect();
+        if !preferred.is_empty() {
+            candidates = preferred;
+        }
+        candidates.sort_by_key(|a| a.n());
+        Ok(candidates
+            .iter()
+            .find(|a| a.n() >= min_n)
+            .copied()
+            .unwrap_or_else(|| candidates[candidates.len() - 1]))
+    }
+
+    /// Absolute path of an artifact's HLO text file.
+    pub fn hlo_path(&self, a: &ArtifactMeta) -> PathBuf {
+        self.dir.join(&a.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "artifacts": [
+        {"name": "vecadd_g8_n8192", "file": "vecadd_g8_n8192.hlo.txt",
+         "workload": "vecadd", "params": {"gang": 8, "n": 8192, "block": 2048},
+         "inputs": [{"shape": [8, 8192], "dtype": "int32"},
+                    {"shape": [8, 8192], "dtype": "int32"}],
+         "outputs": [{"shape": [8, 8192], "dtype": "int32"}],
+         "sha256_16": "00"},
+        {"name": "vecadd_g8_n65536", "file": "vecadd_g8_n65536.hlo.txt",
+         "workload": "vecadd", "params": {"gang": 8, "n": 65536, "block": 2048},
+         "inputs": [{"shape": [8, 65536], "dtype": "int32"},
+                    {"shape": [8, 65536], "dtype": "int32"}],
+         "outputs": [{"shape": [8, 65536], "dtype": "int32"}],
+         "sha256_16": "00"}
+      ]
+    }"#;
+
+    fn manifest() -> Manifest {
+        Manifest::parse(SAMPLE, PathBuf::from("/tmp")).unwrap()
+    }
+
+    #[test]
+    fn parses_fields() {
+        let m = manifest();
+        assert_eq!(m.artifacts.len(), 2);
+        let a = m.by_name("vecadd_g8_n8192").unwrap();
+        assert_eq!(a.gang(), 8);
+        assert_eq!(a.n(), 8192);
+        assert_eq!(a.inputs[0].elems(), 8 * 8192);
+        assert_eq!(a.param("block").unwrap(), 2048);
+        assert!(a.param("bins").is_err());
+    }
+
+    #[test]
+    fn selects_smallest_fitting() {
+        let m = manifest();
+        assert_eq!(m.select("vecadd", 100).unwrap().n(), 8192);
+        assert_eq!(m.select("vecadd", 8192).unwrap().n(), 8192);
+        assert_eq!(m.select("vecadd", 8193).unwrap().n(), 65536);
+        // Larger than anything: fall back to the largest variant.
+        assert_eq!(m.select("vecadd", 1 << 20).unwrap().n(), 65536);
+        assert!(m.select("nope", 1).is_err());
+    }
+
+    #[test]
+    fn unknown_name_errors() {
+        assert!(manifest().by_name("missing").is_err());
+    }
+}

@@ -1,0 +1,213 @@
+//! PJRT executor: load AOT HLO text, compile once, execute many times.
+//!
+//! This is the only place the `xla` crate is touched.  The pattern
+//! follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
+//! `client.compile` → `execute`.  Executables are cached per artifact
+//! name, so each shape variant is compiled exactly once per process —
+//! the request path only pays dispatch + data movement.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+
+use super::artifact::{ArtifactMeta, Manifest};
+
+/// Borrowed int32 tensor handed to the executor.
+#[derive(Debug, Clone, Copy)]
+pub struct TensorRef<'a> {
+    pub data: &'a [i32],
+    pub shape: &'a [usize],
+}
+
+impl<'a> TensorRef<'a> {
+    pub fn new(data: &'a [i32], shape: &'a [usize]) -> Self {
+        TensorRef { data, shape }
+    }
+}
+
+/// Executor statistics for the perf pass (EXPERIMENTS.md §Perf).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct ExecStats {
+    pub compiles: u64,
+    pub calls: u64,
+    pub literal_s: f64,
+    pub execute_s: f64,
+    pub readback_s: f64,
+}
+
+/// The runtime: PJRT CPU client + compiled-executable cache.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    stats: RefCell<ExecStats>,
+}
+
+impl Runtime {
+    /// Load the manifest in `dir` and start a PJRT CPU client.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let manifest = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()), stats: RefCell::new(ExecStats::default()) })
+    }
+
+    /// Default artifact directory: `$SIMPLEPIM_ARTIFACTS` or
+    /// `<crate root>/artifacts`.
+    pub fn default_dir() -> std::path::PathBuf {
+        std::env::var_os("SIMPLEPIM_ARTIFACTS")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|| {
+                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+            })
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    /// Compile (or fetch from cache) the executable for `name`.
+    fn executable(&self, name: &str) -> Result<()> {
+        if self.cache.borrow().contains_key(name) {
+            return Ok(());
+        }
+        let meta = self.manifest.by_name(name)?;
+        let path = self.manifest.hlo_path(meta);
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Artifact(format!("non-utf8 path {}", path.display())))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str)?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.stats.borrow_mut().compiles += 1;
+        self.cache.borrow_mut().insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` on int32 inputs; returns the flattened
+    /// int32 outputs in declaration order.
+    pub fn execute_i32(&self, name: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<i32>>> {
+        let meta = self.manifest.by_name(name)?;
+        self.check_inputs(meta, inputs)?;
+        self.executable(name)?;
+
+        let t0 = Instant::now();
+        let literals = inputs
+            .iter()
+            .map(|t| {
+                // Zero-copy view of the i32 data as bytes; the literal
+                // constructor copies once into XLA-owned memory.
+                let bytes = unsafe {
+                    std::slice::from_raw_parts(t.data.as_ptr() as *const u8, t.data.len() * 4)
+                };
+                xla::Literal::create_from_shape_and_untyped_data(
+                    xla::ElementType::S32,
+                    t.shape,
+                    bytes,
+                )
+            })
+            .collect::<std::result::Result<Vec<_>, _>>()?;
+        let t1 = Instant::now();
+
+        let cache = self.cache.borrow();
+        let exe = cache.get(name).expect("compiled above");
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let t2 = Instant::now();
+
+        let mut outs = Vec::with_capacity(meta.outputs.len());
+        if meta.outputs.len() == 1 {
+            // Single-output executables are lowered un-tupled (aot.py):
+            // one device->host literal, one literal->vec copy.  (The
+            // TFRT CPU client does not implement CopyRawToHost, so the
+            // fully zero-intermediate path is unavailable; see
+            // EXPERIMENTS.md §Perf.)
+            let lit = result[0][0].to_literal_sync()?;
+            let v = lit.to_vec::<i32>()?;
+            if v.len() != meta.outputs[0].elems() {
+                return Err(Error::Artifact(format!(
+                    "{name}: output has {} elems, manifest says {}",
+                    v.len(),
+                    meta.outputs[0].elems()
+                )));
+            }
+            outs.push(v);
+        } else {
+            // Multi-output (kmeans): tuple literal, decomposed.
+            let tuple = result[0][0].to_literal_sync()?;
+            let parts = tuple.to_tuple()?;
+            if parts.len() != meta.outputs.len() {
+                return Err(Error::Artifact(format!(
+                    "{name}: expected {} outputs, executable returned {}",
+                    meta.outputs.len(),
+                    parts.len()
+                )));
+            }
+            for (part, om) in parts.iter().zip(&meta.outputs) {
+                let v = part.to_vec::<i32>()?;
+                if v.len() != om.elems() {
+                    return Err(Error::Artifact(format!(
+                        "{name}: output has {} elems, manifest says {}",
+                        v.len(),
+                        om.elems()
+                    )));
+                }
+                outs.push(v);
+            }
+        }
+        let t3 = Instant::now();
+
+        let mut s = self.stats.borrow_mut();
+        s.calls += 1;
+        s.literal_s += (t1 - t0).as_secs_f64();
+        s.execute_s += (t2 - t1).as_secs_f64();
+        s.readback_s += (t3 - t2).as_secs_f64();
+        Ok(outs)
+    }
+
+    fn check_inputs(&self, meta: &ArtifactMeta, inputs: &[TensorRef<'_>]) -> Result<()> {
+        if inputs.len() != meta.inputs.len() {
+            return Err(Error::Artifact(format!(
+                "{}: expected {} inputs, got {}",
+                meta.name,
+                meta.inputs.len(),
+                inputs.len()
+            )));
+        }
+        for (i, (t, im)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.shape != im.shape.as_slice() {
+                return Err(Error::Artifact(format!(
+                    "{}: input {i} shape {:?} != manifest {:?}",
+                    meta.name, t.shape, im.shape
+                )));
+            }
+            if t.data.len() != im.elems() {
+                return Err(Error::Artifact(format!(
+                    "{}: input {i} has {} elems, shape wants {}",
+                    meta.name,
+                    t.data.len(),
+                    im.elems()
+                )));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Integration tests that require built artifacts live in
+    // rust/tests/; here we only test input validation against a parsed
+    // manifest without touching PJRT.
+    #[test]
+    fn tensor_ref_is_cheap() {
+        let d = vec![1i32, 2, 3, 4];
+        let t = TensorRef::new(&d, &[2, 2]);
+        assert_eq!(t.data.len(), 4);
+        assert_eq!(t.shape, &[2, 2]);
+    }
+}

@@ -1,0 +1,13 @@
+//! The AOT runtime: manifest-driven loading and PJRT execution of the
+//! `artifacts/*.hlo.txt` modules produced by `python/compile/aot.py`.
+//!
+//! Pattern (from /opt/xla-example/load_hlo): `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! Compilation happens once per artifact per process; the request path
+//! only executes.
+
+pub mod artifact;
+pub mod executor;
+
+pub use artifact::{ArtifactMeta, Manifest, TensorMeta};
+pub use executor::{ExecStats, Runtime, TensorRef};

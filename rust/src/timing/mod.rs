@@ -1,0 +1,16 @@
+//! Analytic performance model: assembles the substrate's ISA, pipeline,
+//! DMA, and transfer mechanisms into per-phase modeled times.
+//!
+//! The paper's figures are regenerated from this model at full machine
+//! scale (608-2,432 DPUs) while functional execution runs on small
+//! machines through the AOT executables — see DESIGN.md §7 for the
+//! functional-vs-timing split.
+
+pub mod model;
+pub mod profile;
+
+pub use model::{
+    choose_reduce_variant, eager_zip_kernel, map_kernel, reduce_kernel, DmaPolicy,
+    KernelTiming, ReduceVariant,
+};
+pub use profile::{KernelProfile, OptFlags, UNROLL_DEPTH};

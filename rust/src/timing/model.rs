@@ -1,0 +1,361 @@
+//! The per-DPU kernel timing model: profile x flags x machine -> seconds.
+//!
+//! Composes the substrate mechanisms: per-element issue slots from the
+//! ISA table ([`crate::pim::isa`]), issue throughput from the pipeline
+//! occupancy model ([`crate::pim::pipeline`]), and WRAM<->MRAM streaming
+//! cost from the DMA model ([`crate::pim::dma`]).  Compute and DMA
+//! overlap (the DMA engine runs while other tasklets issue), so a launch
+//! costs `max(issue, dma)` cycles — the classic roofline composition.
+
+use crate::coordinator::planner::stream_batch_bytes;
+use crate::coordinator::scheduler;
+use crate::pim::{dma, pipeline, PimConfig};
+
+use super::profile::{KernelProfile, OptFlags};
+
+/// How the kernel sizes its WRAM<->MRAM transfers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DmaPolicy {
+    /// §4.3.5: planner-chosen batch from element size + WRAM budget.
+    Dynamic,
+    /// Hard-coded batch size (what hand-written kernels typically do).
+    Fixed(u64),
+    /// One element per transfer (common in quick ports of ML kernels
+    /// with small rows).
+    PerElement,
+}
+
+/// Result of modeling one kernel launch on one DPU.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelTiming {
+    /// Wall-clock seconds for the slowest DPU.
+    pub seconds: f64,
+    /// Issue (compute) cycles.
+    pub issue_cycles: f64,
+    /// DMA cycles.
+    pub dma_cycles: f64,
+    /// Tasklets actually running (may be below the request under WRAM
+    /// pressure — Fig. 11).
+    pub active_tasklets: u32,
+    /// Streaming batch size used.
+    pub batch_bytes: u64,
+}
+
+fn resolve_batch(
+    cfg: &PimConfig,
+    profile: &KernelProfile,
+    opts: &OptFlags,
+    policy: DmaPolicy,
+    tasklets: u32,
+    buffers: u64,
+) -> u64 {
+    if opts.dynamic_transfer_size {
+        return stream_batch_bytes(cfg, profile.elem_bytes, tasklets, buffers);
+    }
+    match policy {
+        DmaPolicy::Dynamic => stream_batch_bytes(cfg, profile.elem_bytes, tasklets, buffers),
+        DmaPolicy::Fixed(b) => b.clamp(cfg.dma_align, cfg.dma_max_bytes),
+        DmaPolicy::PerElement => {
+            crate::util::round_up(profile.elem_bytes, cfg.dma_align).min(cfg.dma_max_bytes)
+        }
+    }
+}
+
+/// Model a map-style launch: stream `elems` elements through WRAM,
+/// apply the element function, stream results back.
+pub fn map_kernel(
+    cfg: &PimConfig,
+    profile: &KernelProfile,
+    opts: &OptFlags,
+    policy: DmaPolicy,
+    elems: u64,
+    tasklets: u32,
+) -> KernelTiming {
+    let active = tasklets.min(cfg.max_tasklets);
+    // Buffers: input window(s) + output window, double-buffered.
+    let buffers = if profile.bytes_out > 0.0 { 3 } else { 2 };
+    let batch = resolve_batch(cfg, profile, opts, policy, active, buffers);
+
+    let slots = profile.per_elem_mix(opts).total_slots() * elems as f64;
+    let issue = pipeline::cycles(cfg, slots, active);
+
+    let bytes_in = (profile.bytes_in * elems as f64) as u64;
+    let bytes_out = (profile.bytes_out * elems as f64) as u64;
+    let dma_cycles =
+        dma::stream_cycles(cfg, bytes_in, batch) + dma::stream_cycles(cfg, bytes_out, batch);
+
+    let cycles = issue.max(dma_cycles);
+    KernelTiming {
+        seconds: cycles / cfg.freq_hz,
+        issue_cycles: issue,
+        dma_cycles,
+        active_tasklets: active,
+        batch_bytes: batch,
+    }
+}
+
+/// The two in-scratchpad reduction variants (paper §4.2.2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ReduceVariant {
+    /// One shared output array + one lock per entry.
+    SharedAcc,
+    /// One private output array per tasklet, ring-merged at the end.
+    PrivateAcc,
+}
+
+/// Model a general-reduction launch with an `output_len`-entry
+/// accumulator of `type_size`-byte entries.
+pub fn reduce_kernel(
+    cfg: &PimConfig,
+    profile: &KernelProfile,
+    opts: &OptFlags,
+    policy: DmaPolicy,
+    elems: u64,
+    tasklets: u32,
+    output_len: u64,
+    type_size: u64,
+    variant: ReduceVariant,
+) -> KernelTiming {
+    let requested = tasklets.min(cfg.max_tasklets);
+    let probe_batch = resolve_batch(cfg, profile, opts, policy, requested, 2);
+
+    let (active, extra_per_elem, tail_slots) = match variant {
+        ReduceVariant::SharedAcc => {
+            // Full thread count; a lock acquire/release pair guards every
+            // accumulator update.
+            let lock = crate::pim::slots(crate::pim::Op::LockPair) as f64;
+            (requested, lock, 0.0)
+        }
+        ReduceVariant::PrivateAcc => {
+            let active = scheduler::private_reduce_active_tasklets(
+                cfg, requested, output_len, type_size, probe_batch,
+            );
+            // Final ring-merge: each of the `active` threads adds one
+            // private array into the shared result (barriered rounds).
+            let merge_ops = output_len as f64
+                * (3.0 /* load+add+store */)
+                * (active.saturating_sub(1)) as f64;
+            let barriers =
+                crate::pim::slots(crate::pim::Op::Barrier) as f64 * active as f64 * 2.0;
+            (active, 0.0, merge_ops + barriers)
+        }
+    };
+
+    let batch = resolve_batch(cfg, profile, opts, policy, active, 2);
+    let mut mix = profile.per_elem_mix(opts);
+    mix.lock_pair += extra_per_elem / crate::pim::slots(crate::pim::Op::LockPair) as f64;
+    let slots = mix.total_slots() * elems as f64 + tail_slots;
+    let issue = pipeline::cycles(cfg, slots, active);
+
+    let bytes_in = (profile.bytes_in * elems as f64) as u64;
+    // Output writeback: once per launch, not per element.
+    let out_bytes = crate::util::round_up(output_len * type_size, cfg.dma_align);
+    let dma_cycles = dma::stream_cycles(cfg, bytes_in, batch)
+        + dma::stream_cycles(cfg, out_bytes, batch.min(cfg.dma_max_bytes));
+
+    let cycles = issue.max(dma_cycles);
+    KernelTiming {
+        seconds: cycles / cfg.freq_hz,
+        issue_cycles: issue,
+        dma_cycles,
+        active_tasklets: active,
+        batch_bytes: batch,
+    }
+}
+
+/// Pick the faster reduction variant (the framework's automatic choice,
+/// paper §4.2.2: "automatically chooses an appropriate in-scratchpad
+/// reduction variant based on the array sizes and data types").
+pub fn choose_reduce_variant(
+    cfg: &PimConfig,
+    profile: &KernelProfile,
+    opts: &OptFlags,
+    policy: DmaPolicy,
+    elems: u64,
+    tasklets: u32,
+    output_len: u64,
+    type_size: u64,
+) -> ReduceVariant {
+    let shared = reduce_kernel(
+        cfg, profile, opts, policy, elems, tasklets, output_len, type_size,
+        ReduceVariant::SharedAcc,
+    );
+    let private = reduce_kernel(
+        cfg, profile, opts, policy, elems, tasklets, output_len, type_size,
+        ReduceVariant::PrivateAcc,
+    );
+    if private.seconds <= shared.seconds {
+        ReduceVariant::PrivateAcc
+    } else {
+        ReduceVariant::SharedAcc
+    }
+}
+
+/// Extra launch cost of an *eager* zip: one full streaming pass reading
+/// both inputs and writing the combined array (what you pay when
+/// `lazy_zip` is off — paper §4.2.3, ">2x" on vector addition).
+pub fn eager_zip_kernel(
+    cfg: &PimConfig,
+    elem_bytes: u64,
+    opts: &OptFlags,
+    policy: DmaPolicy,
+    elems: u64,
+    tasklets: u32,
+) -> KernelTiming {
+    let profile = KernelProfile {
+        compute: Default::default(),
+        wram_loads: 2.0,
+        wram_stores: 2.0,
+        addr_calcs: 1.0,
+        loop_ops: 1.0,
+        has_user_fn: false,
+        bytes_in: 2.0 * elem_bytes as f64,
+        bytes_out: 2.0 * elem_bytes as f64,
+        elem_bytes,
+    };
+    map_kernel(cfg, &profile, opts, policy, elems, tasklets)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::InstrMix;
+
+    fn cfg() -> PimConfig {
+        PimConfig::upmem(64)
+    }
+
+    fn vecadd_like() -> KernelProfile {
+        KernelProfile {
+            compute: InstrMix { ialu: 1.0, ..Default::default() },
+            wram_loads: 2.0,
+            wram_stores: 1.0,
+            addr_calcs: 1.0,
+            loop_ops: 1.0,
+            has_user_fn: true,
+            bytes_in: 8.0,
+            bytes_out: 4.0,
+            elem_bytes: 4,
+        }
+    }
+
+    fn hist_like() -> KernelProfile {
+        KernelProfile {
+            compute: InstrMix { ialu: 1.0, shift: 2.0, ..Default::default() },
+            wram_loads: 2.0,
+            wram_stores: 1.0,
+            addr_calcs: 1.0,
+            loop_ops: 1.0,
+            has_user_fn: true,
+            bytes_in: 4.0,
+            bytes_out: 0.0,
+            elem_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn map_time_scales_linearly_with_elems() {
+        let c = cfg();
+        let p = vecadd_like();
+        let o = OptFlags::simplepim();
+        let t1 = map_kernel(&c, &p, &o, DmaPolicy::Dynamic, 1 << 20, 12).seconds;
+        let t2 = map_kernel(&c, &p, &o, DmaPolicy::Dynamic, 1 << 21, 12).seconds;
+        assert!((t2 / t1 - 2.0).abs() < 0.05);
+    }
+
+    #[test]
+    fn boundary_checks_cost_roughly_ten_percent_on_vecadd() {
+        // Paper §4.3: "more than 10% performance degradation due to
+        // boundary checks for the vector addition application".
+        let c = cfg();
+        let p = vecadd_like();
+        let good = map_kernel(&c, &p, &OptFlags::simplepim(), DmaPolicy::Dynamic, 1 << 20, 12);
+        let mut o = OptFlags::simplepim();
+        o.avoid_boundary_checks = false;
+        let bad = map_kernel(&c, &p, &o, DmaPolicy::Dynamic, 1 << 20, 12);
+        let ratio = bad.seconds / good.seconds;
+        assert!((1.05..1.6).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn uninlined_user_fn_kills_vecadd() {
+        // Paper §4.3: inlining improves vector addition by more than 2x.
+        let c = cfg();
+        let p = vecadd_like();
+        let good = map_kernel(&c, &p, &OptFlags::simplepim(), DmaPolicy::Dynamic, 1 << 20, 12);
+        let mut o = OptFlags::simplepim();
+        o.inline_functions = false;
+        let bad = map_kernel(&c, &p, &o, DmaPolicy::Dynamic, 1 << 20, 12);
+        assert!(bad.seconds / good.seconds > 2.0);
+    }
+
+    #[test]
+    fn fixed_small_transfers_hurt() {
+        let c = cfg();
+        let p = vecadd_like();
+        let mut o = OptFlags::simplepim();
+        o.dynamic_transfer_size = false;
+        let small = map_kernel(&c, &p, &o, DmaPolicy::Fixed(64), 1 << 20, 12);
+        let good = map_kernel(&c, &p, &OptFlags::simplepim(), DmaPolicy::Dynamic, 1 << 20, 12);
+        assert!(small.seconds > good.seconds);
+        // The planner picks a large batch (capped by WRAM share or the
+        // 2,048-byte DMA ceiling).
+        assert!(good.batch_bytes >= 1024, "batch {}", good.batch_bytes);
+    }
+
+    #[test]
+    fn private_variant_faster_at_few_bins_slower_at_many() {
+        // The Fig. 11 crossover.
+        let c = cfg();
+        let p = hist_like();
+        let o = OptFlags::simplepim();
+        let n = 1_572_864u64;
+        let t = |bins: u64, v: ReduceVariant| {
+            reduce_kernel(&c, &p, &o, DmaPolicy::Dynamic, n, 12, bins, 4, v).seconds
+        };
+        assert!(
+            t(256, ReduceVariant::PrivateAcc) < t(256, ReduceVariant::SharedAcc),
+            "private wins at 256 bins"
+        );
+        assert!(
+            t(4096, ReduceVariant::SharedAcc) < t(4096, ReduceVariant::PrivateAcc),
+            "shared wins at 4096 bins"
+        );
+        assert_eq!(
+            choose_reduce_variant(&c, &p, &o, DmaPolicy::Dynamic, n, 12, 256, 4),
+            ReduceVariant::PrivateAcc
+        );
+        assert_eq!(
+            choose_reduce_variant(&c, &p, &o, DmaPolicy::Dynamic, n, 12, 4096, 4),
+            ReduceVariant::SharedAcc
+        );
+    }
+
+    #[test]
+    fn private_active_threads_follow_ladder() {
+        let c = cfg();
+        let p = hist_like();
+        let o = OptFlags::simplepim();
+        let at = |bins: u64| {
+            reduce_kernel(
+                &c, &p, &o, DmaPolicy::Dynamic, 1 << 20, 12, bins, 4,
+                ReduceVariant::PrivateAcc,
+            )
+            .active_tasklets
+        };
+        assert_eq!(at(256), 12);
+        assert!(at(1024) < 12);
+        assert!(at(4096) <= 4);
+    }
+
+    #[test]
+    fn eager_zip_is_expensive() {
+        // Paper §4.2.3: lazy zipping improves vector addition by >2x; the
+        // eager pass alone must therefore rival the fused map's cost.
+        let c = cfg();
+        let o = OptFlags::simplepim();
+        let zip = eager_zip_kernel(&c, 4, &o, DmaPolicy::Dynamic, 1 << 20, 12);
+        let map = map_kernel(&c, &vecadd_like(), &o, DmaPolicy::Dynamic, 1 << 20, 12);
+        assert!(zip.seconds > 0.8 * map.seconds);
+    }
+}

@@ -1,0 +1,181 @@
+//! Kernel instruction profiles and the optimization-flag set.
+//!
+//! A [`KernelProfile`] describes a workload's inner loop in
+//! per-input-element terms: the application-logic instruction mix, the
+//! address-arithmetic operations (shifts when strength-reduced,
+//! full multiplies otherwise), and loop bookkeeping.  [`OptFlags`]
+//! toggles the five §4.3 code optimizations; the model in
+//! [`super::model`] expands a profile under a flag set into total issue
+//! slots + DMA traffic.
+//!
+//! SimplePIM implementations run with [`OptFlags::simplepim()`] (all
+//! on).  Each hand-optimized baseline runs with the flag set matching
+//! what the corresponding PrIM / pim-ml code actually does — see
+//! `workloads/baseline/` for the per-workload justification.
+
+use crate::pim::InstrMix;
+
+/// The §4.3 programmer-transparent code optimizations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct OptFlags {
+    /// §4.3.1 — replace offset multiplies with shifts when the element
+    /// size is a power of two.
+    pub strength_reduction: bool,
+    /// §4.3.2 — unroll the inner loop (bounded depth; fewer counter
+    /// increments and branches).
+    pub loop_unrolling: bool,
+    /// §4.3.3 — pre-partition evenly + separate trailing part instead of
+    /// a boundary check every iteration.
+    pub avoid_boundary_checks: bool,
+    /// §4.3.4 — compile the programmer function into the iterator
+    /// (no call/return per element).
+    pub inline_functions: bool,
+    /// §4.3.5 — size WRAM<->MRAM batches from the data type and WRAM
+    /// budget instead of a hard-coded constant.
+    pub dynamic_transfer_size: bool,
+    /// §4.2.3 — lazy zip: stream both inputs in one loop instead of
+    /// materializing the zipped array first.
+    pub lazy_zip: bool,
+}
+
+impl OptFlags {
+    /// Everything on — what the framework emits.
+    pub fn simplepim() -> Self {
+        OptFlags {
+            strength_reduction: true,
+            loop_unrolling: true,
+            avoid_boundary_checks: true,
+            inline_functions: true,
+            dynamic_transfer_size: true,
+            lazy_zip: true,
+        }
+    }
+
+    /// Everything off — a naive first port (used by the ablation bench,
+    /// not by the paper baselines, which are hand-*optimized*).
+    pub fn naive() -> Self {
+        OptFlags {
+            strength_reduction: false,
+            loop_unrolling: false,
+            avoid_boundary_checks: false,
+            inline_functions: false,
+            dynamic_transfer_size: false,
+            lazy_zip: false,
+        }
+    }
+}
+
+/// Unrolling depth when `loop_unrolling` is on (bounded by the 24 KB
+/// IRAM; paper: "limited unrolling depth").
+pub const UNROLL_DEPTH: f64 = 8.0;
+
+/// Per-element description of a kernel's inner loop.
+#[derive(Debug, Clone, Copy)]
+pub struct KernelProfile {
+    /// Application logic per element (the map/acc functions), excluding
+    /// loads/stores of the element itself.
+    pub compute: InstrMix,
+    /// WRAM loads per element (element fetch + operand reloads).
+    pub wram_loads: f64,
+    /// WRAM stores per element.
+    pub wram_stores: f64,
+    /// Address computations per element that strength-reduce to shifts.
+    pub addr_calcs: f64,
+    /// Loop-counter + branch operations per element (before unrolling).
+    pub loop_ops: f64,
+    /// Whether the per-element logic is a programmer-defined function
+    /// (inlinable) — true for all SimplePIM iterators.
+    pub has_user_fn: bool,
+    /// Bytes streamed MRAM->WRAM per element.
+    pub bytes_in: f64,
+    /// Bytes streamed WRAM->MRAM per element (0 for reductions, whose
+    /// output writeback is amortized).
+    pub bytes_out: f64,
+    /// Logical element size in bytes (DMA batch planning unit).
+    pub elem_bytes: u64,
+}
+
+impl KernelProfile {
+    /// Expand to the effective per-element instruction mix under `opts`.
+    pub fn per_elem_mix(&self, opts: &OptFlags) -> InstrMix {
+        let mut m = self.compute;
+        m.load += self.wram_loads;
+        m.store += self.wram_stores;
+        if opts.strength_reduction {
+            m.shift += self.addr_calcs;
+        } else {
+            m.imul32 += self.addr_calcs;
+        }
+        let unroll = if opts.loop_unrolling { UNROLL_DEPTH } else { 1.0 };
+        // Loop bookkeeping: one add (counter) + one branch per iteration,
+        // amortized over the unroll depth.
+        m.ialu += self.loop_ops / unroll;
+        m.branch += self.loop_ops / unroll;
+        if !opts.avoid_boundary_checks {
+            // A compare + branch on the index every iteration.
+            m.ialu += 1.0;
+            m.branch += 1.0;
+        }
+        if self.has_user_fn && !opts.inline_functions {
+            m.call_ret += 1.0;
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn profile() -> KernelProfile {
+        KernelProfile {
+            compute: InstrMix { ialu: 1.0, ..Default::default() },
+            wram_loads: 2.0,
+            wram_stores: 1.0,
+            addr_calcs: 1.0,
+            loop_ops: 1.0,
+            has_user_fn: true,
+            bytes_in: 8.0,
+            bytes_out: 4.0,
+            elem_bytes: 4,
+        }
+    }
+
+    #[test]
+    fn all_optimizations_reduce_slots() {
+        let p = profile();
+        let best = p.per_elem_mix(&OptFlags::simplepim()).total_slots();
+        let worst = p.per_elem_mix(&OptFlags::naive()).total_slots();
+        assert!(worst > 2.0 * best, "naive {worst} vs simplepim {best}");
+    }
+
+    #[test]
+    fn each_flag_matters() {
+        let p = profile();
+        let base = p.per_elem_mix(&OptFlags::simplepim()).total_slots();
+        for f in 0..5 {
+            let mut o = OptFlags::simplepim();
+            match f {
+                0 => o.strength_reduction = false,
+                1 => o.loop_unrolling = false,
+                2 => o.avoid_boundary_checks = false,
+                3 => o.inline_functions = false,
+                _ => o.lazy_zip = false, // no slot effect (DMA effect only)
+            }
+            let s = p.per_elem_mix(&o).total_slots();
+            if f < 4 {
+                assert!(s > base, "flag {f} should cost slots: {s} vs {base}");
+            } else {
+                assert_eq!(s, base);
+            }
+        }
+    }
+
+    #[test]
+    fn inlining_only_applies_to_user_fns() {
+        let mut p = profile();
+        p.has_user_fn = false;
+        let with = p.per_elem_mix(&OptFlags::naive());
+        assert_eq!(with.call_ret, 0.0);
+    }
+}

@@ -1,0 +1,53 @@
+//! Small self-contained utilities (JSON reader, PRNG, alignment helpers).
+
+pub mod json;
+pub mod prng;
+
+/// Round `n` up to the next multiple of `align` (`align` must be > 0).
+pub fn round_up(n: u64, align: u64) -> u64 {
+    debug_assert!(align > 0);
+    n.div_ceil(align) * align
+}
+
+/// Round `n` down to a multiple of `align`.
+pub fn round_down(n: u64, align: u64) -> u64 {
+    debug_assert!(align > 0);
+    n / align * align
+}
+
+/// Least common multiple of two positive integers.
+pub fn lcm(a: u64, b: u64) -> u64 {
+    a / gcd(a, b) * b
+}
+
+/// Greatest common divisor (Euclid).
+pub fn gcd(a: u64, b: u64) -> u64 {
+    let (mut a, mut b) = (a, b);
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rounding() {
+        assert_eq!(round_up(0, 8), 0);
+        assert_eq!(round_up(1, 8), 8);
+        assert_eq!(round_up(8, 8), 8);
+        assert_eq!(round_up(9, 8), 16);
+        assert_eq!(round_down(15, 8), 8);
+        assert_eq!(round_down(16, 8), 16);
+    }
+
+    #[test]
+    fn gcd_lcm() {
+        assert_eq!(gcd(12, 18), 6);
+        assert_eq!(lcm(4, 6), 12);
+        assert_eq!(lcm(8, 8), 8);
+        assert_eq!(lcm(3, 7), 21);
+    }
+}

@@ -1,0 +1,118 @@
+//! Hand-optimized histogram (PrIM HST-L style, cf. paper Listing 1):
+//! per-tasklet private histograms in WRAM, explicit batching with the
+//! in-loop boundary check, tasklet merge, chunked `mram_write` of the
+//! result honoring the 2,048-byte DMA cap.
+
+use crate::error::Result;
+use crate::pim::sdk::launch_on_all;
+use crate::pim::PimMachine;
+
+// loc:begin baseline histogram
+const BLOCK: u64 = 2048;
+const NR_TASKLETS: u64 = 12;
+
+/// Host + device code for a hand-written 12-bit-value histogram.
+pub fn run(machine: &mut PimMachine, pixels: &[i32], bins: u32) -> Result<Vec<i32>> {
+    let n_dpus = machine.n_dpus() as u64;
+    let total = pixels.len() as u64;
+    let per_dpu = total.div_ceil(n_dpus).div_ceil(2) * 2;
+    let buf_bytes = per_dpu * 4;
+    let hist_bytes = (bins as u64 * 4).div_ceil(8) * 8;
+    let addr_in = machine.alloc(buf_bytes)?;
+    let addr_hist = machine.alloc(hist_bytes)?;
+    let mut bufs = Vec::new();
+    for d in 0..n_dpus {
+        let lo = (d * per_dpu).min(total) as usize;
+        let hi = ((d + 1) * per_dpu).min(total) as usize;
+        let mut b = vec![0xFFu8; buf_bytes as usize]; // pad = -1 (no bin)
+        for (i, v) in pixels[lo..hi].iter().enumerate() {
+            b[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        bufs.push(b);
+    }
+    machine.push_parallel(addr_in, &bufs)?;
+
+    launch_on_all(machine, |ctx| {
+        let input_buff = ctx.wram.mem_alloc(BLOCK as usize)?;
+        // Tasklet-private histograms (HST-L), merged by tasklet 0.
+        let mut histos = vec![vec![0i32; bins as usize]; NR_TASKLETS as usize];
+        for tasklet_id in 0..NR_TASKLETS {
+            let histo = &mut histos[tasklet_id as usize];
+            let mut byte_index = tasklet_id * BLOCK;
+            while byte_index < buf_bytes {
+                // Boundary checking (Listing 1, line 11).
+                let l_size = if byte_index + BLOCK >= buf_bytes {
+                    buf_bytes - byte_index
+                } else {
+                    BLOCK
+                };
+                ctx.mram_read(addr_in + byte_index, input_buff, l_size)?;
+                for d in ctx.wram.as_i32(input_buff, (l_size / 4) as usize) {
+                    let b = d.wrapping_mul(bins as i32) >> 12;
+                    if b >= 0 && (b as u32) < bins {
+                        histo[b as usize] = histo[b as usize].wrapping_add(1);
+                    }
+                }
+                byte_index += NR_TASKLETS * BLOCK;
+            }
+        }
+        // barrier_wait(); merge tasklet histograms into histo_dpu.
+        let mut histo_dpu = vec![0i32; bins as usize];
+        for h in &histos {
+            for (acc, v) in histo_dpu.iter_mut().zip(h) {
+                *acc = acc.wrapping_add(*v);
+            }
+        }
+        // Write result honoring the 2,048-byte transfer limit
+        // (Listing 1, lines 23-30).
+        let out = ctx.wram.mem_alloc(hist_bytes as usize)?;
+        ctx.wram.write_i32(out, &histo_dpu);
+        if hist_bytes <= 2048 {
+            ctx.mram_write(out, addr_hist, hist_bytes)?;
+        } else {
+            let mut offset = 0u64;
+            while offset < hist_bytes {
+                let l = (hist_bytes - offset).min(2048);
+                ctx.mram_write(out + offset as usize, addr_hist + offset, l)?;
+                offset += l;
+            }
+        }
+        Ok(())
+    })?;
+
+    // Host: gather per-DPU histograms and merge.
+    let bufs = machine.pull_parallel(addr_hist, hist_bytes, n_dpus as usize)?;
+    let mut out = vec![0i32; bins as usize];
+    for b in &bufs {
+        for (i, acc) in out.iter_mut().enumerate() {
+            let v = i32::from_le_bytes(b[i * 4..i * 4 + 4].try_into().unwrap());
+            *acc = acc.wrapping_add(v);
+        }
+    }
+    machine.free(addr_in)?;
+    machine.free(addr_hist)?;
+    Ok(out)
+}
+// loc:end baseline histogram
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::PimConfig;
+    use crate::util::prng::Prng;
+    use crate::workloads::golden;
+
+    #[test]
+    fn matches_golden_256_bins() {
+        let mut m = PimMachine::new(PimConfig::tiny(4));
+        let px = Prng::new(1).vec_i32(40_001, 0, 4096);
+        assert_eq!(run(&mut m, &px, 256).unwrap(), golden::histogram(&px, 256));
+    }
+
+    #[test]
+    fn matches_golden_4096_bins_chunked_writeback() {
+        let mut m = PimMachine::new(PimConfig::tiny(2));
+        let px = Prng::new(2).vec_i32(10_000, 0, 4096);
+        assert_eq!(run(&mut m, &px, 4096).unwrap(), golden::histogram(&px, 4096));
+    }
+}

@@ -1,0 +1,165 @@
+//! Hand-optimized K-means (pim-ml style): centroids broadcast, points
+//! scattered row-major, per-DPU sum/count partials, centroid update on
+//! the host.  The inner k x d loop computes row offsets with integer
+//! *multiplies* (`c * dim + j` on a machine without a fast multiplier —
+//! the paper's §4.3 optimization-1 example) and keeps per-centroid
+//! bounds checks.
+
+use crate::error::Result;
+use crate::pim::sdk::launch_on_all;
+use crate::pim::PimMachine;
+
+// loc:begin baseline kmeans
+const NR_TASKLETS: u64 = 12;
+const PTS_PER_XFER: u64 = 16;
+
+/// Host + device code for one hand-written K-means iteration.
+/// Returns updated centroids.
+pub fn iterate(
+    machine: &mut PimMachine,
+    x: &[i32],
+    centroids: &[i32],
+    k: usize,
+    dim: usize,
+) -> Result<Vec<i32>> {
+    let n_dpus = machine.n_dpus() as u64;
+    let total = (x.len() / dim) as u64;
+    let per_dpu = total.div_ceil(n_dpus).div_ceil(2) * 2;
+    let row_bytes = (dim as u64) * 4;
+    let x_bytes = per_dpu * row_bytes;
+    let c_bytes = ((k * dim) as u64 * 4).div_ceil(8) * 8;
+    let part_len = k * dim + k; // sums | counts
+    let part_bytes = (part_len as u64 * 4).div_ceil(8) * 8;
+    let addr_x = machine.alloc(x_bytes)?;
+    let addr_c = machine.alloc(c_bytes)?;
+    let addr_p = machine.alloc(part_bytes)?;
+    let mut bx = Vec::new();
+    let mut counts_valid = Vec::new();
+    for d in 0..n_dpus {
+        let lo = (d * per_dpu).min(total) as usize;
+        let hi = ((d + 1) * per_dpu).min(total) as usize;
+        counts_valid.push((hi - lo) as u64);
+        let mut rx = vec![0u8; x_bytes as usize];
+        for (i, v) in x[lo * dim..hi * dim].iter().enumerate() {
+            rx[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        bx.push(rx);
+    }
+    machine.push_parallel(addr_x, &bx)?;
+    let mut cb = vec![0u8; c_bytes as usize];
+    for (i, v) in centroids.iter().enumerate() {
+        cb[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+    machine.push_broadcast(addr_c, &cb)?;
+
+    let valid = counts_valid.clone();
+    launch_on_all(machine, |ctx| {
+        let n_valid = valid[ctx.dpu];
+        let xfer_x = (PTS_PER_XFER * row_bytes).min(2048).div_ceil(8) * 8;
+        let buf_x = ctx.wram.mem_alloc(xfer_x as usize)?;
+        let buf_c = ctx.wram.mem_alloc(c_bytes as usize)?;
+        ctx.mram_read(addr_c, buf_c, c_bytes)?;
+        let cents = ctx.wram.as_i32(buf_c, k * dim);
+        let mut sums = vec![0i32; k * dim];
+        let mut counts = vec![0i32; k];
+        for tasklet_id in 0..NR_TASKLETS {
+            let mut p = tasklet_id * PTS_PER_XFER;
+            while p < n_valid {
+                let pts = if p + PTS_PER_XFER >= n_valid { n_valid - p } else { PTS_PER_XFER };
+                let xb = (pts * row_bytes).div_ceil(8) * 8;
+                ctx.mram_read(addr_x + p * row_bytes, buf_x, xb)?;
+                let rows = ctx.wram.as_i32(buf_x, (pts as usize) * dim);
+                for i in 0..pts as usize {
+                    let row = &rows[i * dim..(i + 1) * dim];
+                    let mut best = 0usize;
+                    let mut best_dist = i32::MAX;
+                    for c in 0..k {
+                        // Multiply-based row offset (no strength
+                        // reduction) + bounds check per centroid.
+                        let base = c * dim;
+                        let mut dist = 0i32;
+                        for j in 0..dim {
+                            let diff = row[j].wrapping_sub(cents[base + j]);
+                            dist = dist.wrapping_add(diff.wrapping_mul(diff));
+                        }
+                        if dist < best_dist {
+                            best_dist = dist;
+                            best = c;
+                        }
+                    }
+                    for j in 0..dim {
+                        sums[best * dim + j] = sums[best * dim + j].wrapping_add(row[j]);
+                    }
+                    counts[best] = counts[best].wrapping_add(1);
+                }
+                p += NR_TASKLETS * PTS_PER_XFER;
+            }
+        }
+        // barrier_wait(); tasklet 0 writes [sums | counts].
+        let out = ctx.wram.mem_alloc(part_bytes as usize)?;
+        let mut packed = sums;
+        packed.extend_from_slice(&counts);
+        ctx.wram.write_i32(out, &packed);
+        if part_bytes <= 2048 {
+            ctx.mram_write(out, addr_p, part_bytes)?;
+        } else {
+            let mut off = 0u64;
+            while off < part_bytes {
+                let l = (part_bytes - off).min(2048);
+                ctx.mram_write(out + off as usize, addr_p + off, l)?;
+                off += l;
+            }
+        }
+        Ok(())
+    })?;
+
+    // Host: merge partials and divide.
+    let bufs = machine.pull_parallel(addr_p, part_bytes, n_dpus as usize)?;
+    let mut packed = vec![0i64; part_len];
+    for b in &bufs {
+        for (i, acc) in packed.iter_mut().enumerate() {
+            *acc += i32::from_le_bytes(b[i * 4..i * 4 + 4].try_into().unwrap()) as i64;
+        }
+    }
+    let mut next = centroids.to_vec();
+    for c in 0..k {
+        let count = packed[k * dim + c];
+        if count > 0 {
+            for j in 0..dim {
+                next[c * dim + j] = (packed[c * dim + j] / count) as i32;
+            }
+        }
+    }
+    for a in [addr_x, addr_c, addr_p] {
+        machine.free(a)?;
+    }
+    Ok(next)
+}
+// loc:end baseline kmeans
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::PimConfig;
+    use crate::workloads::{golden, kmeans};
+
+    #[test]
+    fn one_iteration_matches_golden_update() {
+        let mut m = PimMachine::new(PimConfig::tiny(4));
+        let (x, _) = kmeans::generate(51, 800, 10, 10);
+        let c0: Vec<i32> = x[..100].to_vec();
+        let got = iterate(&mut m, &x, &c0, 10, 10).unwrap();
+        // Golden: merge per-point partials the same way.
+        let packed = golden::kmeans_partial(&x, &c0, 10, 10);
+        let mut want = c0.clone();
+        for c in 0..10 {
+            let count = packed[100 + c];
+            if count > 0 {
+                for j in 0..10 {
+                    want[c * 10 + j] = packed[c * 10 + j] / count;
+                }
+            }
+        }
+        assert_eq!(got, want);
+    }
+}

@@ -1,0 +1,158 @@
+//! Hand-optimized logistic regression (pim-ml style): like linreg but
+//! with the Taylor sigmoid in a *separate helper function* (the
+//! original keeps it un-inlined across the compilation boundary — the
+//! §4.3 optimization-4 deficiency), hard-coded transfer sizes, and the
+//! boundary check in the point loop.
+
+use crate::error::Result;
+use crate::pim::sdk::launch_on_all;
+use crate::pim::PimMachine;
+use crate::workloads::fixed::{FRAC, HALF, INV48, ONE, SIG_CLAMP};
+
+// loc:begin baseline logreg
+const NR_TASKLETS: u64 = 12;
+const PTS_PER_XFER: u64 = 16;
+
+/// Sigmoid helper, kept out-of-line like the original's separate
+/// compilation unit.
+fn sigmoid_taylor(z: i32) -> i32 {
+    let zc = if z > SIG_CLAMP {
+        SIG_CLAMP
+    } else if z < -SIG_CLAMP {
+        -SIG_CLAMP
+    } else {
+        z
+    };
+    let z2 = zc.wrapping_mul(zc) >> FRAC;
+    let z3 = z2.wrapping_mul(zc) >> FRAC;
+    let s = HALF
+        .wrapping_add(zc >> 2)
+        .wrapping_sub(z3.wrapping_mul(INV48) >> FRAC);
+    if s < 0 {
+        0
+    } else if s > ONE {
+        ONE
+    } else {
+        s
+    }
+}
+
+/// Host + device code for one hand-written logistic gradient.
+pub fn gradient(machine: &mut PimMachine, x: &[i32], y: &[i32], w: &[i32]) -> Result<Vec<i32>> {
+    let dim = w.len();
+    let n_dpus = machine.n_dpus() as u64;
+    let total = y.len() as u64;
+    let per_dpu = total.div_ceil(n_dpus).div_ceil(2) * 2;
+    let row_bytes = (dim as u64) * 4;
+    let x_bytes = per_dpu * row_bytes;
+    let y_bytes = per_dpu * 4;
+    let w_bytes = (dim as u64 * 4).div_ceil(8) * 8;
+    let addr_x = machine.alloc(x_bytes)?;
+    let addr_y = machine.alloc(y_bytes)?;
+    let addr_w = machine.alloc(w_bytes)?;
+    let addr_g = machine.alloc(w_bytes)?;
+    let mut bx = Vec::new();
+    let mut by = Vec::new();
+    for d in 0..n_dpus {
+        let lo = (d * per_dpu).min(total) as usize;
+        let hi = ((d + 1) * per_dpu).min(total) as usize;
+        let mut rx = vec![0u8; x_bytes as usize];
+        let mut ry = vec![0u8; y_bytes as usize];
+        for (i, v) in x[lo * dim..hi * dim].iter().enumerate() {
+            rx[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        for (i, v) in y[lo..hi].iter().enumerate() {
+            ry[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        bx.push(rx);
+        by.push(ry);
+    }
+    machine.push_parallel(addr_x, &bx)?;
+    machine.push_parallel(addr_y, &by)?;
+    let mut wb = vec![0u8; w_bytes as usize];
+    for (i, v) in w.iter().enumerate() {
+        wb[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+    }
+    machine.push_broadcast(addr_w, &wb)?;
+
+    launch_on_all(machine, |ctx| {
+        let xfer_x = (PTS_PER_XFER * row_bytes).min(2048).div_ceil(8) * 8;
+        let xfer_y = (PTS_PER_XFER * 4).div_ceil(8) * 8;
+        let buf_x = ctx.wram.mem_alloc(xfer_x as usize)?;
+        let buf_y = ctx.wram.mem_alloc(xfer_y as usize)?;
+        let buf_w = ctx.wram.mem_alloc(w_bytes as usize)?;
+        ctx.mram_read(addr_w, buf_w, w_bytes)?;
+        let weights = ctx.wram.as_i32(buf_w, dim);
+        let mut grad = vec![0i32; dim];
+        for tasklet_id in 0..NR_TASKLETS {
+            let mut p = tasklet_id * PTS_PER_XFER;
+            while p < per_dpu {
+                let pts = if p + PTS_PER_XFER >= per_dpu { per_dpu - p } else { PTS_PER_XFER };
+                let xb = (pts * row_bytes).div_ceil(8) * 8;
+                let yb = (pts * 4).div_ceil(8) * 8;
+                ctx.mram_read(addr_x + p * row_bytes, buf_x, xb)?;
+                ctx.mram_read(addr_y + p * 4, buf_y, yb)?;
+                let rows = ctx.wram.as_i32(buf_x, (pts as usize) * dim);
+                let ys = ctx.wram.as_i32(buf_y, pts as usize);
+                for i in 0..pts as usize {
+                    let row = &rows[i * dim..(i + 1) * dim];
+                    let mut dot = 0i32;
+                    for j in 0..dim {
+                        dot = dot.wrapping_add(row[j].wrapping_mul(weights[j]));
+                    }
+                    let s = sigmoid_taylor(dot >> FRAC);
+                    let err = s.wrapping_sub(ys[i]);
+                    for j in 0..dim {
+                        grad[j] = grad[j].wrapping_add(err.wrapping_mul(row[j]) >> FRAC);
+                    }
+                }
+                p += NR_TASKLETS * PTS_PER_XFER;
+            }
+        }
+        let out = ctx.wram.mem_alloc(w_bytes as usize)?;
+        ctx.wram.write_i32(out, &grad);
+        ctx.mram_write(out, addr_g, w_bytes)?;
+        Ok(())
+    })?;
+
+    let bufs = machine.pull_parallel(addr_g, w_bytes, n_dpus as usize)?;
+    let mut grad = vec![0i32; dim];
+    for b in &bufs {
+        for (j, acc) in grad.iter_mut().enumerate() {
+            let v = i32::from_le_bytes(b[j * 4..j * 4 + 4].try_into().unwrap());
+            *acc = acc.wrapping_add(v);
+        }
+    }
+    for a in [addr_x, addr_y, addr_w, addr_g] {
+        machine.free(a)?;
+    }
+    Ok(grad)
+}
+// loc:end baseline logreg
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::PimConfig;
+    use crate::workloads::{golden, logreg};
+
+    #[test]
+    fn matches_golden() {
+        let mut m = PimMachine::new(PimConfig::tiny(4));
+        let (x, y, _) = logreg::generate(41, 777, 10);
+        let w: Vec<i32> = (0..10).map(|i| i * 50 - 250).collect();
+        let got = gradient(&mut m, &x, &y, &w).unwrap();
+        assert_eq!(got, golden::logreg_grad(&x, &y, &w, 10));
+    }
+
+    #[test]
+    fn padded_zero_rows_do_not_bias_gradient() {
+        // With y padding 0, a zero row yields sigmoid(0)-0 = HALF error
+        // times a zero feature vector -> zero contribution.
+        let mut m = PimMachine::new(PimConfig::tiny(3));
+        let (x, y, _) = logreg::generate(42, 11, 10); // forces padding
+        let w = vec![0i32; 10];
+        let got = gradient(&mut m, &x, &y, &w).unwrap();
+        assert_eq!(got, golden::logreg_grad(&x, &y, &w, 10));
+    }
+}

@@ -1,0 +1,95 @@
+//! Hand-optimized reduction (PrIM RED style): per-tasklet register
+//! accumulators, explicit batching, tasklet tree-merge through WRAM,
+//! single-value writeback, host-side final combine.
+
+use crate::error::Result;
+use crate::pim::sdk::launch_on_all;
+use crate::pim::PimMachine;
+
+// loc:begin baseline reduction
+const BLOCK: u64 = 2048;
+const NR_TASKLETS: u64 = 12;
+
+/// Host + device code for hand-written reduction (sum).
+pub fn run(machine: &mut PimMachine, x: &[i32]) -> Result<i32> {
+    let n_dpus = machine.n_dpus() as u64;
+    let total = x.len() as u64;
+    let per_dpu = total.div_ceil(n_dpus).div_ceil(2) * 2;
+    let buf_bytes = per_dpu * 4;
+    let addr_in = machine.alloc(buf_bytes)?;
+    let addr_out = machine.alloc(8)?;
+    let mut bufs = Vec::new();
+    for d in 0..n_dpus {
+        let lo = (d * per_dpu).min(total) as usize;
+        let hi = ((d + 1) * per_dpu).min(total) as usize;
+        let mut b = vec![0u8; buf_bytes as usize];
+        for (i, v) in x[lo..hi].iter().enumerate() {
+            b[i * 4..i * 4 + 4].copy_from_slice(&v.to_le_bytes());
+        }
+        bufs.push(b);
+    }
+    machine.push_parallel(addr_in, &bufs)?;
+
+    launch_on_all(machine, |ctx| {
+        let buf = ctx.wram.mem_alloc(BLOCK as usize)?;
+        // Per-tasklet accumulators merged at the end (tree in WRAM).
+        let mut t_acc = [0i32; NR_TASKLETS as usize];
+        for tasklet_id in 0..NR_TASKLETS {
+            let mut acc = 0i32;
+            let mut byte_index = tasklet_id * BLOCK;
+            while byte_index < buf_bytes {
+                let l_size = if byte_index + BLOCK >= buf_bytes {
+                    buf_bytes - byte_index
+                } else {
+                    BLOCK
+                };
+                ctx.mram_read(addr_in + byte_index, buf, l_size)?;
+                for v in ctx.wram.as_i32(buf, (l_size / 4) as usize) {
+                    acc = acc.wrapping_add(v);
+                }
+                byte_index += NR_TASKLETS * BLOCK;
+            }
+            t_acc[tasklet_id as usize] = acc;
+        }
+        // barrier_wait(); tasklet 0 merges.
+        let mut dpu_sum = 0i32;
+        for acc in t_acc {
+            dpu_sum = dpu_sum.wrapping_add(acc);
+        }
+        let out = ctx.wram.mem_alloc(8)?;
+        ctx.wram.write_i32(out, &[dpu_sum, 0]);
+        ctx.mram_write(out, addr_out, 8)?;
+        Ok(())
+    })?;
+
+    // Host: gather the per-DPU partial sums and combine.
+    let bufs = machine.pull_parallel(addr_out, 8, n_dpus as usize)?;
+    let mut sum = 0i32;
+    for b in &bufs {
+        sum = sum.wrapping_add(i32::from_le_bytes(b[..4].try_into().unwrap()));
+    }
+    machine.free(addr_in)?;
+    machine.free(addr_out)?;
+    Ok(sum)
+}
+// loc:end baseline reduction
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::pim::PimConfig;
+    use crate::workloads::golden;
+
+    #[test]
+    fn matches_golden() {
+        let mut m = PimMachine::new(PimConfig::tiny(4));
+        let x: Vec<i32> = (0..99_999).map(|i| (i % 2017) - 1000).collect();
+        assert_eq!(run(&mut m, &x).unwrap(), golden::reduce_sum(&x));
+    }
+
+    #[test]
+    fn wraps_like_i32() {
+        let mut m = PimMachine::new(PimConfig::tiny(2));
+        assert_eq!(run(&mut m, &[i32::MAX, 1]).unwrap(), i32::MIN);
+    }
+}

@@ -1,0 +1,98 @@
+//! Fixed-point arithmetic constants and helpers.
+//!
+//! MUST stay in lock-step with `python/compile/kernels/common.py`: same
+//! `FRAC`, same `INV48`, same clamp.  The cross-language agreement is
+//! verified end-to-end by the integration tests (XLA executable output
+//! vs these functions).
+
+/// Fractional bits of the fixed-point format.
+pub const FRAC: i32 = 10;
+/// 1.0 in fixed point.
+pub const ONE: i32 = 1 << FRAC;
+/// 0.5 in fixed point.
+pub const HALF: i32 = ONE / 2;
+/// round(2^FRAC / 48): the 1/48 Taylor coefficient as a multiplier.
+pub const INV48: i32 = 21;
+/// Sigmoid input clamp: |z| <= 2.0.
+pub const SIG_CLAMP: i32 = 2 * ONE;
+
+/// Fixed-point multiply with i32 wraparound.
+pub fn fxmul(a: i32, b: i32) -> i32 {
+    a.wrapping_mul(b) >> FRAC
+}
+
+/// Taylor-approximated sigmoid on fixed point (paper §5.1, from pim-ml):
+/// `1/2 + z/4 - z^3/48`, clamped — mirrors `common.sigmoid_fixed` and
+/// `ref.sigmoid_fixed_ref` bit-for-bit.
+pub fn sigmoid_fixed(z: i32) -> i32 {
+    let zc = z.clamp(-SIG_CLAMP, SIG_CLAMP);
+    let z2 = zc.wrapping_mul(zc) >> FRAC;
+    let z3 = z2.wrapping_mul(zc) >> FRAC;
+    let s = HALF
+        .wrapping_add(zc >> 2)
+        .wrapping_sub(z3.wrapping_mul(INV48) >> FRAC);
+    s.clamp(0, ONE)
+}
+
+/// Quantize an f64 to fixed point (saturating) — used by data
+/// generators and examples, not by kernels.
+pub fn to_fixed(v: f64) -> i32 {
+    (v * ONE as f64).round().clamp(i32::MIN as f64, i32::MAX as f64) as i32
+}
+
+/// Dequantize fixed point to f64.
+pub fn from_fixed(v: i32) -> f64 {
+    v as f64 / ONE as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constants_match_python() {
+        // Mirror of python/compile/kernels/common.py.
+        assert_eq!(FRAC, 10);
+        assert_eq!(ONE, 1024);
+        assert_eq!(INV48, (ONE as f64 / 48.0).round() as i32);
+        assert_eq!(SIG_CLAMP, 2048);
+    }
+
+    #[test]
+    fn sigmoid_midpoint_and_monotone_region() {
+        assert_eq!(sigmoid_fixed(0), HALF);
+        // Monotone non-decreasing over the clamped region.
+        let mut last = -1;
+        for z in (-SIG_CLAMP..=SIG_CLAMP).step_by(64) {
+            let s = sigmoid_fixed(z);
+            assert!(s >= last, "sigmoid not monotone at z={z}");
+            assert!((0..=ONE).contains(&s));
+            last = s;
+        }
+    }
+
+    #[test]
+    fn sigmoid_saturates_outside_clamp() {
+        assert_eq!(sigmoid_fixed(100 * ONE), sigmoid_fixed(SIG_CLAMP));
+        assert_eq!(sigmoid_fixed(-100 * ONE), sigmoid_fixed(-SIG_CLAMP));
+    }
+
+    #[test]
+    fn sigmoid_symmetry_approx() {
+        // s(z) + s(-z) ~= 1.0 (odd Taylor terms cancel; rounding allows
+        // a few ULPs of fixed-point error).
+        for z in [13, 255, 1024, 2000] {
+            let sum = sigmoid_fixed(z) + sigmoid_fixed(-z);
+            assert!((sum - ONE).abs() <= 2, "z={z}: {sum}");
+        }
+    }
+
+    #[test]
+    fn fixed_roundtrip() {
+        assert_eq!(to_fixed(1.0), ONE);
+        assert_eq!(to_fixed(-0.5), -HALF);
+        assert!((from_fixed(to_fixed(0.33)) - 0.33).abs() < 1e-3);
+        assert_eq!(fxmul(ONE, ONE), ONE);
+        assert_eq!(fxmul(2 * ONE, HALF), ONE);
+    }
+}

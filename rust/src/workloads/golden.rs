@@ -1,0 +1,163 @@
+//! Host golden implementations of every workload kernel.
+//!
+//! Bit-identical to `python/compile/kernels/ref.py` (the single source of
+//! truth): int32 wraparound arithmetic, arithmetic right shifts, Taylor
+//! sigmoid with the same clamp and `INV48` constant, first-minimum
+//! tie-breaking for K-means.  Used (a) as the host-side `acc_func` merge
+//! code, (b) as the functional fallback when no AOT artifact matches
+//! (e.g. exotic histogram bin counts), and (c) as the oracle the
+//! integration tests compare the XLA outputs against.
+
+use super::fixed::{sigmoid_fixed, FRAC};
+
+/// Elementwise wraparound add (vecadd map function).
+pub fn vecadd(x: &[i32], y: &[i32]) -> Vec<i32> {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter().zip(y).map(|(a, b)| a.wrapping_add(*b)).collect()
+}
+
+/// Affine map `a*x + b` with wraparound.
+pub fn map_affine(x: &[i32], a: i32, b: i32) -> Vec<i32> {
+    x.iter().map(|v| a.wrapping_mul(*v).wrapping_add(b)).collect()
+}
+
+/// Wraparound sum of all elements.
+pub fn reduce_sum(x: &[i32]) -> i32 {
+    x.iter().fold(0i32, |acc, v| acc.wrapping_add(*v))
+}
+
+/// Histogram with the paper's 12-bit key function
+/// `idx = (d * bins) >> 12`; out-of-range keys (negative padding) are
+/// dropped.
+pub fn histogram(x: &[i32], bins: u32) -> Vec<i32> {
+    let mut out = vec![0i32; bins as usize];
+    for &d in x {
+        let idx = d.wrapping_mul(bins as i32) >> 12;
+        if idx >= 0 && (idx as u32) < bins {
+            out[idx as usize] = out[idx as usize].wrapping_add(1);
+        }
+    }
+    out
+}
+
+/// Fixed-point prediction `(x . w) >> FRAC` for one point.
+pub fn pred_fixed(point: &[i32], w: &[i32]) -> i32 {
+    debug_assert_eq!(point.len(), w.len());
+    let mut acc = 0i32;
+    for (xi, wi) in point.iter().zip(w) {
+        acc = acc.wrapping_add(xi.wrapping_mul(*wi));
+    }
+    acc >> FRAC
+}
+
+/// Linear-regression gradient partial over `n` points of dimension `d`
+/// stored row-major in `x`.
+pub fn linreg_grad(x: &[i32], y: &[i32], w: &[i32], d: usize) -> Vec<i32> {
+    let n = y.len();
+    debug_assert_eq!(x.len(), n * d);
+    let mut grad = vec![0i32; d];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let err = pred_fixed(row, w).wrapping_sub(y[i]);
+        for (g, xi) in grad.iter_mut().zip(row) {
+            *g = g.wrapping_add(err.wrapping_mul(*xi) >> FRAC);
+        }
+    }
+    grad
+}
+
+/// Logistic-regression gradient partial (Taylor sigmoid); `y` in
+/// `{0, ONE}`.
+pub fn logreg_grad(x: &[i32], y: &[i32], w: &[i32], d: usize) -> Vec<i32> {
+    let n = y.len();
+    debug_assert_eq!(x.len(), n * d);
+    let mut grad = vec![0i32; d];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let s = sigmoid_fixed(pred_fixed(row, w));
+        let err = s.wrapping_sub(y[i]);
+        for (g, xi) in grad.iter_mut().zip(row) {
+            *g = g.wrapping_add(err.wrapping_mul(*xi) >> FRAC);
+        }
+    }
+    grad
+}
+
+/// K-means partials for `n` points of dimension `d` against `k`
+/// centroids (row-major).  Returns `[sums (k*d) | counts (k)]`,
+/// matching `PimFunc::KmeansAssign`'s packed output layout.  Ties break
+/// to the lowest centroid index (same as `jnp.argmin`).
+pub fn kmeans_partial(x: &[i32], centroids: &[i32], k: usize, d: usize) -> Vec<i32> {
+    let n = x.len() / d.max(1);
+    debug_assert_eq!(x.len(), n * d);
+    debug_assert_eq!(centroids.len(), k * d);
+    let mut out = vec![0i32; k * d + k];
+    for i in 0..n {
+        let row = &x[i * d..(i + 1) * d];
+        let mut best = 0usize;
+        let mut best_dist = i32::MAX;
+        for c in 0..k {
+            let crow = &centroids[c * d..(c + 1) * d];
+            let mut dist = 0i32;
+            for (xi, ci) in row.iter().zip(crow) {
+                let diff = xi.wrapping_sub(*ci);
+                dist = dist.wrapping_add(diff.wrapping_mul(diff));
+            }
+            if dist < best_dist {
+                best_dist = dist;
+                best = c;
+            }
+        }
+        for (j, xi) in row.iter().enumerate() {
+            out[best * d + j] = out[best * d + j].wrapping_add(*xi);
+        }
+        out[k * d + best] = out[k * d + best].wrapping_add(1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::fixed::ONE;
+
+    #[test]
+    fn vecadd_wraps() {
+        assert_eq!(vecadd(&[i32::MAX], &[1]), vec![i32::MIN]);
+        assert_eq!(vecadd(&[1, 2], &[3, 4]), vec![4, 6]);
+    }
+
+    #[test]
+    fn histogram_matches_paper_key() {
+        // 4096 values into 256 bins: value v lands in bin v*256/4096.
+        let h = histogram(&[0, 15, 16, 4095, -1], 256);
+        assert_eq!(h[0], 2); // 0 and 15
+        assert_eq!(h[1], 1); // 16
+        assert_eq!(h[255], 1); // 4095
+        assert_eq!(h.iter().map(|&c| c as i64).sum::<i64>(), 4);
+    }
+
+    #[test]
+    fn reduce_sum_wraps_like_i32() {
+        assert_eq!(reduce_sum(&[i32::MAX, 1, 2]), i32::MIN.wrapping_add(2));
+    }
+
+    #[test]
+    fn zero_error_zero_gradient() {
+        // y = prediction exactly -> gradient must vanish.
+        let x = vec![ONE, ONE / 2, -ONE, ONE / 4];
+        let w = vec![ONE / 2, ONE, ONE / 8, -ONE / 2];
+        let y = vec![pred_fixed(&x, &w)];
+        assert_eq!(linreg_grad(&x, &y, &w, 4), vec![0, 0, 0, 0]);
+    }
+
+    #[test]
+    fn kmeans_assigns_to_nearest_with_low_tie() {
+        // Two centroids at 0 and 10; points cluster around them.
+        let x = vec![1, 2, 9, 11, 5]; // d=1; point 5 ties? dist 25 vs 25 -> c0
+        let c = vec![0, 10];
+        let out = kmeans_partial(&x, &c, 2, 1);
+        // sums: c0 gets 1+2+5=8, c1 gets 9+11=20; counts 3 and 2.
+        assert_eq!(out, vec![8, 20, 3, 2]);
+    }
+}

@@ -1,0 +1,141 @@
+//! Histogram — the paper's showcase for the *general reduction*
+//! iterator (§3.3, Listing 2) and for the shared-vs-private accumulator
+//! tradeoff (§5.4 / Fig. 11).
+//!
+//! Input values are 12-bit (image pixels); `map_to_val` computes
+//! `bin = (d * bins) >> 12` and `acc` increments the bin.
+
+use crate::coordinator::{PimFunc, PimSystem, TransformKind};
+use crate::error::Result;
+use crate::pim::{xfer, PimConfig, Timeline, XferKind};
+use crate::timing::{self, DmaPolicy, OptFlags, ReduceVariant};
+use crate::util::prng::Prng;
+
+use super::{Impl, RED_EPILOGUE_BASELINE_S, RED_EPILOGUE_SIMPLEPIM_S};
+
+/// Deterministic 12-bit "pixel" data.
+pub fn generate(seed: u64, n: usize) -> Vec<i32> {
+    Prng::new(seed).vec_i32(n, 0, 4096)
+}
+
+// loc:begin simplepim histogram
+/// Histogram through the SimplePIM public API (cf. paper Listing 2).
+pub fn run_simplepim(sys: &mut PimSystem, pixels: &[i32], bins: u32) -> Result<Vec<i32>> {
+    sys.scatter("hist_in", pixels, 4)?;
+    let histo = sys.create_handle(PimFunc::Histogram { bins }, TransformKind::Red, vec![])?;
+    let out = sys.array_red("hist_in", "hist_out", bins as u64, &histo)?;
+    sys.free_array("hist_in")?;
+    sys.free_array("hist_out")?;
+    Ok(out)
+}
+// loc:end simplepim histogram
+
+/// Analytic model for a given bin count and reduction variant (`None`
+/// = the framework's automatic choice).  Fig. 9/10 use 256 bins; the
+/// Fig. 11 sweep varies both.
+pub fn model_time_variant(
+    cfg: &PimConfig,
+    total_elems: u64,
+    bins: u64,
+    which: Impl,
+    variant: Option<ReduceVariant>,
+) -> (Timeline, ReduceVariant, u32) {
+    let per_dpu = total_elems.div_ceil(cfg.n_dpus as u64);
+    let profile = PimFunc::Histogram { bins: bins as u32 }.profile();
+    // PrIM's HST is well optimized; kernel parity (paper: "comparable").
+    let opts = OptFlags::simplepim();
+    let policy = DmaPolicy::Dynamic;
+    let variant = variant.unwrap_or_else(|| {
+        timing::choose_reduce_variant(
+            cfg, &profile, &opts, policy, per_dpu, cfg.default_tasklets, bins, 4,
+        )
+    });
+    let t = timing::reduce_kernel(
+        cfg,
+        &profile,
+        &opts,
+        policy,
+        per_dpu,
+        cfg.default_tasklets,
+        bins,
+        4,
+        variant,
+    );
+    let gather = xfer::transfer_seconds(cfg, XferKind::Parallel, cfg.n_dpus, bins * 4);
+    let epilogue = match which {
+        Impl::SimplePim => RED_EPILOGUE_SIMPLEPIM_S,
+        Impl::Baseline => RED_EPILOGUE_BASELINE_S,
+    };
+    let tl = Timeline {
+        kernel_s: t.seconds,
+        pim_to_host_s: gather,
+        host_merge_s: (bins * cfg.n_dpus as u64) as f64
+            / (cfg.host_threads as f64 * cfg.host_merge_rate)
+            + epilogue,
+        launch_s: cfg.launch_latency_s,
+        launches: 1,
+        ..Default::default()
+    };
+    (tl, variant, t.active_tasklets)
+}
+
+/// Fig. 9/10 entry point: 256 bins, automatic variant.
+pub fn model_time(cfg: &PimConfig, total_elems: u64, which: Impl) -> Timeline {
+    model_time_variant(cfg, total_elems, 256, which, None).0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::golden;
+
+    #[test]
+    fn host_only_end_to_end_matches_golden() {
+        let mut sys = PimSystem::host_only(PimConfig::tiny(4));
+        let px = generate(7, 50_000);
+        let got = run_simplepim(&mut sys, &px, 256).unwrap();
+        assert_eq!(got, golden::histogram(&px, 256));
+        assert_eq!(got.iter().map(|&c| c as i64).sum::<i64>(), 50_000);
+    }
+
+    #[test]
+    fn odd_bin_counts_work_via_host_path() {
+        let mut sys = PimSystem::host_only(PimConfig::tiny(2));
+        let px = generate(8, 10_000);
+        let got = run_simplepim(&mut sys, &px, 1024).unwrap();
+        assert_eq!(got, golden::histogram(&px, 1024));
+    }
+
+    #[test]
+    fn fig11_private_wins_small_shared_wins_large() {
+        let cfg = PimConfig::upmem(608);
+        let total = 608 * 1_572_864u64;
+        let t = |bins, v| {
+            model_time_variant(&cfg, total, bins, Impl::SimplePim, Some(v)).0.total_s()
+        };
+        use ReduceVariant::*;
+        // Paper Fig. 11: private faster at 256-1024, shared at 2048+.
+        assert!(t(256, PrivateAcc) < t(256, SharedAcc));
+        assert!(t(512, PrivateAcc) < t(512, SharedAcc));
+        assert!(t(4096, SharedAcc) < t(4096, PrivateAcc));
+        // 1.70x at 12 threads (paper): check the 256-bin gap is sizable.
+        let gap = t(256, SharedAcc) / t(256, PrivateAcc);
+        assert!((1.3..2.2).contains(&gap), "gap {gap}");
+    }
+
+    #[test]
+    fn fig11_private_time_doubles_as_threads_halve() {
+        let cfg = PimConfig::upmem(608);
+        let total = 608 * 1_572_864u64;
+        let (t1024, _, a1024) = model_time_variant(
+            &cfg, total, 1024, Impl::SimplePim, Some(ReduceVariant::PrivateAcc),
+        );
+        let (t2048, _, a2048) = model_time_variant(
+            &cfg, total, 2048, Impl::SimplePim, Some(ReduceVariant::PrivateAcc),
+        );
+        assert_eq!(a1024, 8);
+        assert_eq!(a2048, 4);
+        let ratio = t2048.kernel_s / t1024.kernel_s;
+        assert!((1.7..2.3).contains(&ratio), "kernel ratio {ratio} (paper: ~2x)");
+    }
+}

@@ -1,0 +1,186 @@
+//! K-means clustering — integer-quantized (paper §5.1, after pim-ml):
+//! 10 centroids, 10 feature dimensions, features quantized to small
+//! ints so squared distances stay in i32.  Each iteration is a general
+//! reduction producing per-centroid sums and counts; the host divides
+//! and re-broadcasts centroids.  SimplePIM's strength-reduced centroid
+//! addressing is the main win over the baseline (~1.37x, Fig. 9).
+
+use crate::coordinator::{PimFunc, PimSystem, TransformKind};
+use crate::error::Result;
+use crate::pim::{PimConfig, Timeline};
+use crate::timing::{self, DmaPolicy, OptFlags};
+use crate::util::prng::Prng;
+
+use super::{linreg::epoch_comm, Impl};
+
+/// Paper configuration: 10 centroids, 10 feature dimensions.
+pub const K: usize = 10;
+pub const DIM: usize = 10;
+/// Quantized feature range (8-bit-ish, as pim-ml quantizes).
+pub const FEAT_MAX: i32 = 256;
+
+/// Deterministic clustered data: `k` Gaussian-ish blobs in
+/// `[0, FEAT_MAX)^dim`.  Returns `(x row-major, true_centers)`.
+pub fn generate(seed: u64, n: usize, k: usize, dim: usize) -> (Vec<i32>, Vec<i32>) {
+    let mut rng = Prng::new(seed);
+    let centers: Vec<i32> =
+        (0..k * dim).map(|_| rng.range_i32(FEAT_MAX / 8, FEAT_MAX * 7 / 8)).collect();
+    let mut x = Vec::with_capacity(n * dim);
+    for i in 0..n {
+        let c = i % k;
+        for j in 0..dim {
+            let jitter = rng.range_i32(-FEAT_MAX / 16, FEAT_MAX / 16);
+            x.push((centers[c * dim + j] + jitter).clamp(0, FEAT_MAX - 1));
+        }
+    }
+    (x, centers)
+}
+
+// loc:begin simplepim kmeans
+/// Scatter the point set once.
+pub fn setup(sys: &mut PimSystem, x: &[i32], dim: usize) -> Result<()> {
+    sys.scatter("km_x", x, 4 * dim as u32)?;
+    Ok(())
+}
+
+/// One K-means iteration: assignment + partial sums on PIM, centroid
+/// update on the host.  Returns the updated centroids.
+pub fn iterate(
+    sys: &mut PimSystem,
+    centroids: &[i32],
+    k: usize,
+    dim: usize,
+    step: usize,
+) -> Result<Vec<i32>> {
+    let h = sys.create_handle(
+        PimFunc::KmeansAssign { k: k as u32, dim: dim as u32 },
+        TransformKind::Red,
+        centroids.to_vec(),
+    )?;
+    let dest = format!("km_part_{step}");
+    let packed = sys.array_red("km_x", &dest, (k * (dim + 1)) as u64, &h)?;
+    sys.free_array(&dest)?;
+    // packed = [sums (k*dim) | counts (k)]; divide on the host.
+    let mut next = centroids.to_vec();
+    for c in 0..k {
+        let count = packed[k * dim + c];
+        if count > 0 {
+            for j in 0..dim {
+                next[c * dim + j] = packed[c * dim + j] / count;
+            }
+        }
+    }
+    Ok(next)
+}
+// loc:end simplepim kmeans
+
+/// Release the PIM-resident point set.
+pub fn teardown(sys: &mut PimSystem) -> Result<()> {
+    sys.free_array("km_x")
+}
+
+/// Analytic model of one K-means iteration.
+pub fn model_time(cfg: &PimConfig, total_points: u64, which: Impl) -> Timeline {
+    let per_dpu = total_points.div_ceil(cfg.n_dpus as u64);
+    let (profile, opts) = match which {
+        Impl::SimplePim => (
+            PimFunc::KmeansAssign { k: K as u32, dim: DIM as u32 }.profile(),
+            OptFlags::simplepim(),
+        ),
+        Impl::Baseline => {
+            // pim-ml's kmeans computes centroid/point row offsets with
+            // integer multiplies in the k x d inner loop (no strength
+            // reduction — the paper's §4.3 optimization 1 example) and
+            // keeps per-centroid bounds checks.
+            let mut p = PimFunc::KmeansAssign { k: K as u32, dim: DIM as u32 }.profile();
+            p.compute.ialu += K as f64; // inner-loop bounds compares
+            p.compute.branch += K as f64;
+            let mut o = OptFlags::simplepim();
+            o.strength_reduction = false;
+            o.loop_unrolling = false;
+            (p, o)
+        }
+    };
+    let t = timing::reduce_kernel(
+        cfg,
+        &profile,
+        &opts,
+        DmaPolicy::Dynamic,
+        per_dpu,
+        cfg.default_tasklets,
+        (K * (DIM + 1)) as u64,
+        4,
+        timing::ReduceVariant::PrivateAcc,
+    );
+    let mut tl = epoch_comm(cfg, (K * (DIM + 1)) as u64);
+    tl.kernel_s = t.seconds;
+    tl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::golden;
+
+    #[test]
+    fn host_only_iteration_matches_golden_partials() {
+        let mut sys = PimSystem::host_only(PimConfig::tiny(4));
+        let (x, _) = generate(21, 1000, K, DIM);
+        setup(&mut sys, &x, DIM).unwrap();
+        let c0: Vec<i32> = generate(22, K, K, DIM).0; // k random points
+        let h = sys
+            .create_handle(
+                PimFunc::KmeansAssign { k: K as u32, dim: DIM as u32 },
+                TransformKind::Red,
+                c0.clone(),
+            )
+            .unwrap();
+        let packed = sys.array_red("km_x", "km_chk", (K * (DIM + 1)) as u64, &h).unwrap();
+        assert_eq!(packed, golden::kmeans_partial(&x, &c0, K, DIM));
+        sys.free_array("km_chk").unwrap();
+        teardown(&mut sys).unwrap();
+    }
+
+    #[test]
+    fn converges_to_cluster_structure() {
+        let mut sys = PimSystem::host_only(PimConfig::tiny(4));
+        let (x, _) = generate(23, 2000, K, DIM);
+        setup(&mut sys, &x, DIM).unwrap();
+        // Start from the first k points.
+        let mut c: Vec<i32> = x[..K * DIM].to_vec();
+        let mut last_inertia = f64::MAX;
+        for step in 0..8 {
+            c = iterate(&mut sys, &c, K, DIM, step).unwrap();
+            // Inertia must be non-increasing (within integer rounding).
+            let inertia: f64 = (0..2000)
+                .map(|i| {
+                    let row = &x[i * DIM..(i + 1) * DIM];
+                    (0..K)
+                        .map(|cc| {
+                            row.iter()
+                                .zip(&c[cc * DIM..(cc + 1) * DIM])
+                                .map(|(a, b)| ((a - b) as f64).powi(2))
+                                .sum::<f64>()
+                        })
+                        .fold(f64::MAX, f64::min)
+                })
+                .sum();
+            assert!(inertia <= last_inertia * 1.05, "inertia rose at step {step}");
+            last_inertia = inertia;
+        }
+        // All counts assigned: total inertia should be small for blobby
+        // data (within per-dim jitter^2 * dim * n).
+        assert!(last_inertia / 2000.0 < (FEAT_MAX as f64 / 8.0).powi(2) * DIM as f64);
+        teardown(&mut sys).unwrap();
+    }
+
+    #[test]
+    fn model_speedup_near_paper() {
+        // Paper: 1.37x weak scaling, 1.43x strong scaling.
+        let cfg = PimConfig::upmem(608);
+        let sp = model_time(&cfg, 6_080_000, Impl::SimplePim).total_s();
+        let bl = model_time(&cfg, 6_080_000, Impl::Baseline).total_s();
+        let r = bl / sp;
+        assert!((1.2..1.6).contains(&r), "kmeans speedup {r} (paper ~1.37x)");
+    }
+}

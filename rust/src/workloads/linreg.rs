@@ -1,0 +1,173 @@
+//! Linear regression — quantized int32 SGD (paper §5.1, after pim-ml
+//! [10-12]): 32-bit integer fixed-point with bit shifts against
+//! overflow; the gradient is a general reduction over zip(points,
+//! targets) with the weights shipped as broadcast context.
+
+use crate::coordinator::{PimFunc, PimSystem, TransformKind};
+use crate::error::Result;
+use crate::pim::{xfer, PimConfig, Timeline, XferKind};
+use crate::timing::{self, DmaPolicy, OptFlags};
+use crate::util::prng::Prng;
+use crate::workloads::fixed::ONE;
+
+use super::Impl;
+
+/// Paper configuration: 10 feature dimensions.
+pub const DIM: usize = 10;
+
+/// Deterministic regression data: features in [-2, 2) fixed point,
+/// targets from a hidden weight vector plus noise.  Returns
+/// `(x row-major, y, true_w)`.
+pub fn generate(seed: u64, n: usize, dim: usize) -> (Vec<i32>, Vec<i32>, Vec<i32>) {
+    let mut rng = Prng::new(seed);
+    let true_w: Vec<i32> = (0..dim).map(|_| rng.range_i32(-ONE, ONE)).collect();
+    let mut x = Vec::with_capacity(n * dim);
+    let mut y = Vec::with_capacity(n);
+    for _ in 0..n {
+        let row: Vec<i32> = (0..dim).map(|_| rng.range_i32(-2 * ONE, 2 * ONE)).collect();
+        let pred = super::golden::pred_fixed(&row, &true_w);
+        let noise = rng.range_i32(-ONE / 16, ONE / 16);
+        x.extend_from_slice(&row);
+        y.push(pred.wrapping_add(noise));
+    }
+    (x, y, true_w)
+}
+
+// loc:begin simplepim linreg
+/// One gradient computation through the SimplePIM public API.  Data is
+/// scattered once (`setup`); each step zips points with targets and
+/// reduces with the current weights as handle context.
+pub fn setup(sys: &mut PimSystem, x: &[i32], y: &[i32], dim: usize) -> Result<()> {
+    sys.scatter("lr_x", x, 4 * dim as u32)?;
+    sys.scatter("lr_y", y, 4)?;
+    sys.array_zip("lr_x", "lr_y", "lr_xy")?;
+    Ok(())
+}
+
+/// Compute the gradient for the current weights `w`.
+pub fn gradient_step(sys: &mut PimSystem, w: &[i32], step: usize) -> Result<Vec<i32>> {
+    let h = sys.create_handle(
+        PimFunc::LinregGrad { dim: w.len() as u32 },
+        TransformKind::Red,
+        w.to_vec(),
+    )?;
+    let dest = format!("lr_grad_{step}");
+    let grad = sys.array_red("lr_xy", &dest, w.len() as u64, &h)?;
+    sys.free_array(&dest)?;
+    Ok(grad)
+}
+// loc:end simplepim linreg
+
+/// Release the PIM-resident training set.
+pub fn teardown(sys: &mut PimSystem) -> Result<()> {
+    for id in ["lr_xy", "lr_x", "lr_y"] {
+        sys.free_array(id)?;
+    }
+    Ok(())
+}
+
+/// Per-epoch communication: gather per-DPU gradient partials, merge on
+/// the host, broadcast updated weights.
+pub(crate) fn epoch_comm(cfg: &PimConfig, dim: u64) -> Timeline {
+    let pull = xfer::transfer_seconds(cfg, XferKind::Parallel, cfg.n_dpus, dim * 4);
+    let push = xfer::transfer_seconds(cfg, XferKind::Broadcast, cfg.n_dpus, dim * 4);
+    Timeline {
+        pim_to_host_s: pull,
+        host_to_pim_s: push,
+        host_merge_s: (dim * cfg.n_dpus as u64) as f64
+            / (cfg.host_threads as f64 * cfg.host_merge_rate),
+        launch_s: cfg.launch_latency_s,
+        launches: 1,
+        ..Default::default()
+    }
+}
+
+/// Analytic model of one training epoch (Figs. 9/10 report one epoch).
+pub fn model_time(cfg: &PimConfig, total_points: u64, which: Impl) -> Timeline {
+    let per_dpu = total_points.div_ceil(cfg.n_dpus as u64);
+    let profile = PimFunc::LinregGrad { dim: DIM as u32 }.profile();
+    // pim-ml's integer linreg kernel is well optimized apart from its
+    // hard-coded transfer size (paper §4.3 optimization 5); the kernel
+    // is compute-bound, so the two land close together — "comparable"
+    // in the paper's words.
+    let (opts, policy) = match which {
+        Impl::SimplePim => (OptFlags::simplepim(), DmaPolicy::Dynamic),
+        Impl::Baseline => {
+            let mut o = OptFlags::simplepim();
+            o.dynamic_transfer_size = false;
+            (o, DmaPolicy::Fixed(1024))
+        }
+    };
+    let t = timing::reduce_kernel(
+        cfg,
+        &profile,
+        &opts,
+        policy,
+        per_dpu,
+        cfg.default_tasklets,
+        DIM as u64,
+        4,
+        timing::ReduceVariant::PrivateAcc,
+    );
+    let mut tl = epoch_comm(cfg, DIM as u64);
+    tl.kernel_s = t.seconds;
+    tl
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::golden;
+
+    #[test]
+    fn host_only_gradient_matches_golden() {
+        let mut sys = PimSystem::host_only(PimConfig::tiny(4));
+        let (x, y, _) = generate(5, 1000, DIM);
+        setup(&mut sys, &x, &y, DIM).unwrap();
+        let w = vec![ONE / 4; DIM];
+        let grad = gradient_step(&mut sys, &w, 0).unwrap();
+        assert_eq!(grad, golden::linreg_grad(&x, &y, &w, DIM));
+        teardown(&mut sys).unwrap();
+        assert_eq!(sys.machine.mram_used(), 0);
+    }
+
+    #[test]
+    fn gradient_descends_loss() {
+        // A few SGD steps with the modeled gradient must reduce the
+        // squared error vs the generating weights.
+        let mut sys = PimSystem::host_only(PimConfig::tiny(4));
+        let (x, y, _) = generate(6, 2000, DIM);
+        setup(&mut sys, &x, &y, DIM).unwrap();
+        let n = y.len() as i64;
+        let loss = |w: &[i32]| -> f64 {
+            let mut acc = 0f64;
+            for i in 0..y.len() {
+                let e =
+                    golden::pred_fixed(&x[i * DIM..(i + 1) * DIM], w).wrapping_sub(y[i]) as f64;
+                acc += e * e;
+            }
+            acc / n as f64
+        };
+        let mut w = vec![0i32; DIM];
+        let l0 = loss(&w);
+        for step in 0..12 {
+            let grad = gradient_step(&mut sys, &w, step).unwrap();
+            for (wi, gi) in w.iter_mut().zip(&grad) {
+                // lr = 2^-4 / n, all in shifts like the paper's code.
+                *wi = wi.wrapping_sub((*gi as i64 * 16 / n.max(1)) as i32 >> 4);
+            }
+        }
+        let l1 = loss(&w);
+        assert!(l1 < l0 * 0.5, "loss should halve: {l0} -> {l1}");
+        teardown(&mut sys).unwrap();
+    }
+
+    #[test]
+    fn model_comparable_to_baseline() {
+        let cfg = PimConfig::upmem(608);
+        let sp = model_time(&cfg, 6_080_000, Impl::SimplePim).total_s();
+        let bl = model_time(&cfg, 6_080_000, Impl::Baseline).total_s();
+        let r = bl / sp;
+        assert!((0.95..1.12).contains(&r), "linreg should be comparable, got {r}");
+    }
+}

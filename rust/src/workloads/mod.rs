@@ -1,0 +1,164 @@
+//! The six paper workloads (reduction, vector addition, histogram,
+//! linear regression, logistic regression, K-means).
+//!
+//! Each module contains:
+//! * `run_simplepim` — the workload written against the SimplePIM public
+//!   API, the way a framework user would (these are the lines Table 1
+//!   counts, delimited by `loc:begin`/`loc:end` markers);
+//! * `generate` — deterministic synthetic data (the paper also uses
+//!   synthetic data sized per-DPU);
+//! * `model_time` — the analytic end-to-end time at paper scale for the
+//!   SimplePIM or hand-optimized-baseline implementation (regenerates
+//!   Figs. 9/10);
+//! * a host golden path used by tests.
+//!
+//! The hand-optimized baselines live in [`baseline`], written against
+//! the raw SDK ([`crate::pim::sdk`]) with each PrIM/pim-ml deficiency
+//! the paper calls out expressed explicitly.
+
+pub mod baseline;
+pub mod fixed;
+pub mod golden;
+pub mod histogram;
+pub mod kmeans;
+pub mod linreg;
+pub mod logreg;
+pub mod reduction;
+pub mod vecadd;
+
+pub use fixed::{from_fixed, sigmoid_fixed, to_fixed, FRAC, ONE};
+
+use crate::pim::{PimConfig, Timeline};
+
+/// Which implementation a model run represents.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Impl {
+    /// Framework-generated code (all §4.3 optimizations on).
+    SimplePim,
+    /// The best prior hand-optimized open-source code (PrIM / pim-ml),
+    /// with its documented deficiencies.
+    Baseline,
+}
+
+/// Fixed consolidation cost of the framework's generic `array_red`
+/// epilogue (gather partials -> OpenMP merge region -> register +
+/// rebroadcast the result).  The hand-rolled baselines do the same job
+/// with a leaner, workload-specific epilogue.  These constants are
+/// calibrated so the reduction workload reproduces the paper's
+/// distinctly sub-linear strong scaling (1.6x/2.6x at 2x/4x DPUs) —
+/// see DESIGN.md §2 and EXPERIMENTS.md.
+pub const RED_EPILOGUE_SIMPLEPIM_S: f64 = 1.5e-3;
+pub const RED_EPILOGUE_BASELINE_S: f64 = 1.0e-3;
+
+/// One registry entry per paper workload.
+pub struct WorkloadInfo {
+    pub name: &'static str,
+    /// Weak-scaling elements per DPU (paper §5.1).
+    pub weak_elems_per_dpu: u64,
+    /// Strong-scaling total elements (paper §5.1; equals the 608-DPU
+    /// weak-scaling total).
+    pub strong_total_elems: u64,
+    /// Analytic end-to-end model (Figs. 9/10).
+    pub model: fn(&PimConfig, u64, Impl) -> Timeline,
+}
+
+/// All six workloads, paper order.
+pub fn all() -> Vec<WorkloadInfo> {
+    vec![
+        WorkloadInfo {
+            name: "reduction",
+            weak_elems_per_dpu: 1_000_000,
+            strong_total_elems: 608_000_000,
+            model: reduction::model_time,
+        },
+        WorkloadInfo {
+            name: "vecadd",
+            weak_elems_per_dpu: 1_000_000,
+            strong_total_elems: 608_000_000,
+            model: vecadd::model_time,
+        },
+        WorkloadInfo {
+            name: "histogram",
+            weak_elems_per_dpu: 1_572_864,
+            strong_total_elems: 956_301_312,
+            model: histogram::model_time,
+        },
+        WorkloadInfo {
+            name: "linreg",
+            weak_elems_per_dpu: 10_000,
+            strong_total_elems: 6_080_000,
+            model: linreg::model_time,
+        },
+        WorkloadInfo {
+            name: "logreg",
+            weak_elems_per_dpu: 10_000,
+            strong_total_elems: 6_080_000,
+            model: logreg::model_time,
+        },
+        WorkloadInfo {
+            name: "kmeans",
+            weak_elems_per_dpu: 10_000,
+            strong_total_elems: 6_080_000,
+            model: kmeans::model_time,
+        },
+    ]
+}
+
+/// Look up a workload by name.
+pub fn by_name(name: &str) -> Option<WorkloadInfo> {
+    all().into_iter().find(|w| w.name == name)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_matches_paper() {
+        let names: Vec<_> = all().iter().map(|w| w.name).collect();
+        assert_eq!(
+            names,
+            vec!["reduction", "vecadd", "histogram", "linreg", "logreg", "kmeans"]
+        );
+        // Strong totals equal 608x the weak per-DPU sizes (paper §5.3).
+        for w in all() {
+            assert_eq!(w.strong_total_elems, 608 * w.weak_elems_per_dpu);
+        }
+    }
+
+    #[test]
+    fn weak_scaling_is_flat_for_all_workloads() {
+        // Fig. 9's headline: growing DPUs with the input does not change
+        // runtime much.
+        for w in all() {
+            for which in [Impl::SimplePim, Impl::Baseline] {
+                let t608 = (w.model)(&PimConfig::upmem(608), 608 * w.weak_elems_per_dpu, which);
+                let t2432 =
+                    (w.model)(&PimConfig::upmem(2432), 2432 * w.weak_elems_per_dpu, which);
+                let ratio = t2432.total_s() / t608.total_s();
+                assert!(
+                    (0.8..1.3).contains(&ratio),
+                    "{} {:?}: weak scaling ratio {ratio}",
+                    w.name,
+                    which
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn simplepim_never_slower_than_baseline_weak_except_reduction() {
+        for w in all() {
+            let cfg = PimConfig::upmem(608);
+            let total = 608 * w.weak_elems_per_dpu;
+            let sp = (w.model)(&cfg, total, Impl::SimplePim).total_s();
+            let bl = (w.model)(&cfg, total, Impl::Baseline).total_s();
+            let speedup = bl / sp;
+            if w.name == "reduction" {
+                assert!((0.85..1.1).contains(&speedup), "reduction speedup {speedup}");
+            } else {
+                assert!(speedup >= 0.97, "{}: speedup {speedup}", w.name);
+            }
+        }
+    }
+}

@@ -1,0 +1,111 @@
+//! Reduction — sum of all elements (paper §5.1): the paper's example of
+//! a communication-heavy workload whose strong scaling is distinctly
+//! sub-linear (Fig. 10: only 1.6x/2.6x at 2x/4x DPUs).
+
+use crate::coordinator::{PimFunc, PimSystem, TransformKind};
+use crate::error::Result;
+use crate::pim::{xfer, PimConfig, Timeline, XferKind};
+use crate::timing::{self, DmaPolicy, OptFlags, ReduceVariant};
+use crate::util::prng::Prng;
+
+use super::{Impl, RED_EPILOGUE_BASELINE_S, RED_EPILOGUE_SIMPLEPIM_S};
+
+/// Deterministic input vector.
+pub fn generate(seed: u64, n: usize) -> Vec<i32> {
+    Prng::new(seed).vec_i32(n, -1000, 1000)
+}
+
+// loc:begin simplepim reduction
+/// Reduction through the SimplePIM public API: general reduction with a
+/// single-entry output array (an accumulator).
+pub fn run_simplepim(sys: &mut PimSystem, x: &[i32]) -> Result<i32> {
+    sys.scatter("red_in", x, 4)?;
+    let sum = sys.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![])?;
+    let out = sys.array_red("red_in", "red_out", 1, &sum)?;
+    sys.free_array("red_in")?;
+    sys.free_array("red_out")?;
+    Ok(out[0])
+}
+// loc:end simplepim reduction
+
+/// Analytic end-to-end model: kernel + partial gather + host merge +
+/// the red-epilogue consolidation (the phase that caps strong scaling).
+pub fn model_time(cfg: &PimConfig, total_elems: u64, which: Impl) -> Timeline {
+    let per_dpu = total_elems.div_ceil(cfg.n_dpus as u64);
+    let profile = PimFunc::SumReduce.profile();
+    // PrIM's RED is fully optimized — kernel parity with SimplePIM; the
+    // difference is the generic vs hand-rolled consolidation epilogue.
+    let opts = OptFlags::simplepim();
+    let t = timing::reduce_kernel(
+        cfg,
+        &profile,
+        &opts,
+        DmaPolicy::Dynamic,
+        per_dpu,
+        cfg.default_tasklets,
+        1,
+        4,
+        ReduceVariant::PrivateAcc,
+    );
+    let gather = xfer::transfer_seconds(cfg, XferKind::Parallel, cfg.n_dpus, 8);
+    let epilogue = match which {
+        Impl::SimplePim => RED_EPILOGUE_SIMPLEPIM_S,
+        Impl::Baseline => RED_EPILOGUE_BASELINE_S,
+    };
+    Timeline {
+        kernel_s: t.seconds,
+        pim_to_host_s: gather,
+        host_merge_s: cfg.n_dpus as f64 / (cfg.host_threads as f64 * cfg.host_merge_rate)
+            + epilogue,
+        launch_s: cfg.launch_latency_s,
+        launches: 1,
+        ..Default::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::workloads::golden;
+
+    #[test]
+    fn host_only_end_to_end_matches_golden() {
+        let mut sys = PimSystem::host_only(PimConfig::tiny(4));
+        let x = generate(3, 100_000);
+        let got = run_simplepim(&mut sys, &x).unwrap();
+        assert_eq!(got, golden::reduce_sum(&x));
+    }
+
+    #[test]
+    fn wraparound_preserved_end_to_end() {
+        let mut sys = PimSystem::host_only(PimConfig::tiny(2));
+        let x = vec![i32::MAX, 1, 5];
+        let got = run_simplepim(&mut sys, &x).unwrap();
+        assert_eq!(got, i32::MIN.wrapping_add(5));
+    }
+
+    #[test]
+    fn strong_scaling_is_sublinear() {
+        // Fig. 10's reduction story: ~1.6x at 2x DPUs, ~2.6x at 4x.
+        let total = 608_000_000u64;
+        let t608 = model_time(&PimConfig::upmem(608), total, Impl::SimplePim).total_s();
+        let t1216 = model_time(&PimConfig::upmem(1216), total, Impl::SimplePim).total_s();
+        let t2432 = model_time(&PimConfig::upmem(2432), total, Impl::SimplePim).total_s();
+        let s2 = t608 / t1216;
+        let s4 = t608 / t2432;
+        assert!((1.4..1.95).contains(&s2), "2x speedup {s2}");
+        assert!((2.2..3.2).contains(&s4), "4x speedup {s4}");
+        assert!(s4 < 3.5, "must stay well below linear");
+    }
+
+    #[test]
+    fn baseline_slightly_faster_at_strong_scale() {
+        // Paper: "SimplePIM consistently outperforms ... except for
+        // reduction with a slight increase in communication cost".
+        let cfg = PimConfig::upmem(2432);
+        let sp = model_time(&cfg, 608_000_000, Impl::SimplePim).total_s();
+        let bl = model_time(&cfg, 608_000_000, Impl::Baseline).total_s();
+        assert!(bl < sp, "baseline should win slightly");
+        assert!(sp / bl < 1.25, "but only slightly ({})", sp / bl);
+    }
+}

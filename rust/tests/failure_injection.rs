@@ -1,0 +1,120 @@
+//! Failure-injection tests: the framework must fail loudly and
+//! recoverably when the machine's physical limits or the API contract
+//! are violated — never corrupt state.
+
+use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
+use simplepim::error::Error;
+use simplepim::pim::{PimConfig, PimMachine};
+use simplepim::util::prng::Prng;
+
+fn tiny_sys(dpus: usize) -> PimSystem {
+    PimSystem::host_only(PimConfig::tiny(dpus))
+}
+
+#[test]
+fn mram_capacity_exhaustion_is_an_error_not_a_crash() {
+    // tiny() banks hold 8 MB; scattering ~9 MB/DPU must fail cleanly.
+    let mut s = tiny_sys(2);
+    let huge = vec![0i32; 2 * 9 * 256 * 1024]; // ~9 MB per DPU
+    let err = s.scatter("huge", &huge, 4).unwrap_err();
+    assert!(matches!(err, Error::Capacity(_)), "{err}");
+    // The failed scatter must not leave a dangling registration.
+    assert!(s.management.ids().is_empty());
+    // And the machine remains usable.
+    s.scatter("ok", &[1, 2, 3, 4], 4).unwrap();
+    assert_eq!(s.gather("ok").unwrap(), vec![1, 2, 3, 4]);
+}
+
+#[test]
+fn mram_leak_free_after_repeated_exhaustion() {
+    let mut s = tiny_sys(1);
+    let huge = vec![0i32; 9 * 256 * 1024];
+    for _ in 0..10 {
+        assert!(s.scatter("huge", &huge, 4).is_err());
+    }
+    assert_eq!(s.machine.mram_used(), 0, "failed scatters must not leak");
+}
+
+#[test]
+fn misaligned_type_sizes_rejected() {
+    let mut s = tiny_sys(2);
+    // type_size must be a positive multiple of 4 in this i32-packed
+    // framework.
+    assert!(matches!(s.scatter("a", &[1, 2], 0), Err(Error::Alignment(_))));
+    assert!(matches!(s.scatter("b", &[1, 2], 6), Err(Error::Alignment(_))));
+    // Data not a whole number of elements.
+    assert!(matches!(s.scatter("c", &[1, 2, 3], 8), Err(Error::Alignment(_))));
+}
+
+#[test]
+fn dma_violations_surface_from_hand_written_kernels() {
+    use simplepim::pim::sdk::DpuCtx;
+    let mut m = PimMachine::new(PimConfig::tiny(1));
+    let addr = m.alloc(4096).unwrap();
+    let mut ctx = DpuCtx::new(&mut m, 0);
+    let buf = ctx.wram.mem_alloc(2048).unwrap();
+    // Misaligned address, misaligned size, oversized transfer.
+    assert!(matches!(ctx.mram_read(addr + 3, buf, 64), Err(Error::Alignment(_))));
+    assert!(matches!(ctx.mram_read(addr, buf, 63), Err(Error::Alignment(_))));
+    assert!(matches!(ctx.mram_read(addr, buf, 4096), Err(Error::Alignment(_))));
+    // A valid transfer afterwards still works.
+    assert!(ctx.mram_read(addr, buf, 2048).is_ok());
+}
+
+#[test]
+fn handle_misuse_rejected_before_touching_device_state() {
+    let mut s = tiny_sys(2);
+    s.scatter("x", &[1, 2, 3, 4], 4).unwrap();
+    let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+    // Map iterator with a Red handle.
+    assert!(matches!(s.array_map("x", "y", &red), Err(Error::Handle(_))));
+    // Wrong output length for the reduction.
+    assert!(matches!(s.array_red("x", "y", 7, &red), Err(Error::Handle(_))));
+    // Nothing was registered by the failed calls.
+    assert_eq!(s.management.ids(), vec!["x"]);
+    let used = s.machine.mram_used();
+    // Only x's allocation remains.
+    s.free_array("x").unwrap();
+    assert!(s.machine.mram_used() < used);
+}
+
+#[test]
+fn zip_of_mismatched_distributions_rejected() {
+    let mut s = tiny_sys(3);
+    let mut rng = Prng::new(9);
+    s.scatter("a", &rng.vec_i32(100, 0, 10), 4).unwrap();
+    s.scatter("b", &rng.vec_i32(101, 0, 10), 4).unwrap();
+    assert!(matches!(s.array_zip("a", "b", "ab"), Err(Error::Handle(_))));
+    assert!(!s.management.contains("ab"));
+}
+
+#[test]
+fn gather_of_lazy_zip_guides_the_user() {
+    let mut s = tiny_sys(2);
+    s.scatter("a", &[1, 2, 3, 4], 4).unwrap();
+    s.scatter("b", &[5, 6, 7, 8], 4).unwrap();
+    s.array_zip("a", "b", "ab").unwrap();
+    let err = s.gather("ab").unwrap_err();
+    assert!(err.to_string().contains("map it first"), "{err}");
+}
+
+#[test]
+fn wrong_machine_for_collectives_rejected() {
+    let mut s = tiny_sys(2);
+    s.scatter("sc", &[1, 2, 3, 4], 4).unwrap();
+    let h = s
+        .create_handle(PimFunc::HostAcc(i32::wrapping_add), TransformKind::Red, vec![])
+        .unwrap();
+    // allreduce needs a broadcast-layout array.
+    assert!(matches!(s.allreduce("sc", &h), Err(Error::Handle(_))));
+    // allgather needs a scattered array.
+    s.broadcast("bc", &[1, 2], 4).unwrap();
+    assert!(matches!(s.allgather("bc", "bc2"), Err(Error::Handle(_))));
+}
+
+#[test]
+fn missing_artifacts_directory_is_a_clear_error() {
+    use simplepim::runtime::Manifest;
+    let err = Manifest::load("/nonexistent/path").unwrap_err();
+    assert!(err.to_string().contains("make artifacts"), "{err}");
+}

@@ -1,0 +1,251 @@
+//! Integration tests over the full three-layer stack: AOT artifacts
+//! (L1 Pallas kernels lowered through L2 JAX) executed by the PJRT
+//! runtime under the L3 coordinator, validated against the host
+//! goldens (which are themselves pinned to python's ref.py by pytest).
+//!
+//! Requires `make artifacts` to have been run; each test builds its own
+//! PimSystem with a real PJRT client.
+
+use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
+use simplepim::pim::PimConfig;
+use simplepim::util::prng::Prng;
+use simplepim::workloads::{
+    fixed::ONE, golden, histogram, kmeans, linreg, logreg, reduction, vecadd,
+};
+
+fn sys(dpus: usize) -> PimSystem {
+    PimSystem::new(PimConfig::tiny(dpus)).expect("artifacts present (run `make artifacts`)")
+}
+
+#[test]
+fn vecadd_xla_matches_golden_ragged_sizes() {
+    // 13 DPUs (non-multiple of the gang width 8), ragged length.
+    let mut s = sys(13);
+    let (x, y) = vecadd::generate(100, 100_003);
+    let out = vecadd::run_simplepim(&mut s, &x, &y).unwrap();
+    assert_eq!(out, golden::vecadd(&x, &y));
+}
+
+#[test]
+fn vecadd_xla_wraparound_extremes() {
+    let mut s = sys(4);
+    let mut rng = Prng::new(7);
+    let x: Vec<i32> = (0..4096).map(|_| rng.range_i32(i32::MIN / 2, i32::MAX / 2) * 2).collect();
+    let y = x.clone();
+    let out = vecadd::run_simplepim(&mut s, &x, &y).unwrap();
+    assert_eq!(out, golden::vecadd(&x, &y));
+}
+
+#[test]
+fn reduction_xla_matches_golden() {
+    let mut s = sys(9);
+    let x = reduction::generate(101, 250_000);
+    assert_eq!(reduction::run_simplepim(&mut s, &x).unwrap(), golden::reduce_sum(&x));
+}
+
+#[test]
+fn reduction_xla_chunked_over_largest_artifact() {
+    // Per-DPU share exceeds the largest compiled N (65,536), forcing the
+    // executor's chunk loop.
+    let mut s = sys(2);
+    let x = reduction::generate(102, 150_000); // 75k per DPU > 65,536
+    assert_eq!(reduction::run_simplepim(&mut s, &x).unwrap(), golden::reduce_sum(&x));
+}
+
+#[test]
+fn histogram_xla_matches_golden() {
+    let mut s = sys(8);
+    let px = histogram::generate(103, 300_000);
+    let got = histogram::run_simplepim(&mut s, &px, 256).unwrap();
+    assert_eq!(got, golden::histogram(&px, 256));
+}
+
+#[test]
+fn histogram_other_bins_fall_back_to_host() {
+    // 512 bins has no artifact; the framework silently uses the host
+    // path and stays correct.
+    let mut s = sys(4);
+    let px = histogram::generate(104, 50_000);
+    let got = histogram::run_simplepim(&mut s, &px, 512).unwrap();
+    assert_eq!(got, golden::histogram(&px, 512));
+}
+
+#[test]
+fn affine_map_xla_matches_golden() {
+    let mut s = sys(5);
+    let x = Prng::new(105).vec_i32(70_001, -(1 << 20), 1 << 20);
+    s.scatter("t1", &x, 4).unwrap();
+    let h = s
+        .create_handle(PimFunc::AffineMap, TransformKind::Map, vec![3, -17])
+        .unwrap();
+    s.array_map("t1", "t2", &h).unwrap();
+    let got = s.gather("t2").unwrap();
+    assert_eq!(got, golden::map_affine(&x, 3, -17));
+}
+
+#[test]
+fn linreg_xla_matches_golden() {
+    let mut s = sys(6);
+    let (x, y, _) = linreg::generate(106, 20_000, linreg::DIM);
+    linreg::setup(&mut s, &x, &y, linreg::DIM).unwrap();
+    let w: Vec<i32> = (0..linreg::DIM as i32).map(|i| i * 100 - 500).collect();
+    let grad = linreg::gradient_step(&mut s, &w, 0).unwrap();
+    assert_eq!(grad, golden::linreg_grad(&x, &y, &w, linreg::DIM));
+}
+
+#[test]
+fn logreg_xla_matches_golden() {
+    let mut s = sys(6);
+    let (x, y, _) = logreg::generate(107, 20_000, logreg::DIM);
+    logreg::setup(&mut s, &x, &y, logreg::DIM).unwrap();
+    let w = vec![ONE / 3; logreg::DIM];
+    let grad = logreg::gradient_step(&mut s, &w, 0).unwrap();
+    assert_eq!(grad, golden::logreg_grad(&x, &y, &w, logreg::DIM));
+}
+
+#[test]
+fn kmeans_xla_matches_golden_partials() {
+    let mut s = sys(7);
+    let (x, _) = kmeans::generate(108, 15_000, kmeans::K, kmeans::DIM);
+    kmeans::setup(&mut s, &x, kmeans::DIM).unwrap();
+    let c0: Vec<i32> = x[..kmeans::K * kmeans::DIM].to_vec();
+    let h = s
+        .create_handle(
+            PimFunc::KmeansAssign { k: kmeans::K as u32, dim: kmeans::DIM as u32 },
+            TransformKind::Red,
+            c0.clone(),
+        )
+        .unwrap();
+    let packed = s
+        .array_red("km_x", "km_packed", (kmeans::K * (kmeans::DIM + 1)) as u64, &h)
+        .unwrap();
+    assert_eq!(packed, golden::kmeans_partial(&x, &c0, kmeans::K, kmeans::DIM));
+}
+
+#[test]
+fn xla_and_host_paths_bit_identical() {
+    // The same workload through PJRT and through the host fallback must
+    // produce identical bytes — the cross-path pin that makes the host
+    // fallback a legitimate oracle.
+    let (x, y, _) = logreg::generate(109, 8_000, logreg::DIM);
+    let w = vec![-ONE / 5; logreg::DIM];
+
+    let mut xla_sys = sys(5);
+    logreg::setup(&mut xla_sys, &x, &y, logreg::DIM).unwrap();
+    let g_xla = logreg::gradient_step(&mut xla_sys, &w, 0).unwrap();
+
+    let mut host_sys = PimSystem::host_only(PimConfig::tiny(5));
+    logreg::setup(&mut host_sys, &x, &y, logreg::DIM).unwrap();
+    let g_host = logreg::gradient_step(&mut host_sys, &w, 0).unwrap();
+
+    assert_eq!(g_xla, g_host);
+}
+
+#[test]
+fn timelines_identical_across_execution_paths() {
+    // Modeled time must not depend on which engine computed the bytes.
+    let (x, y) = vecadd::generate(110, 50_000);
+
+    let mut a = sys(4);
+    vecadd::run_simplepim(&mut a, &x, &y).unwrap();
+    let mut b = PimSystem::host_only(PimConfig::tiny(4));
+    vecadd::run_simplepim(&mut b, &x, &y).unwrap();
+
+    let (ta, tb) = (a.timeline(), b.timeline());
+    assert_eq!(ta.kernel_s, tb.kernel_s);
+    assert_eq!(ta.host_to_pim_s, tb.host_to_pim_s);
+    assert_eq!(ta.pim_to_host_s, tb.pim_to_host_s);
+    assert_eq!(ta.launches, tb.launches);
+}
+
+#[test]
+fn collectives_roundtrip_with_xla_reduction() {
+    let mut s = sys(6);
+    // allgather: scatter, then give every DPU the full array.
+    let data = Prng::new(111).vec_i32(1200, -100, 100);
+    s.scatter("ag_in", &data, 4).unwrap();
+    s.allgather("ag_in", "ag_full").unwrap();
+    assert_eq!(s.gather("ag_full").unwrap(), data);
+
+    // allreduce: every DPU holds [1, 2, 3]; sum over 6 DPUs.
+    s.broadcast("ar", &[1, 2, 3], 4).unwrap();
+    let h = s
+        .create_handle(PimFunc::HostAcc(i32::wrapping_add), TransformKind::Red, vec![])
+        .unwrap();
+    s.allreduce("ar", &h).unwrap();
+    assert_eq!(s.gather("ar").unwrap(), vec![6, 12, 18]);
+}
+
+#[test]
+fn baselines_and_simplepim_agree_functionally() {
+    use simplepim::pim::PimMachine;
+    use simplepim::workloads::baseline;
+
+    let (x, y) = vecadd::generate(112, 30_001);
+    let mut s = sys(4);
+    let sp = vecadd::run_simplepim(&mut s, &x, &y).unwrap();
+    let mut m = PimMachine::new(PimConfig::tiny(4));
+    let bl = baseline::vecadd::run(&mut m, &x, &y).unwrap();
+    assert_eq!(sp, bl);
+
+    let data = reduction::generate(113, 44_444);
+    let mut s = sys(4);
+    let sp = reduction::run_simplepim(&mut s, &data).unwrap();
+    let mut m = PimMachine::new(PimConfig::tiny(4));
+    let bl = baseline::reduction::run(&mut m, &data).unwrap();
+    assert_eq!(sp, bl);
+}
+
+#[test]
+fn scan_xla_matches_sequential_prefix_sum() {
+    // §6 extension through the scan_local + add_base artifacts,
+    // including the chunked path (150k/2 DPUs > largest compiled N).
+    for (dpus, n) in [(5usize, 70_003usize), (2, 150_000)] {
+        let mut s = sys(dpus);
+        let data = Prng::new(200 + n as u64).vec_i32(n, -10_000, 10_000);
+        s.scatter("sx", &data, 4).unwrap();
+        s.array_scan("sx", "scs").unwrap();
+        let got = s.gather("scs").unwrap();
+        let mut acc = 0i32;
+        let want: Vec<i32> = data
+            .iter()
+            .map(|&v| {
+                acc = acc.wrapping_add(v);
+                acc
+            })
+            .collect();
+        assert_eq!(got, want, "dpus={dpus} n={n}");
+    }
+}
+
+#[test]
+fn filter_then_scan_xla_composes() {
+    let mut s = sys(6);
+    let data: Vec<i32> = (0..50_000).map(|i| i - 25_000).collect();
+    s.scatter("fx", &data, 4).unwrap();
+    let kept = s.array_filter("fx", "pos", |v| v >= 0).unwrap();
+    assert_eq!(kept, 25_000);
+    s.array_scan("pos", "csum").unwrap();
+    let got = s.gather("csum").unwrap();
+    let mut acc = 0i64;
+    let want: Vec<i32> = (0..25_000)
+        .map(|v| {
+            acc += v as i64;
+            acc as i32
+        })
+        .collect();
+    assert_eq!(got, want);
+}
+
+#[test]
+fn mram_fully_released_after_all_workloads() {
+    let mut s = sys(4);
+    let (x, y) = vecadd::generate(114, 10_000);
+    vecadd::run_simplepim(&mut s, &x, &y).unwrap();
+    let d = reduction::generate(115, 10_000);
+    reduction::run_simplepim(&mut s, &d).unwrap();
+    let px = histogram::generate(116, 10_000);
+    histogram::run_simplepim(&mut s, &px, 256).unwrap();
+    assert_eq!(s.machine.mram_used(), 0, "all MRAM allocations released");
+    assert!(s.management.ids().is_empty(), "all ids freed");
+}

@@ -1,0 +1,28 @@
+//! End-to-end test of the *pallas* engine: the L1 kernel lowering
+//! (interpret mode) executed through PJRT under the coordinator.
+//!
+//! This is its own test binary because the engine is selected through a
+//! process-global environment variable; keeping it isolated avoids
+//! races with the default-engine integration tests.
+
+use simplepim::pim::PimConfig;
+use simplepim::workloads::{golden, vecadd};
+use simplepim::PimSystem;
+
+#[test]
+fn pallas_engine_serves_bit_identical_results() {
+    std::env::set_var("SIMPLEPIM_ENGINE", "pallas");
+    let mut sys = PimSystem::new(PimConfig::tiny(4)).expect("artifacts present");
+    // Small input: the pallas interpret lowering pays ~ms per grid step.
+    let (x, y) = vecadd::generate(55, 9_000);
+    let out = vecadd::run_simplepim(&mut sys, &x, &y).unwrap();
+    assert_eq!(out, golden::vecadd(&x, &y));
+
+    // And the manifest really did pick the pallas artifact.
+    use simplepim::runtime::Manifest;
+    assert_eq!(Manifest::preferred_engine(), "pallas");
+    let m = Manifest::load(simplepim::runtime::Runtime::default_dir()).unwrap();
+    let a = m.select("vecadd", 1).unwrap();
+    assert_eq!(a.params.get("pallas"), Some(&1));
+    assert!(a.name.ends_with("_pallas"), "{}", a.name);
+}

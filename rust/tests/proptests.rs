@@ -1,0 +1,262 @@
+//! Property-based tests over coordinator invariants.
+//!
+//! crates.io is unreachable in this environment, so instead of proptest
+//! these use the in-tree seeded PRNG with many random cases per
+//! property (deterministic: failures reproduce from the printed seed).
+//! Functional execution uses the host-only path — bit-identical to the
+//! XLA path by `integration::xla_and_host_paths_bit_identical`.
+
+use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
+use simplepim::pim::PimConfig;
+use simplepim::util::prng::Prng;
+use simplepim::workloads::golden;
+
+const CASES: usize = 60;
+
+fn sys_with(dpus: usize) -> PimSystem {
+    PimSystem::host_only(PimConfig::tiny(dpus))
+}
+
+#[test]
+fn prop_scatter_gather_roundtrip() {
+    // For any length, element size, and DPU count: gather(scatter(x)) == x.
+    let mut rng = Prng::new(0x5CA77E2);
+    for case in 0..CASES {
+        let dpus = 1 + rng.below(20) as usize;
+        let words_per_elem = [1u32, 2, 3, 4, 8][rng.below(5) as usize];
+        let n_elems = rng.below(5_000) as usize;
+        let data = rng.vec_i32(n_elems * words_per_elem as usize, i32::MIN / 2, i32::MAX / 2);
+        let mut s = sys_with(dpus);
+        s.scatter("t", &data, 4 * words_per_elem).unwrap();
+        let back = s.gather("t").unwrap();
+        assert_eq!(back, data, "case {case}: dpus={dpus} ws={words_per_elem} n={n_elems}");
+        s.free_array("t").unwrap();
+        assert_eq!(s.machine.mram_used(), 0);
+    }
+}
+
+#[test]
+fn prop_broadcast_every_dpu_sees_same_bytes() {
+    let mut rng = Prng::new(0xB40ADCA5);
+    for _ in 0..CASES {
+        let dpus = 1 + rng.below(12) as usize;
+        let n = 1 + rng.below(1000) as usize;
+        let data = rng.vec_i32(n, i32::MIN, i32::MAX);
+        let mut s = sys_with(dpus);
+        s.broadcast("b", &data, 4).unwrap();
+        assert_eq!(s.gather("b").unwrap(), data);
+        // Physically identical on every bank.
+        let meta = s.management.lookup("b").unwrap().clone();
+        let first = s.machine.read_bytes(0, meta.addr, meta.len * 4).unwrap();
+        for d in 1..dpus {
+            assert_eq!(s.machine.read_bytes(d, meta.addr, meta.len * 4).unwrap(), first);
+        }
+    }
+}
+
+#[test]
+fn prop_zip_map_equals_elementwise_golden() {
+    let mut rng = Prng::new(0x21B2A7);
+    for case in 0..CASES {
+        let dpus = 1 + rng.below(10) as usize;
+        let n = rng.below(8_000) as usize;
+        let x = rng.vec_i32(n, i32::MIN, i32::MAX);
+        let y = rng.vec_i32(n, i32::MIN, i32::MAX);
+        let mut s = sys_with(dpus);
+        s.scatter("x", &x, 4).unwrap();
+        s.scatter("y", &y, 4).unwrap();
+        s.array_zip("x", "y", "xy").unwrap();
+        let h = s.create_handle(PimFunc::VecAdd, TransformKind::Map, vec![]).unwrap();
+        s.array_map("xy", "z", &h).unwrap();
+        assert_eq!(s.gather("z").unwrap(), golden::vecadd(&x, &y), "case {case}");
+    }
+}
+
+#[test]
+fn prop_reduction_equals_fold_with_extremes() {
+    let mut rng = Prng::new(0x2ED0CE);
+    for case in 0..CASES {
+        let dpus = 1 + rng.below(16) as usize;
+        let n = rng.below(20_000) as usize;
+        let mut x = rng.vec_i32(n, i32::MIN, i32::MAX);
+        // Seed overflow-provoking extremes.
+        for _ in 0..rng.below(5) {
+            if !x.is_empty() {
+                let i = rng.below(x.len() as u64) as usize;
+                x[i] = if rng.chance(0.5) { i32::MAX } else { i32::MIN };
+            }
+        }
+        let mut s = sys_with(dpus);
+        s.scatter("r", &x, 4).unwrap();
+        let h = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+        let got = s.array_red("r", "rs", 1, &h).unwrap();
+        assert_eq!(got[0], golden::reduce_sum(&x), "case {case}");
+    }
+}
+
+#[test]
+fn prop_histogram_conserves_mass_and_matches_golden() {
+    let mut rng = Prng::new(0x815706);
+    for _ in 0..CASES {
+        let dpus = 1 + rng.below(8) as usize;
+        let n = rng.below(30_000) as usize;
+        let bins = [2u32, 16, 64, 256, 1024][rng.below(5) as usize];
+        let px = rng.vec_i32(n, 0, 4096);
+        let mut s = sys_with(dpus);
+        s.scatter("h", &px, 4).unwrap();
+        let h = s
+            .create_handle(PimFunc::Histogram { bins }, TransformKind::Red, vec![])
+            .unwrap();
+        let got = s.array_red("h", "hh", bins as u64, &h).unwrap();
+        assert_eq!(got, golden::histogram(&px, bins));
+        assert_eq!(got.iter().map(|&c| c as i64).sum::<i64>(), n as i64);
+    }
+}
+
+#[test]
+fn prop_allgather_preserves_content() {
+    let mut rng = Prng::new(0xA77647);
+    for _ in 0..CASES {
+        let dpus = 1 + rng.below(10) as usize;
+        let n = 1 + rng.below(3_000) as usize;
+        let data = rng.vec_i32(n, -1000, 1000);
+        let mut s = sys_with(dpus);
+        s.scatter("g", &data, 4).unwrap();
+        s.allgather("g", "gall").unwrap();
+        assert_eq!(s.gather("gall").unwrap(), data);
+        // And every DPU holds the complete array.
+        let meta = s.management.lookup("gall").unwrap().clone();
+        assert!(meta.per_dpu.iter().all(|&e| e == n as u64));
+    }
+}
+
+#[test]
+fn prop_allreduce_equals_n_dpus_fold() {
+    let mut rng = Prng::new(0xA112ED);
+    for _ in 0..CASES {
+        let dpus = 1 + rng.below(10) as usize;
+        let n = 1 + rng.below(500) as usize;
+        let data = rng.vec_i32(n, -10_000, 10_000);
+        let mut s = sys_with(dpus);
+        s.broadcast("ar", &data, 4).unwrap();
+        let h = s
+            .create_handle(PimFunc::HostAcc(i32::wrapping_add), TransformKind::Red, vec![])
+            .unwrap();
+        s.allreduce("ar", &h).unwrap();
+        let got = s.gather("ar").unwrap();
+        let want: Vec<i32> =
+            data.iter().map(|v| v.wrapping_mul(dpus as i32)).collect();
+        assert_eq!(got, want);
+    }
+}
+
+#[test]
+fn prop_map_preserves_distribution() {
+    // The output of array_map has exactly the input's per-DPU layout.
+    let mut rng = Prng::new(0xD157);
+    for _ in 0..CASES {
+        let dpus = 1 + rng.below(12) as usize;
+        let n = rng.below(6_000) as usize;
+        let data = rng.vec_i32(n, -100, 100);
+        let mut s = sys_with(dpus);
+        s.scatter("m", &data, 4).unwrap();
+        let h = s
+            .create_handle(PimFunc::AffineMap, TransformKind::Map, vec![2, 1])
+            .unwrap();
+        s.array_map("m", "mo", &h).unwrap();
+        let mi = s.management.lookup("m").unwrap().per_dpu.clone();
+        let mo = s.management.lookup("mo").unwrap().per_dpu.clone();
+        assert_eq!(mi, mo);
+    }
+}
+
+#[test]
+fn prop_random_op_sequences_keep_registry_and_mram_consistent() {
+    // Stateful property: a random interleaving of scatter / map / red /
+    // free never leaks MRAM and never leaves a dangling id.
+    let mut rng = Prng::new(0x57A7EF01);
+    for _case in 0..20 {
+        let dpus = 1 + rng.below(8) as usize;
+        let mut s = sys_with(dpus);
+        let mut live: Vec<String> = Vec::new();
+        for op in 0..40 {
+            match rng.below(4) {
+                0 => {
+                    let id = format!("a{op}");
+                    let n = rng.below(2_000) as usize;
+                    let data = rng.vec_i32(n, -50, 50);
+                    s.scatter(&id, &data, 4).unwrap();
+                    live.push(id);
+                }
+                1 if !live.is_empty() => {
+                    let src = live[rng.below(live.len() as u64) as usize].clone();
+                    // Lazy zips cannot be re-mapped through AffineMap here;
+                    // skip non-scattered sources.
+                    let meta = s.management.lookup(&src).unwrap().clone();
+                    if matches!(
+                        meta.layout,
+                        simplepim::coordinator::Layout::Scattered
+                    ) {
+                        let id = format!("m{op}");
+                        let h = s
+                            .create_handle(
+                                PimFunc::AffineMap,
+                                TransformKind::Map,
+                                vec![3, -1],
+                            )
+                            .unwrap();
+                        s.array_map(&src, &id, &h).unwrap();
+                        live.push(id);
+                    }
+                }
+                2 if !live.is_empty() => {
+                    let src = live[rng.below(live.len() as u64) as usize].clone();
+                    let meta = s.management.lookup(&src).unwrap().clone();
+                    if matches!(
+                        meta.layout,
+                        simplepim::coordinator::Layout::Scattered
+                    ) {
+                        let id = format!("r{op}");
+                        let h = s
+                            .create_handle(PimFunc::SumReduce, TransformKind::Red, vec![])
+                            .unwrap();
+                        s.array_red(&src, &id, 1, &h).unwrap();
+                        live.push(id);
+                    }
+                }
+                _ if !live.is_empty() => {
+                    let i = rng.below(live.len() as u64) as usize;
+                    let id = live.swap_remove(i);
+                    s.free_array(&id).unwrap();
+                }
+                _ => {}
+            }
+            // Invariant: registry and live set agree.
+            let mut ids = s.management.ids();
+            ids.sort();
+            let mut want: Vec<&str> = live.iter().map(|s| s.as_str()).collect();
+            want.sort();
+            assert_eq!(ids, want);
+        }
+        // Free everything; MRAM must return to zero.
+        for id in live.drain(..) {
+            s.free_array(&id).unwrap();
+        }
+        assert_eq!(s.machine.mram_used(), 0);
+    }
+}
+
+#[test]
+fn prop_duplicate_and_missing_ids_error_cleanly() {
+    let mut rng = Prng::new(0xE1101);
+    for _ in 0..CASES {
+        let mut s = sys_with(1 + rng.below(4) as usize);
+        let data = rng.vec_i32(10, 0, 10);
+        s.scatter("dup", &data, 4).unwrap();
+        assert!(s.scatter("dup", &data, 4).is_err(), "duplicate register must fail");
+        assert!(s.gather("missing").is_err());
+        assert!(s.free_array("missing").is_err());
+        // The failed operations must not corrupt the registry.
+        assert_eq!(s.gather("dup").unwrap(), data);
+    }
+}
