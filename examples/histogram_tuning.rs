@@ -14,8 +14,9 @@ use simplepim::workloads::{golden, histogram, Impl};
 use simplepim::{PimSystem, Result};
 
 fn main() -> Result<()> {
-    // --- functional run on the device.
-    let mut sys = PimSystem::new(PimConfig::upmem(64))?;
+    // --- functional run on the device (host engine when artifacts /
+    //     the `pjrt` feature are unavailable).
+    let mut sys = PimSystem::new_or_host(PimConfig::upmem(64));
     let px = histogram::generate(42, 1 << 21);
     let hist = histogram::run_simplepim(&mut sys, &px, 256)?;
     assert_eq!(hist, golden::histogram(&px, 256));

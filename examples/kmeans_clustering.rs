@@ -61,7 +61,7 @@ fn main() -> Result<()> {
     println!("=== SimplePIM K-means: {n_points} points, {K} clusters, {DIM} dims ===\n");
     let (x, true_centers) = kmeans::generate(7, n_points, K, DIM);
 
-    let mut sys = PimSystem::new(PimConfig::upmem(64))?;
+    let mut sys = PimSystem::new_or_host(PimConfig::upmem(64));
     kmeans::setup(&mut sys, &x, DIM)?;
 
     // Initialize from the first K points (deterministic).
@@ -89,7 +89,12 @@ fn main() -> Result<()> {
     assert!(err < 24.0, "centroids should land near the generating blobs");
 
     let t = sys.timeline();
+    let ps = sys.plan_stats();
     println!("modeled PIM time: {:.1} ms across {} launches", t.total_s() * 1e3, t.launches);
+    println!(
+        "plan cache: {} hit(s) / {} miss(es) — iterations 2..n reuse the first plan",
+        ps.cache_hits, ps.cache_misses
+    );
     println!("kmeans_clustering OK");
     Ok(())
 }

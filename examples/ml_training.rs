@@ -58,8 +58,9 @@ fn main() -> Result<()> {
 
     let (x, y, true_w) = logreg::generate(2024, n_points, dim);
 
-    // --- PIM training (XLA kernels under the Rust coordinator).
-    let mut sys = PimSystem::new(PimConfig::upmem(64))?;
+    // --- PIM training (XLA kernels under the Rust coordinator; host
+    //     engine when artifacts / the `pjrt` feature are unavailable).
+    let mut sys = PimSystem::new_or_host(PimConfig::upmem(64));
     logreg::setup(&mut sys, &x, &y, dim)?;
     let mut w = vec![0i32; dim];
     println!(

@@ -15,8 +15,10 @@ use simplepim::workloads::golden;
 use simplepim::Result;
 
 fn main() -> Result<()> {
-    // A 64-DPU UPMEM-like machine (one rank).
-    let mut sys = PimSystem::new(PimConfig::upmem(64))?;
+    // A 64-DPU UPMEM-like machine (one rank).  Falls back to the
+    // bit-identical host engine when artifacts / the `pjrt` feature
+    // are unavailable.
+    let mut sys = PimSystem::new_or_host(PimConfig::upmem(64));
     println!("machine: {} DPUs, XLA runtime: {}", sys.machine.n_dpus(), sys.has_runtime());
 
     // --- 1. Host -> PIM: scatter two vectors across the DPU banks.
@@ -48,7 +50,14 @@ fn main() -> Result<()> {
     assert_eq!(total, golden::reduce_sum(&want));
     println!("verified {} elements; reduction total = {total}", scaled.len());
 
-    // --- 6. The modeled PIM timeline for everything above.
+    // --- 6. The modeled PIM timeline for everything above, plus what
+    //        the plan engine did with it (steps 2-4 fuse into a single
+    //        gang launch; see DESIGN.md §9 / `run --explain`).
+    let stats = sys.plan_stats();
+    println!(
+        "\nplan engine: {} nodes, {} launches, {} fused chain(s) covering {} stages",
+        stats.nodes, stats.launches, stats.fused_chains, stats.fused_stages
+    );
     let t = sys.timeline();
     println!("\nmodeled PIM timeline:");
     println!("  host->pim   {:>9.3} ms ({} B)", t.host_to_pim_s * 1e3, t.bytes_h2p);

@@ -18,6 +18,48 @@ fn main() {
     let dpus = 16;
     let n = 1 << 20; // 1M i32
 
+    // --- plan engine: fused map→red pipeline vs eager per-call
+    //     dispatch on an iterative workload (the tentpole comparison:
+    //     fusion executes one gang launch per iteration and never
+    //     materializes the intermediate; eager dispatch writes the
+    //     intermediate to the simulated banks and reads it back).
+    {
+        let data = histogram::generate(7, n);
+        let bench = |fused: bool| {
+            let mut sys = PimSystem::host_only(PimConfig::upmem(dpus));
+            sys.set_fusion(fused).unwrap();
+            sys.scatter("px", &data, 4).unwrap();
+            let map =
+                sys.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![3, -17]).unwrap();
+            let red =
+                sys.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+            let mut i = 0u32;
+            let m = measure(2, 10, || {
+                let mid = format!("mid{i}");
+                let out = format!("out{i}");
+                sys.array_map("px", &mid, &map).unwrap();
+                std::hint::black_box(sys.array_red(&mid, &out, 1, &red).unwrap());
+                sys.free_array(&mid).unwrap();
+                sys.free_array(&out).unwrap();
+                i += 1;
+            });
+            (m, sys.plan_stats(), sys.timeline())
+        };
+        let (fused_m, fused_stats, fused_t) = bench(true);
+        let (eager_m, _, eager_t) = bench(false);
+        report("map+red 1M i32 x12 iters (fused plan)", fused_m, Some((n as u64, "elem")));
+        report("map+red 1M i32 x12 iters (eager dispatch)", eager_m, Some((n as u64, "elem")));
+        println!(
+            "    fused/eager wall speedup: {:.2}x | modeled launches {} vs {} | plan-cache hits {} | ctx reuses {} | buffer reuses {}",
+            eager_m.mean_s / fused_m.mean_s,
+            fused_t.launches,
+            eager_t.launches,
+            fused_stats.cache_hits,
+            fused_stats.ctx_reuses,
+            fused_stats.buffer_reuses,
+        );
+    }
+
     // --- scatter / gather marshalling throughput.
     {
         let mut sys = PimSystem::host_only(PimConfig::upmem(dpus));
@@ -47,10 +89,13 @@ fn main() {
             sys.array_zip("x", "y", "xy").unwrap();
             let h = sys.create_handle(PimFunc::VecAdd, TransformKind::Map, vec![]).unwrap();
             let mut i = 0u32;
-            // Warm the executable cache first.
+            // Warm the executable cache first.  `run()` forces the
+            // deferred launch so the bench keeps measuring an actual
+            // materialized map (a free alone would elide it).
             let m = measure(2, 8, || {
                 let id = format!("out{i}");
                 sys.array_map("xy", &id, &h).unwrap();
+                sys.run().unwrap();
                 sys.free_array(&id).unwrap();
                 i += 1;
             });
@@ -106,6 +151,7 @@ fn main() {
         let m = measure(2, 8, || {
             let id = format!("out{i}");
             sys.array_map("xy", &id, &h).unwrap();
+            sys.run().unwrap(); // force materialization (see XLA bench)
             sys.free_array(&id).unwrap();
             i += 1;
         });

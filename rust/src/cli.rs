@@ -66,6 +66,8 @@ COMMANDS:
   run <workload>    run one workload end-to-end on the simulated machine
                     workloads: reduction vecadd histogram linreg logreg kmeans
                     options: --dpus N (default 16) --elems N --host-only
+                             --explain (dump the optimized plan: nodes,
+                             fusions applied, plan-cache hits/misses)
   figures <which>   regenerate a paper figure from the timing model
                     which: fig9 fig10 fig11 ablations all
                     options: --csv (emit CSV instead of tables)

@@ -13,14 +13,16 @@ use crate::util::round_up;
 use super::comm::{bytes_to_words, words_to_bytes};
 use super::handle::Handle;
 use super::management::Layout;
+use super::plan::{NodeState, PlanOp};
 use super::PimSystem;
 
 impl PimSystem {
     /// `simple_pim_array_allreduce`: every DPU holds an equal-length
     /// local array under `id`; combine them elementwise with the
     /// handle's accumulative function and leave the combined array on
-    /// every DPU (in place).
+    /// every DPU (in place).  A forcing boundary for a deferred `id`.
     pub fn allreduce(&mut self, id: &str, handle: &Handle) -> Result<()> {
+        self.force_array(id)?;
         let meta = self.management.lookup(id)?.clone();
         if !matches!(meta.layout, Layout::Broadcast) {
             return Err(Error::Handle(format!(
@@ -55,12 +57,19 @@ impl PimSystem {
         let mut buf = words_to_bytes(&merged);
         buf.resize(padded as usize, 0);
         self.machine.push_broadcast(meta.addr, &buf)?;
+        let node = self.engine.record(PlanOp::Allreduce, id, &[id], meta.len);
+        self.engine.graph.set_state(node, NodeState::Executed);
         Ok(())
     }
 
     /// `simple_pim_array_allgather`: collect the scattered pieces of
     /// `id` and give every DPU the complete array under `new_id`.
     pub fn allgather(&mut self, id: &str, new_id: &str) -> Result<()> {
+        if self.management.contains(new_id) {
+            // Fail before the timed gather so misuse never charges the
+            // timeline or forces deferred work.
+            return Err(Error::DuplicateArray(new_id.to_string()));
+        }
         let meta = self.management.lookup(id)?.clone();
         if !matches!(meta.layout, Layout::Scattered) {
             return Err(Error::Handle(format!(
@@ -68,9 +77,12 @@ impl PimSystem {
                 meta.layout
             )));
         }
-        // Gather (timed) ...
+        // Gather (timed; forces a deferred producer) ...
         let full = self.gather(id)?;
         // ... and broadcast the complete array (timed + registered).
-        self.broadcast(new_id, &full, meta.type_size)
+        self.broadcast(new_id, &full, meta.type_size)?;
+        let node = self.engine.record(PlanOp::Allgather, new_id, &[id], meta.len);
+        self.engine.graph.set_state(node, NodeState::Executed);
+        Ok(())
     }
 }

@@ -5,12 +5,21 @@
 //! chunks so every DPU pushes/pulls an equal-sized 8-byte-aligned buffer
 //! (the precondition for the fast *parallel* transfer commands, §4.1),
 //! and no element is ever split across DPUs.
+//!
+//! Under the plan engine (DESIGN.md §9) these are the graph's source
+//! and sink nodes: `scatter`/`broadcast` execute immediately (host data
+//! in hand) but memoize their scatter plans per shape, `gather` is a
+//! forcing boundary that materializes any deferred producer, and
+//! `free_array` elides deferred maps that were never consumed (the
+//! optimizer's dead-intermediate rule) and recycles device buffers
+//! through the engine's pool.
 
 use crate::error::{Error, Result};
 use crate::util::round_up;
 
 use super::management::{ArrayMeta, Layout};
-use super::planner::plan_scatter;
+use super::plan::{NodeState, PlanOp};
+use super::planner::{plan_scatter, ScatterPlan};
 use super::PimSystem;
 
 impl PimSystem {
@@ -18,10 +27,13 @@ impl PimSystem {
     /// `type_size` bytes, given as packed i32 words) to every DPU and
     /// register it under `id`.
     pub fn broadcast(&mut self, id: &str, data: &[i32], type_size: u32) -> Result<()> {
+        if self.management.contains(id) {
+            return Err(Error::DuplicateArray(id.to_string()));
+        }
         let bytes = words_to_bytes(data);
         let len = check_elems(&bytes, type_size)?;
         let padded = round_up(bytes.len() as u64, self.machine.cfg.dma_align);
-        let addr = self.machine.alloc(padded.max(8))?;
+        let addr = self.pool_alloc(padded.max(8))?;
         let mut buf = bytes;
         buf.resize(padded as usize, 0);
         self.machine.push_broadcast(addr, &buf)?;
@@ -33,16 +45,22 @@ impl PimSystem {
             addr,
             padded_bytes: padded,
             layout: Layout::Broadcast,
-        })
+        })?;
+        let node = self.engine.record(PlanOp::Broadcast, id, &[], len);
+        self.engine.graph.set_state(node, NodeState::Executed);
+        Ok(())
     }
 
     /// `simple_pim_array_scatter`: split `data` evenly across the DPUs
     /// (alignment-aware, equal padded buffers) and register it.
     pub fn scatter(&mut self, id: &str, data: &[i32], type_size: u32) -> Result<()> {
+        if self.management.contains(id) {
+            return Err(Error::DuplicateArray(id.to_string()));
+        }
         let bytes = words_to_bytes(data);
         let len = check_elems(&bytes, type_size)?;
-        let plan = plan_scatter(&self.machine.cfg, len, type_size as u64);
-        let addr = self.machine.alloc(plan.padded_bytes.max(8))?;
+        let plan = self.scatter_plan(len, type_size as u64);
+        let addr = self.pool_alloc(plan.padded_bytes.max(8))?;
 
         let ts = type_size as usize;
         let mut bufs = Vec::with_capacity(self.machine.n_dpus());
@@ -63,14 +81,41 @@ impl PimSystem {
             addr,
             padded_bytes: plan.padded_bytes,
             layout: Layout::Scattered,
-        })
+        })?;
+        let node = self.engine.record(PlanOp::Scatter, id, &[], len);
+        self.engine.graph.set_state(node, NodeState::Executed);
+        Ok(())
+    }
+
+    /// Memoized scatter planning: identical (len, type_size, n_dpus)
+    /// requests — every iteration of a training loop — reuse the plan
+    /// instead of recomputing the split.
+    fn scatter_plan(&mut self, len: u64, type_size: u64) -> ScatterPlan {
+        let key = (len, type_size, self.machine.n_dpus());
+        if self.engine.optimize {
+            if let Some(plan) = self.engine.scatter_plans.get(&key) {
+                self.engine.stats.scatter_plan_hits += 1;
+                return plan.clone();
+            }
+        }
+        let plan = plan_scatter(&self.machine.cfg, len, type_size);
+        if self.engine.optimize && self.engine.scatter_plans.len() < 64 {
+            self.engine.scatter_plans.insert(key, plan.clone());
+        }
+        plan
     }
 
     /// `simple_pim_array_gather`: reassemble a scattered array on the
     /// host (or fetch one copy of a broadcast array).  Returns packed
-    /// i32 words.
+    /// i32 words.  A forcing boundary: a deferred producer is charged
+    /// and materialized first.
     pub fn gather(&mut self, id: &str) -> Result<Vec<i32>> {
+        self.force_array(id)?;
         let meta = self.management.lookup(id)?.clone();
+        if !matches!(meta.layout, Layout::LazyZip { .. }) {
+            let node = self.engine.record(PlanOp::Gather, id, &[id], meta.max_per_dpu());
+            self.engine.graph.set_state(node, NodeState::Executed);
+        }
         match &meta.layout {
             Layout::Scattered => {
                 let bufs = self.machine.pull_parallel(
@@ -97,10 +142,38 @@ impl PimSystem {
     }
 
     /// `simple_pim_array_free`: unregister and release MRAM.
+    ///
+    /// Freeing a deferred map that no consumer ever read **elides** it:
+    /// its launch is never charged and its bytes never touch MRAM (the
+    /// optimizer's dead-intermediate rule).  A deferred map that still
+    /// feeds other pending work has its chain charged first so the
+    /// fused-launch accounting stays complete.  When the registry
+    /// empties, the engine's pooled buffers and resident contexts are
+    /// released, so `machine.mram_used()` returns to zero.
     pub fn free_array(&mut self, id: &str) -> Result<()> {
+        let needs_charge = match self.engine.pending.get(id) {
+            Some(n) if !n.charged => {
+                self.engine.pending.values().any(|p| p.upstream.as_deref() == Some(id))
+            }
+            _ => false,
+        };
+        if needs_charge {
+            self.charge_chain(id)?;
+        }
         let meta = self.management.free(id)?;
-        if !matches!(meta.layout, Layout::LazyZip { .. }) {
-            self.machine.free(meta.addr)?;
+        if let Some(node) = self.engine.pending.remove(id) {
+            self.detach_dependents(id);
+            if !node.charged {
+                self.engine.stats.elided += 1;
+                self.engine.graph.set_state(node.node, NodeState::Elided);
+                self.engine.note(format!("elided dead intermediate `{id}` (never launched)"));
+            }
+            // Never materialized: nothing on the device to release.
+        } else if !matches!(meta.layout, Layout::LazyZip { .. }) {
+            self.pool_free(meta.addr, meta.padded_bytes)?;
+        }
+        if self.management.is_empty() {
+            self.release_device_caches()?;
         }
         Ok(())
     }

@@ -13,23 +13,65 @@
 //! functionally complete either way, and the integration tests pin the
 //! two paths to each other.
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 use crate::error::{Error, Result};
 use crate::runtime::{Runtime, TensorRef};
 use crate::workloads::golden;
 
 use super::handle::PimFunc;
 
+thread_local! {
+    /// Recycled gang-batch marshalling buffers: every launch used to
+    /// allocate fresh `gang x N` staging vectors; the executor now
+    /// round-trips them through this small per-thread pool so repeated
+    /// launches (training loops, fused chains) reuse the same memory.
+    static GANG_BUFS: RefCell<Vec<Vec<i32>>> = RefCell::new(Vec::new());
+}
+
+/// Buffers kept in the per-thread pool (they can be megabytes each).
+const GANG_BUF_POOL_CAP: usize = 8;
+/// Buffers above this capacity are dropped instead of pooled, so one
+/// huge launch cannot pin tens of megabytes of host memory forever.
+const GANG_BUF_MAX_POOLED_ELEMS: usize = 2 << 20; // 8 MB of i32
+
+/// Take a staging buffer of `len` elements initialized to `fill`.
+fn take_buf(len: usize, fill: i32) -> Vec<i32> {
+    let mut v = GANG_BUFS.with(|p| p.borrow_mut().pop()).unwrap_or_default();
+    v.clear();
+    v.resize(len, fill);
+    v
+}
+
+/// Return a staging buffer to the pool (dropped if the pool is full or
+/// the buffer is outsized).
+fn give_buf(v: Vec<i32>) {
+    if v.capacity() > GANG_BUF_MAX_POOLED_ELEMS {
+        return;
+    }
+    GANG_BUFS.with(|p| {
+        let mut p = p.borrow_mut();
+        if p.len() < GANG_BUF_POOL_CAP {
+            p.push(v);
+        }
+    });
+}
+
 /// Padded-centroid distance anchor for K-means (see DESIGN.md): far
 /// enough that no real point (features in `[0, ~4096)`) ever picks a
 /// padding centroid, small enough that squared distances stay in i32.
 pub const KMEANS_FAR: i32 = 8192;
 
-/// Per-DPU inputs to one kernel execution.
+/// Per-DPU inputs to one kernel execution.  The arrays are shared
+/// (`Rc`) so the plan engine can feed a deferred node's staged outputs
+/// into a fused consumer as a refcount bump instead of a
+/// multi-megabyte copy per launch.
 pub enum Inputs {
     /// One local array per DPU.
-    One(Vec<Vec<i32>>),
+    One(Rc<Vec<Vec<i32>>>),
     /// A lazily zipped pair: both constituents, per DPU.
-    Two(Vec<Vec<i32>>, Vec<Vec<i32>>),
+    Two(Rc<Vec<Vec<i32>>>, Rc<Vec<Vec<i32>>>),
 }
 
 impl Inputs {
@@ -42,15 +84,15 @@ impl Inputs {
 
     fn first(&self) -> &[Vec<i32>] {
         match self {
-            Inputs::One(a) => a,
-            Inputs::Two(a, _) => a,
+            Inputs::One(a) => a.as_slice(),
+            Inputs::Two(a, _) => a.as_slice(),
         }
     }
 
     fn second(&self) -> Option<&[Vec<i32>]> {
         match self {
             Inputs::One(_) => None,
-            Inputs::Two(_, b) => Some(b),
+            Inputs::Two(_, b) => Some(b.as_slice()),
         }
     }
 }
@@ -302,8 +344,8 @@ fn run_1d(
     let chunks = max_len.div_ceil(cap).max(1);
     let gang_shape = [gang, cap];
     let ctx_shape = ctx.map(|c| [c.len()]);
-    let mut xbuf = vec![pad; gang * cap];
-    let mut ybuf = vec![pad; gang * cap];
+    let mut xbuf = take_buf(gang * cap, pad);
+    let mut ybuf = take_buf(gang * cap, pad);
 
     for chunk in 0..chunks {
         let lo = chunk * cap;
@@ -358,6 +400,8 @@ fn run_1d(
             }
         }
     }
+    give_buf(xbuf);
+    give_buf(ybuf);
     Ok(outputs)
 }
 
@@ -392,9 +436,9 @@ fn run_grad(
     let mut wbuf = vec![0i32; d_art];
     wbuf[..dim].copy_from_slice(w);
 
-    let mut xbuf = vec![0i32; gang * cap * d_art];
-    let mut ybuf = vec![0i32; gang * cap];
-    let mut mbuf = vec![0i32; gang * cap];
+    let mut xbuf = take_buf(gang * cap * d_art, 0);
+    let mut ybuf = take_buf(gang * cap, 0);
+    let mut mbuf = take_buf(gang * cap, 0);
 
     for chunk in 0..chunks {
         let lo = chunk * cap;
@@ -436,6 +480,9 @@ fn run_grad(
             }
         }
     }
+    give_buf(xbuf);
+    give_buf(ybuf);
+    give_buf(mbuf);
     Ok(outputs)
 }
 
@@ -474,8 +521,8 @@ fn run_kmeans(
     let x_shape = [gang, cap, d_art];
     let v_shape = [gang, cap];
     let c_shape = [k_art, d_art];
-    let mut xbuf = vec![0i32; gang * cap * d_art];
-    let mut mbuf = vec![0i32; gang * cap];
+    let mut xbuf = take_buf(gang * cap * d_art, 0);
+    let mut mbuf = take_buf(gang * cap, 0);
 
     let mut outputs = vec![vec![0i32; k * dim + k]; n_dpus];
     let chunks = max_pts.div_ceil(cap).max(1);
@@ -522,6 +569,8 @@ fn run_kmeans(
             }
         }
     }
+    give_buf(xbuf);
+    give_buf(mbuf);
     Ok(outputs)
 }
 
@@ -534,18 +583,19 @@ mod tests {
 
     #[test]
     fn host_fallback_vecadd() {
-        let inputs = Inputs::Two(vec![vec![1, 2], vec![3]], vec![vec![10, 20], vec![30]]);
+        let inputs =
+            Inputs::Two(Rc::new(vec![vec![1, 2], vec![3]]), Rc::new(vec![vec![10, 20], vec![30]]));
         let out = execute_func(None, &PimFunc::VecAdd, &[], &inputs).unwrap();
         assert_eq!(out, vec![vec![11, 22], vec![33]]);
     }
 
     #[test]
     fn host_fallback_sum_and_hist() {
-        let inputs = Inputs::One(vec![vec![1, 2, 3], vec![4]]);
+        let inputs = Inputs::One(Rc::new(vec![vec![1, 2, 3], vec![4]]));
         let out = execute_func(None, &PimFunc::SumReduce, &[], &inputs).unwrap();
         assert_eq!(out, vec![vec![6], vec![4]]);
 
-        let inputs = Inputs::One(vec![vec![0, 16, 4095]]);
+        let inputs = Inputs::One(Rc::new(vec![vec![0, 16, 4095]]));
         let out =
             execute_func(None, &PimFunc::Histogram { bins: 256 }, &[], &inputs).unwrap();
         assert_eq!(out[0][0], 1);
@@ -564,14 +614,28 @@ mod tests {
             }
         }
         let f = PimFunc::HostRed { output_len: 1, init: i32::MAX, func: min_red };
-        let inputs = Inputs::One(vec![vec![5, -3, 7], vec![2, 9]]);
+        let inputs = Inputs::One(Rc::new(vec![vec![5, -3, 7], vec![2, 9]]));
         let out = execute_func(None, &f, &[], &inputs).unwrap();
         assert_eq!(out, vec![vec![-3], vec![2]]);
     }
 
     #[test]
     fn vecadd_without_pair_errors() {
-        let inputs = Inputs::One(vec![vec![1]]);
+        let inputs = Inputs::One(Rc::new(vec![vec![1]]));
         assert!(execute_func(None, &PimFunc::VecAdd, &[], &inputs).is_err());
+    }
+
+    #[test]
+    fn gang_buffer_pool_recycles_and_reinitializes() {
+        let mut a = take_buf(16, 7);
+        assert_eq!(a.len(), 16);
+        assert!(a.iter().all(|&v| v == 7));
+        a[0] = 99;
+        give_buf(a);
+        // A recycled buffer must come back fully re-initialized.
+        let b = take_buf(32, -1);
+        assert_eq!(b.len(), 32);
+        assert!(b.iter().all(|&v| v == -1));
+        give_buf(b);
     }
 }

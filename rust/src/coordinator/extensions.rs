@@ -24,6 +24,7 @@ use crate::util::round_up;
 
 use super::comm::words_to_bytes;
 use super::management::{ArrayMeta, Layout};
+use super::plan::{NodeState, PlanOp};
 use super::PimSystem;
 
 /// Instruction profile of one local-scan pass (load, add-accumulate,
@@ -63,6 +64,7 @@ impl PimSystem {
     /// (`dest[i] = x[0] + ... + x[i]`, i32 wraparound), registered
     /// under `dest_id` with the same distribution.
     pub fn array_scan(&mut self, src_id: &str, dest_id: &str) -> Result<()> {
+        self.force_array(src_id)?; // forcing boundary for deferred maps
         let meta = self.management.lookup(src_id)?.clone();
         let locals = self.read_local(&meta)?;
         let elems = meta.max_per_dpu();
@@ -97,10 +99,11 @@ impl PimSystem {
             self.tasklets,
         );
         self.machine.charge_kernel(t.seconds);
+        self.engine.stats.launches += 1;
 
         // Host root: gather totals (small parallel pull), exclusive-scan
         // them into per-DPU bases, push one base per DPU.
-        let scratch = self.machine.alloc(8)?;
+        let scratch = self.pool_alloc(8)?;
         for (dpu, &tot) in totals.iter().enumerate() {
             self.machine.write_bytes(dpu, scratch, &words_to_bytes(&[tot, 0]))?;
         }
@@ -115,7 +118,7 @@ impl PimSystem {
         let base_bufs: Vec<Vec<u8>> =
             bases.iter().map(|&b| words_to_bytes(&[b, 0])).collect();
         self.machine.push_parallel(scratch, &base_bufs)?;
-        self.machine.free(scratch)?;
+        self.pool_free(scratch, 8)?;
 
         // Phase 2: add the base to every local element (second launch),
         // through the `add_base` artifact when available.
@@ -138,10 +141,11 @@ impl PimSystem {
             self.tasklets,
         );
         self.machine.charge_kernel(t2.seconds);
+        self.engine.stats.launches += 1;
 
         // Register + store the output.
         let padded = round_up(elems * 4, 8).max(8);
-        let addr = self.machine.alloc(padded)?;
+        let addr = self.pool_alloc(padded)?;
         for (dpu, s) in scanned.iter().enumerate() {
             self.machine.write_bytes(dpu, addr, &words_to_bytes(s))?;
         }
@@ -153,7 +157,10 @@ impl PimSystem {
             addr,
             padded_bytes: padded,
             layout: Layout::Scattered,
-        })
+        })?;
+        let node = self.engine.record(PlanOp::Scan, dest_id, &[src_id], elems);
+        self.engine.graph.set_state(node, NodeState::Executed);
+        Ok(())
     }
 
     /// Keep only the elements satisfying `pred`; the output keeps the
@@ -165,6 +172,7 @@ impl PimSystem {
         dest_id: &str,
         pred: fn(i32) -> bool,
     ) -> Result<u64> {
+        self.force_array(src_id)?; // forcing boundary for deferred maps
         let meta = self.management.lookup(src_id)?.clone();
         let locals = self.read_local(&meta)?;
         let elems = meta.max_per_dpu();
@@ -182,10 +190,11 @@ impl PimSystem {
             self.tasklets,
         );
         self.machine.charge_kernel(t.seconds);
+        self.engine.stats.launches += 1;
 
         let max_kept = kept.iter().map(|k| k.len()).max().unwrap_or(0) as u64;
         let padded = round_up(max_kept * 4, 8).max(8);
-        let addr = self.machine.alloc(padded)?;
+        let addr = self.pool_alloc(padded)?;
         for (dpu, k) in kept.iter().enumerate() {
             self.machine.write_bytes(dpu, addr, &words_to_bytes(k))?;
         }
@@ -200,6 +209,8 @@ impl PimSystem {
             padded_bytes: padded,
             layout: Layout::Scattered,
         })?;
+        let node = self.engine.record(PlanOp::Filter, dest_id, &[src_id], elems);
+        self.engine.graph.set_state(node, NodeState::Executed);
         Ok(total)
     }
 }

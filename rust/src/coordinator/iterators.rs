@@ -1,11 +1,25 @@
 //! The SimplePIM **processing interface** (paper §3.3): the `map`,
-//! general `red`, and lazy `zip` iterators.
+//! general `red`, and lazy `zip` iterators — now the plan-building
+//! frontend of the execution engine (DESIGN.md §9).
 //!
-//! Each iterator call does two synchronized things (DESIGN.md §7):
-//! *functional* execution through the AOT XLA executables (or the
-//! bit-identical host fallback), and *timing* accounting through the
-//! substrate's analytic model, using the handle's instruction profile,
-//! the planner's batch size, and the scheduler's active-thread count.
+//! Each call still does two synchronized things (functional execution
+//! through the AOT XLA executables or the bit-identical host fallback,
+//! and timing accounting through the substrate's analytic model), but
+//! the *device-visible* half is deferred:
+//!
+//! * `array_map` computes its result into host staging buffers,
+//!   registers the output's metadata, and appends a **pending**
+//!   [`super::plan::PlanNode`] — no launch is charged and no MRAM is
+//!   written until the node is forced (gather / `run()` / a consumer).
+//! * `array_red` is a forcing boundary (it returns the merged values):
+//!   it consumes any uncharged upstream map chain and charges **one**
+//!   fused gang launch priced by the fused instruction profile, with
+//!   the intermediate arrays never materialized; the reduction variant
+//!   comes from the LRU plan cache when the same (chain, shape, ctx)
+//!   was planned before.
+//! * `array_zip` stays lazy metadata, exactly as in the paper (§4.2.3).
+
+use std::rc::Rc;
 
 use crate::error::{Error, Result};
 use crate::timing;
@@ -15,10 +29,13 @@ use super::comm::{bytes_to_words, words_to_bytes};
 use super::exec::{execute_func, Inputs};
 use super::handle::{Handle, TransformKind};
 use super::management::{ArrayMeta, Layout};
+use super::optimizer;
+use super::plan::{CacheKey, NodeState, PendingNode, PlanOp};
 use super::PimSystem;
 
 impl PimSystem {
-    /// Read the per-DPU i32 words of a *physical* (non-lazy) array.
+    /// Read the per-DPU i32 words of a *physical* (non-lazy,
+    /// materialized) array.
     pub(crate) fn read_local(&self, meta: &ArrayMeta) -> Result<Vec<Vec<i32>>> {
         let n = self.machine.n_dpus();
         let mut out = Vec::with_capacity(n);
@@ -33,56 +50,54 @@ impl PimSystem {
         Ok(out)
     }
 
+    /// Per-DPU words of an array id, forcing a deferred node first
+    /// (the generic "someone needs the bytes" consumer path).
+    pub(crate) fn local_words(&mut self, id: &str) -> Result<Vec<Vec<i32>>> {
+        self.force_array(id)?;
+        let meta = self.management.lookup(id)?.clone();
+        self.read_local(&meta)
+    }
+
     /// Build kernel inputs for an array id (resolving one lazy-zip
-    /// level).
-    fn inputs_for(&self, id: &str) -> Result<(Inputs, ArrayMeta)> {
+    /// level), forcing deferred producers along the way.
+    fn resolve_inputs(&mut self, id: &str) -> Result<(Inputs, ArrayMeta)> {
         let meta = self.management.lookup(id)?.clone();
         match &meta.layout {
             Layout::Scattered | Layout::Broadcast => {
-                Ok((Inputs::One(self.read_local(&meta)?), meta))
+                let words = self.local_words(id)?;
+                Ok((Inputs::One(Rc::new(words)), meta))
             }
             Layout::LazyZip { a, b } => {
-                let ma = self.management.lookup(a)?.clone();
-                let mb = self.management.lookup(b)?.clone();
-                Ok((Inputs::Two(self.read_local(&ma)?, self.read_local(&mb)?), meta))
+                let (a, b) = (a.clone(), b.clone());
+                let va = self.local_words(&a)?;
+                let vb = self.local_words(&b)?;
+                Ok((Inputs::Two(Rc::new(va), Rc::new(vb)), meta))
             }
         }
-    }
-
-    /// Broadcast a handle's context (paper: handle `data` shipped to all
-    /// PIM cores before the launch).  Charged as a broadcast transfer.
-    fn ship_context(&mut self, handle: &Handle) -> Result<()> {
-        if handle.ctx.is_empty() {
-            return Ok(());
-        }
-        let bytes = words_to_bytes(&handle.ctx);
-        let padded = round_up(bytes.len() as u64, 8);
-        let addr = self.machine.alloc(padded)?;
-        let mut buf = bytes;
-        buf.resize(padded as usize, 0);
-        self.machine.push_broadcast(addr, &buf)?;
-        self.machine.free(addr)?; // scratch: freed after the launch
-        Ok(())
     }
 
     /// Logical elements per DPU for timing.  Arrays are registered with
     /// their true element size (a whole point row for the ML workloads),
     /// so the registered per-DPU count *is* the logical element count;
     /// a lazy zip inherits its constituents' distribution.
-    fn logical_elems(&self, meta: &ArrayMeta, _handle: &Handle) -> u64 {
+    fn logical_elems(meta: &ArrayMeta) -> u64 {
         meta.max_per_dpu()
     }
 
     /// `simple_pim_array_map`: apply `handle` to every element of
     /// `src_id`, producing `dest_id` with the same distribution.
+    ///
+    /// Builds a deferred plan node: the launch is charged and the
+    /// output materialized only when forced.  A map whose source is
+    /// itself deferred extends the fusible chain.
     pub fn array_map(&mut self, src_id: &str, dest_id: &str, handle: &Handle) -> Result<()> {
         if handle.kind != TransformKind::Map {
             return Err(Error::Handle("array_map requires a Map handle".into()));
         }
-        let (inputs, src) = self.inputs_for(src_id)?;
+        let src = self.management.lookup(src_id)?.clone();
+        let elems = Self::logical_elems(&src);
 
         // --- timing: eager-zip pass if lazy zip is disabled (ablation).
-        let elems = self.logical_elems(&src, handle);
         if matches!(src.layout, Layout::LazyZip { .. }) && !self.opts.lazy_zip {
             let zip_t = timing::eager_zip_kernel(
                 &self.machine.cfg,
@@ -93,44 +108,63 @@ impl PimSystem {
                 self.tasklets,
             );
             self.machine.charge_kernel(zip_t.seconds);
+            self.engine.stats.launches += 1;
         }
 
-        // --- functional execution.
-        self.ship_context(handle)?;
+        // --- functional execution into host staging buffers.  A
+        //     deferred source feeds the chain directly from its staged
+        //     outputs (nothing reads MRAM for the intermediate).
+        let (inputs, upstream) = if self.engine.pending.contains_key(src_id) {
+            let staged = Rc::clone(&self.engine.pending.get(src_id).expect("checked").outputs);
+            (Inputs::One(staged), Some(src_id.to_string()))
+        } else {
+            (self.resolve_inputs(src_id)?.0, None)
+        };
         let outputs = execute_func(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?;
 
-        // --- timing: the map launch itself.
-        let t = timing::map_kernel(
-            &self.machine.cfg,
-            &handle.profile,
-            &self.opts,
-            self.dma_policy,
-            elems,
-            self.tasklets,
-        );
-        self.machine.charge_kernel(t.seconds);
-
-        // --- register + store the output (stays PIM-resident).
-        let out_max_words = outputs.iter().map(|o| o.len()).max().unwrap_or(0);
-        let padded = round_up(out_max_words as u64 * 4, 8).max(8);
-        let addr = self.machine.alloc(padded)?;
-        for (dpu, out) in outputs.iter().enumerate() {
-            self.machine.write_bytes(dpu, addr, &words_to_bytes(out))?;
-        }
+        // --- register the output's metadata (placement is filled in at
+        //     materialization time).
         let per_dpu: Vec<u64> = outputs.iter().map(|o| o.len() as u64).collect();
-        let len = per_dpu.iter().sum();
+        let layout = match src.layout {
+            Layout::Broadcast => Layout::Broadcast,
+            _ => Layout::Scattered,
+        };
+        let len = match layout {
+            Layout::Broadcast => per_dpu.first().copied().unwrap_or(0),
+            _ => per_dpu.iter().sum(),
+        };
         self.management.register(ArrayMeta {
             id: dest_id.to_string(),
             len,
             type_size: 4,
             per_dpu,
-            addr,
-            padded_bytes: padded,
-            layout: match src.layout {
-                Layout::Broadcast => Layout::Broadcast,
-                _ => Layout::Scattered,
+            addr: 0,
+            padded_bytes: 0,
+            layout,
+        })?;
+
+        // --- append the plan node and defer (or force, in eager mode).
+        let node = self.engine.record(
+            PlanOp::Map { func: format!("{:?}", handle.func) },
+            dest_id,
+            &[src_id],
+            elems,
+        );
+        self.engine.pending.insert(
+            dest_id.to_string(),
+            PendingNode {
+                node,
+                handle: handle.clone(),
+                upstream,
+                outputs: Rc::new(outputs),
+                charged: false,
+                elems,
             },
-        })
+        );
+        if !self.engine.optimize {
+            self.force_array(dest_id)?;
+        }
+        Ok(())
     }
 
     /// `simple_pim_array_red`: general reduction of `src_id` into an
@@ -138,6 +172,10 @@ impl PimSystem {
     /// merged on the host with the handle's `acc_func`, and the merged
     /// result is registered under `dest_id` (broadcast back to PIM, so
     /// later iterators can use it).  Also returns the merged values.
+    ///
+    /// A forcing boundary: an uncharged deferred map chain feeding the
+    /// reduction executes *inside this one launch* (map→red fusion) and
+    /// its intermediates are never materialized.
     pub fn array_red(
         &mut self,
         src_id: &str,
@@ -155,31 +193,74 @@ impl PimSystem {
                 handle.func
             )));
         }
-        let (inputs, src) = self.inputs_for(src_id)?;
-        let elems = self.logical_elems(&src, handle);
+        if self.management.contains(dest_id) {
+            // Fail before charging the launch or allocating the result,
+            // so misuse never leaks MRAM or skews the timeline.
+            return Err(Error::DuplicateArray(dest_id.to_string()));
+        }
+        let src = self.management.lookup(src_id)?.clone();
+
+        // --- resolve inputs + the fusible upstream chain.
+        let (inputs, chain) = match self.engine.pending.get(src_id) {
+            Some(n) if !n.charged => {
+                let chain = self.collect_uncharged_chain(src_id);
+                (Inputs::One(Rc::clone(&n.outputs)), chain)
+            }
+            Some(n) => (Inputs::One(Rc::clone(&n.outputs)), Vec::new()),
+            None => (self.resolve_inputs(src_id)?.0, Vec::new()),
+        };
+        let elems = match chain.first() {
+            Some(root) => self.engine.pending.get(root).expect("in chain").elems,
+            None => Self::logical_elems(&src),
+        };
+
+        // --- ship contexts: chain stages first, then the reduction.
+        let mut profiles = self.ship_chain_contexts(&chain)?;
+        self.ship_context(handle)?;
 
         // --- functional execution: per-DPU partials.
-        self.ship_context(handle)?;
-        let partials =
-            execute_func(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?;
+        let partials = execute_func(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?;
 
-        // --- timing: reduction launch (variant choice is automatic
-        //     unless overridden, paper §4.2.2).
-        let variant = self.red_variant_override.unwrap_or_else(|| {
-            timing::choose_reduce_variant(
-                &self.machine.cfg,
-                &handle.profile,
-                &self.opts,
-                self.dma_policy,
-                elems,
-                self.tasklets,
-                output_len,
-                4,
-            )
-        });
+        // --- timing: one (possibly fused) reduction launch, variant
+        //     from the plan cache when available (paper §4.2.2 choice).
+        profiles.push(handle.profile);
+        let fused = optimizer::fuse_profiles(&profiles);
+        let mut funcs: Vec<String> = chain
+            .iter()
+            .map(|c| format!("{:?}", self.engine.pending.get(c).expect("in chain").handle.func))
+            .collect();
+        funcs.push(format!("{:?}", handle.func));
+        let key = CacheKey {
+            funcs,
+            per_dpu: src.per_dpu.clone(),
+            output_len,
+            ctx_len: handle.ctx.len(),
+            tasklets: self.tasklets,
+        };
+        let cache = if self.engine.optimize { Some((&mut self.engine.cache, key)) } else { None };
+        let plan = optimizer::plan_reduction(
+            &self.machine.cfg,
+            &fused,
+            &self.opts,
+            self.dma_policy,
+            elems,
+            self.tasklets,
+            output_len,
+            4,
+            cache,
+            self.red_variant_override,
+        );
+        if self.engine.optimize && self.red_variant_override.is_none() {
+            if plan.cached {
+                self.engine.stats.cache_hits += 1;
+            } else {
+                self.engine.stats.cache_misses += 1;
+            }
+        }
+        let variant = plan.variant;
         let t = timing::reduce_kernel(
             &self.machine.cfg,
-            &handle.profile,
+            &fused,
             &self.opts,
             self.dma_policy,
             elems,
@@ -189,18 +270,39 @@ impl PimSystem {
             variant,
         );
         self.machine.charge_kernel(t.seconds);
+        self.engine.stats.launches += 1;
         self.last_red_variant = Some((variant, t.active_tasklets));
 
-        // --- PIM -> host: partials land in a scratch region, then the
-        //     timed parallel gather pulls them (the paper's "gathered to
-        //     the host and combined using a host version of acc_func").
+        // --- mark the fused chain charged (its intermediates stay
+        //     unmaterialized; freeing them later elides them for good).
+        if !chain.is_empty() {
+            self.engine.stats.fused_chains += 1;
+            self.engine.stats.fused_stages += chain.len() as u64 + 1;
+            let desc = format!(
+                "fused {} map stage(s) into reduction `{dest_id}`: {} -> red ({})",
+                chain.len(),
+                chain.join(" -> "),
+                if plan.cached { "plan-cache hit" } else { "planned" }
+            );
+            self.engine.note(desc);
+            // Chain stages are always part of a >= 2-stage fused launch
+            // here (maps + the reduction), hence `Fused`.
+            self.mark_chain_charged(&chain, NodeState::Fused);
+        } else if plan.cached {
+            self.engine.note(format!("plan-cache hit for reduction `{dest_id}`"));
+        }
+
+        // --- PIM -> host: partials land in a (pooled) scratch region,
+        //     then the timed parallel gather pulls them (the paper's
+        //     "gathered to the host and combined using a host version
+        //     of acc_func").
         let part_bytes = round_up(output_len * 4, 8).max(8);
-        let scratch = self.machine.alloc(part_bytes)?;
+        let scratch = self.pool_alloc(part_bytes)?;
         for (dpu, p) in partials.iter().enumerate() {
             self.machine.write_bytes(dpu, scratch, &words_to_bytes(p))?;
         }
         let pulled = self.machine.pull_parallel(scratch, part_bytes, self.machine.n_dpus())?;
-        self.machine.free(scratch)?;
+        self.pool_free(scratch, part_bytes)?;
 
         // --- host merge (OpenMP analog; modeled + functional).
         let acc = handle.func.acc();
@@ -213,8 +315,9 @@ impl PimSystem {
         }
         self.machine.charge_host_merge(output_len * self.machine.n_dpus() as u64);
 
-        // --- register the merged result as a broadcast array.
-        let addr = self.machine.alloc(part_bytes)?;
+        // --- register the merged result as a broadcast array (pooled
+        //     allocation: training loops recycle it every iteration).
+        let addr = self.pool_alloc(part_bytes)?;
         let mut buf = words_to_bytes(&merged);
         buf.resize(part_bytes as usize, 0);
         self.machine.push_broadcast(addr, &buf)?;
@@ -227,6 +330,13 @@ impl PimSystem {
             padded_bytes: part_bytes,
             layout: Layout::Broadcast,
         })?;
+        let node = self.engine.record(
+            PlanOp::Red { func: format!("{:?}", handle.func), output_len },
+            dest_id,
+            &[src_id],
+            elems,
+        );
+        self.engine.graph.set_state(node, NodeState::Executed);
         Ok(merged)
     }
 
@@ -264,8 +374,13 @@ impl PimSystem {
             per_dpu: a.per_dpu.clone(),
             addr: 0,
             padded_bytes: 0,
-            layout: Layout::LazyZip { a: a_id, b: b_id },
-        })
+            layout: Layout::LazyZip { a: a_id.clone(), b: b_id.clone() },
+        })?;
+        let node =
+            self.engine.record(PlanOp::Zip, dest_id, &[a_id.as_str(), b_id.as_str()], a.len);
+        // Zips carry no device work of their own.
+        self.engine.graph.set_state(node, NodeState::Executed);
+        Ok(())
     }
 
     /// Physically combine a lazily zipped array into an interleaved
@@ -275,15 +390,17 @@ impl PimSystem {
         let Layout::LazyZip { a, b } = &meta.layout else {
             return Ok(id.to_string());
         };
-        let ma = self.management.lookup(a)?.clone();
-        let mb = self.management.lookup(b)?.clone();
-        let va = self.read_local(&ma)?;
-        let vb = self.read_local(&mb)?;
+        let (a, b) = (a.clone(), b.clone());
+        let va = self.local_words(&a)?;
+        let vb = self.local_words(&b)?;
+        let ma = self.management.lookup(&a)?.clone();
+        let mb = self.management.lookup(&b)?.clone();
 
         let wa = (ma.type_size / 4) as usize;
         let wb = (mb.type_size / 4) as usize;
-        let padded = round_up(meta.max_per_dpu() * (ma.type_size + mb.type_size) as u64, 8).max(8);
-        let addr = self.machine.alloc(padded)?;
+        let padded =
+            round_up(meta.max_per_dpu() * (ma.type_size + mb.type_size) as u64, 8).max(8);
+        let addr = self.pool_alloc(padded)?;
         for dpu in 0..self.machine.n_dpus() {
             let n = meta.per_dpu[dpu] as usize;
             let mut inter = Vec::with_capacity(n * (wa + wb));
@@ -304,6 +421,7 @@ impl PimSystem {
             self.tasklets,
         );
         self.machine.charge_kernel(t.seconds);
+        self.engine.stats.launches += 1;
 
         let new_id = format!("__mat_{id}");
         self.management.register(ArrayMeta {

@@ -84,6 +84,17 @@ impl Management {
         self.arrays.get(id).ok_or_else(|| Error::UnknownArray(id.to_string()))
     }
 
+    /// Replace the metadata of an already-registered id (used by the
+    /// plan engine when a deferred array is materialized and its MRAM
+    /// placement becomes known).
+    pub fn replace(&mut self, meta: ArrayMeta) -> Result<()> {
+        if !self.arrays.contains_key(&meta.id) {
+            return Err(Error::UnknownArray(meta.id));
+        }
+        self.arrays.insert(meta.id.clone(), meta);
+        Ok(())
+    }
+
     /// Remove an id from the registry (paper: `free`); returns the meta
     /// so the caller can release the MRAM allocation.
     pub fn free(&mut self, id: &str) -> Result<ArrayMeta> {
@@ -97,6 +108,12 @@ impl Management {
 
     pub fn contains(&self, id: &str) -> bool {
         self.arrays.contains_key(id)
+    }
+
+    /// Whether no arrays are registered (the plan engine releases its
+    /// cached device buffers at this quiescent point).
+    pub fn is_empty(&self) -> bool {
+        self.arrays.is_empty()
     }
 }
 
@@ -140,6 +157,21 @@ mod tests {
     fn free_unknown_errors() {
         let mut m = Management::new();
         assert!(matches!(m.free("nope"), Err(Error::UnknownArray(_))));
+    }
+
+    #[test]
+    fn replace_updates_only_registered_ids() {
+        let mut m = Management::new();
+        assert!(matches!(m.replace(meta("ghost")), Err(Error::UnknownArray(_))));
+        m.register(meta("t")).unwrap();
+        let mut updated = meta("t");
+        updated.addr = 4096;
+        updated.padded_bytes = 256;
+        m.replace(updated).unwrap();
+        assert_eq!(m.lookup("t").unwrap().addr, 4096);
+        assert!(!m.is_empty());
+        m.free("t").unwrap();
+        assert!(m.is_empty());
     }
 
     #[test]

@@ -13,10 +13,21 @@
 //!   [`handle::Handle`]s created from [`handle::PimFunc`] kernel
 //!   families.
 //!
+//! The request path is **plan-based** (DESIGN.md §9): iterator calls
+//! build [`plan::PlanNode`]s in a lazy op graph rather than dispatching
+//! eagerly.  Map nodes defer their launch and MRAM materialization
+//! until forced (by `gather`, a collective, [`PimSystem::run`], or a
+//! consuming reduction); the optimizer ([`optimizer`]) then executes
+//! map→map / map→red chains as a single fused gang launch with no
+//! materialized intermediate, elides dead intermediates, serves
+//! repeated reductions from an LRU plan cache, and recycles device
+//! buffers and shipped contexts across training-loop iterations.
+//!
 //! Supporting machinery: [`scheduler`] (tasklet partitioning +
 //! WRAM-pressure thread laddering), [`planner`] (scatter padding +
-//! dynamic DMA batch sizing), [`exec`] (gang-batched functional
-//! execution through PJRT).
+//! dynamic DMA batch sizing, memoized per shape), [`exec`]
+//! (gang-batched functional execution through PJRT, with reusable gang
+//! buffers).
 
 pub mod collectives;
 pub mod comm;
@@ -25,11 +36,14 @@ pub mod extensions;
 pub mod handle;
 pub mod iterators;
 pub mod management;
+pub mod optimizer;
+pub mod plan;
 pub mod planner;
 pub mod scheduler;
 
 pub use handle::{Handle, PimFunc, TransformKind};
 pub use management::{ArrayMeta, Layout, Management};
+pub use plan::{NodeState, PlanNode, PlanOp, PlanStats};
 
 use crate::error::Result;
 use crate::pim::{PimConfig, PimMachine, Timeline};
@@ -37,12 +51,15 @@ use crate::runtime::Runtime;
 use crate::timing::{DmaPolicy, OptFlags, ReduceVariant};
 
 /// The assembled SimplePIM system: one simulated PIM machine, the
-/// host-side management registry, and (optionally) the PJRT runtime
-/// executing the AOT-compiled kernels.
+/// host-side management registry, the plan engine, and (optionally) the
+/// PJRT runtime executing the AOT-compiled kernels.
 pub struct PimSystem {
     pub machine: PimMachine,
     pub management: Management,
     pub(crate) runtime: Option<Runtime>,
+    /// The plan-based execution engine: lazy op graph, pending
+    /// (deferred) maps, plan cache, buffer/context pools.
+    pub(crate) engine: plan::PlanEngine,
     /// Code-optimization flags the framework "compiles" kernels with
     /// (all on by default; the ablation bench toggles them).
     pub opts: OptFlags,
@@ -71,6 +88,17 @@ impl PimSystem {
         Self::with_runtime(cfg, None)
     }
 
+    /// [`Self::new`], silently falling back to the host execution
+    /// engine when the PJRT runtime is unavailable (missing artifacts
+    /// or a build without the `pjrt` feature).  The convenience
+    /// constructor examples and tests use.
+    pub fn new_or_host(cfg: PimConfig) -> Self {
+        match Self::new(cfg.clone()) {
+            Ok(s) => s,
+            Err(_) => Self::host_only(cfg),
+        }
+    }
+
     /// Build with an explicit (possibly shared) runtime decision.
     pub fn with_runtime(cfg: PimConfig, runtime: Option<Runtime>) -> Self {
         let tasklets = cfg.default_tasklets;
@@ -78,6 +106,7 @@ impl PimSystem {
             machine: PimMachine::new(cfg),
             management: Management::new(),
             runtime,
+            engine: plan::PlanEngine::new(),
             opts: OptFlags::simplepim(),
             tasklets,
             dma_policy: DmaPolicy::Dynamic,

@@ -1,0 +1,176 @@
+//! Plan optimizer: chain fusion and reduction planning (DESIGN.md §9).
+//!
+//! Three rewrites run over the lazily built op graph:
+//!
+//! 1. **map→map / map→red fusion** — a chain of deferred map stages
+//!    feeding a map or reduction executes as **one** gang launch whose
+//!    instruction profile is the stages' fold under
+//!    [`KernelProfile::fuse_with`]: one inner loop, intermediates in
+//!    registers, boundary DMA only at the chain's endpoints.
+//! 2. **Dead-intermediate elision** — a deferred map freed before any
+//!    consumer reads its bytes never launches and never touches MRAM
+//!    (see `PimSystem::free_array`).
+//! 3. **Plan caching** — [`plan_reduction`] consults the LRU plan cache
+//!    before re-running the §4.2.2 variant choice, so iteration 2..n of
+//!    a training loop reuses the first iteration's plan.
+
+use crate::pim::PimConfig;
+use crate::timing::{self, DmaPolicy, KernelProfile, OptFlags, ReduceVariant};
+
+use super::plan::{CacheKey, CachedRed, PlanCache};
+
+/// Fold a pipeline of per-stage profiles into the fused launch profile.
+/// A single stage is returned unchanged (no fusion to do).
+pub fn fuse_profiles(stages: &[KernelProfile]) -> KernelProfile {
+    assert!(!stages.is_empty(), "fuse_profiles needs at least one stage");
+    let mut fused = stages[0];
+    for next in &stages[1..] {
+        fused = fused.fuse_with(next);
+    }
+    fused
+}
+
+/// Outcome of planning one reduction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RedPlan {
+    pub variant: ReduceVariant,
+    /// Whether the plan came from the cache.
+    pub cached: bool,
+}
+
+/// Decide the in-scratchpad reduction variant for a (possibly fused)
+/// reduction, consulting `cache` first.  `override_variant` (the
+/// Fig. 11 sweeps) bypasses the cache in both directions.
+#[allow(clippy::too_many_arguments)]
+pub fn plan_reduction(
+    cfg: &PimConfig,
+    fused: &KernelProfile,
+    opts: &OptFlags,
+    policy: DmaPolicy,
+    elems: u64,
+    tasklets: u32,
+    output_len: u64,
+    type_size: u64,
+    cache: Option<(&mut PlanCache, CacheKey)>,
+    override_variant: Option<ReduceVariant>,
+) -> RedPlan {
+    if let Some(v) = override_variant {
+        return RedPlan { variant: v, cached: false };
+    }
+    if let Some((cache, key)) = cache {
+        if let Some(hit) = cache.get(&key) {
+            return RedPlan { variant: hit.variant, cached: true };
+        }
+        let variant = timing::choose_reduce_variant(
+            cfg, fused, opts, policy, elems, tasklets, output_len, type_size,
+        );
+        cache.insert(key, CachedRed { variant });
+        return RedPlan { variant, cached: false };
+    }
+    let variant = timing::choose_reduce_variant(
+        cfg, fused, opts, policy, elems, tasklets, output_len, type_size,
+    );
+    RedPlan { variant, cached: false }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::PimFunc;
+
+    fn cfg() -> PimConfig {
+        PimConfig::upmem(64)
+    }
+
+    fn cache_key() -> CacheKey {
+        CacheKey {
+            funcs: vec!["AffineMap".into(), "SumReduce".into()],
+            per_dpu: vec![4096; 64],
+            output_len: 1,
+            ctx_len: 2,
+            tasklets: 12,
+        }
+    }
+
+    #[test]
+    fn fused_map_red_beats_two_launches() {
+        // The whole point of the tentpole: one fused launch must model
+        // faster than map + red issued separately (even before adding
+        // the second launch's fixed latency).
+        let c = cfg();
+        let o = OptFlags::simplepim();
+        let map_p = PimFunc::AffineMap.profile();
+        let red_p = PimFunc::SumReduce.profile();
+        let elems = 1u64 << 20;
+
+        let t_map = timing::map_kernel(&c, &map_p, &o, DmaPolicy::Dynamic, elems, 12).seconds;
+        let t_red = timing::reduce_kernel(
+            &c, &red_p, &o, DmaPolicy::Dynamic, elems, 12, 1, 4,
+            ReduceVariant::PrivateAcc,
+        )
+        .seconds;
+
+        let fused = fuse_profiles(&[map_p, red_p]);
+        let t_fused = timing::reduce_kernel(
+            &c, &fused, &o, DmaPolicy::Dynamic, elems, 12, 1, 4,
+            ReduceVariant::PrivateAcc,
+        )
+        .seconds;
+
+        assert!(
+            t_fused < t_map + t_red,
+            "fused {t_fused} vs separate {}",
+            t_map + t_red
+        );
+        // And it can never be cheaper than the reduction alone.
+        assert!(t_fused >= t_red);
+    }
+
+    #[test]
+    fn single_stage_chain_is_identity() {
+        let p = PimFunc::SumReduce.profile();
+        let f = fuse_profiles(&[p]);
+        let o = OptFlags::simplepim();
+        assert_eq!(
+            f.per_elem_mix(&o).total_slots(),
+            p.per_elem_mix(&o).total_slots()
+        );
+        assert_eq!(f.bytes_in, p.bytes_in);
+        assert_eq!(f.bytes_out, p.bytes_out);
+    }
+
+    #[test]
+    fn reduction_plan_caches_and_hits() {
+        let c = cfg();
+        let o = OptFlags::simplepim();
+        let fused = fuse_profiles(&[PimFunc::AffineMap.profile(), PimFunc::SumReduce.profile()]);
+        let mut cache = PlanCache::new(8);
+
+        let first = plan_reduction(
+            &c, &fused, &o, DmaPolicy::Dynamic, 4096, 12, 1, 4,
+            Some((&mut cache, cache_key())), None,
+        );
+        assert!(!first.cached);
+        let second = plan_reduction(
+            &c, &fused, &o, DmaPolicy::Dynamic, 4096, 12, 1, 4,
+            Some((&mut cache, cache_key())), None,
+        );
+        assert!(second.cached);
+        assert_eq!(first.variant, second.variant);
+    }
+
+    #[test]
+    fn override_bypasses_cache() {
+        let c = cfg();
+        let o = OptFlags::simplepim();
+        let p = PimFunc::SumReduce.profile();
+        let mut cache = PlanCache::new(8);
+        let plan = plan_reduction(
+            &c, &p, &o, DmaPolicy::Dynamic, 4096, 12, 1, 4,
+            Some((&mut cache, cache_key())), Some(ReduceVariant::SharedAcc),
+        );
+        assert_eq!(plan.variant, ReduceVariant::SharedAcc);
+        assert!(!plan.cached);
+        assert!(cache.is_empty(), "override must not pollute the cache");
+    }
+}

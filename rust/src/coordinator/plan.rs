@@ -1,0 +1,823 @@
+//! The execution-plan IR and the plan engine's state (DESIGN.md §9).
+//!
+//! Every coordinator call now *builds* a [`PlanNode`] in a session-wide
+//! op graph instead of dispatching eagerly.  Map nodes are **deferred**:
+//! their functional result is computed into host-side staging buffers,
+//! but nothing is charged to the machine model and nothing is written
+//! to MRAM until the node is *forced* — by a `gather`, by a collective,
+//! by an explicit [`PimSystem::run`], or by a downstream reduction that
+//! consumes it.  That boundary is what enables the optimizer
+//! ([`super::optimizer`]) to execute map→map and map→red chains as a
+//! single fused gang launch with no materialized intermediate, to elide
+//! dead intermediates entirely, and to recycle device buffers and
+//! shipped contexts across the iterations of a training loop.
+//!
+//! The engine also owns the LRU **plan cache**: reductions are keyed by
+//! (function chain, per-DPU shape, context length, tasklets), so
+//! iteration 2..n of K-means / linreg / logreg skips variant planning
+//! and buffer allocation entirely (`PlanStats::cache_hits` counts the
+//! skips; asserted by `rust/tests/plan_fusion.rs`).
+
+use std::collections::{BTreeMap, HashMap};
+use std::rc::Rc;
+
+use crate::error::Result;
+use crate::timing::ReduceVariant;
+use crate::util::round_up;
+
+use super::comm::words_to_bytes;
+use super::handle::Handle;
+use super::planner::ScatterPlan;
+use super::PimSystem;
+
+/// Index of a node in the session plan graph.
+pub type NodeId = usize;
+
+/// What a plan node does (the paper's three interfaces, as IR ops).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum PlanOp {
+    Scatter,
+    Broadcast,
+    Map { func: String },
+    Red { func: String, output_len: u64 },
+    Zip,
+    Gather,
+    Allreduce,
+    Allgather,
+    Scan,
+    Filter,
+}
+
+impl PlanOp {
+    fn name(&self) -> String {
+        match self {
+            PlanOp::Scatter => "scatter".into(),
+            PlanOp::Broadcast => "broadcast".into(),
+            PlanOp::Map { func } => format!("map[{func}]"),
+            PlanOp::Red { func, output_len } => format!("red[{func} -> {output_len}]"),
+            PlanOp::Zip => "zip".into(),
+            PlanOp::Gather => "gather".into(),
+            PlanOp::Allreduce => "allreduce".into(),
+            PlanOp::Allgather => "allgather".into(),
+            PlanOp::Scan => "scan".into(),
+            PlanOp::Filter => "filter".into(),
+        }
+    }
+}
+
+/// Lifecycle of a plan node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeState {
+    /// Built but not yet executed on the device model (deferred map).
+    Pending,
+    /// Executed (and, for array-producing ops, materialized in MRAM).
+    Executed,
+    /// Charged as part of a fused chain; its own output was never
+    /// materialized in MRAM.
+    Fused,
+    /// Dead intermediate: freed before any consumer needed its bytes —
+    /// never launched, never materialized.
+    Elided,
+}
+
+/// One node of the session op graph.
+#[derive(Debug, Clone)]
+pub struct PlanNode {
+    pub id: NodeId,
+    pub op: PlanOp,
+    /// Array id this node produces (or reads, for `Gather`).
+    pub array: String,
+    /// Producer nodes of the input arrays (when still recorded).
+    pub inputs: Vec<NodeId>,
+    /// Logical per-DPU elements, for explain output.
+    pub elems: u64,
+    pub state: NodeState,
+}
+
+/// Bound on recorded nodes: long-running sessions keep executing fine,
+/// the graph just stops accumulating explain detail.
+const MAX_RECORDED_NODES: usize = 4096;
+
+/// The session op graph.
+#[derive(Debug, Default)]
+pub struct Plan {
+    nodes: Vec<PlanNode>,
+    /// Latest producer node per array id.
+    by_array: HashMap<String, NodeId>,
+    /// Nodes not recorded because the graph hit its size bound.
+    pub dropped: u64,
+}
+
+impl Plan {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record a node; returns a sentinel id when the graph is full.
+    pub fn record(&mut self, op: PlanOp, array: &str, input_arrays: &[&str], elems: u64) -> NodeId {
+        if self.nodes.len() >= MAX_RECORDED_NODES {
+            self.dropped += 1;
+            return usize::MAX;
+        }
+        let id = self.nodes.len();
+        let inputs = input_arrays.iter().filter_map(|a| self.by_array.get(*a).copied()).collect();
+        // A gather is a read-only sink: it must not become the array's
+        // "latest producer" or later consumers would show data flowing
+        // out of it in `--explain` lineage.
+        let is_sink = matches!(op, PlanOp::Gather);
+        self.nodes.push(PlanNode {
+            id,
+            op,
+            array: array.to_string(),
+            inputs,
+            elems,
+            state: NodeState::Pending,
+        });
+        if !is_sink {
+            self.by_array.insert(array.to_string(), id);
+        }
+        id
+    }
+
+    pub fn set_state(&mut self, id: NodeId, state: NodeState) {
+        if let Some(n) = self.nodes.get_mut(id) {
+            n.state = state;
+        }
+    }
+
+    /// Latest producer of an array id.
+    pub fn producer(&self, array: &str) -> Option<NodeId> {
+        self.by_array.get(array).copied()
+    }
+
+    pub fn nodes(&self) -> &[PlanNode] {
+        &self.nodes
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+}
+
+/// Counters describing what the engine did (exposed for tests, the
+/// `--explain` CLI flag, and the hotpath bench).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PlanStats {
+    /// Plan nodes built.
+    pub nodes: u64,
+    /// Kernel launches the engine issued.
+    pub launches: u64,
+    /// Chains of >= 2 stages charged as one launch.
+    pub fused_chains: u64,
+    /// Total stages folded into those fused launches.
+    pub fused_stages: u64,
+    /// Dead intermediates never executed (freed before first use).
+    pub elided: u64,
+    /// Reductions served by the plan cache.
+    pub cache_hits: u64,
+    pub cache_misses: u64,
+    /// Context broadcasts skipped because the identical context was
+    /// already resident on every DPU.
+    pub ctx_reuses: u64,
+    /// MRAM buffers served from the recycle pool instead of the
+    /// allocator.
+    pub buffer_reuses: u64,
+    /// Scatter plans served from the planner cache.
+    pub scatter_plan_hits: u64,
+}
+
+/// Key of one cached reduction plan.  Everything the variant choice
+/// depends on that can vary within a session: the fused function chain,
+/// the source distribution, the accumulator length, the context length,
+/// and the requested tasklets.  (`OptFlags`/`DmaPolicy` are treated as
+/// session-constant; `red_variant_override` bypasses the cache.)
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CacheKey {
+    pub funcs: Vec<String>,
+    pub per_dpu: Vec<u64>,
+    pub output_len: u64,
+    pub ctx_len: usize,
+    pub tasklets: u32,
+}
+
+/// Cached planning decisions for a reduction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct CachedRed {
+    pub variant: ReduceVariant,
+}
+
+/// A small LRU cache of reduction plans (linear scan; capacity is tiny).
+#[derive(Debug)]
+pub struct PlanCache {
+    cap: usize,
+    /// MRU at the back.
+    entries: Vec<(CacheKey, CachedRed)>,
+}
+
+impl PlanCache {
+    pub fn new(cap: usize) -> Self {
+        PlanCache { cap: cap.max(1), entries: Vec::new() }
+    }
+
+    pub fn get(&mut self, key: &CacheKey) -> Option<CachedRed> {
+        let i = self.entries.iter().position(|(k, _)| k == key)?;
+        let e = self.entries.remove(i);
+        let v = e.1;
+        self.entries.push(e);
+        Some(v)
+    }
+
+    pub fn insert(&mut self, key: CacheKey, value: CachedRed) {
+        if let Some(i) = self.entries.iter().position(|(k, _)| *k == key) {
+            self.entries.remove(i);
+        } else if self.entries.len() >= self.cap {
+            self.entries.remove(0); // evict LRU
+        }
+        self.entries.push((key, value));
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+}
+
+/// A deferred map node: functional result staged on the host, device
+/// launch and MRAM materialization postponed until forced.
+#[derive(Debug, Clone)]
+pub(crate) struct PendingNode {
+    /// Graph node (sentinel `usize::MAX` when the graph was full).
+    pub node: NodeId,
+    /// The map handle that produces this array.
+    pub handle: Handle,
+    /// Pending predecessor in a fusible chain (None once the
+    /// predecessor is charged/materialized/freed).
+    pub upstream: Option<String>,
+    /// Staged per-DPU outputs, shared with consumers (fused stages
+    /// borrow them as a refcount bump instead of a deep copy).
+    pub outputs: Rc<Vec<Vec<i32>>>,
+    /// Whether a (possibly fused) launch has been charged for this
+    /// node's compute.
+    pub charged: bool,
+    /// Logical per-DPU elements of the chain stage, for timing.
+    pub elems: u64,
+}
+
+/// A resident shipped-context slot (keyed by padded byte size).
+#[derive(Debug, Clone)]
+pub(crate) struct CtxSlot {
+    pub addr: u64,
+    pub ctx: Vec<i32>,
+}
+
+/// Recycle pool of same-offset MRAM blocks, keyed by normalized block
+/// size.  Bounded; overflow frees back to the allocator.
+#[derive(Debug, Default)]
+pub(crate) struct BufferPool {
+    slots: Vec<(u64, u64)>, // (normalized size, addr)
+}
+
+/// Upper bound on pooled blocks (beyond this, blocks free normally).
+const POOL_CAP: usize = 16;
+/// Upper bound on resident context slots.
+const CTX_SLOT_CAP: usize = 8;
+
+impl BufferPool {
+    pub fn take(&mut self, size: u64) -> Option<u64> {
+        let i = self.slots.iter().position(|&(s, _)| s == size)?;
+        Some(self.slots.swap_remove(i).1)
+    }
+
+    /// Returns true when the block was pooled (caller must not free it).
+    pub fn put(&mut self, size: u64, addr: u64) -> bool {
+        if self.slots.len() >= POOL_CAP {
+            return false;
+        }
+        self.slots.push((size, addr));
+        true
+    }
+
+    pub fn drain_addrs(&mut self) -> Vec<u64> {
+        self.slots.drain(..).map(|(_, a)| a).collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.slots.len()
+    }
+}
+
+/// Bound on retained explain-trace lines.
+const TRACE_CAP: usize = 256;
+
+/// All plan-engine state owned by a [`PimSystem`].
+#[derive(Debug)]
+pub struct PlanEngine {
+    /// The session op graph.
+    pub graph: Plan,
+    /// Deferred (unmaterialized) map nodes by destination array id.
+    pub(crate) pending: BTreeMap<String, PendingNode>,
+    /// LRU reduction-plan cache.
+    pub(crate) cache: PlanCache,
+    /// Memoized scatter plans keyed by (len, type_size, n_dpus).
+    pub(crate) scatter_plans: HashMap<(u64, u64, usize), ScatterPlan>,
+    /// Resident shipped contexts keyed by padded size.
+    pub(crate) ctx_slots: HashMap<u64, CtxSlot>,
+    /// MRAM block recycle pool.
+    pub(crate) pool: BufferPool,
+    /// Explain-trace ring (latest `TRACE_CAP` events).
+    pub(crate) trace: Vec<String>,
+    pub(crate) trace_dropped: u64,
+    pub stats: PlanStats,
+    /// When false, every node is forced immediately after being built
+    /// and all caches/pools are bypassed — the seed's eager per-call
+    /// dispatch, kept for the fused-vs-eager comparison.
+    pub(crate) optimize: bool,
+}
+
+impl Default for PlanEngine {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl PlanEngine {
+    pub fn new() -> Self {
+        PlanEngine {
+            graph: Plan::new(),
+            pending: BTreeMap::new(),
+            cache: PlanCache::new(32),
+            scatter_plans: HashMap::new(),
+            ctx_slots: HashMap::new(),
+            pool: BufferPool::default(),
+            trace: Vec::new(),
+            trace_dropped: 0,
+            stats: PlanStats::default(),
+            optimize: true,
+        }
+    }
+
+    /// Append an explain-trace event (bounded ring).
+    pub(crate) fn note(&mut self, event: String) {
+        if self.trace.len() >= TRACE_CAP {
+            self.trace.remove(0);
+            self.trace_dropped += 1;
+        }
+        self.trace.push(event);
+    }
+
+    /// Record a node and bump the counter.
+    pub(crate) fn record(
+        &mut self,
+        op: PlanOp,
+        array: &str,
+        inputs: &[&str],
+        elems: u64,
+    ) -> NodeId {
+        self.stats.nodes += 1;
+        self.graph.record(op, array, inputs, elems)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Engine mechanics on PimSystem: forcing, chain charging, context
+// shipping, buffer pooling.  The iterator/comm front-ends build nodes;
+// everything that touches the simulated device funnels through here.
+// ---------------------------------------------------------------------
+
+impl PimSystem {
+    /// Flush the whole deferred plan.  The explicit end of the
+    /// lazy-build boundary; all read paths (`gather`, collectives,
+    /// scan/filter, reductions) also auto-flush exactly what they
+    /// consume.
+    ///
+    /// Nodes are forced sink-first (descending build order) so that an
+    /// uncharged map→map chain is charged as **one** fused launch when
+    /// its tail is forced; upstream stages then only materialize.
+    /// Materialization order is not otherwise observable.
+    pub fn run(&mut self) -> Result<()> {
+        let mut ids: Vec<(NodeId, String)> =
+            self.engine.pending.iter().map(|(k, n)| (n.node, k.clone())).collect();
+        ids.sort();
+        for (_, id) in ids.into_iter().rev() {
+            self.force_array(&id)?;
+        }
+        Ok(())
+    }
+
+    /// Engine counters (fusions, cache hits, elisions, ...).
+    pub fn plan_stats(&self) -> PlanStats {
+        self.engine.stats
+    }
+
+    /// The session op graph (for `--explain` and tests).
+    pub fn plan_graph(&self) -> &Plan {
+        &self.engine.graph
+    }
+
+    /// Toggle plan optimization (fusion, caches, pooling).  Turning it
+    /// off first flushes any deferred work, then reverts to eager
+    /// per-call dispatch — the baseline the hotpath bench compares
+    /// against.
+    pub fn set_fusion(&mut self, on: bool) -> Result<()> {
+        if !on {
+            self.run()?;
+        }
+        self.engine.optimize = on;
+        Ok(())
+    }
+
+    /// Whether plan optimization is active.
+    pub fn fusion_enabled(&self) -> bool {
+        self.engine.optimize
+    }
+
+    /// Human-readable dump of the optimized plan: node list, fusion and
+    /// cache events, engine counters (the CLI's `--explain`).
+    pub fn explain_report(&self) -> String {
+        let mut out = String::new();
+        let s = self.engine.stats;
+        out.push_str("optimized plan\n");
+        out.push_str(&format!(
+            "  nodes {} | launches {} | fused chains {} ({} stages) | elided {}\n",
+            s.nodes, s.launches, s.fused_chains, s.fused_stages, s.elided
+        ));
+        out.push_str(&format!(
+            "  plan cache: {} hits / {} misses | ctx reuses {} | buffer reuses {} | scatter-plan hits {}\n",
+            s.cache_hits, s.cache_misses, s.ctx_reuses, s.buffer_reuses, s.scatter_plan_hits
+        ));
+        out.push_str("  nodes:\n");
+        if self.engine.graph.dropped > 0 {
+            out.push_str(&format!(
+                "    ... ({} earlier nodes not recorded)\n",
+                self.engine.graph.dropped
+            ));
+        }
+        for n in self.engine.graph.nodes() {
+            let state = match n.state {
+                NodeState::Pending => "pending",
+                NodeState::Executed => "executed",
+                NodeState::Fused => "fused",
+                NodeState::Elided => "elided",
+            };
+            let inputs = if n.inputs.is_empty() {
+                String::new()
+            } else {
+                format!(
+                    " <- {}",
+                    n.inputs.iter().map(|i| format!("#{i}")).collect::<Vec<_>>().join(",")
+                )
+            };
+            out.push_str(&format!(
+                "    #{:<4} {:<28} {:<12} [{}]{}\n",
+                n.id,
+                n.op.name(),
+                n.array,
+                state,
+                inputs
+            ));
+        }
+        if !self.engine.trace.is_empty() {
+            out.push_str("  events:\n");
+            if self.engine.trace_dropped > 0 {
+                out.push_str(&format!(
+                    "    ... ({} earlier events dropped)\n",
+                    self.engine.trace_dropped
+                ));
+            }
+            for e in &self.engine.trace {
+                out.push_str(&format!("    {e}\n"));
+            }
+        }
+        out
+    }
+
+    /// Force a pending (deferred) array: charge its chain's launch and
+    /// materialize its bytes in MRAM.  No-op for non-pending ids.
+    pub(crate) fn force_array(&mut self, id: &str) -> Result<()> {
+        if !self.engine.pending.contains_key(id) {
+            return Ok(());
+        }
+        self.charge_chain(id)?;
+        let node = self.engine.pending.remove(id).expect("checked above");
+        self.detach_dependents(id);
+        let out_max_words = node.outputs.iter().map(|o| o.len()).max().unwrap_or(0);
+        let padded = round_up(out_max_words as u64 * 4, 8).max(8);
+        let addr = self.pool_alloc(padded)?;
+        for (dpu, out) in node.outputs.iter().enumerate() {
+            self.machine.write_bytes(dpu, addr, &words_to_bytes(out))?;
+        }
+        let mut meta = self.management.lookup(id)?.clone();
+        meta.addr = addr;
+        meta.padded_bytes = padded;
+        self.management.replace(meta)?;
+        self.engine.graph.set_state(node.node, NodeState::Executed);
+        Ok(())
+    }
+
+    /// The maximal still-uncharged fusible chain ending at `id`
+    /// (deepest stage first).
+    pub(crate) fn collect_uncharged_chain(&self, id: &str) -> Vec<String> {
+        let mut chain = Vec::new();
+        let mut cur = Some(id.to_string());
+        while let Some(c) = cur {
+            match self.engine.pending.get(&c) {
+                Some(n) if !n.charged => {
+                    cur = n.upstream.clone();
+                    chain.push(c);
+                }
+                _ => break,
+            }
+        }
+        chain.reverse();
+        chain
+    }
+
+    /// Ship the context of every pending stage in `chain` (deepest
+    /// first) and return the stages' instruction profiles in order.
+    pub(crate) fn ship_chain_contexts(
+        &mut self,
+        chain: &[String],
+    ) -> Result<Vec<crate::timing::KernelProfile>> {
+        let mut profiles = Vec::with_capacity(chain.len());
+        for cid in chain {
+            let h = self.engine.pending.get(cid).expect("pending chain stage").handle.clone();
+            self.ship_context(&h)?;
+            profiles.push(h.profile);
+        }
+        Ok(profiles)
+    }
+
+    /// Mark every stage in `chain` charged and record its graph state.
+    /// Stages stay pending (unmaterialized) until individually forced.
+    pub(crate) fn mark_chain_charged(&mut self, chain: &[String], state: NodeState) {
+        for cid in chain {
+            let n = self.engine.pending.get_mut(cid).expect("pending chain stage");
+            n.charged = true;
+            let node = n.node;
+            self.engine.graph.set_state(node, state);
+        }
+    }
+
+    /// Charge one (possibly fused) map launch covering every uncharged
+    /// stage of the chain ending at `id`, shipping each stage's context
+    /// first.  Stages stay pending (unmaterialized) but become charged.
+    pub(crate) fn charge_chain(&mut self, id: &str) -> Result<()> {
+        let chain = self.collect_uncharged_chain(id);
+        if chain.is_empty() {
+            return Ok(());
+        }
+        let profiles = self.ship_chain_contexts(&chain)?;
+        let fused = super::optimizer::fuse_profiles(&profiles);
+        let elems = self.engine.pending.get(&chain[0]).expect("in chain").elems;
+        let t = crate::timing::map_kernel(
+            &self.machine.cfg,
+            &fused,
+            &self.opts,
+            self.dma_policy,
+            elems,
+            self.tasklets,
+        );
+        self.machine.charge_kernel(t.seconds);
+        self.engine.stats.launches += 1;
+        let fused_state = if chain.len() > 1 { NodeState::Fused } else { NodeState::Executed };
+        if chain.len() > 1 {
+            self.engine.stats.fused_chains += 1;
+            self.engine.stats.fused_stages += chain.len() as u64;
+            self.engine.note(format!(
+                "fused {} map stages into one launch: {}",
+                chain.len(),
+                chain.join(" -> ")
+            ));
+        }
+        self.mark_chain_charged(&chain, fused_state);
+        Ok(())
+    }
+
+    /// Clear `upstream` links pointing at a node being removed, so a
+    /// later array under the same id can never be mistaken for the old
+    /// chain predecessor.
+    pub(crate) fn detach_dependents(&mut self, id: &str) {
+        for n in self.engine.pending.values_mut() {
+            if n.upstream.as_deref() == Some(id) {
+                n.upstream = None;
+            }
+        }
+    }
+
+    /// Broadcast a handle's context (paper: handle `data` shipped to all
+    /// PIM cores before the launch), charged as a broadcast transfer.
+    ///
+    /// Optimized mode keeps one resident slot per padded size: an
+    /// identical context is free (already on every DPU), a same-size
+    /// context reuses the allocation and pays only the broadcast —
+    /// instead of the seed's alloc/push/free round-trip on every
+    /// launch.  Slots are released when the array registry empties.
+    pub(crate) fn ship_context(&mut self, handle: &Handle) -> Result<()> {
+        if handle.ctx.is_empty() {
+            return Ok(());
+        }
+        let bytes = words_to_bytes(&handle.ctx);
+        let padded = round_up(bytes.len() as u64, 8);
+        let mut buf = bytes;
+        buf.resize(padded as usize, 0);
+        if self.engine.optimize {
+            if let Some(slot) = self.engine.ctx_slots.get(&padded) {
+                if slot.ctx == handle.ctx {
+                    self.engine.stats.ctx_reuses += 1;
+                    return Ok(());
+                }
+                let addr = slot.addr;
+                self.machine.push_broadcast(addr, &buf)?;
+                self.engine.ctx_slots.get_mut(&padded).expect("just seen").ctx =
+                    handle.ctx.clone();
+                return Ok(());
+            }
+            if self.engine.ctx_slots.len() < CTX_SLOT_CAP {
+                let addr = self.alloc_with_spill(padded)?;
+                self.machine.push_broadcast(addr, &buf)?;
+                self.engine
+                    .ctx_slots
+                    .insert(padded, CtxSlot { addr, ctx: handle.ctx.clone() });
+                return Ok(());
+            }
+        }
+        // Eager mode (or slot table full): scratch round-trip.
+        let addr = self.alloc_with_spill(padded)?;
+        self.machine.push_broadcast(addr, &buf)?;
+        self.machine.free(addr)?;
+        Ok(())
+    }
+
+    /// Pool-aware MRAM allocation (same-offset-on-every-bank blocks).
+    ///
+    /// When the allocator is exhausted, pooled blocks are spilled back
+    /// to it and the allocation retried once — recycling must never
+    /// make a request fail that would have succeeded in the seed's
+    /// free-immediately regime.
+    pub(crate) fn pool_alloc(&mut self, bytes: u64) -> Result<u64> {
+        let key = self.norm_block(bytes);
+        if self.engine.optimize {
+            if let Some(addr) = self.engine.pool.take(key) {
+                self.engine.stats.buffer_reuses += 1;
+                return Ok(addr);
+            }
+        }
+        self.alloc_with_spill(bytes)
+    }
+
+    /// Allocate from the machine, spilling the recycle pool back to the
+    /// allocator and retrying once on exhaustion.  Every engine-side
+    /// allocation (pooled blocks *and* resident context slots) routes
+    /// through this so buffer recycling can never make a request fail
+    /// that the seed's free-immediately regime would have satisfied.
+    pub(crate) fn alloc_with_spill(&mut self, bytes: u64) -> Result<u64> {
+        match self.machine.alloc(bytes) {
+            Ok(addr) => Ok(addr),
+            Err(first_err) => {
+                let pooled = self.engine.pool.drain_addrs();
+                if pooled.is_empty() {
+                    return Err(first_err);
+                }
+                for addr in pooled {
+                    self.machine.free(addr)?;
+                }
+                self.machine.alloc(bytes)
+            }
+        }
+    }
+
+    /// Pool-aware release: recycles the block when optimization is on
+    /// and the pool has room, else frees it back to the allocator.
+    pub(crate) fn pool_free(&mut self, addr: u64, bytes: u64) -> Result<()> {
+        let key = self.norm_block(bytes);
+        if self.engine.optimize && self.engine.pool.put(key, addr) {
+            return Ok(());
+        }
+        self.machine.free(addr)
+    }
+
+    /// The allocator's actual block size for a request of `bytes`.
+    fn norm_block(&self, bytes: u64) -> u64 {
+        round_up(bytes.max(1), self.machine.cfg.dma_align)
+    }
+
+    /// Release every cached device allocation (recycle pool + resident
+    /// contexts).  Called when the array registry empties, so
+    /// `machine.mram_used()` returns to zero once a workload frees all
+    /// of its arrays — the seed's invariant, preserved.
+    pub(crate) fn release_device_caches(&mut self) -> Result<()> {
+        for addr in self.engine.pool.drain_addrs() {
+            self.machine.free(addr)?;
+        }
+        let slots: Vec<u64> = self.engine.ctx_slots.values().map(|s| s.addr).collect();
+        self.engine.ctx_slots.clear();
+        for addr in slots {
+            self.machine.free(addr)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn key(funcs: &[&str], ctx_len: usize) -> CacheKey {
+        CacheKey {
+            funcs: funcs.iter().map(|s| s.to_string()).collect(),
+            per_dpu: vec![10, 10, 9],
+            output_len: 1,
+            ctx_len,
+            tasklets: 12,
+        }
+    }
+
+    #[test]
+    fn plan_records_nodes_and_links_producers() {
+        let mut p = Plan::new();
+        let a = p.record(PlanOp::Scatter, "x", &[], 100);
+        let b = p.record(PlanOp::Map { func: "AffineMap".into() }, "y", &["x"], 100);
+        assert_eq!(p.nodes()[b].inputs, vec![a]);
+        assert_eq!(p.producer("y"), Some(b));
+        assert_eq!(p.producer("nope"), None);
+        p.set_state(b, NodeState::Fused);
+        assert_eq!(p.nodes()[b].state, NodeState::Fused);
+        // Unknown input arrays simply record no edge.
+        let c = p.record(PlanOp::Gather, "z", &["ghost"], 0);
+        assert!(p.nodes()[c].inputs.is_empty());
+        // A gather is a sink: it never becomes an array's producer.
+        let g = p.record(PlanOp::Gather, "y", &["y"], 100);
+        assert_ne!(p.producer("y"), Some(g), "gather must not claim lineage");
+        assert_eq!(p.producer("y"), Some(b));
+    }
+
+    #[test]
+    fn plan_cache_lru_evicts_oldest() {
+        let mut c = PlanCache::new(2);
+        c.insert(key(&["a"], 1), CachedRed { variant: ReduceVariant::PrivateAcc });
+        c.insert(key(&["b"], 1), CachedRed { variant: ReduceVariant::SharedAcc });
+        // Touch `a`, making `b` the LRU entry.
+        assert_eq!(c.get(&key(&["a"], 1)).unwrap().variant, ReduceVariant::PrivateAcc);
+        c.insert(key(&["c"], 1), CachedRed { variant: ReduceVariant::PrivateAcc });
+        assert!(c.get(&key(&["b"], 1)).is_none(), "LRU entry evicted");
+        assert!(c.get(&key(&["a"], 1)).is_some());
+        assert!(c.get(&key(&["c"], 1)).is_some());
+        assert_eq!(c.len(), 2);
+    }
+
+    #[test]
+    fn cache_key_discriminates_chain_shape_and_ctx() {
+        let mut c = PlanCache::new(8);
+        c.insert(key(&["m", "r"], 10), CachedRed { variant: ReduceVariant::PrivateAcc });
+        assert!(c.get(&key(&["m", "r"], 10)).is_some());
+        assert!(c.get(&key(&["r"], 10)).is_none(), "different chain");
+        assert!(c.get(&key(&["m", "r"], 11)).is_none(), "different ctx len");
+        let mut other = key(&["m", "r"], 10);
+        other.per_dpu = vec![11, 10, 9];
+        assert!(c.get(&other).is_none(), "different distribution");
+        let mut other = key(&["m", "r"], 10);
+        other.output_len = 4096;
+        assert!(c.get(&other).is_none(), "different accumulator length");
+    }
+
+    #[test]
+    fn buffer_pool_recycles_by_size() {
+        let mut p = BufferPool::default();
+        assert!(p.put(64, 0x100));
+        assert!(p.put(128, 0x200));
+        assert_eq!(p.take(64), Some(0x100));
+        assert_eq!(p.take(64), None);
+        assert_eq!(p.take(128), Some(0x200));
+        assert_eq!(p.len(), 0);
+    }
+
+    #[test]
+    fn buffer_pool_bounded() {
+        let mut p = BufferPool::default();
+        for i in 0..POOL_CAP {
+            assert!(p.put(8, i as u64 * 8));
+        }
+        assert!(!p.put(8, 0xdead), "overflow blocks are rejected");
+        assert_eq!(p.drain_addrs().len(), POOL_CAP);
+        assert_eq!(p.len(), 0);
+    }
+
+    #[test]
+    fn graph_bounds_recorded_nodes() {
+        let mut p = Plan::new();
+        for i in 0..MAX_RECORDED_NODES + 5 {
+            p.record(PlanOp::Scatter, &format!("a{i}"), &[], 1);
+        }
+        assert_eq!(p.len(), MAX_RECORDED_NODES);
+        assert_eq!(p.dropped, 5);
+        // Sentinel ids are ignored by set_state.
+        p.set_state(usize::MAX, NodeState::Elided);
+    }
+}

@@ -1,50 +1,83 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls: the build environment has no
+//! crates.io access, so `thiserror` is unavailable.
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by the SimplePIM framework.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
-    /// Error bubbled up from the XLA/PJRT runtime.
-    #[error("xla: {0}")]
-    Xla(#[from] xla::Error),
+    /// Error bubbled up from the XLA/PJRT runtime (or its absence when
+    /// the crate is built without the `pjrt` feature).
+    Xla(String),
 
     /// I/O error (artifact files, source files for LoC counting, ...).
-    #[error("io: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Malformed manifest or other JSON input.
-    #[error("json: {0}")]
     Json(String),
 
     /// Lookup of an array id that is not registered (paper: `lookup`).
-    #[error("unknown array id: {0}")]
     UnknownArray(String),
 
     /// An array id was registered twice without an intervening `free`.
-    #[error("duplicate array id: {0}")]
     DuplicateArray(String),
 
     /// Data transfer violating the PIM system's alignment constraints.
-    #[error("alignment: {0}")]
     Alignment(String),
 
     /// Out of MRAM/WRAM capacity on a simulated bank.
-    #[error("capacity: {0}")]
     Capacity(String),
 
     /// No AOT artifact satisfies the request (wrong shape family, missing
     /// manifest entry, or `make artifacts` not run).
-    #[error("artifact: {0}")]
     Artifact(String),
 
     /// Handle/iterator misuse (wrong transformation type, arity, ...).
-    #[error("handle: {0}")]
     Handle(String),
 
     /// Anything else.
-    #[error("{0}")]
     Msg(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Xla(e) => write!(f, "xla: {e}"),
+            Error::Io(e) => write!(f, "io: {e}"),
+            Error::Json(e) => write!(f, "json: {e}"),
+            Error::UnknownArray(id) => write!(f, "unknown array id: {id}"),
+            Error::DuplicateArray(id) => write!(f, "duplicate array id: {id}"),
+            Error::Alignment(e) => write!(f, "alignment: {e}"),
+            Error::Capacity(e) => write!(f, "capacity: {e}"),
+            Error::Artifact(e) => write!(f, "artifact: {e}"),
+            Error::Handle(e) => write!(f, "handle: {e}"),
+            Error::Msg(e) => write!(f, "{e}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
 }
 
 impl Error {
@@ -55,3 +88,22 @@ impl Error {
 
 /// Crate-wide result alias.
 pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_match_variant() {
+        assert_eq!(Error::UnknownArray("t".into()).to_string(), "unknown array id: t");
+        assert_eq!(Error::Alignment("bad".into()).to_string(), "alignment: bad");
+        assert_eq!(Error::msg("plain").to_string(), "plain");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let e: Error = std::io::Error::new(std::io::ErrorKind::NotFound, "gone").into();
+        assert!(e.to_string().starts_with("io: "));
+        assert!(std::error::Error::source(&e).is_some());
+    }
+}

@@ -8,7 +8,13 @@
 //!   management, communication, and processing interfaces
 //!   ([`coordinator`]), running against a simulated UPMEM-like machine
 //!   ([`pim`]) and executing workload kernels through AOT-compiled XLA
-//!   executables ([`runtime`]).
+//!   executables ([`runtime`], behind the `pjrt` feature; the
+//!   bit-identical host goldens serve otherwise).  The request path is
+//!   plan-based: iterator calls build a lazy op graph
+//!   ([`coordinator::plan`]) that the optimizer
+//!   ([`coordinator::optimizer`]) fuses (map→map, map→red), prunes
+//!   (dead-intermediate elision), and caches (LRU reduction plans)
+//!   before anything is charged to the device model.
 //! * **L2/L1 (build time)** — `python/compile/` holds the JAX compute
 //!   graphs and Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
 //!   Python never runs on the request path.

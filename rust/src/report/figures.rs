@@ -167,8 +167,27 @@ pub fn cmd_figures(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// Build the system for a CLI run: PJRT when available, otherwise the
+/// bit-identical host engine (with a note, so `run`/`selftest` work out
+/// of the box on machines without artifacts or the `pjrt` feature).
+fn cli_system(cfg: PimConfig, host_only: bool) -> PimSystem {
+    if host_only {
+        return PimSystem::host_only(cfg);
+    }
+    match PimSystem::new(cfg.clone()) {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("note: {e}");
+            eprintln!("note: continuing with the host execution engine");
+            PimSystem::host_only(cfg)
+        }
+    }
+}
+
 /// `run` subcommand: run one workload end-to-end on a small simulated
-/// machine through the full stack (PJRT unless --host-only).
+/// machine through the full stack (PJRT unless --host-only).  With
+/// `--explain`, dump the optimized plan (nodes, fusions applied, cache
+/// hits/misses) after the run.
 pub fn cmd_run(args: &Args) -> Result<()> {
     let name = args
         .positional
@@ -177,13 +196,12 @@ pub fn cmd_run(args: &Args) -> Result<()> {
         .clone();
     let dpus = args.flag_usize("dpus", 16)?;
     let cfg = PimConfig::upmem(dpus);
-    let mut sys = if args.has("host-only") {
-        PimSystem::host_only(cfg)
-    } else {
-        PimSystem::new(cfg)?
-    };
+    let mut sys = cli_system(cfg, args.has("host-only"));
     let elems = args.flag_usize("elems", 0)?;
     run_workload(&mut sys, &name, elems)?;
+    if args.has("explain") {
+        println!("\n{}", sys.explain_report());
+    }
     let t = sys.timeline();
     println!("\nmodeled timeline ({} DPUs):", dpus);
     println!("  host->pim : {:>10.3} ms ({} B)", t.host_to_pim_s * 1e3, t.bytes_h2p);
@@ -282,12 +300,13 @@ fn run_workload(sys: &mut PimSystem, name: &str, elems: usize) -> Result<()> {
 pub fn cmd_selftest(args: &Args) -> Result<()> {
     let dpus = args.flag_usize("dpus", 12)?;
     let host_only = args.has("host-only");
+    let mut used_runtime = true;
     for name in ["vecadd", "reduction", "histogram", "linreg", "logreg", "kmeans"] {
         let cfg = PimConfig::upmem(dpus);
-        let mut sys =
-            if host_only { PimSystem::host_only(cfg) } else { PimSystem::new(cfg)? };
+        let mut sys = cli_system(cfg, host_only);
+        used_runtime &= sys.has_runtime();
         run_workload(&mut sys, name, 30_000)?;
     }
-    println!("selftest OK ({})", if host_only { "host goldens" } else { "PJRT/XLA path" });
+    println!("selftest OK ({})", if used_runtime { "PJRT/XLA path" } else { "host goldens" });
     Ok(())
 }

@@ -1,20 +1,26 @@
 //! PJRT executor: load AOT HLO text, compile once, execute many times.
 //!
-//! This is the only place the `xla` crate is touched.  The pattern
-//! follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! This is the only place the `xla` crate is touched, and only when the
+//! `pjrt` cargo feature is enabled (it needs a vendored xla-rs; this
+//! offline environment cannot fetch one).  The pattern follows
+//! /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
 //! `HloModuleProto::from_text_file` → `XlaComputation::from_proto` →
 //! `client.compile` → `execute`.  Executables are cached per artifact
 //! name, so each shape variant is compiled exactly once per process —
 //! the request path only pays dispatch + data movement.
+//!
+//! Without the feature, [`Runtime::load`] returns a clear error and the
+//! coordinator executes every kernel through the bit-identical host
+//! goldens instead (`PimSystem::host_only` semantics); the two paths
+//! are pinned to each other by the integration tests whenever artifacts
+//! and the feature are both present.
 
 use std::cell::RefCell;
-use std::collections::HashMap;
 use std::path::Path;
-use std::time::Instant;
 
-use crate::error::{Error, Result};
+use crate::error::Result;
 
-use super::artifact::{ArtifactMeta, Manifest};
+use super::artifact::Manifest;
 
 /// Borrowed int32 tensor handed to the executor.
 #[derive(Debug, Clone, Copy)]
@@ -39,30 +45,41 @@ pub struct ExecStats {
     pub readback_s: f64,
 }
 
+/// Default artifact directory: `$SIMPLEPIM_ARTIFACTS` or
+/// `<crate root>/artifacts`.
+fn default_artifact_dir() -> std::path::PathBuf {
+    std::env::var_os("SIMPLEPIM_ARTIFACTS")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
+}
+
 /// The runtime: PJRT CPU client + compiled-executable cache.
+#[cfg(feature = "pjrt")]
 pub struct Runtime {
     client: xla::PjRtClient,
     pub manifest: Manifest,
-    cache: RefCell<HashMap<String, xla::PjRtLoadedExecutable>>,
+    cache: RefCell<std::collections::HashMap<String, xla::PjRtLoadedExecutable>>,
     stats: RefCell<ExecStats>,
 }
 
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load the manifest in `dir` and start a PJRT CPU client.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let manifest = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu()?;
-        Ok(Runtime { client, manifest, cache: RefCell::new(HashMap::new()), stats: RefCell::new(ExecStats::default()) })
+        Ok(Runtime {
+            client,
+            manifest,
+            cache: RefCell::new(std::collections::HashMap::new()),
+            stats: RefCell::new(ExecStats::default()),
+        })
     }
 
     /// Default artifact directory: `$SIMPLEPIM_ARTIFACTS` or
     /// `<crate root>/artifacts`.
     pub fn default_dir() -> std::path::PathBuf {
-        std::env::var_os("SIMPLEPIM_ARTIFACTS")
-            .map(std::path::PathBuf::from)
-            .unwrap_or_else(|| {
-                std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts")
-            })
+        default_artifact_dir()
     }
 
     pub fn stats(&self) -> ExecStats {
@@ -71,6 +88,7 @@ impl Runtime {
 
     /// Compile (or fetch from cache) the executable for `name`.
     fn executable(&self, name: &str) -> Result<()> {
+        use crate::error::Error;
         if self.cache.borrow().contains_key(name) {
             return Ok(());
         }
@@ -90,6 +108,8 @@ impl Runtime {
     /// Execute artifact `name` on int32 inputs; returns the flattened
     /// int32 outputs in declaration order.
     pub fn execute_i32(&self, name: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<i32>>> {
+        use crate::error::Error;
+        use std::time::Instant;
         let meta = self.manifest.by_name(name)?;
         self.check_inputs(meta, inputs)?;
         self.executable(name)?;
@@ -167,7 +187,12 @@ impl Runtime {
         Ok(outs)
     }
 
-    fn check_inputs(&self, meta: &ArtifactMeta, inputs: &[TensorRef<'_>]) -> Result<()> {
+    fn check_inputs(
+        &self,
+        meta: &super::artifact::ArtifactMeta,
+        inputs: &[TensorRef<'_>],
+    ) -> Result<()> {
+        use crate::error::Error;
         if inputs.len() != meta.inputs.len() {
             return Err(Error::Artifact(format!(
                 "{}: expected {} inputs, got {}",
@@ -196,18 +221,66 @@ impl Runtime {
     }
 }
 
+/// Stub runtime compiled when the `pjrt` feature is off: loading always
+/// fails with a descriptive error, so `PimSystem::new` callers fall
+/// back to host execution.  The type still exposes the full executor
+/// API so the coordinator's XLA dispatch paths type-check identically
+/// in both builds.
+#[cfg(not(feature = "pjrt"))]
+pub struct Runtime {
+    pub manifest: Manifest,
+    stats: RefCell<ExecStats>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl Runtime {
+    /// Surface the artifacts error first (so `make artifacts` guidance
+    /// still appears), then report the missing feature.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let _manifest = Manifest::load(dir)?;
+        Err(crate::error::Error::Xla(
+            "PJRT execution requires the `pjrt` cargo feature (vendored xla-rs); \
+             kernels run through the host goldens instead"
+                .into(),
+        ))
+    }
+
+    /// Default artifact directory: `$SIMPLEPIM_ARTIFACTS` or
+    /// `<crate root>/artifacts`.
+    pub fn default_dir() -> std::path::PathBuf {
+        default_artifact_dir()
+    }
+
+    pub fn stats(&self) -> ExecStats {
+        *self.stats.borrow()
+    }
+
+    pub fn execute_i32(&self, name: &str, _inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<i32>>> {
+        Err(crate::error::Error::Xla(format!(
+            "cannot execute `{name}`: built without the `pjrt` feature"
+        )))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
     // Integration tests that require built artifacts live in
-    // rust/tests/; here we only test input validation against a parsed
-    // manifest without touching PJRT.
+    // rust/tests/; here we only test the runtime-independent pieces.
     #[test]
     fn tensor_ref_is_cheap() {
         let d = vec![1i32, 2, 3, 4];
         let t = TensorRef::new(&d, &[2, 2]);
         assert_eq!(t.data.len(), 4);
         assert_eq!(t.shape, &[2, 2]);
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_load_reports_missing_feature_or_artifacts() {
+        // Nonexistent dir: the artifacts error wins (actionable first).
+        let err = Runtime::load("/nonexistent/artifact/dir").unwrap_err();
+        assert!(err.to_string().contains("make artifacts"), "{err}");
     }
 }

@@ -105,6 +105,7 @@ pub enum ReduceVariant {
 
 /// Model a general-reduction launch with an `output_len`-entry
 /// accumulator of `type_size`-byte entries.
+#[allow(clippy::too_many_arguments)]
 pub fn reduce_kernel(
     cfg: &PimConfig,
     profile: &KernelProfile,
@@ -166,6 +167,7 @@ pub fn reduce_kernel(
 /// Pick the faster reduction variant (the framework's automatic choice,
 /// paper §4.2.2: "automatically chooses an appropriate in-scratchpad
 /// reduction variant based on the array sizes and data types").
+#[allow(clippy::too_many_arguments)]
 pub fn choose_reduce_variant(
     cfg: &PimConfig,
     profile: &KernelProfile,

@@ -96,6 +96,35 @@ pub struct KernelProfile {
 }
 
 impl KernelProfile {
+    /// Fuse this profile with the `next` pipeline stage consuming its
+    /// output (plan-engine map→map / map→red fusion).
+    ///
+    /// Models what SimplePIM's code generator would emit for the fused
+    /// kernel: both stages' application logic runs inside **one** inner
+    /// loop, the intermediate element stays in a register (one producer
+    /// store and one consumer load elided), loop bookkeeping is paid
+    /// once, and only the chain's first input streams MRAM→WRAM while
+    /// only the last output streams back (the intermediate array is
+    /// never materialized — the §4.2.3 lazy-zip argument applied to
+    /// whole iterator chains).
+    pub fn fuse_with(&self, next: &KernelProfile) -> KernelProfile {
+        KernelProfile {
+            compute: self.compute.plus(&next.compute),
+            // The consumer's element fetch is elided (register-resident).
+            wram_loads: self.wram_loads + (next.wram_loads - 1.0).max(0.0),
+            // The producer's element store is elided likewise.
+            wram_stores: (self.wram_stores - 1.0).max(0.0) + next.wram_stores,
+            // One shared element-address computation per iteration.
+            addr_calcs: self.addr_calcs + (next.addr_calcs - 1.0).max(0.0),
+            // A single fused loop: pay the heavier stage's bookkeeping.
+            loop_ops: self.loop_ops.max(next.loop_ops),
+            has_user_fn: self.has_user_fn || next.has_user_fn,
+            bytes_in: self.bytes_in,
+            bytes_out: next.bytes_out,
+            elem_bytes: self.elem_bytes,
+        }
+    }
+
     /// Expand to the effective per-element instruction mix under `opts`.
     pub fn per_elem_mix(&self, opts: &OptFlags) -> InstrMix {
         let mut m = self.compute;
@@ -169,6 +198,46 @@ mod tests {
                 assert_eq!(s, base);
             }
         }
+    }
+
+    #[test]
+    fn fused_profile_cheaper_than_sum_of_stages() {
+        let map = profile();
+        let red = KernelProfile {
+            compute: InstrMix { ialu: 1.0, ..Default::default() },
+            wram_loads: 1.0,
+            wram_stores: 0.0,
+            addr_calcs: 1.0,
+            loop_ops: 1.0,
+            has_user_fn: true,
+            bytes_in: 4.0,
+            bytes_out: 0.0,
+            elem_bytes: 4,
+        };
+        let fused = map.fuse_with(&red);
+        let o = OptFlags::simplepim();
+        let separate =
+            map.per_elem_mix(&o).total_slots() + red.per_elem_mix(&o).total_slots();
+        let together = fused.per_elem_mix(&o).total_slots();
+        assert!(together < separate, "fused {together} vs separate {separate}");
+        // ... but never cheaper than either stage alone.
+        assert!(together >= map.per_elem_mix(&o).total_slots());
+        assert!(together >= red.per_elem_mix(&o).total_slots());
+        // The intermediate never touches MRAM.
+        assert_eq!(fused.bytes_in, map.bytes_in);
+        assert_eq!(fused.bytes_out, red.bytes_out);
+    }
+
+    #[test]
+    fn fusion_is_associative_enough_for_chains() {
+        // Chaining left-to-right must keep the boundary DMA traffic of
+        // the endpoints regardless of chain length.
+        let p = profile();
+        let abc = p.fuse_with(&p).fuse_with(&p);
+        assert_eq!(abc.bytes_in, p.bytes_in);
+        assert_eq!(abc.bytes_out, p.bytes_out);
+        assert_eq!(abc.compute.total_slots(), 3.0 * p.compute.total_slots());
+        assert_eq!(abc.loop_ops, p.loop_ops);
     }
 
     #[test]

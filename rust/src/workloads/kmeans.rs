@@ -45,6 +45,12 @@ pub fn setup(sys: &mut PimSystem, x: &[i32], dim: usize) -> Result<()> {
 
 /// One K-means iteration: assignment + partial sums on PIM, centroid
 /// update on the host.  Returns the updated centroids.
+///
+/// The assignment kernel is an already-fused map+red (per-point
+/// assignment feeding per-centroid accumulation in one launch); under
+/// the plan engine iteration 2..n additionally hits the reduction plan
+/// cache and recycles the packed-partials buffers, so only the first
+/// step pays planning cost.
 pub fn iterate(
     sys: &mut PimSystem,
     centroids: &[i32],

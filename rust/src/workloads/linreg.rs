@@ -2,6 +2,13 @@
 //! [10-12]): 32-bit integer fixed-point with bit shifts against
 //! overflow; the gradient is a general reduction over zip(points,
 //! targets) with the weights shipped as broadcast context.
+//!
+//! Under the plan engine the training loop is iteration-optimized:
+//! step 1 plans the reduction (variant choice, scatter plan, buffer
+//! placement); steps 2..n hit the LRU plan cache, recycle the partials
+//! scratch and gradient buffers from the engine pool, and re-ship the
+//! weights into the resident context slot without reallocating —
+//! asserted by `rust/tests/plan_fusion.rs`.
 
 use crate::coordinator::{PimFunc, PimSystem, TransformKind};
 use crate::error::Result;

@@ -2,7 +2,9 @@
 //! (paper §5.1, after pim-ml and Qin et al. [79]).  Same structure as
 //! linear regression; SimplePIM beats the baseline by ~1.17x (Fig. 9)
 //! thanks to inlining the sigmoid into the iterator loop, unrolling,
-//! and boundary-check elimination.
+//! and boundary-check elimination.  Like linreg, the SGD loop rides the
+//! plan engine: iteration 2..n reuses the cached reduction plan and the
+//! pooled gradient/context buffers instead of replanning per step.
 
 use crate::coordinator::{PimFunc, PimSystem, TransformKind};
 use crate::error::Result;

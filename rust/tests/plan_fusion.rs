@@ -1,0 +1,343 @@
+//! Integration tests for the plan-based execution engine: map→red
+//! fusion as a single gang launch with no materialized intermediate,
+//! plan-cache hits across training-loop iterations, dead-intermediate
+//! elision, fused-vs-eager bit-identity, and the host<->PIM
+//! communication edge cases (empty arrays, `len < n_dpus`, element
+//! sizes not a multiple of the DMA alignment).
+//!
+//! Functional execution uses the host-only path — bit-identical to the
+//! XLA path by `integration::xla_and_host_paths_bit_identical`.
+
+use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
+use simplepim::pim::PimConfig;
+use simplepim::util::prng::Prng;
+use simplepim::workloads::fixed::ONE;
+use simplepim::workloads::{golden, kmeans, linreg};
+
+fn sys(dpus: usize) -> PimSystem {
+    PimSystem::host_only(PimConfig::tiny(dpus))
+}
+
+#[test]
+fn fused_map_red_is_a_single_launch_without_materialized_intermediate() {
+    let mut s = sys(4);
+    let data = Prng::new(1).vec_i32(10_000, -1000, 1000);
+    s.scatter("x", &data, 4).unwrap();
+    let mram_after_scatter = s.machine.mram_used();
+
+    // Deferred map: no launch, no MRAM touched.
+    let map = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![3, -17]).unwrap();
+    s.array_map("x", "mid", &map).unwrap();
+    assert_eq!(s.timeline().launches, 0, "map must defer its launch");
+    assert_eq!(
+        s.machine.mram_used(),
+        mram_after_scatter,
+        "deferred map must not materialize its output"
+    );
+    // Metadata is live immediately (source-compatible API).
+    assert_eq!(s.management.lookup("mid").unwrap().len, 10_000);
+
+    // Reduction over the deferred map: ONE fused gang launch.
+    let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+    let got = s.array_red("mid", "total", 1, &red).unwrap();
+    assert_eq!(s.timeline().launches, 1, "map→red must fuse into one launch");
+    let stats = s.plan_stats();
+    assert_eq!(stats.fused_chains, 1);
+    assert_eq!(stats.fused_stages, 2);
+
+    let mapped = golden::map_affine(&data, 3, -17);
+    assert_eq!(got[0], golden::reduce_sum(&mapped), "fused result bit-identical");
+
+    // The intermediate is still addressable: gathering it materializes
+    // on demand, but its compute was already charged — no new launch.
+    assert_eq!(s.gather("mid").unwrap(), mapped);
+    assert_eq!(s.timeline().launches, 1);
+
+    for id in ["x", "mid", "total"] {
+        s.free_array(id).unwrap();
+    }
+    assert_eq!(s.machine.mram_used(), 0, "engine caches released at quiescence");
+}
+
+#[test]
+fn map_map_red_chain_fuses_end_to_end() {
+    let mut s = sys(3);
+    let data = Prng::new(2).vec_i32(5_000, -500, 500);
+    s.scatter("x", &data, 4).unwrap();
+    let m1 = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![2, 5]).unwrap();
+    let m2 = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![-1, 3]).unwrap();
+    s.array_map("x", "a", &m1).unwrap();
+    s.array_map("a", "b", &m2).unwrap();
+    assert_eq!(s.timeline().launches, 0);
+
+    let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+    let got = s.array_red("b", "sum", 1, &red).unwrap();
+    assert_eq!(s.timeline().launches, 1, "3-stage chain fuses into one launch");
+    assert_eq!(s.plan_stats().fused_stages, 3);
+
+    let want = golden::reduce_sum(&golden::map_affine(&golden::map_affine(&data, 2, 5), -1, 3));
+    assert_eq!(got[0], want);
+}
+
+#[test]
+fn dead_intermediates_are_elided() {
+    let mut s = sys(4);
+    let data = Prng::new(3).vec_i32(4_096, -100, 100);
+    s.scatter("x", &data, 4).unwrap();
+    let map = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![7, 1]).unwrap();
+    s.array_map("x", "dead", &map).unwrap();
+    // Never consumed, then freed: no launch is ever charged.
+    s.free_array("dead").unwrap();
+    assert_eq!(s.timeline().launches, 0);
+    assert_eq!(s.plan_stats().elided, 1);
+    s.free_array("x").unwrap();
+    assert_eq!(s.machine.mram_used(), 0);
+}
+
+#[test]
+fn run_flushes_map_chains_as_one_fused_launch() {
+    let mut s = sys(4);
+    let data = Prng::new(11).vec_i32(3_000, -100, 100);
+    s.scatter("x", &data, 4).unwrap();
+    let m1 = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![3, 0]).unwrap();
+    let m2 = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![1, -7]).unwrap();
+    s.array_map("x", "a", &m1).unwrap();
+    s.array_map("a", "b", &m2).unwrap();
+    s.run().unwrap();
+    // Sink-first flushing charges the chain once, then upstream stages
+    // only materialize.
+    assert_eq!(s.timeline().launches, 1, "run() must fuse the chain");
+    assert_eq!(s.plan_stats().fused_chains, 1);
+    assert_eq!(s.gather("b").unwrap(), golden::map_affine(&golden::map_affine(&data, 3, 0), 1, -7));
+    assert_eq!(s.gather("a").unwrap(), golden::map_affine(&data, 3, 0));
+}
+
+#[test]
+fn duplicate_red_destination_errors_without_leak_or_charge() {
+    let mut s = sys(2);
+    s.scatter("x", &[1, 2, 3, 4], 4).unwrap();
+    s.scatter("dup", &[9], 4).unwrap();
+    let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+    assert!(s.array_red("x", "dup", 1, &red).is_err());
+    // Nothing was charged and nothing leaked; the machine stays usable.
+    assert_eq!(s.timeline().launches, 0);
+    assert_eq!(s.gather("dup").unwrap(), vec![9]);
+    s.free_array("x").unwrap();
+    s.free_array("dup").unwrap();
+    assert_eq!(s.machine.mram_used(), 0);
+}
+
+#[test]
+fn explicit_run_flushes_pending_maps() {
+    let mut s = sys(4);
+    let data = Prng::new(4).vec_i32(2_000, -50, 50);
+    s.scatter("x", &data, 4).unwrap();
+    let map = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![5, -2]).unwrap();
+    s.array_map("x", "y", &map).unwrap();
+    assert_eq!(s.timeline().launches, 0);
+    s.run().unwrap();
+    assert_eq!(s.timeline().launches, 1, "run() forces the deferred launch");
+    // Forced output is physically resident; gather adds no launches.
+    assert_eq!(s.gather("y").unwrap(), golden::map_affine(&data, 5, -2));
+    assert_eq!(s.timeline().launches, 1);
+    let report = s.explain_report();
+    assert!(report.contains("map[AffineMap]"), "{report}");
+}
+
+#[test]
+fn linreg_training_loop_hits_plan_cache_and_reuses_buffers() {
+    let mut s = sys(4);
+    let (x, y, _) = linreg::generate(5, 1_000, linreg::DIM);
+    linreg::setup(&mut s, &x, &y, linreg::DIM).unwrap();
+    let w = vec![ONE / 4; linreg::DIM];
+    let steps = 5;
+    for step in 0..steps {
+        let grad = linreg::gradient_step(&mut s, &w, step).unwrap();
+        assert_eq!(grad, golden::linreg_grad(&x, &y, &w, linreg::DIM), "step {step}");
+    }
+    let stats = s.plan_stats();
+    assert_eq!(stats.cache_misses, 1, "iteration 1 plans");
+    assert_eq!(stats.cache_hits as usize, steps - 1, "iterations 2..n hit the plan cache");
+    assert_eq!(
+        stats.ctx_reuses as usize,
+        steps - 1,
+        "identical shipped weights stay resident"
+    );
+    assert!(
+        stats.buffer_reuses >= 2 * (steps as u64 - 1),
+        "partials scratch + result buffers recycle: {}",
+        stats.buffer_reuses
+    );
+    linreg::teardown(&mut s).unwrap();
+    assert_eq!(s.machine.mram_used(), 0);
+}
+
+#[test]
+fn kmeans_training_loop_hits_plan_cache() {
+    let mut s = sys(4);
+    let (x, _) = kmeans::generate(6, 2_000, kmeans::K, kmeans::DIM);
+    kmeans::setup(&mut s, &x, kmeans::DIM).unwrap();
+    let mut c: Vec<i32> = x[..kmeans::K * kmeans::DIM].to_vec();
+    let iters = 4;
+    for step in 0..iters {
+        c = kmeans::iterate(&mut s, &c, kmeans::K, kmeans::DIM, step).unwrap();
+    }
+    let stats = s.plan_stats();
+    assert_eq!(stats.cache_misses, 1);
+    assert_eq!(stats.cache_hits as usize, iters - 1, "iterations 2..n skip planning");
+    assert_eq!(s.timeline().launches as usize, iters, "one launch per iteration");
+    kmeans::teardown(&mut s).unwrap();
+    assert_eq!(s.machine.mram_used(), 0);
+}
+
+#[test]
+fn fused_plan_models_faster_than_eager_dispatch() {
+    let data = Prng::new(7).vec_i32(100_000, -1000, 1000);
+    let run = |fused: bool| {
+        let mut s = sys(8);
+        s.set_fusion(fused).unwrap();
+        s.scatter("x", &data, 4).unwrap();
+        let map = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![3, 1]).unwrap();
+        s.array_map("x", "m", &map).unwrap();
+        let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+        let got = s.array_red("m", "r", 1, &red).unwrap();
+        (got[0], s.timeline())
+    };
+    let (v_fused, t_fused) = run(true);
+    let (v_eager, t_eager) = run(false);
+    assert_eq!(v_fused, v_eager, "fusion must not change results");
+    assert_eq!(t_fused.launches, 1);
+    assert_eq!(t_eager.launches, 2);
+    assert!(
+        t_fused.total_s() < t_eager.total_s(),
+        "fused {} vs eager {}",
+        t_fused.total_s(),
+        t_eager.total_s()
+    );
+}
+
+#[test]
+fn prop_fused_and_eager_execution_bit_identical() {
+    // Property: for random affine chains over random data and machine
+    // shapes, the optimized plan (fusion + caches + pooling) and the
+    // eager per-call dispatch produce identical bytes, and both match
+    // the composed host golden.
+    let mut rng = Prng::new(0xF05ED);
+    for case in 0..40 {
+        let dpus = 1 + rng.below(8) as usize;
+        let n = rng.below(4_000) as usize;
+        let data = rng.vec_i32(n, -10_000, 10_000);
+        let stages = 1 + rng.below(3) as usize;
+        let coeffs: Vec<(i32, i32)> =
+            (0..stages).map(|_| (rng.range_i32(-5, 5), rng.range_i32(-50, 50))).collect();
+        let reduce = rng.chance(0.5);
+
+        let mut run = |fused: bool| -> Vec<i32> {
+            let mut s = sys(dpus);
+            s.set_fusion(fused).unwrap();
+            s.scatter("x", &data, 4).unwrap();
+            let mut src = "x".to_string();
+            for (i, (m, b)) in coeffs.iter().enumerate() {
+                let h = s
+                    .create_handle(PimFunc::AffineMap, TransformKind::Map, vec![*m, *b])
+                    .unwrap();
+                let dest = format!("m{i}");
+                s.array_map(&src, &dest, &h).unwrap();
+                src = dest;
+            }
+            if reduce {
+                let red =
+                    s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+                s.array_red(&src, "out", 1, &red).unwrap()
+            } else {
+                s.gather(&src).unwrap()
+            }
+        };
+
+        let a = run(true);
+        let b = run(false);
+        assert_eq!(a, b, "case {case}: dpus={dpus} n={n} stages={stages} reduce={reduce}");
+
+        let mut want = data.clone();
+        for (m, b) in &coeffs {
+            want = golden::map_affine(&want, *m, *b);
+        }
+        if reduce {
+            assert_eq!(a[0], golden::reduce_sum(&want), "case {case} vs golden");
+        } else {
+            assert_eq!(a, want, "case {case} vs golden");
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Communication edge cases (satellite): empty arrays, fewer elements
+// than DPUs, element sizes that are not a multiple of the DMA
+// alignment.
+// ---------------------------------------------------------------------
+
+#[test]
+fn empty_scatter_and_broadcast_roundtrip() {
+    let mut s = sys(4);
+    s.scatter("e", &[], 4).unwrap();
+    assert_eq!(s.gather("e").unwrap(), Vec::<i32>::new());
+    assert_eq!(s.management.lookup("e").unwrap().len, 0);
+    s.broadcast("be", &[], 4).unwrap();
+    assert_eq!(s.gather("be").unwrap(), Vec::<i32>::new());
+    // Mapping an empty array is a no-op that still registers metadata.
+    let map = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![1, 1]).unwrap();
+    s.array_map("e", "em", &map).unwrap();
+    assert_eq!(s.gather("em").unwrap(), Vec::<i32>::new());
+    for id in ["e", "be", "em"] {
+        s.free_array(id).unwrap();
+    }
+    assert_eq!(s.machine.mram_used(), 0);
+}
+
+#[test]
+fn fewer_elements_than_dpus_scatters_raggedly() {
+    let mut s = sys(8);
+    let data = vec![11, 22, 33];
+    s.scatter("t", &data, 4).unwrap();
+    let meta = s.management.lookup("t").unwrap().clone();
+    assert_eq!(meta.per_dpu.iter().sum::<u64>(), 3);
+    assert!(meta.per_dpu.iter().all(|&e| e <= 1), "one element max per DPU");
+    assert_eq!(s.gather("t").unwrap(), data);
+    // Reductions over the ragged tail (most DPUs empty) stay exact.
+    let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+    assert_eq!(s.array_red("t", "ts", 1, &red).unwrap(), vec![66]);
+}
+
+#[test]
+fn type_sizes_not_multiple_of_dma_align_roundtrip() {
+    // dma_align is 8; 12- and 20-byte elements exercise the padding
+    // rule that no element is ever split across DPUs.
+    let mut rng = Prng::new(0xA119);
+    for &ts in &[12u32, 20, 36] {
+        let words_per_elem = (ts / 4) as usize;
+        for &n_elems in &[1usize, 5, 97, 1000] {
+            let data = rng.vec_i32(n_elems * words_per_elem, i32::MIN / 2, i32::MAX / 2);
+            let mut s = sys(7);
+            s.scatter("odd", &data, ts).unwrap();
+            let meta = s.management.lookup("odd").unwrap().clone();
+            assert_eq!(meta.padded_bytes % 8, 0, "ts={ts} n={n_elems}");
+            for &e in &meta.per_dpu {
+                assert!(e * ts as u64 <= meta.padded_bytes, "no DPU overflows its buffer");
+            }
+            assert_eq!(s.gather("odd").unwrap(), data, "ts={ts} n={n_elems}");
+            s.free_array("odd").unwrap();
+            assert_eq!(s.machine.mram_used(), 0);
+        }
+    }
+}
+
+#[test]
+fn scatter_plans_are_memoized_across_iterations() {
+    let mut s = sys(4);
+    let data = Prng::new(9).vec_i32(1_000, 0, 10);
+    for i in 0..3 {
+        let id = format!("it{i}");
+        s.scatter(&id, &data, 4).unwrap();
+    }
+    assert_eq!(s.plan_stats().scatter_plan_hits, 2, "same shape replans for free");
+}
