@@ -10,14 +10,16 @@
 
 use simplepim::pim::PimConfig;
 use simplepim::timing::ReduceVariant;
+use simplepim::util::prng;
 use simplepim::workloads::{golden, histogram, Impl};
 use simplepim::{PimSystem, Result};
 
 fn main() -> Result<()> {
     // --- functional run on the device (host engine when artifacts /
-    //     the `pjrt` feature are unavailable).
+    //     the `pjrt` feature are unavailable).  Data derives from the
+    //     process-default seed (SIMPLEPIM_SEED) for reproducibility.
     let mut sys = PimSystem::new_or_host(PimConfig::upmem(64));
-    let px = histogram::generate(42, 1 << 21);
+    let px = histogram::generate(prng::seed_for(42), 1 << 21);
     let hist = histogram::run_simplepim(&mut sys, &px, 256)?;
     assert_eq!(hist, golden::histogram(&px, 256));
     let peak = hist.iter().enumerate().max_by_key(|(_, &c)| c).unwrap();

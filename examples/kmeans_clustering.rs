@@ -6,6 +6,7 @@
 //! Run: `cargo run --release --example kmeans_clustering [points]`
 
 use simplepim::pim::PimConfig;
+use simplepim::util::prng;
 use simplepim::workloads::kmeans::{self, DIM, K};
 use simplepim::{PimSystem, Result};
 
@@ -59,7 +60,7 @@ fn main() -> Result<()> {
     let n_points: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(60_000);
 
     println!("=== SimplePIM K-means: {n_points} points, {K} clusters, {DIM} dims ===\n");
-    let (x, true_centers) = kmeans::generate(7, n_points, K, DIM);
+    let (x, true_centers) = kmeans::generate(prng::seed_for(7), n_points, K, DIM);
 
     let mut sys = PimSystem::new_or_host(PimConfig::upmem(64));
     kmeans::setup(&mut sys, &x, DIM)?;

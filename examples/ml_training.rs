@@ -13,6 +13,7 @@
 //! Run: `cargo run --release --example ml_training [steps] [points]`
 
 use simplepim::pim::PimConfig;
+use simplepim::util::prng;
 use simplepim::workloads::fixed::{from_fixed, sigmoid_fixed, ONE};
 use simplepim::workloads::{golden, logreg};
 use simplepim::{PimSystem, Result};
@@ -56,7 +57,7 @@ fn main() -> Result<()> {
     println!("corpus: {n_points} points x {dim} features (int32 fixed-point)");
     println!("steps : {steps}\n");
 
-    let (x, y, true_w) = logreg::generate(2024, n_points, dim);
+    let (x, y, true_w) = logreg::generate(prng::seed_for(2024), n_points, dim);
 
     // --- PIM training (XLA kernels under the Rust coordinator; host
     //     engine when artifacts / the `pjrt` feature are unavailable).

@@ -3,28 +3,219 @@
 //!
 //! Unlike the fig* benches (which regenerate the paper's *modeled*
 //! results), this measures the actual Rust + PJRT implementation on
-//! this machine: scatter/gather marshalling, executor dispatch (gang
-//! batching, literal construction, readback), iterator end-to-end
-//! latency, and the host merge.
+//! this machine: the execution-backend comparison (sequential walk vs
+//! gang batching vs the rank-sharded parallel worker pool), plan-engine
+//! fusion vs eager dispatch, scatter/gather marshalling, executor
+//! dispatch, and the host merge.
+//!
+//! Results are also emitted machine-readably to `BENCH_hotpath.json`
+//! (override with `SIMPLEPIM_BENCH_OUT`) keyed by
+//! `workload/backend/tN`, with wall seconds *and* modeled `Timeline`
+//! totals per entry, so the perf trajectory is tracked PR-over-PR.
 //!
 //! Run: `cargo bench --bench hotpath`
 
+use simplepim::backend::{self, BackendKind};
 use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
 use simplepim::pim::PimConfig;
-use simplepim::report::bench::{measure, report};
-use simplepim::workloads::{histogram, linreg, vecadd};
+use simplepim::report::bench::{measure, report, Measurement};
+use simplepim::util::prng;
+use simplepim::workloads::{histogram, kmeans, linreg, logreg, reduction, vecadd};
+
+/// One machine-readable result row.
+struct BenchRow {
+    key: String,
+    workload: &'static str,
+    backend: &'static str,
+    threads: usize,
+    elems: u64,
+    wall: Measurement,
+    modeled_total_s: f64,
+    modeled_kernel_s: f64,
+    launches: u64,
+}
+
+fn json_escape_free(s: &str) -> &str {
+    // Keys are generated from fixed fragments; nothing to escape.
+    debug_assert!(!s.contains('"') && !s.contains('\\'));
+    s
+}
+
+fn write_json(rows: &[BenchRow]) {
+    let mut out = String::from("{\n  \"schema\": \"hotpath-v1\",\n  \"results\": [\n");
+    for (i, r) in rows.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"key\": \"{}\", \"workload\": \"{}\", \"backend\": \"{}\", \
+             \"threads\": {}, \"elems\": {}, \"wall_mean_s\": {:.9}, \"wall_min_s\": {:.9}, \
+             \"wall_max_s\": {:.9}, \"iters\": {}, \"modeled_total_s\": {:.9}, \
+             \"modeled_kernel_s\": {:.9}, \"modeled_launches\": {}}}{}\n",
+            json_escape_free(&r.key),
+            r.workload,
+            r.backend,
+            r.threads,
+            r.elems,
+            r.wall.mean_s,
+            r.wall.min_s,
+            r.wall.max_s,
+            r.wall.iters,
+            r.modeled_total_s,
+            r.modeled_kernel_s,
+            r.launches,
+            if i + 1 == rows.len() { "" } else { "," }
+        ));
+    }
+    out.push_str("  ]\n}\n");
+    let path = std::env::var("SIMPLEPIM_BENCH_OUT")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    match std::fs::write(&path, out) {
+        Ok(()) => println!("\nwrote {} result rows to {path}", rows.len()),
+        Err(e) => println!("\nnote: could not write {path}: {e}"),
+    }
+}
+
+/// Measure one workload end-to-end (host-only system) under one
+/// backend configuration; appends a JSON row and returns the wall
+/// measurement.
+fn bench_backend(
+    workload: &'static str,
+    dpus: usize,
+    n: usize,
+    kind: BackendKind,
+    threads: usize,
+    rows: &mut Vec<BenchRow>,
+) -> Measurement {
+    let mut sys =
+        PimSystem::with_backend(PimConfig::upmem(dpus), None, backend::make(kind, threads));
+    let (warm, iters) = (1, 4);
+    let m = match workload {
+        "reduction" => {
+            let x = reduction::generate(prng::seed_for(2), n);
+            sys.reset_timeline();
+            measure(warm, iters, || {
+                std::hint::black_box(reduction::run_simplepim(&mut sys, &x).unwrap());
+            })
+        }
+        "histogram" => {
+            let px = histogram::generate(prng::seed_for(3), n);
+            sys.reset_timeline();
+            measure(warm, iters, || {
+                std::hint::black_box(histogram::run_simplepim(&mut sys, &px, 256).unwrap());
+            })
+        }
+        "vecadd" => {
+            let (x, y) = vecadd::generate(prng::seed_for(1), n);
+            sys.reset_timeline();
+            measure(warm, iters, || {
+                std::hint::black_box(vecadd::run_simplepim(&mut sys, &x, &y).unwrap());
+            })
+        }
+        "linreg" => {
+            let (x, y, _) = linreg::generate(prng::seed_for(4), n, linreg::DIM);
+            linreg::setup(&mut sys, &x, &y, linreg::DIM).unwrap();
+            let w = vec![100i32; linreg::DIM];
+            let mut step = 0usize;
+            sys.reset_timeline();
+            measure(warm, iters, || {
+                std::hint::black_box(linreg::gradient_step(&mut sys, &w, step).unwrap());
+                step += 1;
+            })
+        }
+        "logreg" => {
+            let (x, y, _) = logreg::generate(prng::seed_for(5), n, logreg::DIM);
+            logreg::setup(&mut sys, &x, &y, logreg::DIM).unwrap();
+            let w = vec![100i32; logreg::DIM];
+            let mut step = 0usize;
+            sys.reset_timeline();
+            measure(warm, iters, || {
+                std::hint::black_box(logreg::gradient_step(&mut sys, &w, step).unwrap());
+                step += 1;
+            })
+        }
+        "kmeans" => {
+            let (x, _) = kmeans::generate(prng::seed_for(6), n, kmeans::K, kmeans::DIM);
+            kmeans::setup(&mut sys, &x, kmeans::DIM).unwrap();
+            let c0: Vec<i32> = x[..kmeans::K * kmeans::DIM].to_vec();
+            let mut step = 0usize;
+            sys.reset_timeline();
+            measure(warm, iters, || {
+                std::hint::black_box(
+                    kmeans::iterate(&mut sys, &c0, kmeans::K, kmeans::DIM, step).unwrap(),
+                );
+                step += 1;
+            })
+        }
+        other => panic!("unknown bench workload {other}"),
+    };
+    let t = sys.timeline();
+    let b = kind.as_str();
+    report(
+        &format!("{workload} {n} elems [{b} x{threads}]"),
+        m,
+        Some((n as u64, "elem")),
+    );
+    rows.push(BenchRow {
+        key: format!("{workload}/{b}/t{threads}"),
+        workload,
+        backend: b,
+        threads,
+        elems: n as u64,
+        wall: m,
+        modeled_total_s: t.total_s(),
+        modeled_kernel_s: t.kernel_s,
+        launches: t.launches,
+    });
+    m
+}
 
 fn main() {
     let dpus = 16;
     let n = 1 << 20; // 1M i32
+    let mut rows: Vec<BenchRow> = Vec::new();
+
+    // --- execution backends: all six workloads, seq vs gang vs
+    //     parallel (8 workers), host-golden engine.  The large-input
+    //     reduction and histogram configs are the tentpole's acceptance
+    //     measurement: the rank-sharded backend must beat the
+    //     sequential walk by >= 2x wall-clock at 8 threads.
+    {
+        println!("-- backend comparison (host engine, 32 DPUs) --");
+        let big = 1 << 22; // 4M i32: large-input configs
+        let cfgs = [
+            (BackendKind::Seq, 1usize),
+            (BackendKind::Gang, 1),
+            (BackendKind::Parallel, 8),
+        ];
+        let mut speedups = Vec::new();
+        for workload in ["reduction", "histogram"] {
+            let mut seq_mean = 0.0f64;
+            for (kind, threads) in cfgs {
+                let m = bench_backend(workload, 32, big, kind, threads, &mut rows);
+                if kind == BackendKind::Seq {
+                    seq_mean = m.mean_s;
+                } else if kind == BackendKind::Parallel {
+                    speedups.push((workload, seq_mean / m.mean_s));
+                }
+            }
+        }
+        for (workload, n_elems) in [("vecadd", 1 << 21), ("linreg", 100_000), ("logreg", 100_000), ("kmeans", 50_000)]
+        {
+            for (kind, threads) in cfgs {
+                bench_backend(workload, 32, n_elems, kind, threads, &mut rows);
+            }
+        }
+        for (w, s) in &speedups {
+            println!("    {w}: parallel x8 over seq wall speedup: {s:.2}x");
+        }
+        // Scaling curve on the large reduction: 2 / 4 / 8 workers.
+        for threads in [2usize, 4] {
+            bench_backend("reduction", 32, big, BackendKind::Parallel, threads, &mut rows);
+        }
+    }
 
     // --- plan engine: fused map→red pipeline vs eager per-call
-    //     dispatch on an iterative workload (the tentpole comparison:
-    //     fusion executes one gang launch per iteration and never
-    //     materializes the intermediate; eager dispatch writes the
-    //     intermediate to the simulated banks and reads it back).
+    //     dispatch on an iterative workload (the PR-1 comparison).
     {
-        let data = histogram::generate(7, n);
+        let data = histogram::generate(prng::seed_for(7), n);
         let bench = |fused: bool| {
             let mut sys = PimSystem::host_only(PimConfig::upmem(dpus));
             sys.set_fusion(fused).unwrap();
@@ -63,7 +254,7 @@ fn main() {
     // --- scatter / gather marshalling throughput.
     {
         let mut sys = PimSystem::host_only(PimConfig::upmem(dpus));
-        let data = vecadd::generate(1, n).0;
+        let data = vecadd::generate(prng::seed_for(1), n).0;
         let mut i = 0u32;
         let m = measure(2, 10, || {
             let id = format!("s{i}");
@@ -83,7 +274,7 @@ fn main() {
     // --- XLA executor dispatch: vecadd map end-to-end (functional).
     match PimSystem::new(PimConfig::upmem(dpus)) {
         Ok(mut sys) => {
-            let (x, y) = vecadd::generate(2, n);
+            let (x, y) = vecadd::generate(prng::seed_for(2), n);
             sys.scatter("x", &x, 4).unwrap();
             sys.scatter("y", &y, 4).unwrap();
             sys.array_zip("x", "y", "xy").unwrap();
@@ -109,7 +300,7 @@ fn main() {
             );
 
             // --- reduction partials + host merge.
-            let px = histogram::generate(3, n);
+            let px = histogram::generate(prng::seed_for(3), n);
             sys.scatter("px", &px, 4).unwrap();
             let hh = sys
                 .create_handle(PimFunc::Histogram { bins: 256 }, TransformKind::Red, vec![])
@@ -124,7 +315,7 @@ fn main() {
             report("array_red histogram 1M px (XLA path)", m, Some((n as u64, "elem")));
 
             // --- ML gradient step (the training hot loop).
-            let (xm, ym, _) = linreg::generate(4, 100_000, linreg::DIM);
+            let (xm, ym, _) = linreg::generate(prng::seed_for(4), 100_000, linreg::DIM);
             linreg::setup(&mut sys, &xm, &ym, linreg::DIM).unwrap();
             let w = vec![100i32; linreg::DIM];
             let mut step = 1000usize;
@@ -142,7 +333,7 @@ fn main() {
     // --- host-fallback comparison (same iterator, golden engine).
     {
         let mut sys = PimSystem::host_only(PimConfig::upmem(dpus));
-        let (x, y) = vecadd::generate(2, n);
+        let (x, y) = vecadd::generate(prng::seed_for(2), n);
         sys.scatter("x", &x, 4).unwrap();
         sys.scatter("y", &y, 4).unwrap();
         sys.array_zip("x", "y", "xy").unwrap();
@@ -157,4 +348,6 @@ fn main() {
         });
         report("array_map vecadd 1M i32 (host fallback)", m, Some((n as u64, "elem")));
     }
+
+    write_json(&rows);
 }

@@ -1,0 +1,135 @@
+//! `Send`-safe staging arenas for gang marshalling and row I/O.
+//!
+//! The executor used to recycle its gang-batch staging vectors through
+//! a `thread_local!` pool (`RefCell<Vec<Vec<i32>>>`), which cannot be
+//! shared with the parallel backend's worker threads.  These arenas
+//! replace it: a small mutex-guarded free list each backend owns, from
+//! which every worker takes a buffer at the start of its shard and
+//! returns it at the end (one lock per shard, not per row).
+//!
+//! Pooling policy (and the fix for the old accounting bug): the old
+//! pool compared `capacity()` against the cap *after* `resize`, so a
+//! buffer whose capacity had ever grown past the cap was silently
+//! dropped even when the requested length was small — repeated large
+//! launches allocated fresh megabytes every time.  Returns are now
+//! clamped instead: an oversized buffer is shrunk back to the cap and
+//! pooled, so the pool always retains up to `pool_cap` buffers of at
+//! most `max_elems` capacity.
+
+use std::sync::Mutex;
+
+/// Buffers kept per arena (they can be megabytes each).
+pub(crate) const ARENA_POOL_CAP: usize = 8;
+/// Capacity cap (elements) a pooled buffer is shrunk back to, so one
+/// huge launch cannot pin tens of megabytes of host memory forever.
+pub(crate) const ARENA_MAX_POOLED_ELEMS: usize = 2 << 20; // 8 MB of i32
+
+/// A mutex-guarded free list of `Vec<T>` staging buffers.
+#[derive(Debug)]
+pub struct Arena<T> {
+    pool: Mutex<Vec<Vec<T>>>,
+    pool_cap: usize,
+    max_elems: usize,
+}
+
+impl<T: Clone + Default> Arena<T> {
+    pub fn new(pool_cap: usize, max_elems: usize) -> Self {
+        Arena { pool: Mutex::new(Vec::new()), pool_cap: pool_cap.max(1), max_elems }
+    }
+
+    /// Take a staging buffer of `len` elements initialized to `fill`.
+    pub fn take(&self, len: usize, fill: T) -> Vec<T> {
+        let mut v = self
+            .pool
+            .lock()
+            .map(|mut p| p.pop().unwrap_or_default())
+            .unwrap_or_default();
+        v.clear();
+        v.resize(len, fill);
+        v
+    }
+
+    /// Return a staging buffer.  Oversized buffers are shrunk back to
+    /// the cap (not dropped); buffers only fall on the floor when the
+    /// pool itself is full.
+    pub fn give(&self, mut v: Vec<T>) {
+        v.clear();
+        if v.capacity() > self.max_elems {
+            v.shrink_to(self.max_elems);
+        }
+        if let Ok(mut p) = self.pool.lock() {
+            if p.len() < self.pool_cap {
+                p.push(v);
+            }
+        }
+    }
+
+    /// Buffers currently pooled (test hook).
+    pub fn pooled(&self) -> usize {
+        self.pool.lock().map(|p| p.len()).unwrap_or(0)
+    }
+}
+
+/// Gang-batch staging arena (i32 lanes), with the executor's historic
+/// pool bounds.
+pub type BufArena = Arena<i32>;
+/// Row-marshalling staging arena (raw bytes) for sharded bank I/O.
+pub type ByteArena = Arena<u8>;
+
+/// An arena with the executor's default bounds.
+pub fn default_buf_arena() -> BufArena {
+    Arena::new(ARENA_POOL_CAP, ARENA_MAX_POOLED_ELEMS)
+}
+
+/// A byte arena sized for row staging (same byte budget as the i32
+/// arena: 8 MB per buffer).
+pub fn default_byte_arena() -> ByteArena {
+    Arena::new(ARENA_POOL_CAP, ARENA_MAX_POOLED_ELEMS * 4)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn recycles_and_reinitializes() {
+        let a = default_buf_arena();
+        let mut v = a.take(16, 7);
+        assert_eq!(v.len(), 16);
+        assert!(v.iter().all(|&x| x == 7));
+        v[0] = 99;
+        a.give(v);
+        assert_eq!(a.pooled(), 1);
+        // A recycled buffer must come back fully re-initialized.
+        let w = a.take(32, -1);
+        assert_eq!(a.pooled(), 0);
+        assert_eq!(w.len(), 32);
+        assert!(w.iter().all(|&x| x == -1));
+        a.give(w);
+    }
+
+    #[test]
+    fn oversized_returns_are_clamped_not_dropped() {
+        let a: Arena<i32> = Arena::new(2, 64);
+        // Grow a buffer far past the cap, then return it.
+        let v = a.take(1024, 0);
+        assert!(v.capacity() >= 1024);
+        a.give(v);
+        // The fix: the buffer is pooled (shrunk), not silently dropped.
+        assert_eq!(a.pooled(), 1);
+        let w = a.take(8, 1);
+        assert!(w.capacity() < 1024, "pooled buffer was shrunk toward the cap");
+        assert_eq!(w.len(), 8);
+        assert!(w.iter().all(|&x| x == 1));
+        a.give(w);
+    }
+
+    #[test]
+    fn pool_is_bounded() {
+        let a: Arena<u8> = Arena::new(2, 1024);
+        a.give(vec![0; 8]);
+        a.give(vec![0; 8]);
+        a.give(vec![0; 8]); // overflow: dropped
+        assert_eq!(a.pooled(), 2);
+    }
+}

@@ -1,0 +1,103 @@
+//! [`GangBackend`]: gang batching as an explicit execution policy.
+//!
+//! The PJRT path is gang-batched by construction (the AOT executables
+//! take a `[G, N]` leading dimension, and `gang_batches` counts one
+//! batch per launch there — the per-gang dispatch happens inside the
+//! executable machinery); this backend additionally structures
+//! *host-golden* execution in fixed-width gangs of [`HOST_GANG`] DPUs,
+//! counting one `gang_batches` increment per host gang.  Functionally
+//! identical to [`super::SequentialBackend`] lane for lane.
+
+use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
+use super::{
+    read_rows_seq, write_rows_seq, BackendKind, BackendStats, ExecBackend, StatCounters,
+};
+use crate::coordinator::exec::{gang_execute, host_eval_dpu, Inputs};
+use crate::coordinator::handle::PimFunc;
+use crate::error::Result;
+use crate::pim::memory::MramBank;
+use crate::runtime::Runtime;
+
+/// Host-execution gang width (the AOT artifacts' default gang is 8;
+/// a wider host gang just means fewer, larger batches).
+const HOST_GANG: usize = 64;
+
+#[derive(Debug)]
+pub struct GangBackend {
+    arena: BufArena,
+    staging: ByteArena,
+    stats: StatCounters,
+}
+
+impl GangBackend {
+    pub fn new() -> Self {
+        GangBackend {
+            arena: default_buf_arena(),
+            staging: default_byte_arena(),
+            stats: StatCounters::default(),
+        }
+    }
+}
+
+impl Default for GangBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExecBackend for GangBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Gang
+    }
+
+    fn launch(
+        &self,
+        rt: Option<&Runtime>,
+        func: &PimFunc,
+        ctx: &[i32],
+        inputs: &Inputs,
+    ) -> Result<Vec<Vec<i32>>> {
+        if let Some(rt) = rt {
+            if let Some(out) = gang_execute(rt, func, ctx, inputs, &self.arena)? {
+                self.stats.launch(0);
+                self.stats.gang_batch();
+                return Ok(out);
+            }
+        }
+        let n = inputs.n_dpus();
+        let (a, b) = (inputs.first(), inputs.second());
+        let mut out = Vec::with_capacity(n);
+        for gang_start in (0..n).step_by(HOST_GANG) {
+            let slots = HOST_GANG.min(n - gang_start);
+            for s in 0..slots {
+                out.push(host_eval_dpu(func, ctx, a, b, gang_start + s)?);
+            }
+            self.stats.gang_batch();
+        }
+        self.stats.launch(n as u64);
+        Ok(out)
+    }
+
+    fn write_rows(
+        &self,
+        banks: &mut [MramBank],
+        addr: u64,
+        row_len: usize,
+        fill: &(dyn Fn(usize, &mut [u8]) + Sync),
+    ) -> Result<()> {
+        write_rows_seq(banks, 0, addr, row_len, fill, &self.staging)
+    }
+
+    fn read_rows(
+        &self,
+        banks: &[MramBank],
+        addr: u64,
+        take: &(dyn Fn(usize) -> u64 + Sync),
+    ) -> Result<Vec<Vec<i32>>> {
+        read_rows_seq(banks, 0, addr, take)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats.snapshot(1)
+    }
+}

@@ -1,0 +1,322 @@
+//! The execution-backend layer (DESIGN.md §11).
+//!
+//! SimplePIM's performance story rests on thousands of DPUs executing
+//! in parallel, yet the simulator's hot path used to walk every DPU
+//! sequentially on one host thread, with the execution strategy
+//! (host-golden loop vs PJRT gang batching) hard-wired into
+//! `coordinator/exec.rs`.  This module carves that strategy out into an
+//! explicit [`ExecBackend`] trait — launch a gang of per-DPU kernel
+//! invocations, shard the scatter/gather byte-marshalling loops, report
+//! stats — with three implementations:
+//!
+//! * [`SequentialBackend`] — the seed's behavior, extracted verbatim:
+//!   per-DPU host-golden walk, PJRT gang batching when a runtime is
+//!   loaded;
+//! * [`GangBackend`] — gang batching as an explicit policy: host
+//!   execution proceeds in fixed-width DPU gangs (the PJRT path is
+//!   gang-batched by construction);
+//! * [`ParallelBackend`] — shards DPU ranks across a
+//!   `std::thread::scope` worker pool with per-worker staging arenas
+//!   ([`arena`]), for both kernel execution and bank-row marshalling.
+//!
+//! **Backends are functional-only.**  All modeled time (`Timeline`) is
+//! charged by the coordinator from kernel profiles and transfer rules
+//! that never see the backend, so modeled seconds are backend-invariant
+//! by construction; `rust/tests/backend_parity.rs` pins bit-identical
+//! results *and* identical timelines across all three.
+
+pub mod arena;
+mod gang;
+mod parallel;
+mod seq;
+
+pub use arena::{BufArena, ByteArena};
+pub use gang::GangBackend;
+pub use parallel::ParallelBackend;
+pub use seq::SequentialBackend;
+
+use std::fmt;
+use std::ops::Range;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use crate::coordinator::exec::Inputs;
+use crate::coordinator::handle::PimFunc;
+use crate::error::{Error, Result};
+use crate::pim::memory::MramBank;
+use crate::runtime::Runtime;
+
+/// Which backend implementation a system runs (CLI: `--backend`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum BackendKind {
+    Seq,
+    Gang,
+    Parallel,
+}
+
+impl BackendKind {
+    pub fn parse(s: &str) -> Result<BackendKind> {
+        match s {
+            "seq" | "sequential" => Ok(BackendKind::Seq),
+            "gang" => Ok(BackendKind::Gang),
+            "parallel" | "par" => Ok(BackendKind::Parallel),
+            other => Err(Error::msg(format!(
+                "unknown backend `{other}` (expected seq, gang, or parallel)"
+            ))),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            BackendKind::Seq => "seq",
+            BackendKind::Gang => "gang",
+            BackendKind::Parallel => "parallel",
+        }
+    }
+}
+
+impl fmt::Display for BackendKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Snapshot of a backend's counters.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct BackendStats {
+    /// Kernel launches executed functionally.
+    pub launches: u64,
+    /// Per-DPU lanes evaluated by the host engine.
+    pub host_lanes: u64,
+    /// Gang batches dispatched (host gangs or PJRT gang calls).
+    pub gang_batches: u64,
+    /// Operations (launches / row reads / row writes) that were sharded
+    /// across worker threads.
+    pub sharded_ops: u64,
+    /// Worker threads the backend shards across (1 = single-threaded).
+    pub threads: usize,
+}
+
+/// Shared atomic counters backing [`BackendStats`] (trait methods take
+/// `&self` and may be called from worker scopes).
+#[derive(Debug, Default)]
+pub(crate) struct StatCounters {
+    launches: AtomicU64,
+    host_lanes: AtomicU64,
+    gang_batches: AtomicU64,
+    sharded_ops: AtomicU64,
+}
+
+impl StatCounters {
+    pub(crate) fn launch(&self, host_lanes: u64) {
+        self.launches.fetch_add(1, Ordering::Relaxed);
+        self.host_lanes.fetch_add(host_lanes, Ordering::Relaxed);
+    }
+
+    pub(crate) fn gang_batch(&self) {
+        self.gang_batches.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn sharded_op(&self) {
+        self.sharded_ops.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub(crate) fn snapshot(&self, threads: usize) -> BackendStats {
+        BackendStats {
+            launches: self.launches.load(Ordering::Relaxed),
+            host_lanes: self.host_lanes.load(Ordering::Relaxed),
+            gang_batches: self.gang_batches.load(Ordering::Relaxed),
+            sharded_ops: self.sharded_ops.load(Ordering::Relaxed),
+            threads,
+        }
+    }
+}
+
+/// One execution backend: how per-DPU kernel invocations and bank-row
+/// marshalling loops actually run on the host.
+///
+/// Implementations must be purely functional with respect to the
+/// machine model: they may choose *how* bytes are produced and moved,
+/// never *what* bytes or what modeled time.  `PimMachine` owns all
+/// timing.
+pub trait ExecBackend: Send + Sync {
+    fn kind(&self) -> BackendKind;
+
+    /// Worker threads this backend shards across.
+    fn threads(&self) -> usize {
+        1
+    }
+
+    /// Execute one kernel over per-DPU inputs, returning per-DPU
+    /// outputs (map: transformed arrays; red: partial accumulators).
+    fn launch(
+        &self,
+        rt: Option<&Runtime>,
+        func: &PimFunc,
+        ctx: &[i32],
+        inputs: &Inputs,
+    ) -> Result<Vec<Vec<i32>>>;
+
+    /// Write one `row_len`-byte row per bank at `addr`.  `fill(dpu,
+    /// buf)` marshals row `dpu` into a zeroed staging buffer; the
+    /// backend decides how rows are staged and sharded across banks.
+    fn write_rows(
+        &self,
+        banks: &mut [MramBank],
+        addr: u64,
+        row_len: usize,
+        fill: &(dyn Fn(usize, &mut [u8]) + Sync),
+    ) -> Result<()>;
+
+    /// Read `take(dpu)` bytes at `addr` from every bank, unmarshalled
+    /// into i32 words per DPU (byte counts must be 4-aligned).
+    fn read_rows(
+        &self,
+        banks: &[MramBank],
+        addr: u64,
+        take: &(dyn Fn(usize) -> u64 + Sync),
+    ) -> Result<Vec<Vec<i32>>>;
+
+    /// Counter snapshot.
+    fn stats(&self) -> BackendStats;
+}
+
+/// Build a backend of `kind`; `threads` only affects `Parallel`.
+pub fn make(kind: BackendKind, threads: usize) -> Box<dyn ExecBackend> {
+    match kind {
+        BackendKind::Seq => Box::new(SequentialBackend::new()),
+        BackendKind::Gang => Box::new(GangBackend::new()),
+        BackendKind::Parallel => Box::new(ParallelBackend::new(threads)),
+    }
+}
+
+/// Worker count to use when none is requested.
+pub fn default_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+}
+
+/// The process-default backend: `SIMPLEPIM_BACKEND` (seq | gang |
+/// parallel) and `SIMPLEPIM_THREADS` when set, else the seed's
+/// sequential behavior.  This is what lets CI run the whole tier-1
+/// suite under `--backend parallel --threads 4` without touching any
+/// test code.
+pub fn from_env() -> Box<dyn ExecBackend> {
+    // Misconfiguration must be loud: the backends are parity-identical
+    // by design, so silently falling back on a typo (e.g.
+    // `SIMPLEPIM_BACKEND=paralell` in CI) would run the sequential
+    // path with every test green and zero parallel coverage.  Both
+    // variables are explicit opt-ins, so an invalid value is a hard
+    // error.
+    let kind = match std::env::var("SIMPLEPIM_BACKEND") {
+        Ok(s) => match BackendKind::parse(&s) {
+            Ok(k) => k,
+            Err(e) => panic!("invalid SIMPLEPIM_BACKEND: {e}"),
+        },
+        Err(_) => BackendKind::Seq,
+    };
+    let threads = match std::env::var("SIMPLEPIM_THREADS") {
+        Ok(s) => match s.parse::<usize>() {
+            Ok(t) if t >= 1 => t,
+            _ => panic!("invalid SIMPLEPIM_THREADS=`{s}` (expected a positive integer)"),
+        },
+        Err(_) => default_threads(),
+    };
+    make(kind, threads)
+}
+
+/// Split `0..n` into at most `shards` contiguous, near-equal ranges.
+pub(crate) fn shard_ranges(n: usize, shards: usize) -> Vec<Range<usize>> {
+    let shards = shards.clamp(1, n.max(1));
+    let base = n / shards;
+    let extra = n % shards;
+    let mut out = Vec::with_capacity(shards);
+    let mut start = 0;
+    for i in 0..shards {
+        let len = base + usize::from(i < extra);
+        if len == 0 {
+            continue;
+        }
+        out.push(start..start + len);
+        start += len;
+    }
+    out
+}
+
+/// Sequential row write used by the single-threaded backends (and by
+/// the parallel backend for degenerate shard counts): one staging
+/// buffer, zeroed and refilled per row.
+pub(crate) fn write_rows_seq(
+    banks: &mut [MramBank],
+    first_dpu: usize,
+    addr: u64,
+    row_len: usize,
+    fill: &(dyn Fn(usize, &mut [u8]) + Sync),
+    staging: &ByteArena,
+) -> Result<()> {
+    let mut buf = staging.take(row_len, 0);
+    let mut result = Ok(());
+    for (i, bank) in banks.iter_mut().enumerate() {
+        buf.fill(0);
+        fill(first_dpu + i, &mut buf);
+        if let Err(e) = bank.write(addr, &buf) {
+            result = Err(e);
+            break;
+        }
+    }
+    staging.give(buf);
+    result
+}
+
+/// Sequential row read: bank bytes -> i32 words, in DPU order.
+pub(crate) fn read_rows_seq(
+    banks: &[MramBank],
+    first_dpu: usize,
+    addr: u64,
+    take: &(dyn Fn(usize) -> u64 + Sync),
+) -> Result<Vec<Vec<i32>>> {
+    let mut out = Vec::with_capacity(banks.len());
+    for (i, bank) in banks.iter().enumerate() {
+        let raw = bank.read(addr, take(first_dpu + i))?;
+        out.push(crate::coordinator::comm::bytes_to_words(raw));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backend_kind_parses() {
+        assert_eq!(BackendKind::parse("seq").unwrap(), BackendKind::Seq);
+        assert_eq!(BackendKind::parse("gang").unwrap(), BackendKind::Gang);
+        assert_eq!(BackendKind::parse("parallel").unwrap(), BackendKind::Parallel);
+        assert!(BackendKind::parse("gpu").is_err());
+        assert_eq!(BackendKind::Parallel.to_string(), "parallel");
+    }
+
+    #[test]
+    fn shard_ranges_cover_exactly() {
+        for n in [0usize, 1, 7, 16, 100] {
+            for shards in [1usize, 2, 3, 8, 200] {
+                let rs = shard_ranges(n, shards);
+                let mut next = 0;
+                for r in &rs {
+                    assert_eq!(r.start, next, "contiguous (n={n}, shards={shards})");
+                    assert!(!r.is_empty());
+                    next = r.end;
+                }
+                assert_eq!(next, n, "full coverage (n={n}, shards={shards})");
+                assert!(rs.len() <= shards.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn make_builds_every_kind() {
+        assert_eq!(make(BackendKind::Seq, 1).kind(), BackendKind::Seq);
+        assert_eq!(make(BackendKind::Gang, 1).kind(), BackendKind::Gang);
+        let p = make(BackendKind::Parallel, 3);
+        assert_eq!(p.kind(), BackendKind::Parallel);
+        assert_eq!(p.threads(), 3);
+    }
+}

@@ -1,0 +1,174 @@
+//! [`ParallelBackend`]: shard DPU ranks across a `std::thread::scope`
+//! worker pool.
+//!
+//! Kernel launches (host-golden path), bank-row writes, and bank-row
+//! reads all split the DPU range into contiguous rank shards, one per
+//! worker.  Each worker stages through its own arena buffer
+//! ([`super::arena`]) — taken once per shard, returned at the end — so
+//! the hot loops never contend on a lock and never allocate per row.
+//!
+//! When a PJRT runtime is loaded, artifact-backed kernels delegate to
+//! the gang-batched executable path (a PJRT client is not shardable
+//! from multiple threads); the host-golden fallback, and all
+//! marshalling, still shard.  Results are stitched back in DPU order,
+//! so outputs are bit-identical to the sequential backend, and no
+//! timing lives here at all — modeled seconds are charged by
+//! `PimMachine`, identically for every backend.
+
+use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
+use super::{
+    read_rows_seq, shard_ranges, write_rows_seq, BackendKind, BackendStats, ExecBackend,
+    StatCounters,
+};
+use crate::coordinator::exec::{gang_execute, host_eval_dpu, Inputs};
+use crate::coordinator::handle::PimFunc;
+use crate::error::Result;
+use crate::pim::memory::MramBank;
+use crate::runtime::Runtime;
+
+#[derive(Debug)]
+pub struct ParallelBackend {
+    threads: usize,
+    arena: BufArena,
+    staging: ByteArena,
+    stats: StatCounters,
+}
+
+impl ParallelBackend {
+    pub fn new(threads: usize) -> Self {
+        ParallelBackend {
+            threads: threads.max(1),
+            arena: default_buf_arena(),
+            staging: default_byte_arena(),
+            stats: StatCounters::default(),
+        }
+    }
+}
+
+impl ExecBackend for ParallelBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Parallel
+    }
+
+    fn threads(&self) -> usize {
+        self.threads
+    }
+
+    fn launch(
+        &self,
+        rt: Option<&Runtime>,
+        func: &PimFunc,
+        ctx: &[i32],
+        inputs: &Inputs,
+    ) -> Result<Vec<Vec<i32>>> {
+        if let Some(rt) = rt {
+            if let Some(out) = gang_execute(rt, func, ctx, inputs, &self.arena)? {
+                self.stats.launch(0);
+                self.stats.gang_batch();
+                return Ok(out);
+            }
+        }
+        let n = inputs.n_dpus();
+        let (a, b) = (inputs.first(), inputs.second());
+        let shards = shard_ranges(n, self.threads);
+        if shards.len() <= 1 {
+            let mut out = Vec::with_capacity(n);
+            for dpu in 0..n {
+                out.push(host_eval_dpu(func, ctx, a, b, dpu)?);
+            }
+            self.stats.launch(n as u64);
+            return Ok(out);
+        }
+        let parts: Vec<Result<Vec<Vec<i32>>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = shards
+                .iter()
+                .cloned()
+                .map(|r| {
+                    s.spawn(move || -> Result<Vec<Vec<i32>>> {
+                        let mut part = Vec::with_capacity(r.len());
+                        for dpu in r {
+                            part.push(host_eval_dpu(func, ctx, a, b, dpu)?);
+                        }
+                        Ok(part)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("launch worker panicked")).collect()
+        });
+        let mut out = Vec::with_capacity(n);
+        for part in parts {
+            out.extend(part?);
+        }
+        self.stats.launch(n as u64);
+        self.stats.sharded_op();
+        Ok(out)
+    }
+
+    fn write_rows(
+        &self,
+        banks: &mut [MramBank],
+        addr: u64,
+        row_len: usize,
+        fill: &(dyn Fn(usize, &mut [u8]) + Sync),
+    ) -> Result<()> {
+        let shards = shard_ranges(banks.len(), self.threads);
+        if shards.len() <= 1 {
+            return write_rows_seq(banks, 0, addr, row_len, fill, &self.staging);
+        }
+        let staging = &self.staging;
+        // Split the bank array into one disjoint &mut shard per worker.
+        let mut shard_slices: Vec<(usize, &mut [MramBank])> = Vec::with_capacity(shards.len());
+        let mut rest: &mut [MramBank] = banks;
+        for r in &shards {
+            let slice = std::mem::take(&mut rest);
+            let (head, tail) = slice.split_at_mut(r.len());
+            shard_slices.push((r.start, head));
+            rest = tail;
+        }
+        let results: Vec<Result<()>> = std::thread::scope(|s| {
+            let handles: Vec<_> = shard_slices
+                .into_iter()
+                .map(|(first, head)| {
+                    s.spawn(move || write_rows_seq(head, first, addr, row_len, fill, staging))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("write worker panicked")).collect()
+        });
+        self.stats.sharded_op();
+        results.into_iter().collect()
+    }
+
+    fn read_rows(
+        &self,
+        banks: &[MramBank],
+        addr: u64,
+        take: &(dyn Fn(usize) -> u64 + Sync),
+    ) -> Result<Vec<Vec<i32>>> {
+        let shards = shard_ranges(banks.len(), self.threads);
+        if shards.len() <= 1 {
+            return read_rows_seq(banks, 0, addr, take);
+        }
+        let parts: Vec<Result<Vec<Vec<i32>>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = shards
+                .iter()
+                .cloned()
+                .map(|r| {
+                    let shard = &banks[r.start..r.end];
+                    let first = r.start;
+                    s.spawn(move || read_rows_seq(shard, first, addr, take))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("read worker panicked")).collect()
+        });
+        let mut out = Vec::with_capacity(banks.len());
+        for part in parts {
+            out.extend(part?);
+        }
+        self.stats.sharded_op();
+        Ok(out)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats.snapshot(self.threads)
+    }
+}

@@ -1,0 +1,94 @@
+//! [`SequentialBackend`]: the seed's execution strategy, extracted from
+//! `coordinator/exec.rs` behind the [`ExecBackend`] trait.
+//!
+//! One host thread walks every DPU in order — the `for dpu in 0..n`
+//! loop the tentpole refactor lifted out of the coordinator.  When a
+//! PJRT runtime is loaded, kernel launches take the gang-batched
+//! executable path (that *is* today's behavior); everything else is a
+//! straight sequential loop.
+
+use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
+use super::{
+    read_rows_seq, write_rows_seq, BackendKind, BackendStats, ExecBackend, StatCounters,
+};
+use crate::coordinator::exec::{gang_execute, host_eval_dpu, Inputs};
+use crate::coordinator::handle::PimFunc;
+use crate::error::Result;
+use crate::pim::memory::MramBank;
+use crate::runtime::Runtime;
+
+#[derive(Debug)]
+pub struct SequentialBackend {
+    arena: BufArena,
+    staging: ByteArena,
+    stats: StatCounters,
+}
+
+impl SequentialBackend {
+    pub fn new() -> Self {
+        SequentialBackend {
+            arena: default_buf_arena(),
+            staging: default_byte_arena(),
+            stats: StatCounters::default(),
+        }
+    }
+}
+
+impl Default for SequentialBackend {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ExecBackend for SequentialBackend {
+    fn kind(&self) -> BackendKind {
+        BackendKind::Seq
+    }
+
+    fn launch(
+        &self,
+        rt: Option<&Runtime>,
+        func: &PimFunc,
+        ctx: &[i32],
+        inputs: &Inputs,
+    ) -> Result<Vec<Vec<i32>>> {
+        if let Some(rt) = rt {
+            if let Some(out) = gang_execute(rt, func, ctx, inputs, &self.arena)? {
+                self.stats.launch(0);
+                self.stats.gang_batch();
+                return Ok(out);
+            }
+        }
+        let n = inputs.n_dpus();
+        let (a, b) = (inputs.first(), inputs.second());
+        let mut out = Vec::with_capacity(n);
+        for dpu in 0..n {
+            out.push(host_eval_dpu(func, ctx, a, b, dpu)?);
+        }
+        self.stats.launch(n as u64);
+        Ok(out)
+    }
+
+    fn write_rows(
+        &self,
+        banks: &mut [MramBank],
+        addr: u64,
+        row_len: usize,
+        fill: &(dyn Fn(usize, &mut [u8]) + Sync),
+    ) -> Result<()> {
+        write_rows_seq(banks, 0, addr, row_len, fill, &self.staging)
+    }
+
+    fn read_rows(
+        &self,
+        banks: &[MramBank],
+        addr: u64,
+        take: &(dyn Fn(usize) -> u64 + Sync),
+    ) -> Result<Vec<Vec<i32>>> {
+        read_rows_seq(banks, 0, addr, take)
+    }
+
+    fn stats(&self) -> BackendStats {
+        self.stats.snapshot(1)
+    }
+}

@@ -52,6 +52,16 @@ impl Args {
         }
     }
 
+    pub fn flag_u64(&self, name: &str) -> Result<Option<u64>> {
+        match self.flag(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse()
+                .map(Some)
+                .map_err(|_| Error::msg(format!("--{name} expects an integer, got `{v}`"))),
+        }
+    }
+
     pub fn has(&self, name: &str) -> bool {
         self.flags.iter().any(|(n, _)| n == name)
     }
@@ -66,14 +76,21 @@ COMMANDS:
   run <workload>    run one workload end-to-end on the simulated machine
                     workloads: reduction vecadd histogram linreg logreg kmeans
                     options: --dpus N (default 16) --elems N --host-only
+                             --backend {seq|gang|parallel} (execution
+                             backend; default seq or $SIMPLEPIM_BACKEND)
+                             --threads N (parallel backend workers;
+                             default: available cores)
+                             --seed S (deterministic data generation)
                              --explain (dump the optimized plan: nodes,
-                             fusions applied, plan-cache hits/misses)
+                             which backend ran them, fusions applied,
+                             plan-cache hits/misses)
   figures <which>   regenerate a paper figure from the timing model
                     which: fig9 fig10 fig11 ablations all
                     options: --csv (emit CSV instead of tables)
   table1            regenerate the lines-of-code table (Table 1)
   info              print the machine model   options: --dpus N
   selftest          functional check: XLA path vs host goldens
+                    options: --backend --threads --seed (as in `run`)
   help              this text
 ";
 
@@ -135,6 +152,14 @@ mod tests {
     fn bad_int_flag_errors() {
         let a = args(&["run", "--dpus", "xyz"]);
         assert!(a.flag_usize("dpus", 1).is_err());
+        assert!(a.flag_u64("dpus").is_err());
+    }
+
+    #[test]
+    fn u64_flag_parses_or_defaults() {
+        let a = args(&["run", "--seed", "42"]);
+        assert_eq!(a.flag_u64("seed").unwrap(), Some(42));
+        assert_eq!(a.flag_u64("missing").unwrap(), None);
     }
 
     #[test]

@@ -13,7 +13,7 @@ use crate::util::round_up;
 use super::comm::{bytes_to_words, words_to_bytes};
 use super::handle::Handle;
 use super::management::Layout;
-use super::plan::{NodeState, PlanOp};
+use super::plan::PlanOp;
 use super::PimSystem;
 
 impl PimSystem {
@@ -57,8 +57,8 @@ impl PimSystem {
         let mut buf = words_to_bytes(&merged);
         buf.resize(padded as usize, 0);
         self.machine.push_broadcast(meta.addr, &buf)?;
-        let node = self.engine.record(PlanOp::Allreduce, id, &[id], meta.len);
-        self.engine.graph.set_state(node, NodeState::Executed);
+        let kind = self.backend.kind();
+        self.engine.record_executed(PlanOp::Allreduce, id, &[id], meta.len, kind);
         Ok(())
     }
 
@@ -81,8 +81,8 @@ impl PimSystem {
         let full = self.gather(id)?;
         // ... and broadcast the complete array (timed + registered).
         self.broadcast(new_id, &full, meta.type_size)?;
-        let node = self.engine.record(PlanOp::Allgather, new_id, &[id], meta.len);
-        self.engine.graph.set_state(node, NodeState::Executed);
+        let kind = self.backend.kind();
+        self.engine.record_executed(PlanOp::Allgather, new_id, &[id], meta.len, kind);
         Ok(())
     }
 }

@@ -46,8 +46,8 @@ impl PimSystem {
             padded_bytes: padded,
             layout: Layout::Broadcast,
         })?;
-        let node = self.engine.record(PlanOp::Broadcast, id, &[], len);
-        self.engine.graph.set_state(node, NodeState::Executed);
+        let kind = self.backend.kind();
+        self.engine.record_executed(PlanOp::Broadcast, id, &[], len, kind);
         Ok(())
     }
 
@@ -62,28 +62,38 @@ impl PimSystem {
         let plan = self.scatter_plan(len, type_size as u64);
         let addr = self.pool_alloc(plan.padded_bytes.max(8))?;
 
+        // Marshal each DPU's padded row straight from the source bytes;
+        // the backend shards the row loop across its workers.
         let ts = type_size as usize;
-        let mut bufs = Vec::with_capacity(self.machine.n_dpus());
+        let mut offsets = Vec::with_capacity(plan.per_dpu_elems.len());
         let mut off = 0usize;
         for &elems in &plan.per_dpu_elems {
-            let take = elems as usize * ts;
-            let mut b = vec![0u8; plan.padded_bytes as usize];
-            b[..take].copy_from_slice(&bytes[off..off + take]);
-            off += take;
-            bufs.push(b);
+            offsets.push(off);
+            off += elems as usize * ts;
         }
-        self.machine.push_parallel(addr, &bufs)?;
+        let per_dpu = &plan.per_dpu_elems;
+        let src = &bytes;
+        let offs = &offsets;
+        self.machine.push_rows_with(
+            addr,
+            plan.padded_bytes as usize,
+            self.backend.as_ref(),
+            &|dpu, buf| {
+                let take = per_dpu[dpu] as usize * ts;
+                buf[..take].copy_from_slice(&src[offs[dpu]..offs[dpu] + take]);
+            },
+        )?;
         self.management.register(ArrayMeta {
             id: id.to_string(),
             len,
             type_size,
-            per_dpu: plan.per_dpu_elems,
+            per_dpu: plan.per_dpu_elems.clone(),
             addr,
             padded_bytes: plan.padded_bytes,
             layout: Layout::Scattered,
         })?;
-        let node = self.engine.record(PlanOp::Scatter, id, &[], len);
-        self.engine.graph.set_state(node, NodeState::Executed);
+        let kind = self.backend.kind();
+        self.engine.record_executed(PlanOp::Scatter, id, &[], len, kind);
         Ok(())
     }
 
@@ -113,20 +123,23 @@ impl PimSystem {
         self.force_array(id)?;
         let meta = self.management.lookup(id)?.clone();
         if !matches!(meta.layout, Layout::LazyZip { .. }) {
-            let node = self.engine.record(PlanOp::Gather, id, &[id], meta.max_per_dpu());
-            self.engine.graph.set_state(node, NodeState::Executed);
+            let kind = self.backend.kind();
+            self.engine.record_executed(PlanOp::Gather, id, &[id], meta.max_per_dpu(), kind);
         }
         match &meta.layout {
             Layout::Scattered => {
-                let bufs = self.machine.pull_parallel(
+                // Sharded unmarshal of each DPU's live bytes; charged as
+                // the equal-buffer parallel pull of `padded_bytes` rows.
+                let m = &meta;
+                let rows = self.machine.pull_rows_with(
                     meta.addr,
                     meta.padded_bytes,
-                    self.machine.n_dpus(),
+                    self.backend.as_ref(),
+                    &|dpu| m.bytes_on(dpu),
                 )?;
                 let mut out = Vec::with_capacity((meta.len * meta.type_size as u64 / 4) as usize);
-                for (dpu, buf) in bufs.iter().enumerate() {
-                    let take = meta.bytes_on(dpu) as usize;
-                    out.extend(bytes_to_words(&buf[..take]));
+                for row in rows {
+                    out.extend(row);
                 }
                 Ok(out)
             }
@@ -203,6 +216,29 @@ pub(crate) fn words_to_bytes(words: &[i32]) -> Vec<u8> {
             out.extend_from_slice(&w.to_le_bytes());
         }
         out
+    }
+}
+
+/// Pack i32 words into a caller-provided little-endian byte buffer
+/// (`out.len()` must equal `words.len() * 4`).  The allocation-free
+/// sibling of [`words_to_bytes`], used by the backend's sharded row
+/// marshalling where workers stage through arena buffers.
+pub(crate) fn words_into_bytes(words: &[i32], out: &mut [u8]) {
+    debug_assert_eq!(out.len(), words.len() * 4);
+    if cfg!(target_endian = "little") {
+        // SAFETY: i32 -> u8 reinterpretation of initialized memory;
+        // lengths match; on LE the byte order is already to_le_bytes.
+        unsafe {
+            std::ptr::copy_nonoverlapping(
+                words.as_ptr() as *const u8,
+                out.as_mut_ptr(),
+                out.len(),
+            );
+        }
+    } else {
+        for (chunk, w) in out.chunks_exact_mut(4).zip(words) {
+            chunk.copy_from_slice(&w.to_le_bytes());
+        }
     }
 }
 

@@ -12,51 +12,23 @@
 //! bit-identical host goldens run instead — the framework is
 //! functionally complete either way, and the integration tests pin the
 //! two paths to each other.
+//!
+//! Since the backend refactor (DESIGN.md §11) this module holds only
+//! the *mechanics* — gang marshalling through the runtime
+//! ([`gang_execute`]) and single-DPU host evaluation
+//! ([`host_eval_dpu`]) — while the *strategy* (sequential walk, gang
+//! batching, rank-sharded workers) lives in [`crate::backend`].  The
+//! old `thread_local!` staging-buffer pool became the `Send`-safe
+//! [`BufArena`] each backend owns.
 
-use std::cell::RefCell;
 use std::rc::Rc;
 
+use crate::backend::BufArena;
 use crate::error::{Error, Result};
 use crate::runtime::{Runtime, TensorRef};
 use crate::workloads::golden;
 
 use super::handle::PimFunc;
-
-thread_local! {
-    /// Recycled gang-batch marshalling buffers: every launch used to
-    /// allocate fresh `gang x N` staging vectors; the executor now
-    /// round-trips them through this small per-thread pool so repeated
-    /// launches (training loops, fused chains) reuse the same memory.
-    static GANG_BUFS: RefCell<Vec<Vec<i32>>> = RefCell::new(Vec::new());
-}
-
-/// Buffers kept in the per-thread pool (they can be megabytes each).
-const GANG_BUF_POOL_CAP: usize = 8;
-/// Buffers above this capacity are dropped instead of pooled, so one
-/// huge launch cannot pin tens of megabytes of host memory forever.
-const GANG_BUF_MAX_POOLED_ELEMS: usize = 2 << 20; // 8 MB of i32
-
-/// Take a staging buffer of `len` elements initialized to `fill`.
-fn take_buf(len: usize, fill: i32) -> Vec<i32> {
-    let mut v = GANG_BUFS.with(|p| p.borrow_mut().pop()).unwrap_or_default();
-    v.clear();
-    v.resize(len, fill);
-    v
-}
-
-/// Return a staging buffer to the pool (dropped if the pool is full or
-/// the buffer is outsized).
-fn give_buf(v: Vec<i32>) {
-    if v.capacity() > GANG_BUF_MAX_POOLED_ELEMS {
-        return;
-    }
-    GANG_BUFS.with(|p| {
-        let mut p = p.borrow_mut();
-        if p.len() < GANG_BUF_POOL_CAP {
-            p.push(v);
-        }
-    });
-}
 
 /// Padded-centroid distance anchor for K-means (see DESIGN.md): far
 /// enough that no real point (features in `[0, ~4096)`) ever picks a
@@ -82,14 +54,14 @@ impl Inputs {
         }
     }
 
-    fn first(&self) -> &[Vec<i32>] {
+    pub(crate) fn first(&self) -> &[Vec<i32>] {
         match self {
             Inputs::One(a) => a.as_slice(),
             Inputs::Two(a, _) => a.as_slice(),
         }
     }
 
-    fn second(&self) -> Option<&[Vec<i32>]> {
+    pub(crate) fn second(&self) -> Option<&[Vec<i32>]> {
         match self {
             Inputs::One(_) => None,
             Inputs::Two(_, b) => Some(b.as_slice()),
@@ -100,6 +72,11 @@ impl Inputs {
 /// Execute `func` with broadcast context `ctx` over per-DPU inputs.
 /// Returns per-DPU outputs (map: transformed arrays; red: partials of
 /// `func.red_output_len()` elements).
+///
+/// Convenience wrapper with the sequential backend's strategy (gang
+/// path through `runtime` when it applies, else the per-DPU host walk);
+/// the coordinator proper dispatches through its configured
+/// [`crate::backend::ExecBackend`] instead.
 pub fn execute_func(
     runtime: Option<&Runtime>,
     func: &PimFunc,
@@ -107,101 +84,140 @@ pub fn execute_func(
     inputs: &Inputs,
 ) -> Result<Vec<Vec<i32>>> {
     if let Some(rt) = runtime {
-        match func {
-            PimFunc::AffineMap => {
-                return run_1d(rt, "map_affine", inputs.first(), None, Some(ctx), 0, Mode::Map)
-            }
-            PimFunc::VecAdd => {
-                let b = inputs.second().ok_or_else(|| {
-                    Error::Handle("VecAdd needs a zipped pair input".into())
-                })?;
-                return run_1d(rt, "vecadd", inputs.first(), Some(b), None, 0, Mode::Map);
-            }
-            PimFunc::SumReduce => {
-                return run_1d(rt, "reduce_sum", inputs.first(), None, None, 0, Mode::Red(1))
-            }
-            PimFunc::Histogram { bins } => {
-                // Only the AOT-compiled bin count runs on the XLA path;
-                // other bin counts take the host fallback below.
-                if let Ok(meta) = rt.manifest.select("histogram", 1) {
-                    if meta.param("bins")? == *bins as i64 {
-                        return run_1d(
-                            rt,
-                            "histogram",
-                            inputs.first(),
-                            None,
-                            None,
-                            -1,
-                            Mode::Red(*bins as usize),
-                        );
-                    }
-                }
-            }
-            PimFunc::LinregGrad { dim } => {
-                let y = inputs.second().ok_or_else(|| {
-                    Error::Handle("LinregGrad needs zip(points, targets)".into())
-                })?;
-                return run_grad(rt, "linreg", inputs.first(), y, ctx, *dim as usize);
-            }
-            PimFunc::LogregGrad { dim } => {
-                let y = inputs.second().ok_or_else(|| {
-                    Error::Handle("LogregGrad needs zip(points, targets)".into())
-                })?;
-                return run_grad(rt, "logreg", inputs.first(), y, ctx, *dim as usize);
-            }
-            PimFunc::KmeansAssign { k, dim } => {
-                return run_kmeans(rt, inputs.first(), ctx, *k as usize, *dim as usize)
-            }
-            PimFunc::HostMap(_) | PimFunc::HostRed { .. } | PimFunc::HostAcc(_) => {}
+        // Process-level arena so repeated calls through this wrapper
+        // keep recycling their gang staging buffers, like the
+        // backend-owned arenas on the coordinator path.
+        static EXEC_ARENA: std::sync::OnceLock<BufArena> = std::sync::OnceLock::new();
+        let arena = EXEC_ARENA.get_or_init(crate::backend::arena::default_buf_arena);
+        if let Some(out) = gang_execute(rt, func, ctx, inputs, arena)? {
+            return Ok(out);
         }
     }
     host_fallback(func, ctx, inputs)
 }
 
-/// Host fallback: the bit-identical goldens, per DPU.
+/// Gang-batched execution through the AOT runtime.  Returns `Ok(None)`
+/// when no artifact covers `func` (custom host functions, exotic
+/// histogram bin counts) — the caller then falls back to the host
+/// engine.
+pub(crate) fn gang_execute(
+    rt: &Runtime,
+    func: &PimFunc,
+    ctx: &[i32],
+    inputs: &Inputs,
+    arena: &BufArena,
+) -> Result<Option<Vec<Vec<i32>>>> {
+    match func {
+        PimFunc::AffineMap => {
+            run_1d(rt, "map_affine", inputs.first(), None, Some(ctx), 0, Mode::Map, arena)
+                .map(Some)
+        }
+        PimFunc::VecAdd => {
+            let b = inputs
+                .second()
+                .ok_or_else(|| Error::Handle("VecAdd needs a zipped pair input".into()))?;
+            run_1d(rt, "vecadd", inputs.first(), Some(b), None, 0, Mode::Map, arena).map(Some)
+        }
+        PimFunc::SumReduce => {
+            run_1d(rt, "reduce_sum", inputs.first(), None, None, 0, Mode::Red(1), arena)
+                .map(Some)
+        }
+        PimFunc::Histogram { bins } => {
+            // Only the AOT-compiled bin count runs on the XLA path;
+            // other bin counts take the host fallback.
+            if let Ok(meta) = rt.manifest.select("histogram", 1) {
+                if meta.param("bins")? == *bins as i64 {
+                    return run_1d(
+                        rt,
+                        "histogram",
+                        inputs.first(),
+                        None,
+                        None,
+                        -1,
+                        Mode::Red(*bins as usize),
+                        arena,
+                    )
+                    .map(Some);
+                }
+            }
+            Ok(None)
+        }
+        PimFunc::LinregGrad { dim } => {
+            let y = inputs
+                .second()
+                .ok_or_else(|| Error::Handle("LinregGrad needs zip(points, targets)".into()))?;
+            run_grad(rt, "linreg", inputs.first(), y, ctx, *dim as usize, arena).map(Some)
+        }
+        PimFunc::LogregGrad { dim } => {
+            let y = inputs
+                .second()
+                .ok_or_else(|| Error::Handle("LogregGrad needs zip(points, targets)".into()))?;
+            run_grad(rt, "logreg", inputs.first(), y, ctx, *dim as usize, arena).map(Some)
+        }
+        PimFunc::KmeansAssign { k, dim } => {
+            run_kmeans(rt, inputs.first(), ctx, *k as usize, *dim as usize, arena).map(Some)
+        }
+        PimFunc::HostMap(_) | PimFunc::HostRed { .. } | PimFunc::HostAcc(_) => Ok(None),
+    }
+}
+
+/// Evaluate `func` on one DPU's local slice(s) through the
+/// bit-identical host goldens.  `a`/`b` are the per-DPU input arrays
+/// (plain slices, so rank-sharding workers can call this from
+/// `std::thread::scope` without touching the `Rc`-shared [`Inputs`]).
+pub(crate) fn host_eval_dpu(
+    func: &PimFunc,
+    ctx: &[i32],
+    a: &[Vec<i32>],
+    b: Option<&[Vec<i32>]>,
+    dpu: usize,
+) -> Result<Vec<i32>> {
+    let a = &a[dpu];
+    Ok(match func {
+        PimFunc::AffineMap => golden::map_affine(a, ctx[0], ctx[1]),
+        PimFunc::VecAdd => {
+            let b = &b
+                .ok_or_else(|| Error::Handle("VecAdd needs a zipped pair input".into()))?[dpu];
+            golden::vecadd(a, b)
+        }
+        PimFunc::SumReduce => vec![golden::reduce_sum(a)],
+        PimFunc::Histogram { bins } => golden::histogram(a, *bins),
+        PimFunc::LinregGrad { dim } => {
+            let y = &b
+                .ok_or_else(|| Error::Handle("LinregGrad needs zip(points, targets)".into()))?
+                [dpu];
+            golden::linreg_grad(a, y, ctx, *dim as usize)
+        }
+        PimFunc::LogregGrad { dim } => {
+            let y = &b
+                .ok_or_else(|| Error::Handle("LogregGrad needs zip(points, targets)".into()))?
+                [dpu];
+            golden::logreg_grad(a, y, ctx, *dim as usize)
+        }
+        PimFunc::KmeansAssign { k, dim } => {
+            golden::kmeans_partial(a, ctx, *k as usize, *dim as usize)
+        }
+        PimFunc::HostMap(f) => f(a, ctx),
+        PimFunc::HostRed { output_len, init, func } => {
+            let mut acc = vec![*init; *output_len as usize];
+            func(a, ctx, &mut acc);
+            acc
+        }
+        PimFunc::HostAcc(_) => {
+            return Err(Error::Handle(
+                "HostAcc handles drive allreduce, not map/red iterators".into(),
+            ))
+        }
+    })
+}
+
+/// Host fallback: the bit-identical goldens, walked per DPU.
 fn host_fallback(func: &PimFunc, ctx: &[i32], inputs: &Inputs) -> Result<Vec<Vec<i32>>> {
     let n = inputs.n_dpus();
+    let (a, b) = (inputs.first(), inputs.second());
     let mut out = Vec::with_capacity(n);
     for dpu in 0..n {
-        let a = &inputs.first()[dpu];
-        let result = match func {
-            PimFunc::AffineMap => golden::map_affine(a, ctx[0], ctx[1]),
-            PimFunc::VecAdd => {
-                let b = &inputs.second().ok_or_else(|| {
-                    Error::Handle("VecAdd needs a zipped pair input".into())
-                })?[dpu];
-                golden::vecadd(a, b)
-            }
-            PimFunc::SumReduce => vec![golden::reduce_sum(a)],
-            PimFunc::Histogram { bins } => golden::histogram(a, *bins),
-            PimFunc::LinregGrad { dim } => {
-                let y = &inputs.second().ok_or_else(|| {
-                    Error::Handle("LinregGrad needs zip(points, targets)".into())
-                })?[dpu];
-                golden::linreg_grad(a, y, ctx, *dim as usize)
-            }
-            PimFunc::LogregGrad { dim } => {
-                let y = &inputs.second().ok_or_else(|| {
-                    Error::Handle("LogregGrad needs zip(points, targets)".into())
-                })?[dpu];
-                golden::logreg_grad(a, y, ctx, *dim as usize)
-            }
-            PimFunc::KmeansAssign { k, dim } => {
-                golden::kmeans_partial(a, ctx, *k as usize, *dim as usize)
-            }
-            PimFunc::HostMap(f) => f(a, ctx),
-            PimFunc::HostRed { output_len, init, func } => {
-                let mut acc = vec![*init; *output_len as usize];
-                func(a, ctx, &mut acc);
-                acc
-            }
-            PimFunc::HostAcc(_) => {
-                return Err(Error::Handle(
-                    "HostAcc handles drive allreduce, not map/red iterators".into(),
-                ))
-            }
-        };
-        out.push(result);
+        out.push(host_eval_dpu(func, ctx, a, b, dpu)?);
     }
     Ok(out)
 }
@@ -321,6 +337,7 @@ enum Mode {
 
 /// Run a 1-D family (`vecadd`, `map_affine`, `reduce_sum`, `histogram`)
 /// over per-DPU arrays, gang-batching and chunking as needed.
+#[allow(clippy::too_many_arguments)]
 fn run_1d(
     rt: &Runtime,
     family: &str,
@@ -329,6 +346,7 @@ fn run_1d(
     ctx: Option<&[i32]>,
     pad: i32,
     mode: Mode,
+    arena: &BufArena,
 ) -> Result<Vec<Vec<i32>>> {
     let n_dpus = a.len();
     let max_len = a.iter().map(|v| v.len()).max().unwrap_or(0);
@@ -344,8 +362,8 @@ fn run_1d(
     let chunks = max_len.div_ceil(cap).max(1);
     let gang_shape = [gang, cap];
     let ctx_shape = ctx.map(|c| [c.len()]);
-    let mut xbuf = take_buf(gang * cap, pad);
-    let mut ybuf = take_buf(gang * cap, pad);
+    let mut xbuf = arena.take(gang * cap, pad);
+    let mut ybuf = arena.take(gang * cap, pad);
 
     for chunk in 0..chunks {
         let lo = chunk * cap;
@@ -400,13 +418,14 @@ fn run_1d(
             }
         }
     }
-    give_buf(xbuf);
-    give_buf(ybuf);
+    arena.give(xbuf);
+    arena.give(ybuf);
     Ok(outputs)
 }
 
 /// Run the `linreg`/`logreg` gradient families: inputs are row-major
 /// point arrays (`n*dim` i32 per DPU) zipped with targets (`n` i32).
+#[allow(clippy::too_many_arguments)]
 fn run_grad(
     rt: &Runtime,
     family: &str,
@@ -414,6 +433,7 @@ fn run_grad(
     y: &[Vec<i32>],
     w: &[i32],
     dim: usize,
+    arena: &BufArena,
 ) -> Result<Vec<Vec<i32>>> {
     let n_dpus = x.len();
     let max_pts = y.iter().map(|v| v.len()).max().unwrap_or(0);
@@ -436,9 +456,9 @@ fn run_grad(
     let mut wbuf = vec![0i32; d_art];
     wbuf[..dim].copy_from_slice(w);
 
-    let mut xbuf = take_buf(gang * cap * d_art, 0);
-    let mut ybuf = take_buf(gang * cap, 0);
-    let mut mbuf = take_buf(gang * cap, 0);
+    let mut xbuf = arena.take(gang * cap * d_art, 0);
+    let mut ybuf = arena.take(gang * cap, 0);
+    let mut mbuf = arena.take(gang * cap, 0);
 
     for chunk in 0..chunks {
         let lo = chunk * cap;
@@ -480,9 +500,9 @@ fn run_grad(
             }
         }
     }
-    give_buf(xbuf);
-    give_buf(ybuf);
-    give_buf(mbuf);
+    arena.give(xbuf);
+    arena.give(ybuf);
+    arena.give(mbuf);
     Ok(outputs)
 }
 
@@ -494,6 +514,7 @@ fn run_kmeans(
     centroids: &[i32],
     k: usize,
     dim: usize,
+    arena: &BufArena,
 ) -> Result<Vec<Vec<i32>>> {
     let n_dpus = x.len();
     let max_pts = x.iter().map(|v| v.len() / dim.max(1)).max().unwrap_or(0);
@@ -521,8 +542,8 @@ fn run_kmeans(
     let x_shape = [gang, cap, d_art];
     let v_shape = [gang, cap];
     let c_shape = [k_art, d_art];
-    let mut xbuf = take_buf(gang * cap * d_art, 0);
-    let mut mbuf = take_buf(gang * cap, 0);
+    let mut xbuf = arena.take(gang * cap * d_art, 0);
+    let mut mbuf = arena.take(gang * cap, 0);
 
     let mut outputs = vec![vec![0i32; k * dim + k]; n_dpus];
     let chunks = max_pts.div_ceil(cap).max(1);
@@ -569,8 +590,8 @@ fn run_kmeans(
             }
         }
     }
-    give_buf(xbuf);
-    give_buf(mbuf);
+    arena.give(xbuf);
+    arena.give(mbuf);
     Ok(outputs)
 }
 
@@ -626,16 +647,13 @@ mod tests {
     }
 
     #[test]
-    fn gang_buffer_pool_recycles_and_reinitializes() {
-        let mut a = take_buf(16, 7);
-        assert_eq!(a.len(), 16);
-        assert!(a.iter().all(|&v| v == 7));
-        a[0] = 99;
-        give_buf(a);
-        // A recycled buffer must come back fully re-initialized.
-        let b = take_buf(32, -1);
-        assert_eq!(b.len(), 32);
-        assert!(b.iter().all(|&v| v == -1));
-        give_buf(b);
+    fn host_eval_dpu_matches_fallback_lane_for_lane() {
+        let a = vec![vec![1, 2, 3], vec![4, 5]];
+        let inputs = Inputs::One(Rc::new(a.clone()));
+        let all = execute_func(None, &PimFunc::SumReduce, &[], &inputs).unwrap();
+        for dpu in 0..a.len() {
+            let lane = host_eval_dpu(&PimFunc::SumReduce, &[], &a, None, dpu).unwrap();
+            assert_eq!(lane, all[dpu]);
+        }
     }
 }

@@ -24,7 +24,7 @@ use crate::util::round_up;
 
 use super::comm::words_to_bytes;
 use super::management::{ArrayMeta, Layout};
-use super::plan::{NodeState, PlanOp};
+use super::plan::PlanOp;
 use super::PimSystem;
 
 /// Instruction profile of one local-scan pass (load, add-accumulate,
@@ -158,8 +158,8 @@ impl PimSystem {
             padded_bytes: padded,
             layout: Layout::Scattered,
         })?;
-        let node = self.engine.record(PlanOp::Scan, dest_id, &[src_id], elems);
-        self.engine.graph.set_state(node, NodeState::Executed);
+        let kind = self.backend.kind();
+        self.engine.record_executed(PlanOp::Scan, dest_id, &[src_id], elems, kind);
         Ok(())
     }
 
@@ -209,8 +209,8 @@ impl PimSystem {
             padded_bytes: padded,
             layout: Layout::Scattered,
         })?;
-        let node = self.engine.record(PlanOp::Filter, dest_id, &[src_id], elems);
-        self.engine.graph.set_state(node, NodeState::Executed);
+        let kind = self.backend.kind();
+        self.engine.record_executed(PlanOp::Filter, dest_id, &[src_id], elems, kind);
         Ok(total)
     }
 }

@@ -26,7 +26,7 @@ use crate::timing;
 use crate::util::round_up;
 
 use super::comm::{bytes_to_words, words_to_bytes};
-use super::exec::{execute_func, Inputs};
+use super::exec::Inputs;
 use super::handle::{Handle, TransformKind};
 use super::management::{ArrayMeta, Layout};
 use super::optimizer;
@@ -35,19 +35,16 @@ use super::PimSystem;
 
 impl PimSystem {
     /// Read the per-DPU i32 words of a *physical* (non-lazy,
-    /// materialized) array.
+    /// materialized) array.  The per-bank unmarshalling loop runs
+    /// through the execution backend, which may shard it across rank
+    /// workers.
     pub(crate) fn read_local(&self, meta: &ArrayMeta) -> Result<Vec<Vec<i32>>> {
-        let n = self.machine.n_dpus();
-        let mut out = Vec::with_capacity(n);
-        for dpu in 0..n {
-            let bytes = match meta.layout {
+        self.machine.read_rows_with(meta.addr, self.backend.as_ref(), &|dpu| {
+            match meta.layout {
                 Layout::Broadcast => meta.len * meta.type_size as u64,
                 _ => meta.bytes_on(dpu),
-            };
-            let raw = self.machine.read_bytes(dpu, meta.addr, bytes)?;
-            out.push(bytes_to_words(&raw));
-        }
-        Ok(out)
+            }
+        })
     }
 
     /// Per-DPU words of an array id, forcing a deferred node first
@@ -120,7 +117,8 @@ impl PimSystem {
         } else {
             (self.resolve_inputs(src_id)?.0, None)
         };
-        let outputs = execute_func(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?;
+        let outputs =
+            self.backend.launch(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?;
 
         // --- register the output's metadata (placement is filled in at
         //     materialization time).
@@ -218,8 +216,11 @@ impl PimSystem {
         let mut profiles = self.ship_chain_contexts(&chain)?;
         self.ship_context(handle)?;
 
-        // --- functional execution: per-DPU partials.
-        let partials = execute_func(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?;
+        // --- functional execution: per-DPU partials, through the
+        //     configured backend (seq walk / gang batches / rank-sharded
+        //     workers — functionally identical by the parity suite).
+        let partials =
+            self.backend.launch(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?;
 
         // --- timing: one (possibly fused) reduction launch, variant
         //     from the plan cache when available (paper §4.2.2 choice).
@@ -330,13 +331,14 @@ impl PimSystem {
             padded_bytes: part_bytes,
             layout: Layout::Broadcast,
         })?;
-        let node = self.engine.record(
+        let kind = self.backend.kind();
+        self.engine.record_executed(
             PlanOp::Red { func: format!("{:?}", handle.func), output_len },
             dest_id,
             &[src_id],
             elems,
+            kind,
         );
-        self.engine.graph.set_state(node, NodeState::Executed);
         Ok(merged)
     }
 

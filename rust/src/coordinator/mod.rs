@@ -25,9 +25,13 @@
 //!
 //! Supporting machinery: [`scheduler`] (tasklet partitioning +
 //! WRAM-pressure thread laddering), [`planner`] (scatter padding +
-//! dynamic DMA batch sizing, memoized per shape), [`exec`]
-//! (gang-batched functional execution through PJRT, with reusable gang
-//! buffers).
+//! dynamic DMA batch sizing, memoized per shape), [`exec`] (gang
+//! marshalling through PJRT + single-DPU host evaluation).  *How* those
+//! per-DPU loops execute — sequential walk, gang batches, or a
+//! rank-sharded `std::thread::scope` worker pool — is the
+//! [`crate::backend`] layer's choice (DESIGN.md §11), selected per
+//! system via [`PimSystem::with_backend`] or the CLI's `--backend` /
+//! `--threads` flags.
 
 pub mod collectives;
 pub mod comm;
@@ -45,18 +49,25 @@ pub use handle::{Handle, PimFunc, TransformKind};
 pub use management::{ArrayMeta, Layout, Management};
 pub use plan::{NodeState, PlanNode, PlanOp, PlanStats};
 
+use crate::backend::{BackendKind, BackendStats, ExecBackend};
 use crate::error::Result;
 use crate::pim::{PimConfig, PimMachine, Timeline};
 use crate::runtime::Runtime;
 use crate::timing::{DmaPolicy, OptFlags, ReduceVariant};
 
 /// The assembled SimplePIM system: one simulated PIM machine, the
-/// host-side management registry, the plan engine, and (optionally) the
-/// PJRT runtime executing the AOT-compiled kernels.
+/// host-side management registry, the plan engine, the execution
+/// backend, and (optionally) the PJRT runtime executing the
+/// AOT-compiled kernels.
 pub struct PimSystem {
     pub machine: PimMachine,
     pub management: Management,
     pub(crate) runtime: Option<Runtime>,
+    /// How per-DPU kernel invocations and row-marshalling loops execute
+    /// on the host (sequential walk / gang batching / rank-sharded
+    /// workers).  Functional strategy only: modeled time never depends
+    /// on it (see `rust/tests/backend_parity.rs`).
+    pub(crate) backend: Box<dyn ExecBackend>,
     /// The plan-based execution engine: lazy op graph, pending
     /// (deferred) maps, plan cache, buffer/context pools.
     pub(crate) engine: plan::PlanEngine,
@@ -99,13 +110,18 @@ impl PimSystem {
         }
     }
 
-    /// Build with an explicit (possibly shared) runtime decision.
+    /// Build with an explicit (possibly shared) runtime decision.  The
+    /// execution backend comes from the environment
+    /// (`SIMPLEPIM_BACKEND` / `SIMPLEPIM_THREADS`), defaulting to the
+    /// sequential walk; see [`Self::with_backend`] /
+    /// [`Self::set_backend`] for explicit control.
     pub fn with_runtime(cfg: PimConfig, runtime: Option<Runtime>) -> Self {
         let tasklets = cfg.default_tasklets;
         PimSystem {
             machine: PimMachine::new(cfg),
             management: Management::new(),
             runtime,
+            backend: crate::backend::from_env(),
             engine: plan::PlanEngine::new(),
             opts: OptFlags::simplepim(),
             tasklets,
@@ -113,6 +129,41 @@ impl PimSystem {
             red_variant_override: None,
             last_red_variant: None,
         }
+    }
+
+    /// Build with an explicit execution backend
+    /// (`backend::make(BackendKind::Parallel, threads)` for the
+    /// rank-sharded worker pool).
+    pub fn with_backend(
+        cfg: PimConfig,
+        runtime: Option<Runtime>,
+        backend: Box<dyn ExecBackend>,
+    ) -> Self {
+        let mut sys = Self::with_runtime(cfg, runtime);
+        sys.backend = backend;
+        sys
+    }
+
+    /// Swap the execution backend (results and modeled time are
+    /// backend-invariant, so this is safe at any point).
+    pub fn set_backend(&mut self, backend: Box<dyn ExecBackend>) {
+        self.backend = backend;
+    }
+
+    /// Which backend executes kernels and marshalling loops.
+    pub fn backend_kind(&self) -> BackendKind {
+        self.backend.kind()
+    }
+
+    /// Worker threads the backend shards across (1 for seq/gang).
+    pub fn backend_threads(&self) -> usize {
+        self.backend.threads()
+    }
+
+    /// Backend counters (launches, host lanes, gang batches, sharded
+    /// operations).
+    pub fn backend_stats(&self) -> BackendStats {
+        self.backend.stats()
     }
 
     /// Create a function handle

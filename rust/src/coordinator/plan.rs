@@ -21,6 +21,7 @@
 use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
 
+use crate::backend::BackendKind;
 use crate::error::Result;
 use crate::timing::ReduceVariant;
 use crate::util::round_up;
@@ -92,6 +93,9 @@ pub struct PlanNode {
     /// Logical per-DPU elements, for explain output.
     pub elems: u64,
     pub state: NodeState,
+    /// Which execution backend ran this node's device-visible work
+    /// (`None` while pending, or for pure-metadata nodes like zips).
+    pub backend: Option<BackendKind>,
 }
 
 /// Bound on recorded nodes: long-running sessions keep executing fine,
@@ -132,6 +136,7 @@ impl Plan {
             inputs,
             elems,
             state: NodeState::Pending,
+            backend: None,
         });
         if !is_sink {
             self.by_array.insert(array.to_string(), id);
@@ -142,6 +147,13 @@ impl Plan {
     pub fn set_state(&mut self, id: NodeId, state: NodeState) {
         if let Some(n) = self.nodes.get_mut(id) {
             n.state = state;
+        }
+    }
+
+    /// Stamp the backend that executed a node's device-visible work.
+    pub fn set_backend(&mut self, id: NodeId, kind: BackendKind) {
+        if let Some(n) = self.nodes.get_mut(id) {
+            n.backend = Some(kind);
         }
     }
 
@@ -383,6 +395,22 @@ impl PlanEngine {
         self.stats.nodes += 1;
         self.graph.record(op, array, inputs, elems)
     }
+
+    /// Record a node that executed immediately, stamped with the
+    /// backend that ran it.
+    pub(crate) fn record_executed(
+        &mut self,
+        op: PlanOp,
+        array: &str,
+        inputs: &[&str],
+        elems: u64,
+        backend: BackendKind,
+    ) -> NodeId {
+        let id = self.record(op, array, inputs, elems);
+        self.graph.set_state(id, NodeState::Executed);
+        self.graph.set_backend(id, backend);
+        id
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -444,6 +472,16 @@ impl PimSystem {
         let mut out = String::new();
         let s = self.engine.stats;
         out.push_str("optimized plan\n");
+        let b = self.backend.stats();
+        out.push_str(&format!(
+            "  backend: {} ({} thread{}) | functional launches {} | gang batches {} | sharded ops {}\n",
+            self.backend.kind(),
+            b.threads,
+            if b.threads == 1 { "" } else { "s" },
+            b.launches,
+            b.gang_batches,
+            b.sharded_ops,
+        ));
         out.push_str(&format!(
             "  nodes {} | launches {} | fused chains {} ({} stages) | elided {}\n",
             s.nodes, s.launches, s.fused_chains, s.fused_stages, s.elided
@@ -474,12 +512,17 @@ impl PimSystem {
                     n.inputs.iter().map(|i| format!("#{i}")).collect::<Vec<_>>().join(",")
                 )
             };
+            let via = match n.backend {
+                Some(kind) => format!(" via {kind}"),
+                None => String::new(),
+            };
             out.push_str(&format!(
-                "    #{:<4} {:<28} {:<12} [{}]{}\n",
+                "    #{:<4} {:<28} {:<12} [{}{}]{}\n",
                 n.id,
                 n.op.name(),
                 n.array,
                 state,
+                via,
                 inputs
             ));
         }
@@ -510,14 +553,21 @@ impl PimSystem {
         let out_max_words = node.outputs.iter().map(|o| o.len()).max().unwrap_or(0);
         let padded = round_up(out_max_words as u64 * 4, 8).max(8);
         let addr = self.pool_alloc(padded)?;
-        for (dpu, out) in node.outputs.iter().enumerate() {
-            self.machine.write_bytes(dpu, addr, &words_to_bytes(out))?;
-        }
+        // Materialize the staged outputs (modeled as kernel work, not a
+        // host transfer); row marshalling shards across the backend's
+        // workers.
+        let rows: &[Vec<i32>] = &node.outputs;
+        self.machine.write_rows_with(addr, padded as usize, self.backend.as_ref(), &|dpu, buf| {
+            if let Some(w) = rows.get(dpu) {
+                super::comm::words_into_bytes(w, &mut buf[..w.len() * 4]);
+            }
+        })?;
         let mut meta = self.management.lookup(id)?.clone();
         meta.addr = addr;
         meta.padded_bytes = padded;
         self.management.replace(meta)?;
         self.engine.graph.set_state(node.node, NodeState::Executed);
+        self.engine.graph.set_backend(node.node, self.backend.kind());
         Ok(())
     }
 
@@ -557,11 +607,13 @@ impl PimSystem {
     /// Mark every stage in `chain` charged and record its graph state.
     /// Stages stay pending (unmaterialized) until individually forced.
     pub(crate) fn mark_chain_charged(&mut self, chain: &[String], state: NodeState) {
+        let kind = self.backend.kind();
         for cid in chain {
             let n = self.engine.pending.get_mut(cid).expect("pending chain stage");
             n.charged = true;
             let node = n.node;
             self.engine.graph.set_state(node, state);
+            self.engine.graph.set_backend(node, kind);
         }
     }
 

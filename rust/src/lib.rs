@@ -14,7 +14,12 @@
 //!   ([`coordinator::plan`]) that the optimizer
 //!   ([`coordinator::optimizer`]) fuses (map→map, map→red), prunes
 //!   (dead-intermediate elision), and caches (LRU reduction plans)
-//!   before anything is charged to the device model.
+//!   before anything is charged to the device model.  Kernel launches
+//!   and the scatter/gather marshalling loops dispatch through an
+//!   execution backend ([`backend`]): the sequential walk, explicit
+//!   gang batching, or a rank-sharded `std::thread::scope` worker pool
+//!   (`--backend parallel --threads N`) — bit-identical results and
+//!   identical modeled time on all three.
 //! * **L2/L1 (build time)** — `python/compile/` holds the JAX compute
 //!   graphs and Pallas kernels, lowered once to `artifacts/*.hlo.txt`.
 //!   Python never runs on the request path.
@@ -22,6 +27,7 @@
 //! See DESIGN.md for the system inventory and the per-experiment index,
 //! and EXPERIMENTS.md for paper-vs-measured results.
 
+pub mod backend;
 pub mod cli;
 pub mod coordinator;
 pub mod error;

@@ -7,6 +7,7 @@
 //! through this type, so functional bytes and modeled seconds stay in
 //! sync by construction.
 
+use crate::backend::ExecBackend;
 use crate::error::{Error, Result};
 
 use super::config::PimConfig;
@@ -116,6 +117,77 @@ impl PimMachine {
     /// Raw write to one DPU's bank.
     pub fn write_bytes(&mut self, dpu: usize, addr: u64, bytes: &[u8]) -> Result<()> {
         self.bank_mut(dpu)?.write(addr, bytes)
+    }
+
+    // ---------------------------------------------------------------
+    // Backend-sharded row I/O.  The `*_with` methods route the per-DPU
+    // marshalling loops through an execution backend, which may shard
+    // the bank array across rank workers; the timed variants charge
+    // exactly what their loop-based counterparts charge, so modeled
+    // seconds stay backend-invariant by construction.
+    // ---------------------------------------------------------------
+
+    /// Functional sharded write (no timing): one `row_len`-byte row per
+    /// bank at `addr`, marshalled on demand by `fill(dpu, buf)` into a
+    /// zeroed staging buffer.  Used to materialize deferred map outputs
+    /// (modeled as kernel work, not a host transfer).
+    pub fn write_rows_with(
+        &mut self,
+        addr: u64,
+        row_len: usize,
+        exec: &dyn ExecBackend,
+        fill: &(dyn Fn(usize, &mut [u8]) + Sync),
+    ) -> Result<()> {
+        exec.write_rows(&mut self.banks, addr, row_len, fill)
+    }
+
+    /// Timed parallel push with on-demand row marshalling: functionally
+    /// [`Self::write_rows_with`], charged exactly like
+    /// [`Self::push_parallel`] with `n_dpus` equal buffers of `row_len`
+    /// bytes (the UPMEM parallel-command rule).
+    pub fn push_rows_with(
+        &mut self,
+        addr: u64,
+        row_len: usize,
+        exec: &dyn ExecBackend,
+        fill: &(dyn Fn(usize, &mut [u8]) + Sync),
+    ) -> Result<()> {
+        exec.write_rows(&mut self.banks, addr, row_len, fill)?;
+        let n = self.banks.len();
+        let t = transfer_seconds(&self.cfg, XferKind::Parallel, n, row_len as u64);
+        self.timeline.host_to_pim_s += t;
+        self.timeline.bytes_h2p += (n * row_len) as u64;
+        Ok(())
+    }
+
+    /// Functional sharded read (no timing): `take(dpu)` bytes at `addr`
+    /// from every bank, unmarshalled into i32 words per DPU.
+    pub fn read_rows_with(
+        &self,
+        addr: u64,
+        exec: &dyn ExecBackend,
+        take: &(dyn Fn(usize) -> u64 + Sync),
+    ) -> Result<Vec<Vec<i32>>> {
+        exec.read_rows(&self.banks, addr, take)
+    }
+
+    /// Timed parallel pull with sharded unmarshalling: reads only the
+    /// `take(dpu)` live bytes per bank but charges the equal-buffer
+    /// parallel transfer of `row_len` bytes per DPU, exactly like
+    /// [`Self::pull_parallel`].
+    pub fn pull_rows_with(
+        &mut self,
+        addr: u64,
+        row_len: u64,
+        exec: &dyn ExecBackend,
+        take: &(dyn Fn(usize) -> u64 + Sync),
+    ) -> Result<Vec<Vec<i32>>> {
+        let out = exec.read_rows(&self.banks, addr, take)?;
+        let n = self.banks.len();
+        let t = transfer_seconds(&self.cfg, XferKind::Parallel, n, row_len);
+        self.timeline.pim_to_host_s += t;
+        self.timeline.bytes_p2h += n as u64 * row_len;
+        Ok(out)
     }
 
     // ---------------------------------------------------------------
@@ -263,6 +335,36 @@ mod tests {
         assert_eq!(m.read_bytes(1, a, 1).unwrap()[0], 2);
         m.free(a).unwrap();
         assert_eq!(m.mram_used(), 64);
+    }
+
+    #[test]
+    fn sharded_row_io_matches_loop_based_transfers() {
+        use crate::backend::{make, BackendKind};
+        let exec = make(BackendKind::Parallel, 3);
+        let mut a = machine();
+        let mut b = machine();
+        let addr_a = a.alloc(16).unwrap();
+        let addr_b = b.alloc(16).unwrap();
+        let bufs: Vec<Vec<u8>> = (0..4).map(|d| vec![d as u8 + 1; 16]).collect();
+        a.push_parallel(addr_a, &bufs).unwrap();
+        b.push_rows_with(addr_b, 16, exec.as_ref(), &|dpu, buf| {
+            buf.copy_from_slice(&bufs[dpu]);
+        })
+        .unwrap();
+        // Identical bytes on every bank, identical modeled time.
+        assert_eq!(a.timeline(), b.timeline());
+        for d in 0..4 {
+            assert_eq!(
+                a.read_bytes(d, addr_a, 16).unwrap(),
+                b.read_bytes(d, addr_b, 16).unwrap()
+            );
+        }
+        let pa = a.pull_parallel(addr_a, 16, 4).unwrap();
+        let pb = b.pull_rows_with(addr_b, 16, exec.as_ref(), &|_| 16).unwrap();
+        let words: Vec<Vec<i32>> =
+            pa.iter().map(|x| crate::coordinator::comm::bytes_to_words(x)).collect();
+        assert_eq!(words, pb);
+        assert_eq!(a.timeline(), b.timeline());
     }
 
     #[test]

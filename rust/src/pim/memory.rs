@@ -8,10 +8,22 @@
 use crate::error::{Error, Result};
 
 /// One DPU's MRAM bank.
+///
+/// Banks are plain byte arrays with no interior mutability, so they
+/// are `Send + Sync` by construction: the execution-backend layer
+/// ([`crate::backend`]) relies on this to hand disjoint
+/// `&mut [MramBank]` *rank shards* to `std::thread::scope` workers for
+/// parallel row marshalling (asserted below so a future field can't
+/// silently break the contract).
 #[derive(Debug, Clone)]
 pub struct MramBank {
     data: Vec<u8>,
 }
+
+const _: () = {
+    const fn assert_rank_shardable<T: Send + Sync>() {}
+    assert_rank_shardable::<MramBank>()
+};
 
 impl MramBank {
     pub fn new(bytes: u64) -> Self {

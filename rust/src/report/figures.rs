@@ -2,10 +2,12 @@
 //! in-text ablations) from the timing model, and the `run`/`selftest`
 //! CLI commands that exercise the full functional stack.
 
+use crate::backend::{self, BackendKind};
 use crate::cli::Args;
 use crate::error::{Error, Result};
 use crate::pim::PimConfig;
 use crate::timing::{self, DmaPolicy, OptFlags, ReduceVariant};
+use crate::util::prng;
 use crate::workloads::{self, histogram, Impl};
 use crate::{coordinator::PimSystem, report::table::Table};
 
@@ -184,6 +186,26 @@ fn cli_system(cfg: PimConfig, host_only: bool) -> PimSystem {
     }
 }
 
+/// Apply the shared execution flags: `--seed` installs the process
+/// default data-generation seed; `--backend`/`--threads` select the
+/// execution backend (`--threads` alone implies `--backend parallel`).
+fn apply_exec_flags(sys: &mut PimSystem, args: &Args) -> Result<()> {
+    if let Some(seed) = args.flag_u64("seed")? {
+        prng::set_default_seed(seed);
+    }
+    let threads = args.flag_usize("threads", 0)?;
+    match args.flag("backend") {
+        Some(s) => {
+            let kind = BackendKind::parse(s)?;
+            let t = if threads > 0 { threads } else { backend::default_threads() };
+            sys.set_backend(backend::make(kind, t));
+        }
+        None if threads > 0 => sys.set_backend(backend::make(BackendKind::Parallel, threads)),
+        None => {}
+    }
+    Ok(())
+}
+
 /// `run` subcommand: run one workload end-to-end on a small simulated
 /// machine through the full stack (PJRT unless --host-only).  With
 /// `--explain`, dump the optimized plan (nodes, fusions applied, cache
@@ -197,7 +219,14 @@ pub fn cmd_run(args: &Args) -> Result<()> {
     let dpus = args.flag_usize("dpus", 16)?;
     let cfg = PimConfig::upmem(dpus);
     let mut sys = cli_system(cfg, args.has("host-only"));
+    apply_exec_flags(&mut sys, args)?;
     let elems = args.flag_usize("elems", 0)?;
+    println!(
+        "backend: {} ({} thread{})",
+        sys.backend_kind(),
+        sys.backend_threads(),
+        if sys.backend_threads() == 1 { "" } else { "s" }
+    );
     run_workload(&mut sys, &name, elems)?;
     if args.has("explain") {
         println!("\n{}", sys.explain_report());
@@ -225,10 +254,12 @@ pub fn cmd_run(args: &Args) -> Result<()> {
 
 fn run_workload(sys: &mut PimSystem, name: &str, elems: usize) -> Result<()> {
     use crate::workloads::*;
+    // All data generation derives from the process-default seed
+    // (`--seed` / `SIMPLEPIM_SEED`), with a distinct tag per workload.
     match name {
         "vecadd" => {
             let n = if elems > 0 { elems } else { 1 << 20 };
-            let (x, y) = vecadd::generate(1, n);
+            let (x, y) = vecadd::generate(prng::seed_for(1), n);
             let out = vecadd::run_simplepim(sys, &x, &y)?;
             let ok = out == golden::vecadd(&x, &y);
             println!("vecadd: {n} elements, golden match: {ok}");
@@ -238,7 +269,7 @@ fn run_workload(sys: &mut PimSystem, name: &str, elems: usize) -> Result<()> {
         }
         "reduction" => {
             let n = if elems > 0 { elems } else { 1 << 20 };
-            let x = reduction::generate(2, n);
+            let x = reduction::generate(prng::seed_for(2), n);
             let got = reduction::run_simplepim(sys, &x)?;
             let want = golden::reduce_sum(&x);
             println!("reduction: {n} elements, sum {got}, golden match: {}", got == want);
@@ -248,7 +279,7 @@ fn run_workload(sys: &mut PimSystem, name: &str, elems: usize) -> Result<()> {
         }
         "histogram" => {
             let n = if elems > 0 { elems } else { 1 << 20 };
-            let px = histogram::generate(3, n);
+            let px = histogram::generate(prng::seed_for(3), n);
             let got = histogram::run_simplepim(sys, &px, 256)?;
             let ok = got == golden::histogram(&px, 256);
             println!("histogram: {n} pixels into 256 bins, golden match: {ok}");
@@ -261,9 +292,9 @@ fn run_workload(sys: &mut PimSystem, name: &str, elems: usize) -> Result<()> {
             let dim = 10;
             let logistic = name == "logreg";
             let (x, y, _) = if logistic {
-                logreg::generate(4, n, dim)
+                logreg::generate(prng::seed_for(4), n, dim)
             } else {
-                linreg::generate(4, n, dim)
+                linreg::generate(prng::seed_for(4), n, dim)
             };
             if logistic {
                 logreg::setup(sys, &x, &y, dim)?;
@@ -284,7 +315,7 @@ fn run_workload(sys: &mut PimSystem, name: &str, elems: usize) -> Result<()> {
         "kmeans" => {
             let n = if elems > 0 { elems } else { 40_000 };
             let (k, dim) = (10, 10);
-            let (x, _) = kmeans::generate(5, n, k, dim);
+            let (x, _) = kmeans::generate(prng::seed_for(5), n, k, dim);
             kmeans::setup(sys, &x, dim)?;
             let c0: Vec<i32> = x[..k * dim].to_vec();
             let c1 = kmeans::iterate(sys, &c0, k, dim, 0)?;
@@ -301,12 +332,19 @@ pub fn cmd_selftest(args: &Args) -> Result<()> {
     let dpus = args.flag_usize("dpus", 12)?;
     let host_only = args.has("host-only");
     let mut used_runtime = true;
+    let mut backend = None;
     for name in ["vecadd", "reduction", "histogram", "linreg", "logreg", "kmeans"] {
         let cfg = PimConfig::upmem(dpus);
         let mut sys = cli_system(cfg, host_only);
+        apply_exec_flags(&mut sys, args)?;
         used_runtime &= sys.has_runtime();
+        backend = Some(sys.backend_kind());
         run_workload(&mut sys, name, 30_000)?;
     }
-    println!("selftest OK ({})", if used_runtime { "PJRT/XLA path" } else { "host goldens" });
+    println!(
+        "selftest OK ({}, {} backend)",
+        if used_runtime { "PJRT/XLA path" } else { "host goldens" },
+        backend.unwrap_or(BackendKind::Seq)
+    );
     Ok(())
 }

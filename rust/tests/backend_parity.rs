@@ -1,0 +1,189 @@
+//! Backend parity suite: the execution backend is a *functional
+//! strategy* only, so every backend must produce bit-identical gather
+//! results and an identical modeled `Timeline` (exact f64 equality —
+//! the same charges in the same order) on every workload, including
+//! ragged (len < n_dpus) and empty-array edge cases.
+
+use simplepim::backend::{self, BackendKind};
+use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
+use simplepim::pim::{PimConfig, Timeline};
+use simplepim::util::prng::Prng;
+use simplepim::workloads::{fixed::ONE, golden, histogram, kmeans, linreg, logreg, reduction, vecadd};
+
+/// Every backend configuration under test; parallel runs with both an
+/// even and an uneven thread/DPU split.
+const BACKENDS: [(BackendKind, usize); 4] = [
+    (BackendKind::Seq, 1),
+    (BackendKind::Gang, 1),
+    (BackendKind::Parallel, 4),
+    (BackendKind::Parallel, 3),
+];
+
+fn sys(kind: BackendKind, threads: usize, dpus: usize) -> PimSystem {
+    PimSystem::with_backend(PimConfig::tiny(dpus), None, backend::make(kind, threads))
+}
+
+/// Run `f` under every backend and assert results and timelines agree
+/// exactly with the sequential baseline.
+fn assert_parity<F>(dpus: usize, label: &str, f: F)
+where
+    F: Fn(&mut PimSystem) -> Vec<i32>,
+{
+    let mut baseline: Option<(Vec<i32>, Timeline)> = None;
+    for (kind, threads) in BACKENDS {
+        let mut s = sys(kind, threads, dpus);
+        let out = f(&mut s);
+        let t = s.timeline();
+        match &baseline {
+            None => baseline = Some((out, t)),
+            Some((bo, bt)) => {
+                assert_eq!(&out, bo, "{label}: bit-identical results ({kind} x{threads})");
+                assert_eq!(&t, bt, "{label}: identical modeled time ({kind} x{threads})");
+            }
+        }
+    }
+}
+
+#[test]
+fn reduction_parity() {
+    let x = reduction::generate(11, 100_003);
+    let want = golden::reduce_sum(&x);
+    assert_parity(7, "reduction", |s| {
+        let got = reduction::run_simplepim(s, &x).unwrap();
+        assert_eq!(got, want);
+        vec![got]
+    });
+}
+
+#[test]
+fn vecadd_parity() {
+    let (x, y) = vecadd::generate(12, 65_537);
+    let want = golden::vecadd(&x, &y);
+    assert_parity(6, "vecadd", |s| {
+        let out = vecadd::run_simplepim(s, &x, &y).unwrap();
+        assert_eq!(out, want);
+        out
+    });
+}
+
+#[test]
+fn histogram_parity() {
+    let px = histogram::generate(13, 50_000);
+    let want = golden::histogram(&px, 256);
+    assert_parity(5, "histogram", |s| {
+        let got = histogram::run_simplepim(s, &px, 256).unwrap();
+        assert_eq!(got, want);
+        got
+    });
+}
+
+#[test]
+fn linreg_parity() {
+    let (x, y, _) = linreg::generate(14, 4_000, linreg::DIM);
+    let w = vec![ONE / 8; linreg::DIM];
+    let want = golden::linreg_grad(&x, &y, &w, linreg::DIM);
+    assert_parity(4, "linreg", |s| {
+        linreg::setup(s, &x, &y, linreg::DIM).unwrap();
+        let grad = linreg::gradient_step(s, &w, 0).unwrap();
+        assert_eq!(grad, want);
+        grad
+    });
+}
+
+#[test]
+fn logreg_parity() {
+    let (x, y, _) = logreg::generate(15, 4_000, logreg::DIM);
+    let w = vec![ONE / 8; logreg::DIM];
+    let want = golden::logreg_grad(&x, &y, &w, logreg::DIM);
+    assert_parity(4, "logreg", |s| {
+        logreg::setup(s, &x, &y, logreg::DIM).unwrap();
+        let grad = logreg::gradient_step(s, &w, 0).unwrap();
+        assert_eq!(grad, want);
+        grad
+    });
+}
+
+#[test]
+fn kmeans_parity() {
+    let (x, _) = kmeans::generate(16, 4_000, kmeans::K, kmeans::DIM);
+    let c0: Vec<i32> = x[..kmeans::K * kmeans::DIM].to_vec();
+    assert_parity(4, "kmeans", |s| {
+        kmeans::setup(s, &x, kmeans::DIM).unwrap();
+        kmeans::iterate(s, &c0, kmeans::K, kmeans::DIM, 0).unwrap()
+    });
+}
+
+#[test]
+fn ragged_fewer_elements_than_dpus_parity() {
+    // 3 elements on 8 DPUs: most banks hold nothing.
+    let x = vec![5, -7, 11];
+    assert_parity(8, "ragged", |s| {
+        s.scatter("x", &x, 4).unwrap();
+        let map = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![3, -1]).unwrap();
+        s.array_map("x", "y", &map).unwrap();
+        let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+        let sum = s.array_red("y", "sum", 1, &red).unwrap();
+        let mut out = s.gather("y").unwrap();
+        assert_eq!(out, golden::map_affine(&x, 3, -1));
+        out.extend(sum);
+        out
+    });
+}
+
+#[test]
+fn empty_array_parity() {
+    let x: Vec<i32> = Vec::new();
+    assert_parity(4, "empty", |s| {
+        s.scatter("x", &x, 4).unwrap();
+        let map = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![2, 9]).unwrap();
+        s.array_map("x", "y", &map).unwrap();
+        let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+        let sum = s.array_red("y", "sum", 1, &red).unwrap();
+        assert_eq!(sum, vec![0]);
+        let out = s.gather("y").unwrap();
+        assert!(out.is_empty());
+        sum
+    });
+}
+
+#[test]
+fn extensions_and_collectives_parity() {
+    let data = Prng::new(17).vec_i32(10_000, -500, 500);
+    assert_parity(6, "scan+filter+allgather", |s| {
+        s.scatter("x", &data, 4).unwrap();
+        s.array_scan("x", "xs").unwrap();
+        s.array_filter("xs", "pos", |v| v > 0).unwrap();
+        s.allgather("pos", "pos_all").unwrap();
+        let mut out = s.gather("pos").unwrap();
+        out.extend(s.gather("pos_all").unwrap());
+        out
+    });
+}
+
+#[test]
+fn mram_returns_to_zero_under_every_backend() {
+    for (kind, threads) in BACKENDS {
+        let mut s = sys(kind, threads, 5);
+        let x = Prng::new(18).vec_i32(9_999, -100, 100);
+        s.scatter("x", &x, 4).unwrap();
+        let map = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![2, 1]).unwrap();
+        s.array_map("x", "y", &map).unwrap();
+        s.run().unwrap();
+        s.free_array("x").unwrap();
+        s.free_array("y").unwrap();
+        assert_eq!(s.machine.mram_used(), 0, "{kind} x{threads}");
+    }
+}
+
+#[test]
+fn explain_reports_which_backend_ran_nodes() {
+    let mut s = sys(BackendKind::Parallel, 4, 4);
+    let x = Prng::new(19).vec_i32(5_000, -10, 10);
+    s.scatter("x", &x, 4).unwrap();
+    let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+    s.array_red("x", "sum", 1, &red).unwrap();
+    let report = s.explain_report();
+    assert!(report.contains("backend: parallel"), "{report}");
+    assert!(report.contains("via parallel"), "{report}");
+    assert!(s.backend_stats().launches >= 1);
+}
