@@ -17,7 +17,7 @@
 
 use simplepim::backend::{self, BackendKind};
 use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
-use simplepim::pim::PimConfig;
+use simplepim::pim::{PimConfig, PipelineMode};
 use simplepim::report::bench::{measure, report, Measurement};
 use simplepim::util::prng;
 use simplepim::workloads::{histogram, kmeans, linreg, logreg, reduction, vecadd};
@@ -74,19 +74,28 @@ fn write_json(rows: &[BenchRow]) {
 }
 
 /// Measure one workload end-to-end (host-only system) under one
-/// backend configuration; appends a JSON row and returns the wall
-/// measurement.
+/// backend + pipeline configuration; appends a JSON row and returns
+/// the wall measurement.  Quick mode (`SIMPLEPIM_BENCH_QUICK`, the CI
+/// bench-gate's setting) trims iterations; workload sizes are the
+/// caller's, so baseline and current runs must use the same mode.
+#[allow(clippy::too_many_arguments)]
 fn bench_backend(
     workload: &'static str,
     dpus: usize,
     n: usize,
     kind: BackendKind,
     threads: usize,
+    pipeline: PipelineMode,
+    quick: bool,
     rows: &mut Vec<BenchRow>,
 ) -> Measurement {
-    let mut sys =
-        PimSystem::with_backend(PimConfig::upmem(dpus), None, backend::make(kind, threads));
-    let (warm, iters) = (1, 4);
+    let mut sys = PimSystem::with_backend(
+        PimConfig::upmem(dpus),
+        None,
+        backend::make(kind, threads).unwrap(),
+    );
+    sys.set_pipeline(pipeline).unwrap();
+    let (warm, iters) = if quick { (1, 2) } else { (1, 4) };
     let m = match workload {
         "reduction" => {
             let x = reduction::generate(prng::seed_for(2), n);
@@ -148,13 +157,14 @@ fn bench_backend(
     };
     let t = sys.timeline();
     let b = kind.as_str();
+    let pipe_suffix = if pipeline == PipelineMode::Off { "" } else { "/pipelined" };
     report(
-        &format!("{workload} {n} elems [{b} x{threads}]"),
+        &format!("{workload} {n} elems [{b} x{threads}{pipe_suffix}]"),
         m,
         Some((n as u64, "elem")),
     );
     rows.push(BenchRow {
-        key: format!("{workload}/{b}/t{threads}"),
+        key: format!("{workload}/{b}/t{threads}{pipe_suffix}"),
         workload,
         backend: b,
         threads,
@@ -170,7 +180,26 @@ fn bench_backend(
 fn main() {
     let dpus = 16;
     let n = 1 << 20; // 1M i32
+    // Quick mode (the CI bench-gate's setting): smaller inputs, fewer
+    // iterations, and only the JSON-emitting sections.  Baselines must
+    // be generated in the same mode they are gated in.
+    let quick = std::env::var("SIMPLEPIM_BENCH_QUICK").is_ok();
     let mut rows: Vec<BenchRow> = Vec::new();
+
+    // Per-workload element counts, shared by the backend comparison and
+    // the pipeline comparison so their rows are directly comparable.
+    let big = if quick { 1 << 19 } else { 1 << 22 };
+    let vec_n = if quick { 1 << 19 } else { 1 << 21 };
+    let ml_n = if quick { 20_000 } else { 100_000 };
+    let km_n = if quick { 10_000 } else { 50_000 };
+    let sizes: [(&'static str, usize); 6] = [
+        ("reduction", big),
+        ("histogram", big),
+        ("vecadd", vec_n),
+        ("linreg", ml_n),
+        ("logreg", ml_n),
+        ("kmeans", km_n),
+    ];
 
     // --- execution backends: all six workloads, seq vs gang vs
     //     parallel (8 workers), host-golden engine.  The large-input
@@ -179,28 +208,32 @@ fn main() {
     //     sequential walk by >= 2x wall-clock at 8 threads.
     {
         println!("-- backend comparison (host engine, 32 DPUs) --");
-        let big = 1 << 22; // 4M i32: large-input configs
         let cfgs = [
             (BackendKind::Seq, 1usize),
             (BackendKind::Gang, 1),
             (BackendKind::Parallel, 8),
         ];
         let mut speedups = Vec::new();
-        for workload in ["reduction", "histogram"] {
+        for (workload, n_elems) in sizes {
             let mut seq_mean = 0.0f64;
             for (kind, threads) in cfgs {
-                let m = bench_backend(workload, 32, big, kind, threads, &mut rows);
+                let m = bench_backend(
+                    workload,
+                    32,
+                    n_elems,
+                    kind,
+                    threads,
+                    PipelineMode::Off,
+                    quick,
+                    &mut rows,
+                );
                 if kind == BackendKind::Seq {
                     seq_mean = m.mean_s;
-                } else if kind == BackendKind::Parallel {
+                } else if kind == BackendKind::Parallel
+                    && (workload == "reduction" || workload == "histogram")
+                {
                     speedups.push((workload, seq_mean / m.mean_s));
                 }
-            }
-        }
-        for (workload, n_elems) in [("vecadd", 1 << 21), ("linreg", 100_000), ("logreg", 100_000), ("kmeans", 50_000)]
-        {
-            for (kind, threads) in cfgs {
-                bench_backend(workload, 32, n_elems, kind, threads, &mut rows);
             }
         }
         for (w, s) in &speedups {
@@ -208,8 +241,57 @@ fn main() {
         }
         // Scaling curve on the large reduction: 2 / 4 / 8 workers.
         for threads in [2usize, 4] {
-            bench_backend("reduction", 32, big, BackendKind::Parallel, threads, &mut rows);
+            bench_backend(
+                "reduction",
+                32,
+                big,
+                BackendKind::Parallel,
+                threads,
+                PipelineMode::Off,
+                quick,
+                &mut rows,
+            );
         }
+    }
+
+    // --- pipelined transfer engine (DESIGN.md §12): every workload,
+    //     seq backend, pipeline on vs the monolithic rows above.  The
+    //     modeled totals are the acceptance measurement: pipelined <=
+    //     monolithic everywhere, with the transfer-bound workloads
+    //     (vecadd, histogram) improving by a double-digit percentage.
+    {
+        println!("\n-- pipelined transfer engine (seq backend, 32 DPUs) --");
+        for (workload, n_elems) in sizes {
+            bench_backend(
+                workload,
+                32,
+                n_elems,
+                BackendKind::Seq,
+                1,
+                PipelineMode::On,
+                quick,
+                &mut rows,
+            );
+            let off_key = format!("{workload}/seq/t1");
+            let on_key = format!("{workload}/seq/t1/pipelined");
+            let off = rows.iter().find(|r| r.key == off_key).map(|r| r.modeled_total_s);
+            let on = rows.iter().find(|r| r.key == on_key).map(|r| r.modeled_total_s);
+            if let (Some(off), Some(on)) = (off, on) {
+                if off > 0.0 {
+                    println!(
+                        "    {workload}: modeled total {:.3} ms pipelined vs {:.3} ms monolithic ({:+.1}%)",
+                        on * 1e3,
+                        off * 1e3,
+                        (on / off - 1.0) * 100.0
+                    );
+                }
+            }
+        }
+    }
+
+    if quick {
+        write_json(&rows);
+        return;
     }
 
     // --- plan engine: fused map→red pipeline vs eager per-call

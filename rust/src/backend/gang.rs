@@ -12,10 +12,11 @@ use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
 use super::{
     read_rows_seq, write_rows_seq, BackendKind, BackendStats, ExecBackend, StatCounters,
 };
-use crate::coordinator::exec::{gang_execute, host_eval_dpu, Inputs};
+use crate::coordinator::exec::{chunkable, gang_execute, host_eval_dpu, host_pipeline_dpu, Inputs};
 use crate::coordinator::handle::PimFunc;
 use crate::error::Result;
 use crate::pim::memory::MramBank;
+use crate::pim::pipeline::ChunkPlan;
 use crate::runtime::Runtime;
 
 /// Host-execution gang width (the AOT artifacts' default gang is 8;
@@ -95,6 +96,37 @@ impl ExecBackend for GangBackend {
         take: &(dyn Fn(usize) -> u64 + Sync),
     ) -> Result<Vec<Vec<i32>>> {
         read_rows_seq(banks, 0, addr, take)
+    }
+
+    /// Chunk pipelines dispatched in fixed-width DPU gangs: each DPU of
+    /// a gang runs its own chunk pipeline to completion before the next
+    /// gang starts (one `gang_batches` increment per DPU gang, as in
+    /// [`Self::launch`] — gangs batch *DPUs*, not chunks); lane-for-lane
+    /// identical to the sequential reference.
+    fn launch_pipelined(
+        &self,
+        rt: Option<&Runtime>,
+        func: &PimFunc,
+        ctx: &[i32],
+        inputs: &Inputs,
+        plan: &ChunkPlan,
+    ) -> Result<Vec<Vec<i32>>> {
+        if rt.is_some() || !chunkable(func) || plan.chunks() <= 1 {
+            return self.launch(rt, func, ctx, inputs);
+        }
+        let n = inputs.n_dpus();
+        let (a, b) = (inputs.first(), inputs.second());
+        let mut out = Vec::with_capacity(n);
+        for gang_start in (0..n).step_by(HOST_GANG) {
+            let slots = HOST_GANG.min(n - gang_start);
+            for s in 0..slots {
+                out.push(host_pipeline_dpu(func, ctx, a, b, gang_start + s, plan)?);
+            }
+            self.stats.gang_batch();
+        }
+        self.stats.launch(n as u64);
+        self.stats.pipelined();
+        Ok(out)
     }
 
     fn stats(&self) -> BackendStats {

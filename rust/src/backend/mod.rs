@@ -43,6 +43,7 @@ use crate::coordinator::exec::Inputs;
 use crate::coordinator::handle::PimFunc;
 use crate::error::{Error, Result};
 use crate::pim::memory::MramBank;
+use crate::pim::pipeline::ChunkPlan;
 use crate::runtime::Runtime;
 
 /// Which backend implementation a system runs (CLI: `--backend`).
@@ -92,6 +93,8 @@ pub struct BackendStats {
     /// Operations (launches / row reads / row writes) that were sharded
     /// across worker threads.
     pub sharded_ops: u64,
+    /// Launches executed through the chunked pipeline path.
+    pub pipelined: u64,
     /// Worker threads the backend shards across (1 = single-threaded).
     pub threads: usize,
 }
@@ -104,6 +107,7 @@ pub(crate) struct StatCounters {
     host_lanes: AtomicU64,
     gang_batches: AtomicU64,
     sharded_ops: AtomicU64,
+    pipelined: AtomicU64,
 }
 
 impl StatCounters {
@@ -120,12 +124,17 @@ impl StatCounters {
         self.sharded_ops.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub(crate) fn pipelined(&self) {
+        self.pipelined.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub(crate) fn snapshot(&self, threads: usize) -> BackendStats {
         BackendStats {
             launches: self.launches.load(Ordering::Relaxed),
             host_lanes: self.host_lanes.load(Ordering::Relaxed),
             gang_batches: self.gang_batches.load(Ordering::Relaxed),
             sharded_ops: self.sharded_ops.load(Ordering::Relaxed),
+            pipelined: self.pipelined.load(Ordering::Relaxed),
             threads,
         }
     }
@@ -176,17 +185,40 @@ pub trait ExecBackend: Send + Sync {
         take: &(dyn Fn(usize) -> u64 + Sync),
     ) -> Result<Vec<Vec<i32>>>;
 
+    /// Execute one kernel as a chunked pipeline over `plan`'s logical
+    /// row spans — the pipelined execution mode's functional half
+    /// (DESIGN.md §12).  Must be bit-identical to [`Self::launch`]:
+    /// map chunks concatenate, reduction chunks fold through the
+    /// function's accumulator; only the interleaving strategy differs
+    /// per backend (seq = reference per-DPU chunk walk, gang = the
+    /// same walk dispatched in fixed-width DPU gangs, parallel = an
+    /// independent chunk pipeline per rank-shard worker).
+    /// Implementations fall back to `launch`
+    /// for artifact-backed kernels (the PJRT executables gang-batch
+    /// internally), host-custom functions (whole-slice contract, see
+    /// [`crate::coordinator::exec::chunkable`]), and single-chunk
+    /// plans.
+    fn launch_pipelined(
+        &self,
+        rt: Option<&Runtime>,
+        func: &PimFunc,
+        ctx: &[i32],
+        inputs: &Inputs,
+        plan: &ChunkPlan,
+    ) -> Result<Vec<Vec<i32>>>;
+
     /// Counter snapshot.
     fn stats(&self) -> BackendStats;
 }
 
-/// Build a backend of `kind`; `threads` only affects `Parallel`.
-pub fn make(kind: BackendKind, threads: usize) -> Box<dyn ExecBackend> {
-    match kind {
+/// Build a backend of `kind`; `threads` only affects `Parallel`, where
+/// zero is an explicit [`Error::Config`] rather than a silent clamp.
+pub fn make(kind: BackendKind, threads: usize) -> Result<Box<dyn ExecBackend>> {
+    Ok(match kind {
         BackendKind::Seq => Box::new(SequentialBackend::new()),
         BackendKind::Gang => Box::new(GangBackend::new()),
-        BackendKind::Parallel => Box::new(ParallelBackend::new(threads)),
-    }
+        BackendKind::Parallel => Box::new(ParallelBackend::new(threads)?),
+    })
 }
 
 /// Worker count to use when none is requested.
@@ -194,33 +226,48 @@ pub fn default_threads() -> usize {
     std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
 }
 
+/// Resolve the `SIMPLEPIM_BACKEND` / `SIMPLEPIM_THREADS` pair into a
+/// backend choice.  Misconfiguration is an explicit [`Error::Config`]
+/// carrying the offending value: the backends are parity-identical by
+/// design, so a silently corrected typo (`SIMPLEPIM_BACKEND=paralell`,
+/// `SIMPLEPIM_THREADS=0`) would run the sequential path with every
+/// test green and zero parallel coverage.
+pub fn resolve_env(backend: Option<&str>, threads: Option<&str>) -> Result<(BackendKind, usize)> {
+    let kind = match backend {
+        Some(s) => BackendKind::parse(s).map_err(|_| {
+            Error::Config(format!(
+                "invalid SIMPLEPIM_BACKEND=`{s}` (expected seq, gang, or parallel)"
+            ))
+        })?,
+        None => BackendKind::Seq,
+    };
+    let threads = match threads {
+        Some(s) => match s.parse::<usize>() {
+            Ok(t) if t >= 1 => t,
+            _ => {
+                return Err(Error::Config(format!(
+                    "invalid SIMPLEPIM_THREADS=`{s}` (expected a positive integer; \
+                     0 would silently run single-threaded)"
+                )))
+            }
+        },
+        None => default_threads(),
+    };
+    Ok((kind, threads))
+}
+
 /// The process-default backend: `SIMPLEPIM_BACKEND` (seq | gang |
 /// parallel) and `SIMPLEPIM_THREADS` when set, else the seed's
 /// sequential behavior.  This is what lets CI run the whole tier-1
 /// suite under `--backend parallel --threads 4` without touching any
-/// test code.
+/// test code.  Both variables are explicit opt-ins, so an invalid
+/// value aborts loudly with the [`Error::Config`] message.
 pub fn from_env() -> Box<dyn ExecBackend> {
-    // Misconfiguration must be loud: the backends are parity-identical
-    // by design, so silently falling back on a typo (e.g.
-    // `SIMPLEPIM_BACKEND=paralell` in CI) would run the sequential
-    // path with every test green and zero parallel coverage.  Both
-    // variables are explicit opt-ins, so an invalid value is a hard
-    // error.
-    let kind = match std::env::var("SIMPLEPIM_BACKEND") {
-        Ok(s) => match BackendKind::parse(&s) {
-            Ok(k) => k,
-            Err(e) => panic!("invalid SIMPLEPIM_BACKEND: {e}"),
-        },
-        Err(_) => BackendKind::Seq,
-    };
-    let threads = match std::env::var("SIMPLEPIM_THREADS") {
-        Ok(s) => match s.parse::<usize>() {
-            Ok(t) if t >= 1 => t,
-            _ => panic!("invalid SIMPLEPIM_THREADS=`{s}` (expected a positive integer)"),
-        },
-        Err(_) => default_threads(),
-    };
-    make(kind, threads)
+    let backend = std::env::var("SIMPLEPIM_BACKEND").ok();
+    let threads = std::env::var("SIMPLEPIM_THREADS").ok();
+    let (kind, threads) = resolve_env(backend.as_deref(), threads.as_deref())
+        .unwrap_or_else(|e| panic!("{e}"));
+    make(kind, threads).unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Split `0..n` into at most `shards` contiguous, near-equal ranges.
@@ -313,10 +360,44 @@ mod tests {
 
     #[test]
     fn make_builds_every_kind() {
-        assert_eq!(make(BackendKind::Seq, 1).kind(), BackendKind::Seq);
-        assert_eq!(make(BackendKind::Gang, 1).kind(), BackendKind::Gang);
-        let p = make(BackendKind::Parallel, 3);
+        assert_eq!(make(BackendKind::Seq, 1).unwrap().kind(), BackendKind::Seq);
+        assert_eq!(make(BackendKind::Gang, 1).unwrap().kind(), BackendKind::Gang);
+        let p = make(BackendKind::Parallel, 3).unwrap();
         assert_eq!(p.kind(), BackendKind::Parallel);
         assert_eq!(p.threads(), 3);
+    }
+
+    #[test]
+    fn zero_workers_is_an_explicit_config_error() {
+        // The old behavior silently clamped to 1 worker; a request for
+        // zero workers is a misconfiguration and must say so.
+        let err = make(BackendKind::Parallel, 0).err().expect("0 workers must fail");
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains('0'), "offending value in message: {err}");
+        // Zero threads is fine for backends that don't shard.
+        assert!(make(BackendKind::Seq, 0).is_ok());
+    }
+
+    #[test]
+    fn env_resolution_rejects_garbage_with_the_value() {
+        let (k, t) = resolve_env(None, None).unwrap();
+        assert_eq!(k, BackendKind::Seq);
+        assert!(t >= 1);
+        assert_eq!(
+            resolve_env(Some("gang"), Some("7")).unwrap(),
+            (BackendKind::Gang, 7)
+        );
+
+        for bad in ["0", "-3", "four", ""] {
+            let err = resolve_env(None, Some(bad)).err().expect("bad thread count");
+            assert!(matches!(err, Error::Config(_)), "{err}");
+            assert!(
+                err.to_string().contains(&format!("`{bad}`")),
+                "offending value `{bad}` in message: {err}"
+            );
+        }
+        let err = resolve_env(Some("paralell"), None).err().expect("typo must fail");
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("paralell"), "{err}");
     }
 }

@@ -20,10 +20,11 @@ use super::{
     read_rows_seq, shard_ranges, write_rows_seq, BackendKind, BackendStats, ExecBackend,
     StatCounters,
 };
-use crate::coordinator::exec::{gang_execute, host_eval_dpu, Inputs};
+use crate::coordinator::exec::{chunkable, gang_execute, host_eval_dpu, host_pipeline_dpu, Inputs};
 use crate::coordinator::handle::PimFunc;
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::pim::memory::MramBank;
+use crate::pim::pipeline::ChunkPlan;
 use crate::runtime::Runtime;
 
 #[derive(Debug)]
@@ -35,13 +36,22 @@ pub struct ParallelBackend {
 }
 
 impl ParallelBackend {
-    pub fn new(threads: usize) -> Self {
-        ParallelBackend {
-            threads: threads.max(1),
+    /// Build a rank-sharded backend over `threads` workers.  Zero is an
+    /// explicit [`Error::Config`] (the old silent clamp to one worker
+    /// ran the whole suite single-threaded while claiming parallel
+    /// coverage).
+    pub fn new(threads: usize) -> Result<Self> {
+        if threads == 0 {
+            return Err(Error::Config(
+                "parallel backend worker count must be >= 1, got 0".into(),
+            ));
+        }
+        Ok(ParallelBackend {
+            threads,
             arena: default_buf_arena(),
             staging: default_byte_arena(),
             stats: StatCounters::default(),
-        }
+        })
     }
 }
 
@@ -136,6 +146,60 @@ impl ExecBackend for ParallelBackend {
         });
         self.stats.sharded_op();
         results.into_iter().collect()
+    }
+
+    /// Per-worker chunk pipelines: the DPU range splits into contiguous
+    /// rank shards, and every worker drives an independent chunk
+    /// pipeline over its shard (the modeled per-rank in-flight windows
+    /// never cross a shard boundary).  Results stitch back in DPU
+    /// order, bit-identical to the sequential reference.
+    fn launch_pipelined(
+        &self,
+        rt: Option<&Runtime>,
+        func: &PimFunc,
+        ctx: &[i32],
+        inputs: &Inputs,
+        plan: &ChunkPlan,
+    ) -> Result<Vec<Vec<i32>>> {
+        if rt.is_some() || !chunkable(func) || plan.chunks() <= 1 {
+            return self.launch(rt, func, ctx, inputs);
+        }
+        let n = inputs.n_dpus();
+        let (a, b) = (inputs.first(), inputs.second());
+        let shards = shard_ranges(n, self.threads);
+        if shards.len() <= 1 {
+            let mut out = Vec::with_capacity(n);
+            for dpu in 0..n {
+                out.push(host_pipeline_dpu(func, ctx, a, b, dpu, plan)?);
+            }
+            self.stats.launch(n as u64);
+            self.stats.pipelined();
+            return Ok(out);
+        }
+        let parts: Vec<Result<Vec<Vec<i32>>>> = std::thread::scope(|s| {
+            let handles: Vec<_> = shards
+                .iter()
+                .cloned()
+                .map(|r| {
+                    s.spawn(move || -> Result<Vec<Vec<i32>>> {
+                        let mut part = Vec::with_capacity(r.len());
+                        for dpu in r {
+                            part.push(host_pipeline_dpu(func, ctx, a, b, dpu, plan)?);
+                        }
+                        Ok(part)
+                    })
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().expect("launch worker panicked")).collect()
+        });
+        let mut out = Vec::with_capacity(n);
+        for part in parts {
+            out.extend(part?);
+        }
+        self.stats.launch(n as u64);
+        self.stats.sharded_op();
+        self.stats.pipelined();
+        Ok(out)
     }
 
     fn read_rows(

@@ -11,10 +11,11 @@ use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
 use super::{
     read_rows_seq, write_rows_seq, BackendKind, BackendStats, ExecBackend, StatCounters,
 };
-use crate::coordinator::exec::{gang_execute, host_eval_dpu, Inputs};
+use crate::coordinator::exec::{chunkable, gang_execute, host_eval_dpu, host_pipeline_dpu, Inputs};
 use crate::coordinator::handle::PimFunc;
 use crate::error::Result;
 use crate::pim::memory::MramBank;
+use crate::pim::pipeline::ChunkPlan;
 use crate::runtime::Runtime;
 
 #[derive(Debug)]
@@ -86,6 +87,31 @@ impl ExecBackend for SequentialBackend {
         take: &(dyn Fn(usize) -> u64 + Sync),
     ) -> Result<Vec<Vec<i32>>> {
         read_rows_seq(banks, 0, addr, take)
+    }
+
+    /// Reference interleaving: one host thread walks every DPU in
+    /// order, each DPU running its chunk pipeline to completion —
+    /// the ground truth the other backends' stitchings are pinned to.
+    fn launch_pipelined(
+        &self,
+        rt: Option<&Runtime>,
+        func: &PimFunc,
+        ctx: &[i32],
+        inputs: &Inputs,
+        plan: &ChunkPlan,
+    ) -> Result<Vec<Vec<i32>>> {
+        if rt.is_some() || !chunkable(func) || plan.chunks() <= 1 {
+            return self.launch(rt, func, ctx, inputs);
+        }
+        let n = inputs.n_dpus();
+        let (a, b) = (inputs.first(), inputs.second());
+        let mut out = Vec::with_capacity(n);
+        for dpu in 0..n {
+            out.push(host_pipeline_dpu(func, ctx, a, b, dpu, plan)?);
+        }
+        self.stats.launch(n as u64);
+        self.stats.pipelined();
+        Ok(out)
     }
 
     fn stats(&self) -> BackendStats {

@@ -79,18 +79,29 @@ COMMANDS:
                              --backend {seq|gang|parallel} (execution
                              backend; default seq or $SIMPLEPIM_BACKEND)
                              --threads N (parallel backend workers;
-                             default: available cores)
+                             default: available cores; 0 is an error)
+                             --pipeline {off|on|auto} (pipelined transfer
+                             engine: overlap chunked scatter/gather with
+                             kernel execution; default off or
+                             $SIMPLEPIM_PIPELINE)
                              --seed S (deterministic data generation)
                              --explain (dump the optimized plan: nodes,
                              which backend ran them, fusions applied,
-                             plan-cache hits/misses)
+                             plan-cache hits/misses, pipelined launches)
   figures <which>   regenerate a paper figure from the timing model
                     which: fig9 fig10 fig11 ablations all
                     options: --csv (emit CSV instead of tables)
   table1            regenerate the lines-of-code table (Table 1)
+  bench-gate        compare BENCH_hotpath.json against the committed
+                    baseline; fails on any modeled-total regression
+                    beyond tolerance (wall clock reported, non-blocking)
+                    options: --baseline P (default BENCH_baseline.json)
+                             --current P (default BENCH_hotpath.json)
+                             --tolerance F (default 0.10)
   info              print the machine model   options: --dpus N
   selftest          functional check: XLA path vs host goldens
-                    options: --backend --threads --seed (as in `run`)
+                    options: --backend --threads --pipeline --seed
+                    (as in `run`)
   help              this text
 ";
 
@@ -102,6 +113,7 @@ pub fn run() -> Result<()> {
         "run" => crate::report::figures::cmd_run(&args),
         "figures" => crate::report::figures::cmd_figures(&args),
         "table1" => crate::report::loc::cmd_table1(&args),
+        "bench-gate" => crate::report::gate::cmd_bench_gate(&args),
         "info" => cmd_info(&args),
         "selftest" => crate::report::figures::cmd_selftest(&args),
         "help" | "--help" | "-h" => {

@@ -74,15 +74,35 @@ impl PimSystem {
         let per_dpu = &plan.per_dpu_elems;
         let src = &bytes;
         let offs = &offsets;
-        self.machine.push_rows_with(
-            addr,
-            plan.padded_bytes as usize,
-            self.backend.as_ref(),
-            &|dpu, buf| {
-                let take = per_dpu[dpu] as usize * ts;
-                buf[..take].copy_from_slice(&src[offs[dpu]..offs[dpu] + take]);
-            },
-        )?;
+        let fill = |dpu: usize, buf: &mut [u8]| {
+            let take = per_dpu[dpu] as usize * ts;
+            buf[..take].copy_from_slice(&src[offs[dpu]..offs[dpu] + take]);
+        };
+        if self.pipeline_active() {
+            // Pipelined mode (DESIGN.md §12): the bytes land now —
+            // still through the backend's sharded row write, since the
+            // chunk interleaving is a modeled concern, not a functional
+            // one (`PimMachine::write_rows_chunked` is the chunked
+            // staging reference, pinned byte-identical to this path by
+            // rust/tests/pipeline.rs) — but the transfer *charge* is
+            // deferred: the first consuming launch overlaps it
+            // chunk-by-chunk with execution, or a non-overlapping use
+            // flushes it monolithically.
+            self.machine.write_rows_with(
+                addr,
+                plan.padded_bytes as usize,
+                self.backend.as_ref(),
+                &fill,
+            )?;
+            self.engine.pending_xfers.insert(id.to_string(), plan.padded_bytes);
+        } else {
+            self.machine.push_rows_with(
+                addr,
+                plan.padded_bytes as usize,
+                self.backend.as_ref(),
+                &fill,
+            )?;
+        }
         self.management.register(ArrayMeta {
             id: id.to_string(),
             len,
@@ -118,8 +138,11 @@ impl PimSystem {
     /// `simple_pim_array_gather`: reassemble a scattered array on the
     /// host (or fetch one copy of a broadcast array).  Returns packed
     /// i32 words.  A forcing boundary: a deferred producer is charged
-    /// and materialized first.
+    /// and materialized first — in pipelined mode as one overlapped
+    /// schedule folding the producer's input scatters, its kernel, and
+    /// this gather's pull into chunked lanes (DESIGN.md §12).
     pub fn gather(&mut self, id: &str) -> Result<Vec<i32>> {
+        let folded_pull = self.pipelined_gather_charge(id)?;
         self.force_array(id)?;
         let meta = self.management.lookup(id)?.clone();
         if !matches!(meta.layout, Layout::LazyZip { .. }) {
@@ -128,15 +151,28 @@ impl PimSystem {
         }
         match &meta.layout {
             Layout::Scattered => {
+                // Scatter -> gather with no launch in between cannot
+                // overlap anything: flush a still-deferred push first.
+                if !folded_pull {
+                    self.flush_own_xfer(id);
+                }
                 // Sharded unmarshal of each DPU's live bytes; charged as
-                // the equal-buffer parallel pull of `padded_bytes` rows.
+                // the equal-buffer parallel pull of `padded_bytes` rows
+                // (unless the pipelined schedule above already charged
+                // this pull as its output lane).
                 let m = &meta;
-                let rows = self.machine.pull_rows_with(
-                    meta.addr,
-                    meta.padded_bytes,
-                    self.backend.as_ref(),
-                    &|dpu| m.bytes_on(dpu),
-                )?;
+                let rows = if folded_pull {
+                    self.machine.read_rows_with(meta.addr, self.backend.as_ref(), &|dpu| {
+                        m.bytes_on(dpu)
+                    })?
+                } else {
+                    self.machine.pull_rows_with(
+                        meta.addr,
+                        meta.padded_bytes,
+                        self.backend.as_ref(),
+                        &|dpu| m.bytes_on(dpu),
+                    )?
+                };
                 let mut out = Vec::with_capacity((meta.len * meta.type_size as u64 / 4) as usize);
                 for row in rows {
                     out.extend(row);
@@ -154,6 +190,28 @@ impl PimSystem {
         }
     }
 
+    /// Try to charge the deferred producer of `id` as a pipelined
+    /// launch whose output lane is *this gather's* parallel pull
+    /// (scatter chunk k+1 ∥ exec chunk k ∥ gather chunk k−1).  Returns
+    /// whether the pull was folded in; `false` means the caller charges
+    /// the pull normally.  Functional materialization still happens in
+    /// `force_array` (the chain is merely marked charged here).
+    fn pipelined_gather_charge(&mut self, id: &str) -> Result<bool> {
+        if !self.pipeline_active() {
+            return Ok(false);
+        }
+        let out_row_bytes = match self.engine.pending.get(id) {
+            Some(node) if !node.charged => node.padded_out_bytes(),
+            _ => return Ok(false),
+        };
+        // Only scattered outputs take the equal-buffer parallel pull;
+        // broadcast maps gather through the serial path.
+        if !matches!(self.management.lookup(id)?.layout, Layout::Scattered) {
+            return Ok(false);
+        }
+        self.charge_chain_with(id, out_row_bytes)
+    }
+
     /// `simple_pim_array_free`: unregister and release MRAM.
     ///
     /// Freeing a deferred map that no consumer ever read **elides** it:
@@ -164,6 +222,15 @@ impl PimSystem {
     /// empties, the engine's pooled buffers and resident contexts are
     /// released, so `machine.mram_used()` returns to zero.
     pub fn free_array(&mut self, id: &str) -> Result<()> {
+        // A deferred scatter charge survives until first use; freeing
+        // the array is that use (the push happened functionally), so
+        // the monolithic flush keeps the timeline complete.  Pending
+        // maps that read this array also drop their input link: a
+        // later array re-registered under the same id is a new data
+        // generation whose scatter charge must never fold into a
+        // launch that consumed the old bytes.
+        self.flush_own_xfer(id);
+        self.detach_src_links(id);
         let needs_charge = match self.engine.pending.get(id) {
             Some(n) if !n.charged => {
                 self.engine.pending.values().any(|p| p.upstream.as_deref() == Some(id))

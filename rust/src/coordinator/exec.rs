@@ -161,37 +161,32 @@ pub(crate) fn gang_execute(
     }
 }
 
-/// Evaluate `func` on one DPU's local slice(s) through the
-/// bit-identical host goldens.  `a`/`b` are the per-DPU input arrays
-/// (plain slices, so rank-sharding workers can call this from
-/// `std::thread::scope` without touching the `Rc`-shared [`Inputs`]).
-pub(crate) fn host_eval_dpu(
+/// Evaluate `func` on raw slices through the bit-identical host
+/// goldens — the DPU- and chunk-agnostic core shared by the whole-row
+/// walk ([`host_eval_dpu`]) and the chunked pipeline walk
+/// ([`host_pipeline_dpu`]).
+pub(crate) fn host_eval_slice(
     func: &PimFunc,
     ctx: &[i32],
-    a: &[Vec<i32>],
-    b: Option<&[Vec<i32>]>,
-    dpu: usize,
+    a: &[i32],
+    b: Option<&[i32]>,
 ) -> Result<Vec<i32>> {
-    let a = &a[dpu];
     Ok(match func {
         PimFunc::AffineMap => golden::map_affine(a, ctx[0], ctx[1]),
         PimFunc::VecAdd => {
-            let b = &b
-                .ok_or_else(|| Error::Handle("VecAdd needs a zipped pair input".into()))?[dpu];
+            let b = b.ok_or_else(|| Error::Handle("VecAdd needs a zipped pair input".into()))?;
             golden::vecadd(a, b)
         }
         PimFunc::SumReduce => vec![golden::reduce_sum(a)],
         PimFunc::Histogram { bins } => golden::histogram(a, *bins),
         PimFunc::LinregGrad { dim } => {
-            let y = &b
-                .ok_or_else(|| Error::Handle("LinregGrad needs zip(points, targets)".into()))?
-                [dpu];
+            let y = b
+                .ok_or_else(|| Error::Handle("LinregGrad needs zip(points, targets)".into()))?;
             golden::linreg_grad(a, y, ctx, *dim as usize)
         }
         PimFunc::LogregGrad { dim } => {
-            let y = &b
-                .ok_or_else(|| Error::Handle("LogregGrad needs zip(points, targets)".into()))?
-                [dpu];
+            let y = b
+                .ok_or_else(|| Error::Handle("LogregGrad needs zip(points, targets)".into()))?;
             golden::logreg_grad(a, y, ctx, *dim as usize)
         }
         PimFunc::KmeansAssign { k, dim } => {
@@ -209,6 +204,123 @@ pub(crate) fn host_eval_dpu(
             ))
         }
     })
+}
+
+/// Evaluate `func` on one DPU's local slice(s) through the
+/// bit-identical host goldens.  `a`/`b` are the per-DPU input arrays
+/// (plain slices, so rank-sharding workers can call this from
+/// `std::thread::scope` without touching the `Rc`-shared [`Inputs`]).
+pub(crate) fn host_eval_dpu(
+    func: &PimFunc,
+    ctx: &[i32],
+    a: &[Vec<i32>],
+    b: Option<&[Vec<i32>]>,
+    dpu: usize,
+) -> Result<Vec<i32>> {
+    host_eval_slice(func, ctx, &a[dpu], b.map(|bb| bb[dpu].as_slice()))
+}
+
+/// i32 words per logical element row in each input stream of `func`
+/// (the chunking granularity: chunk boundaries never split a point).
+pub(crate) fn row_widths(func: &PimFunc) -> (usize, usize) {
+    match func {
+        PimFunc::VecAdd => (1, 1),
+        PimFunc::LinregGrad { dim } | PimFunc::LogregGrad { dim } => (*dim as usize, 1),
+        PimFunc::KmeansAssign { dim, .. } => (*dim as usize, 0),
+        _ => (1, 0),
+    }
+}
+
+/// Whether chunked (pipelined) evaluation is value-safe for `func`.
+/// Built-in kernels are elementwise maps or accumulator reductions, so
+/// chunk results stitch exactly; programmer-supplied host functions
+/// see the whole local slice by contract and must stay monolithic.
+pub(crate) fn chunkable(func: &PimFunc) -> bool {
+    !matches!(func, PimFunc::HostMap(_) | PimFunc::HostRed { .. } | PimFunc::HostAcc(_))
+}
+
+/// Evaluate one DPU's slice chunk-by-chunk over `plan`'s row spans,
+/// stitching map chunks by concatenation and reduction chunks through
+/// the function's accumulator — bit-identical to [`host_eval_dpu`]
+/// for every [`chunkable`] function (pinned by rust/tests/pipeline.rs).
+/// Spans clamp to the DPU's own row count, so ragged and empty
+/// distributions fall out naturally.
+pub(crate) fn host_pipeline_dpu(
+    func: &PimFunc,
+    ctx: &[i32],
+    a: &[Vec<i32>],
+    b: Option<&[Vec<i32>]>,
+    dpu: usize,
+    plan: &crate::pim::pipeline::ChunkPlan,
+) -> Result<Vec<i32>> {
+    let (wa, wb) = row_widths(func);
+    let av = &a[dpu];
+    let rows = match (wb, b) {
+        (w, Some(bb)) if w > 0 => (bb[dpu].len() / w) as u64,
+        _ => (av.len() / wa.max(1)) as u64,
+    };
+    let slice_b = |lo: u64, hi: u64| -> Option<&[i32]> {
+        b.map(|bb| {
+            if wb > 0 {
+                &bb[dpu][lo as usize * wb..hi as usize * wb]
+            } else {
+                bb[dpu].as_slice()
+            }
+        })
+    };
+    if func.red_output_len().is_ok() {
+        let accf = func.acc();
+        let mut acc: Option<Vec<i32>> = None;
+        for &(lo, hi) in &plan.spans {
+            let (lo, hi) = (lo.min(rows), hi.min(rows));
+            if lo >= hi {
+                continue;
+            }
+            let part = host_eval_slice(
+                func,
+                ctx,
+                &av[lo as usize * wa..hi as usize * wa],
+                slice_b(lo, hi),
+            )?;
+            acc = Some(match acc {
+                None => part,
+                Some(mut v) => {
+                    for (x, y) in v.iter_mut().zip(part) {
+                        *x = accf(*x, y);
+                    }
+                    v
+                }
+            });
+        }
+        match acc {
+            Some(v) => Ok(v),
+            // No rows on this DPU: the canonical zero partial.
+            None => host_eval_slice(func, ctx, &av[0..0], slice_b(0, 0)),
+        }
+    } else {
+        let mut out = Vec::with_capacity(av.len());
+        let mut any = false;
+        for &(lo, hi) in &plan.spans {
+            let (lo, hi) = (lo.min(rows), hi.min(rows));
+            if lo >= hi {
+                continue;
+            }
+            any = true;
+            out.extend(host_eval_slice(
+                func,
+                ctx,
+                &av[lo as usize * wa..hi as usize * wa],
+                slice_b(lo, hi),
+            )?);
+        }
+        if !any {
+            // No rows on this DPU: evaluate the empty slice once so
+            // arity errors (e.g. VecAdd without its pair) surface
+            // exactly as they do on the monolithic path.
+            return host_eval_slice(func, ctx, &av[0..0], slice_b(0, 0));
+        }
+        Ok(out)
+    }
 }
 
 /// Host fallback: the bit-identical goldens, walked per DPU.
@@ -644,6 +756,46 @@ mod tests {
     fn vecadd_without_pair_errors() {
         let inputs = Inputs::One(Rc::new(vec![vec![1]]));
         assert!(execute_func(None, &PimFunc::VecAdd, &[], &inputs).is_err());
+    }
+
+    #[test]
+    fn host_pipeline_dpu_matches_whole_row_eval() {
+        use crate::pim::pipeline::ChunkPlan;
+        // Ragged reduction: chunked partials fold to the same values.
+        let a = vec![vec![1, 2, 3, 4, 5, 6, 7], vec![9, -2], vec![]];
+        for plan in [ChunkPlan::split(7, 7), ChunkPlan::split(7, 3), ChunkPlan::monolithic(7)] {
+            for dpu in 0..a.len() {
+                let whole = host_eval_dpu(&PimFunc::SumReduce, &[], &a, None, dpu).unwrap();
+                let chunked =
+                    host_pipeline_dpu(&PimFunc::SumReduce, &[], &a, None, dpu, &plan).unwrap();
+                assert_eq!(whole, chunked, "dpu {dpu}, {} chunks", plan.chunks());
+            }
+        }
+        // Zipped map: chunk boundaries respect both streams.
+        let x = vec![vec![1, 2, 3, 4, 5]];
+        let y = vec![vec![10, 20, 30, 40, 50]];
+        let plan = ChunkPlan::split(5, 2);
+        let whole = host_eval_dpu(&PimFunc::VecAdd, &[], &x, Some(&y), 0).unwrap();
+        let chunked = host_pipeline_dpu(&PimFunc::VecAdd, &[], &x, Some(&y), 0, &plan).unwrap();
+        assert_eq!(whole, chunked);
+        // Missing-pair arity error survives chunking, even on empty rows.
+        let empty = vec![Vec::<i32>::new()];
+        assert!(host_pipeline_dpu(&PimFunc::VecAdd, &[], &empty, None, 0, &plan).is_err());
+    }
+
+    #[test]
+    fn chunkable_excludes_host_custom_functions() {
+        assert!(chunkable(&PimFunc::VecAdd));
+        assert!(chunkable(&PimFunc::Histogram { bins: 64 }));
+        assert!(chunkable(&PimFunc::KmeansAssign { k: 2, dim: 2 }));
+        fn idmap(xs: &[i32], _: &[i32]) -> Vec<i32> {
+            xs.to_vec()
+        }
+        assert!(!chunkable(&PimFunc::HostMap(idmap)));
+        assert!(!chunkable(&PimFunc::HostAcc(i32::wrapping_add)));
+        assert_eq!(row_widths(&PimFunc::LinregGrad { dim: 10 }), (10, 1));
+        assert_eq!(row_widths(&PimFunc::KmeansAssign { k: 4, dim: 3 }), (3, 0));
+        assert_eq!(row_widths(&PimFunc::VecAdd), (1, 1));
     }
 
     #[test]

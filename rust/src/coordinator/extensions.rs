@@ -65,6 +65,7 @@ impl PimSystem {
     /// under `dest_id` with the same distribution.
     pub fn array_scan(&mut self, src_id: &str, dest_id: &str) -> Result<()> {
         self.force_array(src_id)?; // forcing boundary for deferred maps
+        self.flush_own_xfer(src_id); // scan phases don't overlap scatters
         let meta = self.management.lookup(src_id)?.clone();
         let locals = self.read_local(&meta)?;
         let elems = meta.max_per_dpu();
@@ -173,6 +174,7 @@ impl PimSystem {
         pred: fn(i32) -> bool,
     ) -> Result<u64> {
         self.force_array(src_id)?; // forcing boundary for deferred maps
+        self.flush_own_xfer(src_id); // predicate pass reads post-scatter
         let meta = self.management.lookup(src_id)?.clone();
         let locals = self.read_local(&meta)?;
         let elems = meta.max_per_dpu();

@@ -110,15 +110,32 @@ impl PimSystem {
 
         // --- functional execution into host staging buffers.  A
         //     deferred source feeds the chain directly from its staged
-        //     outputs (nothing reads MRAM for the intermediate).
+        //     outputs (nothing reads MRAM for the intermediate).  In
+        //     pipelined mode, chunkable kernels execute through the
+        //     backend's chunked pipeline walk (bit-identical; see
+        //     rust/tests/pipeline.rs).
         let (inputs, upstream) = if self.engine.pending.contains_key(src_id) {
             let staged = Rc::clone(&self.engine.pending.get(src_id).expect("checked").outputs);
             (Inputs::One(staged), Some(src_id.to_string()))
         } else {
             (self.resolve_inputs(src_id)?.0, None)
         };
-        let outputs =
-            self.backend.launch(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?;
+        let outputs = if self.pipeline_active() && super::exec::chunkable(&handle.func) {
+            let cplan = crate::pim::pipeline::ChunkPlan::for_rows(
+                &self.machine.cfg,
+                elems,
+                handle.profile.elem_bytes.max(1),
+            );
+            self.backend.launch_pipelined(
+                self.runtime.as_ref(),
+                &handle.func,
+                &handle.ctx,
+                &inputs,
+                &cplan,
+            )?
+        } else {
+            self.backend.launch(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?
+        };
 
         // --- register the output's metadata (placement is filled in at
         //     materialization time).
@@ -154,6 +171,7 @@ impl PimSystem {
                 node,
                 handle: handle.clone(),
                 upstream,
+                src: Some(src_id.to_string()),
                 outputs: Rc::new(outputs),
                 charged: false,
                 elems,
@@ -212,18 +230,11 @@ impl PimSystem {
             None => Self::logical_elems(&src),
         };
 
-        // --- ship contexts: chain stages first, then the reduction.
-        let mut profiles = self.ship_chain_contexts(&chain)?;
-        self.ship_context(handle)?;
-
-        // --- functional execution: per-DPU partials, through the
-        //     configured backend (seq walk / gang batches / rank-sharded
-        //     workers — functionally identical by the parity suite).
-        let partials =
-            self.backend.launch(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?;
-
-        // --- timing: one (possibly fused) reduction launch, variant
-        //     from the plan cache when available (paper §4.2.2 choice).
+        // --- plan the (possibly fused) reduction launch: fused
+        //     profile, variant from the plan cache when available
+        //     (paper §4.2.2 choice), kernel time.  Pure — nothing is
+        //     charged yet.
+        let mut profiles = self.chain_profiles(&chain);
         profiles.push(handle.profile);
         let fused = optimizer::fuse_profiles(&profiles);
         let mut funcs: Vec<String> = chain
@@ -270,7 +281,64 @@ impl PimSystem {
             4,
             variant,
         );
-        self.machine.charge_kernel(t.seconds);
+
+        // --- pipelined transfer engine (DESIGN.md §12): when the
+        //     source's scatter charges are still deferred and the whole
+        //     launch is chunkable, overlap them with the reduction
+        //     chunk-by-chunk (`plan_overlap` flushes them monolithically
+        //     otherwise).
+        let red_chunkable = super::exec::chunkable(&handle.func)
+            && chain.iter().all(|c| {
+                super::exec::chunkable(
+                    &self.engine.pending.get(c).expect("in chain").handle.func,
+                )
+            });
+        let xfer_src: Option<String> = match chain.first() {
+            Some(root) => self.engine.pending.get(root).expect("in chain").src.clone(),
+            None => Some(src_id.to_string()),
+        };
+        let (in_streams, pipe_sched) =
+            self.plan_overlap(xfer_src.as_deref(), red_chunkable, 0, t.seconds);
+
+        // --- ship contexts: chain stages first, then the reduction.
+        self.ship_chain_contexts(&chain)?;
+        self.ship_context(handle)?;
+
+        // --- functional execution: per-DPU partials, through the
+        //     configured backend (seq walk / gang batches / rank-sharded
+        //     workers — functionally identical by the parity suite); in
+        //     pipelined mode through its chunked pipeline walk.
+        let partials = if self.pipeline_active() && red_chunkable {
+            let cplan = crate::pim::pipeline::ChunkPlan::for_rows(
+                &self.machine.cfg,
+                elems,
+                fused.elem_bytes.max(1),
+            );
+            self.backend.launch_pipelined(
+                self.runtime.as_ref(),
+                &handle.func,
+                &handle.ctx,
+                &inputs,
+                &cplan,
+            )?
+        } else {
+            self.backend.launch(self.runtime.as_ref(), &handle.func, &handle.ctx, &inputs)?
+        };
+
+        // --- timing: the launch, overlapped with its input scatters
+        //     when the pipelined schedule applies.
+        match &pipe_sched {
+            Some(sched) => {
+                self.charge_pipelined(&in_streams, 0, t.seconds, sched);
+                self.engine.note(format!(
+                    "pipelined reduction `{dest_id}`: {} chunks ({} input stream(s)), saved {:.3} ms",
+                    sched.chunks,
+                    in_streams.len(),
+                    sched.saved_s * 1e3
+                ));
+            }
+            None => self.machine.charge_kernel(t.seconds),
+        }
         self.engine.stats.launches += 1;
         self.last_red_variant = Some((variant, t.active_tasklets));
 
@@ -393,6 +461,10 @@ impl PimSystem {
             return Ok(id.to_string());
         };
         let (a, b) = (a.clone(), b.clone());
+        // The eager combine is a timed consumer of both constituents:
+        // deferred scatter charges flush monolithically here.
+        self.flush_own_xfer(&a);
+        self.flush_own_xfer(&b);
         let va = self.local_words(&a)?;
         let vb = self.local_words(&b)?;
         let ma = self.management.lookup(&a)?.clone();

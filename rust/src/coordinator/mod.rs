@@ -51,7 +51,7 @@ pub use plan::{NodeState, PlanNode, PlanOp, PlanStats};
 
 use crate::backend::{BackendKind, BackendStats, ExecBackend};
 use crate::error::Result;
-use crate::pim::{PimConfig, PimMachine, Timeline};
+use crate::pim::{PimConfig, PimMachine, PipelineMode, Timeline};
 use crate::runtime::Runtime;
 use crate::timing::{DmaPolicy, OptFlags, ReduceVariant};
 
@@ -71,6 +71,12 @@ pub struct PimSystem {
     /// The plan-based execution engine: lazy op graph, pending
     /// (deferred) maps, plan cache, buffer/context pools.
     pub(crate) engine: plan::PlanEngine,
+    /// Pipelined transfer engine mode (DESIGN.md §12): Off = the
+    /// monolithic scatter-all → run-all → gather-all request path; On /
+    /// Auto defer scatter charges and overlap chunked transfers with
+    /// kernel execution at forcing boundaries.  Results are
+    /// bit-identical in every mode (rust/tests/backend_parity.rs).
+    pub(crate) pipeline: PipelineMode,
     /// Code-optimization flags the framework "compiles" kernels with
     /// (all on by default; the ablation bench toggles them).
     pub opts: OptFlags,
@@ -123,6 +129,7 @@ impl PimSystem {
             runtime,
             backend: crate::backend::from_env(),
             engine: plan::PlanEngine::new(),
+            pipeline: crate::pim::pipeline::mode_from_env(),
             opts: OptFlags::simplepim(),
             tasklets,
             dma_policy: DmaPolicy::Dynamic,
@@ -155,6 +162,23 @@ impl PimSystem {
         self.backend.kind()
     }
 
+    /// Select the pipelined execution mode (CLI: `--pipeline`).
+    /// Results are mode-invariant; only the modeled overlap changes.
+    /// Turning the pipeline off first flushes any deferred scatter
+    /// charges so no modeled time is lost at the transition.
+    pub fn set_pipeline(&mut self, mode: PipelineMode) -> Result<()> {
+        if mode == PipelineMode::Off {
+            self.flush_all_xfers();
+        }
+        self.pipeline = mode;
+        Ok(())
+    }
+
+    /// The active pipelined execution mode.
+    pub fn pipeline_mode(&self) -> PipelineMode {
+        self.pipeline
+    }
+
     /// Worker threads the backend shards across (1 for seq/gang).
     pub fn backend_threads(&self) -> usize {
         self.backend.threads()
@@ -183,7 +207,13 @@ impl PimSystem {
     }
 
     /// Reset the modeled timeline (functional state is kept).
+    /// Deferred pipelined scatter charges are flushed first so they
+    /// land in the pre-reset era — exactly where the monolithic path
+    /// charged them — and can never leak across a measurement boundary
+    /// (which would make a reset-delimited pipelined region model
+    /// *slower* than the monolithic one).
     pub fn reset_timeline(&mut self) {
+        self.flush_all_xfers();
         self.machine.reset_timeline();
     }
 

@@ -23,11 +23,14 @@ use std::rc::Rc;
 
 use crate::backend::BackendKind;
 use crate::error::Result;
-use crate::timing::ReduceVariant;
+use crate::pim::pipeline::{self, PipeSchedule, PipelineMode};
+use crate::pim::XferKind;
+use crate::timing::{KernelProfile, ReduceVariant};
 use crate::util::round_up;
 
 use super::comm::words_to_bytes;
 use super::handle::Handle;
+use super::management::Layout;
 use super::planner::ScatterPlan;
 use super::PimSystem;
 
@@ -200,6 +203,9 @@ pub struct PlanStats {
     pub buffer_reuses: u64,
     /// Scatter plans served from the planner cache.
     pub scatter_plan_hits: u64,
+    /// Launches charged as chunked, double-buffered pipelines
+    /// (DESIGN.md §12).
+    pub pipelined_launches: u64,
 }
 
 /// Key of one cached reduction plan.  Everything the variant choice
@@ -272,6 +278,12 @@ pub(crate) struct PendingNode {
     /// Pending predecessor in a fusible chain (None once the
     /// predecessor is charged/materialized/freed).
     pub upstream: Option<String>,
+    /// Source array id the map consumed — the pipelined launch looks
+    /// up the chain root's deferred input scatters here.  Cleared
+    /// (`None`) when that id is freed, so a later array registered
+    /// under the same id — a new data generation — can never have its
+    /// scatter charge folded into a launch that consumed the old bytes.
+    pub src: Option<String>,
     /// Staged per-DPU outputs, shared with consumers (fused stages
     /// borrow them as a refcount bump instead of a deep copy).
     pub outputs: Rc<Vec<Vec<i32>>>,
@@ -280,6 +292,15 @@ pub(crate) struct PendingNode {
     pub charged: bool,
     /// Logical per-DPU elements of the chain stage, for timing.
     pub elems: u64,
+}
+
+impl PendingNode {
+    /// Per-DPU padded bytes this node's output occupies once
+    /// materialized (must match `force_array`'s placement math).
+    pub(crate) fn padded_out_bytes(&self) -> u64 {
+        let out_max_words = self.outputs.iter().map(|o| o.len()).max().unwrap_or(0);
+        round_up(out_max_words as u64 * 4, 8).max(8)
+    }
 }
 
 /// A resident shipped-context slot (keyed by padded byte size).
@@ -335,6 +356,12 @@ pub struct PlanEngine {
     pub graph: Plan,
     /// Deferred (unmaterialized) map nodes by destination array id.
     pub(crate) pending: BTreeMap<String, PendingNode>,
+    /// Deferred scatter charges (pipelined mode, DESIGN.md §12): per-DPU
+    /// padded row bytes of host->PIM pushes whose *timing* is postponed
+    /// so a consuming launch can overlap them chunk-by-chunk (the bytes
+    /// themselves land at scatter time).  BTreeMap so bulk flushes
+    /// charge in a deterministic order.
+    pub(crate) pending_xfers: BTreeMap<String, u64>,
     /// LRU reduction-plan cache.
     pub(crate) cache: PlanCache,
     /// Memoized scatter plans keyed by (len, type_size, n_dpus).
@@ -364,6 +391,7 @@ impl PlanEngine {
         PlanEngine {
             graph: Plan::new(),
             pending: BTreeMap::new(),
+            pending_xfers: BTreeMap::new(),
             cache: PlanCache::new(32),
             scatter_plans: HashMap::new(),
             ctx_slots: HashMap::new(),
@@ -436,6 +464,10 @@ impl PimSystem {
         for (_, id) in ids.into_iter().rev() {
             self.force_array(&id)?;
         }
+        // Drain semantics: any deferred scatter charge whose array was
+        // never consumed by a launch is flushed monolithically, so the
+        // timeline is complete at the run() boundary in every mode.
+        self.flush_all_xfers();
         Ok(())
     }
 
@@ -489,6 +521,15 @@ impl PimSystem {
         out.push_str(&format!(
             "  plan cache: {} hits / {} misses | ctx reuses {} | buffer reuses {} | scatter-plan hits {}\n",
             s.cache_hits, s.cache_misses, s.ctx_reuses, s.buffer_reuses, s.scatter_plan_hits
+        ));
+        let tl = self.machine.timeline();
+        out.push_str(&format!(
+            "  pipeline: mode {} | pipelined launches {} | chunks {} | overlap saved {:.3} ms | deferred xfers pending {}\n",
+            self.pipeline,
+            tl.pipelined_launches,
+            tl.pipeline_chunks,
+            tl.overlap_saved_s * 1e3,
+            self.engine.pending_xfers.len(),
         ));
         out.push_str("  nodes:\n");
         if self.engine.graph.dropped > 0 {
@@ -590,18 +631,22 @@ impl PimSystem {
     }
 
     /// Ship the context of every pending stage in `chain` (deepest
-    /// first) and return the stages' instruction profiles in order.
-    pub(crate) fn ship_chain_contexts(
-        &mut self,
-        chain: &[String],
-    ) -> Result<Vec<crate::timing::KernelProfile>> {
-        let mut profiles = Vec::with_capacity(chain.len());
+    /// first).
+    pub(crate) fn ship_chain_contexts(&mut self, chain: &[String]) -> Result<()> {
         for cid in chain {
             let h = self.engine.pending.get(cid).expect("pending chain stage").handle.clone();
             self.ship_context(&h)?;
-            profiles.push(h.profile);
         }
-        Ok(profiles)
+        Ok(())
+    }
+
+    /// Instruction profiles of a pending chain's stages, deepest first
+    /// (pure: no contexts shipped, nothing charged).
+    pub(crate) fn chain_profiles(&self, chain: &[String]) -> Vec<KernelProfile> {
+        chain
+            .iter()
+            .map(|c| self.engine.pending.get(c).expect("pending chain stage").handle.profile)
+            .collect()
     }
 
     /// Mark every stage in `chain` charged and record its graph state.
@@ -621,11 +666,23 @@ impl PimSystem {
     /// stage of the chain ending at `id`, shipping each stage's context
     /// first.  Stages stay pending (unmaterialized) but become charged.
     pub(crate) fn charge_chain(&mut self, id: &str) -> Result<()> {
+        self.charge_chain_with(id, 0).map(|_| ())
+    }
+
+    /// [`Self::charge_chain`] with the pipelined transfer engine folded
+    /// in (DESIGN.md §12).  When pipelining is active and the chain is
+    /// chunkable, the chain root's deferred input scatters — and, for
+    /// `out_row_bytes > 0`, the caller's output gather — are charged as
+    /// a chunked, double-buffered pipeline overlapped with the launch:
+    /// `max(xfer, exec)` per chunk instead of their sum.  Returns
+    /// whether the output transfer was charged here (the caller must
+    /// not charge its pull again).
+    pub(crate) fn charge_chain_with(&mut self, id: &str, out_row_bytes: u64) -> Result<bool> {
         let chain = self.collect_uncharged_chain(id);
         if chain.is_empty() {
-            return Ok(());
+            return Ok(false);
         }
-        let profiles = self.ship_chain_contexts(&chain)?;
+        let profiles = self.chain_profiles(&chain);
         let fused = super::optimizer::fuse_profiles(&profiles);
         let elems = self.engine.pending.get(&chain[0]).expect("in chain").elems;
         let t = crate::timing::map_kernel(
@@ -636,8 +693,35 @@ impl PimSystem {
             elems,
             self.tasklets,
         );
-        self.machine.charge_kernel(t.seconds);
+
+        // Pipelined attempt: consume the chain root's deferred input
+        // scatters and fold them (plus the caller's output pull) into
+        // one overlapped schedule.
+        let src = self.engine.pending.get(&chain[0]).expect("in chain").src.clone();
+        let chunkable = chain.iter().all(|c| {
+            super::exec::chunkable(&self.engine.pending.get(c).expect("in chain").handle.func)
+        });
+        let (streams, sched) =
+            self.plan_overlap(src.as_deref(), chunkable, out_row_bytes, t.seconds);
+
+        self.ship_chain_contexts(&chain)?;
+        let mut folded_out = false;
+        match sched {
+            Some(sched) => {
+                self.charge_pipelined(&streams, out_row_bytes, t.seconds, &sched);
+                folded_out = out_row_bytes > 0;
+                self.engine.note(format!(
+                    "pipelined launch `{id}`: {} chunks ({} input stream(s){}), saved {:.3} ms",
+                    sched.chunks,
+                    streams.len(),
+                    if folded_out { " + gather" } else { "" },
+                    sched.saved_s * 1e3
+                ));
+            }
+            None => self.machine.charge_kernel(t.seconds),
+        }
         self.engine.stats.launches += 1;
+
         let fused_state = if chain.len() > 1 { NodeState::Fused } else { NodeState::Executed };
         if chain.len() > 1 {
             self.engine.stats.fused_chains += 1;
@@ -649,7 +733,149 @@ impl PimSystem {
             ));
         }
         self.mark_chain_charged(&chain, fused_state);
-        Ok(())
+        Ok(folded_out)
+    }
+
+    // -----------------------------------------------------------------
+    // Pipelined transfer engine plumbing (DESIGN.md §12).
+    // -----------------------------------------------------------------
+
+    /// Whether deferred-charge scatters and pipelined launches are in
+    /// play at all.
+    pub(crate) fn pipeline_active(&self) -> bool {
+        self.pipeline != PipelineMode::Off
+    }
+
+    /// The planner's accept rule for a candidate schedule: `on`
+    /// pipelines every structural opportunity (the chunk search's
+    /// monolithic floor keeps it never-worse), `auto` demands a win
+    /// that clearly clears the per-command latency noise.
+    pub(crate) fn pipeline_accepts(&self, sched: &PipeSchedule) -> bool {
+        match self.pipeline {
+            PipelineMode::Off => false,
+            PipelineMode::On => true,
+            PipelineMode::Auto => sched.saved_s >= 2.0 * self.machine.cfg.xfer_latency_s,
+        }
+    }
+
+    /// Consume the deferred input-scatter streams feeding `src` and
+    /// decide whether a launch of `exec_s` kernel seconds should
+    /// overlap them (plus an `out_row_bytes` folded output pull).
+    /// Returns the streams with the accepted schedule; on rejection —
+    /// monolithic candidate won, planner threshold not met, or nothing
+    /// chunkable — the consumed streams are flushed monolithically
+    /// right here (scatter before context, the eager-mode order) and
+    /// the caller charges its launch as usual.  The single charging
+    /// protocol shared by `charge_chain_with` and `array_red`.
+    pub(crate) fn plan_overlap(
+        &mut self,
+        src: Option<&str>,
+        chunkable: bool,
+        out_row_bytes: u64,
+        exec_s: f64,
+    ) -> (Vec<u64>, Option<PipeSchedule>) {
+        if !self.pipeline_active() {
+            return (Vec::new(), None);
+        }
+        let streams = match src {
+            Some(s) => self.take_input_xfers(s),
+            None => Vec::new(),
+        };
+        if chunkable && (!streams.is_empty() || out_row_bytes > 0) {
+            let cand = pipeline::schedule(
+                &self.machine.cfg,
+                self.machine.n_dpus(),
+                &streams,
+                out_row_bytes,
+                exec_s,
+            );
+            if cand.chunks > 1 && self.pipeline_accepts(&cand) {
+                return (streams, Some(cand));
+            }
+        }
+        self.charge_xfer_streams(&streams);
+        (Vec::new(), None)
+    }
+
+    /// Charge one pipelined launch from its accepted schedule: input
+    /// lane busy time, the kernel, the folded output lane (when any),
+    /// and the overlap record `total_s` subtracts.
+    pub(crate) fn charge_pipelined(
+        &mut self,
+        streams: &[u64],
+        out_row_bytes: u64,
+        exec_s: f64,
+        sched: &PipeSchedule,
+    ) {
+        let n = self.machine.n_dpus() as u64;
+        self.machine.charge_h2p(sched.busy_in_s, streams.iter().sum::<u64>() * n);
+        self.machine.charge_kernel(exec_s);
+        if out_row_bytes > 0 {
+            self.machine.charge_p2h(sched.busy_out_s, n * out_row_bytes);
+        }
+        self.machine.charge_overlap(sched.saved_s, sched.chunks as u64);
+        self.engine.stats.pipelined_launches += 1;
+    }
+
+    /// Clear `src` links pointing at a freed array id, so a later array
+    /// registered under the same id — a new data generation — can never
+    /// have its deferred scatter charge folded into a launch that
+    /// consumed the old bytes (the sibling of [`Self::detach_dependents`]
+    /// for input links).
+    pub(crate) fn detach_src_links(&mut self, id: &str) {
+        for n in self.engine.pending.values_mut() {
+            if n.src.as_deref() == Some(id) {
+                n.src = None;
+            }
+        }
+    }
+
+    /// Charge one deferred scatter monolithically (the non-overlapped
+    /// flush path): exactly what `push_rows_with` would have charged at
+    /// scatter time.
+    pub(crate) fn flush_own_xfer(&mut self, id: &str) {
+        if let Some(row_bytes) = self.engine.pending_xfers.remove(id) {
+            self.charge_xfer_rows(row_bytes);
+        }
+    }
+
+    /// Flush every remaining deferred scatter charge (deterministic id
+    /// order).
+    pub(crate) fn flush_all_xfers(&mut self) {
+        let ids: Vec<String> = self.engine.pending_xfers.keys().cloned().collect();
+        for id in ids {
+            self.flush_own_xfer(&id);
+        }
+    }
+
+    pub(crate) fn charge_xfer_rows(&mut self, row_bytes: u64) {
+        let n = self.machine.n_dpus();
+        let t = crate::pim::xfer::transfer_seconds(
+            &self.machine.cfg,
+            XferKind::Parallel,
+            n,
+            row_bytes,
+        );
+        self.machine.charge_h2p(t, n as u64 * row_bytes);
+    }
+
+    pub(crate) fn charge_xfer_streams(&mut self, streams: &[u64]) {
+        for &row_bytes in streams {
+            self.charge_xfer_rows(row_bytes);
+        }
+    }
+
+    /// Remove and return the deferred input-scatter charges feeding
+    /// `id`, resolving one lazy-zip level (a zipped source contributes
+    /// both constituents' streams).  Empty when nothing was deferred.
+    pub(crate) fn take_input_xfers(&mut self, id: &str) -> Vec<u64> {
+        let mut ids = vec![id.to_string()];
+        if let Ok(meta) = self.management.lookup(id) {
+            if let Layout::LazyZip { a, b } = &meta.layout {
+                ids = vec![a.clone(), b.clone()];
+            }
+        }
+        ids.iter().filter_map(|i| self.engine.pending_xfers.remove(i)).collect()
     }
 
     /// Clear `upstream` links pointing at a node being removed, so a

@@ -37,6 +37,13 @@ pub enum Error {
     /// Handle/iterator misuse (wrong transformation type, arity, ...).
     Handle(String),
 
+    /// Invalid runtime configuration (backend/thread/pipeline selection
+    /// via CLI flags or `SIMPLEPIM_*` environment variables).  Always
+    /// carries the offending value: the execution strategies are
+    /// parity-identical by design, so a silently corrected typo would
+    /// run the wrong path with everything green.
+    Config(String),
+
     /// Anything else.
     Msg(String),
 }
@@ -53,6 +60,7 @@ impl fmt::Display for Error {
             Error::Capacity(e) => write!(f, "capacity: {e}"),
             Error::Artifact(e) => write!(f, "artifact: {e}"),
             Error::Handle(e) => write!(f, "handle: {e}"),
+            Error::Config(e) => write!(f, "config: {e}"),
             Error::Msg(e) => write!(f, "{e}"),
         }
     }
@@ -97,6 +105,7 @@ mod tests {
     fn display_prefixes_match_variant() {
         assert_eq!(Error::UnknownArray("t".into()).to_string(), "unknown array id: t");
         assert_eq!(Error::Alignment("bad".into()).to_string(), "alignment: bad");
+        assert_eq!(Error::Config("bad knob".into()).to_string(), "config: bad knob");
         assert_eq!(Error::msg("plain").to_string(), "plain");
     }
 

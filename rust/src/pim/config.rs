@@ -55,6 +55,13 @@ pub struct PimConfig {
     pub host_threads: usize,
     /// Host CPU: sustained merge throughput per thread (elements/s).
     pub host_merge_rate: f64,
+    /// Pipelined transfer engine (DESIGN.md §12): nominal per-DPU chunk
+    /// size for double-buffered chunked scatter/gather.
+    pub pipeline_chunk_bytes: u64,
+    /// Upper bound on chunks per pipelined launch.
+    pub pipeline_max_chunks: usize,
+    /// Staging buffers per transfer direction (2 = double buffering).
+    pub pipeline_in_flight: usize,
 }
 
 impl PimConfig {
@@ -87,6 +94,12 @@ impl PimConfig {
             launch_latency_s: 0.25e-3,
             host_threads: 32,
             host_merge_rate: 400e6,
+            // Pipelined transfers: 64 KB chunks amortize the per-command
+            // latency (20 µs ≈ 0.3% of a 64 KB rank push) while keeping
+            // the double-buffered MRAM staging region small.
+            pipeline_chunk_bytes: 64 * 1024,
+            pipeline_max_chunks: 64,
+            pipeline_in_flight: 2,
         }
     }
 

@@ -22,4 +22,5 @@ pub mod xfer;
 pub use config::PimConfig;
 pub use device::{PimMachine, Timeline};
 pub use isa::{slots, InstrMix, Op};
+pub use pipeline::{ChunkPlan, PipeSchedule, PipelineMode};
 pub use xfer::XferKind;

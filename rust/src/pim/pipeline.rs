@@ -1,18 +1,45 @@
-//! The DPU's 11-stage fine-grained multithreaded pipeline model.
+//! Two pipelines live here.
 //!
+//! **The DPU's 11-stage fine-grained multithreaded pipeline model.**
 //! The UPMEM DPU interleaves tasklets in a "revolver" scheme: a given
 //! tasklet may have at most one instruction in flight, so it can issue at
 //! most once every `pipeline_depth` (11) cycles.  With `T` tasklets the
 //! core's issue throughput is `min(T, 11) / 11` instructions per cycle —
 //! at least 11 tasklets keep the pipeline full (paper §2, [26, 53]).
-//!
 //! This single mechanism produces the paper's Fig. 11 behaviour: when the
 //! thread-private reduction variant must drop from 12 to 8/4/2 active
 //! tasklets (WRAM pressure), execution time grows inversely with the
 //! issue rate — "the reduction in the number of active threads causes a
 //! linear increase of the execution time".
+//!
+//! **The pipelined transfer engine's chunk scheduler (DESIGN.md §12).**
+//! Real UPMEM ranks can overlap host↔PIM transfers of one buffer region
+//! with kernel execution over another, but the monolithic request path
+//! serializes scatter-all → run-all → gather-all.  The types below split
+//! per-DPU rows into fixed-size chunks and model a three-lane,
+//! double-buffered software pipeline — chunk `k+1` scatter and chunk
+//! `k−1` gather run concurrently with the kernel execution of chunk `k`
+//! — so overlapped phases are charged as `max(xfer, exec)` per chunk
+//! instead of their sum:
+//!
+//! * [`ChunkPlan`] — logical row spans for the *functional* chunked
+//!   execution (`ExecBackend::launch_pipelined`) and the chunked
+//!   scatter/gather byte staging ([`byte_spans`]);
+//! * [`schedule`] — the *cost model*: searches candidate chunk counts
+//!   (1 = monolithic is always a candidate, so a pipelined launch can
+//!   never model slower than the monolithic one), simulates the
+//!   in/exec/out lanes under the configured in-flight window
+//!   ([`makespan`]), and reports the critical path plus the seconds
+//!   saved by overlap;
+//! * [`PipelineMode`] — the `--pipeline {off,on,auto}` /
+//!   `SIMPLEPIM_PIPELINE` switch: `on` pipelines every structurally
+//!   eligible launch, `auto` lets the planner restructure only when the
+//!   estimated win clears a latency-scaled threshold.
+
+use crate::error::{Error, Result};
 
 use super::config::PimConfig;
+use super::xfer::{transfer_seconds, XferKind};
 
 /// Issue throughput in instructions/cycle for `tasklets` active threads.
 pub fn issue_rate(cfg: &PimConfig, tasklets: u32) -> f64 {
@@ -33,6 +60,286 @@ pub fn cycles(cfg: &PimConfig, slots: f64, tasklets: u32) -> f64 {
 /// Seconds to retire `slots` issue slots with `tasklets` active threads.
 pub fn seconds(cfg: &PimConfig, slots: f64, tasklets: u32) -> f64 {
     cycles(cfg, slots, tasklets) / cfg.freq_hz
+}
+
+// ---------------------------------------------------------------------
+// Pipelined transfer engine: chunk plans, the double-buffered lane
+// simulation, and the chunk-count cost model.
+// ---------------------------------------------------------------------
+
+/// Whether (and how) the coordinator pipelines launches
+/// (CLI: `--pipeline`, env: `SIMPLEPIM_PIPELINE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PipelineMode {
+    /// Monolithic scatter-all → run-all → gather-all (the seed's
+    /// behavior, and the default).
+    Off,
+    /// Pipeline every structurally eligible launch.  The chunk-count
+    /// search always includes the monolithic candidate, so `on` never
+    /// models slower than `off`.
+    On,
+    /// The planner decides per node: pipeline only when the cost
+    /// estimate predicts a win above a latency-scaled threshold.
+    Auto,
+}
+
+impl PipelineMode {
+    pub fn parse(s: &str) -> Result<PipelineMode> {
+        match s {
+            "off" => Ok(PipelineMode::Off),
+            "on" => Ok(PipelineMode::On),
+            "auto" => Ok(PipelineMode::Auto),
+            other => Err(Error::Config(format!(
+                "invalid pipeline mode `{other}` (expected off, on, or auto)"
+            ))),
+        }
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            PipelineMode::Off => "off",
+            PipelineMode::On => "on",
+            PipelineMode::Auto => "auto",
+        }
+    }
+}
+
+impl std::fmt::Display for PipelineMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Process-default pipeline mode: `SIMPLEPIM_PIPELINE` (off | on |
+/// auto) when set, else `Off`.  Invalid values are a hard error for the
+/// same reason `backend::from_env` makes them one: a typo that silently
+/// fell back would run the monolithic path with everything green and
+/// zero pipeline coverage.
+pub fn mode_from_env() -> PipelineMode {
+    match std::env::var("SIMPLEPIM_PIPELINE") {
+        Ok(s) => match PipelineMode::parse(&s) {
+            Ok(m) => m,
+            Err(e) => panic!("invalid SIMPLEPIM_PIPELINE: {e}"),
+        },
+        Err(_) => PipelineMode::Off,
+    }
+}
+
+/// Logical row spans of one chunked launch: each `(lo, hi)` is a
+/// half-open range of per-DPU element rows, in execution order.  Spans
+/// partition `0..rows`; DPUs holding fewer rows clamp each span to
+/// their own length (ragged distributions).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkPlan {
+    /// Largest per-DPU logical row count the plan covers.
+    pub rows: u64,
+    /// Half-open row spans, ascending and contiguous.
+    pub spans: Vec<(u64, u64)>,
+}
+
+impl ChunkPlan {
+    /// One chunk covering everything (the degenerate plan).
+    pub fn monolithic(rows: u64) -> ChunkPlan {
+        ChunkPlan { rows, spans: vec![(0, rows)] }
+    }
+
+    /// Split `rows` into at most `chunks` contiguous, near-equal spans.
+    pub fn split(rows: u64, chunks: usize) -> ChunkPlan {
+        let c = (chunks as u64).clamp(1, rows.max(1));
+        if c <= 1 {
+            return ChunkPlan::monolithic(rows);
+        }
+        let base = rows / c;
+        let extra = rows % c;
+        let mut spans = Vec::with_capacity(c as usize);
+        let mut lo = 0u64;
+        for i in 0..c {
+            let hi = lo + base + u64::from(i < extra);
+            spans.push((lo, hi));
+            lo = hi;
+        }
+        debug_assert_eq!(lo, rows);
+        ChunkPlan { rows, spans }
+    }
+
+    /// Chunk `rows` logical elements of `row_bytes` bytes each using the
+    /// config's nominal chunk size.
+    pub fn for_rows(cfg: &PimConfig, rows: u64, row_bytes: u64) -> ChunkPlan {
+        ChunkPlan::split(rows, chunk_count(cfg, rows.saturating_mul(row_bytes)))
+    }
+
+    pub fn chunks(&self) -> usize {
+        self.spans.len()
+    }
+}
+
+/// How many chunks the config's nominal chunk size suggests for
+/// `total_bytes` of per-DPU payload.
+pub fn chunk_count(cfg: &PimConfig, total_bytes: u64) -> usize {
+    ((total_bytes / cfg.pipeline_chunk_bytes.max(1)) as usize)
+        .clamp(1, cfg.pipeline_max_chunks.max(1))
+}
+
+/// Byte spans of one per-DPU row split into at most `chunks`
+/// near-equal, `quantum`-aligned pieces (the last span absorbs the
+/// tail, so the spans always partition `0..row_len` exactly — chunk
+/// boundaries never split an element when `quantum` is a multiple of
+/// the element size).
+pub fn byte_spans(row_len: u64, chunks: usize, quantum: u64) -> Vec<(u64, u64)> {
+    let q = quantum.max(1);
+    if chunks <= 1 || row_len <= q {
+        return vec![(0, row_len)];
+    }
+    let units = row_len.div_ceil(q);
+    let c = (chunks as u64).min(units);
+    let base = units / c;
+    let extra = units % c;
+    let mut spans = Vec::with_capacity(c as usize);
+    let mut lo = 0u64;
+    for i in 0..c {
+        let u = base + u64::from(i < extra);
+        let hi = (lo + u * q).min(row_len);
+        spans.push((lo, hi));
+        lo = hi;
+    }
+    debug_assert_eq!(lo, row_len);
+    spans
+}
+
+/// Modeled timing of one pipelined launch at its chosen chunk count.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PipeSchedule {
+    /// Chunk count the cost model settled on (1 = monolithic).
+    pub chunks: usize,
+    /// Input-lane busy seconds (all per-chunk scatter commands).
+    pub busy_in_s: f64,
+    /// Execution-lane busy seconds (the launch's kernel time).
+    pub busy_exec_s: f64,
+    /// Output-lane busy seconds (all per-chunk gather commands).
+    pub busy_out_s: f64,
+    /// Critical-path seconds of the overlapped schedule.
+    pub critical_s: f64,
+    /// Busy-sum minus critical path: the seconds hidden by overlap.
+    pub saved_s: f64,
+}
+
+/// Makespan of a three-lane chunk pipeline with `window` staging
+/// buffers per direction (2 = double buffering).  `s`/`k`/`g` are the
+/// per-chunk input-transfer / execution / output-transfer times; chunk
+/// `i` may start its input transfer only once buffer `i − window` has
+/// been drained by execution, and execution of chunk `i` needs output
+/// buffer `i − window` flushed — the drain/flush semantics of a real
+/// double-buffered MRAM staging region.
+pub fn makespan(s: &[f64], k: &[f64], g: &[f64], window: usize) -> f64 {
+    let c = k.len();
+    assert!(c > 0 && s.len() == c && g.len() == c);
+    let w = window.max(1);
+    let mut in_done = vec![0.0f64; c];
+    let mut ex_done = vec![0.0f64; c];
+    let mut out_done = vec![0.0f64; c];
+    for i in 0..c {
+        let prev_in = if i > 0 { in_done[i - 1] } else { 0.0 };
+        let in_buf_free = if i >= w { ex_done[i - w] } else { 0.0 };
+        in_done[i] = prev_in.max(in_buf_free) + s[i];
+        let prev_ex = if i > 0 { ex_done[i - 1] } else { 0.0 };
+        let out_buf_free = if i >= w { out_done[i - w] } else { 0.0 };
+        ex_done[i] = prev_ex.max(in_done[i]).max(out_buf_free) + k[i];
+        let prev_out = if i > 0 { out_done[i - 1] } else { 0.0 };
+        out_done[i] = prev_out.max(ex_done[i]) + g[i];
+    }
+    out_done[c - 1]
+}
+
+/// Split `total` bytes into `chunks` near-equal, `align`-aligned parts
+/// (byte sum preserved exactly; trailing chunks may be empty when the
+/// payload is smaller than the chunk grid).
+fn split_aligned(total: u64, chunks: usize, align: u64) -> Vec<u64> {
+    if chunks <= 1 {
+        return vec![total];
+    }
+    let a = align.max(1);
+    let units = total.div_ceil(a);
+    let base = units / chunks as u64;
+    let extra = units % chunks as u64;
+    let mut out = Vec::with_capacity(chunks);
+    let mut used = 0u64;
+    for i in 0..chunks as u64 {
+        let u = base + u64::from(i < extra);
+        let b = (u * a).min(total - used);
+        out.push(b);
+        used += b;
+    }
+    debug_assert_eq!(used, total);
+    out
+}
+
+/// Evaluate one candidate chunk count.
+fn eval_candidate(
+    cfg: &PimConfig,
+    n_dpus: usize,
+    in_streams: &[u64],
+    out_row_bytes: u64,
+    exec_s: f64,
+    chunks: usize,
+) -> PipeSchedule {
+    let splits_in: Vec<Vec<u64>> =
+        in_streams.iter().map(|&b| split_aligned(b, chunks, cfg.dma_align)).collect();
+    let split_out = split_aligned(out_row_bytes, chunks, cfg.dma_align);
+    let mut s = vec![0.0f64; chunks];
+    let mut g = vec![0.0f64; chunks];
+    for i in 0..chunks {
+        for st in &splits_in {
+            s[i] += transfer_seconds(cfg, XferKind::Parallel, n_dpus, st[i]);
+        }
+        g[i] = transfer_seconds(cfg, XferKind::Parallel, n_dpus, split_out[i]);
+    }
+    let k = vec![exec_s / chunks as f64; chunks];
+    let critical = makespan(&s, &k, &g, cfg.pipeline_in_flight);
+    let busy_in: f64 = s.iter().sum();
+    let busy_out: f64 = g.iter().sum();
+    PipeSchedule {
+        chunks,
+        busy_in_s: busy_in,
+        busy_exec_s: exec_s,
+        busy_out_s: busy_out,
+        critical_s: critical,
+        saved_s: (busy_in + exec_s + busy_out - critical).max(0.0),
+    }
+}
+
+/// Cost model of one pipelined launch: choose the chunk count (from
+/// `{1, 2, 4, ...}` up to the config cap) minimizing the overlapped
+/// critical path.  `in_streams` holds the per-DPU row bytes of each
+/// deferred input scatter (one parallel command per stream per chunk),
+/// `out_row_bytes` the per-DPU bytes of a folded-in output gather (0 =
+/// none), `exec_s` the launch's total kernel seconds.
+///
+/// The monolithic candidate (`chunks == 1`, whose critical path is
+/// exactly the sum the monolithic request path charges) is always in
+/// the search, so the returned schedule never models slower than not
+/// pipelining at all.
+pub fn schedule(
+    cfg: &PimConfig,
+    n_dpus: usize,
+    in_streams: &[u64],
+    out_row_bytes: u64,
+    exec_s: f64,
+) -> PipeSchedule {
+    let total: u64 = in_streams.iter().sum::<u64>() + out_row_bytes;
+    let max_c = chunk_count(cfg, total);
+    let mut best = eval_candidate(cfg, n_dpus, in_streams, out_row_bytes, exec_s, 1);
+    let mut c = 2usize;
+    while c <= max_c {
+        let cand = eval_candidate(cfg, n_dpus, in_streams, out_row_bytes, exec_s, c);
+        if cand.critical_s < best.critical_s {
+            best = cand;
+        }
+        if c == max_c {
+            break;
+        }
+        c = (c * 2).min(max_c);
+    }
+    best
 }
 
 #[cfg(test)]
@@ -80,5 +387,115 @@ mod tests {
         let c = cfg();
         let s = seconds(&c, c.freq_hz, 12); // freq_hz slots at full rate
         assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    // --- chunk scheduler ---
+
+    #[test]
+    fn pipeline_mode_parses() {
+        assert_eq!(PipelineMode::parse("off").unwrap(), PipelineMode::Off);
+        assert_eq!(PipelineMode::parse("on").unwrap(), PipelineMode::On);
+        assert_eq!(PipelineMode::parse("auto").unwrap(), PipelineMode::Auto);
+        assert!(PipelineMode::parse("fast").is_err());
+        assert_eq!(PipelineMode::Auto.to_string(), "auto");
+    }
+
+    #[test]
+    fn chunk_plan_spans_partition_rows() {
+        for rows in [0u64, 1, 2, 7, 100, 4097] {
+            for chunks in [1usize, 2, 3, 8, 200] {
+                let p = ChunkPlan::split(rows, chunks);
+                let mut next = 0;
+                for &(lo, hi) in &p.spans {
+                    assert_eq!(lo, next, "contiguous (rows={rows}, chunks={chunks})");
+                    assert!(hi >= lo);
+                    next = hi;
+                }
+                assert_eq!(next, rows, "coverage (rows={rows}, chunks={chunks})");
+                assert!(p.chunks() <= chunks.max(1));
+                if rows > 0 {
+                    assert!(p.spans.iter().all(|&(lo, hi)| hi > lo), "no empty spans");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn byte_spans_partition_and_respect_quantum() {
+        for row_len in [0u64, 8, 24, 100, 131_072, 131_076] {
+            for chunks in [1usize, 2, 5, 13, 1000] {
+                for quantum in [8u64, 24, 40] {
+                    let spans = byte_spans(row_len, chunks, quantum);
+                    let mut next = 0;
+                    for (i, &(lo, hi)) in spans.iter().enumerate() {
+                        assert_eq!(lo, next);
+                        assert!(hi >= lo);
+                        // Interior boundaries sit on the quantum grid.
+                        if i + 1 < spans.len() {
+                            assert_eq!(hi % quantum, 0, "row_len={row_len} q={quantum}");
+                        }
+                        next = hi;
+                    }
+                    assert_eq!(next, row_len);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn makespan_single_chunk_is_serial_sum() {
+        let m = makespan(&[3.0], &[2.0], &[1.0], 2);
+        assert!((m - 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn makespan_overlaps_but_never_beats_busiest_lane() {
+        let s = [1.0; 8];
+        let k = [1.0; 8];
+        let g = [1.0; 8];
+        let m = makespan(&s, &k, &g, 2);
+        // Serial would be 24; a perfect pipeline drains in ~10.
+        assert!(m < 24.0, "overlap happens: {m}");
+        assert!(m >= 8.0, "cannot beat a fully busy lane: {m}");
+        // A single in-flight buffer pipelines less than two.
+        assert!(makespan(&s, &k, &g, 1) >= m);
+    }
+
+    #[test]
+    fn schedule_monolithic_candidate_floors_the_search() {
+        let c = cfg();
+        // Tiny payload: per-chunk latency can't amortize, C must be 1.
+        let tiny = schedule(&c, 64, &[64], 64, 1e-6);
+        assert_eq!(tiny.chunks, 1);
+        assert!(tiny.saved_s.abs() < 1e-15);
+
+        // Transfer-bound launch with a real kernel: pipelining wins.
+        let big = schedule(&c, 64, &[1 << 20, 1 << 20], 1 << 20, 5e-3);
+        assert!(big.chunks > 1, "expected chunking, got {}", big.chunks);
+        assert!(big.saved_s > 0.0);
+        // Never slower than the monolithic serialization.
+        let mono = transfer_seconds(&c, XferKind::Parallel, 64, 1 << 20) * 2.0
+            + 5e-3
+            + transfer_seconds(&c, XferKind::Parallel, 64, 1 << 20);
+        assert!(big.critical_s <= mono + 1e-12, "{} vs {mono}", big.critical_s);
+        // Lanes carry the full busy time; `saved` accounts the overlap.
+        assert!(
+            (big.busy_in_s + big.busy_exec_s + big.busy_out_s - big.critical_s - big.saved_s)
+                .abs()
+                < 1e-12
+        );
+    }
+
+    #[test]
+    fn schedule_handles_empty_lanes() {
+        let c = cfg();
+        let none = schedule(&c, 64, &[], 0, 1e-3);
+        assert_eq!(none.chunks, 1);
+        assert_eq!(none.busy_in_s, 0.0);
+        assert_eq!(none.busy_out_s, 0.0);
+        // Exec + one lane only (scatter∥exec, no gather) still overlaps.
+        let in_only = schedule(&c, 64, &[4 << 20], 0, 20e-3);
+        assert!(in_only.chunks > 1);
+        assert!(in_only.saved_s > 0.0);
     }
 }

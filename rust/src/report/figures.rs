@@ -5,7 +5,7 @@
 use crate::backend::{self, BackendKind};
 use crate::cli::Args;
 use crate::error::{Error, Result};
-use crate::pim::PimConfig;
+use crate::pim::{PimConfig, PipelineMode};
 use crate::timing::{self, DmaPolicy, OptFlags, ReduceVariant};
 use crate::util::prng;
 use crate::workloads::{self, histogram, Impl};
@@ -188,20 +188,39 @@ fn cli_system(cfg: PimConfig, host_only: bool) -> PimSystem {
 
 /// Apply the shared execution flags: `--seed` installs the process
 /// default data-generation seed; `--backend`/`--threads` select the
-/// execution backend (`--threads` alone implies `--backend parallel`).
+/// execution backend (`--threads` alone implies `--backend parallel`);
+/// `--pipeline {off,on,auto}` selects the pipelined transfer engine.
+/// A worker count of 0 (or garbage) is an explicit config error, never
+/// a silent single-thread fallback.
 fn apply_exec_flags(sys: &mut PimSystem, args: &Args) -> Result<()> {
     if let Some(seed) = args.flag_u64("seed")? {
         prng::set_default_seed(seed);
     }
-    let threads = args.flag_usize("threads", 0)?;
+    let threads = match args.flag("threads") {
+        None => None,
+        Some(v) => match v.parse::<usize>() {
+            Ok(t) if t >= 1 => Some(t),
+            _ => {
+                return Err(Error::Config(format!(
+                    "--threads expects a positive integer, got `{v}`"
+                )))
+            }
+        },
+    };
     match args.flag("backend") {
         Some(s) => {
             let kind = BackendKind::parse(s)?;
-            let t = if threads > 0 { threads } else { backend::default_threads() };
-            sys.set_backend(backend::make(kind, t));
+            let t = threads.unwrap_or_else(backend::default_threads);
+            sys.set_backend(backend::make(kind, t)?);
         }
-        None if threads > 0 => sys.set_backend(backend::make(BackendKind::Parallel, threads)),
-        None => {}
+        None => {
+            if let Some(t) = threads {
+                sys.set_backend(backend::make(BackendKind::Parallel, t)?);
+            }
+        }
+    }
+    if let Some(p) = args.flag("pipeline") {
+        sys.set_pipeline(PipelineMode::parse(p)?)?;
     }
     Ok(())
 }
@@ -222,10 +241,11 @@ pub fn cmd_run(args: &Args) -> Result<()> {
     apply_exec_flags(&mut sys, args)?;
     let elems = args.flag_usize("elems", 0)?;
     println!(
-        "backend: {} ({} thread{})",
+        "backend: {} ({} thread{}) | pipeline: {}",
         sys.backend_kind(),
         sys.backend_threads(),
-        if sys.backend_threads() == 1 { "" } else { "s" }
+        if sys.backend_threads() == 1 { "" } else { "s" },
+        sys.pipeline_mode(),
     );
     run_workload(&mut sys, &name, elems)?;
     if args.has("explain") {
@@ -237,6 +257,14 @@ pub fn cmd_run(args: &Args) -> Result<()> {
     println!("  kernel    : {:>10.3} ms ({} launches)", t.kernel_s * 1e3, t.launches);
     println!("  pim->host : {:>10.3} ms ({} B)", t.pim_to_host_s * 1e3, t.bytes_p2h);
     println!("  host merge: {:>10.3} ms", t.host_merge_s * 1e3);
+    if t.pipelined_launches > 0 {
+        println!(
+            "  pipeline  : {:>10.3} ms hidden by overlap ({} pipelined launches, {} chunks)",
+            t.overlap_saved_s * 1e3,
+            t.pipelined_launches,
+            t.pipeline_chunks
+        );
+    }
     println!("  total     : {:>10.3} ms", t.total_s() * 1e3);
     let stats = sys.exec_stats();
     if stats.calls > 0 {

@@ -1,0 +1,249 @@
+//! CI perf-regression gate over the hotpath bench's JSON output.
+//!
+//! `simplepim bench-gate` compares a fresh `BENCH_hotpath.json` (the
+//! quick-mode run CI produces) against the committed
+//! `BENCH_baseline.json`, key by key:
+//!
+//! * **modeled totals are blocking** — the analytic `Timeline` is
+//!   deterministic and machine-independent, so any workload whose
+//!   modeled total regresses beyond the tolerance (default 10%) fails
+//!   the gate, as does a baseline key missing from the current run
+//!   (silent coverage loss);
+//! * **wall clock is reported, never blocking** — CI runners are far
+//!   too noisy to gate on.
+//!
+//! Refresh the baseline with one command after an intentional change:
+//!
+//! ```text
+//! SIMPLEPIM_BENCH_QUICK=1 SIMPLEPIM_BENCH_OUT=BENCH_baseline.json cargo bench --bench hotpath
+//! ```
+//!
+//! A baseline marked `"bootstrap": true` (or with no result rows)
+//! gates nothing and prints the refresh command — the escape hatch for
+//! the first commit from an environment without a Rust toolchain.
+
+use crate::cli::Args;
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// Default blocking tolerance on modeled totals (fractional).
+pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+struct Row {
+    key: String,
+    modeled: f64,
+    wall: f64,
+}
+
+fn rows(doc: &Json) -> Result<Vec<Row>> {
+    let schema = doc.field("schema")?.as_str()?;
+    if schema != "hotpath-v1" {
+        return Err(Error::Json(format!("unsupported bench schema `{schema}`")));
+    }
+    let mut out = Vec::new();
+    for r in doc.field("results")?.as_arr()? {
+        out.push(Row {
+            key: r.field("key")?.as_str()?.to_string(),
+            modeled: r.field("modeled_total_s")?.as_f64()?,
+            wall: r.field("wall_mean_s")?.as_f64()?,
+        });
+    }
+    Ok(out)
+}
+
+/// Outcome of one gate evaluation.
+#[derive(Debug)]
+pub struct Gate {
+    /// Keys present in both runs and compared.
+    pub checked: usize,
+    /// Modeled-total regressions beyond tolerance (blocking).
+    pub regressions: Vec<String>,
+    /// Baseline keys absent from the current run (blocking).
+    pub missing: Vec<String>,
+    /// Wall-clock slowdowns (informational only).
+    pub wall_notes: Vec<String>,
+    /// Baseline was a bootstrap placeholder: nothing gated.
+    pub bootstrap: bool,
+}
+
+impl Gate {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty() && self.missing.is_empty()
+    }
+}
+
+/// Pure comparison of two bench documents (exposed for tests).
+pub fn evaluate(baseline: &str, current: &str, tolerance: f64) -> Result<Gate> {
+    let bdoc = Json::parse(baseline)?;
+    let bootstrap = matches!(bdoc.get("bootstrap"), Some(Json::Bool(true)));
+    let brows = rows(&bdoc)?;
+    let mut gate = Gate {
+        checked: 0,
+        regressions: Vec::new(),
+        missing: Vec::new(),
+        wall_notes: Vec::new(),
+        bootstrap: bootstrap || brows.is_empty(),
+    };
+    if gate.bootstrap {
+        return Ok(gate);
+    }
+    let crows = rows(&Json::parse(current)?)?;
+    for b in &brows {
+        match crows.iter().find(|c| c.key == b.key) {
+            None => gate.missing.push(b.key.clone()),
+            Some(c) => {
+                gate.checked += 1;
+                if b.modeled > 0.0 && c.modeled > b.modeled * (1.0 + tolerance) {
+                    gate.regressions.push(format!(
+                        "{}: modeled {:.6} s -> {:.6} s (+{:.1}%)",
+                        b.key,
+                        b.modeled,
+                        c.modeled,
+                        (c.modeled / b.modeled - 1.0) * 100.0
+                    ));
+                }
+                if b.wall > 0.0 && c.wall > b.wall * (1.0 + tolerance) {
+                    gate.wall_notes.push(format!(
+                        "{}: wall {:.4} s -> {:.4} s (+{:.0}%, non-blocking)",
+                        b.key,
+                        b.wall,
+                        c.wall,
+                        (c.wall / b.wall - 1.0) * 100.0
+                    ));
+                }
+            }
+        }
+    }
+    Ok(gate)
+}
+
+/// `bench-gate` subcommand.
+pub fn cmd_bench_gate(args: &Args) -> Result<()> {
+    let bpath = args.flag("baseline").unwrap_or("BENCH_baseline.json");
+    let cpath = args.flag("current").unwrap_or("BENCH_hotpath.json");
+    let tol = match args.flag("tolerance") {
+        None => DEFAULT_TOLERANCE,
+        Some(v) => v
+            .parse::<f64>()
+            .map_err(|_| Error::msg(format!("--tolerance expects a fraction, got `{v}`")))?,
+    };
+    let baseline = std::fs::read_to_string(bpath)?;
+    let current = std::fs::read_to_string(cpath)?;
+    let gate = evaluate(&baseline, &current, tol)?;
+    let refresh =
+        format!("SIMPLEPIM_BENCH_QUICK=1 SIMPLEPIM_BENCH_OUT={bpath} cargo bench --bench hotpath");
+    if gate.bootstrap {
+        println!("bench-gate: baseline `{bpath}` is a bootstrap placeholder — nothing gated.");
+        println!("establish it with:\n  {refresh}");
+        return Ok(());
+    }
+    for w in &gate.wall_notes {
+        println!("note: {w}");
+    }
+    if !gate.passed() {
+        for m in &gate.missing {
+            println!("FAIL missing key in current run: {m}");
+        }
+        for r in &gate.regressions {
+            println!("FAIL {r}");
+        }
+        return Err(Error::msg(format!(
+            "bench-gate: {} modeled regression(s), {} missing key(s) at {:.0}% tolerance \
+             (intentional change? refresh with: {refresh})",
+            gate.regressions.len(),
+            gate.missing.len(),
+            tol * 100.0
+        )));
+    }
+    println!(
+        "bench-gate OK: {} keys within {:.0}% of `{bpath}` (refresh: {refresh})",
+        gate.checked,
+        tol * 100.0
+    );
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn doc(rows: &[(&str, f64, f64)]) -> String {
+        let mut s = String::from("{\"schema\": \"hotpath-v1\", \"results\": [");
+        for (i, (k, modeled, wall)) in rows.iter().enumerate() {
+            s.push_str(&format!(
+                "{{\"key\": \"{k}\", \"modeled_total_s\": {modeled}, \"wall_mean_s\": {wall}}}{}",
+                if i + 1 == rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("]}");
+        s
+    }
+
+    #[test]
+    fn identical_runs_pass() {
+        let b = doc(&[("vecadd/seq/t1", 0.010, 0.5), ("histogram/seq/t1", 0.020, 0.7)]);
+        let g = evaluate(&b, &b, DEFAULT_TOLERANCE).unwrap();
+        assert!(g.passed());
+        assert_eq!(g.checked, 2);
+        assert!(!g.bootstrap);
+    }
+
+    #[test]
+    fn synthetic_2x_slowdown_fails() {
+        // The acceptance demonstration: inject a 2x modeled slowdown
+        // into one workload and the gate must go red.
+        let b = doc(&[("vecadd/seq/t1", 0.010, 0.5), ("histogram/seq/t1", 0.020, 0.7)]);
+        let c = doc(&[("vecadd/seq/t1", 0.020, 0.5), ("histogram/seq/t1", 0.020, 0.7)]);
+        let g = evaluate(&b, &c, DEFAULT_TOLERANCE).unwrap();
+        assert!(!g.passed());
+        assert_eq!(g.regressions.len(), 1);
+        assert!(g.regressions[0].contains("vecadd/seq/t1"), "{:?}", g.regressions);
+        assert!(g.regressions[0].contains("+100.0%"), "{:?}", g.regressions);
+    }
+
+    #[test]
+    fn regressions_within_tolerance_pass() {
+        let b = doc(&[("vecadd/seq/t1", 0.010, 0.5)]);
+        let c = doc(&[("vecadd/seq/t1", 0.0109, 0.5)]);
+        assert!(evaluate(&b, &c, DEFAULT_TOLERANCE).unwrap().passed());
+        // ...and improvements obviously pass.
+        let faster = doc(&[("vecadd/seq/t1", 0.005, 0.5)]);
+        assert!(evaluate(&b, &faster, DEFAULT_TOLERANCE).unwrap().passed());
+    }
+
+    #[test]
+    fn wall_clock_slowdown_is_non_blocking() {
+        let b = doc(&[("vecadd/seq/t1", 0.010, 0.5)]);
+        let c = doc(&[("vecadd/seq/t1", 0.010, 5.0)]); // 10x wall, same model
+        let g = evaluate(&b, &c, DEFAULT_TOLERANCE).unwrap();
+        assert!(g.passed(), "wall noise must never block");
+        assert_eq!(g.wall_notes.len(), 1);
+    }
+
+    #[test]
+    fn missing_key_blocks() {
+        let b = doc(&[("vecadd/seq/t1", 0.010, 0.5), ("kmeans/seq/t1", 0.030, 0.9)]);
+        let c = doc(&[("vecadd/seq/t1", 0.010, 0.5)]);
+        let g = evaluate(&b, &c, DEFAULT_TOLERANCE).unwrap();
+        assert!(!g.passed());
+        assert_eq!(g.missing, vec!["kmeans/seq/t1".to_string()]);
+    }
+
+    #[test]
+    fn bootstrap_baseline_gates_nothing() {
+        let b = "{\"schema\": \"hotpath-v1\", \"bootstrap\": true, \"results\": []}";
+        let c = doc(&[("vecadd/seq/t1", 99.0, 9.0)]);
+        let g = evaluate(b, &c, DEFAULT_TOLERANCE).unwrap();
+        assert!(g.bootstrap);
+        assert!(g.passed());
+        // An empty baseline behaves the same even without the flag.
+        let empty = doc(&[]);
+        assert!(evaluate(&empty, &c, DEFAULT_TOLERANCE).unwrap().bootstrap);
+    }
+
+    #[test]
+    fn wrong_schema_is_an_error() {
+        let bad = "{\"schema\": \"hotpath-v2\", \"results\": []}";
+        assert!(evaluate(bad, bad, DEFAULT_TOLERANCE).is_err());
+    }
+}

@@ -2,6 +2,7 @@
 
 pub mod bench;
 pub mod figures;
+pub mod gate;
 pub mod loc;
 pub mod table;
 

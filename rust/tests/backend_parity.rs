@@ -1,12 +1,19 @@
-//! Backend parity suite: the execution backend is a *functional
-//! strategy* only, so every backend must produce bit-identical gather
-//! results and an identical modeled `Timeline` (exact f64 equality —
-//! the same charges in the same order) on every workload, including
-//! ragged (len < n_dpus) and empty-array edge cases.
+//! Backend × pipeline parity matrix: the execution backend is a
+//! *functional strategy* and the pipelined transfer engine a *timing
+//! restructuring*, so:
+//!
+//! * every backend must produce bit-identical gather results and an
+//!   identical modeled `Timeline` (exact f64 equality — the same
+//!   charges in the same order) within each pipeline mode;
+//! * every pipeline mode must produce bit-identical *results* to the
+//!   monolithic path, with a modeled total never worse than it;
+//!
+//! on every workload, including ragged (len < n_dpus) and empty-array
+//! edge cases.
 
 use simplepim::backend::{self, BackendKind};
 use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
-use simplepim::pim::{PimConfig, Timeline};
+use simplepim::pim::{PimConfig, PipelineMode, Timeline};
 use simplepim::util::prng::Prng;
 use simplepim::workloads::{fixed::ONE, golden, histogram, kmeans, linreg, logreg, reduction, vecadd};
 
@@ -19,26 +26,57 @@ const BACKENDS: [(BackendKind, usize); 4] = [
     (BackendKind::Parallel, 3),
 ];
 
+/// Off first: it is the baseline the pipelined modes must not regress.
+const MODES: [PipelineMode; 3] = [PipelineMode::Off, PipelineMode::On, PipelineMode::Auto];
+
 fn sys(kind: BackendKind, threads: usize, dpus: usize) -> PimSystem {
-    PimSystem::with_backend(PimConfig::tiny(dpus), None, backend::make(kind, threads))
+    PimSystem::with_backend(PimConfig::tiny(dpus), None, backend::make(kind, threads).unwrap())
 }
 
-/// Run `f` under every backend and assert results and timelines agree
-/// exactly with the sequential baseline.
+/// Run `f` under every backend × pipeline combination and assert:
+/// results agree bit-for-bit everywhere, timelines agree exactly
+/// across backends within a mode, and pipelined totals never exceed
+/// the monolithic total.
 fn assert_parity<F>(dpus: usize, label: &str, f: F)
 where
     F: Fn(&mut PimSystem) -> Vec<i32>,
 {
-    let mut baseline: Option<(Vec<i32>, Timeline)> = None;
-    for (kind, threads) in BACKENDS {
-        let mut s = sys(kind, threads, dpus);
-        let out = f(&mut s);
-        let t = s.timeline();
-        match &baseline {
-            None => baseline = Some((out, t)),
-            Some((bo, bt)) => {
-                assert_eq!(&out, bo, "{label}: bit-identical results ({kind} x{threads})");
-                assert_eq!(&t, bt, "{label}: identical modeled time ({kind} x{threads})");
+    let mut golden_out: Option<Vec<i32>> = None;
+    let mut off_total: Option<f64> = None;
+    for mode in MODES {
+        let mut mode_timeline: Option<Timeline> = None;
+        for (kind, threads) in BACKENDS {
+            let mut s = sys(kind, threads, dpus);
+            s.set_pipeline(mode).unwrap();
+            let out = f(&mut s);
+            let t = s.timeline();
+            match &golden_out {
+                None => golden_out = Some(out),
+                Some(bo) => assert_eq!(
+                    &out, bo,
+                    "{label}: bit-identical results ({kind} x{threads}, pipeline {mode})"
+                ),
+            }
+            match &mode_timeline {
+                None => mode_timeline = Some(t),
+                Some(bt) => assert_eq!(
+                    &t, bt,
+                    "{label}: identical modeled time ({kind} x{threads}, pipeline {mode})"
+                ),
+            }
+        }
+        let t = mode_timeline.expect("at least one backend ran");
+        let total = t.total_s();
+        match off_total {
+            None => off_total = Some(total),
+            Some(off) => {
+                assert!(
+                    total <= off + 1e-9,
+                    "{label}: pipelined ({mode}) total {total} must not exceed monolithic {off}"
+                );
+                // Bytes moved are mode-invariant: pipelining reshapes
+                // time, never traffic.
+                assert!(t.overlap_saved_s >= 0.0, "{label}: negative overlap ({mode})");
             }
         }
     }
@@ -162,16 +200,20 @@ fn extensions_and_collectives_parity() {
 
 #[test]
 fn mram_returns_to_zero_under_every_backend() {
-    for (kind, threads) in BACKENDS {
-        let mut s = sys(kind, threads, 5);
-        let x = Prng::new(18).vec_i32(9_999, -100, 100);
-        s.scatter("x", &x, 4).unwrap();
-        let map = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![2, 1]).unwrap();
-        s.array_map("x", "y", &map).unwrap();
-        s.run().unwrap();
-        s.free_array("x").unwrap();
-        s.free_array("y").unwrap();
-        assert_eq!(s.machine.mram_used(), 0, "{kind} x{threads}");
+    for mode in MODES {
+        for (kind, threads) in BACKENDS {
+            let mut s = sys(kind, threads, 5);
+            s.set_pipeline(mode).unwrap();
+            let x = Prng::new(18).vec_i32(9_999, -100, 100);
+            s.scatter("x", &x, 4).unwrap();
+            let map =
+                s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![2, 1]).unwrap();
+            s.array_map("x", "y", &map).unwrap();
+            s.run().unwrap();
+            s.free_array("x").unwrap();
+            s.free_array("y").unwrap();
+            assert_eq!(s.machine.mram_used(), 0, "{kind} x{threads} pipeline {mode}");
+        }
     }
 }
 

@@ -1,0 +1,369 @@
+//! Pipelined transfer engine suite (DESIGN.md §12).
+//!
+//! Three layers are pinned here:
+//!
+//! 1. **Chunked transfers** — property test that chunked scatter/gather
+//!    round-trips ragged, empty, and non-8-aligned element sizes
+//!    bit-identically to monolithic transfers, for chunk sizes of one
+//!    row, prime row counts, and the whole array.
+//! 2. **Chunked execution** — `launch_pipelined` matches `launch` on
+//!    every backend for every built-in kernel family.
+//! 3. **End-to-end modeling** — pipelined modeled totals never exceed
+//!    monolithic ones, the transfer-bound vecadd improves by >= 15%,
+//!    and `auto` leaves launches with nothing worth overlapping alone.
+
+use std::rc::Rc;
+
+use simplepim::backend::{self, BackendKind, ExecBackend};
+use simplepim::coordinator::exec::Inputs;
+use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
+use simplepim::pim::pipeline::{self, ChunkPlan};
+use simplepim::pim::{PimConfig, PimMachine, PipelineMode};
+use simplepim::util::{lcm, round_up};
+use simplepim::workloads::{histogram, vecadd};
+use simplepim::Error;
+
+// ---------------------------------------------------------------------
+// 1. Chunked scatter/gather round-trips.
+// ---------------------------------------------------------------------
+
+#[test]
+fn chunked_scatter_gather_roundtrips_like_monolithic() {
+    let dpus = 5;
+    let exec = backend::make(BackendKind::Seq, 1).unwrap();
+    // Element sizes: word, 12 B (non-8-aligned), 20 B (non-8-aligned).
+    for ts in [4u64, 12, 20] {
+        // Rows per full DPU; the last DPU is ragged, one DPU is empty.
+        for rows in [0u64, 1, 3, 7, 31, 100] {
+            let row_len = round_up(rows * ts, 8);
+            let live = |dpu: usize| -> u64 {
+                match dpu {
+                    2 => 0,                      // empty DPU
+                    4 => rows / 2 * ts,          // ragged DPU
+                    _ => rows * ts,
+                }
+            };
+            let fill = |dpu: usize, buf: &mut [u8]| {
+                let n = live(dpu) as usize;
+                for (i, x) in buf[..n].iter_mut().enumerate() {
+                    *x = (dpu * 131 + i * 7 + ts as usize) as u8;
+                }
+            };
+
+            let mut mono = PimMachine::new(PimConfig::tiny(dpus));
+            let addr_m = mono.alloc(row_len.max(8)).unwrap();
+            mono.write_rows_with(addr_m, row_len as usize, exec.as_ref(), &fill).unwrap();
+
+            // Chunk sizes: 1 row, prime row counts, whole array.
+            for chunk_rows in [1u64, 3, 7, 13, rows.max(1)] {
+                let chunks = rows.max(1).div_ceil(chunk_rows) as usize;
+                let spans = pipeline::byte_spans(row_len, chunks, lcm(ts, 8));
+                let mut chunked = PimMachine::new(PimConfig::tiny(dpus));
+                let addr_c = chunked.alloc(row_len.max(8)).unwrap();
+                chunked.write_rows_chunked(addr_c, row_len as usize, &spans, &fill).unwrap();
+
+                // Bank bytes are identical...
+                for d in 0..dpus {
+                    assert_eq!(
+                        mono.read_bytes(d, addr_m, row_len).unwrap(),
+                        chunked.read_bytes(d, addr_c, row_len).unwrap(),
+                        "ts={ts} rows={rows} chunk_rows={chunk_rows} dpu={d}"
+                    );
+                }
+                // ...and so are chunked reads of the live (4-aligned
+                // prefix of the) data vs the monolithic row read.
+                let take = |dpu: usize| live(dpu) / 4 * 4;
+                let want = mono.read_rows_with(addr_m, exec.as_ref(), &take).unwrap();
+                let got = chunked.read_rows_chunked(addr_c, &spans, &take).unwrap();
+                assert_eq!(want, got, "ts={ts} rows={rows} chunk_rows={chunk_rows}");
+                // Chunked I/O is functional: nothing charged.
+                assert_eq!(chunked.timeline().total_s(), 0.0);
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// 2. Chunked execution matches monolithic execution per backend.
+// ---------------------------------------------------------------------
+
+fn backends() -> Vec<Box<dyn ExecBackend>> {
+    vec![
+        backend::make(BackendKind::Seq, 1).unwrap(),
+        backend::make(BackendKind::Gang, 1).unwrap(),
+        backend::make(BackendKind::Parallel, 3).unwrap(),
+    ]
+}
+
+fn assert_launch_parity(func: &PimFunc, ctx: &[i32], inputs: &Inputs, rows: u64, label: &str) {
+    for b in backends() {
+        let want = b.launch(None, func, ctx, inputs).unwrap();
+        for plan in [
+            ChunkPlan::split(rows, rows.max(1) as usize), // one row per chunk
+            ChunkPlan::split(rows, 3),
+            ChunkPlan::split(rows, 7),
+            ChunkPlan::monolithic(rows),
+        ] {
+            let got = b.launch_pipelined(None, func, ctx, inputs, &plan).unwrap();
+            assert_eq!(
+                want,
+                got,
+                "{label} via {} with {} chunks",
+                b.kind(),
+                plan.chunks()
+            );
+        }
+    }
+}
+
+#[test]
+fn launch_pipelined_matches_launch_on_every_backend() {
+    // Ragged + empty single-input arrays.
+    let a = Rc::new(vec![vec![5, -3, 7, 9, 11, 13, 2], vec![1, 2], vec![]]);
+    let one = Inputs::One(Rc::clone(&a));
+    assert_launch_parity(&PimFunc::AffineMap, &[3, -17], &one, 7, "affine map");
+    assert_launch_parity(&PimFunc::SumReduce, &[], &one, 7, "sum reduce");
+    assert_launch_parity(&PimFunc::Histogram { bins: 256 }, &[], &one, 7, "histogram");
+
+    // Zipped pair (vecadd).
+    let x = Rc::new(vec![vec![1, 2, 3, 4, 5], vec![10], vec![]]);
+    let y = Rc::new(vec![vec![9, 8, 7, 6, 5], vec![-10], vec![]]);
+    let two = Inputs::Two(Rc::clone(&x), Rc::clone(&y));
+    assert_launch_parity(&PimFunc::VecAdd, &[], &two, 5, "vecadd");
+
+    // Gradient kernels: dim-wide point rows zipped with targets.
+    let dim = 3;
+    let px = Rc::new(vec![vec![10, 20, 30, 40, 50, 60, 70, 80, 90], vec![5, 6, 7], vec![]]);
+    let ty = Rc::new(vec![vec![100, -200, 300], vec![7], vec![]]);
+    let grad = Inputs::Two(Rc::clone(&px), Rc::clone(&ty));
+    let w = vec![64, -32, 16];
+    assert_launch_parity(&PimFunc::LinregGrad { dim }, &w, &grad, 3, "linreg grad");
+    assert_launch_parity(&PimFunc::LogregGrad { dim }, &w, &grad, 3, "logreg grad");
+
+    // K-means partials: dim-wide rows, centroid context.
+    let pts = Rc::new(vec![vec![1, 2, 9, 9, 3, 4, 8, 8], vec![1, 1], vec![]]);
+    let km = Inputs::One(Rc::clone(&pts));
+    let centroids = vec![0, 0, 10, 10];
+    assert_launch_parity(
+        &PimFunc::KmeansAssign { k: 2, dim: 2 },
+        &centroids,
+        &km,
+        4,
+        "kmeans assign",
+    );
+}
+
+#[test]
+fn launch_pipelined_falls_back_for_host_custom_functions() {
+    fn double(xs: &[i32], _ctx: &[i32]) -> Vec<i32> {
+        xs.iter().map(|&v| v.wrapping_mul(2)).collect()
+    }
+    let a = Rc::new(vec![vec![1, 2, 3], vec![4]]);
+    let inputs = Inputs::One(Rc::clone(&a));
+    let func = PimFunc::HostMap(double);
+    for b in backends() {
+        let want = b.launch(None, &func, &[], &inputs).unwrap();
+        let got = b
+            .launch_pipelined(None, &func, &[], &inputs, &ChunkPlan::split(3, 3))
+            .unwrap();
+        assert_eq!(want, got, "host-custom functions run monolithically ({})", b.kind());
+    }
+}
+
+// ---------------------------------------------------------------------
+// 3. End-to-end modeled behavior.
+// ---------------------------------------------------------------------
+
+fn seq_sys(dpus: usize, mode: PipelineMode) -> PimSystem {
+    let mut s = PimSystem::with_backend(
+        PimConfig::upmem(dpus),
+        None,
+        backend::make(BackendKind::Seq, 1).unwrap(),
+    );
+    s.set_pipeline(mode).unwrap();
+    s
+}
+
+#[test]
+fn vecadd_pipelined_improves_modeled_total_by_15_percent() {
+    let n = 1 << 20;
+    let (x, y) = vecadd::generate(7, n);
+    let mut off = seq_sys(32, PipelineMode::Off);
+    let out_off = vecadd::run_simplepim(&mut off, &x, &y).unwrap();
+    let t_off = off.timeline();
+
+    let mut on = seq_sys(32, PipelineMode::On);
+    let out_on = vecadd::run_simplepim(&mut on, &x, &y).unwrap();
+    let t_on = on.timeline();
+
+    assert_eq!(out_off, out_on, "pipelining never changes results");
+    assert_eq!(t_off.bytes_h2p, t_on.bytes_h2p, "traffic is mode-invariant");
+    assert_eq!(t_off.bytes_p2h, t_on.bytes_p2h);
+    assert!(t_on.pipelined_launches >= 1, "the map+gather must pipeline");
+    assert!(t_on.pipeline_chunks > t_on.pipelined_launches, "actually chunked");
+    let gain = 1.0 - t_on.total_s() / t_off.total_s();
+    assert!(
+        gain >= 0.15,
+        "vecadd is transfer-bound; expected >= 15% modeled win, got {:.1}% ({} vs {} s)",
+        gain * 100.0,
+        t_on.total_s(),
+        t_off.total_s()
+    );
+}
+
+#[test]
+fn histogram_reduction_overlaps_its_scatter() {
+    let n = 1 << 20;
+    let px = histogram::generate(9, n);
+    let mut off = seq_sys(32, PipelineMode::Off);
+    let out_off = histogram::run_simplepim(&mut off, &px, 256).unwrap();
+    let mut on = seq_sys(32, PipelineMode::On);
+    let out_on = histogram::run_simplepim(&mut on, &px, 256).unwrap();
+    assert_eq!(out_off, out_on);
+    let (t_off, t_on) = (off.timeline(), on.timeline());
+    assert!(t_on.pipelined_launches >= 1, "scatter∥red must pipeline");
+    assert!(t_on.overlap_saved_s > 0.0);
+    assert!(t_on.total_s() <= t_off.total_s() + 1e-12);
+}
+
+#[test]
+fn auto_mode_skips_launches_with_nothing_to_hide() {
+    // A tiny scatter: per-chunk latency would swamp any overlap, so the
+    // planner's cost estimate must keep the launch monolithic and the
+    // timeline must match `off` to the last charge.
+    let xs: Vec<i32> = (0..200).collect();
+    let run = |mode| {
+        let mut s = seq_sys(8, mode);
+        s.scatter("x", &xs, 4).unwrap();
+        let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+        let sum = s.array_red("x", "sum", 1, &red).unwrap();
+        (sum, s.timeline())
+    };
+    let (sum_off, t_off) = run(PipelineMode::Off);
+    let (sum_auto, t_auto) = run(PipelineMode::Auto);
+    assert_eq!(sum_off, sum_auto);
+    assert_eq!(t_auto.pipelined_launches, 0, "nothing worth pipelining here");
+    assert!((t_auto.total_s() - t_off.total_s()).abs() < 1e-12);
+    assert_eq!(t_auto.bytes_h2p, t_off.bytes_h2p);
+}
+
+#[test]
+fn deferred_scatter_charges_flush_at_every_exit() {
+    // scatter -> gather (no kernel): flushed at the gather.
+    let xs: Vec<i32> = (0..50_000).collect();
+    let mut s = seq_sys(8, PipelineMode::On);
+    s.scatter("x", &xs, 4).unwrap();
+    let direct = s.gather("x").unwrap();
+    assert_eq!(direct, xs);
+    let t = s.timeline();
+    assert!(t.host_to_pim_s > 0.0, "deferred push charged at gather");
+    assert_eq!(t.pipelined_launches, 0, "no kernel, nothing overlapped");
+
+    // scatter -> free (never consumed): flushed at the free.
+    let mut s = seq_sys(8, PipelineMode::On);
+    s.scatter("x", &xs, 4).unwrap();
+    s.free_array("x").unwrap();
+    assert!(s.timeline().host_to_pim_s > 0.0, "deferred push charged at free");
+    assert_eq!(s.machine.mram_used(), 0);
+
+    // scatter -> run() (drain): flushed at the run boundary.
+    let mut s = seq_sys(8, PipelineMode::On);
+    s.scatter("x", &xs, 4).unwrap();
+    s.run().unwrap();
+    assert!(s.timeline().host_to_pim_s > 0.0, "deferred push charged at run()");
+
+    // Switching the pipeline off flushes too.
+    let mut s = seq_sys(8, PipelineMode::On);
+    s.scatter("x", &xs, 4).unwrap();
+    s.set_pipeline(PipelineMode::Off).unwrap();
+    assert!(s.timeline().host_to_pim_s > 0.0, "mode switch flushes deferred charges");
+
+    // reset_timeline() is a measurement boundary: a deferred charge
+    // belongs to the pre-reset era (where the monolithic path charged
+    // it) and must never leak into the post-reset region.
+    let mut s = seq_sys(8, PipelineMode::On);
+    s.scatter("x", &xs, 4).unwrap();
+    s.reset_timeline();
+    assert_eq!(s.timeline().host_to_pim_s, 0.0);
+    let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+    s.array_red("x", "sum", 1, &red).unwrap();
+    let mut off = seq_sys(8, PipelineMode::Off);
+    off.scatter("x", &xs, 4).unwrap();
+    off.reset_timeline();
+    let red = off.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+    off.array_red("x", "sum", 1, &red).unwrap();
+    assert!(
+        s.timeline().total_s() <= off.timeline().total_s() + 1e-12,
+        "no scatter charge may cross the reset into the pipelined region"
+    );
+}
+
+#[test]
+fn freed_and_reregistered_id_is_a_new_generation() {
+    // scatter x -> map y -> free x -> scatter x (new data): y's launch
+    // must NOT fold the new x's deferred charge into its pipeline (it
+    // consumed the old generation's bytes).  Both scatters end up
+    // charged at full monolithic price, nothing spuriously overlapped.
+    let n = 1 << 20;
+    let xs: Vec<i32> = (0..n).map(|v| v % 97).collect();
+    let mut s = seq_sys(32, PipelineMode::On);
+    s.scatter("x", &xs, 4).unwrap();
+    let map = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![2, 1]).unwrap();
+    s.array_map("x", "y", &map).unwrap();
+    s.free_array("x").unwrap(); // flushes the old charge, severs y's link
+    let h2p_after_first = s.timeline().host_to_pim_s;
+    assert!(h2p_after_first > 0.0, "old generation flushed at free");
+    s.scatter("x", &xs, 4).unwrap(); // new generation under the same id
+    let out = s.gather("y").unwrap(); // forces y: 2-lane exec+pull only
+    assert_eq!(out.len(), xs.len());
+    // y's launch consumed no input stream, so the new x's charge is
+    // still deferred here — h2p holds the first generation plus the
+    // map's 8-byte context broadcast.
+    assert_eq!(s.timeline().bytes_h2p, 32 * 131_072 + 8, "new scatter not folded into y");
+    // The new x flushes at its own first use, at the full monolithic
+    // price (no hidden overlap from y's launch).
+    let before = s.timeline().host_to_pim_s;
+    s.free_array("x").unwrap();
+    assert!(s.timeline().host_to_pim_s > before, "new generation charged at its own exit");
+    assert_eq!(
+        s.timeline().bytes_h2p,
+        2 * 32 * 131_072 + 8,
+        "both scatters' traffic accounted exactly once"
+    );
+}
+
+#[test]
+fn explain_reports_pipelined_launches() {
+    // Large enough that the functional chunk plan is > 1 chunk per DPU
+    // (256 KB rows against the 64 KB nominal chunk), so the backend's
+    // chunked pipeline walk actually runs.
+    let n = 1 << 20;
+    let (x, y) = vecadd::generate(11, n);
+    let mut s = seq_sys(16, PipelineMode::On);
+    s.scatter("x", &x, 4).unwrap();
+    s.scatter("y", &y, 4).unwrap();
+    s.array_zip("x", "y", "xy").unwrap();
+    let add = s.create_handle(PimFunc::VecAdd, TransformKind::Map, vec![]).unwrap();
+    s.array_map("xy", "sum", &add).unwrap();
+    s.gather("sum").unwrap();
+    let report = s.explain_report();
+    assert!(report.contains("pipeline: mode on"), "{report}");
+    assert!(report.contains("pipelined launch"), "{report}");
+    assert!(s.plan_stats().pipelined_launches >= 1);
+    assert!(s.backend_stats().pipelined >= 1, "functional chunked walk ran");
+}
+
+#[test]
+fn zero_threads_and_garbage_env_are_config_errors() {
+    let err = backend::make(BackendKind::Parallel, 0).err().expect("must fail");
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    assert!(err.to_string().contains('0'));
+
+    let err = backend::resolve_env(None, Some("lots")).err().expect("must fail");
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    assert!(err.to_string().contains("lots"));
+
+    let err = PipelineMode::parse("sometimes").err().expect("must fail");
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    assert!(err.to_string().contains("sometimes"));
+}
