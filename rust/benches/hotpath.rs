@@ -104,6 +104,24 @@ fn bench_backend(
                 std::hint::black_box(reduction::run_simplepim(&mut sys, &x).unwrap());
             })
         }
+        "allreduce" => {
+            // The collective hot path: every DPU holds the array, the
+            // host root pulls all copies, merges them (merge engine,
+            // DESIGN.md §13), and broadcasts the result back in place.
+            let x = reduction::generate(prng::seed_for(8), n);
+            sys.broadcast("ar", &x, 4).unwrap();
+            let h = sys
+                .create_handle(
+                    PimFunc::HostAcc(i32::wrapping_add),
+                    TransformKind::Red,
+                    vec![],
+                )
+                .unwrap();
+            sys.reset_timeline();
+            measure(warm, iters, || {
+                sys.allreduce("ar", &h).unwrap();
+            })
+        }
         "histogram" => {
             let px = histogram::generate(prng::seed_for(3), n);
             sys.reset_timeline();
@@ -192,17 +210,22 @@ fn main() {
     let vec_n = if quick { 1 << 19 } else { 1 << 21 };
     let ml_n = if quick { 20_000 } else { 100_000 };
     let km_n = if quick { 10_000 } else { 50_000 };
-    let sizes: [(&'static str, usize); 6] = [
+    // `allreduce` rides with a smaller payload: its host root touches
+    // n_dpus copies of the whole array per iteration.
+    let ar_n = if quick { 1 << 17 } else { 1 << 19 };
+    let sizes: [(&'static str, usize); 7] = [
         ("reduction", big),
         ("histogram", big),
         ("vecadd", vec_n),
         ("linreg", ml_n),
         ("logreg", ml_n),
         ("kmeans", km_n),
+        ("allreduce", ar_n),
     ];
 
-    // --- execution backends: all six workloads, seq vs gang vs
-    //     parallel (8 workers), host-golden engine.  The large-input
+    // --- execution backends: every workload (incl. the allreduce
+    //     collective), seq vs gang vs parallel (8 workers),
+    //     host-golden engine.  The large-input
     //     reduction and histogram configs are the tentpole's acceptance
     //     measurement: the rank-sharded backend must beat the
     //     sequential walk by >= 2x wall-clock at 8 threads.

@@ -9,6 +9,7 @@
 //! identical to [`super::SequentialBackend`] lane for lane.
 
 use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
+use super::merge::{concat_serial, tree_combine, AccFn, MergeStrategy};
 use super::{
     read_rows_seq, write_rows_seq, BackendKind, BackendStats, ExecBackend, StatCounters,
 };
@@ -127,6 +128,26 @@ impl ExecBackend for GangBackend {
         self.stats.launch(n as u64);
         self.stats.pipelined();
         Ok(out)
+    }
+
+    /// Batched pairwise merges: the fixed-order combine tree executed
+    /// level by level on one thread (each level is one batch), skipping
+    /// the serial path's per-partial staging pass.
+    fn merge_strategy(&self) -> MergeStrategy {
+        MergeStrategy::Tree { threads: 1 }
+    }
+
+    fn combine_rows(&self, acc: AccFn, parts: &[&[i32]], len: usize) -> Vec<i32> {
+        self.stats.merge();
+        let (merged, levels) = tree_combine(acc, parts, len, 1, &self.arena);
+        for _ in 0..levels {
+            self.stats.gang_batch();
+        }
+        merged
+    }
+
+    fn concat_rows(&self, parts: &[&[i32]], total: usize) -> Vec<i32> {
+        concat_serial(parts, total)
     }
 
     fn stats(&self) -> BackendStats {

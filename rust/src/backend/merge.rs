@@ -1,0 +1,350 @@
+//! The hierarchical merge engine's functional half (DESIGN.md §13).
+//!
+//! SimplePIM's collectives and reductions end in a host-side combine of
+//! per-DPU partial buffers (the paper's "host version of `acc_func`",
+//! §3.2/§4.1).  The seed implementation folded them serially on one
+//! thread; this module provides the strategies the backends plug into
+//! [`super::ExecBackend::combine_rows`] / `concat_rows`:
+//!
+//! * [`staged_fold`] — the seed reference, kept bit-exact: every
+//!   partial is staged into a host word buffer, then a single-threaded
+//!   left fold accumulates them in DPU order;
+//! * [`tree_combine`] — a **fixed-order pairwise tree**: level ℓ merges
+//!   partials `(2i, 2i+1)` of level ℓ−1, so the combine order depends
+//!   only on the DPU count, never on thread scheduling.  With `threads
+//!   > 1` the pair merges of each level run on a `std::thread::scope`
+//!   worker pool, each writing into its own arena row.  For the
+//!   associative-commutative integer accumulators shipped today the
+//!   tree is bit-identical to the serial fold (pinned by
+//!   `rust/tests/collectives.rs`); the fixed order is what keeps future
+//!   non-associative (e.g. float) accumulators deterministic per
+//!   machine shape;
+//! * [`concat_serial`] / [`concat_sharded`] — ordered concatenation of
+//!   per-DPU pieces (the gather side of `allgather`), sharded across
+//!   workers into disjoint output ranges.
+//!
+//! The matching *modeled* costs live in
+//! `coordinator::plan::MergePlan`; [`MergeStrategy`] is the contract
+//! tying the two together (a backend reports the strategy it actually
+//! executes, the coordinator charges exactly that strategy's cost).
+
+use super::arena::BufArena;
+use super::shard_ranges;
+
+/// The elementwise accumulator merges combine with (a handle's
+/// `acc_func`).
+pub type AccFn = fn(i32, i32) -> i32;
+
+/// How a backend combines per-DPU partial buffers on the host.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeStrategy {
+    /// The seed reference: stage every partial into a host word buffer,
+    /// then left-fold on one thread.
+    Serial,
+    /// Fixed-order pairwise tree of depth ⌈log₂ n⌉, with up to
+    /// `threads` pair merges in flight per level, combining in place
+    /// over zero-copy word views (no staging pass).
+    Tree { threads: usize },
+}
+
+impl MergeStrategy {
+    /// Worker threads the strategy shards across (1 for serial).
+    pub fn threads(self) -> usize {
+        match self {
+            MergeStrategy::Serial => 1,
+            MergeStrategy::Tree { threads } => threads.max(1),
+        }
+    }
+}
+
+/// Don't spawn merge workers for less combine work than this many
+/// elements: thread startup would dwarf the copy loops.  Functional
+/// only — the modeled cost always follows the declared strategy.
+const PAR_MERGE_MIN_ELEMS: usize = 1 << 14;
+
+/// Whether [`tree_combine`] will actually shard its levels across
+/// workers for this shape — the spawn-floor predicate, shared with the
+/// backends' `sharded_ops` accounting so the counter never reports
+/// sharding that did not happen.
+pub(crate) fn tree_shards(parts: usize, len: usize, threads: usize) -> bool {
+    threads > 1 && parts > 2 && (parts / 2) * len >= PAR_MERGE_MIN_ELEMS
+}
+
+/// The seed's staged serial fold: `merged` starts as a copy of part 0,
+/// then parts 1..n accumulate left to right.  Each part transits a
+/// staging row first (the seed's bytes→words pass, which the modeled
+/// serial cost charges as `parts × len` staged elements).
+pub(crate) fn staged_fold(
+    acc: AccFn,
+    parts: &[&[i32]],
+    len: usize,
+    arena: &BufArena,
+) -> Vec<i32> {
+    let mut merged = vec![0i32; len];
+    if len == 0 || parts.is_empty() {
+        return merged;
+    }
+    let mut stage = arena.take(len, 0);
+    let mut first = true;
+    for p in parts {
+        stage.copy_from_slice(&p[..len]);
+        if first {
+            merged.copy_from_slice(&stage);
+            first = false;
+        } else {
+            for (m, v) in merged.iter_mut().zip(&stage) {
+                *m = acc(*m, *v);
+            }
+        }
+    }
+    arena.give(stage);
+    merged
+}
+
+/// Fixed-order pairwise tree combine.  Returns the merged row and the
+/// number of tree levels executed (⌈log₂ parts⌉).
+pub(crate) fn tree_combine(
+    acc: AccFn,
+    parts: &[&[i32]],
+    len: usize,
+    threads: usize,
+    arena: &BufArena,
+) -> (Vec<i32>, u64) {
+    if parts.is_empty() || len == 0 {
+        return (vec![0i32; len], 0);
+    }
+    if parts.len() == 1 {
+        return (parts[0][..len].to_vec(), 0);
+    }
+    // Keep the spawn overhead off tiny merges (training-loop partials
+    // are often a handful of words); the combine order is identical
+    // either way.
+    let threads = if tree_shards(parts.len(), len, threads) { threads.max(1) } else { 1 };
+
+    let mut levels = 1u64;
+    let mut cur = merge_first_level(acc, parts, len, threads, arena);
+    while cur.len() > 1 {
+        levels += 1;
+        merge_owned_level(acc, &mut cur, threads, arena);
+    }
+    (cur.pop().expect("tree leaves at least one row"), levels)
+}
+
+/// Level 1: pair-merge the borrowed input views into owned arena rows
+/// (an odd trailing part is copied forward unchanged).
+fn merge_first_level(
+    acc: AccFn,
+    parts: &[&[i32]],
+    len: usize,
+    threads: usize,
+    arena: &BufArena,
+) -> Vec<Vec<i32>> {
+    let out_count = parts.len().div_ceil(2);
+    let merge_range = |lo: usize, hi: usize| -> Vec<Vec<i32>> {
+        (lo..hi)
+            .map(|i| match parts.get(2 * i + 1) {
+                Some(b) => {
+                    let a = parts[2 * i];
+                    let mut out = arena.take(len, 0);
+                    for ((o, &x), &y) in out.iter_mut().zip(a.iter()).zip(b.iter()) {
+                        *o = acc(x, y);
+                    }
+                    out
+                }
+                None => parts[2 * i][..len].to_vec(),
+            })
+            .collect()
+    };
+    if threads <= 1 || out_count <= 1 {
+        return merge_range(0, out_count);
+    }
+    let mr = &merge_range;
+    let groups: Vec<Vec<Vec<i32>>> = std::thread::scope(|s| {
+        let handles: Vec<_> = shard_ranges(out_count, threads)
+            .into_iter()
+            .map(|r| s.spawn(move || mr(r.start, r.end)))
+            .collect();
+        handles.into_iter().map(|h| h.join().expect("merge worker panicked")).collect()
+    });
+    groups.into_iter().flatten().collect()
+}
+
+/// Levels 2..: merge each pair's right row into its left row in place
+/// (all rows are the same length by construction), then return the
+/// consumed right-hand rows to the arena (odd tails carry forward).
+fn merge_owned_level(acc: AccFn, cur: &mut Vec<Vec<i32>>, threads: usize, arena: &BufArena) {
+    let merge_pair = |pair: &mut [Vec<i32>]| {
+        if pair.len() == 2 {
+            let (a, b) = pair.split_at_mut(1);
+            for (x, &y) in a[0].iter_mut().zip(b[0].iter()) {
+                *x = acc(*x, y);
+            }
+        }
+    };
+    let pairs = cur.len() / 2;
+    if threads <= 1 || pairs <= 1 {
+        for pair in cur.chunks_mut(2) {
+            merge_pair(pair);
+        }
+    } else {
+        let mut pair_slices: Vec<&mut [Vec<i32>]> = cur.chunks_mut(2).collect();
+        let shards = shard_ranges(pair_slices.len(), threads);
+        let mp = &merge_pair;
+        std::thread::scope(|s| {
+            for r in shards {
+                let group: Vec<&mut [Vec<i32>]> = pair_slices.drain(..r.len()).collect();
+                s.spawn(move || {
+                    for pair in group {
+                        mp(pair);
+                    }
+                });
+            }
+        });
+    }
+    // Survivors are the even indices (merged pairs + a carried odd
+    // tail); the consumed right-hand rows recycle through the arena so
+    // repeated merges stop heap-allocating per level.
+    let mut kept = Vec::with_capacity(cur.len().div_ceil(2));
+    for (i, row) in cur.drain(..).enumerate() {
+        if i % 2 == 0 {
+            kept.push(row);
+        } else {
+            arena.give(row);
+        }
+    }
+    *cur = kept;
+}
+
+/// Ordered concatenation on one thread (the seq/gang strategy).
+pub(crate) fn concat_serial(parts: &[&[i32]], total: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(total);
+    for p in parts {
+        out.extend_from_slice(p);
+    }
+    out
+}
+
+/// Ordered concatenation sharded across up to `threads` workers, each
+/// copying its parts into a disjoint range of the output.
+pub(crate) fn concat_sharded(parts: &[&[i32]], total: usize, threads: usize) -> Vec<i32> {
+    if threads <= 1 || parts.len() <= 1 || total < PAR_MERGE_MIN_ELEMS {
+        return concat_serial(parts, total);
+    }
+    let mut out = vec![0i32; total];
+    let shards = shard_ranges(parts.len(), threads);
+    // Carve one disjoint output slice per shard, then fill in parallel.
+    let mut carved: Vec<(&[&[i32]], &mut [i32])> = Vec::with_capacity(shards.len());
+    let mut rest: &mut [i32] = &mut out;
+    for r in &shards {
+        let shard_parts = &parts[r.start..r.end];
+        let shard_len: usize = shard_parts.iter().map(|p| p.len()).sum();
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(shard_len);
+        carved.push((shard_parts, head));
+        rest = tail;
+    }
+    debug_assert!(rest.is_empty(), "parts must sum to `total` words");
+    std::thread::scope(|s| {
+        for (shard_parts, slice) in carved {
+            s.spawn(move || {
+                let mut off = 0usize;
+                for p in shard_parts {
+                    slice[off..off + p.len()].copy_from_slice(p);
+                    off += p.len();
+                }
+            });
+        }
+    });
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::arena::default_buf_arena;
+    use super::*;
+
+    fn views(rows: &[Vec<i32>]) -> Vec<&[i32]> {
+        rows.iter().map(|r| r.as_slice()).collect()
+    }
+
+    #[test]
+    fn staged_fold_matches_plain_fold() {
+        let arena = default_buf_arena();
+        let rows: Vec<Vec<i32>> =
+            (0..7).map(|d| (0..5).map(|j| (d * 10 + j) as i32).collect()).collect();
+        let got = staged_fold(i32::wrapping_add, &views(&rows), 5, &arena);
+        let mut want = rows[0].clone();
+        for r in &rows[1..] {
+            for (m, v) in want.iter_mut().zip(r) {
+                *m = m.wrapping_add(*v);
+            }
+        }
+        assert_eq!(got, want);
+    }
+
+    #[test]
+    fn tree_matches_fold_for_associative_acc_any_thread_count() {
+        let arena = default_buf_arena();
+        for n in [1usize, 2, 3, 5, 8, 17, 32] {
+            let rows: Vec<Vec<i32>> = (0..n)
+                .map(|d| (0..9).map(|j| (d as i32 + 1).wrapping_mul(j as i32 + 3)).collect())
+                .collect();
+            let v = views(&rows);
+            let want = staged_fold(i32::wrapping_add, &v, 9, &arena);
+            for threads in [1usize, 2, 3, 8] {
+                let (got, levels) = tree_combine(i32::wrapping_add, &v, 9, threads, &arena);
+                assert_eq!(got, want, "n={n} threads={threads}");
+                assert_eq!(levels, (n as f64).log2().ceil() as u64, "n={n}");
+            }
+            // Non-add accumulators take the same fixed order.
+            fn min_acc(a: i32, b: i32) -> i32 {
+                a.min(b)
+            }
+            let want_min = staged_fold(min_acc, &v, 9, &arena);
+            let (got_min, _) = tree_combine(min_acc, &v, 9, 3, &arena);
+            assert_eq!(got_min, want_min, "n={n} min");
+        }
+    }
+
+    #[test]
+    fn tree_spawns_only_past_the_work_floor() {
+        // Big rows force the sharded path; the result must still match.
+        let arena = default_buf_arena();
+        let rows: Vec<Vec<i32>> =
+            (0..6).map(|d| (0..20_000).map(|j| (d * 7 + j) as i32).collect()).collect();
+        let v = views(&rows);
+        let want = staged_fold(i32::wrapping_add, &v, 20_000, &arena);
+        let (got, levels) = tree_combine(i32::wrapping_add, &v, 20_000, 4, &arena);
+        assert_eq!(got, want);
+        assert_eq!(levels, 3); // 6 -> 3 -> 2 -> 1
+    }
+
+    #[test]
+    fn empty_and_single_part_edges() {
+        let arena = default_buf_arena();
+        let (m, levels) = tree_combine(i32::wrapping_add, &[], 4, 2, &arena);
+        assert_eq!(m, vec![0; 4]);
+        assert_eq!(levels, 0);
+        let one = vec![vec![5, 6, 7]];
+        let (m, levels) = tree_combine(i32::wrapping_add, &views(&one), 3, 2, &arena);
+        assert_eq!(m, vec![5, 6, 7]);
+        assert_eq!(levels, 0);
+        let empty_rows = vec![Vec::<i32>::new(), Vec::new()];
+        let (m, _) = tree_combine(i32::wrapping_add, &views(&empty_rows), 0, 2, &arena);
+        assert!(m.is_empty());
+        assert!(staged_fold(i32::wrapping_add, &views(&empty_rows), 0, &arena).is_empty());
+    }
+
+    #[test]
+    fn concat_preserves_order_ragged_and_sharded() {
+        let rows = vec![vec![1, 2, 3], vec![], vec![4], vec![5, 6]];
+        let v = views(&rows);
+        let want = vec![1, 2, 3, 4, 5, 6];
+        assert_eq!(concat_serial(&v, 6), want);
+        assert_eq!(concat_sharded(&v, 6, 3), want, "below floor falls back");
+        // Past the floor: genuinely sharded copy.
+        let big: Vec<Vec<i32>> = (0..5).map(|d| vec![d as i32; 9_000]).collect();
+        let bv = views(&big);
+        let total = 45_000;
+        assert_eq!(concat_sharded(&bv, total, 3), concat_serial(&bv, total));
+    }
+}

@@ -19,19 +19,28 @@
 //!   `std::thread::scope` worker pool with per-worker staging arenas
 //!   ([`arena`]), for both kernel execution and bank-row marshalling.
 //!
-//! **Backends are functional-only.**  All modeled time (`Timeline`) is
-//! charged by the coordinator from kernel profiles and transfer rules
-//! that never see the backend, so modeled seconds are backend-invariant
-//! by construction; `rust/tests/backend_parity.rs` pins bit-identical
-//! results *and* identical timelines across all three.
+//! **Backends are functional with one declared modeling exception.**
+//! Kernel and transfer time (`Timeline`) is charged by the coordinator
+//! from profiles and transfer rules that never see the backend, so
+//! those lanes are backend-invariant by construction.  The *merge
+//! lane* (DESIGN.md §13) is the exception: each backend combines
+//! per-DPU partials with its own strategy ([`MergeStrategy`], reported
+//! through [`ExecBackend::merge_strategy`]) and the coordinator
+//! charges exactly that strategy's modeled cost — serial fold for
+//! [`SequentialBackend`], single-threaded pairwise tree for
+//! [`GangBackend`], a worker-sharded ⌈log₂ n⌉-depth tree for
+//! [`ParallelBackend`].  Results stay bit-identical everywhere
+//! (`rust/tests/backend_parity.rs`, `rust/tests/collectives.rs`).
 
 pub mod arena;
+pub mod merge;
 mod gang;
 mod parallel;
 mod seq;
 
 pub use arena::{BufArena, ByteArena};
 pub use gang::GangBackend;
+pub use merge::{AccFn, MergeStrategy};
 pub use parallel::ParallelBackend;
 pub use seq::SequentialBackend;
 
@@ -95,6 +104,9 @@ pub struct BackendStats {
     pub sharded_ops: u64,
     /// Launches executed through the chunked pipeline path.
     pub pipelined: u64,
+    /// Host-side elementwise combines (allreduce roots / reduction
+    /// finalizations) executed by the merge engine.
+    pub merges: u64,
     /// Worker threads the backend shards across (1 = single-threaded).
     pub threads: usize,
 }
@@ -108,6 +120,7 @@ pub(crate) struct StatCounters {
     gang_batches: AtomicU64,
     sharded_ops: AtomicU64,
     pipelined: AtomicU64,
+    merges: AtomicU64,
 }
 
 impl StatCounters {
@@ -128,6 +141,10 @@ impl StatCounters {
         self.pipelined.fetch_add(1, Ordering::Relaxed);
     }
 
+    pub(crate) fn merge(&self) {
+        self.merges.fetch_add(1, Ordering::Relaxed);
+    }
+
     pub(crate) fn snapshot(&self, threads: usize) -> BackendStats {
         BackendStats {
             launches: self.launches.load(Ordering::Relaxed),
@@ -135,6 +152,7 @@ impl StatCounters {
             gang_batches: self.gang_batches.load(Ordering::Relaxed),
             sharded_ops: self.sharded_ops.load(Ordering::Relaxed),
             pipelined: self.pipelined.load(Ordering::Relaxed),
+            merges: self.merges.load(Ordering::Relaxed),
             threads,
         }
     }
@@ -207,17 +225,59 @@ pub trait ExecBackend: Send + Sync {
         plan: &ChunkPlan,
     ) -> Result<Vec<Vec<i32>>>;
 
+    /// The host-combine strategy this backend's [`Self::combine_rows`]
+    /// / [`Self::concat_rows`] execute (merge engine, DESIGN.md §13).
+    /// The coordinator charges exactly this strategy's modeled merge
+    /// cost, so the functional strategy and the `Timeline` merge lane
+    /// can never drift apart.
+    fn merge_strategy(&self) -> MergeStrategy;
+
+    /// Combine per-DPU partial buffers elementwise into one `len`-word
+    /// row with `acc` (the host root of `allreduce` and the
+    /// finalization of `array_red`).  Every part must hold at least
+    /// `len` words.  Tree-strategy backends use a fixed pairwise order,
+    /// bit-identical to the serial fold for associative accumulators.
+    fn combine_rows(&self, acc: AccFn, parts: &[&[i32]], len: usize) -> Vec<i32>;
+
+    /// Concatenate per-DPU pieces (in DPU order) into one `total`-word
+    /// array — the gather side of `allgather` and of plain `gather`.
+    fn concat_rows(&self, parts: &[&[i32]], total: usize) -> Vec<i32>;
+
     /// Counter snapshot.
     fn stats(&self) -> BackendStats;
 }
 
 /// Build a backend of `kind`; `threads` only affects `Parallel`, where
 /// zero is an explicit [`Error::Config`] rather than a silent clamp.
+/// `SIMPLEPIM_MERGE_THREADS` (validated like `SIMPLEPIM_THREADS`)
+/// overrides the parallel backend's merge-tree worker count, which
+/// otherwise equals its launch worker count.
 pub fn make(kind: BackendKind, threads: usize) -> Result<Box<dyn ExecBackend>> {
+    // Validate the override under *every* backend (a garbage value must
+    // never be silently green just because seq/gang ignore the knob);
+    // only the parallel backend applies it.
+    let merge_threads = match std::env::var("SIMPLEPIM_MERGE_THREADS") {
+        Ok(s) => match s.parse::<usize>() {
+            Ok(t) if t >= 1 => Some(t),
+            _ => {
+                return Err(Error::Config(format!(
+                    "invalid SIMPLEPIM_MERGE_THREADS=`{s}` (expected a positive \
+                     integer; 0 would silently serialize the merge tree)"
+                )))
+            }
+        },
+        Err(_) => None,
+    };
     Ok(match kind {
         BackendKind::Seq => Box::new(SequentialBackend::new()),
         BackendKind::Gang => Box::new(GangBackend::new()),
-        BackendKind::Parallel => Box::new(ParallelBackend::new(threads)?),
+        BackendKind::Parallel => {
+            let mut b = ParallelBackend::new(threads)?;
+            if let Some(t) = merge_threads {
+                b.set_merge_threads(t);
+            }
+            Box::new(b)
+        }
     })
 }
 

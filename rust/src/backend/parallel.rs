@@ -16,6 +16,7 @@
 //! `PimMachine`, identically for every backend.
 
 use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
+use super::merge::{concat_sharded, tree_combine, tree_shards, AccFn, MergeStrategy};
 use super::{
     read_rows_seq, shard_ranges, write_rows_seq, BackendKind, BackendStats, ExecBackend,
     StatCounters,
@@ -30,6 +31,9 @@ use crate::runtime::Runtime;
 #[derive(Debug)]
 pub struct ParallelBackend {
     threads: usize,
+    /// Workers the merge tree shards across (defaults to `threads`;
+    /// `SIMPLEPIM_MERGE_THREADS` overrides via [`super::make`]).
+    merge_threads: usize,
     arena: BufArena,
     staging: ByteArena,
     stats: StatCounters,
@@ -48,10 +52,16 @@ impl ParallelBackend {
         }
         Ok(ParallelBackend {
             threads,
+            merge_threads: threads,
             arena: default_buf_arena(),
             staging: default_byte_arena(),
             stats: StatCounters::default(),
         })
+    }
+
+    /// Override the merge-tree worker count (callers validate >= 1).
+    pub fn set_merge_threads(&mut self, threads: usize) {
+        self.merge_threads = threads.max(1);
     }
 }
 
@@ -230,6 +240,26 @@ impl ExecBackend for ParallelBackend {
         }
         self.stats.sharded_op();
         Ok(out)
+    }
+
+    /// Worker-sharded ⌈log₂ n⌉-depth combine tree over zero-copy word
+    /// views, each level's pair merges split across the merge workers
+    /// into per-worker arena rows.
+    fn merge_strategy(&self) -> MergeStrategy {
+        MergeStrategy::Tree { threads: self.merge_threads }
+    }
+
+    fn combine_rows(&self, acc: AccFn, parts: &[&[i32]], len: usize) -> Vec<i32> {
+        self.stats.merge();
+        if tree_shards(parts.len(), len, self.merge_threads) {
+            self.stats.sharded_op();
+        }
+        let (merged, _levels) = tree_combine(acc, parts, len, self.merge_threads, &self.arena);
+        merged
+    }
+
+    fn concat_rows(&self, parts: &[&[i32]], total: usize) -> Vec<i32> {
+        concat_sharded(parts, total, self.merge_threads)
     }
 
     fn stats(&self) -> BackendStats {

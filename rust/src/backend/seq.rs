@@ -8,6 +8,7 @@
 //! straight sequential loop.
 
 use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
+use super::merge::{concat_serial, staged_fold, AccFn, MergeStrategy};
 use super::{
     read_rows_seq, write_rows_seq, BackendKind, BackendStats, ExecBackend, StatCounters,
 };
@@ -112,6 +113,21 @@ impl ExecBackend for SequentialBackend {
         self.stats.launch(n as u64);
         self.stats.pipelined();
         Ok(out)
+    }
+
+    /// The seed reference: stage every partial, left-fold on one
+    /// thread — the ground truth the tree strategies are pinned to.
+    fn merge_strategy(&self) -> MergeStrategy {
+        MergeStrategy::Serial
+    }
+
+    fn combine_rows(&self, acc: AccFn, parts: &[&[i32]], len: usize) -> Vec<i32> {
+        self.stats.merge();
+        staged_fold(acc, parts, len, &self.arena)
+    }
+
+    fn concat_rows(&self, parts: &[&[i32]], total: usize) -> Vec<i32> {
+        concat_serial(parts, total)
     }
 
     fn stats(&self) -> BackendStats {

@@ -87,7 +87,11 @@ COMMANDS:
                              --seed S (deterministic data generation)
                              --explain (dump the optimized plan: nodes,
                              which backend ran them, fusions applied,
-                             plan-cache hits/misses, pipelined launches)
+                             plan-cache hits/misses, pipelined launches,
+                             and the merge lane: tree-vs-serial combine
+                             cost of collectives and reductions;
+                             $SIMPLEPIM_MERGE_THREADS overrides the
+                             parallel backend's merge-tree workers)
   figures <which>   regenerate a paper figure from the timing model
                     which: fig9 fig10 fig11 ablations all
                     options: --csv (emit CSV instead of tables)

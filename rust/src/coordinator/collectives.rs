@@ -6,14 +6,24 @@
 //! or concatenate centrally, push the result back — exactly as the
 //! paper's implementation does (§4.1, and the §6 discussion of future
 //! inter-DIMM links).
+//!
+//! Since the hierarchical merge engine (DESIGN.md §13) the host-root
+//! combine is backend-pluggable: the partials are read as zero-copy
+//! word views ([`crate::pim::PimMachine::with_row_words`]) and merged
+//! through [`crate::backend::ExecBackend::combine_rows`] /
+//! `concat_rows` — the seed's staged serial fold on the sequential
+//! backend, a fixed-order pairwise tree on the gang backend, and a
+//! worker-sharded ⌈log₂ n⌉-depth tree on the parallel backend — with
+//! the matching modeled cost charged to the `Timeline` merge lane by
+//! one shared [`super::plan::MergePlan`] path.  In pipelined mode the
+//! pull ∥ combine ∥ push-back phases overlap chunk-by-chunk.
 
 use crate::error::{Error, Result};
 use crate::util::round_up;
 
-use super::comm::{bytes_to_words, words_to_bytes};
 use super::handle::Handle;
 use super::management::Layout;
-use super::plan::PlanOp;
+use super::plan::{MergePlan, PlanOp};
 use super::PimSystem;
 
 impl PimSystem {
@@ -31,32 +41,30 @@ impl PimSystem {
             )));
         }
         let bytes = meta.len * meta.type_size as u64;
+        let words = (bytes / 4) as usize;
         let padded = round_up(bytes, 8).max(8);
+        let n_dpus = self.machine.n_dpus();
 
-        // Gather every DPU's copy (timed parallel pull).
-        let pulled = self.machine.pull_parallel(meta.addr, padded, self.machine.n_dpus())?;
-
-        // Host root combines elementwise.
+        // Host root combines every DPU's copy — zero-copy word views
+        // over the live bank bytes, merged by the backend's strategy.
         let acc = handle.func.acc();
-        let mut merged = vec![0i32; (bytes / 4) as usize];
-        let mut first = true;
-        for buf in &pulled {
-            let words = bytes_to_words(&buf[..bytes as usize]);
-            if first {
-                merged.copy_from_slice(&words);
-                first = false;
-            } else {
-                for (m, v) in merged.iter_mut().zip(words) {
-                    *m = acc(*m, v);
-                }
-            }
-        }
-        self.machine.charge_host_merge(merged.len() as u64 * self.machine.n_dpus() as u64);
+        let merged = {
+            let backend = self.backend.as_ref();
+            self.machine.with_row_words(meta.addr, &|_| bytes, |parts| {
+                backend.combine_rows(acc, parts, words)
+            })?
+        };
 
-        // Push the combined array back in place (timed broadcast).
-        let mut buf = words_to_bytes(&merged);
-        buf.resize(padded as usize, 0);
-        self.machine.push_broadcast(meta.addr, &buf)?;
+        // Push the combined array back in place (functional; the
+        // broadcast transfer is charged with the merge phase below).
+        self.write_rows_broadcast(meta.addr, padded as usize, &merged)?;
+
+        // Modeled cost: pull every copy, combine (tree vs serial per
+        // the backend), broadcast the result back — overlapped
+        // chunk-by-chunk in pipelined mode.
+        let plan = MergePlan::reduce(n_dpus as u64, words as u64, self.backend.merge_strategy());
+        self.charge_merge_phase(&plan, padded, padded);
+
         let kind = self.backend.kind();
         self.engine.record_executed(PlanOp::Allreduce, id, &[id], meta.len, kind);
         Ok(())
@@ -70,17 +78,55 @@ impl PimSystem {
             // timeline or forces deferred work.
             return Err(Error::DuplicateArray(new_id.to_string()));
         }
-        let meta = self.management.lookup(id)?.clone();
-        if !matches!(meta.layout, Layout::Scattered) {
-            return Err(Error::Handle(format!(
-                "allgather needs a scattered array; `{id}` is {:?}",
-                meta.layout
-            )));
+        {
+            let meta = self.management.lookup(id)?;
+            if !matches!(meta.layout, Layout::Scattered) {
+                return Err(Error::Handle(format!(
+                    "allgather needs a scattered array; `{id}` is {:?}",
+                    meta.layout
+                )));
+            }
         }
-        // Gather (timed; forces a deferred producer) ...
-        let full = self.gather(id)?;
-        // ... and broadcast the complete array (timed + registered).
-        self.broadcast(new_id, &full, meta.type_size)?;
+        // A deferred producer can fold this pull into its own pipelined
+        // launch (scatter ∥ exec ∥ pull); otherwise the pull is charged
+        // with the merge phase below.  A still-deferred scatter charge
+        // with no launch in between flushes monolithically, as in
+        // `gather`.
+        let folded_pull = self.pipelined_gather_charge(id)?;
+        self.force_array(id)?;
+        if !folded_pull {
+            self.flush_own_xfer(id);
+        }
+        let meta = self.management.lookup(id)?.clone();
+        let total_words = (meta.len * meta.type_size as u64 / 4) as usize;
+
+        // Host root reassembles the pieces: zero-copy views, backend
+        // concat (sharded across workers on the parallel backend).
+        let full = {
+            let backend = self.backend.as_ref();
+            let m = &meta;
+            self.machine.with_row_words(meta.addr, &|dpu| m.bytes_on(dpu), |parts| {
+                backend.concat_rows(parts, total_words)
+            })?
+        };
+
+        // Register the complete array on every DPU (functional write;
+        // the broadcast transfer is charged with the merge phase).
+        let out_bytes = full.len() as u64 * 4;
+        let out_padded = round_up(out_bytes, self.machine.cfg.dma_align);
+        self.register_broadcast_rows(new_id, meta.len, meta.type_size, out_padded, &full)?;
+
+        // Modeled cost: pull the scattered pieces (unless a pipelined
+        // producer already folded it), concat, broadcast the full
+        // array — overlapped chunk-by-chunk in pipelined mode.
+        let plan = MergePlan::concat(
+            self.machine.n_dpus() as u64,
+            total_words as u64,
+            self.backend.merge_strategy(),
+        );
+        let pull_row_bytes = if folded_pull { 0 } else { meta.padded_bytes };
+        self.charge_merge_phase(&plan, pull_row_bytes, out_padded);
+
         let kind = self.backend.kind();
         self.engine.record_executed(PlanOp::Allgather, new_id, &[id], meta.len, kind);
         Ok(())

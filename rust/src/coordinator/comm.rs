@@ -33,19 +33,17 @@ impl PimSystem {
         let bytes = words_to_bytes(data);
         let len = check_elems(&bytes, type_size)?;
         let padded = round_up(bytes.len() as u64, self.machine.cfg.dma_align);
-        let addr = self.pool_alloc(padded.max(8))?;
-        let mut buf = bytes;
-        buf.resize(padded as usize, 0);
-        self.machine.push_broadcast(addr, &buf)?;
-        self.management.register(ArrayMeta {
-            id: id.to_string(),
-            len,
-            type_size,
-            per_dpu: vec![len; self.machine.n_dpus()],
-            addr,
-            padded_bytes: padded,
-            layout: Layout::Broadcast,
-        })?;
+        // Functional install + registration (shared with the merge
+        // engine's result registration), then the timed broadcast push
+        // — exactly what `push_broadcast` charges.
+        self.register_broadcast_rows(id, len, type_size, padded, data)?;
+        let t = crate::pim::xfer::transfer_seconds(
+            &self.machine.cfg,
+            crate::pim::XferKind::Broadcast,
+            self.machine.n_dpus(),
+            padded,
+        );
+        self.machine.charge_h2p(t, padded);
         let kind = self.backend.kind();
         self.engine.record_executed(PlanOp::Broadcast, id, &[], len, kind);
         Ok(())
@@ -173,11 +171,12 @@ impl PimSystem {
                         &|dpu| m.bytes_on(dpu),
                     )?
                 };
-                let mut out = Vec::with_capacity((meta.len * meta.type_size as u64 / 4) as usize);
-                for row in rows {
-                    out.extend(row);
-                }
-                Ok(out)
+                // Dense reassembly through the backend's concat hook
+                // (the parallel backend shards big gathers across its
+                // workers; order is DPU order either way).
+                let total = (meta.len * meta.type_size as u64 / 4) as usize;
+                let views: Vec<&[i32]> = rows.iter().map(|r| r.as_slice()).collect();
+                Ok(self.backend.concat_rows(&views, total))
             }
             Layout::Broadcast => {
                 let bytes = meta.len * meta.type_size as u64;
@@ -195,8 +194,9 @@ impl PimSystem {
     /// (scatter chunk k+1 ∥ exec chunk k ∥ gather chunk k−1).  Returns
     /// whether the pull was folded in; `false` means the caller charges
     /// the pull normally.  Functional materialization still happens in
-    /// `force_array` (the chain is merely marked charged here).
-    fn pipelined_gather_charge(&mut self, id: &str) -> Result<bool> {
+    /// `force_array` (the chain is merely marked charged here).  Also
+    /// used by `allgather`, whose pull feeds the merge engine's concat.
+    pub(crate) fn pipelined_gather_charge(&mut self, id: &str) -> Result<bool> {
         if !self.pipeline_active() {
             return Ok(false);
         }
@@ -309,6 +309,26 @@ pub(crate) fn words_into_bytes(words: &[i32], out: &mut [u8]) {
     }
 }
 
+/// Borrow little-endian bytes as i32 words **without copying** when the
+/// slice is 4-byte aligned (and the target is little-endian); `None`
+/// otherwise — callers fall back to [`bytes_to_words`].  The merge
+/// engine's pull side (DESIGN.md §13) reads every DPU's partial through
+/// this view, killing the seed's per-buffer staging copy.
+pub(crate) fn bytes_as_words(bytes: &[u8]) -> Option<&[i32]> {
+    if bytes.len() % 4 != 0 || !cfg!(target_endian = "little") {
+        return None;
+    }
+    // SAFETY: every bit pattern is a valid i32; align_to guarantees the
+    // middle slice is correctly aligned, and we accept the view only
+    // when it covers the whole input.
+    let (pre, words, post) = unsafe { bytes.align_to::<i32>() };
+    if pre.is_empty() && post.is_empty() {
+        Some(words)
+    } else {
+        None
+    }
+}
+
 /// Unpack little-endian bytes into i32 words (length must be 4-aligned).
 pub(crate) fn bytes_to_words(bytes: &[u8]) -> Vec<i32> {
     debug_assert_eq!(bytes.len() % 4, 0);
@@ -329,6 +349,32 @@ pub(crate) fn bytes_to_words(bytes: &[u8]) -> Vec<i32> {
             .chunks_exact(4)
             .map(|c| i32::from_le_bytes([c[0], c[1], c[2], c[3]]))
             .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn word_view_roundtrips_without_copying() {
+        let words = vec![1i32, -2, i32::MAX, i32::MIN, 0];
+        let bytes = words_to_bytes(&words);
+        match bytes_as_words(&bytes) {
+            // Little-endian targets with an aligned Vec: a true view.
+            Some(view) => {
+                assert_eq!(view, words.as_slice());
+                assert_eq!(view.as_ptr() as usize, bytes.as_ptr() as usize, "zero-copy");
+            }
+            // Misaligned or big-endian: callers use the copying path.
+            None => assert_eq!(bytes_to_words(&bytes), words),
+        }
+        // Odd lengths never view.
+        assert!(bytes_as_words(&bytes[..6]).is_none());
+        // The empty slice always views (trivially aligned).
+        if cfg!(target_endian = "little") {
+            assert_eq!(bytes_as_words(&[]), Some(&[][..]));
+        }
     }
 }
 

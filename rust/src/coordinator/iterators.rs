@@ -25,12 +25,12 @@ use crate::error::{Error, Result};
 use crate::timing;
 use crate::util::round_up;
 
-use super::comm::{bytes_to_words, words_to_bytes};
+use super::comm::{words_into_bytes, words_to_bytes};
 use super::exec::Inputs;
 use super::handle::{Handle, TransformKind};
 use super::management::{ArrayMeta, Layout};
 use super::optimizer;
-use super::plan::{CacheKey, NodeState, PendingNode, PlanOp};
+use super::plan::{CacheKey, MergePlan, NodeState, PendingNode, PlanOp};
 use super::PimSystem;
 
 impl PimSystem {
@@ -361,44 +361,53 @@ impl PimSystem {
             self.engine.note(format!("plan-cache hit for reduction `{dest_id}`"));
         }
 
-        // --- PIM -> host: partials land in a (pooled) scratch region,
-        //     then the timed parallel gather pulls them (the paper's
+        // --- PIM -> host: partials land in a (pooled) scratch region
+        //     via the backend's sharded row write (the paper's
         //     "gathered to the host and combined using a host version
-        //     of acc_func").
+        //     of acc_func"); the timed pull is charged with the merge
+        //     phase below.
         let part_bytes = round_up(output_len * 4, 8).max(8);
         let scratch = self.pool_alloc(part_bytes)?;
-        for (dpu, p) in partials.iter().enumerate() {
-            self.machine.write_bytes(dpu, scratch, &words_to_bytes(p))?;
-        }
-        let pulled = self.machine.pull_parallel(scratch, part_bytes, self.machine.n_dpus())?;
+        let prows: &[Vec<i32>] = &partials;
+        self.machine.write_rows_with(
+            scratch,
+            part_bytes as usize,
+            self.backend.as_ref(),
+            &|dpu, buf| {
+                if let Some(w) = prows.get(dpu) {
+                    words_into_bytes(w, &mut buf[..w.len() * 4]);
+                }
+            },
+        )?;
+
+        // --- host merge through the merge engine (DESIGN.md §13):
+        //     zero-copy word views over the partials, combined by the
+        //     backend's strategy (seed serial fold / fixed-order tree /
+        //     worker-sharded tree — bit-identical for the associative
+        //     accumulators).
+        let acc = handle.func.acc();
+        let merged = {
+            let backend = self.backend.as_ref();
+            self.machine.with_row_words(scratch, &|_| output_len * 4, |parts| {
+                backend.combine_rows(acc, parts, output_len as usize)
+            })?
+        };
         self.pool_free(scratch, part_bytes)?;
 
-        // --- host merge (OpenMP analog; modeled + functional).
-        let acc = handle.func.acc();
-        let mut merged = vec![0i32; output_len as usize];
-        for buf in &pulled {
-            let words = bytes_to_words(&buf[..(output_len * 4) as usize]);
-            for (m, v) in merged.iter_mut().zip(words) {
-                *m = acc(*m, v);
-            }
-        }
-        self.machine.charge_host_merge(output_len * self.machine.n_dpus() as u64);
-
         // --- register the merged result as a broadcast array (pooled
-        //     allocation: training loops recycle it every iteration).
-        let addr = self.pool_alloc(part_bytes)?;
-        let mut buf = words_to_bytes(&merged);
-        buf.resize(part_bytes as usize, 0);
-        self.machine.push_broadcast(addr, &buf)?;
-        self.management.register(ArrayMeta {
-            id: dest_id.to_string(),
-            len: output_len,
-            type_size: 4,
-            per_dpu: vec![output_len; self.machine.n_dpus()],
-            addr,
-            padded_bytes: part_bytes,
-            layout: Layout::Broadcast,
-        })?;
+        //     allocation: training loops recycle it every iteration;
+        //     the broadcast transfer is charged with the merge phase).
+        self.register_broadcast_rows(dest_id, output_len, 4, part_bytes, &merged)?;
+
+        // --- modeled cost of the finalization: pull the partials,
+        //     combine (tree vs serial per the backend), broadcast the
+        //     result — overlapped chunk-by-chunk in pipelined mode.
+        let mplan = MergePlan::reduce(
+            self.machine.n_dpus() as u64,
+            output_len,
+            self.backend.merge_strategy(),
+        );
+        self.charge_merge_phase(&mplan, part_bytes, part_bytes);
         let kind = self.backend.kind();
         self.engine.record_executed(
             PlanOp::Red { func: format!("{:?}", handle.func), output_len },

@@ -21,10 +21,10 @@
 use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
 
-use crate::backend::BackendKind;
+use crate::backend::{BackendKind, MergeStrategy};
 use crate::error::Result;
 use crate::pim::pipeline::{self, PipeSchedule, PipelineMode};
-use crate::pim::XferKind;
+use crate::pim::{PimConfig, XferKind};
 use crate::timing::{KernelProfile, ReduceVariant};
 use crate::util::round_up;
 
@@ -206,6 +206,120 @@ pub struct PlanStats {
     /// Launches charged as chunked, double-buffered pipelines
     /// (DESIGN.md §12).
     pub pipelined_launches: u64,
+}
+
+/// What one merge-engine phase does (DESIGN.md §13).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MergeKind {
+    /// Elementwise reduce of `parts` equal-length partials (`allreduce`
+    /// and the `array_red` finalization).
+    Reduce,
+    /// Ordered concatenation of per-DPU pieces (the gather side of
+    /// `allgather`); `len` is the total output words.
+    Concat,
+}
+
+/// The shared host-combine descriptor every collective and reduction
+/// finalization routes through: what is merged, and with which backend
+/// strategy.  The modeled cost rules (charged to the `Timeline` merge
+/// lane by [`PimSystem::charge_merge_phase`]):
+///
+/// * serial reduce — the seed reference fold: `parts × len` staged
+///   elements (the bytes→words pass) plus `(parts − 1) × len` combines,
+///   all on one thread;
+/// * tree reduce — ⌈log₂ parts⌉ levels of pairwise merges over
+///   zero-copy views, level ℓ costing `⌈pairs_ℓ / threads⌉ × len`
+///   combines (so with enough workers the whole tree costs
+///   `⌈log₂ parts⌉ × len`);
+/// * concat — `len` copied words, serial or sharded `⌈len/threads⌉`.
+///
+/// Worker counts are capped by the machine's `host_threads`; the
+/// element rate is `host_merge_rate` per thread.  The *combine count*
+/// (`(parts − 1) × len` per reduce) is strategy-invariant — the fix for
+/// the seed's off-by-one, which charged `parts × len`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MergePlan {
+    pub kind: MergeKind,
+    /// Partial buffers merged (n_dpus).
+    pub parts: u64,
+    /// Words per partial (reduce) or total output words (concat).
+    pub len: u64,
+    pub strategy: MergeStrategy,
+}
+
+impl MergePlan {
+    pub fn reduce(parts: u64, len: u64, strategy: MergeStrategy) -> MergePlan {
+        MergePlan { kind: MergeKind::Reduce, parts, len, strategy }
+    }
+
+    pub fn concat(parts: u64, total_words: u64, strategy: MergeStrategy) -> MergePlan {
+        MergePlan { kind: MergeKind::Concat, parts, len: total_words, strategy }
+    }
+
+    /// Elementwise combine operations (reduce) or copied words
+    /// (concat) the phase performs — strategy-invariant.
+    pub fn combine_elems(&self) -> u64 {
+        match self.kind {
+            MergeKind::Reduce => self.parts.saturating_sub(1) * self.len,
+            MergeKind::Concat => self.len,
+        }
+    }
+
+    /// Tree levels the strategy executes (0 for the serial fold; 1 for
+    /// a sharded concat).
+    pub fn levels(&self) -> u64 {
+        match self.strategy {
+            MergeStrategy::Serial => 0,
+            MergeStrategy::Tree { .. } => match self.kind {
+                MergeKind::Concat => 1,
+                MergeKind::Reduce => {
+                    let mut remaining = self.parts.max(1);
+                    let mut levels = 0u64;
+                    while remaining > 1 {
+                        remaining -= remaining / 2;
+                        levels += 1;
+                    }
+                    levels
+                }
+            },
+        }
+    }
+
+    /// Modeled seconds under this plan's strategy.
+    pub fn seconds(&self, cfg: &PimConfig) -> f64 {
+        let rate = cfg.host_merge_rate;
+        let threads = self.strategy.threads().min(cfg.host_threads.max(1)) as u64;
+        match (self.kind, self.strategy) {
+            (_, MergeStrategy::Serial) => self.serial_seconds(cfg),
+            (MergeKind::Concat, MergeStrategy::Tree { .. }) => {
+                self.len.div_ceil(threads.max(1)) as f64 / rate
+            }
+            (MergeKind::Reduce, MergeStrategy::Tree { .. }) => {
+                let t = threads.max(1);
+                let mut remaining = self.parts.max(1);
+                let mut level_units = 0u64;
+                while remaining > 1 {
+                    let pairs = remaining / 2;
+                    level_units += pairs.div_ceil(t);
+                    remaining -= pairs;
+                }
+                (level_units * self.len) as f64 / rate
+            }
+        }
+    }
+
+    /// What the serial reference path charges for the same phase (the
+    /// `--explain` comparison line, and the seq backend's actual cost).
+    pub fn serial_seconds(&self, cfg: &PimConfig) -> f64 {
+        let rate = cfg.host_merge_rate;
+        match self.kind {
+            // Staged elements + combines, one thread.
+            MergeKind::Reduce => {
+                (self.parts * self.len + self.combine_elems()) as f64 / rate
+            }
+            MergeKind::Concat => self.len as f64 / rate,
+        }
+    }
 }
 
 /// Key of one cached reduction plan.  Everything the variant choice
@@ -531,6 +645,20 @@ impl PimSystem {
             tl.overlap_saved_s * 1e3,
             self.engine.pending_xfers.len(),
         ));
+        if tl.merges > 0 {
+            out.push_str(&format!(
+                "  merge lane: {} merge(s) | {} combine elems | tree levels {} | {:.3} ms \
+                 (serial fold: {:.3} ms, {:.2}x) | pipelined merges {} saving {:.3} ms\n",
+                tl.merges,
+                tl.merge_elems,
+                tl.merge_levels,
+                tl.merge_s * 1e3,
+                tl.merge_serial_s * 1e3,
+                if tl.merge_s > 0.0 { tl.merge_serial_s / tl.merge_s } else { 1.0 },
+                tl.pipelined_merges,
+                tl.merge_overlap_saved_s * 1e3,
+            ));
+        }
         out.push_str("  nodes:\n");
         if self.engine.graph.dropped > 0 {
             out.push_str(&format!(
@@ -848,6 +976,106 @@ impl PimSystem {
         }
     }
 
+    /// Write the same word row to every bank at `addr` (zero-padded to
+    /// `row_len` bytes) — the merge engine's functional push-back.
+    /// Marshals the words once, then copies the row per bank through
+    /// the backend-sharded row write.  No timing: the broadcast
+    /// transfer is charged by the caller ([`Self::charge_merge_phase`]
+    /// or `broadcast`).
+    pub(crate) fn write_rows_broadcast(
+        &mut self,
+        addr: u64,
+        row_len: usize,
+        words: &[i32],
+    ) -> Result<()> {
+        let mut bytes = super::comm::words_to_bytes(words);
+        bytes.resize(row_len, 0);
+        let src = &bytes;
+        self.machine.write_rows_with(addr, row_len, self.backend.as_ref(), &|_dpu, buf| {
+            buf.copy_from_slice(src);
+        })
+    }
+
+    /// Functionally install `words` as a broadcast-layout array on
+    /// every DPU and register it — the shared tail of `broadcast()`,
+    /// `allgather`, and the `array_red` result registration, so the
+    /// broadcast-array invariants (pooled `padded.max(8)` allocation,
+    /// `per_dpu = len` everywhere, zero-padded rows) live in one
+    /// place.  No timing: callers charge the push themselves.
+    pub(crate) fn register_broadcast_rows(
+        &mut self,
+        id: &str,
+        len: u64,
+        type_size: u32,
+        padded_bytes: u64,
+        words: &[i32],
+    ) -> Result<u64> {
+        let addr = self.pool_alloc(padded_bytes.max(8))?;
+        self.write_rows_broadcast(addr, padded_bytes as usize, words)?;
+        self.management.register(super::management::ArrayMeta {
+            id: id.to_string(),
+            len,
+            type_size,
+            per_dpu: vec![len; self.machine.n_dpus()],
+            addr,
+            padded_bytes,
+            layout: super::management::Layout::Broadcast,
+        })?;
+        Ok(addr)
+    }
+
+    /// Charge one merge-engine phase (DESIGN.md §13): the partial pull
+    /// (equal-buffer parallel command of `pull_row_bytes` per DPU, 0 =
+    /// already charged elsewhere), the host combine per `plan`'s
+    /// strategy, and the broadcast push-back of `push_bytes` (0 =
+    /// none).  In pipelined mode the three phases are additionally
+    /// overlapped chunk-by-chunk — pull chunk `k` ∥ combine chunk
+    /// `k−1` ∥ push-back chunk `k−2` — with the savings recorded in
+    /// the overlap lane; lane charges themselves stay mode-invariant.
+    pub(crate) fn charge_merge_phase(
+        &mut self,
+        plan: &MergePlan,
+        pull_row_bytes: u64,
+        push_bytes: u64,
+    ) {
+        let n = self.machine.n_dpus();
+        let cfg = &self.machine.cfg;
+        let pull_s =
+            crate::pim::xfer::transfer_seconds(cfg, XferKind::Parallel, n, pull_row_bytes);
+        let push_s =
+            crate::pim::xfer::transfer_seconds(cfg, XferKind::Broadcast, n, push_bytes);
+        let merge_s = plan.seconds(cfg);
+        let serial_s = plan.serial_seconds(cfg);
+        if pull_row_bytes > 0 {
+            self.machine.charge_p2h(pull_s, n as u64 * pull_row_bytes);
+        }
+        self.machine.charge_merge(merge_s, serial_s, plan.combine_elems(), plan.levels());
+        if push_bytes > 0 {
+            // Broadcast payload is counted once on the bus.
+            self.machine.charge_h2p(push_s, push_bytes);
+        }
+        if self.pipeline_active() {
+            let sched = pipeline::merge_schedule(
+                &self.machine.cfg,
+                n,
+                pull_row_bytes,
+                merge_s,
+                push_bytes,
+                XferKind::Broadcast,
+            );
+            if sched.chunks > 1 && self.pipeline_accepts(&sched) {
+                self.machine.charge_merge_overlap(sched.saved_s, sched.chunks as u64);
+                self.engine.note(format!(
+                    "pipelined merge ({:?}, {} parts): {} chunks, saved {:.3} ms",
+                    plan.kind,
+                    plan.parts,
+                    sched.chunks,
+                    sched.saved_s * 1e3
+                ));
+            }
+        }
+    }
+
     pub(crate) fn charge_xfer_rows(&mut self, row_bytes: u64) {
         let n = self.machine.n_dpus();
         let t = crate::pim::xfer::transfer_seconds(
@@ -1085,6 +1313,62 @@ mod tests {
         assert!(!p.put(8, 0xdead), "overflow blocks are rejected");
         assert_eq!(p.drain_addrs().len(), POOL_CAP);
         assert_eq!(p.len(), 0);
+    }
+
+    #[test]
+    fn merge_plan_costs_follow_strategy() {
+        let cfg = crate::pim::PimConfig::upmem(32);
+        let rate = cfg.host_merge_rate;
+        let len = 1000u64;
+
+        // The off-by-one fix: a 32-way reduce performs 31 × len
+        // combines, never 32 × len, under every strategy.
+        for strategy in [
+            MergeStrategy::Serial,
+            MergeStrategy::Tree { threads: 1 },
+            MergeStrategy::Tree { threads: 8 },
+        ] {
+            assert_eq!(MergePlan::reduce(32, len, strategy).combine_elems(), 31 * len);
+        }
+
+        let serial = MergePlan::reduce(32, len, MergeStrategy::Serial);
+        assert_eq!(serial.levels(), 0);
+        // Staged (32 × len) + combines (31 × len), one thread.
+        assert!((serial.seconds(&cfg) - 63.0 * len as f64 / rate).abs() < 1e-15);
+        assert_eq!(serial.seconds(&cfg), serial.serial_seconds(&cfg));
+
+        let gang = MergePlan::reduce(32, len, MergeStrategy::Tree { threads: 1 });
+        assert_eq!(gang.levels(), 5);
+        assert!((gang.seconds(&cfg) - 31.0 * len as f64 / rate).abs() < 1e-15);
+
+        let tree = MergePlan::reduce(32, len, MergeStrategy::Tree { threads: 8 });
+        assert_eq!(tree.levels(), 5);
+        // Level pair counts 16,8,4,2,1 -> ceil(/8) = 2,1,1,1,1 = 6.
+        assert!((tree.seconds(&cfg) - 6.0 * len as f64 / rate).abs() < 1e-15);
+        assert!(tree.seconds(&cfg) < gang.seconds(&cfg));
+        assert!(gang.seconds(&cfg) < serial.seconds(&cfg));
+
+        // Degenerate shapes.
+        assert_eq!(MergePlan::reduce(1, len, MergeStrategy::Tree { threads: 4 }).levels(), 0);
+        assert_eq!(
+            MergePlan::reduce(1, len, MergeStrategy::Tree { threads: 4 }).combine_elems(),
+            0
+        );
+        assert_eq!(MergePlan::reduce(7, 0, MergeStrategy::Serial).seconds(&cfg), 0.0);
+
+        // Concat: copied words, sharded by the tree strategy.
+        let cs = MergePlan::concat(4, 8000, MergeStrategy::Serial);
+        assert!((cs.seconds(&cfg) - 8000.0 / rate).abs() < 1e-15);
+        let cp = MergePlan::concat(4, 8000, MergeStrategy::Tree { threads: 8 });
+        assert!((cp.seconds(&cfg) - 1000.0 / rate).abs() < 1e-15);
+        assert_eq!(cp.levels(), 1);
+
+        // Worker counts cap at the machine's host threads.
+        let capped = MergePlan::concat(4, 8000, MergeStrategy::Tree { threads: 1 << 20 });
+        assert!(
+            (capped.seconds(&cfg) - (8000f64 / cfg.host_threads as f64).ceil() / rate).abs()
+                < 1e-12
+        );
     }
 
     #[test]

@@ -45,19 +45,47 @@ pub struct Timeline {
     pub pipelined_launches: u64,
     /// Total chunks across pipelined launches.
     pub pipeline_chunks: u64,
+    /// The merge engine's lane (DESIGN.md §13): host-side combine
+    /// seconds of collectives and reduction finalizations, charged per
+    /// the executing backend's merge strategy (serial fold vs
+    /// ⌈log₂ n⌉-depth tree).  `host_merge_s` keeps the other host-root
+    /// work (e.g. the scan base pass).
+    pub merge_s: f64,
+    /// What the serial reference fold would have charged for the same
+    /// merges (`--explain` shows the win as merge_serial_s / merge_s).
+    pub merge_serial_s: f64,
+    /// Elementwise combine operations performed by those merges —
+    /// `(n_dpus − 1) × len` per reduce, strategy-invariant.
+    pub merge_elems: u64,
+    /// Tree levels executed (0 for the serial fold).
+    pub merge_levels: u64,
+    /// Merge-engine invocations.
+    pub merges: u64,
+    /// Merges whose pull ∥ combine ∥ push-back phases were overlapped
+    /// by the chunk pipeline.
+    pub pipelined_merges: u64,
+    /// Seconds hidden by pipelined merge phases — kept separate from
+    /// `overlap_saved_s` (which stays kernel-launch-only and
+    /// backend-invariant) because merge overlap scales with the
+    /// backend's merge strategy.  Subtracted in [`Timeline::total_s`].
+    pub merge_overlap_saved_s: f64,
+    /// Total chunks across pipelined merge phases.
+    pub merge_chunks: u64,
 }
 
 impl Timeline {
     /// End-to-end modeled seconds.
     pub fn total_s(&self) -> f64 {
         self.host_to_pim_s + self.pim_to_host_s + self.kernel_s + self.host_merge_s
+            + self.merge_s
             + self.launch_s
             - self.overlap_saved_s
+            - self.merge_overlap_saved_s
     }
 
-    /// Communication-only seconds (both directions + merge).
+    /// Communication-only seconds (both directions + merges).
     pub fn comm_s(&self) -> f64 {
-        self.host_to_pim_s + self.pim_to_host_s + self.host_merge_s
+        self.host_to_pim_s + self.pim_to_host_s + self.host_merge_s + self.merge_s
     }
 }
 
@@ -268,6 +296,39 @@ impl PimMachine {
         Ok(out)
     }
 
+    /// Borrow every bank's live row at `addr` as i32 word views and
+    /// hand them to `f` — the merge engine's zero-copy pull side
+    /// (DESIGN.md §13).  `take(dpu)` bytes per bank must be 4-aligned;
+    /// rows whose bank bytes happen to be misaligned for an in-place
+    /// view (or any row on a big-endian host) are staged through a
+    /// fresh word buffer instead, so results never depend on allocator
+    /// luck.  Functional only: the timed pull is charged separately.
+    pub fn with_row_words<R>(
+        &self,
+        addr: u64,
+        take: &dyn Fn(usize) -> u64,
+        f: impl FnOnce(&[&[i32]]) -> R,
+    ) -> Result<R> {
+        use crate::coordinator::comm::{bytes_as_words, bytes_to_words};
+        let mut raw: Vec<&[u8]> = Vec::with_capacity(self.banks.len());
+        for (dpu, bank) in self.banks.iter().enumerate() {
+            raw.push(bank.read(addr, take(dpu))?);
+        }
+        let staged: Vec<Option<Vec<i32>>> = raw
+            .iter()
+            .map(|b| if bytes_as_words(b).is_some() { None } else { Some(bytes_to_words(b)) })
+            .collect();
+        let views: Vec<&[i32]> = raw
+            .iter()
+            .zip(&staged)
+            .map(|(b, s)| match s {
+                Some(v) => v.as_slice(),
+                None => bytes_as_words(b).expect("alignment checked above"),
+            })
+            .collect();
+        Ok(f(&views))
+    }
+
     /// Charge host->PIM transfer seconds computed elsewhere (the chunk
     /// scheduler's busy time, or a deferred scatter's monolithic flush)
     /// without touching functional state.
@@ -289,6 +350,29 @@ impl PimMachine {
         self.timeline.overlap_saved_s += saved_s;
         self.timeline.pipelined_launches += 1;
         self.timeline.pipeline_chunks += chunks;
+    }
+
+    /// Charge one merge-engine combine to the merge lane (DESIGN.md
+    /// §13): `seconds` per the executing strategy, `serial_s` what the
+    /// serial reference fold would have cost, `elems` the
+    /// strategy-invariant combine count, `levels` the tree depth (0
+    /// for the serial fold).
+    pub fn charge_merge(&mut self, seconds: f64, serial_s: f64, elems: u64, levels: u64) {
+        self.timeline.merge_s += seconds;
+        self.timeline.merge_serial_s += serial_s;
+        self.timeline.merge_elems += elems;
+        self.timeline.merge_levels += levels;
+        self.timeline.merges += 1;
+    }
+
+    /// Record one pipelined merge phase: pull chunk `k` ∥ combine
+    /// chunk `k−1` ∥ push-back chunk `k−2` hid `saved_s` seconds
+    /// across `chunks` chunks (its own lane, so the kernel-launch
+    /// overlap lane stays backend-invariant).
+    pub fn charge_merge_overlap(&mut self, saved_s: f64, chunks: u64) {
+        self.timeline.merge_overlap_saved_s += saved_s;
+        self.timeline.pipelined_merges += 1;
+        self.timeline.merge_chunks += chunks;
     }
 
     // ---------------------------------------------------------------
@@ -511,6 +595,54 @@ mod tests {
         assert_eq!(ra, rb);
         // Chunked I/O is functional only: no modeled time.
         assert_eq!(b.timeline(), Timeline::default());
+    }
+
+    #[test]
+    fn with_row_words_views_live_bytes() {
+        let mut m = machine();
+        let addr = m.alloc(16).unwrap();
+        for d in 0..4 {
+            let words: Vec<i32> = (0..4).map(|j| (d * 100 + j) as i32).collect();
+            m.write_bytes(d, addr, &crate::coordinator::comm::words_to_bytes(&words)).unwrap();
+        }
+        // Ragged takes: DPU 2 contributes nothing, DPU 3 one word.
+        let take = |dpu: usize| match dpu {
+            2 => 0,
+            3 => 4,
+            _ => 16,
+        };
+        let sums = m
+            .with_row_words(addr, &take, |views| {
+                assert_eq!(views.len(), 4);
+                views.iter().map(|v| v.iter().sum::<i32>()).collect::<Vec<i32>>()
+            })
+            .unwrap();
+        assert_eq!(sums, vec![6, 100 + 101 + 102 + 103, 0, 300]);
+        // Functional only: nothing charged.
+        assert_eq!(m.timeline(), Timeline::default());
+    }
+
+    #[test]
+    fn merge_lane_charges_accumulate_and_subtract_overlap() {
+        let mut m = machine();
+        m.charge_merge(0.2, 0.5, 31, 5);
+        m.charge_merge(0.1, 0.2, 7, 0);
+        let t = m.timeline();
+        assert_eq!(t.merges, 2);
+        assert_eq!(t.merge_elems, 38);
+        assert_eq!(t.merge_levels, 5);
+        assert!((t.merge_s - 0.3).abs() < 1e-12);
+        assert!((t.merge_serial_s - 0.7).abs() < 1e-12);
+        assert!((t.total_s() - 0.3).abs() < 1e-12, "merge lane counts in total");
+        assert!((t.comm_s() - 0.3).abs() < 1e-12);
+        m.charge_merge_overlap(0.05, 8);
+        let t = m.timeline();
+        assert_eq!(t.pipelined_merges, 1);
+        assert_eq!(t.merge_chunks, 8);
+        assert_eq!(t.pipeline_chunks, 0, "kernel-pipeline counters untouched");
+        assert_eq!(t.pipelined_launches, 0, "a merge is not a kernel launch");
+        assert_eq!(t.overlap_saved_s, 0.0, "kernel overlap lane stays merge-free");
+        assert!((t.total_s() - 0.25).abs() < 1e-12);
     }
 
     #[test]

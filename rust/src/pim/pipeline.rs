@@ -342,6 +342,65 @@ pub fn schedule(
     best
 }
 
+/// Cost model of one pipelined **merge phase** (DESIGN.md §13): the
+/// host-rooted collectives end in pull-partials → host combine →
+/// push-back, and chunking the accumulator by element range lets chunk
+/// `k`'s pull run concurrently with chunk `k−1`'s combine and chunk
+/// `k−2`'s push-back — the same three-lane, double-buffered makespan
+/// model as [`schedule`], with the host merge in the execution lane
+/// and the broadcast push-back in the output lane.
+///
+/// Unlike [`schedule`], the busy lanes report the **monolithic**
+/// transfer charges (what the unpipelined path charges), so the
+/// per-direction `Timeline` attribution stays mode-invariant; all
+/// chunking overhead and all overlap live in `critical_s` / `saved_s`.
+/// The monolithic candidate (`chunks == 1`, critical exactly the
+/// serial sum) floors the search, so `saved_s >= 0` always.
+pub fn merge_schedule(
+    cfg: &PimConfig,
+    n_dpus: usize,
+    pull_row_bytes: u64,
+    merge_s: f64,
+    push_bytes: u64,
+    push_kind: XferKind,
+) -> PipeSchedule {
+    let busy_in = transfer_seconds(cfg, XferKind::Parallel, n_dpus, pull_row_bytes);
+    let busy_out = transfer_seconds(cfg, push_kind, n_dpus, push_bytes);
+    let serial = busy_in + merge_s + busy_out;
+    let max_c = chunk_count(cfg, pull_row_bytes + push_bytes);
+    let mut best_critical = serial;
+    let mut best_chunks = 1usize;
+    let mut c = 2usize;
+    while c <= max_c {
+        let split_in = split_aligned(pull_row_bytes, c, cfg.dma_align);
+        let split_out = split_aligned(push_bytes, c, cfg.dma_align);
+        let s: Vec<f64> = split_in
+            .iter()
+            .map(|&b| transfer_seconds(cfg, XferKind::Parallel, n_dpus, b))
+            .collect();
+        let g: Vec<f64> =
+            split_out.iter().map(|&b| transfer_seconds(cfg, push_kind, n_dpus, b)).collect();
+        let k = vec![merge_s / c as f64; c];
+        let critical = makespan(&s, &k, &g, cfg.pipeline_in_flight);
+        if critical < best_critical {
+            best_critical = critical;
+            best_chunks = c;
+        }
+        if c == max_c {
+            break;
+        }
+        c = (c * 2).min(max_c);
+    }
+    PipeSchedule {
+        chunks: best_chunks,
+        busy_in_s: busy_in,
+        busy_exec_s: merge_s,
+        busy_out_s: busy_out,
+        critical_s: best_critical,
+        saved_s: (serial - best_critical).max(0.0),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -484,6 +543,36 @@ mod tests {
                 .abs()
                 < 1e-12
         );
+    }
+
+    #[test]
+    fn merge_schedule_overlaps_pull_combine_and_pushback() {
+        let c = cfg();
+        // 4 MB per-DPU pulls with a hefty combine: chunking must win,
+        // never beating the pull lane, never exceeding the serial sum.
+        let pull = 4u64 << 20;
+        let merge_s = 10e-3;
+        let push = 4u64 << 20;
+        let m = merge_schedule(&c, 32, pull, merge_s, push, XferKind::Broadcast);
+        assert!(m.chunks > 1, "expected chunking, got {}", m.chunks);
+        assert!(m.saved_s > 0.0);
+        let serial = m.busy_in_s + m.busy_exec_s + m.busy_out_s;
+        assert!(m.critical_s <= serial + 1e-15);
+        assert!(m.critical_s >= m.busy_in_s, "cannot beat the busiest lane");
+        assert!((serial - m.critical_s - m.saved_s).abs() < 1e-12);
+        // Busy lanes report the monolithic charges exactly.
+        assert_eq!(m.busy_in_s, transfer_seconds(&c, XferKind::Parallel, 32, pull));
+        assert_eq!(m.busy_out_s, transfer_seconds(&c, XferKind::Broadcast, 32, push));
+
+        // Tiny payloads: the monolithic candidate floors the search.
+        let tiny = merge_schedule(&c, 32, 64, 1e-7, 64, XferKind::Broadcast);
+        assert_eq!(tiny.chunks, 1);
+        assert_eq!(tiny.saved_s, 0.0);
+
+        // Merge-only phases (no transfers) have nothing to overlap.
+        let none = merge_schedule(&c, 32, 0, 5e-3, 0, XferKind::Broadcast);
+        assert_eq!(none.chunks, 1);
+        assert_eq!(none.saved_s, 0.0);
     }
 
     #[test]

@@ -257,12 +257,22 @@ pub fn cmd_run(args: &Args) -> Result<()> {
     println!("  kernel    : {:>10.3} ms ({} launches)", t.kernel_s * 1e3, t.launches);
     println!("  pim->host : {:>10.3} ms ({} B)", t.pim_to_host_s * 1e3, t.bytes_p2h);
     println!("  host merge: {:>10.3} ms", t.host_merge_s * 1e3);
-    if t.pipelined_launches > 0 {
+    if t.merges > 0 {
         println!(
-            "  pipeline  : {:>10.3} ms hidden by overlap ({} pipelined launches, {} chunks)",
-            t.overlap_saved_s * 1e3,
+            "  merge lane: {:>10.3} ms ({} merge(s), {} tree levels; serial fold: {:.3} ms)",
+            t.merge_s * 1e3,
+            t.merges,
+            t.merge_levels,
+            t.merge_serial_s * 1e3
+        );
+    }
+    if t.pipelined_launches > 0 || t.pipelined_merges > 0 {
+        println!(
+            "  pipeline  : {:>10.3} ms hidden by overlap ({} pipelined launches, {} pipelined merges, {} chunks)",
+            (t.overlap_saved_s + t.merge_overlap_saved_s) * 1e3,
             t.pipelined_launches,
-            t.pipeline_chunks
+            t.pipelined_merges,
+            t.pipeline_chunks + t.merge_chunks
         );
     }
     println!("  total     : {:>10.3} ms", t.total_s() * 1e3);

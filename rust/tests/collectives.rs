@@ -1,0 +1,338 @@
+//! Hierarchical merge engine suite (DESIGN.md §13): collective edge
+//! cases, tree-vs-serial parity, the merge lane's timing rules, and
+//! the tentpole's acceptance measurement.
+//!
+//! * edge cases — allreduce/allgather on 1-DPU machines, empty arrays,
+//!   and non-8-aligned `type_size`, across the full backend × pipeline
+//!   matrix;
+//! * parity — tree-merge results are bit-identical to the serial fold
+//!   for every backend and pipeline mode (the accumulators are
+//!   associative, and the tree uses a fixed combine order);
+//! * timing — the merge lane charges `(n_dpus − 1) × len` combines
+//!   (the seed's off-by-one charged `n_dpus × len`), and on the 32-DPU
+//!   bench configs the parallel backend's sharded tree improves the
+//!   modeled total of the reduction and allreduce workloads by ≥ 20%
+//!   over the serial merge path.
+
+use simplepim::backend::{self, BackendKind};
+use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
+use simplepim::pim::{PimConfig, PipelineMode};
+use simplepim::util::prng::Prng;
+use simplepim::workloads::golden;
+
+const BACKENDS: [(BackendKind, usize); 4] = [
+    (BackendKind::Seq, 1),
+    (BackendKind::Gang, 1),
+    (BackendKind::Parallel, 4),
+    (BackendKind::Parallel, 3),
+];
+
+const MODES: [PipelineMode; 3] = [PipelineMode::Off, PipelineMode::On, PipelineMode::Auto];
+
+fn sys(kind: BackendKind, threads: usize, dpus: usize) -> PimSystem {
+    PimSystem::with_backend(PimConfig::tiny(dpus), None, backend::make(kind, threads).unwrap())
+}
+
+/// Run `f` on every backend × pipeline combination; all runs must
+/// return identical bytes, returned for further checks.
+fn matrix<F>(dpus: usize, label: &str, f: F) -> Vec<i32>
+where
+    F: Fn(&mut PimSystem) -> Vec<i32>,
+{
+    let mut golden: Option<Vec<i32>> = None;
+    for mode in MODES {
+        for (kind, threads) in BACKENDS {
+            let mut s = sys(kind, threads, dpus);
+            s.set_pipeline(mode).unwrap();
+            let out = f(&mut s);
+            match &golden {
+                None => golden = Some(out),
+                Some(g) => assert_eq!(
+                    &out, g,
+                    "{label}: {kind} x{threads}, pipeline {mode} diverged"
+                ),
+            }
+        }
+    }
+    golden.expect("matrix ran")
+}
+
+fn min_acc(a: i32, b: i32) -> i32 {
+    a.min(b)
+}
+
+// ---------------------------------------------------------------------
+// Tree-vs-serial parity.
+// ---------------------------------------------------------------------
+
+#[test]
+fn allreduce_tree_merge_bit_identical_to_serial_fold() {
+    let data = Prng::new(21).vec_i32(10_001, -10_000, 10_000);
+    for dpus in [1usize, 2, 7, 8] {
+        let got = matrix(dpus, "allreduce-sum", |s| {
+            s.broadcast("ar", &data, 4).unwrap();
+            let h = s
+                .create_handle(PimFunc::HostAcc(i32::wrapping_add), TransformKind::Red, vec![])
+                .unwrap();
+            s.allreduce("ar", &h).unwrap();
+            assert!(s.backend_stats().merges >= 1, "merge engine must run");
+            s.gather("ar").unwrap()
+        });
+        let want: Vec<i32> = data.iter().map(|v| v.wrapping_mul(dpus as i32)).collect();
+        assert_eq!(got, want, "dpus={dpus}");
+
+        // A non-add accumulator takes the same fixed tree order.
+        let got = matrix(dpus, "allreduce-min", |s| {
+            s.broadcast("ar", &data, 4).unwrap();
+            let h = s.create_handle(PimFunc::HostAcc(min_acc), TransformKind::Red, vec![]).unwrap();
+            s.allreduce("ar", &h).unwrap();
+            s.gather("ar").unwrap()
+        });
+        assert_eq!(got, data, "min over identical copies is the identity (dpus={dpus})");
+    }
+}
+
+#[test]
+fn array_red_finalization_matches_across_matrix() {
+    let data = Prng::new(22).vec_i32(30_000, 0, 4095);
+    let got = matrix(6, "histogram-red", |s| {
+        s.scatter("px", &data, 4).unwrap();
+        let h = s
+            .create_handle(PimFunc::Histogram { bins: 256 }, TransformKind::Red, vec![])
+            .unwrap();
+        s.array_red("px", "hist", 256, &h).unwrap()
+    });
+    assert_eq!(got, golden::histogram(&data, 256));
+}
+
+// ---------------------------------------------------------------------
+// Edge cases: 1 DPU, empty arrays, non-8-aligned type sizes.
+// ---------------------------------------------------------------------
+
+#[test]
+fn collectives_on_a_single_dpu_machine() {
+    let data = vec![3, -1, 4, 1, -5];
+    matrix(1, "1-dpu", |s| {
+        s.broadcast("ar", &data, 4).unwrap();
+        let h = s
+            .create_handle(PimFunc::HostAcc(i32::wrapping_add), TransformKind::Red, vec![])
+            .unwrap();
+        s.allreduce("ar", &h).unwrap();
+        // One copy: allreduce is the identity.
+        assert_eq!(s.gather("ar").unwrap(), data);
+        // Its merge performs zero combines (n − 1 = 0).
+        assert_eq!(s.timeline().merge_elems, 0);
+        assert_eq!(s.timeline().merges, 1);
+
+        s.scatter("sc", &data, 4).unwrap();
+        s.allgather("sc", "all").unwrap();
+        let mut out = s.gather("all").unwrap();
+        assert_eq!(out, data);
+        out.extend(s.gather("sc").unwrap());
+        out
+    });
+}
+
+#[test]
+fn collectives_on_empty_arrays() {
+    matrix(4, "empty", |s| {
+        s.broadcast("ar", &[], 4).unwrap();
+        let h = s
+            .create_handle(PimFunc::HostAcc(i32::wrapping_add), TransformKind::Red, vec![])
+            .unwrap();
+        s.allreduce("ar", &h).unwrap();
+        assert_eq!(s.gather("ar").unwrap(), Vec::<i32>::new());
+
+        s.scatter("sc", &[], 4).unwrap();
+        s.allgather("sc", "all").unwrap();
+        let out = s.gather("all").unwrap();
+        assert!(out.is_empty());
+        // Registered as a broadcast array with zero elements everywhere.
+        let meta = s.management.lookup("all").unwrap().clone();
+        assert_eq!(meta.len, 0);
+        assert!(meta.per_dpu.iter().all(|&e| e == 0));
+        out
+    });
+}
+
+#[test]
+fn collectives_with_non_8_aligned_type_sizes() {
+    // 12- and 20-byte elements: padded per-DPU buffers, never a split
+    // element, and byte-exact reassembly.
+    let mut rng = Prng::new(23);
+    for &ts in &[12u32, 20] {
+        let wpe = (ts / 4) as usize;
+        for &n_elems in &[1usize, 5, 97] {
+            let data = rng.vec_i32(n_elems * wpe, -50_000, 50_000);
+            let got = matrix(5, "odd-ts", |s| {
+                s.scatter("sc", &data, ts).unwrap();
+                s.allgather("sc", "all").unwrap();
+                let meta = s.management.lookup("all").unwrap().clone();
+                assert_eq!(meta.type_size, ts);
+                assert_eq!(meta.len, n_elems as u64);
+                let mut out = s.gather("all").unwrap();
+                // allreduce over an odd-sized broadcast array too.
+                s.broadcast("ar", &data, ts).unwrap();
+                let h = s
+                    .create_handle(
+                        PimFunc::HostAcc(i32::wrapping_add),
+                        TransformKind::Red,
+                        vec![],
+                    )
+                    .unwrap();
+                s.allreduce("ar", &h).unwrap();
+                out.extend(s.gather("ar").unwrap());
+                out
+            });
+            let mut want = data.clone();
+            want.extend(data.iter().map(|v| v.wrapping_mul(5)));
+            assert_eq!(got, want, "ts={ts} n={n_elems}");
+        }
+    }
+}
+
+#[test]
+fn allgather_misuse_fails_before_charging() {
+    let mut s = sys(BackendKind::Seq, 1, 4);
+    s.scatter("sc", &[1, 2, 3], 4).unwrap();
+    s.broadcast("bc", &[7], 4).unwrap();
+    assert!(s.allgather("sc", "bc").is_err(), "duplicate destination");
+    assert!(s.allgather("bc", "out").is_err(), "broadcast source");
+    assert_eq!(s.timeline().merges, 0, "failed collectives charge nothing");
+    assert_eq!(s.timeline().pim_to_host_s, 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Merge-lane timing rules.
+// ---------------------------------------------------------------------
+
+#[test]
+fn allreduce_charges_n_minus_one_combines() {
+    // The seed's off-by-one charged `len × n_dpus` combine passes; the
+    // fold (and the tree) performs exactly `len × (n_dpus − 1)`.
+    let len = 100u64;
+    let data = Prng::new(24).vec_i32(len as usize, -100, 100);
+    for (kind, threads) in BACKENDS {
+        let mut s = sys(kind, threads, 6);
+        s.broadcast("ar", &data, 4).unwrap();
+        let h = s
+            .create_handle(PimFunc::HostAcc(i32::wrapping_add), TransformKind::Red, vec![])
+            .unwrap();
+        s.allreduce("ar", &h).unwrap();
+        let t = s.timeline();
+        assert_eq!(t.merges, 1, "{kind} x{threads}");
+        assert_eq!(t.merge_elems, (6 - 1) * len, "{kind} x{threads}: n−1 combine passes");
+        assert!(t.merge_s > 0.0);
+        // The serial reference additionally stages all n partials.
+        let cfg = PimConfig::tiny(6);
+        let want_serial = ((6 + 5) * len) as f64 / cfg.host_merge_rate;
+        assert!(
+            (t.merge_serial_s - want_serial).abs() < 1e-15,
+            "{kind} x{threads}: serial ref {} vs {}",
+            t.merge_serial_s,
+            want_serial
+        );
+        if kind == BackendKind::Seq {
+            assert!((t.merge_s - t.merge_serial_s).abs() < 1e-15, "seq is the reference");
+            assert_eq!(t.merge_levels, 0);
+        } else {
+            assert!(t.merge_s < t.merge_serial_s, "{kind}: tree must model below serial");
+            assert_eq!(t.merge_levels, 3, "{kind}: ceil(log2 6) levels");
+        }
+    }
+}
+
+#[test]
+fn array_red_merge_lane_replaces_the_host_merge_charge() {
+    let data = Prng::new(25).vec_i32(4_000, -100, 100);
+    let mut s = sys(BackendKind::Seq, 1, 4);
+    s.scatter("x", &data, 4).unwrap();
+    let red = s.create_handle(PimFunc::SumReduce, TransformKind::Red, vec![]).unwrap();
+    s.array_red("x", "sum", 1, &red).unwrap();
+    let t = s.timeline();
+    assert_eq!(t.merges, 1);
+    assert_eq!(t.merge_elems, 3, "(n_dpus − 1) × output_len");
+    assert_eq!(t.host_merge_s, 0.0, "collective combines moved off the legacy lane");
+    assert!(t.merge_s > 0.0);
+    assert!(t.total_s() > 0.0);
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: ≥ 20% modeled win on the 32-DPU bench configs.
+// ---------------------------------------------------------------------
+
+/// Modeled total of the allreduce region (pull + combine + push-back)
+/// at 32 DPUs, plus the result for bit-identity checks.
+fn allreduce_region(kind: BackendKind, threads: usize, mode: PipelineMode) -> (f64, Vec<i32>) {
+    let n = 1usize << 19; // 2 MiB per DPU
+    let data = Prng::new(26).vec_i32(n, -1000, 1000);
+    let mut s = sys(kind, threads, 32);
+    s.set_pipeline(mode).unwrap();
+    s.broadcast("ar", &data, 4).unwrap();
+    let h = s
+        .create_handle(PimFunc::HostAcc(i32::wrapping_add), TransformKind::Red, vec![])
+        .unwrap();
+    s.reset_timeline();
+    s.allreduce("ar", &h).unwrap();
+    let total = s.timeline().total_s();
+    (total, s.gather("ar").unwrap())
+}
+
+/// A host-root-bound reduction: small input, wide accumulator, so the
+/// finalization (pull partials + combine + broadcast result)
+/// dominates, as in the paper's communication-bound workloads.
+fn wide_red(xs: &[i32], _ctx: &[i32], acc: &mut [i32]) {
+    for (i, &x) in xs.iter().enumerate() {
+        let slot = i % acc.len();
+        acc[slot] = acc[slot].wrapping_add(x);
+    }
+}
+
+fn reduction_region(kind: BackendKind, threads: usize, mode: PipelineMode) -> (f64, Vec<i32>) {
+    let out_len = 1u64 << 16;
+    let data = Prng::new(27).vec_i32(1 << 14, -1000, 1000);
+    let mut s = sys(kind, threads, 32);
+    s.set_pipeline(mode).unwrap();
+    s.scatter("x", &data, 4).unwrap();
+    let h = s
+        .create_handle(
+            PimFunc::HostRed { output_len: out_len as u32, init: 0, func: wide_red },
+            TransformKind::Red,
+            vec![],
+        )
+        .unwrap();
+    s.reset_timeline();
+    let out = s.array_red("x", "wide", out_len, &h).unwrap();
+    (s.timeline().total_s(), out)
+}
+
+#[test]
+fn parallel_merge_improves_modeled_totals_20pct_at_32_dpus() {
+    for (label, run) in [
+        ("allreduce", allreduce_region as fn(BackendKind, usize, PipelineMode) -> (f64, Vec<i32>)),
+        ("reduction", reduction_region),
+    ] {
+        let (serial, want) = run(BackendKind::Seq, 1, PipelineMode::Off);
+        let (par_off, out_off) = run(BackendKind::Parallel, 8, PipelineMode::Off);
+        let (par_on, out_on) = run(BackendKind::Parallel, 8, PipelineMode::On);
+        assert_eq!(out_off, want, "{label}: tree merge must not change results");
+        assert_eq!(out_on, want, "{label}: pipelined merge must not change results");
+
+        let gain_off = 1.0 - par_off / serial;
+        let gain_on = 1.0 - par_on / serial;
+        assert!(
+            gain_off >= 0.20,
+            "{label}: sharded tree alone must win >= 20% (got {:.1}%: {par_off} vs {serial} s)",
+            gain_off * 100.0
+        );
+        assert!(
+            gain_on >= 0.20,
+            "{label}: tree + pipelined overlap must win >= 20% (got {:.1}%)",
+            gain_on * 100.0
+        );
+        assert!(
+            par_on <= par_off + 1e-9,
+            "{label}: overlapping the merge phase can never model slower"
+        );
+    }
+}
