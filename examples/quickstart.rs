@@ -66,8 +66,10 @@ fn main() -> Result<()> {
     println!("  host merge  {:>9.3} ms", t.host_merge_s * 1e3);
     println!("  total       {:>9.3} ms", t.total_s() * 1e3);
 
-    // --- 7. Clean up (management interface: free).
-    for id in ["x", "y", "xy", "sum", "scaled", "total"] {
+    // --- 7. Clean up (management interface: free) in dependency
+    //        order — a lazy zip goes before its constituents (freeing a
+    //        live zip's constituent is an Error::Config).
+    for id in ["xy", "x", "y", "sum", "scaled", "total"] {
         sys.free_array(id)?;
     }
     assert_eq!(sys.machine.mram_used(), 0);

@@ -16,11 +16,11 @@
 //! Run: `cargo bench --bench hotpath`
 
 use simplepim::backend::{self, BackendKind};
-use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
+use simplepim::coordinator::{JobQueue, PimFunc, PimSystem, TransformKind};
 use simplepim::pim::{PimConfig, PipelineMode};
 use simplepim::report::bench::{measure, report, Measurement};
 use simplepim::util::prng;
-use simplepim::workloads::{histogram, kmeans, linreg, logreg, reduction, vecadd};
+use simplepim::workloads::{self, histogram, kmeans, linreg, logreg, reduction, vecadd};
 
 /// One machine-readable result row.
 struct BenchRow {
@@ -309,6 +309,91 @@ fn main() {
                     );
                 }
             }
+        }
+    }
+
+    // --- multi-tenant job scheduler (DESIGN.md §14): the six small
+    //     workloads as independent jobs over P partitions.  Modeled
+    //     total = the device makespan (earliest-free admission over
+    //     per-partition lanes), so these rows gate the scheduler's
+    //     throughput story: partitioned beats whole-machine
+    //     back-to-back whenever fixed per-job costs dominate.
+    //     Runs in quick mode too — the gate keys extend at the next
+    //     baseline refresh.
+    {
+        println!("\n-- multi-tenant job scheduler (32 DPUs, six-workload batch) --");
+        let job_elems = if quick { 2_048 } else { 8_192 };
+        // The batch derives from the workload registry, like the CLI's
+        // `run all --jobs`.
+        let job_names: Vec<&'static str> =
+            simplepim::workloads::all().iter().map(|w| w.name).collect();
+        // The p1/parallel row is the apples-to-apples back-to-back
+        // baseline for the partitioning speedup (same merge strategy as
+        // the p4/parallel row, so the printed multiplier isolates what
+        // partitioning contributes; the seq rows track the serial
+        // reference drain).
+        let cfgs: [(usize, BackendKind, usize); 4] = [
+            (1, BackendKind::Seq, 1),
+            (1, BackendKind::Parallel, 4),
+            (4, BackendKind::Seq, 1),
+            (4, BackendKind::Parallel, 4),
+        ];
+        let mut makespans: Vec<(usize, BackendKind, f64)> = Vec::new();
+        for (parts, kind, threads) in cfgs {
+            let (warm, iters) = if quick { (0, 1) } else { (1, 3) };
+            let mut makespan = 0.0f64;
+            let mut launches = 0u64;
+            let m = measure(warm, iters, || {
+                let mut q = JobQueue::new(
+                    PimConfig::upmem(32),
+                    parts,
+                    kind,
+                    threads,
+                    PipelineMode::Off,
+                )
+                .unwrap();
+                for name in &job_names {
+                    q.submit_plan(name, workloads::job(name, job_elems, 0).unwrap());
+                }
+                let outs = q.wait_all().unwrap();
+                launches = outs.iter().map(|o| o.timeline.launches).sum();
+                makespan = q.device_report().total_s();
+            });
+            let b = kind.as_str();
+            report(
+                &format!("jobs6 batch [{b} x{threads}, {parts} partition(s)]"),
+                m,
+                Some((job_names.len() as u64, "job")),
+            );
+            println!(
+                "    modeled makespan {:.3} ms ({:.0} jobs/s)",
+                makespan * 1e3,
+                job_names.len() as f64 / makespan
+            );
+            makespans.push((parts, kind, makespan));
+            rows.push(BenchRow {
+                key: format!("jobs6/p{parts}/{b}/t{threads}"),
+                workload: "jobs6",
+                backend: b,
+                threads,
+                elems: job_elems as u64,
+                wall: m,
+                modeled_total_s: makespan,
+                modeled_kernel_s: 0.0,
+                launches,
+            });
+        }
+        let of = |parts: usize, kind: BackendKind| {
+            makespans.iter().find(|&&(p, k, _)| p == parts && k == kind).map(|&(_, _, m)| m)
+        };
+        if let (Some(serial), Some(part)) =
+            (of(1, BackendKind::Parallel), of(4, BackendKind::Parallel))
+        {
+            println!(
+                "    modeled throughput, 4 partitions vs whole-machine back-to-back \
+                 (both parallel backend): {:.2}x",
+                serial / part
+            );
         }
     }
 

@@ -92,6 +92,20 @@ COMMANDS:
                              cost of collectives and reductions;
                              $SIMPLEPIM_MERGE_THREADS overrides the
                              parallel backend's merge-tree workers)
+                    multi-tenant batch mode (job scheduler, DESIGN.md §14):
+                             --jobs [K] submit the named workload(s) —
+                             `run all --jobs` submits all six — K times
+                             each (default 1) as independent jobs
+                             --partitions P split the machine into P
+                             equal DPU-set partitions (default 4) and
+                             schedule queued jobs onto free partitions;
+                             prints per-job queueing/placement and the
+                             device makespan + occupancy report
+                             (--backend/--threads/--pipeline/--seed/
+                             --elems/--explain apply per job; batch
+                             mode always runs the bit-identical host
+                             execution engine — --host-only is implied,
+                             PJRT is not used)
   figures <which>   regenerate a paper figure from the timing model
                     which: fig9 fig10 fig11 ablations all
                     options: --csv (emit CSV instead of tables)
@@ -102,6 +116,9 @@ COMMANDS:
                     options: --baseline P (default BENCH_baseline.json)
                              --current P (default BENCH_hotpath.json)
                              --tolerance F (default 0.10)
+                    SIMPLEPIM_REQUIRE_BASELINE=1 (set in CI) makes a
+                    bootstrap-placeholder baseline a hard failure
+                    instead of a silent pass
   info              print the machine model   options: --dpus N
   selftest          functional check: XLA path vs host goldens
                     options: --backend --threads --pipeline --seed

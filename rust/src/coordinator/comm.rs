@@ -222,6 +222,12 @@ impl PimSystem {
     /// empties, the engine's pooled buffers and resident contexts are
     /// released, so `machine.mram_used()` returns to zero.
     pub fn free_array(&mut self, id: &str) -> Result<()> {
+        // Freeing a constituent of a registered lazy zip would leave
+        // the zip dangling (or, after a re-register under the same id,
+        // silently reading a new data generation).  Checked before any
+        // timed side effect so a rejected free never flushes deferred
+        // charges or charges chains.
+        self.management.check_freeable(id)?;
         // A deferred scatter charge survives until first use; freeing
         // the array is that use (the push happened functionally), so
         // the monolithic flush keeps the timeline complete.  Pending

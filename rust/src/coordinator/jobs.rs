@@ -1,0 +1,476 @@
+//! The multi-tenant job scheduler (DESIGN.md §14): many independent
+//! plan graphs multiplexed over disjoint partitions of one PIM device.
+//!
+//! The paper's framework serves one host request at a time against the
+//! whole DPU set.  Real PIM deployments multiplex many independent
+//! workloads over fixed in-memory compute (Ghose et al., 2019), so this
+//! layer virtualizes the machine into equal, contiguous
+//! [`DpuSet`](crate::pim::DpuSet) partitions and runs a [`JobQueue`] of
+//! whole plan graphs over them:
+//!
+//! * **submit** — a job is a closure that builds and drives its plan
+//!   graph against a partition-sized [`PimSystem`] (scatter → iterators
+//!   → collectives → gather/free, exactly the single-tenant API);
+//!   [`JobQueue::submit`] enqueues it and returns a [`JobHandle`].
+//! * **execute** — [`JobQueue::wait`] / [`JobQueue::wait_all`] drain the
+//!   queue through the existing [`ExecBackend`] machinery: under the
+//!   `seq`/`gang` backends jobs run in serial submission order (the
+//!   bit-exact reference); under the `parallel` backend one OS worker
+//!   per partition pulls jobs from the shared queue, each worker
+//!   reusing a single backend instance — and therefore its
+//!   `backend::arena` staging pools — across every job it runs.
+//! * **account** — every job runs on its own partition-sized machine
+//!   whose `Timeline` is that job's lane charge; the modeled schedule
+//!   comes from deterministic earliest-free admission
+//!   ([`crate::timing::schedule_jobs`]) over those durations, giving
+//!   per-partition lanes that compose into a device makespan
+//!   ([`DeviceReport::total_s`]) with queueing delay and occupancy.
+//!
+//! Because partitions are equal and the model is analytic, a job's
+//! functional output and its per-job lane charges are invariant across
+//! scheduler execution modes — the whole backend × pipeline matrix is
+//! pinned by `rust/tests/jobs.rs`, along with the headline: four
+//! independent jobs over four partitions model ≥ 2× the throughput of
+//! the same jobs run back-to-back on the whole machine.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+use crate::backend::{self, BackendKind, ExecBackend};
+use crate::error::{Error, Result};
+use crate::pim::{DpuSet, PimConfig, PipelineMode, Timeline};
+use crate::timing::schedule_jobs;
+
+use super::PimSystem;
+
+/// A submitted job: builds and drives one plan graph against the
+/// partition-sized system it is handed, returning its result words.
+pub type JobPlan = Box<dyn FnOnce(&mut PimSystem) -> Result<Vec<i32>> + Send>;
+
+/// Ticket for one submitted job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobHandle {
+    idx: usize,
+}
+
+impl JobHandle {
+    /// Queue-unique job id (submission order).
+    pub fn id(&self) -> usize {
+        self.idx
+    }
+}
+
+/// One completed job: its output, its own lane charge, and where the
+/// modeled schedule placed it.
+#[derive(Debug, Clone)]
+pub struct JobOutcome {
+    /// Caller-chosen job name.
+    pub name: String,
+    /// The job plan's result words.
+    pub output: Vec<i32>,
+    /// The job's partition-local modeled timeline (its lane charge).
+    pub timeline: Timeline,
+    /// Partition that admitted the job.
+    pub partition: usize,
+    /// Modeled admission time — the job's queueing delay (batch
+    /// semantics: every job is submitted at device time zero).
+    pub start_s: f64,
+    /// Modeled completion time on the partition lane.
+    pub finish_s: f64,
+}
+
+impl JobOutcome {
+    /// Queueing delay before a partition was free.
+    pub fn queued_s(&self) -> f64 {
+        self.start_s
+    }
+
+    /// Modeled seconds the job occupied its partition.
+    pub fn duration_s(&self) -> f64 {
+        self.finish_s - self.start_s
+    }
+}
+
+/// Aggregate view of the device schedule: per-partition lanes, the
+/// makespan they compose into, and how busy the partitions were.
+#[derive(Debug, Clone)]
+pub struct DeviceReport {
+    pub partitions: usize,
+    pub dpus_per_partition: usize,
+    /// Jobs admitted (failed jobs never occupy a lane).
+    pub jobs: usize,
+    /// Per-partition busy clocks (each lane is the sum of its jobs'
+    /// modeled durations).
+    pub lane_busy_s: Vec<f64>,
+    /// Total lane-seconds of admitted work.
+    pub busy_s: f64,
+    /// Latest lane clock — the device-level end-to-end time.
+    pub makespan_s: f64,
+}
+
+impl DeviceReport {
+    /// Device end-to-end modeled seconds (the makespan the per-partition
+    /// lanes sum into).
+    pub fn total_s(&self) -> f64 {
+        self.makespan_s
+    }
+
+    /// Fraction of partition-seconds spent running jobs (1.0 = every
+    /// partition busy from t = 0 to the makespan).
+    pub fn occupancy(&self) -> f64 {
+        if self.makespan_s <= 0.0 || self.partitions == 0 {
+            return 0.0;
+        }
+        self.busy_s / (self.partitions as f64 * self.makespan_s)
+    }
+
+    /// Jobs per modeled second at this schedule's makespan.
+    pub fn throughput_jobs_per_s(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            return 0.0;
+        }
+        self.jobs as f64 / self.makespan_s
+    }
+
+    /// Human-readable schedule summary (the jobs CLI's tail, and the
+    /// queueing/occupancy half of `--explain`).
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "device schedule: {} partition(s) x {} DPUs | {} job(s) admitted\n",
+            self.partitions, self.dpus_per_partition, self.jobs
+        ));
+        out.push_str(&format!(
+            "  makespan {:.3} ms | lanes busy {:.3} ms | occupancy {:.1}% | {:.0} jobs/s\n",
+            self.makespan_s * 1e3,
+            self.busy_s * 1e3,
+            self.occupancy() * 100.0,
+            self.throughput_jobs_per_s(),
+        ));
+        for (i, lane) in self.lane_busy_s.iter().enumerate() {
+            out.push_str(&format!("  lane {i}: {:.3} ms\n", lane * 1e3));
+        }
+        out
+    }
+}
+
+/// The job queue: submitted plan graphs, the partition set they are
+/// scheduled over, and the execution configuration every job system is
+/// built with.
+pub struct JobQueue {
+    sets: Vec<DpuSet>,
+    part_cfg: PimConfig,
+    backend: BackendKind,
+    threads: usize,
+    pipeline: PipelineMode,
+    names: Vec<String>,
+    /// Not-yet-executed plans, aligned with `names` (taken at drain).
+    pending: Vec<Option<JobPlan>>,
+    /// Per-job outcome or error text, aligned with `names`.
+    results: Vec<Option<std::result::Result<JobOutcome, String>>>,
+    /// Per-partition modeled busy clocks (admission state).
+    lanes: Vec<f64>,
+}
+
+impl JobQueue {
+    /// Build a queue over `partitions` equal [`DpuSet`]s of `cfg`,
+    /// running every job with the given backend/pipeline selection.
+    /// Partition counts that do not divide the DPU count, and invalid
+    /// worker counts, are explicit [`Error::Config`]s.
+    pub fn new(
+        cfg: PimConfig,
+        partitions: usize,
+        backend: BackendKind,
+        threads: usize,
+        pipeline: PipelineMode,
+    ) -> Result<JobQueue> {
+        let sets = DpuSet::split(&cfg, partitions)?;
+        // Probe the backend build once so misconfiguration fails at
+        // queue construction, not inside a worker thread mid-drain.
+        backend::make(backend, threads)?;
+        let part_cfg = sets[0].cfg().clone();
+        let lanes = vec![0.0; sets.len()];
+        Ok(JobQueue {
+            sets,
+            part_cfg,
+            backend,
+            threads,
+            pipeline,
+            names: Vec::new(),
+            pending: Vec::new(),
+            results: Vec::new(),
+            lanes,
+        })
+    }
+
+    /// Partitions the device was split into.
+    pub fn partitions(&self) -> usize {
+        self.sets.len()
+    }
+
+    /// DPUs per partition.
+    pub fn partition_dpus(&self) -> usize {
+        self.part_cfg.n_dpus
+    }
+
+    /// The partition-local machine view jobs run against.
+    pub fn partition_cfg(&self) -> &PimConfig {
+        &self.part_cfg
+    }
+
+    /// Enqueue an already-boxed job plan under `name` (no re-boxing —
+    /// the path `workloads::job` results take); returns its handle.
+    /// Nothing executes until [`Self::wait`] / [`Self::wait_all`].
+    pub fn submit_plan(&mut self, name: &str, plan: JobPlan) -> JobHandle {
+        let idx = self.names.len();
+        self.names.push(name.to_string());
+        self.pending.push(Some(plan));
+        self.results.push(None);
+        JobHandle { idx }
+    }
+
+    /// Enqueue a job closure under `name`; returns its handle.
+    pub fn submit<F>(&mut self, name: &str, plan: F) -> JobHandle
+    where
+        F: FnOnce(&mut PimSystem) -> Result<Vec<i32>> + Send + 'static,
+    {
+        self.submit_plan(name, Box::new(plan))
+    }
+
+    /// Drain the queue (if needed) and return one job's outcome.
+    pub fn wait(&mut self, handle: &JobHandle) -> Result<&JobOutcome> {
+        if handle.idx >= self.names.len() {
+            return Err(Error::msg(format!("unknown job handle #{}", handle.idx)));
+        }
+        if self.results[handle.idx].is_none() {
+            self.drain()?;
+        }
+        match self.results[handle.idx].as_ref().expect("drained above") {
+            Ok(outcome) => Ok(outcome),
+            Err(e) => Err(Error::msg(format!(
+                "job `{}` failed: {e}",
+                self.names[handle.idx]
+            ))),
+        }
+    }
+
+    /// Drain the queue and return every outcome in submission order;
+    /// the first failed job (if any) is the error.
+    pub fn wait_all(&mut self) -> Result<Vec<&JobOutcome>> {
+        self.drain()?;
+        for (i, r) in self.results.iter().enumerate() {
+            if let Some(Err(e)) = r {
+                return Err(Error::msg(format!("job `{}` failed: {e}", self.names[i])));
+            }
+        }
+        Ok(self
+            .results
+            .iter()
+            .map(|r| match r.as_ref().expect("drained above") {
+                Ok(outcome) => outcome,
+                Err(_) => unreachable!("checked above"),
+            })
+            .collect())
+    }
+
+    /// The device schedule so far (call after a drain for final lanes).
+    pub fn device_report(&self) -> DeviceReport {
+        let makespan = self.lanes.iter().fold(0.0f64, |a, &b| a.max(b));
+        let busy: f64 = self.lanes.iter().sum();
+        let jobs = self.results.iter().filter(|r| matches!(r, Some(Ok(_)))).count();
+        DeviceReport {
+            partitions: self.sets.len(),
+            dpus_per_partition: self.part_cfg.n_dpus,
+            jobs,
+            lane_busy_s: self.lanes.clone(),
+            busy_s: busy,
+            makespan_s: makespan,
+        }
+    }
+
+    /// Execute every pending job, then admit the batch onto the
+    /// partition lanes.
+    ///
+    /// Functional execution and modeled admission are deliberately
+    /// decoupled: equal partitions make a job's output and lane charge
+    /// independent of *which* partition runs it, so workers may race
+    /// over the shared queue while the schedule is recomputed
+    /// deterministically from submission order and modeled durations.
+    fn drain(&mut self) -> Result<()> {
+        let todo: Vec<(usize, JobPlan)> = self
+            .pending
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, p)| p.take().map(|plan| (i, plan)))
+            .collect();
+        if todo.is_empty() {
+            return Ok(());
+        }
+        let workers = if self.backend == BackendKind::Parallel {
+            self.sets.len().min(todo.len()).max(1)
+        } else {
+            // seq/gang: the serial reference order (one worker drains
+            // the queue front-to-back, i.e. submission order).
+            1
+        };
+        let queue = Mutex::new(VecDeque::from(todo));
+        type Done = (usize, std::result::Result<(Vec<i32>, Timeline), String>);
+        let done: Mutex<Vec<Done>> = Mutex::new(Vec::new());
+        let cfg = &self.part_cfg;
+        let kind = self.backend;
+        let threads = self.threads;
+        let pipeline = self.pipeline;
+        std::thread::scope(|s| {
+            for _ in 0..workers {
+                s.spawn(|| {
+                    // One backend instance per worker, reused across
+                    // every job it runs, so the arena staging pools
+                    // amortize over the worker's whole job stream.
+                    let mut cached: Option<Box<dyn ExecBackend>> = None;
+                    loop {
+                        let job = queue.lock().expect("job queue lock").pop_front();
+                        let Some((idx, plan)) = job else { break };
+                        let built = match cached.take() {
+                            Some(b) => Ok(b),
+                            None => backend::make(kind, threads),
+                        };
+                        let res = match built {
+                            Err(e) => Err(e.to_string()),
+                            Ok(b) => {
+                                let mut sys = PimSystem::with_backend(cfg.clone(), None, b);
+                                let run = (|| -> Result<Vec<i32>> {
+                                    sys.set_pipeline(pipeline)?;
+                                    let out = plan(&mut sys)?;
+                                    // Drain deferred work so the job's
+                                    // timeline is complete before it
+                                    // becomes the lane charge.
+                                    sys.run()?;
+                                    Ok(out)
+                                })();
+                                let timeline = sys.timeline();
+                                cached = Some(sys.into_backend());
+                                run.map(|out| (out, timeline)).map_err(|e| e.to_string())
+                            }
+                        };
+                        done.lock().expect("job result lock").push((idx, res));
+                    }
+                });
+            }
+        });
+        let mut done = done.into_inner().expect("workers joined");
+        done.sort_by_key(|(idx, _)| *idx);
+
+        // Deterministic earliest-free admission over the successful
+        // jobs, in submission order, continuing the existing lanes.
+        let durations: Vec<f64> = done
+            .iter()
+            .filter_map(|(_, r)| r.as_ref().ok().map(|(_, t)| t.total_s()))
+            .collect();
+        let sched = schedule_jobs(&durations, &mut self.lanes);
+        let mut admitted = 0;
+        for (idx, res) in done {
+            let stored = match res {
+                Ok((output, timeline)) => {
+                    let outcome = JobOutcome {
+                        name: self.names[idx].clone(),
+                        output,
+                        timeline,
+                        partition: sched.partition[admitted],
+                        start_s: sched.start_s[admitted],
+                        finish_s: sched.finish_s[admitted],
+                    };
+                    admitted += 1;
+                    Ok(outcome)
+                }
+                Err(e) => Err(e),
+            };
+            self.results[idx] = Some(stored);
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_queue(partitions: usize, kind: BackendKind, threads: usize) -> JobQueue {
+        JobQueue::new(PimConfig::tiny(8), partitions, kind, threads, PipelineMode::Off)
+            .unwrap()
+    }
+
+    #[test]
+    fn submit_wait_roundtrip_runs_a_plan_graph() {
+        let mut q = tiny_queue(2, BackendKind::Seq, 1);
+        let h = q.submit("double", |sys| {
+            sys.scatter("x", &[1, 2, 3, 4, 5], 4)?;
+            let map = sys.create_handle(
+                super::super::PimFunc::AffineMap,
+                super::super::TransformKind::Map,
+                vec![2, 0],
+            )?;
+            sys.array_map("x", "y", &map)?;
+            let out = sys.gather("y")?;
+            sys.free_array("x")?;
+            sys.free_array("y")?;
+            Ok(out)
+        });
+        let finish_s = {
+            let outcome = q.wait(&h).unwrap();
+            assert_eq!(outcome.output, vec![2, 4, 6, 8, 10]);
+            assert_eq!(outcome.partition, 0);
+            assert_eq!(outcome.start_s, 0.0, "first job is admitted immediately");
+            assert!(outcome.duration_s() > 0.0);
+            assert!(outcome.timeline.launches >= 1);
+            outcome.finish_s
+        };
+        let report = q.device_report();
+        assert_eq!(report.jobs, 1);
+        assert!((report.total_s() - finish_s).abs() < 1e-15);
+        assert!(report.render().contains("device schedule"), "{}", report.render());
+    }
+
+    #[test]
+    fn failed_jobs_report_their_name_and_leave_others_intact() {
+        let mut q = tiny_queue(2, BackendKind::Seq, 1);
+        let bad = q.submit("broken", |sys| {
+            sys.gather("no-such-array")?;
+            Ok(vec![])
+        });
+        let good = q.submit("fine", |sys| {
+            sys.scatter("ok", &[7, 7], 4)?;
+            let out = sys.gather("ok")?;
+            sys.free_array("ok")?;
+            Ok(out)
+        });
+        let err = q.wait(&bad).unwrap_err();
+        assert!(err.to_string().contains("broken"), "{err}");
+        assert_eq!(q.wait(&good).unwrap().output, vec![7, 7]);
+        let err = q.wait_all().unwrap_err();
+        assert!(err.to_string().contains("broken"), "{err}");
+        // Only the successful job occupies a lane.
+        assert_eq!(q.device_report().jobs, 1);
+    }
+
+    #[test]
+    fn queue_construction_validates_partitions_and_workers() {
+        let cfg = PimConfig::tiny(8);
+        for parts in [0usize, 3, 9] {
+            let err = JobQueue::new(cfg.clone(), parts, BackendKind::Seq, 1, PipelineMode::Off)
+                .err()
+                .expect("bad partition count must fail");
+            assert!(matches!(err, Error::Config(_)), "{err}");
+        }
+        let err = JobQueue::new(cfg, 2, BackendKind::Parallel, 0, PipelineMode::Off)
+            .err()
+            .expect("zero workers must fail at construction");
+        assert!(matches!(err, Error::Config(_)), "{err}");
+    }
+
+    #[test]
+    fn unknown_handle_is_an_error() {
+        let mut q = tiny_queue(1, BackendKind::Seq, 1);
+        let err = q.wait(&JobHandle { idx: 3 }).unwrap_err();
+        assert!(err.to_string().contains("#3"), "{err}");
+    }
+}

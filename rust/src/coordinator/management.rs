@@ -12,6 +12,17 @@ use std::collections::BTreeMap;
 
 use crate::error::{Error, Result};
 
+/// Format the dependent-zip diagnostic shared by [`Management::free`]
+/// and its pre-check.
+fn dangling_zip_error(id: &str, zips: &[&str]) -> Error {
+    Error::Config(format!(
+        "cannot free `{id}`: it is a constituent of lazily zipped array(s) [{}] whose \
+         iterators would read dangling (or silently re-registered) data; free the zip(s) \
+         first, or map them to materialize",
+        zips.join(", ")
+    ))
+}
+
 /// Physical placement of a registered array.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub enum Layout {
@@ -95,9 +106,37 @@ impl Management {
         Ok(())
     }
 
+    /// Registered lazy-zip arrays that name `id` as a constituent.
+    /// Freeing `id` while any exist would leave those zips dangling:
+    /// their iterators would fail on the missing constituent — or,
+    /// worse, silently read a *new* array re-registered under the same
+    /// id (a different data generation).
+    pub fn zip_dependents(&self, id: &str) -> Vec<&str> {
+        self.arrays
+            .values()
+            .filter(|m| matches!(&m.layout, Layout::LazyZip { a, b } if a == id || b == id))
+            .map(|m| m.id.as_str())
+            .collect()
+    }
+
+    /// Fail with the dangling-zip diagnostic if `id` cannot be freed
+    /// safely.  Exposed so `free_array` can check *before* any timed
+    /// side effects (deferred-transfer flushes, chain charges).
+    pub fn check_freeable(&self, id: &str) -> Result<()> {
+        let deps = self.zip_dependents(id);
+        if deps.is_empty() {
+            Ok(())
+        } else {
+            Err(dangling_zip_error(id, &deps))
+        }
+    }
+
     /// Remove an id from the registry (paper: `free`); returns the meta
-    /// so the caller can release the MRAM allocation.
+    /// so the caller can release the MRAM allocation.  Freeing a
+    /// constituent of a registered lazy zip is an [`Error::Config`]
+    /// naming the dependent zip(s) — the registry never dangles.
     pub fn free(&mut self, id: &str) -> Result<ArrayMeta> {
+        self.check_freeable(id)?;
         self.arrays.remove(id).ok_or_else(|| Error::UnknownArray(id.to_string()))
     }
 
@@ -182,6 +221,48 @@ mod tests {
         assert_eq!(am.bytes_on(2), 0);
         assert_eq!(am.bytes_on(99), 0);
         assert_eq!(am.max_per_dpu(), 60);
+    }
+
+    #[test]
+    fn freeing_a_zip_constituent_is_rejected_with_the_zip_named() {
+        let mut m = Management::new();
+        m.register(meta("a")).unwrap();
+        m.register(meta("b")).unwrap();
+        let mut zip = meta("ab");
+        zip.layout = Layout::LazyZip { a: "a".into(), b: "b".into() };
+        m.register(zip).unwrap();
+
+        assert_eq!(m.zip_dependents("a"), vec!["ab"]);
+        assert_eq!(m.zip_dependents("b"), vec!["ab"]);
+        assert!(m.zip_dependents("ab").is_empty());
+        for id in ["a", "b"] {
+            let err = m.free(id).err().expect("constituent free must fail");
+            assert!(matches!(err, Error::Config(_)), "{err}");
+            assert!(err.to_string().contains("ab"), "names the zip: {err}");
+            assert!(m.contains(id), "failed free leaves the registry intact");
+        }
+        // Dependency order works: zip first, then constituents.
+        m.free("ab").unwrap();
+        m.free("a").unwrap();
+        m.free("b").unwrap();
+        assert!(m.is_empty());
+    }
+
+    #[test]
+    fn multiple_dependent_zips_are_all_reported() {
+        let mut m = Management::new();
+        m.register(meta("x")).unwrap();
+        m.register(meta("y")).unwrap();
+        for zid in ["z1", "z2"] {
+            let mut z = meta(zid);
+            z.layout = Layout::LazyZip { a: "x".into(), b: "y".into() };
+            m.register(z).unwrap();
+        }
+        let err = m.free("x").err().expect("must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("z1") && msg.contains("z2"), "{msg}");
+        assert!(m.check_freeable("x").is_err());
+        assert!(m.check_freeable("z1").is_ok(), "zips themselves free fine");
     }
 
     #[test]

@@ -39,6 +39,7 @@ pub mod exec;
 pub mod extensions;
 pub mod handle;
 pub mod iterators;
+pub mod jobs;
 pub mod management;
 pub mod optimizer;
 pub mod plan;
@@ -46,6 +47,7 @@ pub mod planner;
 pub mod scheduler;
 
 pub use handle::{Handle, PimFunc, TransformKind};
+pub use jobs::{DeviceReport, JobHandle, JobOutcome, JobPlan, JobQueue};
 pub use management::{ArrayMeta, Layout, Management};
 pub use plan::{NodeState, PlanNode, PlanOp, PlanStats};
 
@@ -122,33 +124,38 @@ impl PimSystem {
     /// sequential walk; see [`Self::with_backend`] /
     /// [`Self::set_backend`] for explicit control.
     pub fn with_runtime(cfg: PimConfig, runtime: Option<Runtime>) -> Self {
+        let mut sys = Self::with_backend(cfg, runtime, crate::backend::from_env());
+        sys.pipeline = crate::pim::pipeline::mode_from_env();
+        sys
+    }
+
+    /// Build with an explicit execution backend
+    /// (`backend::make(BackendKind::Parallel, threads)` for the
+    /// rank-sharded worker pool).  Consults no `SIMPLEPIM_*`
+    /// environment at all (pipeline defaults to `Off`; use
+    /// [`Self::set_pipeline`]), so callers that validated their own
+    /// selection — the job scheduler's per-partition workers — cannot
+    /// be panicked mid-run by garbage in the environment (and skip a
+    /// discarded backend construction per system).
+    pub fn with_backend(
+        cfg: PimConfig,
+        runtime: Option<Runtime>,
+        backend: Box<dyn ExecBackend>,
+    ) -> Self {
         let tasklets = cfg.default_tasklets;
         PimSystem {
             machine: PimMachine::new(cfg),
             management: Management::new(),
             runtime,
-            backend: crate::backend::from_env(),
+            backend,
             engine: plan::PlanEngine::new(),
-            pipeline: crate::pim::pipeline::mode_from_env(),
+            pipeline: PipelineMode::Off,
             opts: OptFlags::simplepim(),
             tasklets,
             dma_policy: DmaPolicy::Dynamic,
             red_variant_override: None,
             last_red_variant: None,
         }
-    }
-
-    /// Build with an explicit execution backend
-    /// (`backend::make(BackendKind::Parallel, threads)` for the
-    /// rank-sharded worker pool).
-    pub fn with_backend(
-        cfg: PimConfig,
-        runtime: Option<Runtime>,
-        backend: Box<dyn ExecBackend>,
-    ) -> Self {
-        let mut sys = Self::with_runtime(cfg, runtime);
-        sys.backend = backend;
-        sys
     }
 
     /// Swap the execution backend (results and modeled time are
@@ -160,6 +167,14 @@ impl PimSystem {
     /// Which backend executes kernels and marshalling loops.
     pub fn backend_kind(&self) -> BackendKind {
         self.backend.kind()
+    }
+
+    /// Decompose the system, handing back its execution backend so a
+    /// job-scheduler worker ([`jobs::JobQueue`]) can reuse one backend
+    /// instance — and its `backend::arena` staging pools — across
+    /// successive jobs instead of rebuilding it per job.
+    pub fn into_backend(self) -> Box<dyn ExecBackend> {
+        self.backend
     }
 
     /// Select the pipelined execution mode (CLI: `--pipeline`).

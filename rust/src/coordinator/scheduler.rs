@@ -33,6 +33,13 @@ pub struct TaskletRange {
 /// Every tasklet gets `elems / tasklets` main elements; the remainder
 /// goes to the *last* tasklet as an explicit tail, processed after the
 /// main loop (no per-iteration boundary checks anywhere).
+///
+/// Degenerate shapes are explicit, never silent: tasklets with no work
+/// are skipped entirely, so `elems == 0` returns no ranges, and
+/// `elems < tasklets` returns a single tail-only range pinned to the
+/// trailing tasklet (`main == 0`, `tail == elems`, `start == 0`) — the
+/// paper's separate-trailing-part rule applied to an all-tail input.
+/// Callers therefore never iterate empty `main == 0` ranges.
 pub fn partition(elems: u64, tasklets: u32) -> Vec<TaskletRange> {
     assert!(tasklets >= 1);
     let t = tasklets as u64;
@@ -45,6 +52,7 @@ pub fn partition(elems: u64, tasklets: u32) -> Vec<TaskletRange> {
             main,
             tail: if i as u64 == t - 1 { tail } else { 0 },
         })
+        .filter(|r| r.main + r.tail > 0)
         .collect()
 }
 
@@ -113,19 +121,68 @@ mod tests {
         for elems in [0u64, 1, 11, 12, 127, 4096, 4097] {
             for t in [1u32, 2, 11, 12] {
                 let parts = partition(elems, t);
-                assert_eq!(parts.len(), t as usize);
+                // Empty ranges are skipped: full-width when every
+                // tasklet has main work, one tail-only range when
+                // elems < tasklets, nothing at all for zero elements.
+                let expect = if elems == 0 {
+                    0
+                } else if elems < t as u64 {
+                    1
+                } else {
+                    t as usize
+                };
+                assert_eq!(parts.len(), expect, "elems={elems} t={t}");
                 let total: u64 = parts.iter().map(|p| p.main + p.tail).sum();
                 assert_eq!(total, elems, "elems={elems} t={t}");
+                // Every returned range carries work.
+                for p in &parts {
+                    assert!(p.main + p.tail > 0, "elems={elems} t={t}");
+                }
                 // Ranges are contiguous and ordered.
                 for w in parts.windows(2) {
                     assert_eq!(w[0].start + w[0].main, w[1].start);
                 }
-                // Only the last tasklet may have a tail.
-                for p in &parts[..parts.len() - 1] {
-                    assert_eq!(p.tail, 0);
+                // Only the last range may have a tail.
+                if let Some((_, head)) = parts.split_last() {
+                    for p in head {
+                        assert_eq!(p.tail, 0);
+                    }
                 }
             }
         }
+    }
+
+    #[test]
+    fn degenerate_partitions_are_explicit() {
+        // elems == 0: no ranges at all — nothing silently iterates.
+        assert!(partition(0, 1).is_empty());
+        assert!(partition(0, 12).is_empty());
+
+        // elems < tasklets: one tail-only range on the trailing
+        // tasklet (the separate-trailing-part rule), never twelve
+        // `main == 0` ranges.
+        let p = partition(5, 12);
+        assert_eq!(p.len(), 1);
+        assert_eq!(p[0].tasklet, 11, "the trailing-part tasklet");
+        assert_eq!((p[0].start, p[0].main, p[0].tail), (0, 0, 5));
+
+        // The boundary: elems == tasklets gives every tasklet exactly
+        // one boundary-check-free main element.
+        let p = partition(12, 12);
+        assert_eq!(p.len(), 12);
+        assert!(p.iter().all(|r| r.main == 1 && r.tail == 0));
+    }
+
+    #[test]
+    fn fig11_ladder_unaffected_by_degenerate_inputs() {
+        // Fig. 11's ladder logic consumes WRAM budgets, not ranges; a
+        // degenerate element count must not change the thread choice
+        // (the kernel just finishes immediately).
+        let c = cfg();
+        for elems_like_bins in [0u64, 1, 5] {
+            let _ = partition(elems_like_bins, 12); // explicit, not panicking
+        }
+        assert_eq!(private_reduce_active_tasklets(&c, 12, 256, 4, 2048), 12);
     }
 
     fn cfg() -> PimConfig {

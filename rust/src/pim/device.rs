@@ -89,6 +89,89 @@ impl Timeline {
     }
 }
 
+/// A disjoint, contiguous slice of a machine's DPUs, virtualized as an
+/// independent device (the multi-tenant scheduler's unit of tenancy,
+/// DESIGN.md §14).  The set carries its own [`PimConfig`] view: the
+/// same per-DPU constants as the parent, a proportional share of the
+/// parent's host<->PIM bus bandwidth and host merge threads, and its
+/// own `n_dpus` — so a [`PimMachine`] built from it accounts a
+/// per-partition [`Timeline`] lane that composes into the device
+/// makespan without double-counting shared resources.
+#[derive(Debug, Clone)]
+pub struct DpuSet {
+    /// First DPU of the parent machine this set covers.
+    pub first_dpu: usize,
+    /// DPUs in the set.
+    pub n_dpus: usize,
+    cfg: PimConfig,
+}
+
+impl DpuSet {
+    /// Split a machine into `parts` equal, disjoint, contiguous DPU
+    /// sets.  Partition counts that do not divide the DPU count are an
+    /// explicit [`Error::Config`] (unequal partitions would make a
+    /// job's modeled time depend on which partition admitted it, so
+    /// per-job charges could no longer be scheduler-mode-invariant).
+    pub fn split(parent: &PimConfig, parts: usize) -> Result<Vec<DpuSet>> {
+        if parts == 0 {
+            return Err(Error::Config(
+                "partition count must be >= 1, got 0 (a device with no partitions \
+                 could never admit a job)"
+                    .into(),
+            ));
+        }
+        if parts > parent.n_dpus {
+            return Err(Error::Config(format!(
+                "cannot split {} DPUs into {parts} partitions (more partitions than DPUs)",
+                parent.n_dpus
+            )));
+        }
+        if parent.n_dpus % parts != 0 {
+            return Err(Error::Config(format!(
+                "{} DPUs do not split evenly into {parts} partitions; choose a divisor \
+                 of the DPU count (unequal partitions would make per-job modeled time \
+                 depend on the admission assignment)",
+                parent.n_dpus
+            )));
+        }
+        let k = parent.n_dpus / parts;
+        // Each partition gets a proportional share of the parent's
+        // aggregate parallel-transfer bandwidth and host merge threads:
+        // concurrent tenants contend for the DIMM bus and the host CPU,
+        // so P partitions moving data at once must never model more
+        // aggregate bandwidth than the whole machine had.  Only the
+        // *ceiling* is scaled — per-rank bandwidth keeps the parent's
+        // value, so a partial-rank transfer models exactly as it would
+        // on the whole machine and `split(cfg, 1)` is the identity even
+        // when the parent's ceiling binds (many-rank configs).
+        let share = parent.parallel_bw() * k as f64 / parent.n_dpus as f64;
+        let mut cfg = parent.clone();
+        cfg.n_dpus = k;
+        cfg.xfer_bw_ceiling = share;
+        // Floor of one host thread per partition: when a machine has
+        // fewer host threads than partitions the model mildly
+        // oversubscribes the host CPU (P threads modeled vs
+        // `host_threads` real) — a deliberate simplification; with the
+        // default 32-thread host it never triggers below 33 partitions.
+        cfg.host_threads = ((parent.host_threads * k) / parent.n_dpus).max(1);
+        Ok((0..parts)
+            .map(|i| DpuSet { first_dpu: i * k, n_dpus: k, cfg: cfg.clone() })
+            .collect())
+    }
+
+    /// The partition-local machine view (parent constants, partition
+    /// DPU count, proportional bus/host share).
+    pub fn cfg(&self) -> &PimConfig {
+        &self.cfg
+    }
+
+    /// Build an independent simulated machine over this set, with its
+    /// own banks and its own per-partition `Timeline` lane.
+    pub fn machine(&self) -> PimMachine {
+        PimMachine::new(self.cfg.clone())
+    }
+}
+
 /// The simulated machine.
 pub struct PimMachine {
     pub cfg: PimConfig,
@@ -106,6 +189,12 @@ impl PimMachine {
 
     pub fn n_dpus(&self) -> usize {
         self.banks.len()
+    }
+
+    /// Partition this machine's DPU range into `parts` equal
+    /// [`DpuSet`] views (the scheduler's tenancy units, DESIGN.md §14).
+    pub fn partition(&self, parts: usize) -> Result<Vec<DpuSet>> {
+        DpuSet::split(&self.cfg, parts)
     }
 
     pub fn timeline(&self) -> Timeline {
@@ -643,6 +732,88 @@ mod tests {
         assert_eq!(t.pipelined_launches, 0, "a merge is not a kernel launch");
         assert_eq!(t.overlap_saved_s, 0.0, "kernel overlap lane stays merge-free");
         assert!((t.total_s() - 0.25).abs() < 1e-12);
+    }
+
+    #[test]
+    fn dpu_set_split_covers_machine_with_proportional_shares() {
+        let parent = PimConfig::upmem(32);
+        let sets = DpuSet::split(&parent, 4).unwrap();
+        assert_eq!(sets.len(), 4);
+        let mut next = 0;
+        for s in &sets {
+            assert_eq!(s.first_dpu, next, "contiguous partitions");
+            assert_eq!(s.n_dpus, 8);
+            assert_eq!(s.cfg().n_dpus, 8);
+            next += s.n_dpus;
+        }
+        assert_eq!(next, 32, "full coverage");
+        // Bus shares sum to the parent's aggregate bandwidth: P tenants
+        // transferring at once never model more than the machine had.
+        let share_sum: f64 = sets.iter().map(|s| s.cfg().parallel_bw()).sum();
+        assert!((share_sum - parent.parallel_bw()).abs() < 1.0, "{share_sum}");
+        // Host threads split proportionally too.
+        assert_eq!(sets[0].cfg().host_threads, parent.host_threads / 4);
+        // Per-DPU constants are untouched.
+        assert_eq!(sets[0].cfg().mram_bytes, parent.mram_bytes);
+        assert_eq!(sets[0].cfg().freq_hz, parent.freq_hz);
+    }
+
+    #[test]
+    fn dpu_set_split_rejects_bad_counts_with_diagnostics() {
+        let parent = PimConfig::upmem(32);
+        for (parts, needle) in [(0usize, "0"), (5, "5"), (33, "33")] {
+            let err = DpuSet::split(&parent, parts).err().expect("must fail");
+            assert!(matches!(err, Error::Config(_)), "{err}");
+            assert!(err.to_string().contains(needle), "offending value in message: {err}");
+        }
+        // A whole-machine "partitioning" is the degenerate identity.
+        let whole = DpuSet::split(&parent, 1).unwrap();
+        assert_eq!(whole.len(), 1);
+        assert_eq!(whole[0].n_dpus, 32);
+        assert!((whole[0].cfg().parallel_bw() - parent.parallel_bw()).abs() < 1.0);
+        assert_eq!(whole[0].cfg().host_threads, parent.host_threads);
+
+        // ...including when the parent's bandwidth ceiling binds (many
+        // ranks): per-rank bandwidth is preserved, so a partial-rank
+        // transfer models identically on the split(1) view.
+        let big = PimConfig::upmem(4096); // 64 ranks, raw bw > ceiling
+        let whole = DpuSet::split(&big, 1).unwrap();
+        assert_eq!(whole[0].cfg().xfer_rank_bw, big.xfer_rank_bw);
+        assert!((whole[0].cfg().parallel_bw() - big.parallel_bw()).abs() < 1.0);
+        let one_rank_before =
+            crate::pim::xfer::transfer_seconds(&big, crate::pim::XferKind::Parallel, 64, 1024);
+        let one_rank_after = crate::pim::xfer::transfer_seconds(
+            whole[0].cfg(),
+            crate::pim::XferKind::Parallel,
+            64,
+            1024,
+        );
+        assert!((one_rank_before - one_rank_after).abs() < 1e-15, "partial-rank identity");
+    }
+
+    #[test]
+    fn partition_machines_account_independent_timelines() {
+        let parent = PimMachine::new(PimConfig::tiny(8));
+        let sets = parent.partition(2).unwrap();
+        let mut a = sets[0].machine();
+        let mut b = sets[1].machine();
+        assert_eq!(a.n_dpus(), 4);
+        assert_eq!(b.n_dpus(), 4);
+        a.charge_kernel(0.5);
+        assert_eq!(b.timeline(), Timeline::default(), "per-partition lanes are disjoint");
+        assert!(a.timeline().kernel_s > 0.0);
+        // A partition's parallel transfer runs at its bus share, so it
+        // models slower than the whole machine moving the same row.
+        let addr_a = a.alloc(1024).unwrap();
+        let bufs: Vec<Vec<u8>> = (0..4).map(|_| vec![1u8; 1024]).collect();
+        a.push_parallel(addr_a, &bufs).unwrap();
+        let mut whole = PimMachine::new(PimConfig::tiny(8));
+        let addr_w = whole.alloc(1024).unwrap();
+        let bufs8: Vec<Vec<u8>> = (0..8).map(|_| vec![1u8; 1024]).collect();
+        whole.push_parallel(addr_w, &bufs8).unwrap();
+        // Half the DPUs at half the bandwidth: same modeled seconds for
+        // half the bytes is the break-even the share rule enforces.
+        assert!(a.timeline().host_to_pim_s >= whole.timeline().host_to_pim_s * 0.99);
     }
 
     #[test]

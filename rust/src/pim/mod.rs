@@ -20,7 +20,7 @@ pub mod sdk;
 pub mod xfer;
 
 pub use config::PimConfig;
-pub use device::{PimMachine, Timeline};
+pub use device::{DpuSet, PimMachine, Timeline};
 pub use isa::{slots, InstrMix, Op};
 pub use pipeline::{ChunkPlan, PipeSchedule, PipelineMode};
 pub use xfer::XferKind;

@@ -4,6 +4,7 @@
 
 use crate::backend::{self, BackendKind};
 use crate::cli::Args;
+use crate::coordinator::JobQueue;
 use crate::error::{Error, Result};
 use crate::pim::{PimConfig, PipelineMode};
 use crate::timing::{self, DmaPolicy, OptFlags, ReduceVariant};
@@ -191,12 +192,30 @@ fn cli_system(cfg: PimConfig, host_only: bool) -> PimSystem {
 /// execution backend (`--threads` alone implies `--backend parallel`);
 /// `--pipeline {off,on,auto}` selects the pipelined transfer engine.
 /// A worker count of 0 (or garbage) is an explicit config error, never
-/// a silent single-thread fallback.
+/// a silent single-thread fallback.  One resolver ([`exec_selection`])
+/// serves both this path and the job scheduler, so a single workload
+/// run and a `--jobs` batch can never resolve the same flags
+/// differently.
 fn apply_exec_flags(sys: &mut PimSystem, args: &Args) -> Result<()> {
+    let (kind, threads, pipeline) = exec_selection(args)?;
+    sys.set_backend(backend::make(kind, threads)?);
+    sys.set_pipeline(pipeline)?;
+    Ok(())
+}
+
+/// Resolve the execution selection (backend kind, worker threads,
+/// pipeline mode) from flags over the `SIMPLEPIM_*` environment
+/// defaults — the standalone sibling of [`apply_exec_flags`] for paths
+/// (the job scheduler) that build many systems instead of configuring
+/// one.  Also installs `--seed`.
+fn exec_selection(args: &Args) -> Result<(BackendKind, usize, PipelineMode)> {
     if let Some(seed) = args.flag_u64("seed")? {
         prng::set_default_seed(seed);
     }
-    let threads = match args.flag("threads") {
+    let env_backend = std::env::var("SIMPLEPIM_BACKEND").ok();
+    let env_threads = std::env::var("SIMPLEPIM_THREADS").ok();
+    let (env_kind, env_t) = backend::resolve_env(env_backend.as_deref(), env_threads.as_deref())?;
+    let threads_flag = match args.flag("threads") {
         None => None,
         Some(v) => match v.parse::<usize>() {
             Ok(t) if t >= 1 => Some(t),
@@ -207,29 +226,111 @@ fn apply_exec_flags(sys: &mut PimSystem, args: &Args) -> Result<()> {
             }
         },
     };
-    match args.flag("backend") {
-        Some(s) => {
-            let kind = BackendKind::parse(s)?;
-            let t = threads.unwrap_or_else(backend::default_threads);
-            sys.set_backend(backend::make(kind, t)?);
-        }
-        None => {
-            if let Some(t) = threads {
-                sys.set_backend(backend::make(BackendKind::Parallel, t)?);
-            }
+    let kind = match args.flag("backend") {
+        Some(s) => BackendKind::parse(s)?,
+        // `--threads N` alone implies the parallel backend, as in
+        // `apply_exec_flags`.
+        None if threads_flag.is_some() => BackendKind::Parallel,
+        None => env_kind,
+    };
+    let threads = threads_flag.unwrap_or(env_t);
+    let pipeline = match args.flag("pipeline") {
+        Some(p) => PipelineMode::parse(p)?,
+        None => crate::pim::pipeline::mode_from_env(),
+    };
+    Ok((kind, threads, pipeline))
+}
+
+/// `run ... --jobs`: the multi-tenant batch mode (DESIGN.md §14).
+/// Submits the named workloads (`all` = the six paper workloads, or a
+/// comma list) times `--jobs K` copies as independent jobs over
+/// `--partitions P` equal DPU sets, runs them through the scheduler,
+/// and prints the per-job schedule plus the device makespan /
+/// occupancy report.  Batch mode always executes through the
+/// bit-identical host engine (`--host-only` is implied): the PJRT
+/// client is not shardable across the scheduler's worker threads, so
+/// jobs never load a runtime.
+fn cmd_jobs(args: &Args) -> Result<()> {
+    // Same machine default as single-run mode (the help's "default 16"),
+    // so single vs batch modeled totals compare like for like.
+    let dpus = args.flag_usize("dpus", 16)?;
+    let partitions = args.flag_usize("partitions", 4)?;
+    // `--jobs` with no value means one copy; an explicit 0 is a config
+    // error (house rule: zero counts fail loudly, never clamp).
+    let copies = args.flag_usize("jobs", 1)?;
+    if copies == 0 {
+        return Err(Error::Config(
+            "--jobs expects a positive copy count, got `0` (0 would submit no jobs)".into(),
+        ));
+    }
+    let elems = args.flag_usize("elems", 0)?;
+    let (kind, threads, pipeline) = exec_selection(args)?;
+
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    // `all` derives from the workload registry, so a workload added
+    // there is automatically part of the batch.
+    let all_names: Vec<&'static str> = workloads::all().iter().map(|w| w.name).collect();
+    let names: Vec<&str> =
+        if which == "all" { all_names } else { which.split(',').collect() };
+
+    let mut queue = JobQueue::new(PimConfig::upmem(dpus), partitions, kind, threads, pipeline)?;
+    println!(
+        "jobs: {} workload(s) x {copies} cop{} over {} partition(s) x {} DPUs | backend {kind} (x{threads}) | pipeline {pipeline}",
+        names.len(),
+        if copies == 1 { "y" } else { "ies" },
+        queue.partitions(),
+        queue.partition_dpus(),
+    );
+    for copy in 0..copies {
+        for name in &names {
+            let plan = workloads::job(name, elems, copy as u64)
+                .ok_or_else(|| Error::msg(format!("unknown workload `{name}`")))?;
+            let label =
+                if copies == 1 { (*name).to_string() } else { format!("{name}#{copy}") };
+            queue.submit_plan(&label, plan);
         }
     }
-    if let Some(p) = args.flag("pipeline") {
-        sys.set_pipeline(PipelineMode::parse(p)?)?;
+    let outcomes = queue.wait_all()?;
+    println!("\n  {:<16} {:>4}  {:>11}  {:>11}  {:>11}", "job", "part", "queued(ms)", "run(ms)", "finish(ms)");
+    for o in &outcomes {
+        println!(
+            "  {:<16} {:>4}  {:>11.3}  {:>11.3}  {:>11.3}",
+            o.name,
+            o.partition,
+            o.queued_s() * 1e3,
+            o.duration_s() * 1e3,
+            o.finish_s * 1e3,
+        );
     }
+    if args.has("explain") {
+        println!("\n  per-job lanes:");
+        for o in &outcomes {
+            let t = &o.timeline;
+            println!(
+                "  {:<16} h2p {:.3} ms | kernel {:.3} ms ({} launches) | p2h {:.3} ms | merge {:.3} ms",
+                o.name,
+                t.host_to_pim_s * 1e3,
+                t.kernel_s * 1e3,
+                t.launches,
+                t.pim_to_host_s * 1e3,
+                (t.host_merge_s + t.merge_s) * 1e3,
+            );
+        }
+    }
+    println!();
+    print!("{}", queue.device_report().render());
     Ok(())
 }
 
 /// `run` subcommand: run one workload end-to-end on a small simulated
 /// machine through the full stack (PJRT unless --host-only).  With
 /// `--explain`, dump the optimized plan (nodes, fusions applied, cache
-/// hits/misses) after the run.
+/// hits/misses) after the run.  With `--jobs`, switch to the
+/// multi-tenant batch mode over `--partitions` DPU sets.
 pub fn cmd_run(args: &Args) -> Result<()> {
+    if args.has("jobs") || args.has("partitions") {
+        return cmd_jobs(args);
+    }
     let name = args
         .positional
         .first()

@@ -21,6 +21,9 @@
 //! A baseline marked `"bootstrap": true` (or with no result rows)
 //! gates nothing and prints the refresh command — the escape hatch for
 //! the first commit from an environment without a Rust toolchain.
+//! Setting `SIMPLEPIM_REQUIRE_BASELINE=1` (as CI does) turns that
+//! escape hatch into a hard failure, so the gate job can never be
+//! green while gating nothing.
 
 use crate::cli::Args;
 use crate::error::{Error, Result};
@@ -28,6 +31,40 @@ use crate::util::json::Json;
 
 /// Default blocking tolerance on modeled totals (fractional).
 pub const DEFAULT_TOLERANCE: f64 = 0.10;
+
+/// When this environment variable is set (non-empty, not `"0"`), a
+/// bootstrap/empty baseline is a hard failure instead of a silent
+/// pass.  CI sets it, so the bench-gate job can never be green while
+/// gating nothing — the ratchet that forces the first real baseline
+/// refresh (and flags any future regression back to a placeholder).
+pub const REQUIRE_BASELINE_ENV: &str = "SIMPLEPIM_REQUIRE_BASELINE";
+
+/// Whether [`REQUIRE_BASELINE_ENV`] demands a real baseline.
+pub fn require_baseline_from_env() -> bool {
+    std::env::var(REQUIRE_BASELINE_ENV)
+        .map(|v| !v.is_empty() && v != "0")
+        .unwrap_or(false)
+}
+
+/// The ratchet half of the bootstrap escape hatch: with `required`
+/// unset a bootstrap baseline still gates nothing (the bring-up
+/// behavior), but with it set the gate exits non-zero until a real
+/// baseline is committed.
+pub fn enforce_baseline(
+    gate: &Gate,
+    required: bool,
+    baseline_path: &str,
+    refresh: &str,
+) -> Result<()> {
+    if gate.bootstrap && required {
+        return Err(Error::msg(format!(
+            "bench-gate: baseline `{baseline_path}` is a bootstrap placeholder and \
+             {REQUIRE_BASELINE_ENV} is set — the gate would check nothing. Refresh and \
+             commit the baseline:\n  {refresh}"
+        )));
+    }
+    Ok(())
+}
 
 struct Row {
     key: String,
@@ -133,6 +170,10 @@ pub fn cmd_bench_gate(args: &Args) -> Result<()> {
     let refresh =
         format!("SIMPLEPIM_BENCH_QUICK=1 SIMPLEPIM_BENCH_OUT={bpath} cargo bench --bench hotpath");
     if gate.bootstrap {
+        // Fail (when required) before printing the benign-skip lines,
+        // so a CI log never leads with "nothing gated." ahead of the
+        // error for the same condition.
+        enforce_baseline(&gate, require_baseline_from_env(), bpath, &refresh)?;
         println!("bench-gate: baseline `{bpath}` is a bootstrap placeholder — nothing gated.");
         println!("establish it with:\n  {refresh}");
         return Ok(());
@@ -245,5 +286,31 @@ mod tests {
     fn wrong_schema_is_an_error() {
         let bad = "{\"schema\": \"hotpath-v2\", \"results\": []}";
         assert!(evaluate(bad, bad, DEFAULT_TOLERANCE).is_err());
+    }
+
+    #[test]
+    fn required_baseline_turns_bootstrap_into_a_failure() {
+        let b = "{\"schema\": \"hotpath-v1\", \"bootstrap\": true, \"results\": []}";
+        let c = doc(&[("vecadd/seq/t1", 0.010, 0.5)]);
+        let gate = evaluate(b, &c, DEFAULT_TOLERANCE).unwrap();
+        assert!(gate.bootstrap);
+
+        // Bring-up behavior: without the requirement, nothing gates.
+        assert!(enforce_baseline(&gate, false, "BENCH_baseline.json", "refresh-cmd").is_ok());
+
+        // The CI ratchet: with it, the gate exits non-zero and points
+        // at the refresh command.
+        let err = enforce_baseline(&gate, true, "BENCH_baseline.json", "refresh-cmd")
+            .err()
+            .expect("bootstrap + required must fail");
+        let msg = err.to_string();
+        assert!(msg.contains("BENCH_baseline.json"), "{msg}");
+        assert!(msg.contains("refresh-cmd"), "{msg}");
+        assert!(msg.contains(REQUIRE_BASELINE_ENV), "{msg}");
+
+        // A real baseline is unaffected by the requirement.
+        let real = evaluate(&c, &c, DEFAULT_TOLERANCE).unwrap();
+        assert!(!real.bootstrap);
+        assert!(enforce_baseline(&real, true, "b", "r").is_ok());
     }
 }

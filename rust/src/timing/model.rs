@@ -193,6 +193,62 @@ pub fn choose_reduce_variant(
     }
 }
 
+/// One admitted job batch over per-partition lanes (the multi-tenant
+/// scheduler's modeled schedule, DESIGN.md §14): for job `i` of the
+/// batch, the partition that admitted it and its modeled start/finish
+/// on that partition's lane.
+#[derive(Debug, Clone, Default)]
+pub struct JobSchedule {
+    /// Partition lane each job was admitted onto.
+    pub partition: Vec<usize>,
+    /// Modeled admission time (the job's queueing delay: every job in
+    /// a batch is submitted at lane time zero).
+    pub start_s: Vec<f64>,
+    /// Modeled completion time on the lane.
+    pub finish_s: Vec<f64>,
+}
+
+impl JobSchedule {
+    pub fn len(&self) -> usize {
+        self.partition.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.partition.is_empty()
+    }
+
+    /// Latest completion across the batch.
+    pub fn makespan_s(&self) -> f64 {
+        self.finish_s.iter().fold(0.0f64, |a, &b| a.max(b))
+    }
+}
+
+/// Deterministic earliest-free admission (classic list scheduling):
+/// jobs are admitted in submission order, each onto the partition lane
+/// that frees earliest, ties to the lowest partition id — so the
+/// schedule depends only on the submission order and the jobs' modeled
+/// durations, never on host thread timing.  `lanes` carries the
+/// per-partition busy clocks and is advanced in place, so successive
+/// calls model a queue that keeps filling behind earlier batches.
+pub fn schedule_jobs(durations: &[f64], lanes: &mut [f64]) -> JobSchedule {
+    assert!(!lanes.is_empty(), "admission needs at least one partition lane");
+    let mut sched = JobSchedule::default();
+    for &d in durations {
+        let mut p = 0;
+        for (i, &clock) in lanes.iter().enumerate() {
+            if clock < lanes[p] {
+                p = i;
+            }
+        }
+        let start = lanes[p];
+        lanes[p] = start + d.max(0.0);
+        sched.partition.push(p);
+        sched.start_s.push(start);
+        sched.finish_s.push(lanes[p]);
+    }
+    sched
+}
+
 /// Extra launch cost of an *eager* zip: one full streaming pass reading
 /// both inputs and writing the combined array (what you pay when
 /// `lazy_zip` is off — paper §4.2.3, ">2x" on vector addition).
@@ -348,6 +404,54 @@ mod tests {
         assert_eq!(at(256), 12);
         assert!(at(1024) < 12);
         assert!(at(4096) <= 4);
+    }
+
+    #[test]
+    fn admission_is_earliest_free_with_deterministic_ties() {
+        // 5 equal jobs on 2 lanes: ties go to the lowest partition id,
+        // so the assignment round-robins deterministically.
+        let mut lanes = vec![0.0; 2];
+        let s = schedule_jobs(&[1.0; 5], &mut lanes);
+        assert_eq!(s.partition, vec![0, 1, 0, 1, 0]);
+        assert_eq!(s.start_s, vec![0.0, 0.0, 1.0, 1.0, 2.0]);
+        assert_eq!(s.finish_s, vec![1.0, 1.0, 2.0, 2.0, 3.0]);
+        assert_eq!(s.makespan_s(), 3.0);
+        assert_eq!(lanes, vec![3.0, 2.0]);
+
+        // A long job occupies its lane; later short jobs flow around it.
+        let mut lanes = vec![0.0; 2];
+        let s = schedule_jobs(&[4.0, 1.0, 1.0, 1.0], &mut lanes);
+        assert_eq!(s.partition, vec![0, 1, 1, 1]);
+        assert_eq!(s.makespan_s(), 4.0, "short jobs hide behind the long one");
+
+        // Lane clocks persist: a second batch queues behind the first.
+        let s2 = schedule_jobs(&[1.0], &mut lanes);
+        assert_eq!(s2.partition, vec![1], "earliest-free lane after batch 1");
+        assert_eq!(s2.start_s, vec![3.0], "queued behind the earlier jobs");
+    }
+
+    #[test]
+    fn admission_bounds_and_degenerates() {
+        // One lane degenerates to back-to-back serial execution.
+        let durs = [0.5, 0.25, 0.125];
+        let mut one = vec![0.0];
+        let s = schedule_jobs(&durs, &mut one);
+        assert_eq!(s.makespan_s(), 0.875);
+        assert!(s.partition.iter().all(|&p| p == 0));
+
+        // With P lanes, the makespan is bounded below by the longest
+        // job and above by the serial sum.
+        let mut lanes = vec![0.0; 3];
+        let s = schedule_jobs(&durs, &mut lanes);
+        assert!(s.makespan_s() >= 0.5 - 1e-12);
+        assert!(s.makespan_s() <= 0.875 + 1e-12);
+
+        // Empty batches and zero-length jobs are fine.
+        assert!(schedule_jobs(&[], &mut lanes).is_empty());
+        let before = lanes.clone();
+        let s = schedule_jobs(&[0.0], &mut lanes);
+        assert_eq!(s.len(), 1);
+        assert_eq!(lanes, before, "zero-duration job leaves the clocks alone");
     }
 
     #[test]

@@ -67,6 +67,8 @@ pub fn iterate(
     let packed = sys.array_red("km_x", &dest, (k * (dim + 1)) as u64, &h)?;
     sys.free_array(&dest)?;
     // packed = [sums (k*dim) | counts (k)]; divide on the host.
+    // (`workloads::job`'s kmeans golden check mirrors this division
+    // rule — change both together.)
     let mut next = centroids.to_vec();
     for c in 0..k {
         let count = packed[k * dim + c];

@@ -109,6 +109,119 @@ pub fn by_name(name: &str) -> Option<WorkloadInfo> {
     all().into_iter().find(|w| w.name == name)
 }
 
+/// A self-contained scheduler job for one named workload (the unit the
+/// multi-tenant [`crate::coordinator::jobs::JobQueue`] multiplexes,
+/// DESIGN.md §14): the returned plan generates deterministic data
+/// (distinct per `variant`, so repeated copies of a workload are
+/// independent tenants), drives the workload through the SimplePIM
+/// public API on whatever system it is handed, verifies against the
+/// host golden, frees its arrays, and returns the output words.
+/// `elems == 0` picks a per-workload batch default.  `None` for
+/// unknown workload names.
+pub fn job(name: &str, elems: usize, variant: u64) -> Option<crate::coordinator::JobPlan> {
+    use crate::coordinator::PimSystem;
+    use crate::error::{Error, Result};
+    use crate::util::prng;
+    let seed = move |tag: u64| {
+        prng::seed_for(tag).wrapping_add(variant.wrapping_mul(0x9E37_79B9_7F4A_7C15))
+    };
+    let plan: crate::coordinator::JobPlan = match name {
+        "reduction" => {
+            let n = if elems > 0 { elems } else { 30_000 };
+            Box::new(move |sys: &mut PimSystem| -> Result<Vec<i32>> {
+                let x = reduction::generate(seed(2), n);
+                let got = reduction::run_simplepim(sys, &x)?;
+                if got != golden::reduce_sum(&x) {
+                    return Err(Error::msg("reduction job mismatch vs golden"));
+                }
+                Ok(vec![got])
+            })
+        }
+        "vecadd" => {
+            let n = if elems > 0 { elems } else { 30_000 };
+            Box::new(move |sys: &mut PimSystem| -> Result<Vec<i32>> {
+                let (x, y) = vecadd::generate(seed(1), n);
+                let out = vecadd::run_simplepim(sys, &x, &y)?;
+                if out != golden::vecadd(&x, &y) {
+                    return Err(Error::msg("vecadd job mismatch vs golden"));
+                }
+                Ok(out)
+            })
+        }
+        "histogram" => {
+            let n = if elems > 0 { elems } else { 30_000 };
+            Box::new(move |sys: &mut PimSystem| -> Result<Vec<i32>> {
+                let px = histogram::generate(seed(3), n);
+                let got = histogram::run_simplepim(sys, &px, 256)?;
+                if got != golden::histogram(&px, 256) {
+                    return Err(Error::msg("histogram job mismatch vs golden"));
+                }
+                Ok(got)
+            })
+        }
+        "linreg" => {
+            let n = if elems > 0 { elems } else { 4_000 };
+            Box::new(move |sys: &mut PimSystem| -> Result<Vec<i32>> {
+                let (x, y, _) = linreg::generate(seed(4), n, linreg::DIM);
+                linreg::setup(sys, &x, &y, linreg::DIM)?;
+                let w = vec![ONE / 8; linreg::DIM];
+                let grad = linreg::gradient_step(sys, &w, 0)?;
+                linreg::teardown(sys)?;
+                if grad != golden::linreg_grad(&x, &y, &w, linreg::DIM) {
+                    return Err(Error::msg("linreg job mismatch vs golden"));
+                }
+                Ok(grad)
+            })
+        }
+        "logreg" => {
+            let n = if elems > 0 { elems } else { 4_000 };
+            Box::new(move |sys: &mut PimSystem| -> Result<Vec<i32>> {
+                let (x, y, _) = logreg::generate(seed(5), n, logreg::DIM);
+                logreg::setup(sys, &x, &y, logreg::DIM)?;
+                let w = vec![ONE / 8; logreg::DIM];
+                let grad = logreg::gradient_step(sys, &w, 0)?;
+                logreg::teardown(sys)?;
+                if grad != golden::logreg_grad(&x, &y, &w, logreg::DIM) {
+                    return Err(Error::msg("logreg job mismatch vs golden"));
+                }
+                Ok(grad)
+            })
+        }
+        "kmeans" => {
+            let n = if elems > 0 { elems } else { 4_000 };
+            Box::new(move |sys: &mut PimSystem| -> Result<Vec<i32>> {
+                let (x, _) = kmeans::generate(seed(6), n, kmeans::K, kmeans::DIM);
+                kmeans::setup(sys, &x, kmeans::DIM)?;
+                let c0: Vec<i32> = x[..kmeans::K * kmeans::DIM].to_vec();
+                let c1 = kmeans::iterate(sys, &c0, kmeans::K, kmeans::DIM, 0)?;
+                kmeans::teardown(sys)?;
+                // Golden check: the host centroid update over the golden
+                // partials.  This mirrors the division rule in
+                // `kmeans::iterate` (kept duplicated on purpose: that
+                // loop lives inside the Table 1 loc-counted block, so
+                // extracting a shared helper would skew the paper's
+                // LoC comparison) — change both together.
+                let packed = golden::kmeans_partial(&x, &c0, kmeans::K, kmeans::DIM);
+                let mut want = c0.clone();
+                for c in 0..kmeans::K {
+                    let count = packed[kmeans::K * kmeans::DIM + c];
+                    if count > 0 {
+                        for j in 0..kmeans::DIM {
+                            want[c * kmeans::DIM + j] = packed[c * kmeans::DIM + j] / count;
+                        }
+                    }
+                }
+                if c1 != want {
+                    return Err(Error::msg("kmeans job mismatch vs golden"));
+                }
+                Ok(c1)
+            })
+        }
+        _ => return None,
+    };
+    Some(plan)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -28,7 +28,9 @@ pub fn run_simplepim(sys: &mut PimSystem, x: &[i32], y: &[i32]) -> Result<Vec<i3
     let add = sys.create_handle(PimFunc::VecAdd, TransformKind::Map, vec![])?;
     sys.array_map("va_xy", "va_sum", &add)?;
     let out = sys.gather("va_sum")?;
-    for id in ["va_x", "va_y", "va_xy", "va_sum"] {
+    // Dependency order: the zip before its constituents (freeing a
+    // live zip's constituent is an Error::Config).
+    for id in ["va_sum", "va_xy", "va_x", "va_y"] {
         sys.free_array(id)?;
     }
     Ok(out)

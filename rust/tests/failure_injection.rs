@@ -89,6 +89,38 @@ fn zip_of_mismatched_distributions_rejected() {
 }
 
 #[test]
+fn freeing_a_zip_constituent_fails_loudly_and_the_zip_stays_usable() {
+    // Regression for the dangling-zip bug: `free` used to remove a
+    // constituent while `Layout::LazyZip` entries still named it, so a
+    // later iteration of the zip read a dangling id — or, after a
+    // re-register under the same id, a different data generation.
+    let mut s = tiny_sys(2);
+    s.scatter("a", &[1, 2, 3, 4], 4).unwrap();
+    s.scatter("b", &[5, 6, 7, 8], 4).unwrap();
+    s.array_zip("a", "b", "ab").unwrap();
+
+    let before = s.timeline();
+    let err = s.free_array("a").unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    assert!(err.to_string().contains("ab"), "names the dependent zip: {err}");
+    assert!(s.management.contains("a"), "rejected free leaves the registry intact");
+    // The rejected free charged nothing (checked before side effects).
+    assert_eq!(s.timeline(), before);
+
+    // free-then-iterate-zip: the zip still iterates correctly because
+    // the free was refused.
+    let add = s.create_handle(PimFunc::VecAdd, TransformKind::Map, vec![]).unwrap();
+    s.array_map("ab", "sum", &add).unwrap();
+    assert_eq!(s.gather("sum").unwrap(), vec![6, 8, 10, 12]);
+
+    // Dependency order works: zip first, then constituents.
+    for id in ["ab", "a", "b", "sum"] {
+        s.free_array(id).unwrap();
+    }
+    assert_eq!(s.machine.mram_used(), 0);
+}
+
+#[test]
 fn gather_of_lazy_zip_guides_the_user() {
     let mut s = tiny_sys(2);
     s.scatter("a", &[1, 2, 3, 4], 4).unwrap();

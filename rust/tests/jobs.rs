@@ -1,0 +1,281 @@
+//! Multi-tenant job scheduler acceptance suite (DESIGN.md §14).
+//!
+//! Two properties pin the scheduler:
+//!
+//! * **parity** — N concurrent jobs over partitions produce per-job
+//!   results bit-identical to the same jobs run serially on the whole
+//!   machine, across the full `{seq, gang, parallel} × {off, on, auto}`
+//!   matrix, with per-job lane charges invariant across backends on
+//!   every merge-independent lane (the same contract the single-tenant
+//!   parity matrix enforces) and pipelined per-job totals never above
+//!   the monolithic ones;
+//! * **throughput** — four independent jobs over four partitions of a
+//!   32-DPU machine model ≥ 2× the throughput of the same four jobs
+//!   run back-to-back on the whole machine under the parallel backend
+//!   (the multi-tenancy headline: fixed per-job costs — launch and
+//!   transfer-command latency, host-root merges — multiplex instead of
+//!   serializing).
+
+use simplepim::backend::{self, BackendKind};
+use simplepim::coordinator::{JobQueue, PimSystem};
+use simplepim::pim::{PimConfig, PipelineMode, Timeline};
+use simplepim::workloads;
+
+const BACKENDS: [(BackendKind, usize); 3] =
+    [(BackendKind::Seq, 1), (BackendKind::Gang, 1), (BackendKind::Parallel, 4)];
+
+/// Off first: it is the baseline the pipelined modes must not regress.
+const MODES: [PipelineMode; 3] = [PipelineMode::Off, PipelineMode::On, PipelineMode::Auto];
+
+/// The batch under test: every paper workload, small.
+const JOBS: [(&str, usize); 6] = [
+    ("reduction", 10_000),
+    ("vecadd", 10_000),
+    ("histogram", 10_000),
+    ("linreg", 2_000),
+    ("logreg", 2_000),
+    ("kmeans", 2_000),
+];
+
+/// Zero the backend-dependent merge-strategy lanes (see
+/// `rust/tests/backend_parity.rs` for the rationale) so everything
+/// else can be compared for exact cross-backend equality.
+fn merge_normalized(t: &Timeline) -> Timeline {
+    Timeline {
+        merge_s: 0.0,
+        merge_levels: 0,
+        merge_overlap_saved_s: 0.0,
+        merge_chunks: 0,
+        pipelined_merges: 0,
+        ..*t
+    }
+}
+
+/// Run one workload's job plan serially on a whole machine and return
+/// its output (the single-tenant reference) and modeled total.
+fn whole_machine_run(
+    name: &str,
+    elems: usize,
+    variant: u64,
+    kind: BackendKind,
+    threads: usize,
+) -> (Vec<i32>, f64) {
+    let mut sys = PimSystem::with_backend(
+        PimConfig::upmem(32),
+        None,
+        backend::make(kind, threads).unwrap(),
+    );
+    let plan = workloads::job(name, elems, variant).expect("known workload");
+    let out = plan(&mut sys).unwrap();
+    sys.run().unwrap();
+    (out, sys.timeline().total_s())
+}
+
+#[test]
+fn concurrent_jobs_match_whole_machine_across_backend_pipeline_matrix() {
+    // Single-tenant reference outputs (whole 32-DPU machine, seq, off).
+    let reference: Vec<Vec<i32>> = JOBS
+        .iter()
+        .map(|(name, elems)| whole_machine_run(name, *elems, 0, BackendKind::Seq, 1).0)
+        .collect();
+
+    // Per-(job, backend-config) monolithic totals from the Off pass.
+    let mut off_totals: Vec<Vec<f64>> = Vec::new();
+    for (mi, mode) in MODES.iter().enumerate() {
+        // Per-job merge-normalized timelines of the first backend in
+        // this mode (the cross-backend equality reference).
+        let mut mode_norms: Option<Vec<Timeline>> = None;
+        for (bi, (kind, threads)) in BACKENDS.iter().enumerate() {
+            let mut queue =
+                JobQueue::new(PimConfig::upmem(32), 4, *kind, *threads, *mode).unwrap();
+            for (name, elems) in JOBS {
+                queue.submit_plan(name, workloads::job(name, elems, 0).unwrap());
+            }
+            let outcomes = queue.wait_all().unwrap();
+            assert_eq!(outcomes.len(), JOBS.len());
+
+            for (j, o) in outcomes.iter().enumerate() {
+                assert_eq!(
+                    o.output, reference[j],
+                    "{}: concurrent result must be bit-identical to the whole-machine \
+                     serial run ({kind} x{threads}, pipeline {mode})",
+                    o.name
+                );
+                assert!(o.partition < 4, "{}: partition in range", o.name);
+                assert!(o.start_s >= 0.0 && o.finish_s >= o.start_s);
+                assert!(
+                    (o.duration_s() - o.timeline.total_s()).abs() < 1e-12,
+                    "{}: lane occupancy equals the job's modeled total",
+                    o.name
+                );
+            }
+
+            // Per-job lane charges are backend-invariant on every
+            // merge-independent lane (exact f64 equality).
+            let norms: Vec<Timeline> =
+                outcomes.iter().map(|o| merge_normalized(&o.timeline)).collect();
+            match &mode_norms {
+                None => mode_norms = Some(norms),
+                Some(want) => {
+                    for (j, (got, want)) in norms.iter().zip(want).enumerate() {
+                        assert_eq!(
+                            got, want,
+                            "{}: per-job lane charges must be backend-invariant \
+                             ({kind} x{threads}, pipeline {mode})",
+                            JOBS[j].0
+                        );
+                    }
+                }
+            }
+
+            // Pipelined per-job totals never exceed the monolithic ones.
+            let totals: Vec<f64> = outcomes.iter().map(|o| o.timeline.total_s()).collect();
+            if mi == 0 {
+                off_totals.push(totals);
+            } else {
+                for (j, (&on, &off)) in totals.iter().zip(&off_totals[bi]).enumerate() {
+                    assert!(
+                        on <= off + 1e-9,
+                        "{}: pipelined job total {on} must not exceed monolithic {off} \
+                         ({kind} x{threads}, pipeline {mode})",
+                        JOBS[j].0
+                    );
+                }
+            }
+
+            let report = queue.device_report();
+            assert_eq!(report.jobs, JOBS.len());
+            assert!(report.total_s() > 0.0);
+            let occupancy = report.occupancy();
+            assert!(
+                occupancy > 0.0 && occupancy <= 1.0 + 1e-12,
+                "occupancy {occupancy} in (0, 1]"
+            );
+        }
+    }
+}
+
+#[test]
+fn four_jobs_on_four_partitions_double_modeled_throughput() {
+    // The acceptance bar: 4 independent jobs, 4 partitions, 32 DPUs,
+    // parallel backend — >= 2x modeled throughput vs the same jobs run
+    // back-to-back on the whole machine.  Small jobs, where the fixed
+    // per-job costs (kernel-launch latency, per-command transfer
+    // latency, host-root merge) dominate, are exactly the multi-tenant
+    // serving scenario.
+    let n = 2_048;
+    let refs: Vec<(Vec<i32>, f64)> = (0..4u64)
+        .map(|v| whole_machine_run("reduction", n, v, BackendKind::Parallel, 4))
+        .collect();
+    let back_to_back: f64 = refs.iter().map(|(_, total)| total).sum();
+    let outputs: Vec<Vec<i32>> = refs.into_iter().map(|(out, _)| out).collect();
+
+    let mut queue = JobQueue::new(
+        PimConfig::upmem(32),
+        4,
+        BackendKind::Parallel,
+        4,
+        PipelineMode::Off,
+    )
+    .unwrap();
+    for v in 0..4u64 {
+        queue.submit_plan(&format!("red#{v}"), workloads::job("reduction", n, v).unwrap());
+    }
+    {
+        let outcomes = queue.wait_all().unwrap();
+        for (o, want) in outcomes.iter().zip(&outputs) {
+            assert_eq!(&o.output, want, "{}: partitioned result matches whole-machine", o.name);
+        }
+        // 4 equal jobs over 4 partitions: every job admitted at t = 0.
+        for o in &outcomes {
+            assert_eq!(o.queued_s(), 0.0, "{}: no queueing with a free partition", o.name);
+        }
+    }
+    let makespan = queue.device_report().total_s();
+    assert!(makespan > 0.0);
+    let speedup = back_to_back / makespan;
+    assert!(
+        speedup >= 2.0,
+        "modeled throughput of 4 jobs on 4 partitions must be >= 2x whole-machine \
+         back-to-back, got {speedup:.2}x (back-to-back {:.3} ms, makespan {:.3} ms)",
+        back_to_back * 1e3,
+        makespan * 1e3
+    );
+
+    // And the same batch stays bit-identical across the full matrix.
+    for mode in MODES {
+        for (kind, threads) in BACKENDS {
+            let mut q = JobQueue::new(PimConfig::upmem(32), 4, kind, threads, mode).unwrap();
+            for v in 0..4u64 {
+                q.submit_plan(&format!("red#{v}"), workloads::job("reduction", n, v).unwrap());
+            }
+            let outcomes = q.wait_all().unwrap();
+            for (o, want) in outcomes.iter().zip(&outputs) {
+                assert_eq!(
+                    &o.output, want,
+                    "{}: bit-identical across {kind} x{threads} pipeline {mode}",
+                    o.name
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn admission_queues_jobs_behind_busy_partitions_deterministically() {
+    let run = || {
+        let mut q = JobQueue::new(
+            PimConfig::upmem(32),
+            2,
+            BackendKind::Seq,
+            1,
+            PipelineMode::Off,
+        )
+        .unwrap();
+        for v in 0..5u64 {
+            q.submit_plan(&format!("red#{v}"), workloads::job("reduction", 2_048, v).unwrap());
+        }
+        let placements: Vec<(usize, f64, f64)> = q
+            .wait_all()
+            .unwrap()
+            .iter()
+            .map(|o| (o.partition, o.start_s, o.finish_s))
+            .collect();
+        (placements, q.device_report())
+    };
+    let (placements, report) = run();
+
+    // 5 jobs on 2 partitions: at least one queues behind another.
+    assert!(placements.iter().any(|&(_, start, _)| start > 0.0), "{placements:?}");
+    // Earliest-free admission: the first two jobs go to distinct
+    // partitions at t = 0.
+    assert_eq!(placements[0].0, 0);
+    assert_eq!(placements[0].1, 0.0);
+    assert_eq!(placements[1].0, 1);
+    assert_eq!(placements[1].1, 0.0);
+    // Makespan is the latest finish; lanes sum to the busy time.
+    let latest = placements.iter().fold(0.0f64, |a, &(_, _, f)| a.max(f));
+    assert!((report.total_s() - latest).abs() < 1e-12);
+    assert!(report.busy_s <= 2.0 * report.total_s() + 1e-12, "2 lanes bound the busy time");
+    assert!(report.occupancy() <= 1.0 + 1e-12);
+
+    // The schedule is a pure function of submission order and modeled
+    // durations: a fresh identical queue reproduces it exactly.
+    let (again, _) = run();
+    assert_eq!(placements, again, "deterministic admission");
+}
+
+#[test]
+fn second_batch_queues_behind_the_first() {
+    let mut q =
+        JobQueue::new(PimConfig::upmem(32), 2, BackendKind::Seq, 1, PipelineMode::Off).unwrap();
+    let first = q.submit_plan("early", workloads::job("reduction", 2_048, 0).unwrap());
+    let early_finish = q.wait(&first).unwrap().finish_s;
+    // A later submission lands on the lane clocks the first batch left.
+    let second = q.submit_plan("late", workloads::job("reduction", 2_048, 1).unwrap());
+    let late = q.wait(&second).unwrap();
+    assert_eq!(late.partition, 1, "earliest-free lane is the idle one");
+    assert_eq!(late.start_s, 0.0, "the idle lane admits immediately");
+    assert!(q.device_report().total_s() >= early_finish);
+    assert_eq!(q.device_report().jobs, 2);
+}
