@@ -86,14 +86,18 @@ fn bench_backend(
     kind: BackendKind,
     threads: usize,
     pipeline: PipelineMode,
+    topo: Option<(usize, usize)>,
     quick: bool,
     rows: &mut Vec<BenchRow>,
 ) -> Measurement {
-    let mut sys = PimSystem::with_backend(
-        PimConfig::upmem(dpus),
-        None,
-        backend::make(kind, threads).unwrap(),
-    );
+    // `topo` declares an explicit channel x rank grid (DESIGN.md §15)
+    // and tags the row key, so flat-vs-hierarchical rows coexist in the
+    // gate without renaming the historical (untagged, flat) keys.
+    let cfg = match topo {
+        None => PimConfig::upmem(dpus),
+        Some((ch, rk)) => PimConfig::upmem(dpus).with_topology(ch, rk).unwrap(),
+    };
+    let mut sys = PimSystem::with_backend(cfg, None, backend::make(kind, threads).unwrap());
     sys.set_pipeline(pipeline).unwrap();
     let (warm, iters) = if quick { (1, 2) } else { (1, 4) };
     let m = match workload {
@@ -176,13 +180,17 @@ fn bench_backend(
     let t = sys.timeline();
     let b = kind.as_str();
     let pipe_suffix = if pipeline == PipelineMode::Off { "" } else { "/pipelined" };
+    let topo_suffix = match topo {
+        None => String::new(),
+        Some((ch, rk)) => format!("/topo{ch}x{rk}"),
+    };
     report(
-        &format!("{workload} {n} elems [{b} x{threads}{pipe_suffix}]"),
+        &format!("{workload} {n} elems [{b} x{threads}{pipe_suffix}{topo_suffix}]"),
         m,
         Some((n as u64, "elem")),
     );
     rows.push(BenchRow {
-        key: format!("{workload}/{b}/t{threads}{pipe_suffix}"),
+        key: format!("{workload}/{b}/t{threads}{pipe_suffix}{topo_suffix}"),
         workload,
         backend: b,
         threads,
@@ -247,6 +255,7 @@ fn main() {
                     kind,
                     threads,
                     PipelineMode::Off,
+                    None,
                     quick,
                     &mut rows,
                 );
@@ -271,6 +280,7 @@ fn main() {
                 BackendKind::Parallel,
                 threads,
                 PipelineMode::Off,
+                None,
                 quick,
                 &mut rows,
             );
@@ -292,6 +302,7 @@ fn main() {
                 BackendKind::Seq,
                 1,
                 PipelineMode::On,
+                None,
                 quick,
                 &mut rows,
             );
@@ -306,6 +317,47 @@ fn main() {
                         on * 1e3,
                         off * 1e3,
                         (on / off - 1.0) * 100.0
+                    );
+                }
+            }
+        }
+    }
+
+    // --- channel -> rank -> DPU topology (DESIGN.md §15): the
+    //     tentpole's acceptance rows.  The transfer-bound workloads on
+    //     a 2-channel x 4-rank x 32-DPU machine vs the same 32 DPUs on
+    //     a flat bus, parallel backend with pipelining.  The modeled
+    //     totals must show >= 25% improvement (pinned by
+    //     rust/tests/topology.rs); the rows land in the bench gate so
+    //     the win is tracked PR-over-PR.  `topo1x1` is charged exactly
+    //     like the untagged flat rows — it exists so the comparison
+    //     pair shares every other parameter.
+    {
+        println!("\n-- topology: flat 1x1 vs 2ch x 4rk (32 DPUs, parallel x8, pipelined) --");
+        for (workload, n_elems) in [("vecadd", vec_n), ("histogram", big)] {
+            for topo in [(1usize, 1usize), (2, 4)] {
+                bench_backend(
+                    workload,
+                    32,
+                    n_elems,
+                    BackendKind::Parallel,
+                    8,
+                    PipelineMode::On,
+                    Some(topo),
+                    quick,
+                    &mut rows,
+                );
+            }
+            let key = |t: &str| format!("{workload}/parallel/t8/pipelined/topo{t}");
+            let flat = rows.iter().find(|r| r.key == key("1x1")).map(|r| r.modeled_total_s);
+            let tree = rows.iter().find(|r| r.key == key("2x4")).map(|r| r.modeled_total_s);
+            if let (Some(flat), Some(tree)) = (flat, tree) {
+                if flat > 0.0 {
+                    println!(
+                        "    {workload}: modeled total {:.3} ms on 2x4 vs {:.3} ms flat ({:.1}% win)",
+                        tree * 1e3,
+                        flat * 1e3,
+                        (1.0 - tree / flat) * 100.0
                     );
                 }
             }

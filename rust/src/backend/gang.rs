@@ -9,7 +9,7 @@
 //! identical to [`super::SequentialBackend`] lane for lane.
 
 use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
-use super::merge::{concat_serial, tree_combine, AccFn, MergeStrategy};
+use super::merge::{concat_serial, tree_combine, tree_combine_grouped, AccFn, MergeStrategy};
 use super::{
     read_rows_seq, write_rows_seq, BackendKind, BackendStats, ExecBackend, StatCounters,
 };
@@ -140,6 +140,23 @@ impl ExecBackend for GangBackend {
     fn combine_rows(&self, acc: AccFn, parts: &[&[i32]], len: usize) -> Vec<i32> {
         self.stats.merge();
         let (merged, levels) = tree_combine(acc, parts, len, 1, &self.arena);
+        for _ in 0..levels {
+            self.stats.gang_batch();
+        }
+        merged
+    }
+
+    fn combine_rows_topo(
+        &self,
+        acc: AccFn,
+        parts: &[&[i32]],
+        len: usize,
+        rank_dpus: usize,
+        ranks_per_channel: usize,
+    ) -> Vec<i32> {
+        self.stats.merge();
+        let (merged, levels) =
+            tree_combine_grouped(acc, parts, len, 1, &self.arena, rank_dpus, ranks_per_channel);
         for _ in 0..levels {
             self.stats.gang_batch();
         }

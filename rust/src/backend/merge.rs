@@ -130,6 +130,65 @@ pub(crate) fn tree_combine(
     (cur.pop().expect("tree leaves at least one row"), levels)
 }
 
+/// Hierarchical tree combine mirroring the machine's channel→rank→DPU
+/// tree (DESIGN.md §15): each rank's contiguous run of `rank_dpus`
+/// parts is tree-combined first, then the rank roots within each
+/// channel (`ranks_per_channel` per group), then the channel roots.
+/// Returns the merged row and the summed stage depths (what the
+/// hierarchical `MergePlan` models as `merge_levels`).  The grouping is
+/// a fixed re-parenthesization of [`tree_combine`]'s order, so results
+/// are bit-identical for associative accumulators.  Shapes the rank
+/// grid does not divide fall back to the flat tree.
+pub(crate) fn tree_combine_grouped(
+    acc: AccFn,
+    parts: &[&[i32]],
+    len: usize,
+    threads: usize,
+    arena: &BufArena,
+    rank_dpus: usize,
+    ranks_per_channel: usize,
+) -> (Vec<i32>, u64) {
+    let rank_dpus = rank_dpus.max(1);
+    if parts.len() <= rank_dpus || parts.len() % rank_dpus != 0 {
+        return tree_combine(acc, parts, len, threads, arena);
+    }
+
+    // Stage 1: within-rank trees over contiguous part groups.  Equal
+    // groups run the same depth; the deepest bounds the stage.
+    let mut depth = 0u64;
+    let mut roots: Vec<Vec<i32>> = Vec::with_capacity(parts.len() / rank_dpus);
+    for chunk in parts.chunks(rank_dpus) {
+        let (merged, lv) = tree_combine(acc, chunk, len, threads, arena);
+        depth = depth.max(lv);
+        roots.push(merged);
+    }
+
+    // Stage 2: within-channel trees over the rank roots (skipped when
+    // one channel holds them all — stage 3 is that combine).
+    let rpc = ranks_per_channel.max(1);
+    if rpc > 1 && roots.len() > rpc && roots.len() % rpc == 0 {
+        let mut stage = 0u64;
+        let mut channel_roots = Vec::with_capacity(roots.len() / rpc);
+        for chunk in roots.chunks(rpc) {
+            let views: Vec<&[i32]> = chunk.iter().map(|r| r.as_slice()).collect();
+            let (merged, lv) = tree_combine(acc, &views, len, threads, arena);
+            stage = stage.max(lv);
+            channel_roots.push(merged);
+        }
+        depth += stage;
+        roots = channel_roots;
+    }
+
+    // Stage 3: across what remains (channel roots, or the single
+    // channel's rank roots).
+    let views: Vec<&[i32]> = roots.iter().map(|r| r.as_slice()).collect();
+    let (merged, lv) = tree_combine(acc, &views, len, threads, arena);
+    for row in roots {
+        arena.give(row);
+    }
+    (merged, depth + lv)
+}
+
 /// Level 1: pair-merge the borrowed input views into owned arena rows
 /// (an odd trailing part is copied forward unchanged).
 fn merge_first_level(
@@ -316,6 +375,43 @@ mod tests {
         let (got, levels) = tree_combine(i32::wrapping_add, &v, 20_000, 4, &arena);
         assert_eq!(got, want);
         assert_eq!(levels, 3); // 6 -> 3 -> 2 -> 1
+    }
+
+    #[test]
+    fn grouped_tree_matches_flat_tree_and_fold() {
+        let arena = default_buf_arena();
+        for (n, rank_dpus, rpc) in
+            [(32usize, 4usize, 4usize), (32, 4, 2), (25, 5, 5), (8, 1, 4), (6, 2, 3), (16, 16, 1)]
+        {
+            let rows: Vec<Vec<i32>> = (0..n)
+                .map(|d| (0..11).map(|j| (d as i32 + 2).wrapping_mul(j as i32 - 4)).collect())
+                .collect();
+            let v = views(&rows);
+            let want = staged_fold(i32::wrapping_add, &v, 11, &arena);
+            for threads in [1usize, 3, 8] {
+                let (got, _levels) =
+                    tree_combine_grouped(i32::wrapping_add, &v, 11, threads, &arena, rank_dpus, rpc);
+                assert_eq!(got, want, "n={n} ranks of {rank_dpus}, rpc={rpc}, t={threads}");
+            }
+        }
+        // Summed stage depths: 32 parts as 8 ranks of 4 in 2 channels
+        // = 2 (within rank) + 2 (within channel) + 1 (across) = 5.
+        let rows: Vec<Vec<i32>> = (0..32).map(|d| vec![d as i32; 3]).collect();
+        let v = views(&rows);
+        let (_, levels) = tree_combine_grouped(i32::wrapping_add, &v, 3, 1, &arena, 4, 4);
+        assert_eq!(levels, 5);
+        // 25 parts as 5 ranks of 5, one channel: 3 + 3 = 6 levels —
+        // one deeper than the flat ceil(log2 25) = 5 tree.
+        let rows: Vec<Vec<i32>> = (0..25).map(|d| vec![d as i32; 3]).collect();
+        let v = views(&rows);
+        let (_, levels) = tree_combine_grouped(i32::wrapping_add, &v, 3, 1, &arena, 5, 5);
+        assert_eq!(levels, 6);
+        // Shapes the grid does not divide fall back to the flat tree.
+        let rows: Vec<Vec<i32>> = (0..7).map(|d| vec![d as i32; 3]).collect();
+        let v = views(&rows);
+        let (got, levels) = tree_combine_grouped(i32::wrapping_add, &v, 3, 1, &arena, 2, 2);
+        assert_eq!(got, staged_fold(i32::wrapping_add, &v, 3, &arena));
+        assert_eq!(levels, 3);
     }
 
     #[test]

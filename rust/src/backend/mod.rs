@@ -239,6 +239,26 @@ pub trait ExecBackend: Send + Sync {
     /// bit-identical to the serial fold for associative accumulators.
     fn combine_rows(&self, acc: AccFn, parts: &[&[i32]], len: usize) -> Vec<i32>;
 
+    /// Topology-aware combine (DESIGN.md §15): merge each rank's
+    /// contiguous run of `rank_dpus` partials first, then the rank
+    /// roots within each channel (`ranks_per_channel` per group), then
+    /// the channel roots — the hierarchy mirroring the machine's
+    /// channel→rank→DPU tree that `MergePlan::with_topology` charges.
+    /// For the associative accumulators the grouping is only a
+    /// re-parenthesization, so results stay bit-identical to
+    /// [`Self::combine_rows`]; the default delegates to it (flat
+    /// machines, and backends without a grouped path).
+    fn combine_rows_topo(
+        &self,
+        acc: AccFn,
+        parts: &[&[i32]],
+        len: usize,
+        _rank_dpus: usize,
+        _ranks_per_channel: usize,
+    ) -> Vec<i32> {
+        self.combine_rows(acc, parts, len)
+    }
+
     /// Concatenate per-DPU pieces (in DPU order) into one `total`-word
     /// array — the gather side of `allgather` and of plain `gather`.
     fn concat_rows(&self, parts: &[&[i32]], total: usize) -> Vec<i32>;

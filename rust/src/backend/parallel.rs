@@ -16,7 +16,9 @@
 //! `PimMachine`, identically for every backend.
 
 use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
-use super::merge::{concat_sharded, tree_combine, tree_shards, AccFn, MergeStrategy};
+use super::merge::{
+    concat_sharded, tree_combine, tree_combine_grouped, tree_shards, AccFn, MergeStrategy,
+};
 use super::{
     read_rows_seq, shard_ranges, write_rows_seq, BackendKind, BackendStats, ExecBackend,
     StatCounters,
@@ -255,6 +257,30 @@ impl ExecBackend for ParallelBackend {
             self.stats.sharded_op();
         }
         let (merged, _levels) = tree_combine(acc, parts, len, self.merge_threads, &self.arena);
+        merged
+    }
+
+    fn combine_rows_topo(
+        &self,
+        acc: AccFn,
+        parts: &[&[i32]],
+        len: usize,
+        rank_dpus: usize,
+        ranks_per_channel: usize,
+    ) -> Vec<i32> {
+        self.stats.merge();
+        if tree_shards(parts.len(), len, self.merge_threads) {
+            self.stats.sharded_op();
+        }
+        let (merged, _levels) = tree_combine_grouped(
+            acc,
+            parts,
+            len,
+            self.merge_threads,
+            &self.arena,
+            rank_dpus,
+            ranks_per_channel,
+        );
         merged
     }
 

@@ -76,6 +76,11 @@ COMMANDS:
   run <workload>    run one workload end-to-end on the simulated machine
                     workloads: reduction vecadd histogram linreg logreg kmeans
                     options: --dpus N (default 16) --elems N --host-only
+                             --channels C --ranks R (channel→rank→DPU
+                             topology, DESIGN.md §15: C channels x R
+                             ranks/channel; the DPU count must divide
+                             into C x R equal ranks; default 1x1 = flat
+                             bus, or $SIMPLEPIM_CHANNELS/$SIMPLEPIM_RANKS)
                              --backend {seq|gang|parallel} (execution
                              backend; default seq or $SIMPLEPIM_BACKEND)
                              --threads N (parallel backend workers;
@@ -120,6 +125,7 @@ COMMANDS:
                     bootstrap-placeholder baseline a hard failure
                     instead of a silent pass
   info              print the machine model   options: --dpus N
+                    --channels C --ranks R (as in `run`)
   selftest          functional check: XLA path vs host goldens
                     options: --backend --threads --pipeline --seed
                     (as in `run`)
@@ -146,10 +152,10 @@ pub fn run() -> Result<()> {
 }
 
 fn cmd_info(args: &Args) -> Result<()> {
-    let dpus = args.flag_usize("dpus", 2432)?;
-    let cfg = crate::PimConfig::upmem(dpus);
+    let cfg = crate::report::figures::machine_config(args, 2432)?;
     println!("UPMEM-like machine model");
     println!("  DPUs                : {}", cfg.n_dpus);
+    println!("  topology            : {}", crate::report::figures::topology_line(&cfg));
     println!("  ranks               : {}", cfg.n_ranks());
     println!("  clock               : {} MHz", cfg.freq_hz / 1e6);
     println!("  pipeline depth      : {}", cfg.pipeline_depth);

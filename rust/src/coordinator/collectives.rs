@@ -50,8 +50,9 @@ impl PimSystem {
         let acc = handle.func.acc();
         let merged = {
             let backend = self.backend.as_ref();
+            let (rank_dpus, rpc) = self.machine.cfg.merge_grouping();
             self.machine.with_row_words(meta.addr, &|_| bytes, |parts| {
-                backend.combine_rows(acc, parts, words)
+                backend.combine_rows_topo(acc, parts, words, rank_dpus, rpc)
             })?
         };
 
@@ -62,7 +63,8 @@ impl PimSystem {
         // Modeled cost: pull every copy, combine (tree vs serial per
         // the backend), broadcast the result back — overlapped
         // chunk-by-chunk in pipelined mode.
-        let plan = MergePlan::reduce(n_dpus as u64, words as u64, self.backend.merge_strategy());
+        let plan = MergePlan::reduce(n_dpus as u64, words as u64, self.backend.merge_strategy())
+            .with_topology(&self.machine.cfg);
         self.charge_merge_phase(&plan, padded, padded);
 
         let kind = self.backend.kind();

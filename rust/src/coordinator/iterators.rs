@@ -388,8 +388,9 @@ impl PimSystem {
         let acc = handle.func.acc();
         let merged = {
             let backend = self.backend.as_ref();
+            let (rank_dpus, rpc) = self.machine.cfg.merge_grouping();
             self.machine.with_row_words(scratch, &|_| output_len * 4, |parts| {
-                backend.combine_rows(acc, parts, output_len as usize)
+                backend.combine_rows_topo(acc, parts, output_len as usize, rank_dpus, rpc)
             })?
         };
         self.pool_free(scratch, part_bytes)?;
@@ -406,7 +407,8 @@ impl PimSystem {
             self.machine.n_dpus() as u64,
             output_len,
             self.backend.merge_strategy(),
-        );
+        )
+        .with_topology(&self.machine.cfg);
         self.charge_merge_phase(&mplan, part_bytes, part_bytes);
         let kind = self.backend.kind();
         self.engine.record_executed(

@@ -245,15 +245,73 @@ pub struct MergePlan {
     /// Words per partial (reduce) or total output words (concat).
     pub len: u64,
     pub strategy: MergeStrategy,
+    /// Rank groups the partials arrive from (DESIGN.md §15): `1` = the
+    /// flat tree; `> 1` makes a tree reduce hierarchical — combine
+    /// within each rank, then within each channel, then across
+    /// channels.  Set via [`Self::with_topology`].
+    pub ranks: u64,
+    /// Channels the ranks are grouped into (divides `ranks`).
+    pub channels: u64,
 }
 
 impl MergePlan {
     pub fn reduce(parts: u64, len: u64, strategy: MergeStrategy) -> MergePlan {
-        MergePlan { kind: MergeKind::Reduce, parts, len, strategy }
+        MergePlan { kind: MergeKind::Reduce, parts, len, strategy, ranks: 1, channels: 1 }
     }
 
     pub fn concat(parts: u64, total_words: u64, strategy: MergeStrategy) -> MergePlan {
-        MergePlan { kind: MergeKind::Concat, parts, len: total_words, strategy }
+        MergePlan {
+            kind: MergeKind::Concat,
+            parts,
+            len: total_words,
+            strategy,
+            ranks: 1,
+            channels: 1,
+        }
+    }
+
+    /// Shape a tree reduce after the machine's channel→rank→DPU tree.
+    /// Flat configs (and concats, whose copy cost has no tree) are left
+    /// untouched, as are part counts the rank grid does not divide
+    /// (partial-machine merges fall back to the flat tree rather than
+    /// inventing unequal rank groups).
+    pub fn with_topology(mut self, cfg: &PimConfig) -> MergePlan {
+        if self.kind == MergeKind::Reduce && cfg.explicit_topology() {
+            let ranks = cfg.n_ranks() as u64;
+            if ranks > 1 && self.parts >= ranks && self.parts % ranks == 0 {
+                self.ranks = ranks;
+                self.channels = cfg.n_channels as u64;
+            }
+        }
+        self
+    }
+
+    /// One stage of the hierarchical tree: `groups` independent pairwise
+    /// trees of `group_size` leaves each, running concurrently.  Counts
+    /// the stage's levels, and the thread-quantized work units per level
+    /// (every group contributes its pairs to the same worker pool).
+    fn tree_stage(group_size: u64, groups: u64, threads: u64) -> (u64, u64) {
+        let mut remaining = group_size.max(1);
+        let (mut levels, mut units) = (0u64, 0u64);
+        while remaining > 1 {
+            let pairs = remaining / 2;
+            units += (pairs * groups).div_ceil(threads.max(1));
+            levels += 1;
+            remaining -= pairs;
+        }
+        (levels, units)
+    }
+
+    /// The hierarchical tree's stages as `(group_size, groups)` pairs:
+    /// within-rank, within-channel, across-channel.  Stages with one
+    /// leaf per group contribute nothing and are dropped.
+    fn stages(&self) -> Vec<(u64, u64)> {
+        let rpc = self.ranks / self.channels.max(1);
+        vec![
+            (self.parts / self.ranks, self.ranks), // leaves per rank
+            (rpc, self.channels),                  // rank roots per channel
+            (self.channels, 1),                    // channel roots
+        ]
     }
 
     /// Elementwise combine operations (reduce) or copied words
@@ -266,21 +324,22 @@ impl MergePlan {
     }
 
     /// Tree levels the strategy executes (0 for the serial fold; 1 for
-    /// a sharded concat).
+    /// a sharded concat).  A hierarchical reduce sums its within-rank,
+    /// within-channel, and across-channel stage depths — which can
+    /// exceed the flat ⌈log₂ parts⌉ when rank groups are odd-sized (an
+    /// honest cost of respecting the tree; transfers more than pay for
+    /// it).
     pub fn levels(&self) -> u64 {
         match self.strategy {
             MergeStrategy::Serial => 0,
             MergeStrategy::Tree { .. } => match self.kind {
                 MergeKind::Concat => 1,
-                MergeKind::Reduce => {
-                    let mut remaining = self.parts.max(1);
-                    let mut levels = 0u64;
-                    while remaining > 1 {
-                        remaining -= remaining / 2;
-                        levels += 1;
-                    }
-                    levels
-                }
+                MergeKind::Reduce if self.ranks > 1 => self
+                    .stages()
+                    .into_iter()
+                    .map(|(size, groups)| Self::tree_stage(size, groups, 1).0)
+                    .sum(),
+                MergeKind::Reduce => Self::tree_stage(self.parts, 1, 1).0,
             },
         }
     }
@@ -296,13 +355,14 @@ impl MergePlan {
             }
             (MergeKind::Reduce, MergeStrategy::Tree { .. }) => {
                 let t = threads.max(1);
-                let mut remaining = self.parts.max(1);
-                let mut level_units = 0u64;
-                while remaining > 1 {
-                    let pairs = remaining / 2;
-                    level_units += pairs.div_ceil(t);
-                    remaining -= pairs;
-                }
+                let level_units: u64 = if self.ranks > 1 {
+                    self.stages()
+                        .into_iter()
+                        .map(|(size, groups)| Self::tree_stage(size, groups, t).1)
+                        .sum()
+                } else {
+                    Self::tree_stage(self.parts, 1, t).1
+                };
                 (level_units * self.len) as f64 / rate
             }
         }
@@ -644,6 +704,31 @@ impl PimSystem {
             tl.pipeline_chunks,
             tl.overlap_saved_s * 1e3,
             self.engine.pending_xfers.len(),
+        ));
+        let cfg = &self.machine.cfg;
+        let (h2p_u, p2h_u) = crate::timing::rank_utilization(cfg, &tl);
+        let pct = |u: Option<f64>| match u {
+            Some(u) => format!("{:.0}%", u * 100.0),
+            None => "-".into(),
+        };
+        let shape = if cfg.explicit_topology() {
+            format!(
+                "{} channel(s) x {} rank(s)/channel x {} DPU(s)/rank",
+                cfg.n_channels,
+                cfg.ranks_per_channel,
+                cfg.rank_dpus()
+            )
+        } else {
+            format!(
+                "flat bus, {} rank(s) x <= {} DPU(s)/rank",
+                cfg.n_ranks(),
+                cfg.dpus_per_rank.min(cfg.n_dpus)
+            )
+        };
+        out.push_str(&format!(
+            "  topology: {shape} | rank-engine utilization: scatter {} gather {}\n",
+            pct(h2p_u),
+            pct(p2h_u),
         ));
         if tl.merges > 0 {
             out.push_str(&format!(

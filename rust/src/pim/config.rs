@@ -8,6 +8,8 @@
 //! host<->PIM parallel transfer commands whose bandwidth scales with the
 //! number of ranks.
 
+use crate::error::{Error, Result};
+
 /// Full machine description (PIM side + host side).
 #[derive(Debug, Clone)]
 pub struct PimConfig {
@@ -45,6 +47,19 @@ pub struct PimConfig {
     pub xfer_rank_bw: f64,
     /// Ceiling on aggregate host<->PIM bandwidth across ranks (B/s).
     pub xfer_bw_ceiling: f64,
+    /// Memory channels the ranks are spread across (DESIGN.md §15).
+    /// `1` together with `ranks_per_channel == 1` is the flat sentinel:
+    /// ranks derive from `dpus_per_rank` and all bandwidth flows
+    /// through the single aggregate bus, exactly the pre-topology
+    /// model.  Set both via [`Self::with_topology`].
+    pub n_channels: usize,
+    /// Ranks behind each memory channel (flat sentinel: 1, see
+    /// [`Self::n_channels`]).
+    pub ranks_per_channel: usize,
+    /// Per-channel bus bandwidth cap (B/s).  At the default it equals
+    /// the aggregate ceiling, so a single channel never binds below
+    /// `xfer_bw_ceiling`; lower it to model channel-starved parts.
+    pub xfer_channel_bw: f64,
     /// Serial (single-DPU) transfer bandwidth (B/s).
     pub xfer_serial_bw: f64,
     /// Fixed software latency per host<->PIM transfer command (s).
@@ -89,6 +104,9 @@ impl PimConfig {
             // ~350 MB/s/rank effective, saturating around 16 GB/s.
             xfer_rank_bw: 350e6,
             xfer_bw_ceiling: 16e9,
+            n_channels: 1,
+            ranks_per_channel: 1,
+            xfer_channel_bw: 16e9,
             xfer_serial_bw: 600e6,
             xfer_latency_s: 20e-6,
             launch_latency_s: 0.25e-3,
@@ -121,15 +139,97 @@ impl PimConfig {
         cfg
     }
 
-    /// Number of ranks (ceil division: a partial rank still burns a rank
-    /// slot on the bus).
-    pub fn n_ranks(&self) -> usize {
-        self.n_dpus.div_ceil(self.dpus_per_rank)
+    /// Declare an explicit `channel -> rank -> DPU` topology
+    /// (DESIGN.md §15).  The flat machine stays expressible as 1x1, so
+    /// `with_topology(1, 1)` is the identity.  Degenerate shapes are
+    /// hard config errors, never silently clamped: zero channels or
+    /// ranks, more ranks than DPUs, and DPU counts the rank grid does
+    /// not divide are all rejected.
+    pub fn with_topology(mut self, channels: usize, ranks_per_channel: usize) -> Result<Self> {
+        if channels == 0 || ranks_per_channel == 0 {
+            return Err(Error::Config(format!(
+                "topology {channels}x{ranks_per_channel}: channels and ranks must be >= 1"
+            )));
+        }
+        let ranks = channels * ranks_per_channel;
+        if ranks > self.n_dpus {
+            return Err(Error::Config(format!(
+                "topology {channels}x{ranks_per_channel}: {ranks} ranks exceed {} DPUs",
+                self.n_dpus
+            )));
+        }
+        if self.n_dpus % ranks != 0 {
+            return Err(Error::Config(format!(
+                "topology {channels}x{ranks_per_channel}: {} DPUs not divisible into {ranks} equal ranks",
+                self.n_dpus
+            )));
+        }
+        self.n_channels = channels;
+        self.ranks_per_channel = ranks_per_channel;
+        Ok(self)
     }
 
-    /// Effective aggregate parallel-transfer bandwidth in B/s.
+    /// Whether a `channel -> rank -> DPU` tree was declared (vs the
+    /// flat 1x1 sentinel where ranks derive from `dpus_per_rank`).
+    pub fn explicit_topology(&self) -> bool {
+        self.n_channels > 1 || self.ranks_per_channel > 1
+    }
+
+    /// Number of ranks (ceil division: a partial rank still burns a rank
+    /// slot on the bus).  With an explicit topology the declared grid
+    /// is authoritative.
+    pub fn n_ranks(&self) -> usize {
+        if self.explicit_topology() {
+            self.n_channels * self.ranks_per_channel
+        } else {
+            self.n_dpus.div_ceil(self.dpus_per_rank)
+        }
+    }
+
+    /// DPUs behind one rank's transfer engine.
+    pub fn rank_dpus(&self) -> usize {
+        if self.explicit_topology() {
+            // `with_topology` validated divisibility; div_ceil keeps
+            // hand-built configs from rounding a partial rank to zero.
+            self.n_dpus.div_ceil(self.n_ranks())
+        } else {
+            self.dpus_per_rank
+        }
+    }
+
+    /// `(rank_dpus, ranks_per_channel)` for the hierarchical merge
+    /// (`ExecBackend::combine_rows_topo`): on a flat machine the
+    /// grouping is disabled (`rank_dpus = n_dpus` makes every grouped
+    /// combine fall back to the flat tree), so the PR 4 merge order —
+    /// and the gang backend's per-level batch counters — are untouched
+    /// unless a topology was declared.
+    pub fn merge_grouping(&self) -> (usize, usize) {
+        if self.explicit_topology() {
+            (self.rank_dpus(), self.ranks_per_channel)
+        } else {
+            (self.n_dpus.max(1), 1)
+        }
+    }
+
+    /// Channels a transfer touching `ranks_used` ranks spreads across.
+    /// The flat machine is a single bus: everything shares one channel.
+    pub fn channels_used(&self, ranks_used: usize) -> usize {
+        if self.explicit_topology() {
+            ranks_used.div_ceil(self.ranks_per_channel).min(self.n_channels).max(1)
+        } else {
+            1
+        }
+    }
+
+    /// Effective aggregate parallel-transfer bandwidth in B/s: rank
+    /// engines in parallel, capped per channel bus and by the global
+    /// ceiling.  Flat configs see `channels_used = 1` with the channel
+    /// cap at the ceiling, reproducing the pre-topology number exactly.
     pub fn parallel_bw(&self) -> f64 {
-        (self.n_ranks() as f64 * self.xfer_rank_bw).min(self.xfer_bw_ceiling)
+        let ranks = self.n_ranks();
+        (ranks as f64 * self.xfer_rank_bw)
+            .min(self.channels_used(ranks) as f64 * self.xfer_channel_bw)
+            .min(self.xfer_bw_ceiling)
     }
 
     /// WRAM bytes usable by iterator buffers/accumulators.
@@ -163,6 +263,54 @@ mod tests {
         let big = PimConfig::upmem(4096);
         assert!(small.parallel_bw() < mid.parallel_bw());
         assert_eq!(big.parallel_bw(), big.xfer_bw_ceiling);
+    }
+
+    #[test]
+    fn explicit_topology_overrides_rank_derivation() {
+        let cfg = PimConfig::upmem(32).with_topology(2, 4).unwrap();
+        assert!(cfg.explicit_topology());
+        assert_eq!(cfg.n_ranks(), 8);
+        assert_eq!(cfg.rank_dpus(), 4);
+        assert_eq!(cfg.channels_used(8), 2);
+        assert_eq!(cfg.channels_used(3), 1);
+        assert_eq!(cfg.channels_used(5), 2);
+        // 8 rank engines beat the flat single partial rank 8x.
+        let flat = PimConfig::upmem(32);
+        assert_eq!(flat.parallel_bw(), 350e6);
+        assert_eq!(cfg.parallel_bw(), 8.0 * 350e6);
+    }
+
+    #[test]
+    fn flat_sentinel_is_the_identity() {
+        let base = PimConfig::upmem(608);
+        let one = base.clone().with_topology(1, 1).unwrap();
+        assert!(!one.explicit_topology());
+        assert_eq!(one.n_ranks(), base.n_ranks());
+        assert_eq!(one.rank_dpus(), base.dpus_per_rank);
+        assert_eq!(one.channels_used(10), 1);
+        assert_eq!(one.parallel_bw(), base.parallel_bw());
+    }
+
+    #[test]
+    fn topology_degenerates_are_config_errors() {
+        assert!(PimConfig::upmem(32).with_topology(0, 4).is_err());
+        assert!(PimConfig::upmem(32).with_topology(2, 0).is_err());
+        // More ranks than DPUs.
+        assert!(PimConfig::upmem(6).with_topology(2, 4).is_err());
+        // 32 DPUs do not divide into 3 equal ranks.
+        assert!(PimConfig::upmem(32).with_topology(1, 3).is_err());
+        // Exactly one DPU per rank is legal.
+        let cfg = PimConfig::upmem(8).with_topology(2, 4).unwrap();
+        assert_eq!(cfg.rank_dpus(), 1);
+    }
+
+    #[test]
+    fn channel_cap_binds_when_lowered() {
+        let mut cfg = PimConfig::upmem(2048).with_topology(2, 16).unwrap();
+        // 32 ranks x 350 MB/s = 11.2 GB/s, under the 16 GB/s ceiling.
+        assert_eq!(cfg.parallel_bw(), 32.0 * 350e6);
+        cfg.xfer_channel_bw = 2e9;
+        assert_eq!(cfg.parallel_bw(), 4e9, "2 channels x 2 GB/s bind first");
     }
 
     #[test]

@@ -135,6 +135,18 @@ impl DpuSet {
             )));
         }
         let k = parent.n_dpus / parts;
+        // With an explicit channel→rank→DPU tree (DESIGN.md §15), cuts
+        // must land on rank boundaries: a partition straddling a rank
+        // would share one physical transfer engine with its neighbor,
+        // so the per-partition lanes could no longer compose into the
+        // device makespan without double-counting that engine.
+        if parent.explicit_topology() && k % parent.rank_dpus() != 0 {
+            return Err(Error::Config(format!(
+                "partition of {k} DPUs straddles a rank boundary ({} DPUs/rank); \
+                 choose a partition count whose shares cover whole ranks",
+                parent.rank_dpus()
+            )));
+        }
         // Each partition gets a proportional share of the parent's
         // aggregate parallel-transfer bandwidth and host merge threads:
         // concurrent tenants contend for the DIMM bus and the host CPU,
@@ -154,6 +166,20 @@ impl DpuSet {
         // `host_threads` real) — a deliberate simplification; with the
         // default 32-thread host it never triggers below 33 partitions.
         cfg.host_threads = ((parent.host_threads * k) / parent.n_dpus).max(1);
+        // The partition inherits its slice of the topology tree: the
+        // ranks it covers, grouped back into whole channels when the
+        // cut lands on a channel boundary (so `split(cfg, 1)` is the
+        // identity), otherwise as a single-channel run of ranks.
+        if parent.explicit_topology() {
+            let ranks_in_part = k / parent.rank_dpus();
+            if ranks_in_part % parent.ranks_per_channel == 0 {
+                cfg.n_channels = ranks_in_part / parent.ranks_per_channel;
+                cfg.ranks_per_channel = parent.ranks_per_channel;
+            } else {
+                cfg.n_channels = 1;
+                cfg.ranks_per_channel = ranks_in_part;
+            }
+        }
         Ok((0..parts)
             .map(|i| DpuSet { first_dpu: i * k, n_dpus: k, cfg: cfg.clone() })
             .collect())
@@ -789,6 +815,36 @@ mod tests {
             1024,
         );
         assert!((one_rank_before - one_rank_after).abs() < 1e-15, "partial-rank identity");
+    }
+
+    #[test]
+    fn dpu_set_split_cuts_along_rank_boundaries() {
+        // 2 channels x 4 ranks x 4 DPUs/rank: 8-rank tree over 32 DPUs.
+        let parent = PimConfig::upmem(32).with_topology(2, 4).unwrap();
+
+        // 2 parts of 16 DPUs = one whole channel each.
+        let halves = DpuSet::split(&parent, 2).unwrap();
+        assert_eq!(halves[0].cfg().n_channels, 1);
+        assert_eq!(halves[0].cfg().ranks_per_channel, 4);
+        assert_eq!(halves[0].cfg().n_ranks(), 4);
+        // Each half owns 4 real rank engines — and its bus share says
+        // exactly that (4 x 350 MB/s), not a fraction of one flat bus.
+        assert!((halves[0].cfg().parallel_bw() - 4.0 * 350e6).abs() < 1.0);
+
+        // 8 parts of 4 DPUs = one rank each.
+        let ranks = DpuSet::split(&parent, 8).unwrap();
+        assert!((ranks[0].cfg().parallel_bw() - 350e6).abs() < 1.0);
+
+        // 16 parts of 2 DPUs would straddle ranks: hard error.
+        let err = DpuSet::split(&parent, 16).err().expect("straddling split must fail");
+        assert!(matches!(err, Error::Config(_)));
+        assert!(err.to_string().contains("rank boundary"), "{err}");
+
+        // split(cfg, 1) stays the identity, topology included.
+        let whole = DpuSet::split(&parent, 1).unwrap();
+        assert_eq!(whole[0].cfg().n_channels, 2);
+        assert_eq!(whole[0].cfg().ranks_per_channel, 4);
+        assert!((whole[0].cfg().parallel_bw() - parent.parallel_bw()).abs() < 1.0);
     }
 
     #[test]

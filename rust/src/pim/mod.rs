@@ -23,4 +23,4 @@ pub use config::PimConfig;
 pub use device::{DpuSet, PimMachine, Timeline};
 pub use isa::{slots, InstrMix, Op};
 pub use pipeline::{ChunkPlan, PipeSchedule, PipelineMode};
-pub use xfer::XferKind;
+pub use xfer::{transfer_seconds, XferKind};

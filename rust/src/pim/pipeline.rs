@@ -35,6 +35,13 @@
 //!   `SIMPLEPIM_PIPELINE` switch: `on` pipelines every structurally
 //!   eligible launch, `auto` lets the planner restructure only when the
 //!   estimated win clears a latency-scaled threshold.
+//!
+//! Every chunk's transfer cost routes through
+//! [`transfer_seconds`], so under an explicit channel→rank→DPU
+//! topology (DESIGN.md §15) each chunk is charged against all the rank
+//! engines it spans — the scheduler's per-chunk transfer lanes shrink
+//! by the rank fan-out, and its chunk-count search rebalances
+//! accordingly.  Nothing here assumes a single flat bus.
 
 use crate::error::{Error, Result};
 

@@ -33,8 +33,16 @@ pub fn transfer_seconds(
     if n_dpus == 0 || bytes_per_dpu == 0 {
         return 0.0;
     }
-    let ranks_used = n_dpus.div_ceil(cfg.dpus_per_rank) as f64;
-    let bw = (ranks_used * cfg.xfer_rank_bw).min(cfg.xfer_bw_ceiling);
+    let ranks = n_dpus.div_ceil(cfg.rank_dpus());
+    let ranks_used = ranks as f64;
+    // Topology-aware aggregate bandwidth (DESIGN.md §15): one engine
+    // per rank in parallel, capped by the channel buses the transfer
+    // spreads across and by the global ceiling.  Flat configs resolve
+    // to `rank_dpus == dpus_per_rank` and a single channel whose cap
+    // equals the ceiling — the pre-topology number, bit for bit.
+    let bw = (ranks_used * cfg.xfer_rank_bw)
+        .min(cfg.channels_used(ranks) as f64 * cfg.xfer_channel_bw)
+        .min(cfg.xfer_bw_ceiling);
     match kind {
         XferKind::Parallel => {
             let total = n_dpus as f64 * bytes_per_dpu as f64;
@@ -96,6 +104,55 @@ mod tests {
         let c = cfg();
         assert_eq!(transfer_seconds(&c, XferKind::Parallel, 0, 1024), 0.0);
         assert_eq!(transfer_seconds(&c, XferKind::Parallel, 8, 0), 0.0);
+    }
+
+    #[test]
+    fn explicit_topology_multiplies_rank_engines() {
+        // 32 DPUs flat = one partial rank; as 2x4 the same DPUs sit
+        // behind 8 rank engines, so the same scatter models ~8x faster
+        // (the fixed command latency is the only non-scaling term).
+        let flat = PimConfig::upmem(32);
+        let topo = PimConfig::upmem(32).with_topology(2, 4).unwrap();
+        let per_dpu = 1u64 << 20;
+        let t_flat = transfer_seconds(&flat, XferKind::Parallel, 32, per_dpu);
+        let t_topo = transfer_seconds(&topo, XferKind::Parallel, 32, per_dpu);
+        let flat_stream = t_flat - flat.xfer_latency_s;
+        let topo_stream = t_topo - topo.xfer_latency_s;
+        assert!((flat_stream / topo_stream - 8.0).abs() < 1e-9);
+
+        // Touching only 4 DPUs uses a single rank engine of the tree:
+        // same bandwidth as a flat partial rank.
+        let t_part = transfer_seconds(&topo, XferKind::Parallel, 4, per_dpu);
+        let t_ref = transfer_seconds(&flat, XferKind::Parallel, 4, per_dpu);
+        assert_eq!(t_part, t_ref);
+    }
+
+    #[test]
+    fn flat_1x1_topology_is_bit_identical() {
+        let flat = PimConfig::upmem(608);
+        let one = PimConfig::upmem(608).with_topology(1, 1).unwrap();
+        for kind in [XferKind::Parallel, XferKind::Serial, XferKind::Broadcast] {
+            for n in [1usize, 63, 64, 65, 608] {
+                for bytes in [8u64, 4096, 1 << 20] {
+                    assert_eq!(
+                        transfer_seconds(&flat, kind, n, bytes),
+                        transfer_seconds(&one, kind, n, bytes),
+                        "{kind:?} n={n} bytes={bytes}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn lowered_channel_cap_binds_transfers() {
+        let mut topo = PimConfig::upmem(32).with_topology(2, 4).unwrap();
+        topo.xfer_channel_bw = 700e6; // 2 ranks' worth per channel
+        let t = transfer_seconds(&topo, XferKind::Parallel, 32, 1 << 20);
+        let total = 32.0 * (1u64 << 20) as f64;
+        // 8 ranks would give 2.8 GB/s, but 2 channels x 700 MB/s cap it.
+        let want = topo.xfer_latency_s + total / 1.4e9;
+        assert!((t - want).abs() < 1e-12);
     }
 
     #[test]

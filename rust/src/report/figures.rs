@@ -241,6 +241,57 @@ fn exec_selection(args: &Args) -> Result<(BackendKind, usize, PipelineMode)> {
     Ok((kind, threads, pipeline))
 }
 
+/// Resolve one topology knob: flag over environment, defaulting to 1.
+/// Garbage (or empty) values in either place are hard config errors —
+/// house rule: zero/garbage env never silently falls back.
+fn topology_knob(args: &Args, flag: &str, env: &str) -> Result<usize> {
+    let parse = |src: &str, v: &str| -> Result<usize> {
+        v.parse::<usize>()
+            .map_err(|_| Error::Config(format!("{src} expects an integer, got `{v}`")))
+    };
+    if let Some(v) = args.flag(flag) {
+        return parse(&format!("--{flag}"), v);
+    }
+    match std::env::var(env) {
+        Ok(v) => parse(env, &v),
+        Err(_) => Ok(1),
+    }
+}
+
+/// Resolve the machine shape shared by every CLI path: `--dpus` plus
+/// the channel→rank→DPU topology (`--channels`/`--ranks` flags over
+/// `SIMPLEPIM_CHANNELS`/`SIMPLEPIM_RANKS`, DESIGN.md §15).  1x1 — the
+/// default — is the flat machine; anything else must validly tile the
+/// DPU count or the whole command fails before any work runs.
+pub(crate) fn machine_config(args: &Args, default_dpus: usize) -> Result<PimConfig> {
+    let dpus = args.flag_usize("dpus", default_dpus)?;
+    let channels = topology_knob(args, "channels", "SIMPLEPIM_CHANNELS")?;
+    let ranks = topology_knob(args, "ranks", "SIMPLEPIM_RANKS")?;
+    let cfg = PimConfig::upmem(dpus);
+    if channels == 1 && ranks == 1 {
+        return Ok(cfg);
+    }
+    cfg.with_topology(channels, ranks)
+}
+
+/// One-line topology description for run/jobs headers.
+pub(crate) fn topology_line(cfg: &PimConfig) -> String {
+    if cfg.explicit_topology() {
+        format!(
+            "{} channel(s) x {} rank(s)/channel x {} DPU(s)/rank",
+            cfg.n_channels,
+            cfg.ranks_per_channel,
+            cfg.rank_dpus()
+        )
+    } else {
+        format!(
+            "flat bus, {} rank(s) x <= {} DPU(s)/rank",
+            cfg.n_ranks(),
+            cfg.dpus_per_rank.min(cfg.n_dpus)
+        )
+    }
+}
+
 /// `run ... --jobs`: the multi-tenant batch mode (DESIGN.md §14).
 /// Submits the named workloads (`all` = the six paper workloads, or a
 /// comma list) times `--jobs K` copies as independent jobs over
@@ -253,7 +304,7 @@ fn exec_selection(args: &Args) -> Result<(BackendKind, usize, PipelineMode)> {
 fn cmd_jobs(args: &Args) -> Result<()> {
     // Same machine default as single-run mode (the help's "default 16"),
     // so single vs batch modeled totals compare like for like.
-    let dpus = args.flag_usize("dpus", 16)?;
+    let cfg = machine_config(args, 16)?;
     let partitions = args.flag_usize("partitions", 4)?;
     // `--jobs` with no value means one copy; an explicit 0 is a config
     // error (house rule: zero counts fail loudly, never clamp).
@@ -273,9 +324,10 @@ fn cmd_jobs(args: &Args) -> Result<()> {
     let names: Vec<&str> =
         if which == "all" { all_names } else { which.split(',').collect() };
 
-    let mut queue = JobQueue::new(PimConfig::upmem(dpus), partitions, kind, threads, pipeline)?;
+    let topo = topology_line(&cfg);
+    let mut queue = JobQueue::new(cfg, partitions, kind, threads, pipeline)?;
     println!(
-        "jobs: {} workload(s) x {copies} cop{} over {} partition(s) x {} DPUs | backend {kind} (x{threads}) | pipeline {pipeline}",
+        "jobs: {} workload(s) x {copies} cop{} over {} partition(s) x {} DPUs | backend {kind} (x{threads}) | pipeline {pipeline} | topology: {topo}",
         names.len(),
         if copies == 1 { "y" } else { "ies" },
         queue.partitions(),
@@ -336,17 +388,18 @@ pub fn cmd_run(args: &Args) -> Result<()> {
         .first()
         .ok_or_else(|| Error::msg("usage: run <workload>"))?
         .clone();
-    let dpus = args.flag_usize("dpus", 16)?;
-    let cfg = PimConfig::upmem(dpus);
+    let cfg = machine_config(args, 16)?;
+    let dpus = cfg.n_dpus;
     let mut sys = cli_system(cfg, args.has("host-only"));
     apply_exec_flags(&mut sys, args)?;
     let elems = args.flag_usize("elems", 0)?;
     println!(
-        "backend: {} ({} thread{}) | pipeline: {}",
+        "backend: {} ({} thread{}) | pipeline: {} | topology: {}",
         sys.backend_kind(),
         sys.backend_threads(),
         if sys.backend_threads() == 1 { "" } else { "s" },
         sys.pipeline_mode(),
+        topology_line(&sys.machine.cfg),
     );
     run_workload(&mut sys, &name, elems)?;
     if args.has("explain") {
@@ -377,6 +430,20 @@ pub fn cmd_run(args: &Args) -> Result<()> {
         );
     }
     println!("  total     : {:>10.3} ms", t.total_s() * 1e3);
+    let (h2p_u, p2h_u) = crate::timing::rank_utilization(&sys.machine.cfg, &t);
+    if h2p_u.is_some() || p2h_u.is_some() {
+        let pct = |u: Option<f64>| match u {
+            Some(u) => format!("{:.0}%", u * 100.0),
+            None => "-".into(),
+        };
+        println!(
+            "  xfer util : scatter {} | gather {} of {} rank engine(s) x {:.0} MB/s",
+            pct(h2p_u),
+            pct(p2h_u),
+            sys.machine.cfg.n_ranks(),
+            sys.machine.cfg.xfer_rank_bw / 1e6,
+        );
+    }
     let stats = sys.exec_stats();
     if stats.calls > 0 {
         println!(
@@ -468,12 +535,12 @@ fn run_workload(sys: &mut PimSystem, name: &str, elems: usize) -> Result<()> {
 /// `selftest`: run every workload at a small size through the current
 /// execution path and verify against goldens.
 pub fn cmd_selftest(args: &Args) -> Result<()> {
-    let dpus = args.flag_usize("dpus", 12)?;
+    let base_cfg = machine_config(args, 12)?;
     let host_only = args.has("host-only");
     let mut used_runtime = true;
     let mut backend = None;
     for name in ["vecadd", "reduction", "histogram", "linreg", "logreg", "kmeans"] {
-        let cfg = PimConfig::upmem(dpus);
+        let cfg = base_cfg.clone();
         let mut sys = cli_system(cfg, host_only);
         apply_exec_flags(&mut sys, args)?;
         used_runtime &= sys.has_runtime();

@@ -9,7 +9,7 @@
 
 use crate::coordinator::planner::stream_batch_bytes;
 use crate::coordinator::scheduler;
-use crate::pim::{dma, pipeline, PimConfig};
+use crate::pim::{dma, pipeline, PimConfig, Timeline};
 
 use super::profile::{KernelProfile, OptFlags};
 
@@ -249,6 +249,23 @@ pub fn schedule_jobs(durations: &[f64], lanes: &mut [f64]) -> JobSchedule {
     sched
 }
 
+/// Per-rank transfer-engine utilization of the modeled transfer lanes
+/// (DESIGN.md §15): achieved lane throughput (bytes moved / seconds
+/// charged) over the machine's aggregate rank-engine capacity
+/// (`n_ranks × xfer_rank_bw`), per direction — `(h2p, p2h)`, `None`
+/// for a lane that charged no time.  A flat partial-rank machine pins
+/// near its single engine's share; a well-shaped topology run
+/// approaches 1.0 minus the per-command latency overhead.  Broadcast
+/// pushes count their payload once (as the bus does), so heavily
+/// broadcast-bound runs report low h2p utilization by design.
+pub fn rank_utilization(cfg: &PimConfig, tl: &Timeline) -> (Option<f64>, Option<f64>) {
+    let capacity = cfg.n_ranks() as f64 * cfg.xfer_rank_bw;
+    let lane = |bytes: u64, secs: f64| {
+        (secs > 0.0 && capacity > 0.0).then(|| bytes as f64 / secs / capacity)
+    };
+    (lane(tl.bytes_h2p, tl.host_to_pim_s), lane(tl.bytes_p2h, tl.pim_to_host_s))
+}
+
 /// Extra launch cost of an *eager* zip: one full streaming pass reading
 /// both inputs and writing the combined array (what you pay when
 /// `lazy_zip` is off — paper §4.2.3, ">2x" on vector addition).
@@ -452,6 +469,31 @@ mod tests {
         let s = schedule_jobs(&[0.0], &mut lanes);
         assert_eq!(s.len(), 1);
         assert_eq!(lanes, before, "zero-duration job leaves the clocks alone");
+    }
+
+    #[test]
+    fn rank_utilization_tracks_the_transfer_lanes() {
+        use crate::pim::{transfer_seconds, XferKind};
+        let c = PimConfig::upmem(32).with_topology(2, 4).unwrap();
+        let mut tl = Timeline::default();
+        assert_eq!(rank_utilization(&c, &tl), (None, None));
+        // A full-width scatter runs all 8 rank engines: utilization
+        // approaches 1.0, short only of the per-command latency.
+        let bytes = 32u64 * (1 << 20);
+        tl.host_to_pim_s = transfer_seconds(&c, XferKind::Parallel, 32, 1 << 20);
+        tl.bytes_h2p = bytes;
+        let (h2p, p2h) = rank_utilization(&c, &tl);
+        assert!(p2h.is_none());
+        let u = h2p.unwrap();
+        assert!(u > 0.9 && u <= 1.0, "utilization {u}");
+        // The flat machine moves the same bytes through one engine:
+        // the 8-rank capacity denominator reports it ~1/8 utilized.
+        let flat = PimConfig::upmem(32);
+        let mut ftl = Timeline::default();
+        ftl.host_to_pim_s = transfer_seconds(&flat, XferKind::Parallel, 32, 1 << 20);
+        ftl.bytes_h2p = bytes;
+        let (fu, _) = rank_utilization(&c, &ftl);
+        assert!(fu.unwrap() < 0.2, "flat time against topo capacity");
     }
 
     #[test]

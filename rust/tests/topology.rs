@@ -1,0 +1,285 @@
+//! Topology-parity suite (DESIGN.md §15): the `channel -> rank -> DPU`
+//! tree must never change *what* is computed, only the modeled cost of
+//! moving bytes and merging partials.
+//!
+//! * parity — a hierarchical machine produces bit-identical results to
+//!   the flat 1x1 machine across the full backend × pipeline matrix,
+//!   and charges identical kernel/launch lanes; only the transfer (and
+//!   merge-tree) lanes may differ, and transfers may only get cheaper;
+//! * degenerate shapes — zero channels/ranks, more ranks than DPUs,
+//!   and non-divisible DPU counts are hard config errors; `DpuSet`
+//!   splits that straddle a rank boundary are rejected;
+//! * hierarchical merge — the within-rank / within-channel /
+//!   across-channel tree's level count is pinned for known shapes;
+//! * acceptance — on the 2-channel × 4-rank × 32-DPU machine the
+//!   transfer-bound vecadd and histogram workloads model ≥ 25% lower
+//!   totals than flat 1x1 under the parallel backend with pipelining.
+//!
+//! The shape under test honours `SIMPLEPIM_CHANNELS`/`SIMPLEPIM_RANKS`
+//! (default 2x4) so the CI `topology-smoke` job exercises the same
+//! assertions on the shape it exports.
+
+use simplepim::backend::{self, BackendKind};
+use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
+use simplepim::pim::{DpuSet, PimConfig, PipelineMode};
+use simplepim::util::prng::Prng;
+use simplepim::workloads::golden;
+
+const BACKENDS: [(BackendKind, usize); 3] = [
+    (BackendKind::Seq, 1),
+    (BackendKind::Gang, 1),
+    (BackendKind::Parallel, 4),
+];
+
+const MODES: [PipelineMode; 3] = [PipelineMode::Off, PipelineMode::On, PipelineMode::Auto];
+
+/// Topology under test: `SIMPLEPIM_CHANNELS` x `SIMPLEPIM_RANKS`
+/// (default 2x4, matching the CI smoke job and the bench configs).
+/// Garbage values are loud failures, matching the CLI's refusal to
+/// silently fall back.
+fn env_shape() -> (usize, usize) {
+    let knob = |key: &str, default: usize| match std::env::var(key) {
+        Err(_) => default,
+        Ok(v) => v
+            .parse::<usize>()
+            .ok()
+            .filter(|&x| x >= 1)
+            .unwrap_or_else(|| panic!("{key} expects a positive integer, got `{v}`")),
+    };
+    (knob("SIMPLEPIM_CHANNELS", 2), knob("SIMPLEPIM_RANKS", 4))
+}
+
+fn flat(dpus: usize, kind: BackendKind, threads: usize) -> PimSystem {
+    PimSystem::with_backend(PimConfig::tiny(dpus), None, backend::make(kind, threads).unwrap())
+}
+
+fn topo(dpus: usize, ch: usize, rk: usize, kind: BackendKind, threads: usize) -> PimSystem {
+    let cfg = PimConfig::tiny(dpus).with_topology(ch, rk).unwrap();
+    PimSystem::with_backend(cfg, None, backend::make(kind, threads).unwrap())
+}
+
+// ---------------------------------------------------------------------
+// Parity: flat 1x1 vs the hierarchical machine, full matrix.
+// ---------------------------------------------------------------------
+
+/// Run `f` on a flat and a hierarchical machine with every backend ×
+/// pipeline combination, asserting bit-identical results, identical
+/// kernel/launch lanes, and never-worse transfer lanes.  When
+/// `strict_h2p` is set the host->PIM lane must get *strictly* cheaper
+/// (true for scatter-fed regions; broadcasts replicate once per rank,
+/// so their modeled time is rank-count-invariant by design).
+fn parity_matrix<F>(label: &str, strict_h2p: bool, f: F)
+where
+    F: Fn(&mut PimSystem) -> Vec<i32>,
+{
+    let (ch, rk) = env_shape();
+    let dpus = ch * rk * 4; // always divides into ch x rk equal ranks
+    for mode in MODES {
+        for (kind, threads) in BACKENDS {
+            let mut base = flat(dpus, kind, threads);
+            base.set_pipeline(mode).unwrap();
+            let want = f(&mut base);
+            let bt = base.timeline().clone();
+
+            let mut tree = topo(dpus, ch, rk, kind, threads);
+            tree.set_pipeline(mode).unwrap();
+            let got = f(&mut tree);
+            let tt = tree.timeline().clone();
+
+            let tag = format!("{label}: {ch}x{rk}@{dpus}, {kind} x{threads}, pipeline {mode}");
+            assert_eq!(got, want, "{tag}: results diverged");
+            assert_eq!(tt.bytes_h2p, bt.bytes_h2p, "{tag}: same bytes move");
+            assert_eq!(tt.bytes_p2h, bt.bytes_p2h, "{tag}: same bytes move");
+            assert_eq!(tt.launches, bt.launches, "{tag}: launch count");
+            assert!((tt.kernel_s - bt.kernel_s).abs() < 1e-15, "{tag}: kernel lane");
+            assert!((tt.launch_s - bt.launch_s).abs() < 1e-15, "{tag}: launch lane");
+            assert!(
+                (tt.host_merge_s - bt.host_merge_s).abs() < 1e-15,
+                "{tag}: legacy host-merge lane"
+            );
+            // Rank engines in parallel can only make transfers cheaper.
+            assert!(
+                tt.host_to_pim_s <= bt.host_to_pim_s + 1e-15,
+                "{tag}: scatter lane got slower ({} vs {})",
+                tt.host_to_pim_s,
+                bt.host_to_pim_s
+            );
+            assert!(
+                tt.pim_to_host_s <= bt.pim_to_host_s + 1e-15,
+                "{tag}: gather lane got slower ({} vs {})",
+                tt.pim_to_host_s,
+                bt.pim_to_host_s
+            );
+            if strict_h2p && ch * rk > 1 && bt.bytes_h2p > 0 {
+                assert!(
+                    tt.host_to_pim_s < bt.host_to_pim_s,
+                    "{tag}: {0} rank engines must beat the flat bus",
+                    ch * rk
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn vecadd_region_parity_flat_vs_hierarchical() {
+    let data = Prng::new(61).vec_i32(20_000, -10_000, 10_000);
+    parity_matrix("affine-map", true, |s| {
+        s.reset_timeline();
+        s.scatter("x", &data, 4).unwrap();
+        let h = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![3, -7]).unwrap();
+        s.array_map("x", "y", &h).unwrap();
+        s.gather("y").unwrap()
+    });
+}
+
+#[test]
+fn histogram_region_parity_flat_vs_hierarchical() {
+    let data = Prng::new(62).vec_i32(30_000, 0, 4095);
+    let got = std::cell::RefCell::new(Vec::new());
+    parity_matrix("histogram", true, |s| {
+        s.reset_timeline();
+        s.scatter("px", &data, 4).unwrap();
+        let h = s.create_handle(PimFunc::Histogram { bins: 256 }, TransformKind::Red, vec![]).unwrap();
+        let out = s.array_red("px", "hist", 256, &h).unwrap();
+        *got.borrow_mut() = out.clone();
+        out
+    });
+    assert_eq!(*got.borrow(), golden::histogram(&data, 256));
+}
+
+#[test]
+fn allreduce_parity_flat_vs_hierarchical() {
+    let data = Prng::new(63).vec_i32(9_001, -5_000, 5_000);
+    parity_matrix("allreduce", false, |s| {
+        s.reset_timeline();
+        s.broadcast("ar", &data, 4).unwrap();
+        let h = s
+            .create_handle(PimFunc::HostAcc(i32::wrapping_add), TransformKind::Red, vec![])
+            .unwrap();
+        s.allreduce("ar", &h).unwrap();
+        s.gather("ar").unwrap()
+    });
+}
+
+// ---------------------------------------------------------------------
+// Degenerate shapes are loud errors, never silent clamps.
+// ---------------------------------------------------------------------
+
+#[test]
+fn degenerate_topologies_are_config_errors() {
+    assert!(PimConfig::tiny(32).with_topology(0, 4).is_err(), "zero channels");
+    assert!(PimConfig::tiny(32).with_topology(2, 0).is_err(), "zero ranks");
+    assert!(PimConfig::tiny(6).with_topology(2, 4).is_err(), "more ranks than DPUs");
+    assert!(PimConfig::tiny(32).with_topology(1, 3).is_err(), "32 DPUs not divisible by 3");
+    // One DPU per rank is legal, as is the 1x1 identity.
+    assert!(PimConfig::tiny(8).with_topology(2, 4).is_ok());
+    let id = PimConfig::tiny(8).with_topology(1, 1).unwrap();
+    assert!(!id.explicit_topology(), "1x1 is the flat sentinel");
+}
+
+#[test]
+fn splits_must_cut_along_rank_boundaries() {
+    let cfg = PimConfig::tiny(32).with_topology(2, 4).unwrap();
+    // 2 partitions of 16 DPUs = 4 ranks each: legal, inherits 1x4.
+    let halves = DpuSet::split(&cfg, 2).unwrap();
+    assert_eq!(halves.len(), 2);
+    for p in &halves {
+        assert_eq!(p.n_dpus, 16);
+        assert_eq!(p.cfg().n_ranks(), 4);
+        assert_eq!(p.cfg().rank_dpus(), 4);
+    }
+    // 8 partitions of 4 DPUs = exactly 1 rank each: collapses to flat.
+    let rankwise = DpuSet::split(&cfg, 8).unwrap();
+    assert!(rankwise.iter().all(|p| !p.cfg().explicit_topology()));
+    // 16 partitions of 2 DPUs would straddle the 4-DPU ranks.
+    let err = DpuSet::split(&cfg, 16).unwrap_err();
+    assert!(
+        err.to_string().contains("rank boundary"),
+        "want a rank-boundary error, got: {err}"
+    );
+    // The flat machine keeps PR 5 semantics: any divisor splits.
+    assert!(DpuSet::split(&PimConfig::tiny(32), 16).is_ok());
+}
+
+// ---------------------------------------------------------------------
+// Hierarchical merge: level counts for known shapes.
+// ---------------------------------------------------------------------
+
+fn allreduce_levels(mut s: PimSystem) -> u64 {
+    let data = Prng::new(64).vec_i32(2_048, -100, 100);
+    s.broadcast("ar", &data, 4).unwrap();
+    let h = s
+        .create_handle(PimFunc::HostAcc(i32::wrapping_add), TransformKind::Red, vec![])
+        .unwrap();
+    s.allreduce("ar", &h).unwrap();
+    s.timeline().merge_levels
+}
+
+#[test]
+fn hierarchical_merge_level_counts_are_pinned() {
+    // Flat 32 DPUs: one tree, ceil(log2 32) = 5 levels.
+    assert_eq!(allreduce_levels(flat(32, BackendKind::Gang, 1)), 5);
+    // 2x4@32: within-rank (4 -> 1: 2) + within-channel (4 -> 1: 2) +
+    // across-channel (2 -> 1: 1) = 5 levels, same depth as flat.
+    assert_eq!(allreduce_levels(topo(32, 2, 4, BackendKind::Gang, 1)), 5);
+    // 1x5@25: within-rank (5 -> 1: 3) + within-channel (5 -> 1: 3) = 6
+    // levels — one deeper than flat's ceil(log2 25) = 5, the honest
+    // cost of confining the first stage to rank-local partials.
+    assert_eq!(allreduce_levels(flat(25, BackendKind::Gang, 1)), 5);
+    assert_eq!(allreduce_levels(topo(25, 1, 5, BackendKind::Gang, 1)), 6);
+    // The parallel backend agrees with gang on tree shape.
+    assert_eq!(allreduce_levels(topo(25, 1, 5, BackendKind::Parallel, 4)), 6);
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: >= 25% modeled-total win on the 2x4@32 bench shape.
+// ---------------------------------------------------------------------
+
+/// Transfer-bound vecadd region (scatter + affine map + gather) at
+/// 32 DPUs, parallel x8 with pipelining, on the given machine.
+fn vecadd_total(cfg: PimConfig) -> (f64, Vec<i32>) {
+    let n = 1usize << 20; // 4 MiB in, 4 MiB out
+    let data = Prng::new(65).vec_i32(n, -1_000, 1_000);
+    let mut s = PimSystem::with_backend(cfg, None, backend::make(BackendKind::Parallel, 8).unwrap());
+    s.set_pipeline(PipelineMode::On).unwrap();
+    s.reset_timeline();
+    s.scatter("x", &data, 4).unwrap();
+    let h = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![1, 1]).unwrap();
+    s.array_map("x", "y", &h).unwrap();
+    let out = s.gather("y").unwrap();
+    (s.timeline().total_s(), out)
+}
+
+/// Transfer-bound histogram region (scatter + reduce) on the same
+/// machine shape.
+fn histogram_total(cfg: PimConfig) -> (f64, Vec<i32>) {
+    let n = 1usize << 20;
+    let data = Prng::new(66).vec_i32(n, 0, 4095);
+    let mut s = PimSystem::with_backend(cfg, None, backend::make(BackendKind::Parallel, 8).unwrap());
+    s.set_pipeline(PipelineMode::On).unwrap();
+    s.reset_timeline();
+    s.scatter("px", &data, 4).unwrap();
+    let h = s.create_handle(PimFunc::Histogram { bins: 256 }, TransformKind::Red, vec![]).unwrap();
+    let out = s.array_red("px", "hist", 256, &h).unwrap();
+    (s.timeline().total_s(), out)
+}
+
+#[test]
+fn topology_models_25pct_win_on_transfer_bound_workloads() {
+    for (label, run) in [
+        ("vecadd", vecadd_total as fn(PimConfig) -> (f64, Vec<i32>)),
+        ("histogram", histogram_total),
+    ] {
+        let (flat_total, want) = run(PimConfig::tiny(32));
+        let (topo_total, got) = run(PimConfig::tiny(32).with_topology(2, 4).unwrap());
+        assert_eq!(got, want, "{label}: topology must not change results");
+        let gain = 1.0 - topo_total / flat_total;
+        assert!(
+            gain >= 0.25,
+            "{label}: 2x4@32 must model >= 25% below flat 1x1 \
+             (got {:.1}%: {topo_total} vs {flat_total} s)",
+            gain * 100.0
+        );
+    }
+}
