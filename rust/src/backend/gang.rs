@@ -167,6 +167,15 @@ impl ExecBackend for GangBackend {
         concat_serial(parts, total)
     }
 
+    /// One fixed-width gang dispatch covers all rank-adjacent members:
+    /// a single host command launches the whole gang.
+    fn co_launch_commands(&self, members: usize) -> usize {
+        if members > 1 {
+            self.stats.gang_batch();
+        }
+        1
+    }
+
     fn stats(&self) -> BackendStats {
         self.stats.snapshot(1)
     }

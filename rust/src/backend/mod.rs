@@ -263,6 +263,20 @@ pub trait ExecBackend: Send + Sync {
     /// array — the gather side of `allgather` and of plain `gather`.
     fn concat_rows(&self, parts: &[&[i32]], total: usize) -> Vec<i32>;
 
+    /// How many host launch commands a co-launch gang of `members`
+    /// same-kernel jobs on rank-adjacent partitions costs under this
+    /// backend (cross-tenant gang co-launch, DESIGN.md §16).  The
+    /// default — one command per member — models a backend that issues
+    /// each partition's launch separately, so gangs save nothing.
+    /// Gang-capable backends override to 1: one broadcast command
+    /// covers every adjacent partition, and the multi-tenant scheduler
+    /// charges `members - 1` fewer launch overheads across the gang.
+    /// Purely a timing-model hook: the functional results per job are
+    /// computed exactly as if launched alone.
+    fn co_launch_commands(&self, members: usize) -> usize {
+        members
+    }
+
     /// Counter snapshot.
     fn stats(&self) -> BackendStats;
 }

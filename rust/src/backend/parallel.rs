@@ -288,6 +288,15 @@ impl ExecBackend for ParallelBackend {
         concat_sharded(parts, total, self.merge_threads)
     }
 
+    /// The sharded workers still funnel gang launches through one host
+    /// command queue: a rank-adjacent gang is one broadcast command.
+    fn co_launch_commands(&self, members: usize) -> usize {
+        if members > 1 {
+            self.stats.gang_batch();
+        }
+        1
+    }
+
     fn stats(&self) -> BackendStats {
         self.stats.snapshot(self.threads)
     }

@@ -130,6 +130,13 @@ impl ExecBackend for SequentialBackend {
         concat_serial(parts, total)
     }
 
+    /// Reference serial walk: every gang member is launched with its
+    /// own host command, so co-launching saves nothing — the baseline
+    /// the gang-capable backends' savings are measured against.
+    fn co_launch_commands(&self, members: usize) -> usize {
+        members
+    }
+
     fn stats(&self) -> BackendStats {
         self.stats.snapshot(1)
     }

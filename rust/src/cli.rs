@@ -111,6 +111,15 @@ COMMANDS:
                              mode always runs the bit-identical host
                              execution engine — --host-only is implied,
                              PJRT is not used)
+                             --shared-cache {on|off} (cross-tenant
+                             sharing, DESIGN.md §16: one lock-striped
+                             plan cache across the batch's tenants,
+                             plus broadcast dedup of identical ctx
+                             ships and gang co-launch of same-kernel
+                             jobs on rank-adjacent partitions; never
+                             changes a result bit, only lowers modeled
+                             totals; default off or
+                             $SIMPLEPIM_SHARED_CACHE)
   figures <which>   regenerate a paper figure from the timing model
                     which: fig9 fig10 fig11 ablations all
                     options: --csv (emit CSV instead of tables)

@@ -31,6 +31,7 @@ use super::handle::{Handle, TransformKind};
 use super::management::{ArrayMeta, Layout};
 use super::optimizer;
 use super::plan::{CacheKey, MergePlan, NodeState, PendingNode, PlanOp};
+use super::shared::CacheRef;
 use super::PimSystem;
 
 impl PimSystem {
@@ -249,7 +250,16 @@ impl PimSystem {
             ctx_len: handle.ctx.len(),
             tasklets: self.tasklets,
         };
-        let cache = if self.engine.optimize { Some((&mut self.engine.cache, key)) } else { None };
+        // Shared cache first when installed (DESIGN.md §16), else the
+        // engine's private LRU — the single-tenant default, bit-for-bit
+        // the pre-sharing behavior.
+        let cache = if !self.engine.optimize {
+            None
+        } else if let Some(shared) = &self.engine.shared {
+            Some((CacheRef::Shared(shared), key))
+        } else {
+            Some((CacheRef::Private(&mut self.engine.cache), key))
+        };
         let plan = optimizer::plan_reduction(
             &self.machine.cfg,
             &fused,
@@ -341,6 +351,20 @@ impl PimSystem {
         }
         self.engine.stats.launches += 1;
         self.last_red_variant = Some((variant, t.active_tasklets));
+        if self.engine.shared.is_some() {
+            // Launch-chain fingerprint for gang co-launch grouping
+            // (DESIGN.md §16): fused function names + element shape.
+            let mut desc: Vec<String> = chain
+                .iter()
+                .map(|c| {
+                    format!("{:?}", self.engine.pending.get(c).expect("in chain").handle.func)
+                })
+                .collect();
+            desc.push(format!("{:?}", handle.func));
+            self.engine
+                .ledger
+                .note_launch(&format!("red:{}@{elems}->{output_len}", desc.join("+")));
+        }
 
         // --- mark the fused chain charged (its intermediates stay
         //     unmaterialized; freeing them later elides them for good).

@@ -32,16 +32,58 @@
 //! pinned by `rust/tests/jobs.rs`, along with the headline: four
 //! independent jobs over four partitions model ≥ 2× the throughput of
 //! the same jobs run back-to-back on the whole machine.
+//!
+//! **Cross-tenant sharing** (DESIGN.md §16, opt-in via
+//! [`SharedCacheMode::On`]): tenants of one batch additionally share a
+//! lock-striped plan cache ([`SharedPlanCache`]) so N jobs with the
+//! same (func chain, element shape, partition shape) key plan once;
+//! identical read-only ctx broadcasts are content-hash deduplicated to
+//! one modeled ship per batch; and same-kernel jobs admitted at the
+//! same instant on rank-adjacent partitions co-launch as one gang
+//! ([`crate::timing::plan_gangs`]), charging
+//! [`ExecBackend::co_launch_commands`] launch overheads instead of one
+//! per member.  Sharing never changes a per-job result bit and only
+//! ever lowers modeled totals: all three passes run deterministically
+//! over the drained batch in submission order, never during the racy
+//! execution itself.
 
-use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::collections::{HashMap, VecDeque};
+use std::sync::{Arc, Mutex};
 
 use crate::backend::{self, BackendKind, ExecBackend};
 use crate::error::{Error, Result};
 use crate::pim::{DpuSet, PimConfig, PipelineMode, Timeline};
-use crate::timing::schedule_jobs;
+use crate::timing::{plan_gangs, schedule_jobs};
 
+use super::shared::{CacheStats, SharedCacheStats, SharedPlanCache, SharingLedger};
 use super::PimSystem;
+
+/// Whether a [`JobQueue`] installs the cross-tenant [`SharedPlanCache`]
+/// (and with it broadcast dedup and gang co-launch) for its tenants.
+/// `Off` — the default — is the share-nothing PR 5 scheduler,
+/// bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SharedCacheMode {
+    /// Every job plans against its own private LRU; no dedup, no gangs.
+    #[default]
+    Off,
+    /// One shared plan cache across the queue's tenants, plus the
+    /// broadcast-dedup and gang co-launch post-passes.
+    On,
+}
+
+impl SharedCacheMode {
+    /// Parse a `--shared-cache` / `SIMPLEPIM_SHARED_CACHE` value.
+    pub fn parse(s: &str) -> Result<SharedCacheMode> {
+        match s.to_ascii_lowercase().as_str() {
+            "on" => Ok(SharedCacheMode::On),
+            "off" => Ok(SharedCacheMode::Off),
+            other => Err(Error::Config(format!(
+                "invalid shared-cache mode `{other}` (expected on|off)"
+            ))),
+        }
+    }
+}
 
 /// A submitted job: builds and drives one plan graph against the
 /// partition-sized system it is handed, returning its result words.
@@ -77,6 +119,12 @@ pub struct JobOutcome {
     pub start_s: f64,
     /// Modeled completion time on the partition lane.
     pub finish_s: f64,
+    /// This tenant's plan-cache counters (hits/misses wherever they
+    /// were served; evictions only for a private cache — shared-cache
+    /// evictions are global, see [`JobQueue::shared_cache_stats`]).
+    /// Under a shared cache the hit/miss *attribution* between racing
+    /// tenants is scheduling-dependent; the global totals are not.
+    pub cache: CacheStats,
 }
 
 impl JobOutcome {
@@ -106,6 +154,17 @@ pub struct DeviceReport {
     pub busy_s: f64,
     /// Latest lane clock — the device-level end-to-end time.
     pub makespan_s: f64,
+    /// Broadcast ships elided by cross-tenant dedup (count of
+    /// per-job dedup charges, summed over admitted jobs).
+    pub bcast_dedups: u64,
+    /// Modeled seconds saved by broadcast dedup across the batch.
+    pub bcast_dedup_saved_s: f64,
+    /// Co-launch gangs formed so far.
+    pub gangs: usize,
+    /// Jobs that joined a co-launch gang.
+    pub gang_members: u64,
+    /// Modeled launch-overhead seconds saved by gang co-launch.
+    pub colaunch_saved_s: f64,
 }
 
 impl DeviceReport {
@@ -132,6 +191,12 @@ impl DeviceReport {
         self.jobs as f64 / self.makespan_s
     }
 
+    /// Total modeled seconds the sharing passes shaved off the batch
+    /// (0.0 under [`SharedCacheMode::Off`], by construction).
+    pub fn sharing_saved_s(&self) -> f64 {
+        self.bcast_dedup_saved_s + self.colaunch_saved_s
+    }
+
     /// Human-readable schedule summary (the jobs CLI's tail, and the
     /// queueing/occupancy half of `--explain`).
     pub fn render(&self) -> String {
@@ -149,6 +214,16 @@ impl DeviceReport {
         ));
         for (i, lane) in self.lane_busy_s.iter().enumerate() {
             out.push_str(&format!("  lane {i}: {:.3} ms\n", lane * 1e3));
+        }
+        if self.bcast_dedups > 0 || self.gang_members > 0 {
+            out.push_str(&format!(
+                "  sharing: {} bcast dedup(s) saved {:.3} ms | {} gang(s) over {} job(s) saved {:.3} ms\n",
+                self.bcast_dedups,
+                self.bcast_dedup_saved_s * 1e3,
+                self.gangs,
+                self.gang_members,
+                self.colaunch_saved_s * 1e3,
+            ));
         }
         out
     }
@@ -170,6 +245,13 @@ pub struct JobQueue {
     results: Vec<Option<std::result::Result<JobOutcome, String>>>,
     /// Per-partition modeled busy clocks (admission state).
     lanes: Vec<f64>,
+    /// The probed backend instance, kept as the authority for
+    /// [`ExecBackend::co_launch_commands`] during the gang pass.
+    probe: Box<dyn ExecBackend>,
+    /// Cross-tenant shared plan cache; `None` = share-nothing.
+    shared: Option<Arc<SharedPlanCache>>,
+    /// Co-launch gangs formed across drains so far.
+    gangs: usize,
 }
 
 impl JobQueue {
@@ -186,8 +268,9 @@ impl JobQueue {
     ) -> Result<JobQueue> {
         let sets = DpuSet::split(&cfg, partitions)?;
         // Probe the backend build once so misconfiguration fails at
-        // queue construction, not inside a worker thread mid-drain.
-        backend::make(backend, threads)?;
+        // queue construction, not inside a worker thread mid-drain;
+        // the instance is kept to answer `co_launch_commands`.
+        let probe = backend::make(backend, threads)?;
         let part_cfg = sets[0].cfg().clone();
         let lanes = vec![0.0; sets.len()];
         Ok(JobQueue {
@@ -200,7 +283,42 @@ impl JobQueue {
             pending: Vec::new(),
             results: Vec::new(),
             lanes,
+            probe,
+            shared: None,
+            gangs: 0,
         })
+    }
+
+    /// Switch cross-tenant sharing on or off for jobs drained from now
+    /// on.  `On` installs a fresh [`SharedPlanCache`] unless one is
+    /// already installed (so repeated enabling keeps warm entries);
+    /// `Off` drops back to share-nothing.
+    pub fn set_sharing(&mut self, mode: SharedCacheMode) {
+        match mode {
+            SharedCacheMode::On => {
+                if self.shared.is_none() {
+                    self.shared = Some(Arc::new(SharedPlanCache::new()));
+                }
+            }
+            SharedCacheMode::Off => self.shared = None,
+        }
+    }
+
+    /// Install a specific shared cache (e.g. one spanning several
+    /// queues); implies sharing on.
+    pub fn set_shared_cache(&mut self, cache: Arc<SharedPlanCache>) {
+        self.shared = Some(cache);
+    }
+
+    /// The installed shared plan cache, if sharing is on.
+    pub fn shared_cache(&self) -> Option<&Arc<SharedPlanCache>> {
+        self.shared.as_ref()
+    }
+
+    /// Global shared-cache counters (hits/misses/evictions/entries
+    /// across every tenant), `None` under share-nothing.
+    pub fn shared_cache_stats(&self) -> Option<SharedCacheStats> {
+        self.shared.as_ref().map(|c| c.stats())
     }
 
     /// Partitions the device was split into.
@@ -277,7 +395,18 @@ impl JobQueue {
     pub fn device_report(&self) -> DeviceReport {
         let makespan = self.lanes.iter().fold(0.0f64, |a, &b| a.max(b));
         let busy: f64 = self.lanes.iter().sum();
-        let jobs = self.results.iter().filter(|r| matches!(r, Some(Ok(_)))).count();
+        let mut jobs = 0;
+        let (mut dedups, mut dedup_saved) = (0u64, 0.0f64);
+        let (mut members, mut colaunch_saved) = (0u64, 0.0f64);
+        for r in &self.results {
+            if let Some(Ok(o)) = r {
+                jobs += 1;
+                dedups += o.timeline.bcast_dedups;
+                dedup_saved += o.timeline.bcast_dedup_saved_s;
+                members += o.timeline.colaunched;
+                colaunch_saved += o.timeline.colaunch_saved_s;
+            }
+        }
         DeviceReport {
             partitions: self.sets.len(),
             dpus_per_partition: self.part_cfg.n_dpus,
@@ -285,6 +414,11 @@ impl JobQueue {
             lane_busy_s: self.lanes.clone(),
             busy_s: busy,
             makespan_s: makespan,
+            bcast_dedups: dedups,
+            bcast_dedup_saved_s: dedup_saved,
+            gangs: self.gangs,
+            gang_members: members,
+            colaunch_saved_s: colaunch_saved,
         }
     }
 
@@ -296,6 +430,8 @@ impl JobQueue {
     /// independent of *which* partition runs it, so workers may race
     /// over the shared queue while the schedule is recomputed
     /// deterministically from submission order and modeled durations.
+    /// The cross-tenant sharing passes (dedup, gangs) run on the
+    /// drained batch for the same reason.
     fn drain(&mut self) -> Result<()> {
         let todo: Vec<(usize, JobPlan)> = self
             .pending
@@ -314,15 +450,17 @@ impl JobQueue {
             1
         };
         let queue = Mutex::new(VecDeque::from(todo));
-        type Done = (usize, std::result::Result<(Vec<i32>, Timeline), String>);
-        let done: Mutex<Vec<Done>> = Mutex::new(Vec::new());
+        let done: Mutex<Vec<(usize, Exec)>> = Mutex::new(Vec::new());
         let cfg = &self.part_cfg;
+        let topo = self.part_cfg.topology_desc();
         let kind = self.backend;
         let threads = self.threads;
         let pipeline = self.pipeline;
+        let shared = &self.shared;
         std::thread::scope(|s| {
-            for _ in 0..workers {
-                s.spawn(|| {
+            for wid in 0..workers {
+                let (queue, done, topo) = (&queue, &done, &topo);
+                s.spawn(move || {
                     // One backend instance per worker, reused across
                     // every job it runs, so the arena staging pools
                     // amortize over the worker's whole job stream.
@@ -337,7 +475,12 @@ impl JobQueue {
                         let res = match built {
                             Err(e) => Err(e.to_string()),
                             Ok(b) => {
-                                let mut sys = PimSystem::with_backend(cfg.clone(), None, b);
+                                let mut sys = PimSystem::with_backend_shared(
+                                    cfg.clone(),
+                                    None,
+                                    b,
+                                    shared.clone(),
+                                );
                                 let run = (|| -> Result<Vec<i32>> {
                                     sys.set_pipeline(pipeline)?;
                                     let out = plan(&mut sys)?;
@@ -348,10 +491,16 @@ impl JobQueue {
                                     Ok(out)
                                 })();
                                 let timeline = sys.timeline();
+                                let cache = sys.cache_stats();
+                                let ledger = sys.take_sharing_ledger();
                                 cached = Some(sys.into_backend());
-                                run.map(|out| (out, timeline)).map_err(|e| e.to_string())
+                                run.map(|out| (out, timeline, cache, ledger))
+                                    .map_err(|e| e.to_string())
                             }
                         };
+                        // Attribute failures to the worker's partition
+                        // lane and the sub-machine shape it ran.
+                        let res = res.map_err(|e| format!("partition {wid} ({topo}): {e}"));
                         done.lock().expect("job result lock").push((idx, res));
                     }
                 });
@@ -360,17 +509,20 @@ impl JobQueue {
         let mut done = done.into_inner().expect("workers joined");
         done.sort_by_key(|(idx, _)| *idx);
 
+        // Cross-tenant sharing post-passes (no-ops under share-nothing).
+        self.apply_sharing(&mut done);
+
         // Deterministic earliest-free admission over the successful
         // jobs, in submission order, continuing the existing lanes.
         let durations: Vec<f64> = done
             .iter()
-            .filter_map(|(_, r)| r.as_ref().ok().map(|(_, t)| t.total_s()))
+            .filter_map(|(_, r)| r.as_ref().ok().map(|(_, t, _, _)| t.total_s()))
             .collect();
         let sched = schedule_jobs(&durations, &mut self.lanes);
         let mut admitted = 0;
         for (idx, res) in done {
             let stored = match res {
-                Ok((output, timeline)) => {
+                Ok((output, timeline, cache, _)) => {
                     let outcome = JobOutcome {
                         name: self.names[idx].clone(),
                         output,
@@ -378,6 +530,7 @@ impl JobQueue {
                         partition: sched.partition[admitted],
                         start_s: sched.start_s[admitted],
                         finish_s: sched.finish_s[admitted],
+                        cache,
                     };
                     admitted += 1;
                     Ok(outcome)
@@ -388,7 +541,84 @@ impl JobQueue {
         }
         Ok(())
     }
+
+    /// The dedup and gang passes (DESIGN.md §16), applied to a drained
+    /// batch in submission order.  Ledgers are only populated when a
+    /// shared cache is installed, so under share-nothing both passes
+    /// see empty inputs and every timeline stays untouched.
+    ///
+    /// *Broadcast dedup*: a read-only ctx payload shipped by M jobs of
+    /// the batch (same content hash, and — partitions being equal —
+    /// the same modeled ship time) costs one ship total; each of the M
+    /// charges keeps `1/M` of its cost and saves the even share
+    /// `seconds * (M-1)/M`, so identical jobs stay identical and the
+    /// batch total drops by exactly M-1 ships.
+    ///
+    /// *Gang co-launch*: [`plan_gangs`] tentatively admits the batch,
+    /// groups jobs by (kernel-chain fingerprint, bit-identical start),
+    /// forms gangs from rank-adjacent partition runs, and prices them
+    /// through the probed backend's
+    /// [`ExecBackend::co_launch_commands`] — the seq reference walk
+    /// answers `members` and saves nothing, by design.
+    fn apply_sharing(&mut self, done: &mut [(usize, Exec)]) {
+        if self.shared.is_none() {
+            return;
+        }
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for (_, r) in done.iter() {
+            if let Ok((_, _, _, ledger)) = r {
+                for b in &ledger.bcasts {
+                    *counts.entry(b.content).or_insert(0) += 1;
+                }
+            }
+        }
+        for (_, r) in done.iter_mut() {
+            if let Ok((_, t, _, ledger)) = r {
+                for b in &ledger.bcasts {
+                    let m = counts[&b.content];
+                    if m >= 2 {
+                        t.bcast_dedup_saved_s += b.seconds * (m - 1) as f64 / m as f64;
+                        t.bcast_dedups += 1;
+                    }
+                }
+            }
+        }
+
+        let ok: Vec<usize> = done
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, r))| r.is_ok())
+            .map(|(i, _)| i)
+            .collect();
+        let mut durations = Vec::with_capacity(ok.len());
+        let mut sigs = Vec::with_capacity(ok.len());
+        let mut launch_s = Vec::with_capacity(ok.len());
+        for &i in &ok {
+            let Ok((_, t, _, ledger)) = &done[i].1 else { unreachable!("filtered Ok") };
+            durations.push(t.total_s());
+            sigs.push(ledger.sig);
+            // `launch_s` is the lane's accumulated launch overhead —
+            // exactly what a gang collapses to `cmds` shares.
+            launch_s.push(t.launch_s);
+        }
+        let gp = plan_gangs(&durations, &sigs, &launch_s, &self.lanes, |g| {
+            self.probe.co_launch_commands(g)
+        });
+        for (k, &i) in ok.iter().enumerate() {
+            if gp.saved_s[k] > 0.0 {
+                let Ok((_, t, _, _)) = &mut done[i].1 else { unreachable!("filtered Ok") };
+                t.colaunch_saved_s += gp.saved_s[k];
+                t.colaunched = 1;
+            }
+        }
+        self.gangs += gp.gangs;
+    }
 }
+
+/// One executed (not yet admitted) job: output words, partition-local
+/// timeline, per-tenant cache counters, and the sharing ledger the
+/// post-passes consume.
+type Exec = std::result::Result<(Vec<i32>, Timeline, CacheStats, SharingLedger), String>;
 
 #[cfg(test)]
 mod tests {
@@ -445,11 +675,92 @@ mod tests {
         });
         let err = q.wait(&bad).unwrap_err();
         assert!(err.to_string().contains("broken"), "{err}");
+        // Failures are attributed to the worker's partition lane and
+        // the partition-local machine shape it ran.
+        assert!(err.to_string().contains("partition 0"), "{err}");
+        assert!(err.to_string().contains("flat bus"), "{err}");
         assert_eq!(q.wait(&good).unwrap().output, vec![7, 7]);
         let err = q.wait_all().unwrap_err();
         assert!(err.to_string().contains("broken"), "{err}");
         // Only the successful job occupies a lane.
         assert_eq!(q.device_report().jobs, 1);
+    }
+
+    #[test]
+    fn shared_cache_mode_parses_strictly() {
+        assert_eq!(SharedCacheMode::parse("on").unwrap(), SharedCacheMode::On);
+        assert_eq!(SharedCacheMode::parse("OFF").unwrap(), SharedCacheMode::Off);
+        let err = SharedCacheMode::parse("yes").unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert_eq!(SharedCacheMode::default(), SharedCacheMode::Off);
+    }
+
+    fn ctx_map_job(sys: &mut PimSystem) -> Result<Vec<i32>> {
+        sys.scatter("x", &[1, 2, 3, 4, 5, 6, 7, 8], 4)?;
+        let map = sys.create_handle(
+            super::super::PimFunc::AffineMap,
+            super::super::TransformKind::Map,
+            vec![3, 1],
+        )?;
+        sys.array_map("x", "y", &map)?;
+        let out = sys.gather("y")?;
+        sys.free_array("x")?;
+        sys.free_array("y")?;
+        Ok(out)
+    }
+
+    #[test]
+    fn sharing_dedups_identical_ctx_broadcasts_and_never_changes_outputs() {
+        // Reference: share-nothing.
+        let mut private = tiny_queue(2, BackendKind::Seq, 1);
+        let a = private.submit("a", ctx_map_job);
+        let b = private.submit("b", ctx_map_job);
+        let (out_a, out_b) = (
+            private.wait(&a).unwrap().output.clone(),
+            private.wait(&b).unwrap().output.clone(),
+        );
+        let baseline = private.device_report();
+        assert_eq!(baseline.sharing_saved_s(), 0.0);
+        assert!(private.shared_cache_stats().is_none());
+
+        // Same two jobs under sharing: the identical ctx payload ships
+        // once (modeled), outputs bit-identical, totals strictly lower.
+        let mut q = tiny_queue(2, BackendKind::Seq, 1);
+        q.set_sharing(SharedCacheMode::On);
+        let a = q.submit("a", ctx_map_job);
+        let b = q.submit("b", ctx_map_job);
+        {
+            let oa = q.wait(&a).unwrap();
+            assert_eq!(oa.output, out_a);
+            assert_eq!(oa.timeline.bcast_dedups, 1);
+            assert!(oa.timeline.bcast_dedup_saved_s > 0.0);
+        }
+        assert_eq!(q.wait(&b).unwrap().output, out_b);
+        let report = q.device_report();
+        assert_eq!(report.bcast_dedups, 2, "both charges share the one ship");
+        assert!(report.total_s() < baseline.total_s());
+        // Seq is the serial reference walk: no gang savings, ever.
+        assert_eq!(report.colaunch_saved_s, 0.0);
+        assert_eq!(report.gangs, 0);
+        assert!(q.shared_cache_stats().is_some());
+    }
+
+    #[test]
+    fn gang_backend_co_launches_adjacent_identical_jobs() {
+        let mut q = tiny_queue(2, BackendKind::Gang, 1);
+        q.set_sharing(SharedCacheMode::On);
+        q.submit("a", ctx_map_job);
+        q.submit("b", ctx_map_job);
+        let (tl_a, tl_b) = {
+            let outcomes = q.wait_all().unwrap();
+            (outcomes[0].timeline, outcomes[1].timeline)
+        };
+        assert_eq!(tl_a.colaunched, 1);
+        assert!(tl_a.colaunch_saved_s > 0.0);
+        assert_eq!(tl_a, tl_b, "identical gang members save identically");
+        let report = q.device_report();
+        assert_eq!((report.gangs, report.gang_members), (1, 2));
+        assert!(report.render().contains("sharing:"), "{}", report.render());
     }
 
     #[test]

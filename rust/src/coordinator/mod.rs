@@ -45,11 +45,15 @@ pub mod optimizer;
 pub mod plan;
 pub mod planner;
 pub mod scheduler;
+pub mod shared;
 
 pub use handle::{Handle, PimFunc, TransformKind};
-pub use jobs::{DeviceReport, JobHandle, JobOutcome, JobPlan, JobQueue};
+pub use jobs::{DeviceReport, JobHandle, JobOutcome, JobPlan, JobQueue, SharedCacheMode};
 pub use management::{ArrayMeta, Layout, Management};
 pub use plan::{NodeState, PlanNode, PlanOp, PlanStats};
+pub use shared::{CacheStats, SharedCacheStats, SharedPlanCache};
+
+use std::sync::Arc;
 
 use crate::backend::{BackendKind, BackendStats, ExecBackend};
 use crate::error::Result;
@@ -142,13 +146,30 @@ impl PimSystem {
         runtime: Option<Runtime>,
         backend: Box<dyn ExecBackend>,
     ) -> Self {
+        Self::with_backend_shared(cfg, runtime, backend, None)
+    }
+
+    /// [`Self::with_backend`] with a cross-tenant shared plan cache
+    /// handle installed at construction (DESIGN.md §16).  `None` is
+    /// exactly [`Self::with_backend`] — the private single-tenant
+    /// cache.  The job scheduler's partition workers build their
+    /// systems through this so every tenant of a batch consults one
+    /// cache.
+    pub fn with_backend_shared(
+        cfg: PimConfig,
+        runtime: Option<Runtime>,
+        backend: Box<dyn ExecBackend>,
+        shared: Option<Arc<SharedPlanCache>>,
+    ) -> Self {
         let tasklets = cfg.default_tasklets;
+        let mut engine = plan::PlanEngine::new();
+        engine.shared = shared;
         PimSystem {
             machine: PimMachine::new(cfg),
             management: Management::new(),
             runtime,
             backend,
-            engine: plan::PlanEngine::new(),
+            engine,
             pipeline: PipelineMode::Off,
             opts: OptFlags::simplepim(),
             tasklets,
@@ -156,6 +177,45 @@ impl PimSystem {
             red_variant_override: None,
             last_red_variant: None,
         }
+    }
+
+    /// Install (or remove) the cross-tenant shared plan cache.  Safe at
+    /// any point: sharing never changes a result bit, only where
+    /// reduction plans are looked up and whether the sharing ledger
+    /// records.
+    pub fn set_shared_cache(&mut self, shared: Option<Arc<SharedPlanCache>>) {
+        self.engine.shared = shared;
+    }
+
+    /// The installed shared plan cache, if any.
+    pub fn shared_cache(&self) -> Option<&Arc<SharedPlanCache>> {
+        self.engine.shared.as_ref()
+    }
+
+    /// This system's plan-cache counters (the per-tenant view),
+    /// deliberately separate from the timeline: [`Self::reset_timeline`]
+    /// measurement boundaries never touch them.  Hits/misses count this
+    /// system's lookups wherever they were served (private or shared);
+    /// evictions are a property of the cache itself, so under a shared
+    /// cache they live in [`SharedPlanCache::stats`] and are reported 0
+    /// here.
+    pub fn cache_stats(&self) -> CacheStats {
+        CacheStats {
+            hits: self.engine.stats.cache_hits,
+            misses: self.engine.stats.cache_misses,
+            evictions: if self.engine.shared.is_some() {
+                0
+            } else {
+                self.engine.cache.evictions()
+            },
+        }
+    }
+
+    /// Take this system's sharing ledger (broadcast ships + launch
+    /// fingerprint), leaving an empty one.  The job scheduler reads it
+    /// after a job completes; empty unless a shared cache is installed.
+    pub(crate) fn take_sharing_ledger(&mut self) -> shared::SharingLedger {
+        std::mem::take(&mut self.engine.ledger)
     }
 
     /// Swap the execution backend (results and modeled time are

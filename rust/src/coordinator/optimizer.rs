@@ -10,14 +10,19 @@
 //! 2. **Dead-intermediate elision** — a deferred map freed before any
 //!    consumer reads its bytes never launches and never touches MRAM
 //!    (see `PimSystem::free_array`).
-//! 3. **Plan caching** — [`plan_reduction`] consults the LRU plan cache
+//! 3. **Plan caching** — [`plan_reduction`] consults a plan cache
 //!    before re-running the §4.2.2 variant choice, so iteration 2..n of
-//!    a training loop reuses the first iteration's plan.
+//!    a training loop reuses the first iteration's plan.  The cache is
+//!    a [`CacheRef`]: the engine's private LRU (single-tenant default)
+//!    or the cross-tenant [`super::shared::SharedPlanCache`] (DESIGN.md
+//!    §16), under which N tenants racing the same key plan exactly
+//!    once.
 
 use crate::pim::PimConfig;
 use crate::timing::{self, DmaPolicy, KernelProfile, OptFlags, ReduceVariant};
 
-use super::plan::{CacheKey, CachedRed, PlanCache};
+use super::plan::{CacheKey, CachedRed};
+use super::shared::CacheRef;
 
 /// Fold a pipeline of per-stage profiles into the fused launch profile.
 /// A single stage is returned unchanged (no fusion to do).
@@ -51,21 +56,20 @@ pub fn plan_reduction(
     tasklets: u32,
     output_len: u64,
     type_size: u64,
-    cache: Option<(&mut PlanCache, CacheKey)>,
+    cache: Option<(CacheRef<'_>, CacheKey)>,
     override_variant: Option<ReduceVariant>,
 ) -> RedPlan {
     if let Some(v) = override_variant {
         return RedPlan { variant: v, cached: false };
     }
     if let Some((cache, key)) = cache {
-        if let Some(hit) = cache.get(&key) {
-            return RedPlan { variant: hit.variant, cached: true };
-        }
-        let variant = timing::choose_reduce_variant(
-            cfg, fused, opts, policy, elems, tasklets, output_len, type_size,
-        );
-        cache.insert(key, CachedRed { variant });
-        return RedPlan { variant, cached: false };
+        let (value, cached) = cache.get_or_plan(key, || {
+            let variant = timing::choose_reduce_variant(
+                cfg, fused, opts, policy, elems, tasklets, output_len, type_size,
+            );
+            CachedRed { variant }
+        });
+        return RedPlan { variant: value.variant, cached };
     }
     let variant = timing::choose_reduce_variant(
         cfg, fused, opts, policy, elems, tasklets, output_len, type_size,
@@ -76,6 +80,8 @@ pub fn plan_reduction(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::plan::PlanCache;
+    use crate::coordinator::shared::SharedPlanCache;
     use crate::coordinator::PimFunc;
 
     fn cfg() -> PimConfig {
@@ -148,15 +154,46 @@ mod tests {
 
         let first = plan_reduction(
             &c, &fused, &o, DmaPolicy::Dynamic, 4096, 12, 1, 4,
-            Some((&mut cache, cache_key())), None,
+            Some((CacheRef::Private(&mut cache), cache_key())), None,
         );
         assert!(!first.cached);
         let second = plan_reduction(
             &c, &fused, &o, DmaPolicy::Dynamic, 4096, 12, 1, 4,
-            Some((&mut cache, cache_key())), None,
+            Some((CacheRef::Private(&mut cache), cache_key())), None,
         );
         assert!(second.cached);
         assert_eq!(first.variant, second.variant);
+    }
+
+    #[test]
+    fn shared_cache_ref_plans_once_across_tenants() {
+        // Two "tenants" consulting the same shared cache: the second
+        // hits what the first planned, and both agree with the private
+        // path's variant bit-for-bit.
+        let c = cfg();
+        let o = OptFlags::simplepim();
+        let fused = fuse_profiles(&[PimFunc::AffineMap.profile(), PimFunc::SumReduce.profile()]);
+        let shared = SharedPlanCache::new();
+        let mut private = PlanCache::new(8);
+
+        let reference = plan_reduction(
+            &c, &fused, &o, DmaPolicy::Dynamic, 4096, 12, 1, 4,
+            Some((CacheRef::Private(&mut private), cache_key())), None,
+        );
+        let first = plan_reduction(
+            &c, &fused, &o, DmaPolicy::Dynamic, 4096, 12, 1, 4,
+            Some((CacheRef::Shared(&shared), cache_key())), None,
+        );
+        let second = plan_reduction(
+            &c, &fused, &o, DmaPolicy::Dynamic, 4096, 12, 1, 4,
+            Some((CacheRef::Shared(&shared), cache_key())), None,
+        );
+        assert!(!first.cached);
+        assert!(second.cached, "tenant 2 reuses tenant 1's plan");
+        assert_eq!(first.variant, reference.variant, "shared never changes the plan");
+        assert_eq!(second.variant, reference.variant);
+        let s = shared.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
     }
 
     #[test]
@@ -167,7 +204,7 @@ mod tests {
         let mut cache = PlanCache::new(8);
         let plan = plan_reduction(
             &c, &p, &o, DmaPolicy::Dynamic, 4096, 12, 1, 4,
-            Some((&mut cache, cache_key())), Some(ReduceVariant::SharedAcc),
+            Some((CacheRef::Private(&mut cache), cache_key())), Some(ReduceVariant::SharedAcc),
         );
         assert_eq!(plan.variant, ReduceVariant::SharedAcc);
         assert!(!plan.cached);

@@ -20,6 +20,7 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::rc::Rc;
+use std::sync::Arc;
 
 use crate::backend::{BackendKind, MergeStrategy};
 use crate::error::Result;
@@ -32,6 +33,7 @@ use super::comm::words_to_bytes;
 use super::handle::Handle;
 use super::management::Layout;
 use super::planner::ScatterPlan;
+use super::shared::{content_hash, SharedPlanCache, SharingLedger};
 use super::PimSystem;
 
 /// Index of a node in the session plan graph.
@@ -408,11 +410,15 @@ pub struct PlanCache {
     cap: usize,
     /// MRU at the back.
     entries: Vec<(CacheKey, CachedRed)>,
+    /// Entries displaced by capacity pressure (was silent before the
+    /// cache-stats split — an eviction storm looked identical to a
+    /// cold cache).
+    evictions: u64,
 }
 
 impl PlanCache {
     pub fn new(cap: usize) -> Self {
-        PlanCache { cap: cap.max(1), entries: Vec::new() }
+        PlanCache { cap: cap.max(1), entries: Vec::new(), evictions: 0 }
     }
 
     pub fn get(&mut self, key: &CacheKey) -> Option<CachedRed> {
@@ -428,8 +434,14 @@ impl PlanCache {
             self.entries.remove(i);
         } else if self.entries.len() >= self.cap {
             self.entries.remove(0); // evict LRU
+            self.evictions += 1;
         }
         self.entries.push((key, value));
+    }
+
+    /// Entries displaced by capacity pressure so far.
+    pub fn evictions(&self) -> u64 {
+        self.evictions
     }
 
     pub fn len(&self) -> usize {
@@ -536,8 +548,17 @@ pub struct PlanEngine {
     /// themselves land at scatter time).  BTreeMap so bulk flushes
     /// charge in a deterministic order.
     pub(crate) pending_xfers: BTreeMap<String, u64>,
-    /// LRU reduction-plan cache.
+    /// LRU reduction-plan cache (the single-tenant private default).
     pub(crate) cache: PlanCache,
+    /// Cross-tenant shared plan cache (DESIGN.md §16).  When installed,
+    /// reduction planning consults it instead of the private `cache`,
+    /// and the sharing `ledger` starts recording.  `None` — the
+    /// default — is bit-for-bit today's single-tenant behavior.
+    pub(crate) shared: Option<Arc<SharedPlanCache>>,
+    /// Per-job sharing ledger (broadcast ships + launch-chain
+    /// fingerprint), recorded only while `shared` is installed and
+    /// consumed by the job scheduler's dedup/co-launch post-passes.
+    pub(crate) ledger: SharingLedger,
     /// Memoized scatter plans keyed by (len, type_size, n_dpus).
     pub(crate) scatter_plans: HashMap<(u64, u64, usize), ScatterPlan>,
     /// Resident shipped contexts keyed by padded size.
@@ -567,6 +588,8 @@ impl PlanEngine {
             pending: BTreeMap::new(),
             pending_xfers: BTreeMap::new(),
             cache: PlanCache::new(32),
+            shared: None,
+            ledger: SharingLedger::default(),
             scatter_plans: HashMap::new(),
             ctx_slots: HashMap::new(),
             pool: BufferPool::default(),
@@ -692,9 +715,16 @@ impl PimSystem {
             "  nodes {} | launches {} | fused chains {} ({} stages) | elided {}\n",
             s.nodes, s.launches, s.fused_chains, s.fused_stages, s.elided
         ));
+        let cs = self.cache_stats();
         out.push_str(&format!(
-            "  plan cache: {} hits / {} misses | ctx reuses {} | buffer reuses {} | scatter-plan hits {}\n",
-            s.cache_hits, s.cache_misses, s.ctx_reuses, s.buffer_reuses, s.scatter_plan_hits
+            "  plan cache ({}): {} hits / {} misses / {} evictions | ctx reuses {} | buffer reuses {} | scatter-plan hits {}\n",
+            if self.engine.shared.is_some() { "shared" } else { "private" },
+            cs.hits,
+            cs.misses,
+            cs.evictions,
+            s.ctx_reuses,
+            s.buffer_reuses,
+            s.scatter_plan_hits
         ));
         let tl = self.machine.timeline();
         out.push_str(&format!(
@@ -711,25 +741,21 @@ impl PimSystem {
             Some(u) => format!("{:.0}%", u * 100.0),
             None => "-".into(),
         };
-        let shape = if cfg.explicit_topology() {
-            format!(
-                "{} channel(s) x {} rank(s)/channel x {} DPU(s)/rank",
-                cfg.n_channels,
-                cfg.ranks_per_channel,
-                cfg.rank_dpus()
-            )
-        } else {
-            format!(
-                "flat bus, {} rank(s) x <= {} DPU(s)/rank",
-                cfg.n_ranks(),
-                cfg.dpus_per_rank.min(cfg.n_dpus)
-            )
-        };
         out.push_str(&format!(
-            "  topology: {shape} | rank-engine utilization: scatter {} gather {}\n",
+            "  topology: {} | rank-engine utilization: scatter {} gather {}\n",
+            cfg.topology_desc(),
             pct(h2p_u),
             pct(p2h_u),
         ));
+        if tl.bcast_dedups > 0 || tl.colaunched > 0 {
+            out.push_str(&format!(
+                "  sharing: {} deduped broadcast(s) saving {:.3} ms | {} co-launched job(s) saving {:.3} ms\n",
+                tl.bcast_dedups,
+                tl.bcast_dedup_saved_s * 1e3,
+                tl.colaunched,
+                tl.colaunch_saved_s * 1e3,
+            ));
+        }
         if tl.merges > 0 {
             out.push_str(&format!(
                 "  merge lane: {} merge(s) | {} combine elems | tree levels {} | {:.3} ms \
@@ -934,6 +960,19 @@ impl PimSystem {
             None => self.machine.charge_kernel(t.seconds),
         }
         self.engine.stats.launches += 1;
+        if self.engine.shared.is_some() {
+            // Launch-chain fingerprint for gang co-launch grouping
+            // (DESIGN.md §16): the fused function names plus the
+            // element shape — two jobs co-launch only when every
+            // launch of the chain matches exactly.
+            let desc: Vec<String> = chain
+                .iter()
+                .map(|c| {
+                    format!("{:?}", self.engine.pending.get(c).expect("in chain").handle.func)
+                })
+                .collect();
+            self.engine.ledger.note_launch(&format!("map:{}@{elems}", desc.join("+")));
+        }
 
         let fused_state = if chain.len() > 1 { NodeState::Fused } else { NodeState::Executed };
         if chain.len() > 1 {
@@ -1226,6 +1265,7 @@ impl PimSystem {
                 }
                 let addr = slot.addr;
                 self.machine.push_broadcast(addr, &buf)?;
+                self.note_bcast_ship(&buf);
                 self.engine.ctx_slots.get_mut(&padded).expect("just seen").ctx =
                     handle.ctx.clone();
                 return Ok(());
@@ -1233,6 +1273,7 @@ impl PimSystem {
             if self.engine.ctx_slots.len() < CTX_SLOT_CAP {
                 let addr = self.alloc_with_spill(padded)?;
                 self.machine.push_broadcast(addr, &buf)?;
+                self.note_bcast_ship(&buf);
                 self.engine
                     .ctx_slots
                     .insert(padded, CtxSlot { addr, ctx: handle.ctx.clone() });
@@ -1242,8 +1283,27 @@ impl PimSystem {
         // Eager mode (or slot table full): scratch round-trip.
         let addr = self.alloc_with_spill(padded)?;
         self.machine.push_broadcast(addr, &buf)?;
+        self.note_bcast_ship(&buf);
         self.machine.free(addr)?;
         Ok(())
+    }
+
+    /// Record a charged read-only broadcast ship in the sharing ledger
+    /// (content hash + the transfer seconds the machine charged for
+    /// it).  Active only under a shared cache — the ledger feeds the
+    /// job scheduler's cross-tenant broadcast-dedup pass (DESIGN.md
+    /// §16); single-tenant runs skip the bookkeeping entirely.
+    pub(crate) fn note_bcast_ship(&mut self, buf: &[u8]) {
+        if self.engine.shared.is_none() {
+            return;
+        }
+        let t = crate::pim::transfer_seconds(
+            &self.machine.cfg,
+            XferKind::Broadcast,
+            self.machine.cfg.n_dpus,
+            buf.len() as u64,
+        );
+        self.engine.ledger.note_bcast(content_hash(buf), t);
     }
 
     /// Pool-aware MRAM allocation (same-offset-on-every-bank blocks).
@@ -1361,6 +1421,10 @@ mod tests {
         assert!(c.get(&key(&["a"], 1)).is_some());
         assert!(c.get(&key(&["c"], 1)).is_some());
         assert_eq!(c.len(), 2);
+        assert_eq!(c.evictions(), 1, "capacity displacement is counted");
+        // Re-inserting a resident key displaces nothing.
+        c.insert(key(&["a"], 1), CachedRed { variant: ReduceVariant::PrivateAcc });
+        assert_eq!(c.evictions(), 1);
     }
 
     #[test]

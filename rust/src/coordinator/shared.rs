@@ -1,0 +1,358 @@
+//! Cross-tenant sharing primitives (DESIGN.md §16): the `Arc`-shared,
+//! lock-striped reduction-plan cache plus the per-job sharing ledger
+//! the job scheduler's dedup/co-launch post-passes consume.
+//!
+//! The per-`PimSystem` [`PlanCache`] stays the single-tenant default —
+//! bit-for-bit today's behavior.  When a [`SharedPlanCache`] handle is
+//! installed (by [`crate::coordinator::jobs::JobQueue`] under
+//! `--shared-cache on`, or explicitly via
+//! [`crate::coordinator::PimSystem::set_shared_cache`]), reduction
+//! planning routes through it instead: N tenants running the same
+//! workload shape plan once.  The cache key is unchanged
+//! ([`CacheKey`]: func-chain fingerprint, per-DPU element shape,
+//! accumulator/ctx lengths, tasklets) and the partition shape is keyed
+//! implicitly by `per_dpu` — two tenants share an entry exactly when
+//! the variant choice provably cannot differ.
+//!
+//! Concurrency contract: the planning closure runs *inside* the stripe
+//! lock, so two workers racing the same key can never both compute it —
+//! the global miss count equals the number of distinct keys planned,
+//! which is what the stress test pins.  (Per-tenant hit/miss
+//! attribution remains execution-order-dependent; only the global
+//! counters are deterministic under racing workers.)
+
+use std::fmt;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use super::plan::{CacheKey, CachedRed, PlanCache};
+
+/// Lock stripes (power of two; contention on 4–16 partition workers is
+/// negligible at this width).
+const STRIPES: usize = 8;
+/// Per-stripe entry capacity — same order as the private cache so a
+/// shared run can never thrash where a private one would not.
+const STRIPE_CAP: usize = 32;
+
+/// FNV-1a offset basis / prime (64-bit).
+const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+
+/// FNV-1a over a byte slice, continuing from `h`.
+pub(crate) fn fnv1a(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// FNV-1a over a little-endian u64, continuing from `h`.
+pub(crate) fn fnv1a_u64(h: u64, v: u64) -> u64 {
+    fnv1a(h, &v.to_le_bytes())
+}
+
+/// Content hash of a broadcast payload (the dedup identity: two
+/// broadcasts are "the same ship" iff their padded bytes agree).
+pub(crate) fn content_hash(bytes: &[u8]) -> u64 {
+    fnv1a(fnv1a_u64(FNV_OFFSET, bytes.len() as u64), bytes)
+}
+
+/// Stripe-selection hash over every [`CacheKey`] field (the key has no
+/// `Hash` impl by design — equality stays the source of truth; this
+/// only picks a stripe and never substitutes for `==`).
+fn key_hash(key: &CacheKey) -> u64 {
+    let mut h = FNV_OFFSET;
+    for f in &key.funcs {
+        h = fnv1a(h, f.as_bytes());
+        h = fnv1a(h, &[0x1f]); // field separator
+    }
+    for &d in &key.per_dpu {
+        h = fnv1a_u64(h, d);
+    }
+    h = fnv1a_u64(h, key.output_len);
+    h = fnv1a_u64(h, key.ctx_len as u64);
+    fnv1a_u64(h, key.tasklets as u64)
+}
+
+/// Snapshot of one cache's counters — per-tenant (the private cache /
+/// a job's view) or global (the shared cache).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct CacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+}
+
+impl CacheStats {
+    pub fn lookups(&self) -> u64 {
+        self.hits + self.misses
+    }
+}
+
+/// Global snapshot of a [`SharedPlanCache`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct SharedCacheStats {
+    pub hits: u64,
+    pub misses: u64,
+    pub evictions: u64,
+    /// Entries currently resident across all stripes.
+    pub entries: usize,
+}
+
+/// The cross-tenant reduction-plan cache: `STRIPES` independent
+/// [`PlanCache`]s behind mutexes, shared via `Arc` across every
+/// partition worker of a job batch.
+pub struct SharedPlanCache {
+    stripes: Vec<Mutex<PlanCache>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl fmt::Debug for SharedPlanCache {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = self.stats();
+        f.debug_struct("SharedPlanCache")
+            .field("stripes", &self.stripes.len())
+            .field("entries", &s.entries)
+            .field("hits", &s.hits)
+            .field("misses", &s.misses)
+            .field("evictions", &s.evictions)
+            .finish()
+    }
+}
+
+impl Default for SharedPlanCache {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl SharedPlanCache {
+    pub fn new() -> Self {
+        Self::with_capacity(STRIPE_CAP)
+    }
+
+    /// Build with an explicit per-stripe capacity (tests).
+    pub fn with_capacity(per_stripe: usize) -> Self {
+        SharedPlanCache {
+            stripes: (0..STRIPES).map(|_| Mutex::new(PlanCache::new(per_stripe))).collect(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// Look `key` up, running `plan` under the stripe lock on a miss so
+    /// concurrent tenants can never duplicate the optimization work.
+    /// Returns the plan and whether it was served from the cache.
+    pub fn get_or_plan(
+        &self,
+        key: &CacheKey,
+        plan: impl FnOnce() -> CachedRed,
+    ) -> (CachedRed, bool) {
+        let stripe = &self.stripes[(key_hash(key) % STRIPES as u64) as usize];
+        let mut cache = stripe.lock().expect("shared plan-cache stripe");
+        if let Some(hit) = cache.get(key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return (hit, true);
+        }
+        let value = plan();
+        cache.insert(key.clone(), value);
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        (value, false)
+    }
+
+    /// Global counter + occupancy snapshot.
+    pub fn stats(&self) -> SharedCacheStats {
+        let mut entries = 0;
+        let mut evictions = 0;
+        for s in &self.stripes {
+            let c = s.lock().expect("shared plan-cache stripe");
+            entries += c.len();
+            evictions += c.evictions();
+        }
+        SharedCacheStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions,
+            entries,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.stats().entries
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// The cache a reduction plan consults: the engine's private LRU
+/// (single-tenant default) or the cross-tenant shared cache.
+pub enum CacheRef<'a> {
+    Private(&'a mut PlanCache),
+    Shared(&'a SharedPlanCache),
+}
+
+impl CacheRef<'_> {
+    /// Serve `key` from the cache, computing and inserting via `plan`
+    /// on a miss.  The private arm is exactly the pre-sharing
+    /// get/insert sequence; the shared arm delegates to
+    /// [`SharedPlanCache::get_or_plan`].
+    pub fn get_or_plan(
+        self,
+        key: CacheKey,
+        plan: impl FnOnce() -> CachedRed,
+    ) -> (CachedRed, bool) {
+        match self {
+            CacheRef::Private(cache) => {
+                if let Some(hit) = cache.get(&key) {
+                    (hit, true)
+                } else {
+                    let value = plan();
+                    cache.insert(key, value);
+                    (value, false)
+                }
+            }
+            CacheRef::Shared(shared) => shared.get_or_plan(&key, plan),
+        }
+    }
+}
+
+/// One recorded (charged) context/broadcast ship: the payload's content
+/// hash and the transfer seconds it was charged.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BcastRecord {
+    pub content: u64,
+    pub seconds: f64,
+}
+
+/// Per-job sharing ledger, recorded during execution and consumed by
+/// the job scheduler's deterministic post-passes (DESIGN.md §16):
+/// broadcast ships for the dedup pass, the kernel-chain fingerprint
+/// for gang co-launch grouping.  Only populated when a shared cache is
+/// installed — single-tenant runs never pay the bookkeeping.
+#[derive(Debug, Clone, Default)]
+pub struct SharingLedger {
+    /// Charged broadcast ships, in charge order.
+    pub bcasts: Vec<BcastRecord>,
+    /// Running FNV-1a fingerprint of the job's kernel-launch chain
+    /// (function names in launch order); `0` = no launches recorded.
+    pub sig: u64,
+}
+
+impl SharingLedger {
+    /// Record one charged broadcast ship.
+    pub fn note_bcast(&mut self, content: u64, seconds: f64) {
+        self.bcasts.push(BcastRecord { content, seconds });
+    }
+
+    /// Fold one kernel launch (its fused function descriptor) into the
+    /// job's launch-chain fingerprint.
+    pub fn note_launch(&mut self, desc: &str) {
+        if self.sig == 0 {
+            self.sig = FNV_OFFSET;
+        }
+        self.sig = fnv1a(self.sig, desc.as_bytes());
+        self.sig = fnv1a(self.sig, &[0x1e]); // launch separator
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::ReduceVariant;
+
+    fn key(tag: &str) -> CacheKey {
+        CacheKey {
+            funcs: vec![tag.to_string()],
+            per_dpu: vec![64; 8],
+            output_len: 1,
+            ctx_len: 0,
+            tasklets: 12,
+        }
+    }
+
+    #[test]
+    fn get_or_plan_computes_once_per_key() {
+        let cache = SharedPlanCache::new();
+        let mut computes = 0u32;
+        for _ in 0..5 {
+            let (v, _) = cache.get_or_plan(&key("SumReduce"), || {
+                computes += 1;
+                CachedRed { variant: ReduceVariant::PrivateAcc }
+            });
+            assert_eq!(v.variant, ReduceVariant::PrivateAcc);
+        }
+        assert_eq!(computes, 1, "one miss, then hits");
+        let s = cache.stats();
+        assert_eq!((s.hits, s.misses, s.entries), (4, 1, 1));
+    }
+
+    #[test]
+    fn distinct_keys_get_distinct_entries() {
+        let cache = SharedPlanCache::new();
+        for i in 0..20 {
+            cache.get_or_plan(&key(&format!("f{i}")), || CachedRed {
+                variant: ReduceVariant::SharedAcc,
+            });
+        }
+        let s = cache.stats();
+        assert_eq!(s.misses, 20);
+        assert_eq!(s.hits, 0);
+        assert_eq!(s.entries, 20, "capacity is per-stripe; 20 keys fit");
+    }
+
+    #[test]
+    fn racing_threads_never_duplicate_planning_work() {
+        let cache = SharedPlanCache::new();
+        let computes = AtomicU64::new(0);
+        std::thread::scope(|s| {
+            for _ in 0..8 {
+                s.spawn(|| {
+                    for i in 0..16 {
+                        cache.get_or_plan(&key(&format!("k{i}")), || {
+                            computes.fetch_add(1, Ordering::Relaxed);
+                            CachedRed { variant: ReduceVariant::PrivateAcc }
+                        });
+                    }
+                });
+            }
+        });
+        assert_eq!(
+            computes.load(Ordering::Relaxed),
+            16,
+            "lock-held compute: one plan per distinct key, no duplicates"
+        );
+        let s = cache.stats();
+        assert_eq!(s.misses, 16);
+        assert_eq!(s.hits, 8 * 16 - 16);
+    }
+
+    #[test]
+    fn content_hash_discriminates_payloads() {
+        assert_eq!(content_hash(&[1, 2, 3]), content_hash(&[1, 2, 3]));
+        assert_ne!(content_hash(&[1, 2, 3]), content_hash(&[1, 2, 4]));
+        assert_ne!(content_hash(&[]), content_hash(&[0]));
+        // Length is folded in, so a zero-padded tail is a new identity.
+        assert_ne!(content_hash(&[1, 2]), content_hash(&[1, 2, 0]));
+    }
+
+    #[test]
+    fn ledger_fingerprint_tracks_launch_chain() {
+        let mut a = SharingLedger::default();
+        let mut b = SharingLedger::default();
+        assert_eq!(a.sig, 0, "no launches yet");
+        a.note_launch("AffineMap");
+        a.note_launch("SumReduce");
+        b.note_launch("AffineMap");
+        b.note_launch("SumReduce");
+        assert_eq!(a.sig, b.sig, "same chain, same fingerprint");
+        b.note_launch("SumReduce");
+        assert_ne!(a.sig, b.sig, "extra launch changes the fingerprint");
+        let mut c = SharingLedger::default();
+        c.note_launch("AffineMapSumReduce");
+        assert_ne!(a.sig, c.sig, "separator keeps chain boundaries distinct");
+    }
+}

@@ -236,6 +236,25 @@ impl PimConfig {
     pub fn wram_available(&self) -> u64 {
         self.wram_bytes - self.wram_reserved_bytes
     }
+
+    /// Human-readable machine shape, shared by `--explain` reports and
+    /// job-error attribution so every surface prints the same string.
+    pub fn topology_desc(&self) -> String {
+        if self.explicit_topology() {
+            format!(
+                "{} channel(s) x {} rank(s)/channel x {} DPU(s)/rank",
+                self.n_channels,
+                self.ranks_per_channel,
+                self.rank_dpus()
+            )
+        } else {
+            format!(
+                "flat bus, {} rank(s) x <= {} DPU(s)/rank",
+                self.n_ranks(),
+                self.dpus_per_rank.min(self.n_dpus)
+            )
+        }
+    }
 }
 
 impl Default for PimConfig {

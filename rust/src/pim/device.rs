@@ -71,6 +71,26 @@ pub struct Timeline {
     pub merge_overlap_saved_s: f64,
     /// Total chunks across pipelined merge phases.
     pub merge_chunks: u64,
+    /// Cross-tenant broadcast dedup (DESIGN.md §16): transfer seconds
+    /// this lane did *not* pay because an identical read-only context
+    /// shipped to the same partition set was charged once across the
+    /// batch instead of once per job.  The `host_to_pim_s` lane keeps
+    /// its full per-job charge (per-direction attribution stays
+    /// comparable across sharing modes, like `overlap_saved_s`); this
+    /// lane subtracts the dedup in [`Timeline::total_s`].  Always 0
+    /// outside the job scheduler's shared-cache mode.
+    pub bcast_dedup_saved_s: f64,
+    /// Broadcast ships elided by cross-tenant dedup.
+    pub bcast_dedups: u64,
+    /// Gang co-launch (DESIGN.md §16): launch-overhead seconds saved
+    /// because compatible same-kernel jobs on rank-adjacent partitions
+    /// were batched into one gang launch command.  `launch_s` keeps
+    /// the full per-job overhead; subtracted in [`Timeline::total_s`].
+    /// Always 0 outside the job scheduler's shared-cache mode.
+    pub colaunch_saved_s: f64,
+    /// 1 when this timeline's job joined a co-launch gang, else 0
+    /// (summing across a batch counts the gang members).
+    pub colaunched: u64,
 }
 
 impl Timeline {
@@ -81,6 +101,8 @@ impl Timeline {
             + self.launch_s
             - self.overlap_saved_s
             - self.merge_overlap_saved_s
+            - self.bcast_dedup_saved_s
+            - self.colaunch_saved_s
     }
 
     /// Communication-only seconds (both directions + merges).

@@ -4,7 +4,7 @@
 
 use crate::backend::{self, BackendKind};
 use crate::cli::Args;
-use crate::coordinator::JobQueue;
+use crate::coordinator::{JobQueue, SharedCacheMode};
 use crate::error::{Error, Result};
 use crate::pim::{PimConfig, PipelineMode};
 use crate::timing::{self, DmaPolicy, OptFlags, ReduceVariant};
@@ -276,19 +276,24 @@ pub(crate) fn machine_config(args: &Args, default_dpus: usize) -> Result<PimConf
 
 /// One-line topology description for run/jobs headers.
 pub(crate) fn topology_line(cfg: &PimConfig) -> String {
-    if cfg.explicit_topology() {
-        format!(
-            "{} channel(s) x {} rank(s)/channel x {} DPU(s)/rank",
-            cfg.n_channels,
-            cfg.ranks_per_channel,
-            cfg.rank_dpus()
-        )
-    } else {
-        format!(
-            "flat bus, {} rank(s) x <= {} DPU(s)/rank",
-            cfg.n_ranks(),
-            cfg.dpus_per_rank.min(cfg.n_dpus)
-        )
+    cfg.topology_desc()
+}
+
+/// Resolve the cross-tenant sharing knob: `--shared-cache {on|off}`
+/// over `SIMPLEPIM_SHARED_CACHE`, defaulting to off (the share-nothing
+/// PR 5 scheduler).  Garbage in either place is a hard config error —
+/// house rule: zero/garbage env never silently falls back.
+fn shared_cache_knob(args: &Args) -> Result<SharedCacheMode> {
+    if let Some(v) = args.flag("shared-cache") {
+        return SharedCacheMode::parse(v);
+    }
+    match std::env::var("SIMPLEPIM_SHARED_CACHE") {
+        Ok(v) => SharedCacheMode::parse(&v).map_err(|_| {
+            Error::Config(format!(
+                "invalid SIMPLEPIM_SHARED_CACHE=`{v}` (expected on|off)"
+            ))
+        }),
+        Err(_) => Ok(SharedCacheMode::Off),
     }
 }
 
@@ -324,14 +329,17 @@ fn cmd_jobs(args: &Args) -> Result<()> {
     let names: Vec<&str> =
         if which == "all" { all_names } else { which.split(',').collect() };
 
+    let sharing = shared_cache_knob(args)?;
     let topo = topology_line(&cfg);
     let mut queue = JobQueue::new(cfg, partitions, kind, threads, pipeline)?;
+    queue.set_sharing(sharing);
     println!(
-        "jobs: {} workload(s) x {copies} cop{} over {} partition(s) x {} DPUs | backend {kind} (x{threads}) | pipeline {pipeline} | topology: {topo}",
+        "jobs: {} workload(s) x {copies} cop{} over {} partition(s) x {} DPUs | backend {kind} (x{threads}) | pipeline {pipeline} | shared-cache {} | topology: {topo}",
         names.len(),
         if copies == 1 { "y" } else { "ies" },
         queue.partitions(),
         queue.partition_dpus(),
+        if sharing == SharedCacheMode::On { "on" } else { "off" },
     );
     for copy in 0..copies {
         for name in &names {
@@ -343,15 +351,19 @@ fn cmd_jobs(args: &Args) -> Result<()> {
         }
     }
     let outcomes = queue.wait_all()?;
-    println!("\n  {:<16} {:>4}  {:>11}  {:>11}  {:>11}", "job", "part", "queued(ms)", "run(ms)", "finish(ms)");
+    println!(
+        "\n  {:<16} {:>4}  {:>11}  {:>11}  {:>11}  {:>10}",
+        "job", "part", "queued(ms)", "run(ms)", "finish(ms)", "cache(h/m)"
+    );
     for o in &outcomes {
         println!(
-            "  {:<16} {:>4}  {:>11.3}  {:>11.3}  {:>11.3}",
+            "  {:<16} {:>4}  {:>11.3}  {:>11.3}  {:>11.3}  {:>10}",
             o.name,
             o.partition,
             o.queued_s() * 1e3,
             o.duration_s() * 1e3,
             o.finish_s * 1e3,
+            format!("{}/{}", o.cache.hits, o.cache.misses),
         );
     }
     if args.has("explain") {
@@ -367,10 +379,29 @@ fn cmd_jobs(args: &Args) -> Result<()> {
                 t.pim_to_host_s * 1e3,
                 (t.host_merge_s + t.merge_s) * 1e3,
             );
+            if t.bcast_dedups > 0 || t.colaunched > 0 {
+                println!(
+                    "  {:<16}   shared: {} bcast dedup(s) -{:.3} ms | co-launch -{:.3} ms",
+                    "", t.bcast_dedups,
+                    t.bcast_dedup_saved_s * 1e3,
+                    t.colaunch_saved_s * 1e3,
+                );
+            }
         }
     }
     println!();
-    print!("{}", queue.device_report().render());
+    let report = queue.device_report();
+    print!("{}", report.render());
+    if let Some(s) = queue.shared_cache_stats() {
+        println!(
+            "  shared plan cache: {} hits / {} misses / {} evictions | {} entr{} resident",
+            s.hits,
+            s.misses,
+            s.evictions,
+            s.entries,
+            if s.entries == 1 { "y" } else { "ies" },
+        );
+    }
     Ok(())
 }
 

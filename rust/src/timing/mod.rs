@@ -10,7 +10,7 @@ pub mod model;
 pub mod profile;
 
 pub use model::{
-    choose_reduce_variant, eager_zip_kernel, map_kernel, rank_utilization, reduce_kernel,
-    schedule_jobs, DmaPolicy, JobSchedule, KernelTiming, ReduceVariant,
+    choose_reduce_variant, eager_zip_kernel, map_kernel, plan_gangs, rank_utilization,
+    reduce_kernel, schedule_jobs, DmaPolicy, GangPlan, JobSchedule, KernelTiming, ReduceVariant,
 };
 pub use profile::{KernelProfile, OptFlags, UNROLL_DEPTH};

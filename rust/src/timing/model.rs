@@ -249,6 +249,94 @@ pub fn schedule_jobs(durations: &[f64], lanes: &mut [f64]) -> JobSchedule {
     sched
 }
 
+/// Outcome of one gang co-launch pass over an admitted batch
+/// (DESIGN.md §16): per-job launch-overhead savings plus how many
+/// gangs formed and how many jobs joined one.
+#[derive(Debug, Clone, Default)]
+pub struct GangPlan {
+    /// Seconds of launch overhead saved for job `i` (0.0 for jobs that
+    /// joined no gang).
+    pub saved_s: Vec<f64>,
+    /// Number of gangs formed.
+    pub gangs: usize,
+    /// Total jobs that joined a gang.
+    pub members: usize,
+}
+
+/// Deterministic gang co-launch planning (DESIGN.md §16).  Runs the
+/// earliest-free admission *tentatively* (on a copy of `lanes`) with
+/// the unadjusted durations, then groups jobs whose kernel-chain
+/// fingerprints (`sigs`, 0 = no launches recorded) match and whose
+/// modeled starts are bit-identical — i.e. jobs the host would issue
+/// at the same instant.  Within a group, maximal runs of *contiguous*
+/// partition ids (contiguous partitions are rank-adjacent DPU sets,
+/// because `DpuSet::split` cuts contiguously along rank order) of
+/// length `g >= 2` form a gang.  The backend decides how many launch
+/// commands a gang of `g` costs via `commands(g)` (the
+/// `ExecBackend::co_launch_commands` hook): a gang-capable backend
+/// answers 1, the serial reference walk answers `g` (no savings).
+/// Each member saves an even share of the eliminated overhead,
+/// `launch_s[i] * (g - commands(g)) / g`, so gang totals only ever
+/// shrink and shrink identically across the gang.
+pub fn plan_gangs(
+    durations: &[f64],
+    sigs: &[u64],
+    launch_s: &[f64],
+    lanes: &[f64],
+    commands: impl Fn(usize) -> usize,
+) -> GangPlan {
+    use std::collections::HashMap;
+    assert_eq!(durations.len(), sigs.len());
+    assert_eq!(durations.len(), launch_s.len());
+    let mut plan = GangPlan {
+        saved_s: vec![0.0; durations.len()],
+        ..GangPlan::default()
+    };
+    if lanes.is_empty() || durations.is_empty() {
+        return plan;
+    }
+    let mut probe = lanes.to_vec();
+    let sched = schedule_jobs(durations, &mut probe);
+    // (fingerprint, start bits) -> sorted (partition, job) members.
+    let mut groups: HashMap<(u64, u64), Vec<(usize, usize)>> = HashMap::new();
+    for i in 0..durations.len() {
+        if sigs[i] == 0 {
+            continue;
+        }
+        groups
+            .entry((sigs[i], sched.start_s[i].to_bits()))
+            .or_default()
+            .push((sched.partition[i], i));
+    }
+    let mut keys: Vec<(u64, u64)> = groups.keys().copied().collect();
+    keys.sort_unstable();
+    for k in keys {
+        let mut g = groups.remove(&k).expect("key came from the map");
+        g.sort_unstable();
+        let mut s = 0;
+        while s < g.len() {
+            let mut e = s + 1;
+            while e < g.len() && g[e].0 == g[e - 1].0 + 1 {
+                e += 1;
+            }
+            let len = e - s;
+            if len >= 2 {
+                let cmds = commands(len).clamp(1, len);
+                if cmds < len {
+                    let frac = (len - cmds) as f64 / len as f64;
+                    for &(_, i) in &g[s..e] {
+                        plan.saved_s[i] = launch_s[i] * frac;
+                    }
+                    plan.gangs += 1;
+                    plan.members += len;
+                }
+            }
+            s = e;
+        }
+    }
+    plan
+}
+
 /// Per-rank transfer-engine utilization of the modeled transfer lanes
 /// (DESIGN.md §15): achieved lane throughput (bytes moved / seconds
 /// charged) over the machine's aggregate rank-engine capacity
@@ -469,6 +557,61 @@ mod tests {
         let s = schedule_jobs(&[0.0], &mut lanes);
         assert_eq!(s.len(), 1);
         assert_eq!(lanes, before, "zero-duration job leaves the clocks alone");
+    }
+
+    #[test]
+    fn gangs_form_only_on_same_sig_same_start_adjacent_partitions() {
+        // Four identical jobs on four free lanes all start at t=0 on
+        // partitions 0..4: one gang of 4, each member saving an even
+        // share of 3 of the 4 launch overheads.
+        let durs = [1.0; 4];
+        let sigs = [7u64; 4];
+        let launch = [0.25e-3; 4];
+        let lanes = [0.0; 4];
+        let g = plan_gangs(&durs, &sigs, &launch, &lanes, |_| 1);
+        assert_eq!((g.gangs, g.members), (1, 4));
+        for &s in &g.saved_s {
+            assert!((s - 0.25e-3 * 3.0 / 4.0).abs() < 1e-18);
+        }
+
+        // A serial reference walk (commands == members) saves nothing.
+        let g = plan_gangs(&durs, &sigs, &launch, &lanes, |m| m);
+        assert_eq!((g.gangs, g.members), (0, 0));
+        assert!(g.saved_s.iter().all(|&s| s == 0.0));
+
+        // Differing fingerprints split the group; a sig of 0 (no
+        // launches recorded) never gangs.
+        let g = plan_gangs(&durs, &[7, 7, 9, 0], &launch, &lanes, |_| 1);
+        assert_eq!((g.gangs, g.members), (1, 2));
+        assert_eq!(g.saved_s[2], 0.0);
+        assert_eq!(g.saved_s[3], 0.0);
+    }
+
+    #[test]
+    fn gangs_require_contiguous_partitions_and_matched_starts() {
+        // Lane 1 is busy until t=0.5: jobs land on partitions {0, 2, 3}
+        // at t=0 and partition 1 later.  The t=0 trio splits at the
+        // partition gap into a singleton {0} (no gang) and a pair
+        // {2, 3}.
+        let durs = [1.0; 4];
+        let sigs = [7u64; 4];
+        let launch = [0.25e-3; 4];
+        let lanes = [0.0, 0.5, 0.0, 0.0];
+        let g = plan_gangs(&durs, &sigs, &launch, &lanes, |_| 1);
+        assert_eq!((g.gangs, g.members), (1, 2));
+        assert_eq!(g.saved_s[0], 0.0, "partition 0 is rank-isolated");
+        assert_eq!(g.saved_s[3], 0.0, "late start on lane 1 cannot join");
+        assert!(g.saved_s[1] > 0.0 && g.saved_s[2] > 0.0);
+
+        // The tentative admission must not disturb the caller's lanes.
+        let before = lanes;
+        let _ = plan_gangs(&durs, &sigs, &launch, &lanes, |_| 1);
+        assert_eq!(lanes, before);
+
+        // Empty batches are fine.
+        let g = plan_gangs(&[], &[], &[], &lanes, |_| 1);
+        assert!(g.saved_s.is_empty());
+        assert_eq!((g.gangs, g.members), (0, 0));
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //!   serializing).
 
 use simplepim::backend::{self, BackendKind};
-use simplepim::coordinator::{JobQueue, PimSystem};
+use simplepim::coordinator::{JobQueue, PimSystem, SharedCacheMode};
 use simplepim::pim::{PimConfig, PipelineMode, Timeline};
 use simplepim::workloads;
 
@@ -263,6 +263,177 @@ fn admission_queues_jobs_behind_busy_partitions_deterministically() {
     // durations: a fresh identical queue reproduces it exactly.
     let (again, _) = run();
     assert_eq!(placements, again, "deterministic admission");
+}
+
+/// Submit the six-workload batch to `q` (variant 0 everywhere).
+fn submit_batch(q: &mut JobQueue) {
+    for (name, elems) in JOBS {
+        q.submit_plan(name, workloads::job(name, elems, 0).unwrap());
+    }
+}
+
+#[test]
+fn sharing_is_bit_identical_and_never_slower_across_the_matrix() {
+    // DESIGN.md §16 contract: sharing never changes a per-job result
+    // bit and only ever lowers modeled totals — per job and per batch,
+    // across the whole backend x pipeline matrix.
+    for mode in MODES {
+        for (kind, threads) in BACKENDS {
+            let mut base = JobQueue::new(PimConfig::upmem(32), 4, kind, threads, mode).unwrap();
+            submit_batch(&mut base);
+            let (base_outs, base_totals): (Vec<Vec<i32>>, Vec<f64>) = base
+                .wait_all()
+                .unwrap()
+                .iter()
+                .map(|o| (o.output.clone(), o.timeline.total_s()))
+                .unzip();
+            let base_makespan = base.device_report().total_s();
+
+            let mut q = JobQueue::new(PimConfig::upmem(32), 4, kind, threads, mode).unwrap();
+            q.set_sharing(SharedCacheMode::On);
+            submit_batch(&mut q);
+            {
+                let outcomes = q.wait_all().unwrap();
+                for (j, o) in outcomes.iter().enumerate() {
+                    assert_eq!(
+                        o.output, base_outs[j],
+                        "{}: shared-cache result must be bit-identical to share-nothing \
+                         ({kind} x{threads}, pipeline {mode})",
+                        o.name
+                    );
+                    assert!(
+                        o.timeline.total_s() <= base_totals[j] + 1e-12,
+                        "{}: sharing must never raise a job's modeled total \
+                         ({} vs {}; {kind} x{threads}, pipeline {mode})",
+                        o.name,
+                        o.timeline.total_s(),
+                        base_totals[j]
+                    );
+                }
+            }
+            assert!(
+                q.device_report().total_s() <= base_makespan + 1e-12,
+                "sharing must never raise the makespan ({kind} x{threads}, pipeline {mode})"
+            );
+        }
+    }
+}
+
+#[test]
+fn racing_workers_share_plans_without_duplicate_optimization_work() {
+    // 12 reduction jobs with identical shapes (different data) raced
+    // by 4 parallel workers over one shared cache: the lock-held
+    // compute guarantees every distinct key is planned exactly once —
+    // global misses equal resident entries, every tenant performs the
+    // same number of lookups, and outputs stay bit-identical to the
+    // share-nothing drain.
+    let copies = 12u64;
+    let mut private =
+        JobQueue::new(PimConfig::upmem(32), 4, BackendKind::Parallel, 4, PipelineMode::Off)
+            .unwrap();
+    for v in 0..copies {
+        private.submit_plan(&format!("red#{v}"), workloads::job("reduction", 4_000, v).unwrap());
+    }
+    let private_outs: Vec<Vec<i32>> =
+        private.wait_all().unwrap().iter().map(|o| o.output.clone()).collect();
+
+    let mut q =
+        JobQueue::new(PimConfig::upmem(32), 4, BackendKind::Parallel, 4, PipelineMode::Off)
+            .unwrap();
+    q.set_sharing(SharedCacheMode::On);
+    for v in 0..copies {
+        q.submit_plan(&format!("red#{v}"), workloads::job("reduction", 4_000, v).unwrap());
+    }
+    let lookups: Vec<u64> = {
+        let outcomes = q.wait_all().unwrap();
+        for (o, want) in outcomes.iter().zip(&private_outs) {
+            assert_eq!(&o.output, want, "{}: bit-identical under racing workers", o.name);
+        }
+        outcomes.iter().map(|o| o.cache.lookups()).collect()
+    };
+
+    let per_job = lookups[0];
+    assert!(per_job >= 1, "a reduction job consults the plan cache");
+    assert!(
+        lookups.iter().all(|&l| l == per_job),
+        "identical jobs make identical lookup counts: {lookups:?}"
+    );
+
+    let s = q.shared_cache_stats().expect("sharing is on");
+    assert_eq!(s.evictions, 0, "12 identically-shaped jobs cannot thrash the cache");
+    assert_eq!(
+        s.misses as usize, s.entries,
+        "no duplicate optimization work: every miss created a distinct entry"
+    );
+    assert_eq!(s.misses, per_job, "the first tenant plans every distinct key once");
+    assert_eq!(
+        s.hits + s.misses,
+        copies * per_job,
+        "global counters account for every tenant's lookups"
+    );
+}
+
+#[test]
+fn four_identical_tenants_win_at_least_30_percent_with_sharing() {
+    // The headline acceptance bar: 4 identical jobs on 4 partitions of
+    // a 2x4@32 topology machine under the parallel backend model >=30%
+    // lower total with sharing on (plan once + one ctx ship + one gang
+    // launch) than the share-nothing drain of the same batch.
+    let cfg = || PimConfig::upmem(32).with_topology(2, 4).unwrap();
+    for (name, elems) in [("linreg", 1_000), ("kmeans", 500)] {
+        let run = |sharing: SharedCacheMode| -> (Vec<Vec<i32>>, f64) {
+            let mut q =
+                JobQueue::new(cfg(), 4, BackendKind::Parallel, 4, PipelineMode::Off).unwrap();
+            q.set_sharing(sharing);
+            for i in 0..4 {
+                q.submit_plan(&format!("{name}#{i}"), workloads::job(name, elems, 0).unwrap());
+            }
+            let outs =
+                q.wait_all().unwrap().iter().map(|o| o.output.clone()).collect::<Vec<_>>();
+            let report = q.device_report();
+            if sharing == SharedCacheMode::On {
+                assert_eq!(
+                    (report.gangs, report.gang_members),
+                    (1, 4),
+                    "{name}: 4 identical tenants co-launch as one gang"
+                );
+                assert!(report.bcast_dedups > 0, "{name}: ctx broadcasts dedup");
+            }
+            (outs, report.total_s())
+        };
+        let (base_outs, base) = run(SharedCacheMode::Off);
+        let (shared_outs, shared) = run(SharedCacheMode::On);
+        assert_eq!(shared_outs, base_outs, "{name}: sharing never changes a result bit");
+        let win = 1.0 - shared / base;
+        assert!(
+            win >= 0.30,
+            "{name}: sharing win {:.1}% below the 30% bar (shared {:.3} ms vs \
+             share-nothing {:.3} ms)",
+            win * 100.0,
+            shared * 1e3,
+            base * 1e3
+        );
+    }
+}
+
+#[test]
+fn cache_stats_survive_timeline_resets() {
+    // Satellite contract: plan-cache counters are measurement state,
+    // not timeline state — reset_timeline (the measurement boundary)
+    // must not clear them.
+    let mut sys = PimSystem::with_backend(
+        PimConfig::upmem(32),
+        None,
+        backend::make(BackendKind::Seq, 1).unwrap(),
+    );
+    let plan = workloads::job("reduction", 4_000, 0).unwrap();
+    plan(&mut sys).unwrap();
+    sys.run().unwrap();
+    let before = sys.cache_stats();
+    assert!(before.lookups() >= 1, "the reduction planned through the cache");
+    sys.reset_timeline();
+    assert_eq!(sys.cache_stats(), before, "reset_timeline never touches cache stats");
+    assert_eq!(sys.timeline().total_s(), 0.0, "the timeline itself did reset");
 }
 
 #[test]
