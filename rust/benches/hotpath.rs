@@ -16,9 +16,13 @@
 //! Run: `cargo bench --bench hotpath`
 
 use simplepim::backend::{self, BackendKind};
-use simplepim::coordinator::{JobQueue, PimFunc, PimSystem, SharedCacheMode, TransformKind};
+use simplepim::coordinator::{
+    poisson_arrivals, JobOutcome, JobQueue, JobSpec, PimFunc, PimService, PimSystem,
+    ResizePolicy, ServiceConfig, SharedCacheMode, SlaClass, TransformKind,
+};
 use simplepim::pim::{PimConfig, PipelineMode};
 use simplepim::report::bench::{measure, report, Measurement};
+use simplepim::timing::{latency_stats, schedule_waves};
 use simplepim::util::prng;
 use simplepim::workloads::{self, histogram, kmeans, linreg, logreg, reduction, vecadd};
 
@@ -97,8 +101,11 @@ fn bench_backend(
         None => PimConfig::upmem(dpus),
         Some((ch, rk)) => PimConfig::upmem(dpus).with_topology(ch, rk).unwrap(),
     };
-    let mut sys = PimSystem::with_backend(cfg, None, backend::make(kind, threads).unwrap());
-    sys.set_pipeline(pipeline).unwrap();
+    let mut sys = PimSystem::builder(cfg)
+        .backend(backend::make(kind, threads).unwrap())
+        .pipeline(pipeline)
+        .build()
+        .unwrap();
     let (warm, iters) = if quick { (1, 2) } else { (1, 4) };
     let m = match workload {
         "reduction" => {
@@ -509,6 +516,121 @@ fn main() {
         }
     }
 
+    // --- online serving layer (DESIGN.md §17): a deterministic
+    //     Poisson open-loop trace of 24 mixed-priority jobs over 8
+    //     whole-rank partitions of the 2x4@32 machine, fixed vs
+    //     dynamic partitions, with PR 5's batch drain replayed over
+    //     the same width-1 service times as the comparator.  Runs in
+    //     quick mode too; the printed win is the acceptance headline
+    //     rust/tests/serving.rs pins at >= 20% lower p99 sojourn.
+    {
+        println!("\n-- online serving (2x4@32, 24-job poisson trace, 8 partitions) --");
+        let serve_cfg = PimConfig::upmem(256).with_topology(2, 4).unwrap();
+        let partitions = 8;
+        let serve_elems = if quick { 4_096 } else { 16_384 };
+        let serve_jobs = 24usize;
+        let serve_names: Vec<&'static str> =
+            simplepim::workloads::all().iter().map(|w| w.name).collect();
+        let classes = [SlaClass::Interactive, SlaClass::Standard, SlaClass::Batch];
+        let run_trace = |resize: ResizePolicy, arrivals: &[f64]| -> Vec<JobOutcome> {
+            let mut sc = ServiceConfig::new(serve_cfg.clone(), partitions);
+            sc.resize = resize;
+            let svc = PimService::new(sc).unwrap();
+            for (i, &arrival) in arrivals.iter().enumerate() {
+                let name = serve_names[i % serve_names.len()];
+                let spec = JobSpec::builder(&format!("{name}@{i}"))
+                    .plan_boxed(workloads::job(name, serve_elems, i as u64).unwrap())
+                    .class(classes[i % classes.len()])
+                    .arrival_s(arrival)
+                    .build()
+                    .unwrap();
+                svc.submit(spec).unwrap();
+            }
+            svc.quiesce();
+            svc.outcomes()
+                .into_iter()
+                .map(|(n, r)| r.unwrap_or_else(|e| panic!("job `{n}` failed: {e}")))
+                .collect()
+        };
+        // Width-1 service time of the first trace job sets the arrival
+        // rate: two arrivals per service time — light enough that lone
+        // jobs widen, bursty enough that the batch door's wave barrier
+        // bites.
+        let d = run_trace(ResizePolicy::Fixed, &[0.0])[0].duration_s();
+        let arrivals = poisson_arrivals(prng::seed_for(6), serve_jobs, 2.0 / d).unwrap();
+        let (warm, iters) = if quick { (0, 1) } else { (1, 3) };
+        let mut fixed_times: Vec<(f64, f64)> = Vec::new();
+        let mut stats: Vec<(&'static str, f64, f64)> = Vec::new();
+        for (tag, resize) in
+            [("pfixed", ResizePolicy::Fixed), ("pdynamic", ResizePolicy::Dynamic)]
+        {
+            let mut p99 = 0.0f64;
+            let mut jobs_per_s = 0.0f64;
+            let mut launches = 0u64;
+            let m = measure(warm, iters, || {
+                let outs = run_trace(resize, &arrivals);
+                launches = outs.iter().map(|o| o.timeline.launches).sum();
+                let sojourns: Vec<f64> = outs.iter().map(|o| o.sojourn_s()).collect();
+                p99 = latency_stats(&sojourns).unwrap().p99_s;
+                let makespan = outs.iter().fold(0.0f64, |m, o| m.max(o.finish_s));
+                jobs_per_s =
+                    if makespan > 0.0 { outs.len() as f64 / makespan } else { 0.0 };
+                if resize == ResizePolicy::Fixed {
+                    fixed_times =
+                        outs.iter().map(|o| (o.arrival_s, o.duration_s())).collect();
+                }
+            });
+            report(
+                &format!("serve poisson {serve_jobs} jobs [{tag}]"),
+                m,
+                Some((serve_jobs as u64, "job")),
+            );
+            println!(
+                "    modeled p99 sojourn {:.3} ms | {:.0} jobs/s",
+                p99 * 1e3,
+                jobs_per_s
+            );
+            stats.push((tag, p99, jobs_per_s));
+            rows.push(BenchRow {
+                key: format!("serve/poisson/{tag}"),
+                workload: "serve",
+                backend: tag,
+                threads: 1,
+                elems: serve_elems as u64,
+                wall: m,
+                modeled_total_s: p99,
+                modeled_kernel_s: 0.0,
+                launches,
+            });
+        }
+        // PR 5's batch drain over the same width-1 service times.
+        let arr: Vec<f64> = fixed_times.iter().map(|&(a, _)| a).collect();
+        let dur: Vec<f64> = fixed_times.iter().map(|&(_, d)| d).collect();
+        let sched = schedule_waves(&arr, &dur, &mut vec![0.0f64; partitions]);
+        let batch_sojourns: Vec<f64> =
+            sched.finish_s.iter().zip(&arr).map(|(f, a)| f - a).collect();
+        let batch_p99 = latency_stats(&batch_sojourns).unwrap().p99_s;
+        if let Some(&(_, online_p99, online_rate)) =
+            stats.iter().find(|(tag, _, _)| *tag == "pdynamic")
+        {
+            let batch_makespan = sched.finish_s.iter().fold(0.0f64, |m, &f| m.max(f));
+            let batch_rate = if batch_makespan > 0.0 {
+                arr.len() as f64 / batch_makespan
+            } else {
+                0.0
+            };
+            println!(
+                "    online (dynamic) vs batch drain: p99 sojourn {:.3} ms vs {:.3} ms \
+                 ({:.1}% lower) | {:.0} vs {:.0} jobs/s",
+                online_p99 * 1e3,
+                batch_p99 * 1e3,
+                (1.0 - online_p99 / batch_p99) * 100.0,
+                online_rate,
+                batch_rate
+            );
+        }
+    }
+
     if quick {
         write_json(&rows);
         return;
@@ -574,7 +696,7 @@ fn main() {
     }
 
     // --- XLA executor dispatch: vecadd map end-to-end (functional).
-    match PimSystem::new(PimConfig::upmem(dpus)) {
+    match PimSystem::builder(PimConfig::upmem(dpus)).load_runtime().build() {
         Ok(mut sys) => {
             let (x, y) = vecadd::generate(prng::seed_for(2), n);
             sys.scatter("x", &x, 4).unwrap();

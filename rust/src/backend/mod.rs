@@ -290,18 +290,7 @@ pub fn make(kind: BackendKind, threads: usize) -> Result<Box<dyn ExecBackend>> {
     // Validate the override under *every* backend (a garbage value must
     // never be silently green just because seq/gang ignore the knob);
     // only the parallel backend applies it.
-    let merge_threads = match std::env::var("SIMPLEPIM_MERGE_THREADS") {
-        Ok(s) => match s.parse::<usize>() {
-            Ok(t) if t >= 1 => Some(t),
-            _ => {
-                return Err(Error::Config(format!(
-                    "invalid SIMPLEPIM_MERGE_THREADS=`{s}` (expected a positive \
-                     integer; 0 would silently serialize the merge tree)"
-                )))
-            }
-        },
-        Err(_) => None,
-    };
+    let merge_threads = crate::util::settings::merge_threads_from_env()?;
     Ok(match kind {
         BackendKind::Seq => Box::new(SequentialBackend::new()),
         BackendKind::Gang => Box::new(GangBackend::new()),
@@ -327,24 +316,17 @@ pub fn default_threads() -> usize {
 /// `SIMPLEPIM_THREADS=0`) would run the sequential path with every
 /// test green and zero parallel coverage.
 pub fn resolve_env(backend: Option<&str>, threads: Option<&str>) -> Result<(BackendKind, usize)> {
+    use crate::util::settings;
     let kind = match backend {
-        Some(s) => BackendKind::parse(s).map_err(|_| {
-            Error::Config(format!(
-                "invalid SIMPLEPIM_BACKEND=`{s}` (expected seq, gang, or parallel)"
-            ))
-        })?,
+        Some(s) => settings::parse_backend_kind(settings::ENV_BACKEND, s)?,
         None => BackendKind::Seq,
     };
     let threads = match threads {
-        Some(s) => match s.parse::<usize>() {
-            Ok(t) if t >= 1 => t,
-            _ => {
-                return Err(Error::Config(format!(
-                    "invalid SIMPLEPIM_THREADS=`{s}` (expected a positive integer; \
-                     0 would silently run single-threaded)"
-                )))
-            }
-        },
+        Some(s) => settings::parse_positive(
+            settings::ENV_THREADS,
+            s,
+            "0 would silently run single-threaded",
+        )?,
         None => default_threads(),
     };
     Ok((kind, threads))

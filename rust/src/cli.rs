@@ -120,6 +120,25 @@ COMMANDS:
                              changes a result bit, only lowers modeled
                              totals; default off or
                              $SIMPLEPIM_SHARED_CACHE)
+  serve <...>       online serving layer (async submission, DESIGN.md
+                    §17): replay a deterministic Poisson open-loop
+                    trace of mixed-priority jobs through a PimService
+                    and print per-job sojourns, the per-class p50/p99
+                    device report, and the modeled online-vs-batch win
+                    options: --dpus N (default 256) --partitions P
+                             (default 8) --jobs K (default 24; 0 is an
+                             error) --rate R (arrival rate in jobs/s,
+                             default 100) --elems N (default 65536)
+                             --queue-depth D (bounded admission queue,
+                             default 64) --saturation {reject|block}
+                             (what a full queue does to submit;
+                             default reject) --resize {fixed|dynamic}
+                             (merge idle partitions under a lone job
+                             along rank boundaries; default dynamic)
+                             --channels/--ranks/--backend/--threads/
+                             --pipeline/--seed/--shared-cache as in
+                             `run`; serving always runs the
+                             bit-identical host execution engine
   figures <which>   regenerate a paper figure from the timing model
                     which: fig9 fig10 fig11 ablations all
                     options: --csv (emit CSV instead of tables)
@@ -133,7 +152,9 @@ COMMANDS:
                     SIMPLEPIM_REQUIRE_BASELINE=1 (set in CI) makes a
                     bootstrap-placeholder baseline a hard failure
                     instead of a silent pass
-  info              print the machine model   options: --dpus N
+  info              print the machine model and the fully resolved
+                    SIMPLEPIM_* settings table with provenance
+                    (flag > env > default)   options: --dpus N
                     --channels C --ranks R (as in `run`)
   selftest          functional check: XLA path vs host goldens
                     options: --backend --threads --pipeline --seed
@@ -147,6 +168,7 @@ pub fn run() -> Result<()> {
     let args = Args::parse(&argv);
     match args.cmd.as_str() {
         "run" => crate::report::figures::cmd_run(&args),
+        "serve" => crate::report::figures::cmd_serve(&args),
         "figures" => crate::report::figures::cmd_figures(&args),
         "table1" => crate::report::loc::cmd_table1(&args),
         "bench-gate" => crate::report::gate::cmd_bench_gate(&args),
@@ -174,6 +196,24 @@ fn cmd_info(args: &Args) -> Result<()> {
     println!("  DMA                 : {}-byte aligned, <= {} B", cfg.dma_align, cfg.dma_max_bytes);
     println!("  parallel xfer bw    : {:.1} GB/s", cfg.parallel_bw() / 1e9);
     println!("  peak compute        : {:.2} TOPS", cfg.n_dpus as f64 * cfg.freq_hz / 1e12);
+    // The resolved knob table: one row per SIMPLEPIM_* setting with
+    // the layer that won (explicit API arg > CLI flag > env > default).
+    let flags = crate::util::settings::Layer {
+        backend: args.flag("backend").map(str::to_string),
+        threads: args.flag("threads").map(str::to_string),
+        merge_threads: args.flag("merge-threads").map(str::to_string),
+        pipeline: args.flag("pipeline").map(str::to_string),
+        seed: args.flag("seed").map(str::to_string),
+        channels: args.flag("channels").map(str::to_string),
+        ranks: args.flag("ranks").map(str::to_string),
+        shared_cache: args.flag("shared-cache").map(str::to_string),
+        engine: args.flag("engine").map(str::to_string),
+        artifacts: args.flag("artifacts").map(str::to_string),
+    };
+    let settings =
+        crate::util::settings::Settings::resolve(&crate::util::settings::Layer::default(), &flags)?;
+    println!("\nresolved settings (api > flag > env > default):");
+    print!("{}", settings.render_table());
     Ok(())
 }
 

@@ -1,5 +1,5 @@
-//! The multi-tenant job scheduler (DESIGN.md §14): many independent
-//! plan graphs multiplexed over disjoint partitions of one PIM device.
+//! The batch job scheduler (DESIGN.md §14): many independent plan
+//! graphs multiplexed over disjoint partitions of one PIM device.
 //!
 //! The paper's framework serves one host request at a time against the
 //! whole DPU set.  Real PIM deployments multiplex many independent
@@ -13,7 +13,7 @@
 //!   → collectives → gather/free, exactly the single-tenant API);
 //!   [`JobQueue::submit`] enqueues it and returns a [`JobHandle`].
 //! * **execute** — [`JobQueue::wait`] / [`JobQueue::wait_all`] drain the
-//!   queue through the existing [`ExecBackend`] machinery: under the
+//!   queue through the existing `ExecBackend` machinery: under the
 //!   `seq`/`gang` backends jobs run in serial submission order (the
 //!   bit-exact reference); under the `parallel` backend one OS worker
 //!   per partition pulls jobs from the shared queue, each worker
@@ -41,22 +41,28 @@
 //! one modeled ship per batch; and same-kernel jobs admitted at the
 //! same instant on rank-adjacent partitions co-launch as one gang
 //! ([`crate::timing::plan_gangs`]), charging
-//! [`ExecBackend::co_launch_commands`] launch overheads instead of one
+//! `ExecBackend::co_launch_commands` launch overheads instead of one
 //! per member.  Sharing never changes a per-job result bit and only
 //! ever lowers modeled totals: all three passes run deterministically
 //! over the drained batch in submission order, never during the racy
 //! execution itself.
+//!
+//! As of DESIGN.md §17, `JobQueue` is a thin shim: its engine is a
+//! [`ServiceCore`](super::service::ServiceCore) held in batch
+//! admission mode, the same engine that powers the online
+//! [`PimService`](super::PimService).  Batch semantics — racing
+//! workers, post-pass sharing, `schedule_jobs` admission — are
+//! preserved bit-for-bit.
 
-use std::collections::{HashMap, VecDeque};
-use std::sync::{Arc, Mutex};
+use std::sync::Arc;
 
-use crate::backend::{self, BackendKind, ExecBackend};
+use crate::backend::BackendKind;
 use crate::error::{Error, Result};
-use crate::pim::{DpuSet, PimConfig, PipelineMode, Timeline};
-use crate::timing::{plan_gangs, schedule_jobs};
+use crate::pim::{PimConfig, PipelineMode, Timeline};
 
-use super::shared::{CacheStats, SharedCacheStats, SharedPlanCache, SharingLedger};
-use super::PimSystem;
+use super::service::{ServiceCore, SlaClass};
+use super::shared::{CacheStats, SharedCacheStats, SharedPlanCache};
+use super::{ClassReport, PimSystem};
 
 /// Whether a [`JobQueue`] installs the cross-tenant [`SharedPlanCache`]
 /// (and with it broadcast dedup and gang co-launch) for its tenants.
@@ -112,9 +118,10 @@ pub struct JobOutcome {
     pub output: Vec<i32>,
     /// The job's partition-local modeled timeline (its lane charge).
     pub timeline: Timeline,
-    /// Partition that admitted the job.
+    /// Partition that admitted the job (the first lane, for a job
+    /// widened over several).
     pub partition: usize,
-    /// Modeled admission time — the job's queueing delay (batch
+    /// Modeled admission time — arrival plus queueing delay (batch
     /// semantics: every job is submitted at device time zero).
     pub start_s: f64,
     /// Modeled completion time on the partition lane.
@@ -125,17 +132,38 @@ pub struct JobOutcome {
     /// Under a shared cache the hit/miss *attribution* between racing
     /// tenants is scheduling-dependent; the global totals are not.
     pub cache: CacheStats,
+    /// Modeled arrival instant (0.0 under batch semantics).
+    pub arrival_s: f64,
+    /// SLA class the job was admitted under ([`SlaClass::Standard`]
+    /// under batch semantics).
+    pub class: SlaClass,
+    /// Modeled completion deadline, if the submitter set one.
+    pub deadline_s: Option<f64>,
+    /// DPUs the job actually ran on (more than the partition width
+    /// when dynamic resize merged idle neighbours).
+    pub dpus: usize,
 }
 
 impl JobOutcome {
     /// Queueing delay before a partition was free.
     pub fn queued_s(&self) -> f64 {
-        self.start_s
+        self.start_s - self.arrival_s
     }
 
     /// Modeled seconds the job occupied its partition.
     pub fn duration_s(&self) -> f64 {
         self.finish_s - self.start_s
+    }
+
+    /// Submission-to-completion seconds (queueing delay + service).
+    pub fn sojourn_s(&self) -> f64 {
+        self.finish_s - self.arrival_s
+    }
+
+    /// Whether the modeled schedule blew the job's deadline (always
+    /// false when no deadline was set).
+    pub fn missed_deadline(&self) -> bool {
+        self.deadline_s.is_some_and(|d| self.finish_s > d)
     }
 }
 
@@ -165,6 +193,13 @@ pub struct DeviceReport {
     pub gang_members: u64,
     /// Modeled launch-overhead seconds saved by gang co-launch.
     pub colaunch_saved_s: f64,
+    /// Per-SLA-class sojourn statistics (online serving only; empty
+    /// under batch semantics).
+    pub classes: Vec<ClassReport>,
+    /// Jobs that ran widened over merged idle partitions.
+    pub wide_jobs: usize,
+    /// Submissions refused at saturation (online serving only).
+    pub rejected: u64,
 }
 
 impl DeviceReport {
@@ -225,40 +260,39 @@ impl DeviceReport {
                 self.colaunch_saved_s * 1e3,
             ));
         }
+        for c in &self.classes {
+            out.push_str(&format!(
+                "  class {}: {} job(s) | sojourn p50 {:.3} ms | p99 {:.3} ms | max {:.3} ms\n",
+                c.class,
+                c.stats.count,
+                c.stats.p50_s * 1e3,
+                c.stats.p99_s * 1e3,
+                c.stats.max_s * 1e3,
+            ));
+        }
+        if self.wide_jobs > 0 || self.rejected > 0 {
+            out.push_str(&format!(
+                "  serving: {} wide job(s) | {} submission(s) rejected at saturation\n",
+                self.wide_jobs, self.rejected,
+            ));
+        }
         out
     }
 }
 
-/// The job queue: submitted plan graphs, the partition set they are
-/// scheduled over, and the execution configuration every job system is
-/// built with.
+/// The batch job queue: submitted plan graphs, the partition set they
+/// are scheduled over, and the execution configuration every job
+/// system is built with.  A thin shim over the serving engine
+/// ([`ServiceCore`]) held in batch admission mode.
 pub struct JobQueue {
-    sets: Vec<DpuSet>,
-    part_cfg: PimConfig,
-    backend: BackendKind,
-    threads: usize,
-    pipeline: PipelineMode,
-    names: Vec<String>,
-    /// Not-yet-executed plans, aligned with `names` (taken at drain).
-    pending: Vec<Option<JobPlan>>,
-    /// Per-job outcome or error text, aligned with `names`.
-    results: Vec<Option<std::result::Result<JobOutcome, String>>>,
-    /// Per-partition modeled busy clocks (admission state).
-    lanes: Vec<f64>,
-    /// The probed backend instance, kept as the authority for
-    /// [`ExecBackend::co_launch_commands`] during the gang pass.
-    probe: Box<dyn ExecBackend>,
-    /// Cross-tenant shared plan cache; `None` = share-nothing.
-    shared: Option<Arc<SharedPlanCache>>,
-    /// Co-launch gangs formed across drains so far.
-    gangs: usize,
+    core: ServiceCore,
 }
 
 impl JobQueue {
-    /// Build a queue over `partitions` equal [`DpuSet`]s of `cfg`,
-    /// running every job with the given backend/pipeline selection.
-    /// Partition counts that do not divide the DPU count, and invalid
-    /// worker counts, are explicit [`Error::Config`]s.
+    /// Build a queue over `partitions` equal [`DpuSet`](crate::pim::DpuSet)s
+    /// of `cfg`, running every job with the given backend/pipeline
+    /// selection.  Partition counts that do not divide the DPU count,
+    /// and invalid worker counts, are explicit [`Error::Config`]s.
     pub fn new(
         cfg: PimConfig,
         partitions: usize,
@@ -266,26 +300,8 @@ impl JobQueue {
         threads: usize,
         pipeline: PipelineMode,
     ) -> Result<JobQueue> {
-        let sets = DpuSet::split(&cfg, partitions)?;
-        // Probe the backend build once so misconfiguration fails at
-        // queue construction, not inside a worker thread mid-drain;
-        // the instance is kept to answer `co_launch_commands`.
-        let probe = backend::make(backend, threads)?;
-        let part_cfg = sets[0].cfg().clone();
-        let lanes = vec![0.0; sets.len()];
         Ok(JobQueue {
-            sets,
-            part_cfg,
-            backend,
-            threads,
-            pipeline,
-            names: Vec::new(),
-            pending: Vec::new(),
-            results: Vec::new(),
-            lanes,
-            probe,
-            shared: None,
-            gangs: 0,
+            core: ServiceCore::batch(cfg, partitions, backend, threads, pipeline)?,
         })
     }
 
@@ -294,57 +310,48 @@ impl JobQueue {
     /// already installed (so repeated enabling keeps warm entries);
     /// `Off` drops back to share-nothing.
     pub fn set_sharing(&mut self, mode: SharedCacheMode) {
-        match mode {
-            SharedCacheMode::On => {
-                if self.shared.is_none() {
-                    self.shared = Some(Arc::new(SharedPlanCache::new()));
-                }
-            }
-            SharedCacheMode::Off => self.shared = None,
-        }
+        self.core.set_sharing(mode);
     }
 
     /// Install a specific shared cache (e.g. one spanning several
     /// queues); implies sharing on.
     pub fn set_shared_cache(&mut self, cache: Arc<SharedPlanCache>) {
-        self.shared = Some(cache);
+        self.core.set_shared_cache(cache);
     }
 
     /// The installed shared plan cache, if sharing is on.
     pub fn shared_cache(&self) -> Option<&Arc<SharedPlanCache>> {
-        self.shared.as_ref()
+        self.core.shared_cache()
     }
 
     /// Global shared-cache counters (hits/misses/evictions/entries
     /// across every tenant), `None` under share-nothing.
     pub fn shared_cache_stats(&self) -> Option<SharedCacheStats> {
-        self.shared.as_ref().map(|c| c.stats())
+        self.core.shared_cache_stats()
     }
 
     /// Partitions the device was split into.
     pub fn partitions(&self) -> usize {
-        self.sets.len()
+        self.core.partitions()
     }
 
     /// DPUs per partition.
     pub fn partition_dpus(&self) -> usize {
-        self.part_cfg.n_dpus
+        self.core.partition_dpus()
     }
 
     /// The partition-local machine view jobs run against.
     pub fn partition_cfg(&self) -> &PimConfig {
-        &self.part_cfg
+        self.core.partition_cfg()
     }
 
     /// Enqueue an already-boxed job plan under `name` (no re-boxing —
     /// the path `workloads::job` results take); returns its handle.
     /// Nothing executes until [`Self::wait`] / [`Self::wait_all`].
     pub fn submit_plan(&mut self, name: &str, plan: JobPlan) -> JobHandle {
-        let idx = self.names.len();
-        self.names.push(name.to_string());
-        self.pending.push(Some(plan));
-        self.results.push(None);
-        JobHandle { idx }
+        JobHandle {
+            idx: self.core.submit_batch(name, plan),
+        }
     }
 
     /// Enqueue a job closure under `name`; returns its handle.
@@ -357,17 +364,17 @@ impl JobQueue {
 
     /// Drain the queue (if needed) and return one job's outcome.
     pub fn wait(&mut self, handle: &JobHandle) -> Result<&JobOutcome> {
-        if handle.idx >= self.names.len() {
+        if handle.idx >= self.core.job_count() {
             return Err(Error::msg(format!("unknown job handle #{}", handle.idx)));
         }
-        if self.results[handle.idx].is_none() {
-            self.drain()?;
+        if self.core.result(handle.idx).is_none() {
+            self.core.drain_batch()?;
         }
-        match self.results[handle.idx].as_ref().expect("drained above") {
+        match self.core.result(handle.idx).expect("drained above") {
             Ok(outcome) => Ok(outcome),
             Err(e) => Err(Error::msg(format!(
                 "job `{}` failed: {e}",
-                self.names[handle.idx]
+                self.core.name(handle.idx)
             ))),
         }
     }
@@ -375,16 +382,17 @@ impl JobQueue {
     /// Drain the queue and return every outcome in submission order;
     /// the first failed job (if any) is the error.
     pub fn wait_all(&mut self) -> Result<Vec<&JobOutcome>> {
-        self.drain()?;
-        for (i, r) in self.results.iter().enumerate() {
-            if let Some(Err(e)) = r {
-                return Err(Error::msg(format!("job `{}` failed: {e}", self.names[i])));
+        self.core.drain_batch()?;
+        for i in 0..self.core.job_count() {
+            if let Some(Err(e)) = self.core.result(i) {
+                return Err(Error::msg(format!(
+                    "job `{}` failed: {e}",
+                    self.core.name(i)
+                )));
             }
         }
-        Ok(self
-            .results
-            .iter()
-            .map(|r| match r.as_ref().expect("drained above") {
+        Ok((0..self.core.job_count())
+            .map(|i| match self.core.result(i).expect("drained above") {
                 Ok(outcome) => outcome,
                 Err(_) => unreachable!("checked above"),
             })
@@ -393,232 +401,9 @@ impl JobQueue {
 
     /// The device schedule so far (call after a drain for final lanes).
     pub fn device_report(&self) -> DeviceReport {
-        let makespan = self.lanes.iter().fold(0.0f64, |a, &b| a.max(b));
-        let busy: f64 = self.lanes.iter().sum();
-        let mut jobs = 0;
-        let (mut dedups, mut dedup_saved) = (0u64, 0.0f64);
-        let (mut members, mut colaunch_saved) = (0u64, 0.0f64);
-        for r in &self.results {
-            if let Some(Ok(o)) = r {
-                jobs += 1;
-                dedups += o.timeline.bcast_dedups;
-                dedup_saved += o.timeline.bcast_dedup_saved_s;
-                members += o.timeline.colaunched;
-                colaunch_saved += o.timeline.colaunch_saved_s;
-            }
-        }
-        DeviceReport {
-            partitions: self.sets.len(),
-            dpus_per_partition: self.part_cfg.n_dpus,
-            jobs,
-            lane_busy_s: self.lanes.clone(),
-            busy_s: busy,
-            makespan_s: makespan,
-            bcast_dedups: dedups,
-            bcast_dedup_saved_s: dedup_saved,
-            gangs: self.gangs,
-            gang_members: members,
-            colaunch_saved_s: colaunch_saved,
-        }
-    }
-
-    /// Execute every pending job, then admit the batch onto the
-    /// partition lanes.
-    ///
-    /// Functional execution and modeled admission are deliberately
-    /// decoupled: equal partitions make a job's output and lane charge
-    /// independent of *which* partition runs it, so workers may race
-    /// over the shared queue while the schedule is recomputed
-    /// deterministically from submission order and modeled durations.
-    /// The cross-tenant sharing passes (dedup, gangs) run on the
-    /// drained batch for the same reason.
-    fn drain(&mut self) -> Result<()> {
-        let todo: Vec<(usize, JobPlan)> = self
-            .pending
-            .iter_mut()
-            .enumerate()
-            .filter_map(|(i, p)| p.take().map(|plan| (i, plan)))
-            .collect();
-        if todo.is_empty() {
-            return Ok(());
-        }
-        let workers = if self.backend == BackendKind::Parallel {
-            self.sets.len().min(todo.len()).max(1)
-        } else {
-            // seq/gang: the serial reference order (one worker drains
-            // the queue front-to-back, i.e. submission order).
-            1
-        };
-        let queue = Mutex::new(VecDeque::from(todo));
-        let done: Mutex<Vec<(usize, Exec)>> = Mutex::new(Vec::new());
-        let cfg = &self.part_cfg;
-        let topo = self.part_cfg.topology_desc();
-        let kind = self.backend;
-        let threads = self.threads;
-        let pipeline = self.pipeline;
-        let shared = &self.shared;
-        std::thread::scope(|s| {
-            for wid in 0..workers {
-                let (queue, done, topo) = (&queue, &done, &topo);
-                s.spawn(move || {
-                    // One backend instance per worker, reused across
-                    // every job it runs, so the arena staging pools
-                    // amortize over the worker's whole job stream.
-                    let mut cached: Option<Box<dyn ExecBackend>> = None;
-                    loop {
-                        let job = queue.lock().expect("job queue lock").pop_front();
-                        let Some((idx, plan)) = job else { break };
-                        let built = match cached.take() {
-                            Some(b) => Ok(b),
-                            None => backend::make(kind, threads),
-                        };
-                        let res = match built {
-                            Err(e) => Err(e.to_string()),
-                            Ok(b) => {
-                                let mut sys = PimSystem::with_backend_shared(
-                                    cfg.clone(),
-                                    None,
-                                    b,
-                                    shared.clone(),
-                                );
-                                let run = (|| -> Result<Vec<i32>> {
-                                    sys.set_pipeline(pipeline)?;
-                                    let out = plan(&mut sys)?;
-                                    // Drain deferred work so the job's
-                                    // timeline is complete before it
-                                    // becomes the lane charge.
-                                    sys.run()?;
-                                    Ok(out)
-                                })();
-                                let timeline = sys.timeline();
-                                let cache = sys.cache_stats();
-                                let ledger = sys.take_sharing_ledger();
-                                cached = Some(sys.into_backend());
-                                run.map(|out| (out, timeline, cache, ledger))
-                                    .map_err(|e| e.to_string())
-                            }
-                        };
-                        // Attribute failures to the worker's partition
-                        // lane and the sub-machine shape it ran.
-                        let res = res.map_err(|e| format!("partition {wid} ({topo}): {e}"));
-                        done.lock().expect("job result lock").push((idx, res));
-                    }
-                });
-            }
-        });
-        let mut done = done.into_inner().expect("workers joined");
-        done.sort_by_key(|(idx, _)| *idx);
-
-        // Cross-tenant sharing post-passes (no-ops under share-nothing).
-        self.apply_sharing(&mut done);
-
-        // Deterministic earliest-free admission over the successful
-        // jobs, in submission order, continuing the existing lanes.
-        let durations: Vec<f64> = done
-            .iter()
-            .filter_map(|(_, r)| r.as_ref().ok().map(|(_, t, _, _)| t.total_s()))
-            .collect();
-        let sched = schedule_jobs(&durations, &mut self.lanes);
-        let mut admitted = 0;
-        for (idx, res) in done {
-            let stored = match res {
-                Ok((output, timeline, cache, _)) => {
-                    let outcome = JobOutcome {
-                        name: self.names[idx].clone(),
-                        output,
-                        timeline,
-                        partition: sched.partition[admitted],
-                        start_s: sched.start_s[admitted],
-                        finish_s: sched.finish_s[admitted],
-                        cache,
-                    };
-                    admitted += 1;
-                    Ok(outcome)
-                }
-                Err(e) => Err(e),
-            };
-            self.results[idx] = Some(stored);
-        }
-        Ok(())
-    }
-
-    /// The dedup and gang passes (DESIGN.md §16), applied to a drained
-    /// batch in submission order.  Ledgers are only populated when a
-    /// shared cache is installed, so under share-nothing both passes
-    /// see empty inputs and every timeline stays untouched.
-    ///
-    /// *Broadcast dedup*: a read-only ctx payload shipped by M jobs of
-    /// the batch (same content hash, and — partitions being equal —
-    /// the same modeled ship time) costs one ship total; each of the M
-    /// charges keeps `1/M` of its cost and saves the even share
-    /// `seconds * (M-1)/M`, so identical jobs stay identical and the
-    /// batch total drops by exactly M-1 ships.
-    ///
-    /// *Gang co-launch*: [`plan_gangs`] tentatively admits the batch,
-    /// groups jobs by (kernel-chain fingerprint, bit-identical start),
-    /// forms gangs from rank-adjacent partition runs, and prices them
-    /// through the probed backend's
-    /// [`ExecBackend::co_launch_commands`] — the seq reference walk
-    /// answers `members` and saves nothing, by design.
-    fn apply_sharing(&mut self, done: &mut [(usize, Exec)]) {
-        if self.shared.is_none() {
-            return;
-        }
-        let mut counts: HashMap<u64, usize> = HashMap::new();
-        for (_, r) in done.iter() {
-            if let Ok((_, _, _, ledger)) = r {
-                for b in &ledger.bcasts {
-                    *counts.entry(b.content).or_insert(0) += 1;
-                }
-            }
-        }
-        for (_, r) in done.iter_mut() {
-            if let Ok((_, t, _, ledger)) = r {
-                for b in &ledger.bcasts {
-                    let m = counts[&b.content];
-                    if m >= 2 {
-                        t.bcast_dedup_saved_s += b.seconds * (m - 1) as f64 / m as f64;
-                        t.bcast_dedups += 1;
-                    }
-                }
-            }
-        }
-
-        let ok: Vec<usize> = done
-            .iter()
-            .enumerate()
-            .filter(|(_, (_, r))| r.is_ok())
-            .map(|(i, _)| i)
-            .collect();
-        let mut durations = Vec::with_capacity(ok.len());
-        let mut sigs = Vec::with_capacity(ok.len());
-        let mut launch_s = Vec::with_capacity(ok.len());
-        for &i in &ok {
-            let Ok((_, t, _, ledger)) = &done[i].1 else { unreachable!("filtered Ok") };
-            durations.push(t.total_s());
-            sigs.push(ledger.sig);
-            // `launch_s` is the lane's accumulated launch overhead —
-            // exactly what a gang collapses to `cmds` shares.
-            launch_s.push(t.launch_s);
-        }
-        let gp = plan_gangs(&durations, &sigs, &launch_s, &self.lanes, |g| {
-            self.probe.co_launch_commands(g)
-        });
-        for (k, &i) in ok.iter().enumerate() {
-            if gp.saved_s[k] > 0.0 {
-                let Ok((_, t, _, _)) = &mut done[i].1 else { unreachable!("filtered Ok") };
-                t.colaunch_saved_s += gp.saved_s[k];
-                t.colaunched = 1;
-            }
-        }
-        self.gangs += gp.gangs;
+        self.core.device_report()
     }
 }
-
-/// One executed (not yet admitted) job: output words, partition-local
-/// timeline, per-tenant cache counters, and the sharing ledger the
-/// post-passes consume.
-type Exec = std::result::Result<(Vec<i32>, Timeline, CacheStats, SharingLedger), String>;
 
 #[cfg(test)]
 mod tests {

@@ -30,8 +30,17 @@
 //! per-DPU loops execute — sequential walk, gang batches, or a
 //! rank-sharded `std::thread::scope` worker pool — is the
 //! [`crate::backend`] layer's choice (DESIGN.md §11), selected per
-//! system via [`PimSystem::with_backend`] or the CLI's `--backend` /
+//! system via [`PimSystemBuilder::backend`] or the CLI's `--backend` /
 //! `--threads` flags.
+//!
+//! Systems are assembled through one front door,
+//! [`PimSystem::builder`]: configuration (runtime, backend, pipeline,
+//! shared cache) is stated up front and validated in one place, and
+//! both the CLI and the serving layer ([`service::PimService`]) build
+//! through it.  The historical constructor zoo
+//! (`new`/`with_backend`/`with_backend_shared`) and the post-hoc
+//! mutators (`set_backend`/`set_shared_cache`) survive as deprecated
+//! delegates.
 
 pub mod collectives;
 pub mod comm;
@@ -45,12 +54,17 @@ pub mod optimizer;
 pub mod plan;
 pub mod planner;
 pub mod scheduler;
+pub mod service;
 pub mod shared;
 
 pub use handle::{Handle, PimFunc, TransformKind};
 pub use jobs::{DeviceReport, JobHandle, JobOutcome, JobPlan, JobQueue, SharedCacheMode};
 pub use management::{ArrayMeta, Layout, Management};
 pub use plan::{NodeState, PlanNode, PlanOp, PlanStats};
+pub use service::{
+    poisson_arrivals, ClassReport, JobSpec, JobSpecBuilder, JobTicket, PimService, ResizePolicy,
+    SaturationPolicy, ServiceConfig, SlaClass, TicketStatus,
+};
 pub use shared::{CacheStats, SharedCacheStats, SharedPlanCache};
 
 use std::sync::Arc;
@@ -96,93 +110,248 @@ pub struct PimSystem {
     pub last_red_variant: Option<(ReduceVariant, u32)>,
 }
 
+/// How a [`PimSystemBuilder`] decides on the AOT runtime.
+enum RuntimeSpec {
+    /// Load from the default artifact directory; failure is the
+    /// builder's error.
+    Load,
+    /// Try to load, silently falling back to host-golden execution.
+    LoadOrHost,
+    /// Use exactly this runtime decision (`None` = host-only).
+    Explicit(Option<Runtime>),
+}
+
+/// How a [`PimSystemBuilder`] decides on the execution backend.
+enum BackendSpec {
+    /// `SIMPLEPIM_BACKEND` / `SIMPLEPIM_THREADS`, defaulting to the
+    /// sequential walk — what lets CI run the whole suite under
+    /// `--backend parallel` without touching test code.
+    Env,
+    /// An already-built instance (arena pools and counters carried in).
+    Instance(Box<dyn ExecBackend>),
+    /// Build `kind` with `threads` workers at `build()` time.
+    Kind(BackendKind, usize),
+}
+
+/// One front door for assembling a [`PimSystem`] (DESIGN.md §17): the
+/// runtime decision, the execution backend, the pipelined transfer
+/// mode, and the cross-tenant shared plan cache are all stated here
+/// and validated by [`Self::build`].
+///
+/// Environment coupling is explicit: with no backend stated, the
+/// backend and pipeline come from `SIMPLEPIM_BACKEND` /
+/// `SIMPLEPIM_THREADS` / `SIMPLEPIM_PIPELINE` (resolved through
+/// [`crate::util::settings`]); stating a backend opts the system out
+/// of the environment entirely (pipeline defaults to `Off` unless
+/// stated), so callers that validated their own selection — the
+/// serving layer's admission engine — cannot be failed mid-run by
+/// garbage in the environment.
+pub struct PimSystemBuilder {
+    cfg: PimConfig,
+    runtime: RuntimeSpec,
+    backend: BackendSpec,
+    pipeline: Option<PipelineMode>,
+    shared: Option<Arc<SharedPlanCache>>,
+}
+
+impl PimSystemBuilder {
+    /// Load the AOT runtime from the default artifact directory
+    /// (`$SIMPLEPIM_ARTIFACTS` or `./artifacts`); a missing or
+    /// malformed manifest fails `build()`.
+    pub fn load_runtime(mut self) -> Self {
+        self.runtime = RuntimeSpec::Load;
+        self
+    }
+
+    /// Load the AOT runtime if available, else fall back to the
+    /// bit-identical host goldens.
+    pub fn load_runtime_or_host(mut self) -> Self {
+        self.runtime = RuntimeSpec::LoadOrHost;
+        self
+    }
+
+    /// Use exactly this runtime decision (`None` = host-only, the
+    /// default).
+    pub fn runtime(mut self, runtime: Option<Runtime>) -> Self {
+        self.runtime = RuntimeSpec::Explicit(runtime);
+        self
+    }
+
+    /// Use an already-built execution backend instance (its
+    /// `backend::arena` staging pools and counters carry over — the
+    /// serving layer reuses one instance across a worker's whole job
+    /// stream).  Opts out of the `SIMPLEPIM_*` environment.
+    pub fn backend(mut self, backend: Box<dyn ExecBackend>) -> Self {
+        self.backend = BackendSpec::Instance(backend);
+        self
+    }
+
+    /// Build a backend of `kind` with `threads` workers at `build()`
+    /// time (invalid combinations fail there).  Opts out of the
+    /// `SIMPLEPIM_*` environment.
+    pub fn backend_kind(mut self, kind: BackendKind, threads: usize) -> Self {
+        self.backend = BackendSpec::Kind(kind, threads);
+        self
+    }
+
+    /// Select the pipelined transfer mode explicitly.
+    pub fn pipeline(mut self, mode: PipelineMode) -> Self {
+        self.pipeline = Some(mode);
+        self
+    }
+
+    /// Install a cross-tenant shared plan cache handle (DESIGN.md §16);
+    /// `None` — the default — is the private single-tenant cache.
+    pub fn shared_cache(mut self, shared: Option<Arc<SharedPlanCache>>) -> Self {
+        self.shared = shared;
+        self
+    }
+
+    /// Validate the configuration and assemble the system.
+    pub fn build(self) -> Result<PimSystem> {
+        let runtime = match self.runtime {
+            RuntimeSpec::Load => Some(Runtime::load(Runtime::default_dir())?),
+            RuntimeSpec::LoadOrHost => Runtime::load(Runtime::default_dir()).ok(),
+            RuntimeSpec::Explicit(rt) => rt,
+        };
+        let (backend, explicit) = match self.backend {
+            BackendSpec::Env => {
+                let kind = std::env::var(crate::util::settings::ENV_BACKEND).ok();
+                let threads = std::env::var(crate::util::settings::ENV_THREADS).ok();
+                let (kind, threads) =
+                    crate::backend::resolve_env(kind.as_deref(), threads.as_deref())?;
+                (crate::backend::make(kind, threads)?, false)
+            }
+            BackendSpec::Instance(b) => (b, true),
+            BackendSpec::Kind(kind, threads) => (crate::backend::make(kind, threads)?, true),
+        };
+        let pipeline = match self.pipeline {
+            Some(mode) => mode,
+            // An explicitly-chosen backend opts out of the environment
+            // wholesale; otherwise the pipeline knob follows it too.
+            None if explicit => PipelineMode::Off,
+            None => crate::util::settings::pipeline_from_env()?,
+        };
+        let mut sys = assemble(self.cfg, runtime, backend, self.shared);
+        sys.pipeline = pipeline;
+        Ok(sys)
+    }
+}
+
+/// The one place a [`PimSystem`] is actually put together (every
+/// constructor — current and deprecated — funnels here).
+fn assemble(
+    cfg: PimConfig,
+    runtime: Option<Runtime>,
+    backend: Box<dyn ExecBackend>,
+    shared: Option<Arc<SharedPlanCache>>,
+) -> PimSystem {
+    let tasklets = cfg.default_tasklets;
+    let mut engine = plan::PlanEngine::new();
+    engine.shared = shared;
+    PimSystem {
+        machine: PimMachine::new(cfg),
+        management: Management::new(),
+        runtime,
+        backend,
+        engine,
+        pipeline: PipelineMode::Off,
+        opts: OptFlags::simplepim(),
+        tasklets,
+        dma_policy: DmaPolicy::Dynamic,
+        red_variant_override: None,
+        last_red_variant: None,
+    }
+}
+
 impl PimSystem {
+    /// Start building a system over `cfg` (host-only, environment
+    /// backend/pipeline, no shared cache until stated otherwise).
+    pub fn builder(cfg: PimConfig) -> PimSystemBuilder {
+        PimSystemBuilder {
+            cfg,
+            runtime: RuntimeSpec::Explicit(None),
+            backend: BackendSpec::Env,
+            pipeline: None,
+            shared: None,
+        }
+    }
+
     /// Build a system with the AOT runtime loaded from the default
     /// artifact directory (`$SIMPLEPIM_ARTIFACTS` or `./artifacts`).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `PimSystem::builder(cfg).load_runtime().build()`"
+    )]
     pub fn new(cfg: PimConfig) -> Result<Self> {
-        let runtime = Runtime::load(Runtime::default_dir())?;
-        Ok(Self::with_runtime(cfg, Some(runtime)))
+        Self::builder(cfg).load_runtime().build()
     }
 
     /// Build a system that executes kernels with the bit-identical host
     /// goldens instead of PJRT (no artifacts needed; used by unit tests
     /// and available as a deployment mode).
     pub fn host_only(cfg: PimConfig) -> Self {
-        Self::with_runtime(cfg, None)
+        // Environment garbage aborts loudly, exactly like the historical
+        // `backend::from_env` path this infallible signature wrapped.
+        Self::builder(cfg).build().unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// [`Self::new`], silently falling back to the host execution
-    /// engine when the PJRT runtime is unavailable (missing artifacts
-    /// or a build without the `pjrt` feature).  The convenience
-    /// constructor examples and tests use.
+    /// [`Self::builder`] + `load_runtime`, silently falling back to the
+    /// host execution engine when the PJRT runtime is unavailable
+    /// (missing artifacts or a build without the `pjrt` feature).  The
+    /// convenience constructor examples and tests use.
     pub fn new_or_host(cfg: PimConfig) -> Self {
-        match Self::new(cfg.clone()) {
-            Ok(s) => s,
-            Err(_) => Self::host_only(cfg),
-        }
+        Self::builder(cfg)
+            .load_runtime_or_host()
+            .build()
+            .unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Build with an explicit (possibly shared) runtime decision.  The
     /// execution backend comes from the environment
     /// (`SIMPLEPIM_BACKEND` / `SIMPLEPIM_THREADS`), defaulting to the
-    /// sequential walk; see [`Self::with_backend`] /
-    /// [`Self::set_backend`] for explicit control.
+    /// sequential walk.
     pub fn with_runtime(cfg: PimConfig, runtime: Option<Runtime>) -> Self {
-        let mut sys = Self::with_backend(cfg, runtime, crate::backend::from_env());
-        sys.pipeline = crate::pim::pipeline::mode_from_env();
-        sys
+        Self::builder(cfg).runtime(runtime).build().unwrap_or_else(|e| panic!("{e}"))
     }
 
-    /// Build with an explicit execution backend
-    /// (`backend::make(BackendKind::Parallel, threads)` for the
-    /// rank-sharded worker pool).  Consults no `SIMPLEPIM_*`
-    /// environment at all (pipeline defaults to `Off`; use
-    /// [`Self::set_pipeline`]), so callers that validated their own
-    /// selection — the job scheduler's per-partition workers — cannot
-    /// be panicked mid-run by garbage in the environment (and skip a
-    /// discarded backend construction per system).
+    /// Build with an explicit execution backend.  Consults no
+    /// `SIMPLEPIM_*` environment at all (pipeline defaults to `Off`).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `PimSystem::builder(cfg).runtime(rt).backend(b).build()`"
+    )]
     pub fn with_backend(
         cfg: PimConfig,
         runtime: Option<Runtime>,
         backend: Box<dyn ExecBackend>,
     ) -> Self {
-        Self::with_backend_shared(cfg, runtime, backend, None)
+        assemble(cfg, runtime, backend, None)
     }
 
-    /// [`Self::with_backend`] with a cross-tenant shared plan cache
-    /// handle installed at construction (DESIGN.md §16).  `None` is
-    /// exactly [`Self::with_backend`] — the private single-tenant
-    /// cache.  The job scheduler's partition workers build their
-    /// systems through this so every tenant of a batch consults one
-    /// cache.
+    /// `with_backend` with a cross-tenant shared plan cache handle
+    /// installed at construction (DESIGN.md §16).
+    #[deprecated(
+        since = "0.3.0",
+        note = "use `PimSystem::builder(cfg).runtime(rt).backend(b).shared_cache(c).build()`"
+    )]
     pub fn with_backend_shared(
         cfg: PimConfig,
         runtime: Option<Runtime>,
         backend: Box<dyn ExecBackend>,
         shared: Option<Arc<SharedPlanCache>>,
     ) -> Self {
-        let tasklets = cfg.default_tasklets;
-        let mut engine = plan::PlanEngine::new();
-        engine.shared = shared;
-        PimSystem {
-            machine: PimMachine::new(cfg),
-            management: Management::new(),
-            runtime,
-            backend,
-            engine,
-            pipeline: PipelineMode::Off,
-            opts: OptFlags::simplepim(),
-            tasklets,
-            dma_policy: DmaPolicy::Dynamic,
-            red_variant_override: None,
-            last_red_variant: None,
-        }
+        assemble(cfg, runtime, backend, shared)
     }
 
     /// Install (or remove) the cross-tenant shared plan cache.  Safe at
     /// any point: sharing never changes a result bit, only where
     /// reduction plans are looked up and whether the sharing ledger
     /// records.
+    #[deprecated(
+        since = "0.3.0",
+        note = "state the cache at construction: `PimSystem::builder(cfg).shared_cache(c).build()`"
+    )]
     pub fn set_shared_cache(&mut self, shared: Option<Arc<SharedPlanCache>>) {
         self.engine.shared = shared;
     }
@@ -220,6 +389,10 @@ impl PimSystem {
 
     /// Swap the execution backend (results and modeled time are
     /// backend-invariant, so this is safe at any point).
+    #[deprecated(
+        since = "0.3.0",
+        note = "state the backend at construction: `PimSystem::builder(cfg).backend(b).build()`"
+    )]
     pub fn set_backend(&mut self, backend: Box<dyn ExecBackend>) {
         self.backend = backend;
     }

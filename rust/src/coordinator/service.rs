@@ -1,0 +1,1438 @@
+//! The online serving layer (DESIGN.md §17): asynchronous job
+//! submission with priorities, backpressure, and dynamic partitions.
+//!
+//! PR 5's [`JobQueue`](super::JobQueue) models a *batch* device: every
+//! tenant is submitted up front, the whole set drains at once, and the
+//! schedule is computed after the fact.  Real PIM deployments serve an
+//! *open* arrival stream — UPMEM's own API is asynchronous at its core
+//! (`dpu_launch(DPU_ASYNCHRONOUS)` returns immediately and the host
+//! polls or syncs later), and a resident accelerator service admits
+//! work as it arrives rather than in drains.  [`PimService`] is that
+//! front door:
+//!
+//! * **submit** — [`PimService::submit`] takes a [`JobSpec`] (name,
+//!   plan closure, SLA class, modeled arrival instant, optional
+//!   deadline) and returns a [`JobTicket`] immediately.  Tickets are
+//!   pollable ([`PimService::poll`]) and awaitable
+//!   ([`PimService::wait`]) from any thread; the service is `Sync` and
+//!   many producers may race `submit` (modeled arrivals must be
+//!   submitted in nondecreasing order — the stream is a trace, not a
+//!   wall clock).
+//! * **admit** — a deterministic virtual-time engine replays the
+//!   arrival trace: whenever a partition lane frees, the
+//!   highest-priority *arrived* job wins the lane
+//!   (ties: earlier arrival, then submission order).  Admission is
+//!   incremental — each `submit` advances the engine up to the new
+//!   arrival's instant, so earlier jobs execute eagerly exactly as an
+//!   async launch would.
+//! * **backpressure** — the waiting queue is bounded
+//!   ([`ServiceConfig::queue_depth`]).  At saturation,
+//!   [`SaturationPolicy::Reject`] fails the submit with
+//!   [`Error::Saturated`]; [`SaturationPolicy::Block`] drains inline
+//!   until space frees (the modeled analogue of a blocking submit).
+//! * **resize** — under [`ResizePolicy::Dynamic`], a job admitted
+//!   while the queue is otherwise empty widens onto every adjacent
+//!   idle partition whose union respects rank boundaries
+//!   ([`DpuSet::merge`]), then the lanes split back as load returns.
+//!   A lone job on an idle device gets the whole machine, exactly like
+//!   the paper's single-tenant mode.
+//!
+//! Cross-tenant sharing (DESIGN.md §16) carries over with *rolling*
+//! semantics: a broadcast payload stays resident once shipped, so a
+//! later identical ship saves its full cost (the batch scheduler's
+//! even split only applies within one drain); gangs form online from
+//! same-kernel jobs admitted at the same instant on adjacent lanes and
+//! are flushed — retroactively shortening their members — as soon as a
+//! non-matching admission closes the window.
+//!
+//! The batch scheduler is now a thin shim: [`super::JobQueue`] holds a
+//! [`ServiceCore`] in batch mode, which runs PR 5's drain verbatim —
+//! racing workers, post-pass sharing, `schedule_jobs` admission — so
+//! every batch result and modeled total is bit-identical.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::fmt;
+use std::sync::{Arc, Mutex};
+
+use crate::backend::{self, BackendKind, ExecBackend};
+use crate::error::{Error, Result};
+use crate::pim::{DpuSet, PimConfig, PipelineMode, Timeline};
+use crate::timing::{latency_stats, plan_gangs, LatencyStats};
+use crate::util::prng::Prng;
+
+use super::jobs::{DeviceReport, JobOutcome, JobPlan, SharedCacheMode};
+use super::shared::{CacheStats, SharedCacheStats, SharedPlanCache, SharingLedger};
+use super::PimSystem;
+
+/// Service-level agreement class of a submitted job.  Admission is
+/// strict-priority by class (non-preemptive): when a lane frees, the
+/// best *arrived* job by `(class, arrival, submission order)` wins.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SlaClass {
+    /// Latency-sensitive; always admitted first.
+    Interactive,
+    /// The default service class.
+    #[default]
+    Standard,
+    /// Throughput work; yields to everything else.
+    Batch,
+}
+
+impl SlaClass {
+    /// Admission rank (lower admits first).
+    pub fn rank(&self) -> u8 {
+        match self {
+            SlaClass::Interactive => 0,
+            SlaClass::Standard => 1,
+            SlaClass::Batch => 2,
+        }
+    }
+
+    /// Parse a `--class` / trace-file class name.
+    pub fn parse(s: &str) -> Result<SlaClass> {
+        match s.to_ascii_lowercase().as_str() {
+            "interactive" => Ok(SlaClass::Interactive),
+            "standard" => Ok(SlaClass::Standard),
+            "batch" => Ok(SlaClass::Batch),
+            other => Err(Error::Config(format!(
+                "invalid SLA class `{other}` (expected interactive, standard, or batch)"
+            ))),
+        }
+    }
+}
+
+impl fmt::Display for SlaClass {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            SlaClass::Interactive => "interactive",
+            SlaClass::Standard => "standard",
+            SlaClass::Batch => "batch",
+        })
+    }
+}
+
+/// What `submit` does when the bounded waiting queue is full.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SaturationPolicy {
+    /// Fail the submit with [`Error::Saturated`]; the job is counted
+    /// in [`DeviceReport::rejected`] and never gets a ticket.
+    #[default]
+    Reject,
+    /// Drain the engine inline until a slot frees, then admit (the
+    /// modeled analogue of a blocking submit call).
+    Block,
+}
+
+/// Whether idle partitions are merged under a lone job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum ResizePolicy {
+    /// Partitions are fixed at their constructed width.
+    Fixed,
+    /// A job admitted while nothing else waits widens over every
+    /// adjacent idle partition whose union keeps rank boundaries
+    /// intact ([`DpuSet::merge`]); lanes split back under load.
+    #[default]
+    Dynamic,
+}
+
+/// Construction-time configuration for a [`PimService`].
+#[derive(Debug, Clone)]
+pub struct ServiceConfig {
+    /// The whole device the service partitions.
+    pub cfg: PimConfig,
+    /// Equal, contiguous partitions (the lane count).
+    pub partitions: usize,
+    /// Execution backend every job system is built with.
+    pub backend: BackendKind,
+    /// Worker threads for the `parallel` backend.
+    pub threads: usize,
+    /// Pipelined-transfer mode jobs run under.
+    pub pipeline: PipelineMode,
+    /// Cross-tenant sharing (shared plan cache + dedup + gangs).
+    pub sharing: SharedCacheMode,
+    /// Bound on jobs submitted but not yet admitted (the backpressure
+    /// knob).
+    pub queue_depth: usize,
+    /// What `submit` does at saturation.
+    pub saturation: SaturationPolicy,
+    /// Whether idle partitions merge under a lone job.
+    pub resize: ResizePolicy,
+}
+
+impl ServiceConfig {
+    /// Defaults: seq backend, one thread, pipeline off, share-nothing,
+    /// queue depth 64, reject at saturation, dynamic resize.
+    pub fn new(cfg: PimConfig, partitions: usize) -> ServiceConfig {
+        ServiceConfig {
+            cfg,
+            partitions,
+            backend: BackendKind::Seq,
+            threads: 1,
+            pipeline: PipelineMode::Off,
+            sharing: SharedCacheMode::Off,
+            queue_depth: 64,
+            saturation: SaturationPolicy::Reject,
+            resize: ResizePolicy::Dynamic,
+        }
+    }
+}
+
+/// One job submission: the plan closure plus its serving metadata.
+/// Build with [`JobSpec::builder`].
+pub struct JobSpec {
+    name: String,
+    plan: JobPlan,
+    class: SlaClass,
+    arrival_s: f64,
+    deadline_s: Option<f64>,
+}
+
+impl JobSpec {
+    /// Start building a spec for a job called `name`.
+    pub fn builder(name: &str) -> JobSpecBuilder {
+        JobSpecBuilder {
+            name: name.to_string(),
+            plan: None,
+            class: SlaClass::Standard,
+            arrival_s: 0.0,
+            deadline_s: None,
+        }
+    }
+}
+
+/// Builder for [`JobSpec`] — `plan` is required, everything else
+/// defaults (standard class, arrival at t = 0, no deadline).
+pub struct JobSpecBuilder {
+    name: String,
+    plan: Option<JobPlan>,
+    class: SlaClass,
+    arrival_s: f64,
+    deadline_s: Option<f64>,
+}
+
+impl JobSpecBuilder {
+    /// The job body: builds and drives one plan graph against the
+    /// partition-sized system it is handed.
+    pub fn plan<F>(mut self, plan: F) -> Self
+    where
+        F: FnOnce(&mut PimSystem) -> Result<Vec<i32>> + Send + 'static,
+    {
+        self.plan = Some(Box::new(plan));
+        self
+    }
+
+    /// The job body as an already-boxed plan (no re-boxing — the path
+    /// `workloads::job` results take).
+    pub fn plan_boxed(mut self, plan: JobPlan) -> Self {
+        self.plan = Some(plan);
+        self
+    }
+
+    /// SLA class (default [`SlaClass::Standard`]).
+    pub fn class(mut self, class: SlaClass) -> Self {
+        self.class = class;
+        self
+    }
+
+    /// Modeled arrival instant in seconds (default 0.0).  The service
+    /// replays arrivals as a trace, so submissions must be
+    /// nondecreasing in this value.
+    pub fn arrival_s(mut self, arrival_s: f64) -> Self {
+        self.arrival_s = arrival_s;
+        self
+    }
+
+    /// Modeled completion deadline ([`JobOutcome::missed_deadline`]
+    /// reports whether the schedule met it).
+    pub fn deadline_s(mut self, deadline_s: f64) -> Self {
+        self.deadline_s = Some(deadline_s);
+        self
+    }
+
+    /// Validate and assemble the spec.
+    pub fn build(self) -> Result<JobSpec> {
+        let Some(plan) = self.plan else {
+            return Err(Error::Config(format!(
+                "job `{}` has no plan (call .plan(..) before .build())",
+                self.name
+            )));
+        };
+        if !self.arrival_s.is_finite() || self.arrival_s < 0.0 {
+            return Err(Error::Config(format!(
+                "job `{}` has invalid arrival {}s (expected a finite, nonnegative instant)",
+                self.name, self.arrival_s
+            )));
+        }
+        if let Some(d) = self.deadline_s {
+            if !d.is_finite() || d < self.arrival_s {
+                return Err(Error::Config(format!(
+                    "job `{}` has deadline {d}s before its arrival {}s",
+                    self.name, self.arrival_s
+                )));
+            }
+        }
+        Ok(JobSpec {
+            name: self.name,
+            plan,
+            class: self.class,
+            arrival_s: self.arrival_s,
+            deadline_s: self.deadline_s,
+        })
+    }
+}
+
+/// Handle for one accepted submission (submission order id).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct JobTicket {
+    seq: usize,
+}
+
+impl JobTicket {
+    /// Service-unique job id (submission order).
+    pub fn id(&self) -> usize {
+        self.seq
+    }
+}
+
+/// A ticket's state under [`PimService::poll`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TicketStatus {
+    /// Submitted, not yet admitted by the virtual-time engine.
+    Pending,
+    /// Completed; [`PimService::wait`] returns the outcome.
+    Done,
+    /// Executed and failed; [`PimService::wait`] returns the error.
+    Failed,
+}
+
+/// Per-SLA-class sojourn statistics (submission-to-completion time
+/// under the modeled schedule).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ClassReport {
+    pub class: SlaClass,
+    pub stats: LatencyStats,
+}
+
+/// Deterministic Poisson arrival trace: `n` nondecreasing instants
+/// with exponential(rate) gaps drawn from the seeded generator — no
+/// wall clock anywhere, so a (seed, n, rate) triple always replays the
+/// same trace.
+pub fn poisson_arrivals(seed: u64, n: usize, rate_per_s: f64) -> Result<Vec<f64>> {
+    if !rate_per_s.is_finite() || rate_per_s <= 0.0 {
+        return Err(Error::Config(format!(
+            "poisson arrival rate must be positive and finite, got {rate_per_s}"
+        )));
+    }
+    let mut prng = Prng::new(seed);
+    let mut t = 0.0f64;
+    let mut out = Vec::with_capacity(n);
+    for _ in 0..n {
+        let u = prng.f64();
+        t += -(1.0 - u).ln() / rate_per_s;
+        out.push(t);
+    }
+    Ok(out)
+}
+
+/// How the engine admits work.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(crate) enum AdmissionMode {
+    /// PR 5 semantics: everything arrives at t = 0, execution races
+    /// over workers, admission is a post-hoc `schedule_jobs` pass.
+    Batch,
+    /// Virtual-time replay: jobs admit one at a time in priority
+    /// order as lanes free, with rolling sharing and dynamic resize.
+    Online,
+}
+
+/// One executed (not yet admitted) job: output words, partition-local
+/// timeline, per-tenant cache counters, and the sharing ledger the
+/// post-passes consume.
+type Exec = std::result::Result<(Vec<i32>, Timeline, CacheStats, SharingLedger), String>;
+
+/// An open co-launch window: same-kernel width-1 jobs admitted at the
+/// same instant on adjacent lanes.  Flushed (members retroactively
+/// shortened) when a non-matching admission closes it.
+struct OpenGang {
+    sig: u64,
+    start_bits: u64,
+    /// Result indices of the members, in admission order.
+    members: Vec<usize>,
+    /// The lane each member ran on (adjacent, ascending).
+    lanes: Vec<usize>,
+    /// Each member's accumulated launch overhead (the gang's stake).
+    launch_s: Vec<f64>,
+}
+
+/// The scheduling engine both front doors share: [`super::JobQueue`]
+/// holds one in [`AdmissionMode::Batch`], [`PimService`] in
+/// [`AdmissionMode::Online`].
+pub(crate) struct ServiceCore {
+    mode: AdmissionMode,
+    sets: Vec<DpuSet>,
+    parent_cfg: PimConfig,
+    part_cfg: PimConfig,
+    backend: BackendKind,
+    threads: usize,
+    pipeline: PipelineMode,
+    queue_depth: usize,
+    saturation: SaturationPolicy,
+    resize: ResizePolicy,
+    names: Vec<String>,
+    classes: Vec<SlaClass>,
+    arrivals: Vec<f64>,
+    deadlines: Vec<Option<f64>>,
+    /// Not-yet-executed plans, aligned with `names` (taken at
+    /// admission / drain).
+    pending: Vec<Option<JobPlan>>,
+    /// Per-job outcome or error text, aligned with `names`.
+    results: Vec<Option<std::result::Result<JobOutcome, String>>>,
+    /// Online: submitted-but-not-admitted job indices (the bounded
+    /// waiting queue).
+    waiting: Vec<usize>,
+    /// Per-partition modeled lane clocks (when each lane next frees).
+    lanes: Vec<f64>,
+    /// Per-partition busy seconds (== lane clocks in batch mode,
+    /// where lanes never idle between jobs).
+    busy: Vec<f64>,
+    /// The probed backend instance, kept as the authority for
+    /// [`ExecBackend::co_launch_commands`] during gang pricing.
+    probe: Box<dyn ExecBackend>,
+    /// Online: one backend instance reused across serial admissions,
+    /// so the arena staging pools amortize over the job stream.
+    cached: Option<Box<dyn ExecBackend>>,
+    /// Cross-tenant shared plan cache; `None` = share-nothing.
+    shared: Option<Arc<SharedPlanCache>>,
+    /// Online rolling broadcast residency: content hashes already
+    /// shipped to the device (a later identical ship is free).
+    resident: HashSet<u64>,
+    open_gang: Option<OpenGang>,
+    /// Co-launch gangs formed so far.
+    gangs: usize,
+    /// Submissions refused under [`SaturationPolicy::Reject`].
+    rejected: u64,
+    /// Largest arrival submitted so far (trace monotonicity guard).
+    last_arrival: f64,
+}
+
+impl ServiceCore {
+    fn build(
+        mode: AdmissionMode,
+        cfg: PimConfig,
+        partitions: usize,
+        backend: BackendKind,
+        threads: usize,
+        pipeline: PipelineMode,
+    ) -> Result<ServiceCore> {
+        let sets = DpuSet::split(&cfg, partitions)?;
+        // Probe the backend build once so misconfiguration fails at
+        // construction, not inside a worker mid-drain; the instance
+        // is kept to answer `co_launch_commands`.
+        let probe = backend::make(backend, threads)?;
+        let part_cfg = sets[0].cfg().clone();
+        let lanes = vec![0.0; sets.len()];
+        let busy = vec![0.0; sets.len()];
+        Ok(ServiceCore {
+            mode,
+            sets,
+            parent_cfg: cfg,
+            part_cfg,
+            backend,
+            threads,
+            pipeline,
+            queue_depth: usize::MAX,
+            saturation: SaturationPolicy::Reject,
+            resize: ResizePolicy::Fixed,
+            names: Vec::new(),
+            classes: Vec::new(),
+            arrivals: Vec::new(),
+            deadlines: Vec::new(),
+            pending: Vec::new(),
+            results: Vec::new(),
+            waiting: Vec::new(),
+            lanes,
+            busy,
+            probe,
+            cached: None,
+            shared: None,
+            resident: HashSet::new(),
+            open_gang: None,
+            gangs: 0,
+            rejected: 0,
+            last_arrival: 0.0,
+        })
+    }
+
+    /// PR 5 batch semantics (the [`super::JobQueue`] shim's engine).
+    pub(crate) fn batch(
+        cfg: PimConfig,
+        partitions: usize,
+        backend: BackendKind,
+        threads: usize,
+        pipeline: PipelineMode,
+    ) -> Result<ServiceCore> {
+        ServiceCore::build(AdmissionMode::Batch, cfg, partitions, backend, threads, pipeline)
+    }
+
+    /// Online serving semantics (the [`PimService`] engine).
+    pub(crate) fn online(sc: ServiceConfig) -> Result<ServiceCore> {
+        if sc.queue_depth == 0 {
+            return Err(Error::Config(
+                "queue depth 0 would reject every submission (expected a positive depth)"
+                    .to_string(),
+            ));
+        }
+        let mut core = ServiceCore::build(
+            AdmissionMode::Online,
+            sc.cfg,
+            sc.partitions,
+            sc.backend,
+            sc.threads,
+            sc.pipeline,
+        )?;
+        core.queue_depth = sc.queue_depth;
+        core.saturation = sc.saturation;
+        core.resize = sc.resize;
+        core.set_sharing(sc.sharing);
+        Ok(core)
+    }
+
+    pub(crate) fn set_sharing(&mut self, mode: SharedCacheMode) {
+        match mode {
+            SharedCacheMode::On => {
+                if self.shared.is_none() {
+                    self.shared = Some(Arc::new(SharedPlanCache::new()));
+                }
+            }
+            SharedCacheMode::Off => self.shared = None,
+        }
+    }
+
+    pub(crate) fn set_shared_cache(&mut self, cache: Arc<SharedPlanCache>) {
+        self.shared = Some(cache);
+    }
+
+    pub(crate) fn shared_cache(&self) -> Option<&Arc<SharedPlanCache>> {
+        self.shared.as_ref()
+    }
+
+    pub(crate) fn shared_cache_stats(&self) -> Option<SharedCacheStats> {
+        self.shared.as_ref().map(|c| c.stats())
+    }
+
+    pub(crate) fn partitions(&self) -> usize {
+        self.sets.len()
+    }
+
+    pub(crate) fn partition_dpus(&self) -> usize {
+        self.part_cfg.n_dpus
+    }
+
+    pub(crate) fn partition_cfg(&self) -> &PimConfig {
+        &self.part_cfg
+    }
+
+    pub(crate) fn job_count(&self) -> usize {
+        self.names.len()
+    }
+
+    pub(crate) fn name(&self, idx: usize) -> &str {
+        &self.names[idx]
+    }
+
+    pub(crate) fn result(&self, idx: usize) -> Option<&std::result::Result<JobOutcome, String>> {
+        self.results[idx].as_ref()
+    }
+
+    /// Enqueue a batch-mode job (arrives at t = 0, standard class).
+    pub(crate) fn submit_batch(&mut self, name: &str, plan: JobPlan) -> usize {
+        let idx = self.names.len();
+        self.names.push(name.to_string());
+        self.classes.push(SlaClass::Standard);
+        self.arrivals.push(0.0);
+        self.deadlines.push(None);
+        self.pending.push(Some(plan));
+        self.results.push(None);
+        idx
+    }
+
+    /// Accept an online submission: advance the engine to the new
+    /// arrival, apply backpressure, enqueue.
+    pub(crate) fn submit_online(&mut self, spec: JobSpec) -> Result<usize> {
+        debug_assert_eq!(self.mode, AdmissionMode::Online);
+        if spec.arrival_s < self.last_arrival {
+            return Err(Error::Config(format!(
+                "job `{}` arrives at {}s, before the previously submitted {}s \
+                 (the service replays a trace: submit in nondecreasing arrival order)",
+                spec.name, spec.arrival_s, self.last_arrival
+            )));
+        }
+        // Everything that would have been admitted strictly before
+        // this arrival happens now — the async-launch illusion.
+        self.advance(spec.arrival_s);
+        if self.waiting.len() >= self.queue_depth {
+            match self.saturation {
+                SaturationPolicy::Reject => {
+                    self.rejected += 1;
+                    return Err(Error::Saturated(format!(
+                        "admission queue full (depth {}) at t={:.6}s; job `{}` rejected",
+                        self.queue_depth, spec.arrival_s, spec.name
+                    )));
+                }
+                SaturationPolicy::Block => {
+                    // Drain inline until the queue has room.
+                    while self.waiting.len() >= self.queue_depth {
+                        self.advance(f64::INFINITY);
+                    }
+                }
+            }
+        }
+        self.last_arrival = spec.arrival_s;
+        let idx = self.names.len();
+        self.names.push(spec.name);
+        self.classes.push(spec.class);
+        self.arrivals.push(spec.arrival_s);
+        self.deadlines.push(spec.deadline_s);
+        self.pending.push(Some(spec.plan));
+        self.results.push(None);
+        self.waiting.push(idx);
+        Ok(idx)
+    }
+
+    /// Admit waiting jobs whose start instants fall strictly before
+    /// `frontier`.  `advance(f64::INFINITY)` quiesces: everything
+    /// admits and the open gang window (if any) is flushed.
+    pub(crate) fn advance(&mut self, frontier: f64) {
+        while self.process_one(frontier) {}
+        if frontier.is_infinite() {
+            self.flush_gang();
+        }
+    }
+
+    /// One admission step of the virtual-time engine.  Returns false
+    /// when nothing can start before `frontier`.
+    fn process_one(&mut self, frontier: f64) -> bool {
+        if self.waiting.is_empty() {
+            return false;
+        }
+        // The next admission instant: the earliest-free lane, floored
+        // by the earliest waiting arrival (ties: lowest lane).
+        let mut p = 0;
+        for l in 1..self.lanes.len() {
+            if self.lanes[l] < self.lanes[p] {
+                p = l;
+            }
+        }
+        let earliest = self
+            .waiting
+            .iter()
+            .map(|&i| self.arrivals[i])
+            .fold(f64::INFINITY, f64::min);
+        let start = self.lanes[p].max(earliest);
+        if start >= frontier {
+            return false;
+        }
+        // Among jobs that have arrived by `start`, strict priority:
+        // class rank, then arrival, then submission order.  Arrivals
+        // are nonnegative, so their bit patterns order numerically.
+        let mut best: Option<usize> = None;
+        for (w, &i) in self.waiting.iter().enumerate() {
+            if self.arrivals[i] > start {
+                continue;
+            }
+            let key = (self.classes[i].rank(), self.arrivals[i].to_bits(), i);
+            let better = match best {
+                None => true,
+                Some(bw) => {
+                    let b = self.waiting[bw];
+                    key < (self.classes[b].rank(), self.arrivals[b].to_bits(), b)
+                }
+            };
+            if better {
+                best = Some(w);
+            }
+        }
+        let w = best.expect("the earliest waiting arrival is <= start by construction");
+        let idx = self.waiting.remove(w);
+
+        // Dynamic resize: a lone job (nothing else waiting) widens
+        // over the maximal adjacent idle run, if the union keeps rank
+        // boundaries intact.
+        let (mut a, mut b) = (p, p + 1);
+        if self.resize == ResizePolicy::Dynamic && self.waiting.is_empty() {
+            while a > 0 && self.lanes[a - 1] <= start {
+                a -= 1;
+            }
+            while b < self.lanes.len() && self.lanes[b] <= start {
+                b += 1;
+            }
+        }
+        let run_cfg = if b - a >= 2 {
+            match DpuSet::merge(&self.parent_cfg, &self.sets[a..b]) {
+                Ok(set) => Some(set.cfg().clone()),
+                // The union would straddle a rank: never split one —
+                // fall back to the single partition.
+                Err(_) => None,
+            }
+        } else {
+            None
+        };
+        let (first, width, cfg) = match run_cfg {
+            Some(cfg) => (a, b - a, cfg),
+            None => (p, 1, self.part_cfg.clone()),
+        };
+
+        // Execute serially on the engine's cached backend instance.
+        let topo = cfg.topology_desc();
+        let built = match self.cached.take() {
+            Some(bk) => Ok(bk),
+            None => backend::make(self.backend, self.threads),
+        };
+        let plan = self.pending[idx].take().expect("online jobs execute once");
+        let exec: Exec = match built {
+            Err(e) => Err(e.to_string()),
+            Ok(bk) => {
+                let built_sys = PimSystem::builder(cfg)
+                    .backend(bk)
+                    .shared_cache(self.shared.clone())
+                    .build();
+                match built_sys {
+                    Err(e) => Err(e.to_string()),
+                    Ok(mut sys) => {
+                        let run = (|| -> Result<Vec<i32>> {
+                            sys.set_pipeline(self.pipeline)?;
+                            let out = plan(&mut sys)?;
+                            // Drain deferred work so the job's
+                            // timeline is complete before it becomes
+                            // the lane charge.
+                            sys.run()?;
+                            Ok(out)
+                        })();
+                        let timeline = sys.timeline();
+                        let cache = sys.cache_stats();
+                        let ledger = sys.take_sharing_ledger();
+                        self.cached = Some(sys.into_backend());
+                        run.map(|out| (out, timeline, cache, ledger))
+                            .map_err(|e| e.to_string())
+                    }
+                }
+            }
+        };
+
+        match exec {
+            Err(e) => {
+                // Failed jobs never occupy a lane; a failure also
+                // closes any open gang window (its members were not
+                // adjacent-in-time to whatever comes next).
+                self.flush_gang();
+                self.results[idx] =
+                    Some(Err(format!("partition {first} ({topo}): {e}")));
+            }
+            Ok((output, mut timeline, cache, ledger)) => {
+                // Rolling broadcast dedup: payloads stay resident on
+                // the device, so a repeat ship is free in full (the
+                // batch drain's even split only applies within one
+                // drain).
+                if self.shared.is_some() {
+                    for bc in &ledger.bcasts {
+                        if !self.resident.insert(bc.content) {
+                            timeline.bcast_dedup_saved_s += bc.seconds;
+                            timeline.bcast_dedups += 1;
+                        }
+                    }
+                }
+                let duration = timeline.total_s().max(0.0);
+                let finish = start + duration;
+
+                // Online gang window: same kernel fingerprint, bit
+                // -identical start, next adjacent lane, width 1.
+                let eligible = self.shared.is_some() && ledger.sig != 0 && width == 1;
+                let joins = eligible
+                    && self.open_gang.as_ref().is_some_and(|g| {
+                        g.sig == ledger.sig
+                            && g.start_bits == start.to_bits()
+                            && *g.lanes.last().expect("gangs are never empty") + 1 == first
+                    });
+                if joins {
+                    let g = self.open_gang.as_mut().expect("checked above");
+                    g.members.push(idx);
+                    g.lanes.push(first);
+                    g.launch_s.push(timeline.launch_s);
+                } else {
+                    self.flush_gang();
+                    if eligible {
+                        self.open_gang = Some(OpenGang {
+                            sig: ledger.sig,
+                            start_bits: start.to_bits(),
+                            members: vec![idx],
+                            lanes: vec![first],
+                            launch_s: vec![timeline.launch_s],
+                        });
+                    }
+                }
+
+                self.results[idx] = Some(Ok(JobOutcome {
+                    name: self.names[idx].clone(),
+                    output,
+                    timeline,
+                    partition: first,
+                    start_s: start,
+                    finish_s: finish,
+                    cache,
+                    arrival_s: self.arrivals[idx],
+                    class: self.classes[idx],
+                    deadline_s: self.deadlines[idx],
+                    dpus: width * self.part_cfg.n_dpus,
+                }));
+                for l in first..first + width {
+                    self.lanes[l] = finish;
+                    self.busy[l] += duration;
+                }
+            }
+        }
+        true
+    }
+
+    /// Close the open co-launch window: if it gathered two or more
+    /// members, price the gang through the probed backend and
+    /// retroactively shorten every member (timeline, finish, lane —
+    /// nothing was admitted after them on those lanes, so the
+    /// adjustment is exact).
+    fn flush_gang(&mut self) {
+        let Some(g) = self.open_gang.take() else { return };
+        let m = g.members.len();
+        if m < 2 {
+            return;
+        }
+        let cmds = self.probe.co_launch_commands(m).clamp(1, m);
+        let mut saved_total = 0.0f64;
+        for k in 0..m {
+            let saved = g.launch_s[k] * (m - cmds) as f64 / m as f64;
+            if saved <= 0.0 {
+                continue;
+            }
+            saved_total += saved;
+            let outcome = self.results[g.members[k]]
+                .as_mut()
+                .and_then(|r| r.as_mut().ok())
+                .expect("gang members completed successfully");
+            outcome.timeline.colaunch_saved_s += saved;
+            outcome.timeline.colaunched = 1;
+            outcome.finish_s -= saved;
+            self.lanes[g.lanes[k]] -= saved;
+            self.busy[g.lanes[k]] -= saved;
+        }
+        if saved_total > 0.0 {
+            self.gangs += 1;
+        }
+    }
+
+    pub(crate) fn rejected(&self) -> u64 {
+        self.rejected
+    }
+
+    /// The device schedule so far (quiesce first for final lanes).
+    pub(crate) fn device_report(&self) -> DeviceReport {
+        let makespan = self.lanes.iter().fold(0.0f64, |acc, &l| acc.max(l));
+        let busy: f64 = self.busy.iter().sum();
+        let mut jobs = 0;
+        let mut wide_jobs = 0;
+        let (mut dedups, mut dedup_saved) = (0u64, 0.0f64);
+        let (mut members, mut colaunch_saved) = (0u64, 0.0f64);
+        let mut sojourns: HashMap<u8, Vec<f64>> = HashMap::new();
+        for r in &self.results {
+            if let Some(Ok(o)) = r {
+                jobs += 1;
+                if o.dpus > self.part_cfg.n_dpus {
+                    wide_jobs += 1;
+                }
+                dedups += o.timeline.bcast_dedups;
+                dedup_saved += o.timeline.bcast_dedup_saved_s;
+                members += o.timeline.colaunched;
+                colaunch_saved += o.timeline.colaunch_saved_s;
+                if self.mode == AdmissionMode::Online {
+                    sojourns
+                        .entry(o.class.rank())
+                        .or_default()
+                        .push(o.sojourn_s());
+                }
+            }
+        }
+        let mut classes = Vec::new();
+        for class in [SlaClass::Interactive, SlaClass::Standard, SlaClass::Batch] {
+            if let Some(samples) = sojourns.get(&class.rank()) {
+                if let Some(stats) = latency_stats(samples) {
+                    classes.push(ClassReport { class, stats });
+                }
+            }
+        }
+        DeviceReport {
+            partitions: self.sets.len(),
+            dpus_per_partition: self.part_cfg.n_dpus,
+            jobs,
+            lane_busy_s: self.busy.clone(),
+            busy_s: busy,
+            makespan_s: makespan,
+            bcast_dedups: dedups,
+            bcast_dedup_saved_s: dedup_saved,
+            gangs: self.gangs,
+            gang_members: members,
+            colaunch_saved_s: colaunch_saved,
+            classes,
+            wide_jobs,
+            rejected: self.rejected,
+        }
+    }
+
+    /// Execute every pending batch job, then admit the batch onto the
+    /// partition lanes — PR 5's drain, verbatim.
+    ///
+    /// Functional execution and modeled admission are deliberately
+    /// decoupled: equal partitions make a job's output and lane charge
+    /// independent of *which* partition runs it, so workers may race
+    /// over the shared queue while the schedule is recomputed
+    /// deterministically from submission order and modeled durations.
+    /// The cross-tenant sharing passes (dedup, gangs) run on the
+    /// drained batch for the same reason.
+    pub(crate) fn drain_batch(&mut self) -> Result<()> {
+        debug_assert_eq!(self.mode, AdmissionMode::Batch);
+        let todo: Vec<(usize, JobPlan)> = self
+            .pending
+            .iter_mut()
+            .enumerate()
+            .filter_map(|(i, p)| p.take().map(|plan| (i, plan)))
+            .collect();
+        if todo.is_empty() {
+            return Ok(());
+        }
+        let workers = if self.backend == BackendKind::Parallel {
+            self.sets.len().min(todo.len()).max(1)
+        } else {
+            // seq/gang: the serial reference order (one worker drains
+            // the queue front-to-back, i.e. submission order).
+            1
+        };
+        let queue = Mutex::new(VecDeque::from(todo));
+        let done: Mutex<Vec<(usize, Exec)>> = Mutex::new(Vec::new());
+        let cfg = &self.part_cfg;
+        let topo = self.part_cfg.topology_desc();
+        let kind = self.backend;
+        let threads = self.threads;
+        let pipeline = self.pipeline;
+        let shared = &self.shared;
+        std::thread::scope(|s| {
+            for wid in 0..workers {
+                let (queue, done, topo) = (&queue, &done, &topo);
+                s.spawn(move || {
+                    // One backend instance per worker, reused across
+                    // every job it runs, so the arena staging pools
+                    // amortize over the worker's whole job stream.
+                    let mut cached: Option<Box<dyn ExecBackend>> = None;
+                    loop {
+                        let job = queue.lock().expect("job queue lock").pop_front();
+                        let Some((idx, plan)) = job else { break };
+                        let built = match cached.take() {
+                            Some(b) => Ok(b),
+                            None => backend::make(kind, threads),
+                        };
+                        let res = match built.and_then(|b| {
+                            PimSystem::builder(cfg.clone())
+                                .backend(b)
+                                .shared_cache(shared.clone())
+                                .build()
+                        }) {
+                            Err(e) => Err(e.to_string()),
+                            Ok(mut sys) => {
+                                let run = (|| -> Result<Vec<i32>> {
+                                    sys.set_pipeline(pipeline)?;
+                                    let out = plan(&mut sys)?;
+                                    // Drain deferred work so the job's
+                                    // timeline is complete before it
+                                    // becomes the lane charge.
+                                    sys.run()?;
+                                    Ok(out)
+                                })();
+                                let timeline = sys.timeline();
+                                let cache = sys.cache_stats();
+                                let ledger = sys.take_sharing_ledger();
+                                cached = Some(sys.into_backend());
+                                run.map(|out| (out, timeline, cache, ledger))
+                                    .map_err(|e| e.to_string())
+                            }
+                        };
+                        // Attribute failures to the worker's partition
+                        // lane and the sub-machine shape it ran.
+                        let res = res.map_err(|e| format!("partition {wid} ({topo}): {e}"));
+                        done.lock().expect("job result lock").push((idx, res));
+                    }
+                });
+            }
+        });
+        let mut done = done.into_inner().expect("workers joined");
+        done.sort_by_key(|(idx, _)| *idx);
+
+        // Cross-tenant sharing post-passes (no-ops under share-nothing).
+        self.apply_sharing(&mut done);
+
+        // Deterministic earliest-free admission over the successful
+        // jobs, in submission order, continuing the existing lanes.
+        let durations: Vec<f64> = done
+            .iter()
+            .filter_map(|(_, r)| r.as_ref().ok().map(|(_, t, _, _)| t.total_s()))
+            .collect();
+        let sched = crate::timing::schedule_jobs(&durations, &mut self.lanes);
+        let mut admitted = 0;
+        for (idx, res) in done {
+            let stored = match res {
+                Ok((output, timeline, cache, _)) => {
+                    let outcome = JobOutcome {
+                        name: self.names[idx].clone(),
+                        output,
+                        timeline,
+                        partition: sched.partition[admitted],
+                        start_s: sched.start_s[admitted],
+                        finish_s: sched.finish_s[admitted],
+                        cache,
+                        arrival_s: 0.0,
+                        class: SlaClass::Standard,
+                        deadline_s: None,
+                        dpus: self.part_cfg.n_dpus,
+                    };
+                    admitted += 1;
+                    Ok(outcome)
+                }
+                Err(e) => Err(e),
+            };
+            self.results[idx] = Some(stored);
+        }
+        // Batch lanes never idle between jobs: busy == lane clocks.
+        self.busy.copy_from_slice(&self.lanes);
+        Ok(())
+    }
+
+    /// The dedup and gang passes (DESIGN.md §16), applied to a drained
+    /// batch in submission order.  Ledgers are only populated when a
+    /// shared cache is installed, so under share-nothing both passes
+    /// see empty inputs and every timeline stays untouched.
+    ///
+    /// *Broadcast dedup*: a read-only ctx payload shipped by M jobs of
+    /// the batch (same content hash, and — partitions being equal —
+    /// the same modeled ship time) costs one ship total; each of the M
+    /// charges keeps `1/M` of its cost and saves the even share
+    /// `seconds * (M-1)/M`, so identical jobs stay identical and the
+    /// batch total drops by exactly M-1 ships.
+    ///
+    /// *Gang co-launch*: [`plan_gangs`] tentatively admits the batch,
+    /// groups jobs by (kernel-chain fingerprint, bit-identical start),
+    /// forms gangs from rank-adjacent partition runs, and prices them
+    /// through the probed backend's
+    /// [`ExecBackend::co_launch_commands`] — the seq reference walk
+    /// answers `members` and saves nothing, by design.
+    fn apply_sharing(&mut self, done: &mut [(usize, Exec)]) {
+        if self.shared.is_none() {
+            return;
+        }
+        let mut counts: HashMap<u64, usize> = HashMap::new();
+        for (_, r) in done.iter() {
+            if let Ok((_, _, _, ledger)) = r {
+                for b in &ledger.bcasts {
+                    *counts.entry(b.content).or_insert(0) += 1;
+                }
+            }
+        }
+        for (_, r) in done.iter_mut() {
+            if let Ok((_, t, _, ledger)) = r {
+                for b in &ledger.bcasts {
+                    let m = counts[&b.content];
+                    if m >= 2 {
+                        t.bcast_dedup_saved_s += b.seconds * (m - 1) as f64 / m as f64;
+                        t.bcast_dedups += 1;
+                    }
+                }
+            }
+        }
+
+        let ok: Vec<usize> = done
+            .iter()
+            .enumerate()
+            .filter(|(_, (_, r))| r.is_ok())
+            .map(|(i, _)| i)
+            .collect();
+        let mut durations = Vec::with_capacity(ok.len());
+        let mut sigs = Vec::with_capacity(ok.len());
+        let mut launch_s = Vec::with_capacity(ok.len());
+        for &i in &ok {
+            let Ok((_, t, _, ledger)) = &done[i].1 else { unreachable!("filtered Ok") };
+            durations.push(t.total_s());
+            sigs.push(ledger.sig);
+            // `launch_s` is the lane's accumulated launch overhead —
+            // exactly what a gang collapses to `cmds` shares.
+            launch_s.push(t.launch_s);
+        }
+        let gp = plan_gangs(&durations, &sigs, &launch_s, &self.lanes, |g| {
+            self.probe.co_launch_commands(g)
+        });
+        for (k, &i) in ok.iter().enumerate() {
+            if gp.saved_s[k] > 0.0 {
+                let Ok((_, t, _, _)) = &mut done[i].1 else { unreachable!("filtered Ok") };
+                t.colaunch_saved_s += gp.saved_s[k];
+                t.colaunched = 1;
+            }
+        }
+        self.gangs += gp.gangs;
+    }
+}
+
+/// The online serving front door: thread-safe asynchronous submission
+/// over a [`ServiceCore`] in [`AdmissionMode::Online`].  See the
+/// module docs for the model.
+pub struct PimService {
+    inner: Mutex<ServiceCore>,
+}
+
+impl PimService {
+    /// Build a service over `sc.partitions` equal partitions of
+    /// `sc.cfg`.  Invalid partition counts, worker counts, and a zero
+    /// queue depth are explicit [`Error::Config`]s.
+    pub fn new(sc: ServiceConfig) -> Result<PimService> {
+        Ok(PimService {
+            inner: Mutex::new(ServiceCore::online(sc)?),
+        })
+    }
+
+    /// Submit a job; returns its ticket immediately (the modeled
+    /// analogue of `dpu_launch(DPU_ASYNCHRONOUS)`).  Fails with
+    /// [`Error::Saturated`] when the bounded queue is full under
+    /// [`SaturationPolicy::Reject`], and with [`Error::Config`] when
+    /// the arrival trace is submitted out of order.
+    pub fn submit(&self, spec: JobSpec) -> Result<JobTicket> {
+        let mut core = self.inner.lock().expect("service lock");
+        let seq = core.submit_online(spec)?;
+        Ok(JobTicket { seq })
+    }
+
+    /// Poll a ticket without driving the engine.
+    pub fn poll(&self, ticket: &JobTicket) -> TicketStatus {
+        let core = self.inner.lock().expect("service lock");
+        if ticket.seq >= core.job_count() {
+            return TicketStatus::Pending;
+        }
+        match core.result(ticket.seq) {
+            None => TicketStatus::Pending,
+            Some(Ok(_)) => TicketStatus::Done,
+            Some(Err(_)) => TicketStatus::Failed,
+        }
+    }
+
+    /// Await one ticket: drives the engine to the job's completion
+    /// and returns its outcome.
+    pub fn wait(&self, ticket: &JobTicket) -> Result<JobOutcome> {
+        let mut core = self.inner.lock().expect("service lock");
+        if ticket.seq >= core.job_count() {
+            return Err(Error::msg(format!("unknown job ticket #{}", ticket.seq)));
+        }
+        if core.result(ticket.seq).is_none() {
+            core.advance(f64::INFINITY);
+        }
+        match core.result(ticket.seq).expect("quiesced above") {
+            Ok(outcome) => Ok(outcome.clone()),
+            Err(e) => Err(Error::msg(format!(
+                "job `{}` failed: {e}",
+                core.name(ticket.seq)
+            ))),
+        }
+    }
+
+    /// Run every submitted job to completion (failures stay on their
+    /// tickets) and close any open co-launch window.
+    pub fn quiesce(&self) {
+        self.inner.lock().expect("service lock").advance(f64::INFINITY);
+    }
+
+    /// Every accepted submission's `(name, outcome-or-error)` in
+    /// submission order, as of now (quiesce first for all of them).
+    pub fn outcomes(&self) -> Vec<(String, std::result::Result<JobOutcome, String>)> {
+        let core = self.inner.lock().expect("service lock");
+        (0..core.job_count())
+            .map(|i| {
+                let res = match core.result(i) {
+                    None => Err("pending".to_string()),
+                    Some(Ok(o)) => Ok(o.clone()),
+                    Some(Err(e)) => Err(e.clone()),
+                };
+                (core.name(i).to_string(), res)
+            })
+            .collect()
+    }
+
+    /// The device schedule so far (quiesce first for final lanes).
+    pub fn device_report(&self) -> DeviceReport {
+        self.inner.lock().expect("service lock").device_report()
+    }
+
+    /// Partitions the device was split into.
+    pub fn partitions(&self) -> usize {
+        self.inner.lock().expect("service lock").partitions()
+    }
+
+    /// DPUs per (unmerged) partition.
+    pub fn partition_dpus(&self) -> usize {
+        self.inner.lock().expect("service lock").partition_dpus()
+    }
+
+    /// Submissions refused under [`SaturationPolicy::Reject`].
+    pub fn rejected(&self) -> u64 {
+        self.inner.lock().expect("service lock").rejected()
+    }
+
+    /// Global shared-cache counters, `None` under share-nothing.
+    pub fn shared_cache_stats(&self) -> Option<SharedCacheStats> {
+        self.inner.lock().expect("service lock").shared_cache_stats()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map_plan(factor: i32) -> impl FnOnce(&mut PimSystem) -> Result<Vec<i32>> + Send + 'static {
+        move |sys| {
+            sys.scatter("x", &[1, 2, 3, 4], 4)?;
+            let map = sys.create_handle(
+                crate::coordinator::PimFunc::AffineMap,
+                crate::coordinator::TransformKind::Map,
+                vec![factor, 0],
+            )?;
+            sys.array_map("x", "y", &map)?;
+            let out = sys.gather("y")?;
+            sys.free_array("x")?;
+            sys.free_array("y")?;
+            Ok(out)
+        }
+    }
+
+    fn tiny_service(partitions: usize) -> PimService {
+        let mut sc = ServiceConfig::new(PimConfig::tiny(8), partitions);
+        sc.resize = ResizePolicy::Fixed;
+        PimService::new(sc).unwrap()
+    }
+
+    #[test]
+    fn spec_builder_validates_plan_arrival_and_deadline() {
+        let err = JobSpec::builder("noplan").build().unwrap_err();
+        assert!(err.to_string().contains("has no plan"), "{err}");
+        let err = JobSpec::builder("late")
+            .plan(map_plan(1))
+            .arrival_s(-1.0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("invalid arrival"), "{err}");
+        let err = JobSpec::builder("early-deadline")
+            .plan(map_plan(1))
+            .arrival_s(2.0)
+            .deadline_s(1.0)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("deadline"), "{err}");
+        let spec = JobSpec::builder("ok")
+            .plan(map_plan(1))
+            .class(SlaClass::Interactive)
+            .arrival_s(0.5)
+            .deadline_s(9.0)
+            .build()
+            .unwrap();
+        assert_eq!(spec.class, SlaClass::Interactive);
+        assert_eq!(spec.arrival_s, 0.5);
+    }
+
+    #[test]
+    fn submit_poll_wait_roundtrip() {
+        let svc = tiny_service(2);
+        let t = svc
+            .submit(JobSpec::builder("double").plan(map_plan(2)).build().unwrap())
+            .unwrap();
+        assert_eq!(t.id(), 0);
+        assert_eq!(svc.poll(&t), TicketStatus::Pending);
+        let outcome = svc.wait(&t).unwrap();
+        assert_eq!(outcome.output, vec![2, 4, 6, 8]);
+        assert_eq!(outcome.arrival_s, 0.0);
+        assert_eq!(outcome.start_s, 0.0);
+        assert!(outcome.sojourn_s() > 0.0);
+        assert_eq!(svc.poll(&t), TicketStatus::Done);
+        let report = svc.device_report();
+        assert_eq!(report.jobs, 1);
+        assert!(!report.classes.is_empty(), "online reports class sojourns");
+    }
+
+    #[test]
+    fn priority_preempts_arrival_order_at_the_lane() {
+        // One lane.  Job A occupies it; B (batch class) and C
+        // (interactive) both arrive while A runs.  When the lane
+        // frees, C wins despite B's earlier submission.
+        let svc = tiny_service(1);
+        let a = svc
+            .submit(JobSpec::builder("a").plan(map_plan(1)).build().unwrap())
+            .unwrap();
+        let b = svc
+            .submit(
+                JobSpec::builder("b")
+                    .plan(map_plan(2))
+                    .class(SlaClass::Batch)
+                    .arrival_s(1e-9)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        let c = svc
+            .submit(
+                JobSpec::builder("c")
+                    .plan(map_plan(3))
+                    .class(SlaClass::Interactive)
+                    .arrival_s(1e-9)
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        svc.quiesce();
+        let (oa, ob, oc) = (
+            svc.wait(&a).unwrap(),
+            svc.wait(&b).unwrap(),
+            svc.wait(&c).unwrap(),
+        );
+        assert_eq!(oa.start_s, 0.0);
+        assert!(oc.start_s < ob.start_s, "interactive admits first");
+        assert_eq!(ob.start_s, oc.finish_s, "one lane, back to back");
+        assert_eq!(ob.output, vec![2, 4, 6, 8]);
+        assert_eq!(oc.output, vec![3, 6, 9, 12]);
+    }
+
+    #[test]
+    fn reject_policy_saturates_and_block_policy_drains() {
+        let mut sc = ServiceConfig::new(PimConfig::tiny(8), 1);
+        sc.queue_depth = 1;
+        sc.resize = ResizePolicy::Fixed;
+        let svc = PimService::new(sc.clone()).unwrap();
+        svc.submit(JobSpec::builder("a").plan(map_plan(1)).build().unwrap())
+            .unwrap();
+        let err = svc
+            .submit(JobSpec::builder("b").plan(map_plan(2)).build().unwrap())
+            .unwrap_err();
+        assert!(matches!(err, Error::Saturated(_)), "{err}");
+        assert!(err.to_string().contains("depth 1"), "{err}");
+        assert_eq!(svc.rejected(), 1);
+        assert_eq!(svc.device_report().rejected, 1);
+
+        sc.saturation = SaturationPolicy::Block;
+        let svc = PimService::new(sc).unwrap();
+        let a = svc
+            .submit(JobSpec::builder("a").plan(map_plan(1)).build().unwrap())
+            .unwrap();
+        let b = svc
+            .submit(JobSpec::builder("b").plan(map_plan(2)).build().unwrap())
+            .unwrap();
+        assert_eq!(svc.poll(&a), TicketStatus::Done, "blocking submit drained a");
+        assert_eq!(svc.wait(&b).unwrap().output, vec![2, 4, 6, 8]);
+        assert_eq!(svc.rejected(), 0);
+    }
+
+    #[test]
+    fn out_of_order_arrivals_are_a_config_error() {
+        let svc = tiny_service(1);
+        svc.submit(
+            JobSpec::builder("a").plan(map_plan(1)).arrival_s(2.0).build().unwrap(),
+        )
+        .unwrap();
+        let err = svc
+            .submit(
+                JobSpec::builder("b").plan(map_plan(1)).arrival_s(1.0).build().unwrap(),
+            )
+            .unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("nondecreasing"), "{err}");
+    }
+
+    #[test]
+    fn lone_job_widens_over_idle_partitions_and_load_splits_back() {
+        let mut sc = ServiceConfig::new(PimConfig::tiny(16), 4);
+        sc.resize = ResizePolicy::Dynamic;
+        let svc = PimService::new(sc).unwrap();
+        // Alone on an idle device: the whole machine.
+        let wide = svc
+            .submit(JobSpec::builder("wide").plan(map_plan(2)).build().unwrap())
+            .unwrap();
+        let wide = svc.wait(&wide).unwrap();
+        assert_eq!(wide.dpus, 16, "lone job takes all four partitions");
+        assert_eq!(wide.output, vec![2, 4, 6, 8]);
+        // Two jobs waiting at once: both run width-1.
+        let t1 = svc
+            .submit(
+                JobSpec::builder("l1").plan(map_plan(3)).arrival_s(wide.finish_s).build().unwrap(),
+            )
+            .unwrap();
+        let t2 = svc
+            .submit(
+                JobSpec::builder("l2").plan(map_plan(4)).arrival_s(wide.finish_s).build().unwrap(),
+            )
+            .unwrap();
+        svc.quiesce();
+        let (o1, o2) = (svc.wait(&t1).unwrap(), svc.wait(&t2).unwrap());
+        assert_eq!(o1.dpus, 4, "under load the lanes split back");
+        assert_eq!(o2.output, vec![4, 8, 12, 16]);
+        let report = svc.device_report();
+        // o2 is admitted last with nothing waiting behind it, so it
+        // widens over whatever lanes are idle at its start; only the
+        // contested job is forced narrow.
+        assert!(report.wide_jobs >= 1, "report counts wide jobs");
+    }
+
+    #[test]
+    fn failed_jobs_hold_no_lane_and_name_their_partition() {
+        let svc = tiny_service(2);
+        let bad = svc
+            .submit(
+                JobSpec::builder("broken")
+                    .plan(|sys: &mut PimSystem| {
+                        sys.gather("no-such-array")?;
+                        Ok(vec![])
+                    })
+                    .build()
+                    .unwrap(),
+            )
+            .unwrap();
+        let err = svc.wait(&bad).unwrap_err();
+        assert!(err.to_string().contains("broken"), "{err}");
+        assert!(err.to_string().contains("partition 0"), "{err}");
+        assert_eq!(svc.poll(&bad), TicketStatus::Failed);
+        let report = svc.device_report();
+        assert_eq!(report.jobs, 0);
+        assert_eq!(report.makespan_s, 0.0, "failures occupy no lane");
+    }
+
+    #[test]
+    fn poisson_traces_replay_deterministically() {
+        let a = poisson_arrivals(7, 16, 10.0).unwrap();
+        let b = poisson_arrivals(7, 16, 10.0).unwrap();
+        assert_eq!(a, b, "same (seed, n, rate) is the same trace");
+        assert_ne!(a, poisson_arrivals(8, 16, 10.0).unwrap());
+        assert!(a.windows(2).all(|w| w[0] < w[1]), "strictly increasing");
+        assert!(a[0] > 0.0);
+        let err = poisson_arrivals(7, 4, 0.0).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        let err = PimService::new(ServiceConfig {
+            queue_depth: 0,
+            ..ServiceConfig::new(PimConfig::tiny(8), 2)
+        })
+        .unwrap_err();
+        assert!(err.to_string().contains("queue depth 0"), "{err}");
+    }
+
+    #[test]
+    fn sla_class_parses_strictly_and_ranks() {
+        assert_eq!(SlaClass::parse("Interactive").unwrap(), SlaClass::Interactive);
+        assert_eq!(SlaClass::parse("batch").unwrap(), SlaClass::Batch);
+        assert!(SlaClass::parse("bulk").is_err());
+        assert!(SlaClass::Interactive.rank() < SlaClass::Standard.rank());
+        assert!(SlaClass::Standard.rank() < SlaClass::Batch.rank());
+        assert_eq!(SlaClass::Standard.to_string(), "standard");
+    }
+}

@@ -44,6 +44,13 @@ pub enum Error {
     /// run the wrong path with everything green.
     Config(String),
 
+    /// The serving layer's bounded admission queue is full and the
+    /// saturation policy is `Reject`: the submission was refused, not
+    /// queued.  Callers retry, shed load, or switch the service to the
+    /// blocking policy — silently growing the queue would hide device
+    /// saturation until every deadline was already blown.
+    Saturated(String),
+
     /// Anything else.
     Msg(String),
 }
@@ -61,6 +68,7 @@ impl fmt::Display for Error {
             Error::Artifact(e) => write!(f, "artifact: {e}"),
             Error::Handle(e) => write!(f, "handle: {e}"),
             Error::Config(e) => write!(f, "config: {e}"),
+            Error::Saturated(e) => write!(f, "saturated: {e}"),
             Error::Msg(e) => write!(f, "{e}"),
         }
     }
@@ -106,6 +114,10 @@ mod tests {
         assert_eq!(Error::UnknownArray("t".into()).to_string(), "unknown array id: t");
         assert_eq!(Error::Alignment("bad".into()).to_string(), "alignment: bad");
         assert_eq!(Error::Config("bad knob".into()).to_string(), "config: bad knob");
+        assert_eq!(
+            Error::Saturated("queue full (depth 4)".into()).to_string(),
+            "saturated: queue full (depth 4)"
+        );
         assert_eq!(Error::msg("plain").to_string(), "plain");
     }
 

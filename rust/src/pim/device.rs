@@ -207,6 +207,74 @@ impl DpuSet {
             .collect())
     }
 
+    /// Merge adjacent partitions back into one bigger set — the other
+    /// half of dynamic partition resizing (DESIGN.md §17): the online
+    /// scheduler folds idle neighbors into a big job's set and splits
+    /// them back under load.  `sets` must be non-empty and contiguous
+    /// in DPU order; on a machine with an explicit topology the merged
+    /// run must also cover whole ranks (the same double-counting
+    /// argument as [`Self::split`] — a merged set sharing a rank's
+    /// transfer engine with an outside partition could not be charged
+    /// as an independent lane).  The merged view gets the same
+    /// proportional bus/host share its DPU count would get from
+    /// `split`, so `merge(split(cfg, p)) == split(cfg, 1)[0]` and a
+    /// job's modeled time depends only on how many DPUs it ran on,
+    /// never on the resize path that produced them.
+    pub fn merge(parent: &PimConfig, sets: &[DpuSet]) -> Result<DpuSet> {
+        let (first, rest) = sets.split_first().ok_or_else(|| {
+            Error::Config(
+                "cannot merge zero partitions (a set with no DPUs could never run a job)".into(),
+            )
+        })?;
+        let mut end = first.first_dpu + first.n_dpus;
+        for s in rest {
+            if s.first_dpu != end {
+                return Err(Error::Config(format!(
+                    "cannot merge non-adjacent partitions (gap between DPU {end} and \
+                     DPU {}); dynamic resizing only folds contiguous neighbors",
+                    s.first_dpu
+                )));
+            }
+            end += s.n_dpus;
+        }
+        let k = end - first.first_dpu;
+        if first.first_dpu + k > parent.n_dpus {
+            return Err(Error::Config(format!(
+                "merged partition [{}, {}) exceeds the machine's {} DPUs",
+                first.first_dpu, end, parent.n_dpus
+            )));
+        }
+        if parent.explicit_topology()
+            && (first.first_dpu % parent.rank_dpus() != 0 || k % parent.rank_dpus() != 0)
+        {
+            return Err(Error::Config(format!(
+                "merged partition of {k} DPUs at DPU {} straddles a rank boundary \
+                 ({} DPUs/rank); merge whole ranks only",
+                first.first_dpu,
+                parent.rank_dpus()
+            )));
+        }
+        // Identical share math to `split`: the merged set's bandwidth
+        // ceiling and host threads are the proportional share its DPU
+        // count would get, independent of how many sets folded into it.
+        let share = parent.parallel_bw() * k as f64 / parent.n_dpus as f64;
+        let mut cfg = parent.clone();
+        cfg.n_dpus = k;
+        cfg.xfer_bw_ceiling = share;
+        cfg.host_threads = ((parent.host_threads * k) / parent.n_dpus).max(1);
+        if parent.explicit_topology() {
+            let ranks_in_part = k / parent.rank_dpus();
+            if ranks_in_part % parent.ranks_per_channel == 0 {
+                cfg.n_channels = ranks_in_part / parent.ranks_per_channel;
+                cfg.ranks_per_channel = parent.ranks_per_channel;
+            } else {
+                cfg.n_channels = 1;
+                cfg.ranks_per_channel = ranks_in_part;
+            }
+        }
+        Ok(DpuSet { first_dpu: first.first_dpu, n_dpus: k, cfg })
+    }
+
     /// The partition-local machine view (parent constants, partition
     /// DPU count, proportional bus/host share).
     pub fn cfg(&self) -> &PimConfig {
@@ -902,5 +970,58 @@ mod tests {
         m.reset_timeline();
         assert_eq!(m.timeline(), Timeline::default());
         assert_eq!(m.read_bytes(2, addr, 8).unwrap(), vec![9u8; 8]);
+    }
+
+    #[test]
+    fn merge_of_a_full_split_is_the_identity() {
+        let cfg = PimConfig::tiny(8);
+        let sets = DpuSet::split(&cfg, 4).unwrap();
+        let merged = DpuSet::merge(&cfg, &sets).unwrap();
+        let whole = &DpuSet::split(&cfg, 1).unwrap()[0];
+        assert_eq!(merged.first_dpu, 0);
+        assert_eq!(merged.n_dpus, 8);
+        assert_eq!(merged.cfg().n_dpus, whole.cfg().n_dpus);
+        assert_eq!(merged.cfg().xfer_bw_ceiling, whole.cfg().xfer_bw_ceiling);
+        assert_eq!(merged.cfg().host_threads, whole.cfg().host_threads);
+    }
+
+    #[test]
+    fn partial_merge_gets_the_proportional_share() {
+        let cfg = PimConfig::tiny(8);
+        let sets = DpuSet::split(&cfg, 4).unwrap();
+        let merged = DpuSet::merge(&cfg, &sets[1..3]).unwrap();
+        assert_eq!(merged.first_dpu, 2);
+        assert_eq!(merged.n_dpus, 4);
+        // Same share as any 4-DPU partition produced by split directly.
+        let half = &DpuSet::split(&cfg, 2).unwrap()[0];
+        assert_eq!(merged.cfg().xfer_bw_ceiling, half.cfg().xfer_bw_ceiling);
+        assert_eq!(merged.cfg().host_threads, half.cfg().host_threads);
+    }
+
+    #[test]
+    fn merge_rejects_gaps_and_empty_input() {
+        let cfg = PimConfig::tiny(8);
+        let sets = DpuSet::split(&cfg, 4).unwrap();
+        let gapped = [sets[0].clone(), sets[2].clone()];
+        let err = DpuSet::merge(&cfg, &gapped).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        assert!(err.to_string().contains("non-adjacent"), "{err}");
+        assert!(DpuSet::merge(&cfg, &[]).is_err());
+    }
+
+    #[test]
+    fn merge_respects_rank_boundaries() {
+        // 2 channels x 2 ranks/channel x 4 DPUs/rank = 16 DPUs.
+        let cfg = PimConfig::tiny(16).with_topology(2, 2).unwrap();
+        let sets = DpuSet::split(&cfg, 4).unwrap();
+        // Whole-rank merges are fine and re-group into channels.
+        let merged = DpuSet::merge(&cfg, &sets[0..2]).unwrap();
+        assert_eq!(merged.cfg().n_channels * merged.cfg().ranks_per_channel, 2);
+        // A hand-built sub-rank set must be refused.
+        let mut sub = sets[0].clone();
+        sub.n_dpus = 2;
+        sub.cfg.n_dpus = 2;
+        let err = DpuSet::merge(&cfg, &[sub]).unwrap_err();
+        assert!(err.to_string().contains("rank boundary"), "{err}");
     }
 }

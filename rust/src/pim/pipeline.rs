@@ -123,13 +123,7 @@ impl std::fmt::Display for PipelineMode {
 /// fell back would run the monolithic path with everything green and
 /// zero pipeline coverage.
 pub fn mode_from_env() -> PipelineMode {
-    match std::env::var("SIMPLEPIM_PIPELINE") {
-        Ok(s) => match PipelineMode::parse(&s) {
-            Ok(m) => m,
-            Err(e) => panic!("invalid SIMPLEPIM_PIPELINE: {e}"),
-        },
-        Err(_) => PipelineMode::Off,
-    }
+    crate::util::settings::pipeline_from_env().unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// Logical row spans of one chunked launch: each `(lo, hi)` is a

@@ -4,11 +4,14 @@
 
 use crate::backend::{self, BackendKind};
 use crate::cli::Args;
-use crate::coordinator::{JobQueue, SharedCacheMode};
+use crate::coordinator::{
+    poisson_arrivals, JobQueue, JobSpec, PimService, ResizePolicy, SaturationPolicy,
+    ServiceConfig, SharedCacheMode, SlaClass,
+};
 use crate::error::{Error, Result};
 use crate::pim::{PimConfig, PipelineMode};
-use crate::timing::{self, DmaPolicy, OptFlags, ReduceVariant};
-use crate::util::prng;
+use crate::timing::{self, latency_stats, schedule_waves, DmaPolicy, OptFlags, ReduceVariant};
+use crate::util::{prng, settings};
 use crate::workloads::{self, histogram, Impl};
 use crate::{coordinator::PimSystem, report::table::Table};
 
@@ -170,50 +173,47 @@ pub fn cmd_figures(args: &Args) -> Result<()> {
     Ok(())
 }
 
-/// Build the system for a CLI run: PJRT when available, otherwise the
+/// Build the system for a CLI run — resolved exec flags (`--seed`,
+/// `--backend`/`--threads`, `--pipeline`) stated up front through
+/// [`PimSystem::builder`]: PJRT when available, otherwise the
 /// bit-identical host engine (with a note, so `run`/`selftest` work out
 /// of the box on machines without artifacts or the `pjrt` feature).
-fn cli_system(cfg: PimConfig, host_only: bool) -> PimSystem {
+fn cli_system(cfg: PimConfig, host_only: bool, args: &Args) -> Result<PimSystem> {
+    let (kind, threads, pipeline) = exec_selection(args)?;
+    let build = |cfg: PimConfig, with_runtime: bool| -> Result<PimSystem> {
+        let mut b = PimSystem::builder(cfg)
+            .backend(backend::make(kind, threads)?)
+            .pipeline(pipeline);
+        if with_runtime {
+            b = b.load_runtime();
+        }
+        b.build()
+    };
     if host_only {
-        return PimSystem::host_only(cfg);
+        return build(cfg, false);
     }
-    match PimSystem::new(cfg.clone()) {
-        Ok(s) => s,
+    match build(cfg.clone(), true) {
+        Ok(s) => Ok(s),
         Err(e) => {
             eprintln!("note: {e}");
             eprintln!("note: continuing with the host execution engine");
-            PimSystem::host_only(cfg)
+            build(cfg, false)
         }
     }
 }
 
-/// Apply the shared execution flags: `--seed` installs the process
-/// default data-generation seed; `--backend`/`--threads` select the
-/// execution backend (`--threads` alone implies `--backend parallel`);
-/// `--pipeline {off,on,auto}` selects the pipelined transfer engine.
-/// A worker count of 0 (or garbage) is an explicit config error, never
-/// a silent single-thread fallback.  One resolver ([`exec_selection`])
-/// serves both this path and the job scheduler, so a single workload
-/// run and a `--jobs` batch can never resolve the same flags
-/// differently.
-fn apply_exec_flags(sys: &mut PimSystem, args: &Args) -> Result<()> {
-    let (kind, threads, pipeline) = exec_selection(args)?;
-    sys.set_backend(backend::make(kind, threads)?);
-    sys.set_pipeline(pipeline)?;
-    Ok(())
-}
-
 /// Resolve the execution selection (backend kind, worker threads,
 /// pipeline mode) from flags over the `SIMPLEPIM_*` environment
-/// defaults — the standalone sibling of [`apply_exec_flags`] for paths
-/// (the job scheduler) that build many systems instead of configuring
-/// one.  Also installs `--seed`.
+/// defaults (parsed by [`crate::util::settings`]) — one resolver
+/// serves the single-run path, the job scheduler, and the serving
+/// layer, so no two CLI paths can resolve the same flags differently.
+/// Also installs `--seed`.
 fn exec_selection(args: &Args) -> Result<(BackendKind, usize, PipelineMode)> {
     if let Some(seed) = args.flag_u64("seed")? {
         prng::set_default_seed(seed);
     }
-    let env_backend = std::env::var("SIMPLEPIM_BACKEND").ok();
-    let env_threads = std::env::var("SIMPLEPIM_THREADS").ok();
+    let env_backend = std::env::var(settings::ENV_BACKEND).ok();
+    let env_threads = std::env::var(settings::ENV_THREADS).ok();
     let (env_kind, env_t) = backend::resolve_env(env_backend.as_deref(), env_threads.as_deref())?;
     let threads_flag = match args.flag("threads") {
         None => None,
@@ -228,15 +228,14 @@ fn exec_selection(args: &Args) -> Result<(BackendKind, usize, PipelineMode)> {
     };
     let kind = match args.flag("backend") {
         Some(s) => BackendKind::parse(s)?,
-        // `--threads N` alone implies the parallel backend, as in
-        // `apply_exec_flags`.
+        // `--threads N` alone implies the parallel backend.
         None if threads_flag.is_some() => BackendKind::Parallel,
         None => env_kind,
     };
     let threads = threads_flag.unwrap_or(env_t);
     let pipeline = match args.flag("pipeline") {
         Some(p) => PipelineMode::parse(p)?,
-        None => crate::pim::pipeline::mode_from_env(),
+        None => settings::pipeline_from_env()?,
     };
     Ok((kind, threads, pipeline))
 }
@@ -245,15 +244,11 @@ fn exec_selection(args: &Args) -> Result<(BackendKind, usize, PipelineMode)> {
 /// Garbage (or empty) values in either place are hard config errors —
 /// house rule: zero/garbage env never silently falls back.
 fn topology_knob(args: &Args, flag: &str, env: &str) -> Result<usize> {
-    let parse = |src: &str, v: &str| -> Result<usize> {
-        v.parse::<usize>()
-            .map_err(|_| Error::Config(format!("{src} expects an integer, got `{v}`")))
-    };
     if let Some(v) = args.flag(flag) {
-        return parse(&format!("--{flag}"), v);
+        return settings::parse_integer(&format!("--{flag}"), v);
     }
     match std::env::var(env) {
-        Ok(v) => parse(env, &v),
+        Ok(v) => settings::parse_integer(env, &v),
         Err(_) => Ok(1),
     }
 }
@@ -265,8 +260,8 @@ fn topology_knob(args: &Args, flag: &str, env: &str) -> Result<usize> {
 /// DPU count or the whole command fails before any work runs.
 pub(crate) fn machine_config(args: &Args, default_dpus: usize) -> Result<PimConfig> {
     let dpus = args.flag_usize("dpus", default_dpus)?;
-    let channels = topology_knob(args, "channels", "SIMPLEPIM_CHANNELS")?;
-    let ranks = topology_knob(args, "ranks", "SIMPLEPIM_RANKS")?;
+    let channels = topology_knob(args, "channels", settings::ENV_CHANNELS)?;
+    let ranks = topology_knob(args, "ranks", settings::ENV_RANKS)?;
     let cfg = PimConfig::upmem(dpus);
     if channels == 1 && ranks == 1 {
         return Ok(cfg);
@@ -287,11 +282,9 @@ fn shared_cache_knob(args: &Args) -> Result<SharedCacheMode> {
     if let Some(v) = args.flag("shared-cache") {
         return SharedCacheMode::parse(v);
     }
-    match std::env::var("SIMPLEPIM_SHARED_CACHE") {
-        Ok(v) => SharedCacheMode::parse(&v).map_err(|_| {
-            Error::Config(format!(
-                "invalid SIMPLEPIM_SHARED_CACHE=`{v}` (expected on|off)"
-            ))
+    match std::env::var(settings::ENV_SHARED_CACHE) {
+        Ok(v) => settings::parse_on_off(settings::ENV_SHARED_CACHE, &v).map(|on| {
+            if on { SharedCacheMode::On } else { SharedCacheMode::Off }
         }),
         Err(_) => Ok(SharedCacheMode::Off),
     }
@@ -405,6 +398,202 @@ fn cmd_jobs(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `serve` subcommand: the online serving layer (DESIGN.md §17).
+/// Replays a deterministic Poisson open-loop trace of `--jobs` mixed-
+/// priority jobs at `--rate` jobs/s through a [`PimService`] over
+/// `--partitions` DPU sets, then prints the per-job schedule, the
+/// device report (per-class sojourn percentiles), and the modeled
+/// online-vs-batch-drain win.  The batch comparator replays the same
+/// jobs' width-1 service times through PR 5's wave admission
+/// ([`schedule_waves`]), so both sides price the identical work.
+pub fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = machine_config(args, 256)?;
+    let partitions = args.flag_usize("partitions", 8)?;
+    let jobs = args.flag_usize("jobs", 24)?;
+    if jobs == 0 {
+        return Err(Error::Config(
+            "--jobs expects a positive job count, got `0` (0 would submit no jobs)".into(),
+        ));
+    }
+    let elems = args.flag_usize("elems", 65_536)?;
+    let rate = match args.flag("rate") {
+        None => 100.0,
+        Some(v) => match v.parse::<f64>() {
+            Ok(r) if r.is_finite() && r > 0.0 => r,
+            _ => {
+                return Err(Error::Config(format!(
+                    "--rate expects a positive jobs/s value, got `{v}`"
+                )))
+            }
+        },
+    };
+    let queue_depth = args.flag_usize("queue-depth", 64)?;
+    let saturation = match args.flag("saturation") {
+        None | Some("reject") => SaturationPolicy::Reject,
+        Some("block") => SaturationPolicy::Block,
+        Some(v) => {
+            return Err(Error::Config(format!(
+                "--saturation expects reject or block, got `{v}`"
+            )))
+        }
+    };
+    let resize = match args.flag("resize") {
+        None | Some("dynamic") => ResizePolicy::Dynamic,
+        Some("fixed") => ResizePolicy::Fixed,
+        Some(v) => {
+            return Err(Error::Config(format!(
+                "--resize expects fixed or dynamic, got `{v}`"
+            )))
+        }
+    };
+    let (kind, threads, pipeline) = exec_selection(args)?;
+    let sharing = shared_cache_knob(args)?;
+
+    // Deterministic open-loop trace: Poisson arrivals from the seeded
+    // PRNG (tag 6, so `--seed` moves the whole trace), workloads and
+    // SLA classes cycled so every class carries every workload.
+    let arrivals = poisson_arrivals(prng::seed_for(6), jobs, rate)?;
+    let classes = [SlaClass::Interactive, SlaClass::Standard, SlaClass::Batch];
+    let names: Vec<&'static str> = workloads::all().iter().map(|w| w.name).collect();
+
+    let build_service = |resize: ResizePolicy| -> Result<PimService> {
+        let mut sc = ServiceConfig::new(cfg.clone(), partitions);
+        sc.backend = kind;
+        sc.threads = threads;
+        sc.pipeline = pipeline;
+        sc.sharing = sharing;
+        sc.queue_depth = queue_depth;
+        sc.saturation = saturation;
+        sc.resize = resize;
+        PimService::new(sc)
+    };
+    let submit_trace = |svc: &PimService| -> Result<u64> {
+        let mut rejected = 0u64;
+        for (i, &arrival) in arrivals.iter().enumerate() {
+            let name = names[i % names.len()];
+            let plan = workloads::job(name, elems, i as u64)
+                .ok_or_else(|| Error::msg(format!("unknown workload `{name}`")))?;
+            let spec = JobSpec::builder(&format!("{name}@{i}"))
+                .plan_boxed(plan)
+                .class(classes[i % classes.len()])
+                .arrival_s(arrival)
+                .build()?;
+            match svc.submit(spec) {
+                Ok(_) => {}
+                Err(Error::Saturated(_)) => rejected += 1,
+                Err(e) => return Err(e),
+            }
+        }
+        svc.quiesce();
+        Ok(rejected)
+    };
+
+    // Batch-drain comparator: fixed partitions give every job its
+    // width-1 service time; PR 5's wave admission then replays those
+    // times (arrive, wait for the whole drain, run).
+    let fixed = build_service(ResizePolicy::Fixed)?;
+    let fixed_rejected = submit_trace(&fixed)?;
+    let mut arr = Vec::new();
+    let mut dur = Vec::new();
+    for (_, r) in fixed.outcomes() {
+        if let Ok(o) = r {
+            arr.push(o.arrival_s);
+            dur.push(o.duration_s());
+        }
+    }
+    let batch = schedule_waves(&arr, &dur, &mut vec![0.0f64; partitions]);
+    let batch_sojourns: Vec<f64> =
+        batch.finish_s.iter().zip(&arr).map(|(f, a)| f - a).collect();
+    let batch_stats = latency_stats(&batch_sojourns);
+    let batch_makespan = batch.finish_s.iter().fold(0.0f64, |m, &f| m.max(f));
+
+    // The displayed service: the requested resize policy (the fixed
+    // comparator is reused when that is what was asked for).
+    let (svc, rejected) = if resize == ResizePolicy::Dynamic {
+        let svc = build_service(ResizePolicy::Dynamic)?;
+        let rejected = submit_trace(&svc)?;
+        (svc, rejected)
+    } else {
+        (fixed, fixed_rejected)
+    };
+
+    println!(
+        "serve: {jobs} job(s) @ {rate} jobs/s over {} partition(s) x {} DPUs | resize {} | saturation {} | queue depth {queue_depth} | backend {kind} (x{threads}) | pipeline {pipeline} | shared-cache {} | topology: {}",
+        svc.partitions(),
+        svc.partition_dpus(),
+        match resize {
+            ResizePolicy::Dynamic => "dynamic",
+            ResizePolicy::Fixed => "fixed",
+        },
+        match saturation {
+            SaturationPolicy::Reject => "reject",
+            SaturationPolicy::Block => "block",
+        },
+        if sharing == SharedCacheMode::On { "on" } else { "off" },
+        topology_line(&cfg),
+    );
+    println!(
+        "\n  {:<16} {:<12} {:>11}  {:>11}  {:>12}  {:>6}",
+        "job", "class", "arrive(ms)", "start(ms)", "sojourn(ms)", "dpus"
+    );
+    let mut online_sojourns = Vec::new();
+    let mut online_makespan = 0.0f64;
+    for (name, r) in svc.outcomes() {
+        match r {
+            Ok(o) => {
+                online_sojourns.push(o.sojourn_s());
+                online_makespan = online_makespan.max(o.finish_s);
+                println!(
+                    "  {:<16} {:<12} {:>11.3}  {:>11.3}  {:>12.3}  {:>6}",
+                    name,
+                    o.class.to_string(),
+                    o.arrival_s * 1e3,
+                    o.start_s * 1e3,
+                    o.sojourn_s() * 1e3,
+                    o.dpus,
+                );
+            }
+            Err(e) => println!("  {name:<16} failed: {e}"),
+        }
+    }
+    println!();
+    print!("{}", svc.device_report().render());
+    if let Some(s) = svc.shared_cache_stats() {
+        println!(
+            "  shared plan cache: {} hits / {} misses / {} evictions | {} entr{} resident",
+            s.hits,
+            s.misses,
+            s.evictions,
+            s.entries,
+            if s.entries == 1 { "y" } else { "ies" },
+        );
+    }
+    let jobs_per_s = |count: usize, makespan: f64| {
+        if makespan > 0.0 { count as f64 / makespan } else { 0.0 }
+    };
+    if let (Some(b), Some(o)) = (batch_stats, latency_stats(&online_sojourns)) {
+        print!(
+            "\n  online vs batch drain: p99 sojourn {:.3} ms vs {:.3} ms",
+            o.p99_s * 1e3,
+            b.p99_s * 1e3,
+        );
+        if b.p99_s > 0.0 {
+            print!(" ({:+.1}%)", (o.p99_s / b.p99_s - 1.0) * 100.0);
+        }
+        println!(
+            " | {:.1} vs {:.1} jobs/s",
+            jobs_per_s(online_sojourns.len(), online_makespan),
+            jobs_per_s(batch_sojourns.len(), batch_makespan),
+        );
+    }
+    if rejected > 0 {
+        println!(
+            "  note: {rejected} submission(s) rejected at saturation (queue depth {queue_depth})"
+        );
+    }
+    Ok(())
+}
+
 /// `run` subcommand: run one workload end-to-end on a small simulated
 /// machine through the full stack (PJRT unless --host-only).  With
 /// `--explain`, dump the optimized plan (nodes, fusions applied, cache
@@ -421,8 +610,7 @@ pub fn cmd_run(args: &Args) -> Result<()> {
         .clone();
     let cfg = machine_config(args, 16)?;
     let dpus = cfg.n_dpus;
-    let mut sys = cli_system(cfg, args.has("host-only"));
-    apply_exec_flags(&mut sys, args)?;
+    let mut sys = cli_system(cfg, args.has("host-only"), args)?;
     let elems = args.flag_usize("elems", 0)?;
     println!(
         "backend: {} ({} thread{}) | pipeline: {} | topology: {}",
@@ -572,8 +760,7 @@ pub fn cmd_selftest(args: &Args) -> Result<()> {
     let mut backend = None;
     for name in ["vecadd", "reduction", "histogram", "linreg", "logreg", "kmeans"] {
         let cfg = base_cfg.clone();
-        let mut sys = cli_system(cfg, host_only);
-        apply_exec_flags(&mut sys, args)?;
+        let mut sys = cli_system(cfg, host_only, args)?;
         used_runtime &= sys.has_runtime();
         backend = Some(sys.backend_kind());
         run_workload(&mut sys, name, 30_000)?;

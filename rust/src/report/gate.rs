@@ -37,13 +37,11 @@ pub const DEFAULT_TOLERANCE: f64 = 0.10;
 /// pass.  CI sets it, so the bench-gate job can never be green while
 /// gating nothing — the ratchet that forces the first real baseline
 /// refresh (and flags any future regression back to a placeholder).
-pub const REQUIRE_BASELINE_ENV: &str = "SIMPLEPIM_REQUIRE_BASELINE";
+pub const REQUIRE_BASELINE_ENV: &str = crate::util::settings::ENV_REQUIRE_BASELINE;
 
 /// Whether [`REQUIRE_BASELINE_ENV`] demands a real baseline.
 pub fn require_baseline_from_env() -> bool {
-    std::env::var(REQUIRE_BASELINE_ENV)
-        .map(|v| !v.is_empty() && v != "0")
-        .unwrap_or(false)
+    crate::util::settings::require_baseline_from_env()
 }
 
 /// The ratchet half of the bootstrap escape hatch: with `required`

@@ -133,12 +133,11 @@ impl Manifest {
     /// `xla` (the same integer semantics lowered from plain jnp, which
     /// XLA-CPU fuses/vectorizes; ~50x faster to execute here).  Serving
     /// defaults to `xla`; set `SIMPLEPIM_ENGINE=pallas` to exercise the
-    /// kernel lowering end-to-end.
+    /// kernel lowering end-to-end.  Any other value aborts loudly
+    /// (settings house rule): `SIMPLEPIM_ENGINE=palas` used to silently
+    /// serve the xla path with the kernel lowering untested.
     pub fn preferred_engine() -> &'static str {
-        match std::env::var("SIMPLEPIM_ENGINE").as_deref() {
-            Ok("pallas") => "pallas",
-            _ => "xla",
-        }
+        crate::util::settings::engine_from_env().unwrap_or_else(|e| panic!("{e}"))
     }
 
     /// Select the smallest variant of `workload` with per-DPU capacity

@@ -48,8 +48,7 @@ pub struct ExecStats {
 /// Default artifact directory: `$SIMPLEPIM_ARTIFACTS` or
 /// `<crate root>/artifacts`.
 fn default_artifact_dir() -> std::path::PathBuf {
-    std::env::var_os("SIMPLEPIM_ARTIFACTS")
-        .map(std::path::PathBuf::from)
+    crate::util::settings::artifacts_from_env()
         .unwrap_or_else(|| Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts"))
 }
 

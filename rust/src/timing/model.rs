@@ -249,6 +249,87 @@ pub fn schedule_jobs(durations: &[f64], lanes: &mut [f64]) -> JobSchedule {
     sched
 }
 
+/// Batch-drain comparator for the online scheduler (DESIGN.md §17):
+/// what PR 5's `JobQueue` would model for an *arriving* stream.  The
+/// batch door admits nothing while a drain is in flight, so arrivals
+/// accumulate into waves: a wave opens at the later of the previous
+/// drain's completion and the next arrival, collects everything that
+/// has arrived by then, and drains it with [`schedule_jobs`] from a
+/// level start (every lane floored to the wave-open time — the device
+/// is idle between drains).  `arrivals` must be ascending; durations
+/// pair with arrivals by index, and the returned schedule is indexed
+/// the same way, so `finish_s[i] - arrivals[i]` is job `i`'s modeled
+/// sojourn under the batch door.
+pub fn schedule_waves(arrivals: &[f64], durations: &[f64], lanes: &mut [f64]) -> JobSchedule {
+    assert_eq!(arrivals.len(), durations.len());
+    assert!(!lanes.is_empty(), "admission needs at least one partition lane");
+    assert!(
+        arrivals.windows(2).all(|w| w[0] <= w[1]),
+        "wave admission needs ascending arrival times"
+    );
+    let mut sched = JobSchedule {
+        partition: vec![0; arrivals.len()],
+        start_s: vec![0.0; arrivals.len()],
+        finish_s: vec![0.0; arrivals.len()],
+    };
+    let mut next = 0;
+    while next < arrivals.len() {
+        let drained = lanes.iter().fold(0.0f64, |a, &b| a.max(b));
+        let open = drained.max(arrivals[next]);
+        for clock in lanes.iter_mut() {
+            *clock = open;
+        }
+        let mut wave = next + 1;
+        while wave < arrivals.len() && arrivals[wave] <= open {
+            wave += 1;
+        }
+        let inner = schedule_jobs(&durations[next..wave], lanes);
+        for (k, i) in (next..wave).enumerate() {
+            sched.partition[i] = inner.partition[k];
+            sched.start_s[i] = inner.start_s[k];
+            sched.finish_s[i] = inner.finish_s[k];
+        }
+        next = wave;
+    }
+    sched
+}
+
+/// Modeled latency distribution of one SLA class (DESIGN.md §17):
+/// count, mean, nearest-rank p50/p99, and the worst case.  Sojourn
+/// samples are modeled seconds (finish − arrival), so the numbers are
+/// bit-reproducible for a given trace.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LatencyStats {
+    pub count: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p99_s: f64,
+    pub max_s: f64,
+}
+
+/// Summarize latency `samples` (any order); `None` for an empty slice.
+/// Percentiles use the nearest-rank definition (`ceil(q*n)`-th smallest
+/// sample), so a percentile is always a sample that actually occurred,
+/// never an interpolated value no job experienced.
+pub fn latency_stats(samples: &[f64]) -> Option<LatencyStats> {
+    if samples.is_empty() {
+        return None;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("latency samples must not be NaN"));
+    let rank = |q: f64| {
+        let idx = (q * sorted.len() as f64).ceil() as usize;
+        sorted[idx.clamp(1, sorted.len()) - 1]
+    };
+    Some(LatencyStats {
+        count: sorted.len(),
+        mean_s: sorted.iter().sum::<f64>() / sorted.len() as f64,
+        p50_s: rank(0.50),
+        p99_s: rank(0.99),
+        max_s: sorted[sorted.len() - 1],
+    })
+}
+
 /// Outcome of one gang co-launch pass over an admitted batch
 /// (DESIGN.md §16): per-job launch-overhead savings plus how many
 /// gangs formed and how many jobs joined one.
@@ -612,6 +693,63 @@ mod tests {
         let g = plan_gangs(&[], &[], &[], &lanes, |_| 1);
         assert!(g.saved_s.is_empty());
         assert_eq!((g.gangs, g.members), (0, 0));
+    }
+
+    #[test]
+    fn waves_batch_arrivals_behind_the_drain() {
+        // Two lanes.  Jobs 0 and 1 arrive before anything ran, so wave
+        // 1 drains them from t=0.  Job 2 arrives at t=0.5 — mid-drain —
+        // and must wait for the full drain (t=2.0) even though lane
+        // time was free: that is exactly the batch door's weakness the
+        // online scheduler removes.
+        let arrivals = [0.0, 0.0, 0.5];
+        let durations = [2.0, 1.0, 1.0];
+        let mut lanes = [0.0; 2];
+        let s = schedule_waves(&arrivals, &durations, &mut lanes);
+        assert_eq!(s.start_s[0], 0.0);
+        assert_eq!(s.start_s[1], 0.0);
+        assert_eq!(s.start_s[2], 2.0, "wave 2 opens only when wave 1 fully drains");
+        assert_eq!(s.finish_s[2], 3.0);
+        assert_eq!(lanes.iter().fold(0.0f64, |a, &b| a.max(b)), 3.0);
+
+        // An arrival after the drain idles the device until it shows up.
+        let mut lanes = [0.0; 2];
+        let s = schedule_waves(&[0.0, 5.0], &[1.0, 1.0], &mut lanes);
+        assert_eq!(s.start_s[1], 5.0);
+        assert_eq!(s.finish_s[1], 6.0);
+    }
+
+    #[test]
+    fn wave_of_simultaneous_arrivals_matches_schedule_jobs() {
+        // Everything arriving at t=0 is one wave, so the batch door and
+        // plain list scheduling must agree bit-for-bit.
+        let durations = [3.0, 1.0, 2.0, 1.0, 1.0];
+        let mut wave_lanes = [0.0; 2];
+        let w = schedule_waves(&[0.0; 5], &durations, &mut wave_lanes);
+        let mut lanes = [0.0; 2];
+        let j = schedule_jobs(&durations, &mut lanes);
+        assert_eq!(w.partition, j.partition);
+        assert_eq!(w.start_s, j.start_s);
+        assert_eq!(w.finish_s, j.finish_s);
+        assert_eq!(wave_lanes, lanes);
+    }
+
+    #[test]
+    fn latency_stats_use_nearest_rank_percentiles() {
+        assert!(latency_stats(&[]).is_none());
+        let one = latency_stats(&[0.25]).unwrap();
+        assert_eq!((one.count, one.p50_s, one.p99_s, one.max_s), (1, 0.25, 0.25, 0.25));
+
+        // 100 samples 0.01..=1.00: nearest-rank p50 is the 50th
+        // smallest (0.50), p99 the 99th (0.99) — order must not matter.
+        let mut samples: Vec<f64> = (1..=100).map(|i| i as f64 / 100.0).collect();
+        samples.reverse();
+        let s = latency_stats(&samples).unwrap();
+        assert_eq!(s.count, 100);
+        assert!((s.p50_s - 0.50).abs() < 1e-12);
+        assert!((s.p99_s - 0.99).abs() < 1e-12);
+        assert_eq!(s.max_s, 1.0);
+        assert!((s.mean_s - 0.505).abs() < 1e-12);
     }
 
     #[test]

@@ -2,6 +2,7 @@
 
 pub mod json;
 pub mod prng;
+pub mod settings;
 
 /// Round `n` up to the next multiple of `align` (`align` must be > 0).
 pub fn round_up(n: u64, align: u64) -> u64 {

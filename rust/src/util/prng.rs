@@ -26,14 +26,14 @@ pub fn set_default_seed(seed: u64) {
 /// `SIMPLEPIM_SEED` environment variable, else [`DEFAULT_SEED`].
 /// Benches, examples, and the CLI derive all their data-generation
 /// seeds from this, so whole runs are reproducible from one number.
+/// A garbage `SIMPLEPIM_SEED` aborts loudly (settings house rule):
+/// silently falling back to the default would make "reproducible from
+/// one number" a lie whenever the number had a typo in it.
 pub fn default_seed() -> u64 {
     if SEED_SET.load(Ordering::SeqCst) {
         return SEED_OVERRIDE.load(Ordering::SeqCst);
     }
-    std::env::var("SIMPLEPIM_SEED")
-        .ok()
-        .and_then(|v| v.parse().ok())
-        .unwrap_or(DEFAULT_SEED)
+    crate::util::settings::seed_from_env().unwrap_or_else(|e| panic!("{e}"))
 }
 
 /// A data-generation seed for sub-task `tag`, derived from the

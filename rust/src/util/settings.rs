@@ -1,0 +1,466 @@
+//! One resolver for every `SIMPLEPIM_*` knob (DESIGN.md §17).
+//!
+//! Before this module, environment parsing was scattered across seven
+//! files (`backend/mod.rs`, `coordinator/mod.rs`, `coordinator/jobs.rs`,
+//! `util/prng.rs`, `runtime/{artifact,executor}.rs`,
+//! `report/figures.rs`), each with its own precedence and its own idea
+//! of what a garbage value means.  Every knob now resolves here, under
+//! one documented precedence:
+//!
+//! > **explicit API argument > CLI flag > environment variable >
+//! > built-in default**
+//!
+//! and one house rule: a value that is present but unparseable is a
+//! hard [`Error::Config`] naming the offending source and value —
+//! never a silent fallback.  (The execution strategies are
+//! parity-identical by design, so a silently corrected typo would run
+//! the wrong path with every test green.)
+//!
+//! Call sites read the resolved [`Settings`]; the legacy entry points
+//! (`backend::resolve_env`, `pipeline::mode_from_env`,
+//! `prng::default_seed`, ...) keep their signatures and delegate to
+//! the per-knob parsers here.  `simplepim info` prints
+//! [`Settings::render_table`] so an operator can see every resolved
+//! value with its provenance.
+
+use std::path::PathBuf;
+
+use crate::backend::{self, BackendKind};
+use crate::error::{Error, Result};
+use crate::pim::pipeline::PipelineMode;
+
+// ---------------------------------------------------------------------
+// Environment variable names (the single authoritative list).
+// ---------------------------------------------------------------------
+
+pub const ENV_BACKEND: &str = "SIMPLEPIM_BACKEND";
+pub const ENV_THREADS: &str = "SIMPLEPIM_THREADS";
+pub const ENV_MERGE_THREADS: &str = "SIMPLEPIM_MERGE_THREADS";
+pub const ENV_PIPELINE: &str = "SIMPLEPIM_PIPELINE";
+pub const ENV_SEED: &str = "SIMPLEPIM_SEED";
+pub const ENV_CHANNELS: &str = "SIMPLEPIM_CHANNELS";
+pub const ENV_RANKS: &str = "SIMPLEPIM_RANKS";
+pub const ENV_SHARED_CACHE: &str = "SIMPLEPIM_SHARED_CACHE";
+pub const ENV_ENGINE: &str = "SIMPLEPIM_ENGINE";
+pub const ENV_ARTIFACTS: &str = "SIMPLEPIM_ARTIFACTS";
+pub const ENV_REQUIRE_BASELINE: &str = "SIMPLEPIM_REQUIRE_BASELINE";
+
+/// Where a resolved value came from (the precedence chain, highest
+/// first).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Provenance {
+    /// Explicit API argument (e.g. `ServiceConfig`, `JobQueue::new`).
+    Api,
+    /// CLI flag (`--backend`, `--threads`, ...).
+    Flag,
+    /// `SIMPLEPIM_*` environment variable.
+    Env,
+    /// Built-in default.
+    Default,
+}
+
+impl Provenance {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Provenance::Api => "api",
+            Provenance::Flag => "flag",
+            Provenance::Env => "env",
+            Provenance::Default => "default",
+        }
+    }
+}
+
+/// A resolved knob value plus where it came from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Resolved<T> {
+    pub value: T,
+    pub source: Provenance,
+}
+
+impl<T> Resolved<T> {
+    fn new(value: T, source: Provenance) -> Self {
+        Resolved { value, source }
+    }
+}
+
+/// One precedence layer of raw (unparsed) knob values.  The CLI fills
+/// one from its flags; embedding APIs fill one from explicit
+/// arguments; the environment layer is read by the resolver itself.
+#[derive(Debug, Clone, Default)]
+pub struct Layer {
+    pub backend: Option<String>,
+    pub threads: Option<String>,
+    pub merge_threads: Option<String>,
+    pub pipeline: Option<String>,
+    pub seed: Option<String>,
+    pub channels: Option<String>,
+    pub ranks: Option<String>,
+    pub shared_cache: Option<String>,
+    pub engine: Option<String>,
+    pub artifacts: Option<String>,
+}
+
+/// Every `SIMPLEPIM_*` knob, resolved and typed.
+#[derive(Debug, Clone)]
+pub struct Settings {
+    pub backend: Resolved<BackendKind>,
+    pub threads: Resolved<usize>,
+    /// Merge-tree worker override; `None` = follow the launch workers.
+    pub merge_threads: Resolved<Option<usize>>,
+    pub pipeline: Resolved<PipelineMode>,
+    pub seed: Resolved<u64>,
+    pub channels: Resolved<usize>,
+    pub ranks: Resolved<usize>,
+    /// Cross-tenant shared plan cache: `true` = on.
+    pub shared_cache: Resolved<bool>,
+    /// Kernel engine preference: `"pallas"` or `"xla"`.
+    pub engine: Resolved<&'static str>,
+    /// AOT artifact directory; `None` = the crate-relative default.
+    pub artifacts: Resolved<Option<PathBuf>>,
+    /// Whether the bench gate must refuse a placeholder baseline.
+    pub require_baseline: Resolved<bool>,
+}
+
+impl Settings {
+    /// Resolve every knob with the documented precedence: values in
+    /// `api` win over `flags`, which win over the environment, which
+    /// wins over the built-in defaults.  Any present-but-garbage value
+    /// is an [`Error::Config`] naming its source.
+    pub fn resolve(api: &Layer, flags: &Layer) -> Result<Settings> {
+        let backend = match pick(&api.backend, &flags.backend, ENV_BACKEND, "--backend") {
+            Some((src, v, p)) => Resolved::new(parse_backend_kind(&src, &v)?, p),
+            None => Resolved::new(BackendKind::Seq, Provenance::Default),
+        };
+        let threads = match pick(&api.threads, &flags.threads, ENV_THREADS, "--threads") {
+            Some((src, v, p)) => Resolved::new(
+                parse_positive(&src, &v, "0 would silently run single-threaded")?,
+                p,
+            ),
+            None => Resolved::new(backend::default_threads(), Provenance::Default),
+        };
+        let merge_threads = match pick(
+            &api.merge_threads,
+            &flags.merge_threads,
+            ENV_MERGE_THREADS,
+            "--merge-threads",
+        ) {
+            Some((src, v, p)) => Resolved::new(
+                Some(parse_positive(&src, &v, "0 would silently serialize the merge tree")?),
+                p,
+            ),
+            None => Resolved::new(None, Provenance::Default),
+        };
+        let pipeline = match pick(&api.pipeline, &flags.pipeline, ENV_PIPELINE, "--pipeline") {
+            Some((src, v, p)) => Resolved::new(parse_pipeline(&src, &v)?, p),
+            None => Resolved::new(PipelineMode::Off, Provenance::Default),
+        };
+        let seed = match pick(&api.seed, &flags.seed, ENV_SEED, "--seed") {
+            Some((src, v, p)) => Resolved::new(parse_seed(&src, &v)?, p),
+            None => Resolved::new(crate::util::prng::DEFAULT_SEED, Provenance::Default),
+        };
+        let channels = match pick(&api.channels, &flags.channels, ENV_CHANNELS, "--channels") {
+            Some((src, v, p)) => Resolved::new(parse_integer(&src, &v)?, p),
+            None => Resolved::new(1, Provenance::Default),
+        };
+        let ranks = match pick(&api.ranks, &flags.ranks, ENV_RANKS, "--ranks") {
+            Some((src, v, p)) => Resolved::new(parse_integer(&src, &v)?, p),
+            None => Resolved::new(1, Provenance::Default),
+        };
+        let shared_cache = match pick(
+            &api.shared_cache,
+            &flags.shared_cache,
+            ENV_SHARED_CACHE,
+            "--shared-cache",
+        ) {
+            Some((src, v, p)) => Resolved::new(parse_on_off(&src, &v)?, p),
+            None => Resolved::new(false, Provenance::Default),
+        };
+        let engine = match pick(&api.engine, &flags.engine, ENV_ENGINE, "--engine") {
+            Some((src, v, p)) => Resolved::new(parse_engine(&src, &v)?, p),
+            None => Resolved::new("xla", Provenance::Default),
+        };
+        let artifacts = match pick(&api.artifacts, &flags.artifacts, ENV_ARTIFACTS, "--artifacts") {
+            Some((_, v, p)) => Resolved::new(Some(PathBuf::from(v)), p),
+            None => Resolved::new(None, Provenance::Default),
+        };
+        let require_baseline = match std::env::var(ENV_REQUIRE_BASELINE) {
+            Ok(v) if !v.is_empty() && v != "0" => Resolved::new(true, Provenance::Env),
+            _ => Resolved::new(false, Provenance::Default),
+        };
+        Ok(Settings {
+            backend,
+            threads,
+            merge_threads,
+            pipeline,
+            seed,
+            channels,
+            ranks,
+            shared_cache,
+            engine,
+            artifacts,
+            require_baseline,
+        })
+    }
+
+    /// Resolve from the environment alone (no API args, no CLI flags).
+    pub fn from_env() -> Result<Settings> {
+        Settings::resolve(&Layer::default(), &Layer::default())
+    }
+
+    /// The full resolved table with provenance, one knob per line —
+    /// what `simplepim info` prints.
+    pub fn render_table(&self) -> String {
+        let mut out = String::new();
+        let mut row = |name: &str, value: String, source: Provenance| {
+            out.push_str(&format!("  {name:<22} {value:<18} [{}]\n", source.as_str()));
+        };
+        row("backend", self.backend.value.to_string(), self.backend.source);
+        row("threads", self.threads.value.to_string(), self.threads.source);
+        row(
+            "merge-threads",
+            match self.merge_threads.value {
+                Some(t) => t.to_string(),
+                None => "(follow threads)".into(),
+            },
+            self.merge_threads.source,
+        );
+        row("pipeline", self.pipeline.value.to_string(), self.pipeline.source);
+        row("seed", format!("{:#x}", self.seed.value), self.seed.source);
+        row("channels", self.channels.value.to_string(), self.channels.source);
+        row("ranks", self.ranks.value.to_string(), self.ranks.source);
+        row(
+            "shared-cache",
+            if self.shared_cache.value { "on" } else { "off" }.to_string(),
+            self.shared_cache.source,
+        );
+        row("engine", self.engine.value.to_string(), self.engine.source);
+        row(
+            "artifacts",
+            match &self.artifacts.value {
+                Some(p) => p.display().to_string(),
+                None => "(crate default)".into(),
+            },
+            self.artifacts.source,
+        );
+        row(
+            "require-baseline",
+            if self.require_baseline.value { "1" } else { "0" }.to_string(),
+            self.require_baseline.source,
+        );
+        out
+    }
+}
+
+/// Apply the precedence chain for one knob: API arg > flag > env.
+/// Returns the winning raw value with a source label for error
+/// messages, or `None` when nothing set the knob anywhere.
+fn pick(
+    api: &Option<String>,
+    flag: &Option<String>,
+    env: &'static str,
+    flag_name: &'static str,
+) -> Option<(String, String, Provenance)> {
+    if let Some(v) = api {
+        return Some((format!("{flag_name} argument"), v.clone(), Provenance::Api));
+    }
+    if let Some(v) = flag {
+        return Some((flag_name.to_string(), v.clone(), Provenance::Flag));
+    }
+    std::env::var(env).ok().map(|v| (env.to_string(), v, Provenance::Env))
+}
+
+// ---------------------------------------------------------------------
+// Per-knob strict parsers.  Legacy entry points delegate here so the
+// error text is identical no matter which door a value came through.
+// ---------------------------------------------------------------------
+
+/// Parse a backend name; garbage names the source and the value.
+pub fn parse_backend_kind(src: &str, v: &str) -> Result<BackendKind> {
+    BackendKind::parse(v).map_err(|_| {
+        Error::Config(format!("invalid {src}=`{v}` (expected seq, gang, or parallel)"))
+    })
+}
+
+/// Parse a strictly positive integer; the message spells out what a
+/// silently accepted zero would have broken.
+pub fn parse_positive(src: &str, v: &str, zero_consequence: &str) -> Result<usize> {
+    match v.parse::<usize>() {
+        Ok(t) if t >= 1 => Ok(t),
+        _ => Err(Error::Config(format!(
+            "invalid {src}=`{v}` (expected a positive integer; {zero_consequence})"
+        ))),
+    }
+}
+
+/// Parse a plain integer knob (topology shapes validate dividing
+/// constraints later, in `PimConfig::with_topology`).
+pub fn parse_integer(src: &str, v: &str) -> Result<usize> {
+    v.parse::<usize>()
+        .map_err(|_| Error::Config(format!("{src} expects an integer, got `{v}`")))
+}
+
+/// Parse a pipeline mode; garbage names the source and the value.
+pub fn parse_pipeline(src: &str, v: &str) -> Result<PipelineMode> {
+    PipelineMode::parse(v).map_err(|_| {
+        Error::Config(format!("invalid {src}=`{v}` (expected off, on, or auto)"))
+    })
+}
+
+/// Parse a 64-bit seed.  Historically a garbage `SIMPLEPIM_SEED` fell
+/// back silently to the default — which made "reproducible from one
+/// number" a lie whenever the one number had a typo in it.
+pub fn parse_seed(src: &str, v: &str) -> Result<u64> {
+    v.parse::<u64>().map_err(|_| {
+        Error::Config(format!("invalid {src}=`{v}` (expected an unsigned 64-bit integer seed)"))
+    })
+}
+
+/// Parse an `on`/`off` toggle (the shared-cache knob).
+pub fn parse_on_off(src: &str, v: &str) -> Result<bool> {
+    match v {
+        "on" => Ok(true),
+        "off" => Ok(false),
+        _ => Err(Error::Config(format!("invalid {src}=`{v}` (expected on|off)"))),
+    }
+}
+
+/// Parse an engine preference.  Historically anything that was not
+/// `pallas` silently meant `xla`; a typo now fails loudly.
+pub fn parse_engine(src: &str, v: &str) -> Result<&'static str> {
+    match v {
+        "pallas" => Ok("pallas"),
+        "xla" => Ok("xla"),
+        _ => Err(Error::Config(format!("invalid {src}=`{v}` (expected pallas or xla)"))),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Single-knob environment reads for the legacy delegates.
+// ---------------------------------------------------------------------
+
+/// `SIMPLEPIM_SEED` from the environment, strictly parsed;
+/// [`crate::util::prng::DEFAULT_SEED`] when unset.
+pub fn seed_from_env() -> Result<u64> {
+    match std::env::var(ENV_SEED) {
+        Ok(v) => parse_seed(ENV_SEED, &v),
+        Err(_) => Ok(crate::util::prng::DEFAULT_SEED),
+    }
+}
+
+/// `SIMPLEPIM_MERGE_THREADS` from the environment, strictly parsed;
+/// `None` when unset.
+pub fn merge_threads_from_env() -> Result<Option<usize>> {
+    match std::env::var(ENV_MERGE_THREADS) {
+        Ok(v) => parse_positive(ENV_MERGE_THREADS, &v, "0 would silently serialize the merge tree")
+            .map(Some),
+        Err(_) => Ok(None),
+    }
+}
+
+/// `SIMPLEPIM_PIPELINE` from the environment; `Off` when unset.
+pub fn pipeline_from_env() -> Result<PipelineMode> {
+    match std::env::var(ENV_PIPELINE) {
+        Ok(v) => parse_pipeline(ENV_PIPELINE, &v),
+        Err(_) => Ok(PipelineMode::Off),
+    }
+}
+
+/// `SIMPLEPIM_ENGINE` from the environment; `"xla"` when unset.
+pub fn engine_from_env() -> Result<&'static str> {
+    match std::env::var(ENV_ENGINE) {
+        Ok(v) => parse_engine(ENV_ENGINE, &v),
+        Err(_) => Ok("xla"),
+    }
+}
+
+/// `SIMPLEPIM_ARTIFACTS` from the environment; `None` when unset (any
+/// path is legal, so this knob has no garbage values).
+pub fn artifacts_from_env() -> Option<PathBuf> {
+    std::env::var_os(ENV_ARTIFACTS).map(PathBuf::from)
+}
+
+/// `SIMPLEPIM_REQUIRE_BASELINE`: set-and-not-"0" means the bench gate
+/// must hard-fail on a bootstrap-placeholder baseline.
+pub fn require_baseline_from_env() -> bool {
+    std::env::var(ENV_REQUIRE_BASELINE).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn precedence_is_api_flag_env_default() {
+        // Env reads are process-global and racy under the parallel test
+        // harness, so precedence is exercised through the api/flag
+        // layers only; the env arm is covered by the legacy delegates'
+        // own suites (backend::resolve_env & co).
+        let api = Layer { backend: Some("gang".into()), ..Layer::default() };
+        let flags = Layer {
+            backend: Some("parallel".into()),
+            threads: Some("3".into()),
+            ..Layer::default()
+        };
+        let s = Settings::resolve(&api, &flags).unwrap();
+        assert_eq!(s.backend.value, BackendKind::Gang);
+        assert_eq!(s.backend.source, Provenance::Api);
+        assert_eq!(s.threads.value, 3);
+        assert_eq!(s.threads.source, Provenance::Flag);
+    }
+
+    #[test]
+    fn garbage_values_name_source_and_value() {
+        let flags = Layer { threads: Some("0".into()), ..Layer::default() };
+        let err = Settings::resolve(&Layer::default(), &flags).unwrap_err();
+        assert!(matches!(err, Error::Config(_)), "{err}");
+        let msg = err.to_string();
+        assert!(msg.contains("--threads") && msg.contains("`0`"), "{msg}");
+
+        let flags = Layer { shared_cache: Some("maybe".into()), ..Layer::default() };
+        let err = Settings::resolve(&Layer::default(), &flags).unwrap_err();
+        assert!(err.to_string().contains("expected on|off"), "{err}");
+    }
+
+    #[test]
+    fn strict_parsers_match_house_rule() {
+        assert_eq!(parse_backend_kind("SIMPLEPIM_BACKEND", "seq").unwrap(), BackendKind::Seq);
+        assert_eq!(
+            parse_backend_kind("SIMPLEPIM_BACKEND", "paralell").unwrap_err().to_string(),
+            "config: invalid SIMPLEPIM_BACKEND=`paralell` (expected seq, gang, or parallel)"
+        );
+        assert_eq!(parse_seed("SIMPLEPIM_SEED", "42").unwrap(), 42);
+        assert!(parse_seed("SIMPLEPIM_SEED", "zeed").is_err());
+        assert_eq!(parse_engine("SIMPLEPIM_ENGINE", "pallas").unwrap(), "pallas");
+        assert!(parse_engine("SIMPLEPIM_ENGINE", "cuda").is_err());
+        assert!(parse_on_off("--shared-cache", "on").unwrap());
+        assert!(!parse_on_off("--shared-cache", "off").unwrap());
+    }
+
+    #[test]
+    fn render_table_shows_every_knob_with_provenance() {
+        let flags = Layer {
+            backend: Some("parallel".into()),
+            threads: Some("8".into()),
+            shared_cache: Some("on".into()),
+            ..Layer::default()
+        };
+        let s = Settings::resolve(&Layer::default(), &flags).unwrap();
+        let table = s.render_table();
+        for knob in [
+            "backend",
+            "threads",
+            "merge-threads",
+            "pipeline",
+            "seed",
+            "channels",
+            "ranks",
+            "shared-cache",
+            "engine",
+            "artifacts",
+            "require-baseline",
+        ] {
+            assert!(table.contains(knob), "missing `{knob}` in:\n{table}");
+        }
+        assert!(table.contains("[flag]") && table.contains("[default]"), "{table}");
+    }
+}

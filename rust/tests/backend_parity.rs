@@ -37,7 +37,10 @@ const BACKENDS: [(BackendKind, usize); 4] = [
 const MODES: [PipelineMode; 3] = [PipelineMode::Off, PipelineMode::On, PipelineMode::Auto];
 
 fn sys(kind: BackendKind, threads: usize, dpus: usize) -> PimSystem {
-    PimSystem::with_backend(PimConfig::tiny(dpus), None, backend::make(kind, threads).unwrap())
+    PimSystem::builder(PimConfig::tiny(dpus))
+        .backend(backend::make(kind, threads).unwrap())
+        .build()
+        .unwrap()
 }
 
 /// Zero the backend-dependent merge-strategy lanes so everything else

@@ -60,11 +60,10 @@ fn whole_machine_run(
     kind: BackendKind,
     threads: usize,
 ) -> (Vec<i32>, f64) {
-    let mut sys = PimSystem::with_backend(
-        PimConfig::upmem(32),
-        None,
-        backend::make(kind, threads).unwrap(),
-    );
+    let mut sys = PimSystem::builder(PimConfig::upmem(32))
+        .backend(backend::make(kind, threads).unwrap())
+        .build()
+        .unwrap();
     let plan = workloads::job(name, elems, variant).expect("known workload");
     let out = plan(&mut sys).unwrap();
     sys.run().unwrap();
@@ -421,11 +420,10 @@ fn cache_stats_survive_timeline_resets() {
     // Satellite contract: plan-cache counters are measurement state,
     // not timeline state — reset_timeline (the measurement boundary)
     // must not clear them.
-    let mut sys = PimSystem::with_backend(
-        PimConfig::upmem(32),
-        None,
-        backend::make(BackendKind::Seq, 1).unwrap(),
-    );
+    let mut sys = PimSystem::builder(PimConfig::upmem(32))
+        .backend(backend::make(BackendKind::Seq, 1).unwrap())
+        .build()
+        .unwrap();
     let plan = workloads::job("reduction", 4_000, 0).unwrap();
     plan(&mut sys).unwrap();
     sys.run().unwrap();

@@ -12,7 +12,7 @@ use simplepim::PimSystem;
 #[test]
 fn pallas_engine_serves_bit_identical_results() {
     std::env::set_var("SIMPLEPIM_ENGINE", "pallas");
-    let mut sys = match PimSystem::new(PimConfig::tiny(4)) {
+    let mut sys = match PimSystem::builder(PimConfig::tiny(4)).load_runtime().build() {
         Ok(s) => s,
         Err(e) => {
             // No artifacts or no `pjrt` feature in this build: there is

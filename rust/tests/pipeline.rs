@@ -175,13 +175,11 @@ fn launch_pipelined_falls_back_for_host_custom_functions() {
 // ---------------------------------------------------------------------
 
 fn seq_sys(dpus: usize, mode: PipelineMode) -> PimSystem {
-    let mut s = PimSystem::with_backend(
-        PimConfig::upmem(dpus),
-        None,
-        backend::make(BackendKind::Seq, 1).unwrap(),
-    );
-    s.set_pipeline(mode).unwrap();
-    s
+    PimSystem::builder(PimConfig::upmem(dpus))
+        .backend(backend::make(BackendKind::Seq, 1).unwrap())
+        .pipeline(mode)
+        .build()
+        .unwrap()
 }
 
 #[test]

@@ -1,0 +1,343 @@
+//! Online serving layer acceptance suite (DESIGN.md §17).
+//!
+//! Four properties pin the serving layer:
+//!
+//! * **determinism** — Poisson traces replay bit-identically from a
+//!   seed, and admission order is a pure function of (class, arrival,
+//!   submission order), so a trace replays the same schedule on every
+//!   machine;
+//! * **backpressure** — a full bounded queue either rejects with
+//!   `Error::Saturated` or drains inline, by policy, and rejected
+//!   submissions are counted, never silently dropped;
+//! * **dynamic partitions** — a lone job widens over adjacent idle
+//!   partitions only when the union respects rank boundaries (a rank
+//!   is never split), and contested lanes fall back to the fixed
+//!   width;
+//! * **shim invariance** — the `JobQueue` batch API rides the same
+//!   engine and reproduces its results bit-for-bit across the
+//!   `{seq, gang, parallel} × {off, on, auto}` matrix;
+//!
+//! plus the PR's headline acceptance: on a deterministic Poisson
+//! open-loop trace of 24 mixed-priority jobs on the 2×4@32 machine,
+//! the online engine with dynamic partitions models ≥ 20% lower p99
+//! sojourn than PR 5's batch drain, at a makespan no worse.
+
+use simplepim::backend::BackendKind;
+use simplepim::coordinator::{
+    poisson_arrivals, JobQueue, JobSpec, PimFunc, PimService, PimSystem, ResizePolicy,
+    SaturationPolicy, ServiceConfig, SlaClass, TransformKind,
+};
+use simplepim::error::{Error, Result};
+use simplepim::pim::{PimConfig, PipelineMode};
+use simplepim::timing::{latency_stats, schedule_waves};
+
+const BACKENDS: [(BackendKind, usize); 3] =
+    [(BackendKind::Seq, 1), (BackendKind::Gang, 1), (BackendKind::Parallel, 4)];
+
+const MODES: [PipelineMode; 3] = [PipelineMode::Off, PipelineMode::On, PipelineMode::Auto];
+
+/// A scatter → affine map → gather plan: `y = factor * x` over
+/// `0..elems`.  Deterministic output, transfer + kernel charges on any
+/// machine width.
+fn map_plan(
+    elems: usize,
+    factor: i32,
+) -> impl FnOnce(&mut PimSystem) -> Result<Vec<i32>> + Send + 'static {
+    move |sys: &mut PimSystem| {
+        let data: Vec<i32> = (0..elems as i32).collect();
+        sys.scatter("x", &data, 4)?;
+        let h = sys.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![factor, 0])?;
+        sys.array_map("x", "y", &h)?;
+        sys.gather("y")
+    }
+}
+
+fn spec(name: &str, arrival: f64, class: SlaClass, elems: usize, factor: i32) -> JobSpec {
+    JobSpec::builder(name)
+        .plan(map_plan(elems, factor))
+        .class(class)
+        .arrival_s(arrival)
+        .build()
+        .expect("valid spec")
+}
+
+/// Width-1 modeled duration of the reference job on one partition of
+/// `cfg` — the yardstick the Poisson rates are expressed against, so
+/// the traces stress the same relative load on any machine model.
+fn probe_duration(cfg: &PimConfig, partitions: usize, elems: usize) -> f64 {
+    let mut sc = ServiceConfig::new(cfg.clone(), partitions);
+    sc.resize = ResizePolicy::Fixed;
+    let svc = PimService::new(sc).expect("probe service");
+    let t = svc.submit(spec("probe", 0.0, SlaClass::Standard, elems, 1)).expect("probe submit");
+    svc.quiesce();
+    svc.wait(&t).expect("probe job succeeds").duration_s()
+}
+
+// ---------------------------------------------------------------------
+// Determinism.
+// ---------------------------------------------------------------------
+
+#[test]
+fn poisson_traces_replay_bit_identically_from_a_seed() {
+    let a = poisson_arrivals(41, 64, 250.0).unwrap();
+    let b = poisson_arrivals(41, 64, 250.0).unwrap();
+    assert_eq!(a, b, "same seed, same trace");
+    assert!(a.windows(2).all(|w| w[0] < w[1]), "arrivals strictly increase");
+    let c = poisson_arrivals(42, 64, 250.0).unwrap();
+    assert_ne!(a, c, "a different seed moves the trace");
+}
+
+#[test]
+fn admission_orders_by_class_then_arrival_then_submission() {
+    // One lane; everything arrives at t = 0, so class rank alone
+    // decides who runs first, with submission order breaking ties.
+    let svc = PimService::new(ServiceConfig::new(PimConfig::tiny(8), 1)).unwrap();
+    let classes = [
+        SlaClass::Batch,
+        SlaClass::Interactive,
+        SlaClass::Standard,
+        SlaClass::Batch,
+        SlaClass::Interactive,
+        SlaClass::Standard,
+    ];
+    for (i, class) in classes.iter().enumerate() {
+        svc.submit(spec(&format!("j{i}"), 0.0, *class, 64, 1)).unwrap();
+    }
+    svc.quiesce();
+    let mut order: Vec<(u64, String)> = svc
+        .outcomes()
+        .into_iter()
+        .map(|(name, r)| (r.expect("map jobs succeed").start_s.to_bits(), name))
+        .collect();
+    order.sort();
+    let names: Vec<String> = order.into_iter().map(|(_, n)| n).collect();
+    assert_eq!(
+        names,
+        ["j1", "j4", "j2", "j5", "j0", "j3"],
+        "interactive before standard before batch, submission order within a class"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Multi-producer submission.
+// ---------------------------------------------------------------------
+
+#[test]
+fn many_producers_submit_and_await_through_one_shared_service() {
+    let svc = PimService::new(ServiceConfig::new(PimConfig::tiny(8), 2)).unwrap();
+    std::thread::scope(|s| {
+        for k in 1..=4i32 {
+            let svc = &svc;
+            s.spawn(move || {
+                // All producers race at arrival 0.0, so the monotone
+                // trace guard holds in every interleaving.
+                let t = svc
+                    .submit(spec(&format!("producer-{k}"), 0.0, SlaClass::Standard, 64, k))
+                    .expect("submit from a producer thread");
+                let o = svc.wait(&t).expect("awaited job succeeds");
+                let want: Vec<i32> = (0..64).map(|x| x * k).collect();
+                assert_eq!(o.output, want, "each producer sees its own job's output");
+            });
+        }
+    });
+    assert_eq!(svc.outcomes().len(), 4, "all four racing submissions landed");
+}
+
+// ---------------------------------------------------------------------
+// Backpressure.
+// ---------------------------------------------------------------------
+
+#[test]
+fn full_queue_rejects_with_saturated_or_drains_inline_by_policy() {
+    let mut sc = ServiceConfig::new(PimConfig::tiny(8), 1);
+    sc.queue_depth = 2;
+    let svc = PimService::new(sc.clone()).unwrap();
+    svc.submit(spec("a", 0.0, SlaClass::Standard, 64, 1)).unwrap();
+    svc.submit(spec("b", 0.0, SlaClass::Standard, 64, 1)).unwrap();
+    let err = svc.submit(spec("c", 0.0, SlaClass::Standard, 64, 1)).unwrap_err();
+    match err {
+        Error::Saturated(msg) => {
+            assert!(msg.contains("depth 2"), "the error names the queue depth: {msg}")
+        }
+        other => panic!("expected Error::Saturated, got: {other}"),
+    }
+    assert_eq!(svc.rejected(), 1, "the rejection is counted");
+    svc.quiesce();
+    assert_eq!(svc.outcomes().len(), 2, "the rejected job never got a ticket");
+
+    // Same trace under the blocking policy: the third submit drains
+    // inline until a slot frees, and everything completes.
+    sc.saturation = SaturationPolicy::Block;
+    let svc = PimService::new(sc).unwrap();
+    for name in ["a", "b", "c"] {
+        svc.submit(spec(name, 0.0, SlaClass::Standard, 64, 1)).unwrap();
+    }
+    svc.quiesce();
+    assert_eq!(svc.rejected(), 0, "blocking admits everything");
+    for (name, r) in svc.outcomes() {
+        r.unwrap_or_else(|e| panic!("job `{name}` failed under the blocking policy: {e}"));
+    }
+}
+
+// ---------------------------------------------------------------------
+// Dynamic partitions on the hierarchical machine.
+// ---------------------------------------------------------------------
+
+#[test]
+fn dynamic_resize_widens_lone_jobs_and_never_splits_a_rank() {
+    // 2 channels × 4 ranks × 32 DPUs.  Sixteen partitions would cut
+    // every rank in half: the service must refuse to build at all —
+    // no resize path ever starts from a split rank.
+    let cfg = PimConfig::upmem(256).with_topology(2, 4).unwrap();
+    let err = PimService::new(ServiceConfig::new(cfg.clone(), 16))
+        .err()
+        .expect("half-rank partitions must be rejected");
+    assert!(err.to_string().contains("rank boundary"), "{err}");
+
+    // Eight whole-rank partitions: lone arrivals widen over adjacent
+    // idle ranks, bunched arrivals contend and stay narrow, and every
+    // width is a whole number of ranks.
+    let partitions = 8;
+    let elems = 1 << 14;
+    let d = probe_duration(&cfg, partitions, elems);
+    assert!(d > 0.0, "the probe job charges modeled time");
+
+    let arrivals = poisson_arrivals(7, 24, 8.0 / d).unwrap();
+    let classes = [SlaClass::Interactive, SlaClass::Standard, SlaClass::Batch];
+    let svc = PimService::new(ServiceConfig::new(cfg, partitions)).unwrap();
+    for (i, &arrival) in arrivals.iter().enumerate() {
+        svc.submit(spec(&format!("j{i}"), arrival, classes[i % classes.len()], elems, 1))
+            .unwrap();
+    }
+    svc.quiesce();
+
+    let part = svc.partition_dpus();
+    let rank = 32;
+    assert_eq!(part, rank, "eight partitions of 2x4@32 are one rank each");
+    let mut wide = 0;
+    for (name, r) in svc.outcomes() {
+        let o = r.unwrap_or_else(|e| panic!("job `{name}` failed: {e}"));
+        assert_eq!(
+            o.dpus % rank,
+            0,
+            "job `{name}` ran on {} DPUs, splitting a rank",
+            o.dpus
+        );
+        assert_eq!(
+            (o.partition * part) % rank,
+            0,
+            "job `{name}` started mid-rank at partition {}",
+            o.partition
+        );
+        if o.dpus > part {
+            wide += 1;
+        }
+    }
+    assert!(wide >= 1, "at least one lone job widened over idle partitions");
+}
+
+// ---------------------------------------------------------------------
+// Batch shim invariance.
+// ---------------------------------------------------------------------
+
+#[test]
+fn job_queue_shim_reproduces_batch_results_across_the_matrix() {
+    let run = |kind: BackendKind, threads: usize, mode: PipelineMode| {
+        let mut q =
+            JobQueue::new(PimConfig::upmem(32), 4, kind, threads, mode).expect("queue builds");
+        for i in 1..=6i32 {
+            q.submit(&format!("j{i}"), map_plan(4_000, i));
+        }
+        let outcomes = q.wait_all().expect("batch drains clean");
+        outcomes
+            .iter()
+            .map(|o| {
+                (
+                    o.name.clone(),
+                    o.output.clone(),
+                    o.partition,
+                    o.start_s.to_bits(),
+                    o.finish_s.to_bits(),
+                )
+            })
+            .collect::<Vec<_>>()
+    };
+    let reference = run(BackendKind::Seq, 1, PipelineMode::Off);
+    for (kind, threads) in BACKENDS {
+        for mode in MODES {
+            let a = run(kind, threads, mode);
+            let b = run(kind, threads, mode);
+            assert_eq!(a, b, "the drain replays bit-identically ({kind} x{threads} {mode})");
+            for (got, want) in a.iter().zip(&reference) {
+                assert_eq!(got.0, want.0, "submission order is schedule-invariant");
+                assert_eq!(
+                    got.1, want.1,
+                    "job `{}` output drifted on {kind} x{threads} {mode}",
+                    want.0
+                );
+            }
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Acceptance: online + dynamic partitions vs PR 5's batch drain.
+// ---------------------------------------------------------------------
+
+#[test]
+fn online_dynamic_models_20pct_lower_p99_sojourn_than_batch_drain() {
+    let cfg = PimConfig::upmem(256).with_topology(2, 4).unwrap();
+    let partitions = 8;
+    let elems = 1 << 17;
+    let d = probe_duration(&cfg, partitions, elems);
+
+    // Open-loop Poisson trace, 24 mixed-priority jobs at two arrivals
+    // per width-1 service time: light enough that lone jobs widen,
+    // bursty enough that the batch drain's wave barrier bites.
+    let jobs = 24;
+    let arrivals = poisson_arrivals(11, jobs, 2.0 / d).unwrap();
+    let classes = [SlaClass::Interactive, SlaClass::Standard, SlaClass::Batch];
+
+    let run = |resize: ResizePolicy| {
+        let mut sc = ServiceConfig::new(cfg.clone(), partitions);
+        sc.resize = resize;
+        let svc = PimService::new(sc).expect("service builds");
+        for (i, &arrival) in arrivals.iter().enumerate() {
+            svc.submit(spec(&format!("j{i}"), arrival, classes[i % classes.len()], elems, 1))
+                .expect("trace admits");
+        }
+        svc.quiesce();
+        svc.outcomes()
+            .into_iter()
+            .map(|(name, r)| r.unwrap_or_else(|e| panic!("job `{name}` failed: {e}")))
+            .collect::<Vec<_>>()
+    };
+
+    // Batch comparator: the same jobs' width-1 service times replayed
+    // through PR 5's wave admission (arrive, wait for the full drain).
+    let fixed = run(ResizePolicy::Fixed);
+    let arr: Vec<f64> = fixed.iter().map(|o| o.arrival_s).collect();
+    let dur: Vec<f64> = fixed.iter().map(|o| o.duration_s()).collect();
+    let batch = schedule_waves(&arr, &dur, &mut vec![0.0f64; partitions]);
+    let batch_sojourns: Vec<f64> =
+        batch.finish_s.iter().zip(&arr).map(|(f, a)| f - a).collect();
+    let batch_p99 = latency_stats(&batch_sojourns).expect("jobs ran").p99_s;
+    let batch_makespan = batch.finish_s.iter().fold(0.0f64, |m, &f| m.max(f));
+
+    let online = run(ResizePolicy::Dynamic);
+    let online_sojourns: Vec<f64> = online.iter().map(|o| o.sojourn_s()).collect();
+    let online_p99 = latency_stats(&online_sojourns).expect("jobs ran").p99_s;
+    let online_makespan = online.iter().fold(0.0f64, |m, o| m.max(o.finish_s));
+
+    assert_eq!(online.len(), jobs, "every submission completed");
+    assert!(
+        online_p99 <= 0.80 * batch_p99,
+        "online p99 sojourn {:.6}s is not >= 20% below the batch drain's {:.6}s",
+        online_p99,
+        batch_p99
+    );
+    assert!(
+        online_makespan <= batch_makespan + 1e-9,
+        "online makespan {online_makespan:.6}s exceeds the batch drain's {batch_makespan:.6}s"
+    );
+}

@@ -50,12 +50,15 @@ fn env_shape() -> (usize, usize) {
 }
 
 fn flat(dpus: usize, kind: BackendKind, threads: usize) -> PimSystem {
-    PimSystem::with_backend(PimConfig::tiny(dpus), None, backend::make(kind, threads).unwrap())
+    PimSystem::builder(PimConfig::tiny(dpus))
+        .backend(backend::make(kind, threads).unwrap())
+        .build()
+        .unwrap()
 }
 
 fn topo(dpus: usize, ch: usize, rk: usize, kind: BackendKind, threads: usize) -> PimSystem {
     let cfg = PimConfig::tiny(dpus).with_topology(ch, rk).unwrap();
-    PimSystem::with_backend(cfg, None, backend::make(kind, threads).unwrap())
+    PimSystem::builder(cfg).backend(backend::make(kind, threads).unwrap()).build().unwrap()
 }
 
 // ---------------------------------------------------------------------
@@ -241,8 +244,11 @@ fn hierarchical_merge_level_counts_are_pinned() {
 fn vecadd_total(cfg: PimConfig) -> (f64, Vec<i32>) {
     let n = 1usize << 20; // 4 MiB in, 4 MiB out
     let data = Prng::new(65).vec_i32(n, -1_000, 1_000);
-    let mut s = PimSystem::with_backend(cfg, None, backend::make(BackendKind::Parallel, 8).unwrap());
-    s.set_pipeline(PipelineMode::On).unwrap();
+    let mut s = PimSystem::builder(cfg)
+        .backend(backend::make(BackendKind::Parallel, 8).unwrap())
+        .pipeline(PipelineMode::On)
+        .build()
+        .unwrap();
     s.reset_timeline();
     s.scatter("x", &data, 4).unwrap();
     let h = s.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![1, 1]).unwrap();
@@ -256,8 +262,11 @@ fn vecadd_total(cfg: PimConfig) -> (f64, Vec<i32>) {
 fn histogram_total(cfg: PimConfig) -> (f64, Vec<i32>) {
     let n = 1usize << 20;
     let data = Prng::new(66).vec_i32(n, 0, 4095);
-    let mut s = PimSystem::with_backend(cfg, None, backend::make(BackendKind::Parallel, 8).unwrap());
-    s.set_pipeline(PipelineMode::On).unwrap();
+    let mut s = PimSystem::builder(cfg)
+        .backend(backend::make(BackendKind::Parallel, 8).unwrap())
+        .pipeline(PipelineMode::On)
+        .build()
+        .unwrap();
     s.reset_timeline();
     s.scatter("px", &data, 4).unwrap();
     let h = s.create_handle(PimFunc::Histogram { bins: 256 }, TransformKind::Red, vec![]).unwrap();
