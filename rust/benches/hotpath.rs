@@ -20,7 +20,7 @@ use simplepim::coordinator::{
     poisson_arrivals, JobOutcome, JobQueue, JobSpec, PimFunc, PimService, PimSystem,
     ResizePolicy, ServiceConfig, SharedCacheMode, SlaClass, TransformKind,
 };
-use simplepim::pim::{PimConfig, PipelineMode};
+use simplepim::pim::{FaultSpec, PimConfig, PipelineMode, RecoveryPolicy};
 use simplepim::report::bench::{measure, report, Measurement};
 use simplepim::timing::{latency_stats, schedule_waves};
 use simplepim::util::prng;
@@ -628,6 +628,59 @@ fn main() {
                 online_rate,
                 batch_rate
             );
+        }
+    }
+
+    // --- fault injection & recovery (DESIGN.md §18): vecadd on the
+    //     parallel backend, injection off vs a seeded 5% plan under the
+    //     default recovery policy.  The off row must track
+    //     `vecadd/parallel/t8` exactly (faults off is bit- and
+    //     timeline-identical by contract); the on row additionally
+    //     carries the retry lane, so the pair gates both the
+    //     zero-overhead claim and the recovery cost.  Runs in quick
+    //     mode too — the gate keys land at the next baseline refresh.
+    {
+        println!("\n-- fault injection & recovery (vecadd, parallel x8, 32 DPUs) --");
+        let spec = FaultSpec::parse("bench", "seed=7,rate=0.05").unwrap().unwrap();
+        let (x, y) = vecadd::generate(prng::seed_for(1), vec_n);
+        let (warm, iters) = if quick { (1, 2) } else { (1, 4) };
+        for tag in ["off", "on"] {
+            let mut sys = PimSystem::builder(PimConfig::upmem(32))
+                .backend(backend::make(BackendKind::Parallel, 8).unwrap())
+                .build()
+                .unwrap();
+            if tag == "on" {
+                sys.install_faults(&spec, 0, RecoveryPolicy::default());
+            }
+            sys.reset_timeline();
+            let m = measure(warm, iters, || {
+                std::hint::black_box(vecadd::run_simplepim(&mut sys, &x, &y).unwrap());
+            });
+            let t = sys.timeline();
+            report(
+                &format!("vecadd {vec_n} elems [parallel x8, faults {tag}]"),
+                m,
+                Some((vec_n as u64, "elem")),
+            );
+            if tag == "on" {
+                println!(
+                    "    modeled retry lane {:.3} ms ({} fault(s) injected, {} retried)",
+                    t.retry_s * 1e3,
+                    t.faults_injected,
+                    t.retries
+                );
+            }
+            rows.push(BenchRow {
+                key: format!("vecadd/parallel/t8/faults-{tag}"),
+                workload: "vecadd",
+                backend: "parallel",
+                threads: 8,
+                elems: vec_n as u64,
+                wall: m,
+                modeled_total_s: t.total_s(),
+                modeled_kernel_s: t.kernel_s,
+                launches: t.launches,
+            });
         }
     }
 

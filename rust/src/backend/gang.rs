@@ -11,7 +11,8 @@
 use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
 use super::merge::{concat_serial, tree_combine, tree_combine_grouped, AccFn, MergeStrategy};
 use super::{
-    read_rows_seq, write_rows_seq, BackendKind, BackendStats, ExecBackend, StatCounters,
+    read_rows_seq, write_rows_seq, BackendKind, BackendStats, ExecBackend, LaunchStatus,
+    StatCounters,
 };
 use crate::coordinator::exec::{chunkable, gang_execute, host_eval_dpu, host_pipeline_dpu, Inputs};
 use crate::coordinator::handle::PimFunc;
@@ -174,6 +175,18 @@ impl ExecBackend for GangBackend {
             self.stats.gang_batch();
         }
         1
+    }
+
+    /// A gang launch reports one status word for the whole batch (any
+    /// member's fault poisons the gang, as on the hardware's grouped
+    /// launch): the injected code is surfaced verbatim, so a faulted
+    /// gang reissues as a unit and fault sequences match the other
+    /// backends draw for draw.
+    fn launch_status(&self, injected_code: Option<u32>) -> LaunchStatus {
+        match injected_code {
+            None => LaunchStatus::Ok,
+            Some(code) => LaunchStatus::Fault(code),
+        }
     }
 
     fn stats(&self) -> BackendStats {

@@ -90,6 +90,24 @@ impl fmt::Display for BackendKind {
     }
 }
 
+/// Status word a kernel launch reports back to the host (DESIGN.md
+/// §18) — the detection channel for launch faults, mirroring the UPMEM
+/// SDK's `dpu_status`.  In the simulator the only fault source is the
+/// seeded fault plan: the machine's launch guard passes the plan's
+/// drawn code (or `None` for a clean launch) through the executing
+/// backend's [`ExecBackend::launch_status`], so every backend surfaces
+/// the same word for the same draw and fault sequences stay
+/// backend-invariant.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LaunchStatus {
+    /// Every DPU completed the launch.
+    Ok,
+    /// The launch faulted; the non-zero device status code identifies
+    /// the failure class.  The machine reissues the launch (bounded
+    /// retry on the timeline's retry lane) or dead-letters the job.
+    Fault(u32),
+}
+
 /// Snapshot of a backend's counters.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct BackendStats {
@@ -275,6 +293,20 @@ pub trait ExecBackend: Send + Sync {
     /// computed exactly as if launched alone.
     fn co_launch_commands(&self, members: usize) -> usize {
         members
+    }
+
+    /// Surface the status word of the launch that just ran: `Ok` for a
+    /// clean launch, the injected device code when the fault plan
+    /// faulted it.  Backends translate the code through their own
+    /// reporting channel (sync return, gang status word, per-worker
+    /// poll — see each impl) but must never reinterpret it: an
+    /// injected fault is always surfaced, a clean launch never is, so
+    /// detection is deterministic and backend-invariant.
+    fn launch_status(&self, injected_code: Option<u32>) -> LaunchStatus {
+        match injected_code {
+            None => LaunchStatus::Ok,
+            Some(code) => LaunchStatus::Fault(code),
+        }
     }
 
     /// Counter snapshot.

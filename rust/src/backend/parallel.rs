@@ -21,7 +21,7 @@ use super::merge::{
 };
 use super::{
     read_rows_seq, shard_ranges, write_rows_seq, BackendKind, BackendStats, ExecBackend,
-    StatCounters,
+    LaunchStatus, StatCounters,
 };
 use crate::coordinator::exec::{chunkable, gang_execute, host_eval_dpu, host_pipeline_dpu, Inputs};
 use crate::coordinator::handle::PimFunc;
@@ -295,6 +295,19 @@ impl ExecBackend for ParallelBackend {
             self.stats.gang_batch();
         }
         1
+    }
+
+    /// Rank-shard workers each poll their shard's status after the
+    /// scope joins; the host ORs the per-worker words, so a fault on
+    /// any shard surfaces exactly once for the whole launch.  With one
+    /// injected code there is nothing to merge: the word is the code,
+    /// same as the single-threaded backends — which is the invariant
+    /// that keeps fault sequences independent of the worker count.
+    fn launch_status(&self, injected_code: Option<u32>) -> LaunchStatus {
+        match injected_code {
+            None => LaunchStatus::Ok,
+            Some(code) => LaunchStatus::Fault(code),
+        }
     }
 
     fn stats(&self) -> BackendStats {

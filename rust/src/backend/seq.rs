@@ -10,7 +10,8 @@
 use super::arena::{default_buf_arena, default_byte_arena, BufArena, ByteArena};
 use super::merge::{concat_serial, staged_fold, AccFn, MergeStrategy};
 use super::{
-    read_rows_seq, write_rows_seq, BackendKind, BackendStats, ExecBackend, StatCounters,
+    read_rows_seq, write_rows_seq, BackendKind, BackendStats, ExecBackend, LaunchStatus,
+    StatCounters,
 };
 use crate::coordinator::exec::{chunkable, gang_execute, host_eval_dpu, host_pipeline_dpu, Inputs};
 use crate::coordinator::handle::PimFunc;
@@ -135,6 +136,16 @@ impl ExecBackend for SequentialBackend {
     /// the gang-capable backends' savings are measured against.
     fn co_launch_commands(&self, members: usize) -> usize {
         members
+    }
+
+    /// The sequential walk observes a launch fault synchronously: the
+    /// per-DPU loop returns the device code directly, so the status
+    /// word is just the code (or `Ok` when no fault was drawn).
+    fn launch_status(&self, injected_code: Option<u32>) -> LaunchStatus {
+        match injected_code {
+            None => LaunchStatus::Ok,
+            Some(code) => LaunchStatus::Fault(code),
+        }
     }
 
     fn stats(&self) -> BackendStats {

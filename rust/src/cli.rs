@@ -90,6 +90,22 @@ COMMANDS:
                              kernel execution; default off or
                              $SIMPLEPIM_PIPELINE)
                              --seed S (deterministic data generation)
+                             --faults {off|seed=S,rate=P[,dead-rank=R]
+                             [,dead-at=T]} (deterministic fault
+                             injection, DESIGN.md §18: seeded launch
+                             failures, transfer stalls, and checksummed
+                             bit-flips recovered by bounded retry with
+                             exponential backoff on the timeline's
+                             retry lane; a declared dead rank
+                             quarantines its partitions and re-admits
+                             their jobs onto healthy ranks; default
+                             off or $SIMPLEPIM_FAULTS)
+                             --fault-retries N (retry budget per
+                             faulted operation before it dead-letters;
+                             default 3 or $SIMPLEPIM_FAULT_RETRIES)
+                             --fault-backoff T (exponential backoff
+                             base in modeled seconds; default 1e-4 or
+                             $SIMPLEPIM_FAULT_BACKOFF)
                              --explain (dump the optimized plan: nodes,
                              which backend ran them, fusions applied,
                              plan-cache hits/misses, pipelined launches,
@@ -136,7 +152,8 @@ COMMANDS:
                              (merge idle partitions under a lone job
                              along rank boundaries; default dynamic)
                              --channels/--ranks/--backend/--threads/
-                             --pipeline/--seed/--shared-cache as in
+                             --pipeline/--seed/--shared-cache/--faults/
+                             --fault-retries/--fault-backoff as in
                              `run`; serving always runs the
                              bit-identical host execution engine
   figures <which>   regenerate a paper figure from the timing model
@@ -209,6 +226,9 @@ fn cmd_info(args: &Args) -> Result<()> {
         shared_cache: args.flag("shared-cache").map(str::to_string),
         engine: args.flag("engine").map(str::to_string),
         artifacts: args.flag("artifacts").map(str::to_string),
+        faults: args.flag("faults").map(str::to_string),
+        fault_retries: args.flag("fault-retries").map(str::to_string),
+        fault_backoff: args.flag("fault-backoff").map(str::to_string),
     };
     let settings =
         crate::util::settings::Settings::resolve(&crate::util::settings::Layer::default(), &flags)?;

@@ -99,7 +99,7 @@ impl PimSystem {
             elems,
             self.tasklets,
         );
-        self.machine.charge_kernel(t.seconds);
+        self.machine.guarded_launch(t.seconds, self.backend.as_ref())?;
         self.engine.stats.launches += 1;
 
         // Host root: gather totals (small parallel pull), exclusive-scan
@@ -141,7 +141,7 @@ impl PimSystem {
             elems,
             self.tasklets,
         );
-        self.machine.charge_kernel(t2.seconds);
+        self.machine.guarded_launch(t2.seconds, self.backend.as_ref())?;
         self.engine.stats.launches += 1;
 
         // Register + store the output.
@@ -191,7 +191,7 @@ impl PimSystem {
             elems,
             self.tasklets,
         );
-        self.machine.charge_kernel(t.seconds);
+        self.machine.guarded_launch(t.seconds, self.backend.as_ref())?;
         self.engine.stats.launches += 1;
 
         let max_kept = kept.iter().map(|k| k.len()).max().unwrap_or(0) as u64;

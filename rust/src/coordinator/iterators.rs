@@ -105,7 +105,7 @@ impl PimSystem {
                 elems,
                 self.tasklets,
             );
-            self.machine.charge_kernel(zip_t.seconds);
+            self.machine.guarded_launch(zip_t.seconds, self.backend.as_ref())?;
             self.engine.stats.launches += 1;
         }
 
@@ -339,7 +339,7 @@ impl PimSystem {
         //     when the pipelined schedule applies.
         match &pipe_sched {
             Some(sched) => {
-                self.charge_pipelined(&in_streams, 0, t.seconds, sched);
+                self.charge_pipelined(&in_streams, 0, t.seconds, sched)?;
                 self.engine.note(format!(
                     "pipelined reduction `{dest_id}`: {} chunks ({} input stream(s)), saved {:.3} ms",
                     sched.chunks,
@@ -347,7 +347,7 @@ impl PimSystem {
                     sched.saved_s * 1e3
                 ));
             }
-            None => self.machine.charge_kernel(t.seconds),
+            None => self.machine.guarded_launch(t.seconds, self.backend.as_ref())?,
         }
         self.engine.stats.launches += 1;
         self.last_red_variant = Some((variant, t.active_tasklets));
@@ -529,7 +529,7 @@ impl PimSystem {
             meta.max_per_dpu(),
             self.tasklets,
         );
-        self.machine.charge_kernel(t.seconds);
+        self.machine.guarded_launch(t.seconds, self.backend.as_ref())?;
         self.engine.stats.launches += 1;
 
         let new_id = format!("__mat_{id}");

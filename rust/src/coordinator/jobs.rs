@@ -58,7 +58,7 @@ use std::sync::Arc;
 
 use crate::backend::BackendKind;
 use crate::error::{Error, Result};
-use crate::pim::{PimConfig, PipelineMode, Timeline};
+use crate::pim::{FaultSpec, PimConfig, PipelineMode, RecoveryPolicy, Timeline};
 
 use super::service::{ServiceCore, SlaClass};
 use super::shared::{CacheStats, SharedCacheStats, SharedPlanCache};
@@ -200,6 +200,16 @@ pub struct DeviceReport {
     pub wide_jobs: usize,
     /// Submissions refused at saturation (online serving only).
     pub rejected: u64,
+    /// Faults injected across admitted jobs (DESIGN.md §18).
+    pub faults_injected: u64,
+    /// Retries those faults cost (every one recovered).
+    pub retries: u64,
+    /// Modeled seconds on the retry lane (wasted attempts + backoff).
+    pub retry_s: f64,
+    /// Jobs that exhausted their retry budget and dead-lettered.
+    pub dead_letters: u64,
+    /// Partitions quarantined by a declared dead rank.
+    pub quarantined_partitions: usize,
 }
 
 impl DeviceReport {
@@ -262,12 +272,23 @@ impl DeviceReport {
         }
         for c in &self.classes {
             out.push_str(&format!(
-                "  class {}: {} job(s) | sojourn p50 {:.3} ms | p99 {:.3} ms | max {:.3} ms\n",
+                "  class {}: {} job(s) | sojourn p50 {:.3} ms | p99 {:.3} ms | max {:.3} ms | goodput {:.0} jobs/s\n",
                 c.class,
                 c.stats.count,
                 c.stats.p50_s * 1e3,
                 c.stats.p99_s * 1e3,
                 c.stats.max_s * 1e3,
+                c.goodput_per_s,
+            ));
+        }
+        if self.faults_injected > 0 || self.dead_letters > 0 || self.quarantined_partitions > 0 {
+            out.push_str(&format!(
+                "  faults: {} injected | {} retried in {:.3} ms | {} dead-letter(s) | {} partition(s) quarantined\n",
+                self.faults_injected,
+                self.retries,
+                self.retry_s * 1e3,
+                self.dead_letters,
+                self.quarantined_partitions,
             ));
         }
         if self.wide_jobs > 0 || self.rejected > 0 {
@@ -345,6 +366,18 @@ impl JobQueue {
         self.core.partition_cfg()
     }
 
+    /// Install a deterministic fault plan and recovery policy for jobs
+    /// drained from now on (DESIGN.md §18); `None` runs fault-free.
+    /// A declared dead rank quarantines every partition covering it —
+    /// rejected here if that would leave no healthy partition.
+    pub fn set_faults(
+        &mut self,
+        spec: Option<FaultSpec>,
+        policy: RecoveryPolicy,
+    ) -> Result<()> {
+        self.core.set_faults(spec, policy)
+    }
+
     /// Enqueue an already-boxed job plan under `name` (no re-boxing —
     /// the path `workloads::job` results take); returns its handle.
     /// Nothing executes until [`Self::wait`] / [`Self::wait_all`].
@@ -365,7 +398,12 @@ impl JobQueue {
     /// Drain the queue (if needed) and return one job's outcome.
     pub fn wait(&mut self, handle: &JobHandle) -> Result<&JobOutcome> {
         if handle.idx >= self.core.job_count() {
-            return Err(Error::msg(format!("unknown job handle #{}", handle.idx)));
+            // A forged handle is a clean config error, never a hang.
+            return Err(Error::Config(format!(
+                "unknown job handle #{} (the queue accepted {} submission(s))",
+                handle.idx,
+                self.core.job_count()
+            )));
         }
         if self.core.result(handle.idx).is_none() {
             self.core.drain_batch()?;

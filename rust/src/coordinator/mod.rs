@@ -449,6 +449,26 @@ impl PimSystem {
         Handle::create(func, kind, ctx)
     }
 
+    /// Arm deterministic fault injection on this system's machine
+    /// (DESIGN.md §18): fork the plan's seeded stream with `salt` (the
+    /// scheduler passes the job's submission index) under `policy`.
+    /// Every timed launch and transfer then runs behind the fault
+    /// guard; with no plan installed the guards are single branches
+    /// and every path stays bit- and timeline-identical.
+    pub fn install_faults(
+        &mut self,
+        spec: &crate::pim::FaultSpec,
+        salt: u64,
+        policy: crate::pim::RecoveryPolicy,
+    ) {
+        self.machine.install_faults(spec, salt, policy);
+    }
+
+    /// Faults injected into this system so far, in injection order.
+    pub fn fault_events(&self) -> &[crate::pim::FaultEvent] {
+        self.machine.fault_events()
+    }
+
     /// Modeled end-to-end timeline so far.
     pub fn timeline(&self) -> Timeline {
         self.machine.timeline()

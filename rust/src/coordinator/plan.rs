@@ -947,7 +947,7 @@ impl PimSystem {
         let mut folded_out = false;
         match sched {
             Some(sched) => {
-                self.charge_pipelined(&streams, out_row_bytes, t.seconds, &sched);
+                self.charge_pipelined(&streams, out_row_bytes, t.seconds, &sched)?;
                 folded_out = out_row_bytes > 0;
                 self.engine.note(format!(
                     "pipelined launch `{id}`: {} chunks ({} input stream(s){}), saved {:.3} ms",
@@ -957,7 +957,7 @@ impl PimSystem {
                     sched.saved_s * 1e3
                 ));
             }
-            None => self.machine.charge_kernel(t.seconds),
+            None => self.machine.guarded_launch(t.seconds, self.backend.as_ref())?,
         }
         self.engine.stats.launches += 1;
         if self.engine.shared.is_some() {
@@ -1058,15 +1058,20 @@ impl PimSystem {
         out_row_bytes: u64,
         exec_s: f64,
         sched: &PipeSchedule,
-    ) {
+    ) -> Result<()> {
         let n = self.machine.n_dpus() as u64;
+        // The chunk lanes are deferred charges computed by the chunk
+        // scheduler, so transfer faults are not injected here (a faulted
+        // chunk would invalidate the precomputed overlap); the launch
+        // itself still runs behind the fault guard.
         self.machine.charge_h2p(sched.busy_in_s, streams.iter().sum::<u64>() * n);
-        self.machine.charge_kernel(exec_s);
+        self.machine.guarded_launch(exec_s, self.backend.as_ref())?;
         if out_row_bytes > 0 {
             self.machine.charge_p2h(sched.busy_out_s, n * out_row_bytes);
         }
         self.machine.charge_overlap(sched.saved_s, sched.chunks as u64);
         self.engine.stats.pipelined_launches += 1;
+        Ok(())
     }
 
     /// Clear `src` links pointing at a freed array id, so a later array

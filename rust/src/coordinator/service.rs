@@ -52,11 +52,12 @@
 
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::{Arc, Mutex};
 
 use crate::backend::{self, BackendKind, ExecBackend};
 use crate::error::{Error, Result};
-use crate::pim::{DpuSet, PimConfig, PipelineMode, Timeline};
+use crate::pim::{DpuSet, FaultSpec, PimConfig, PipelineMode, RecoveryPolicy, Timeline};
 use crate::timing::{latency_stats, plan_gangs, LatencyStats};
 use crate::util::prng::Prng;
 
@@ -157,6 +158,13 @@ pub struct ServiceConfig {
     pub saturation: SaturationPolicy,
     /// Whether idle partitions merge under a lone job.
     pub resize: ResizePolicy,
+    /// Deterministic fault plan injected into every job (DESIGN.md
+    /// §18); `None` — the default — runs fault-free and bit-identical
+    /// to a service without the subsystem.
+    pub faults: Option<FaultSpec>,
+    /// How injected faults are recovered (retry budget, backoff,
+    /// quarantine).
+    pub recovery: RecoveryPolicy,
 }
 
 impl ServiceConfig {
@@ -173,6 +181,8 @@ impl ServiceConfig {
             queue_depth: 64,
             saturation: SaturationPolicy::Reject,
             resize: ResizePolicy::Dynamic,
+            faults: None,
+            recovery: RecoveryPolicy::default(),
         }
     }
 }
@@ -311,6 +321,11 @@ pub enum TicketStatus {
 pub struct ClassReport {
     pub class: SlaClass,
     pub stats: LatencyStats,
+    /// Completed jobs of this class per modeled second of device
+    /// makespan — the throughput that survives faults and quarantine
+    /// (dead-lettered jobs never count, so goodput falls exactly by
+    /// what recovery could not save).
+    pub goodput_per_s: f64,
 }
 
 /// Deterministic Poisson arrival trace: `n` nondecreasing instants
@@ -413,6 +428,15 @@ pub(crate) struct ServiceCore {
     rejected: u64,
     /// Largest arrival submitted so far (trace monotonicity guard).
     last_arrival: f64,
+    /// Deterministic fault plan injected into every job (DESIGN.md
+    /// §18); `None` runs fault-free.
+    faults: Option<FaultSpec>,
+    /// Recovery policy applied by every job's fault session.
+    recovery: RecoveryPolicy,
+    /// Per-partition quarantine mask derived from the plan's declared
+    /// dead rank: `true` lanes never admit work (their DPUs overlap
+    /// the dead rank), so their jobs re-admit onto healthy lanes.
+    quarantined: Vec<bool>,
 }
 
 impl ServiceCore {
@@ -460,7 +484,61 @@ impl ServiceCore {
             gangs: 0,
             rejected: 0,
             last_arrival: 0.0,
+            faults: None,
+            recovery: RecoveryPolicy::default(),
+            quarantined: vec![false; partitions],
         })
+    }
+
+    /// Install the fault plan and recovery policy (DESIGN.md §18) and
+    /// derive the quarantine mask from the plan's declared dead rank:
+    /// a partition is quarantined iff its DPU range intersects the
+    /// dead rank's.  Quarantine is pure scheduling — masked lanes
+    /// simply never admit, so the batch re-admits onto healthy lanes
+    /// (graceful degradation: lower throughput, never wrong bits).
+    /// Batch drains treat a declared dead rank as dead for the whole
+    /// drain; the online engine honors `dead-at` per admission.
+    pub(crate) fn set_faults(
+        &mut self,
+        spec: Option<FaultSpec>,
+        policy: RecoveryPolicy,
+    ) -> Result<()> {
+        let mut quarantined = vec![false; self.sets.len()];
+        if let Some(s) = &spec {
+            if let Some(dead) = s.dead_rank {
+                let n_ranks = self.parent_cfg.n_ranks();
+                if dead >= n_ranks {
+                    return Err(Error::Config(format!(
+                        "dead-rank {dead} out of range: the machine has {n_ranks} \
+                         rank(s) ({})",
+                        self.parent_cfg.topology_desc()
+                    )));
+                }
+                if policy.quarantine {
+                    let rank_dpus = self.parent_cfg.rank_dpus();
+                    let (rank_lo, rank_hi) = (dead * rank_dpus, (dead + 1) * rank_dpus);
+                    for (p, set) in self.sets.iter().enumerate() {
+                        let (lo, hi) = (set.first_dpu, set.first_dpu + set.n_dpus);
+                        if lo < rank_hi && rank_lo < hi {
+                            quarantined[p] = true;
+                        }
+                    }
+                    if quarantined.iter().all(|&q| q) {
+                        return Err(Error::Config(format!(
+                            "quarantining rank {dead} would leave no healthy \
+                             partition ({} partition(s) over {}); declare a \
+                             survivable dead rank or add partitions",
+                            self.sets.len(),
+                            self.parent_cfg.topology_desc()
+                        )));
+                    }
+                }
+            }
+        }
+        self.quarantined = quarantined;
+        self.faults = spec;
+        self.recovery = policy;
+        Ok(())
     }
 
     /// PR 5 batch semantics (the [`super::JobQueue`] shim's engine).
@@ -494,6 +572,7 @@ impl ServiceCore {
         core.saturation = sc.saturation;
         core.resize = sc.resize;
         core.set_sharing(sc.sharing);
+        core.set_faults(sc.faults, sc.recovery)?;
         Ok(core)
     }
 
@@ -615,19 +694,31 @@ impl ServiceCore {
         if self.waiting.is_empty() {
             return false;
         }
-        // The next admission instant: the earliest-free lane, floored
-        // by the earliest waiting arrival (ties: lowest lane).
-        let mut p = 0;
-        for l in 1..self.lanes.len() {
-            if self.lanes[l] < self.lanes[p] {
-                p = l;
-            }
-        }
         let earliest = self
             .waiting
             .iter()
             .map(|&i| self.arrivals[i])
             .fold(f64::INFINITY, f64::min);
+        // The next admission instant: the earliest-free lane, floored
+        // by the earliest waiting arrival (ties: lowest lane).
+        // Quarantined lanes (DESIGN.md §18) whose rank is dead by the
+        // candidate start are masked out of the scan — their jobs
+        // re-admit onto healthy lanes.  `set_faults` guarantees at
+        // least one healthy partition, so the scan always lands.
+        let dead_at = self.faults.as_ref().map_or(0.0, |s| s.dead_at_s);
+        let lane_blocked: Vec<bool> = (0..self.lanes.len())
+            .map(|l| self.quarantined[l] && self.lanes[l].max(earliest) >= dead_at)
+            .collect();
+        let mut p = usize::MAX;
+        for l in 0..self.lanes.len() {
+            if lane_blocked[l] {
+                continue;
+            }
+            if p == usize::MAX || self.lanes[l] < self.lanes[p] {
+                p = l;
+            }
+        }
+        assert!(p != usize::MAX, "set_faults keeps at least one healthy lane");
         let start = self.lanes[p].max(earliest);
         if start >= frontier {
             return false;
@@ -660,10 +751,12 @@ impl ServiceCore {
         // boundaries intact.
         let (mut a, mut b) = (p, p + 1);
         if self.resize == ResizePolicy::Dynamic && self.waiting.is_empty() {
-            while a > 0 && self.lanes[a - 1] <= start {
+            // Never widen over a quarantined lane: the merged set
+            // would cover the dead rank's DPUs.
+            while a > 0 && self.lanes[a - 1] <= start && !lane_blocked[a - 1] {
                 a -= 1;
             }
-            while b < self.lanes.len() && self.lanes[b] <= start {
+            while b < self.lanes.len() && self.lanes[b] <= start && !lane_blocked[b] {
                 b += 1;
             }
         }
@@ -699,21 +792,45 @@ impl ServiceCore {
                 match built_sys {
                     Err(e) => Err(e.to_string()),
                     Ok(mut sys) => {
-                        let run = (|| -> Result<Vec<i32>> {
-                            sys.set_pipeline(self.pipeline)?;
-                            let out = plan(&mut sys)?;
-                            // Drain deferred work so the job's
-                            // timeline is complete before it becomes
-                            // the lane charge.
-                            sys.run()?;
-                            Ok(out)
-                        })();
-                        let timeline = sys.timeline();
-                        let cache = sys.cache_stats();
-                        let ledger = sys.take_sharing_ledger();
-                        self.cached = Some(sys.into_backend());
-                        run.map(|out| (out, timeline, cache, ledger))
-                            .map_err(|e| e.to_string())
+                        if let Some(spec) = &self.faults {
+                            // Salted by submission index: every job
+                            // replays its own fault stream no matter
+                            // what ran before it.
+                            sys.install_faults(spec, idx as u64, self.recovery);
+                        }
+                        let pipeline = self.pipeline;
+                        // A panicking job closure must not take the
+                        // service down (or poison its lock): catch it
+                        // at the execution boundary and convert to a
+                        // per-job failure.
+                        let caught = catch_unwind(AssertUnwindSafe(|| {
+                            let run = (|| -> Result<Vec<i32>> {
+                                sys.set_pipeline(pipeline)?;
+                                let out = plan(&mut sys)?;
+                                // Drain deferred work so the job's
+                                // timeline is complete before it
+                                // becomes the lane charge.
+                                sys.run()?;
+                                Ok(out)
+                            })();
+                            let timeline = sys.timeline();
+                            let cache = sys.cache_stats();
+                            let ledger = sys.take_sharing_ledger();
+                            (run, timeline, cache, ledger, sys)
+                        }));
+                        match caught {
+                            Ok((run, timeline, cache, ledger, sys)) => {
+                                self.cached = Some(sys.into_backend());
+                                run.map(|out| (out, timeline, cache, ledger))
+                                    .map_err(|e| e.to_string())
+                            }
+                            // The system (and its backend) died with
+                            // the panic — never recycle either.
+                            Err(_) => Err(Error::JobPanicked(
+                                self.names[idx].clone(),
+                            )
+                            .to_string()),
+                        }
                     }
                 }
             }
@@ -839,30 +956,47 @@ impl ServiceCore {
         let mut wide_jobs = 0;
         let (mut dedups, mut dedup_saved) = (0u64, 0.0f64);
         let (mut members, mut colaunch_saved) = (0u64, 0.0f64);
+        let (mut faults_injected, mut retries, mut retry_s) = (0u64, 0u64, 0.0f64);
+        let mut dead_letters = 0u64;
         let mut sojourns: HashMap<u8, Vec<f64>> = HashMap::new();
         for r in &self.results {
-            if let Some(Ok(o)) = r {
-                jobs += 1;
-                if o.dpus > self.part_cfg.n_dpus {
-                    wide_jobs += 1;
+            match r {
+                Some(Ok(o)) => {
+                    jobs += 1;
+                    if o.dpus > self.part_cfg.n_dpus {
+                        wide_jobs += 1;
+                    }
+                    dedups += o.timeline.bcast_dedups;
+                    dedup_saved += o.timeline.bcast_dedup_saved_s;
+                    members += o.timeline.colaunched;
+                    colaunch_saved += o.timeline.colaunch_saved_s;
+                    faults_injected += o.timeline.faults_injected;
+                    retries += o.timeline.retries;
+                    retry_s += o.timeline.retry_s;
+                    if self.mode == AdmissionMode::Online {
+                        sojourns
+                            .entry(o.class.rank())
+                            .or_default()
+                            .push(o.sojourn_s());
+                    }
                 }
-                dedups += o.timeline.bcast_dedups;
-                dedup_saved += o.timeline.bcast_dedup_saved_s;
-                members += o.timeline.colaunched;
-                colaunch_saved += o.timeline.colaunch_saved_s;
-                if self.mode == AdmissionMode::Online {
-                    sojourns
-                        .entry(o.class.rank())
-                        .or_default()
-                        .push(o.sojourn_s());
-                }
+                // Dead letters are the jobs whose fault history
+                // exhausted the retry budget (the error text carries
+                // the attribution).
+                Some(Err(e)) if e.contains("dead-letter") => dead_letters += 1,
+                _ => {}
             }
         }
         let mut classes = Vec::new();
         for class in [SlaClass::Interactive, SlaClass::Standard, SlaClass::Batch] {
             if let Some(samples) = sojourns.get(&class.rank()) {
                 if let Some(stats) = latency_stats(samples) {
-                    classes.push(ClassReport { class, stats });
+                    let goodput_per_s = if makespan > 0.0 {
+                        samples.len() as f64 / makespan
+                    } else {
+                        0.0
+                    };
+                    classes.push(ClassReport { class, stats, goodput_per_s });
                 }
             }
         }
@@ -881,6 +1015,11 @@ impl ServiceCore {
             classes,
             wide_jobs,
             rejected: self.rejected,
+            faults_injected,
+            retries,
+            retry_s,
+            dead_letters,
+            quarantined_partitions: self.quarantined.iter().filter(|&&q| q).count(),
         }
     }
 
@@ -920,9 +1059,12 @@ impl ServiceCore {
         let threads = self.threads;
         let pipeline = self.pipeline;
         let shared = &self.shared;
+        let faults = self.faults.clone();
+        let recovery = self.recovery;
+        let names = &self.names;
         std::thread::scope(|s| {
             for wid in 0..workers {
-                let (queue, done, topo) = (&queue, &done, &topo);
+                let (queue, done, topo, faults) = (&queue, &done, &topo, &faults);
                 s.spawn(move || {
                     // One backend instance per worker, reused across
                     // every job it runs, so the arena staging pools
@@ -943,21 +1085,47 @@ impl ServiceCore {
                         }) {
                             Err(e) => Err(e.to_string()),
                             Ok(mut sys) => {
-                                let run = (|| -> Result<Vec<i32>> {
-                                    sys.set_pipeline(pipeline)?;
-                                    let out = plan(&mut sys)?;
-                                    // Drain deferred work so the job's
-                                    // timeline is complete before it
-                                    // becomes the lane charge.
-                                    sys.run()?;
-                                    Ok(out)
-                                })();
-                                let timeline = sys.timeline();
-                                let cache = sys.cache_stats();
-                                let ledger = sys.take_sharing_ledger();
-                                cached = Some(sys.into_backend());
-                                run.map(|out| (out, timeline, cache, ledger))
-                                    .map_err(|e| e.to_string())
+                                if let Some(spec) = faults {
+                                    // Salted by submission index, not
+                                    // worker id: the fault stream is
+                                    // deterministic however the racing
+                                    // workers split the queue.
+                                    sys.install_faults(spec, idx as u64, recovery);
+                                }
+                                // Catch job panics at the worker
+                                // boundary: a panicking closure fails
+                                // its own job, never the drain (and
+                                // never poisons the result lock via an
+                                // unwinding scoped thread).
+                                let caught = catch_unwind(AssertUnwindSafe(|| {
+                                    let run = (|| -> Result<Vec<i32>> {
+                                        sys.set_pipeline(pipeline)?;
+                                        let out = plan(&mut sys)?;
+                                        // Drain deferred work so the
+                                        // job's timeline is complete
+                                        // before it becomes the lane
+                                        // charge.
+                                        sys.run()?;
+                                        Ok(out)
+                                    })();
+                                    let timeline = sys.timeline();
+                                    let cache = sys.cache_stats();
+                                    let ledger = sys.take_sharing_ledger();
+                                    (run, timeline, cache, ledger, sys)
+                                }));
+                                match caught {
+                                    Ok((run, timeline, cache, ledger, sys)) => {
+                                        cached = Some(sys.into_backend());
+                                        run.map(|out| (out, timeline, cache, ledger))
+                                            .map_err(|e| e.to_string())
+                                    }
+                                    // The system died with the panic —
+                                    // never recycle its backend.
+                                    Err(_) => Err(Error::JobPanicked(
+                                        names[idx].clone(),
+                                    )
+                                    .to_string()),
+                                }
                             }
                         };
                         // Attribute failures to the worker's partition
@@ -980,7 +1148,14 @@ impl ServiceCore {
             .iter()
             .filter_map(|(_, r)| r.as_ref().ok().map(|(_, t, _, _)| t.total_s()))
             .collect();
-        let sched = crate::timing::schedule_jobs(&durations, &mut self.lanes);
+        // Quarantined lanes are masked out of admission (DESIGN.md
+        // §18): with no fault plan the mask is all-false and this is
+        // exactly the PR 5 earliest-free schedule.
+        let sched = crate::timing::schedule_jobs_masked(
+            &durations,
+            &mut self.lanes,
+            &self.quarantined,
+        );
         let mut admitted = 0;
         for (idx, res) in done {
             let stored = match res {
@@ -1129,7 +1304,14 @@ impl PimService {
     pub fn wait(&self, ticket: &JobTicket) -> Result<JobOutcome> {
         let mut core = self.inner.lock().expect("service lock");
         if ticket.seq >= core.job_count() {
-            return Err(Error::msg(format!("unknown job ticket #{}", ticket.seq)));
+            // A forged or stale ticket is a clean config error, never
+            // a hang or panic — and waits after quiesce (or repeated
+            // waits) fall through to the cached outcome below.
+            return Err(Error::Config(format!(
+                "unknown job ticket #{} (the service accepted {} submission(s))",
+                ticket.seq,
+                core.job_count()
+            )));
         }
         if core.result(ticket.seq).is_none() {
             core.advance(f64::INFINITY);

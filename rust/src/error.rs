@@ -44,6 +44,19 @@ pub enum Error {
     /// run the wrong path with everything green.
     Config(String),
 
+    /// An injected hardware fault exhausted its operation's retry
+    /// budget (DESIGN.md §18): the dead-letter path.  Carries the
+    /// fault history (kind, rank, virtual time, attempt) so the
+    /// failure is attributable; the scheduler's partition prefix
+    /// completes the rank + partition attribution.
+    Fault(String),
+
+    /// A job closure panicked inside a partition worker.  The panic is
+    /// caught at the execution boundary so one misbehaving tenant
+    /// cannot poison the shared service lock for every other producer;
+    /// carries the job name.
+    JobPanicked(String),
+
     /// The serving layer's bounded admission queue is full and the
     /// saturation policy is `Reject`: the submission was refused, not
     /// queued.  Callers retry, shed load, or switch the service to the
@@ -68,6 +81,8 @@ impl fmt::Display for Error {
             Error::Artifact(e) => write!(f, "artifact: {e}"),
             Error::Handle(e) => write!(f, "handle: {e}"),
             Error::Config(e) => write!(f, "config: {e}"),
+            Error::Fault(e) => write!(f, "fault: {e}"),
+            Error::JobPanicked(name) => write!(f, "job panicked: {name}"),
             Error::Saturated(e) => write!(f, "saturated: {e}"),
             Error::Msg(e) => write!(f, "{e}"),
         }
@@ -118,6 +133,11 @@ mod tests {
             Error::Saturated("queue full (depth 4)".into()).to_string(),
             "saturated: queue full (depth 4)"
         );
+        assert_eq!(
+            Error::Fault("dead-letter after 3 retries".into()).to_string(),
+            "fault: dead-letter after 3 retries"
+        );
+        assert_eq!(Error::JobPanicked("mlp#2".into()).to_string(), "job panicked: mlp#2");
         assert_eq!(Error::msg("plain").to_string(), "plain");
     }
 

@@ -7,10 +7,11 @@
 //! through this type, so functional bytes and modeled seconds stay in
 //! sync by construction.
 
-use crate::backend::ExecBackend;
+use crate::backend::{ExecBackend, LaunchStatus};
 use crate::error::{Error, Result};
 
 use super::config::PimConfig;
+use super::faults::{FaultEvent, FaultKind, FaultSession, FaultSpec, RecoveryPolicy};
 use super::memory::{MramAllocator, MramBank};
 use super::xfer::{transfer_seconds, XferKind};
 
@@ -91,6 +92,18 @@ pub struct Timeline {
     /// 1 when this timeline's job joined a co-launch gang, else 0
     /// (summing across a batch counts the gang members).
     pub colaunched: u64,
+    /// Fault-recovery retry lane (DESIGN.md §18): modeled seconds spent
+    /// reissuing faulted launches/transfers plus their exponential
+    /// backoff waits.  Its own lane — the phase lanes above keep only
+    /// the successful attempt, so a fault-free run and a recovered run
+    /// have identical phase charges and differ exactly by this lane.
+    /// Added in [`Timeline::total_s`].  Always 0 with faults off.
+    pub retry_s: f64,
+    /// Recovery reissues performed (one per absorbed fault).
+    pub retries: u64,
+    /// Faults injected into this lane's operations (absorbed + the one
+    /// that dead-lettered, when recovery ran out of budget).
+    pub faults_injected: u64,
 }
 
 impl Timeline {
@@ -99,6 +112,7 @@ impl Timeline {
         self.host_to_pim_s + self.pim_to_host_s + self.kernel_s + self.host_merge_s
             + self.merge_s
             + self.launch_s
+            + self.retry_s
             - self.overlap_saved_s
             - self.merge_overlap_saved_s
             - self.bcast_dedup_saved_s
@@ -294,13 +308,30 @@ pub struct PimMachine {
     banks: Vec<MramBank>,
     allocator: MramAllocator,
     timeline: Timeline,
+    /// Installed fault-injection stream + recovery policy (DESIGN.md
+    /// §18).  `None` (the default) keeps every timed path exactly as
+    /// it was: no draws, no checksums, no extra lanes.
+    faults: Option<(FaultSession, RecoveryPolicy)>,
 }
 
 impl PimMachine {
     pub fn new(cfg: PimConfig) -> Self {
         let banks = (0..cfg.n_dpus).map(|_| MramBank::new(cfg.mram_bytes)).collect();
         let allocator = MramAllocator::new(cfg.mram_bytes, cfg.dma_align);
-        PimMachine { cfg, banks, allocator, timeline: Timeline::default() }
+        PimMachine { cfg, banks, allocator, timeline: Timeline::default(), faults: None }
+    }
+
+    /// Arm fault injection on this lane: fork the plan's seeded stream
+    /// with `salt` (the job's submission index, so racing batch workers
+    /// cannot perturb each other's draws) under `policy`.
+    pub fn install_faults(&mut self, spec: &FaultSpec, salt: u64, policy: RecoveryPolicy) {
+        self.faults = Some((FaultSession::new(spec, salt), policy));
+    }
+
+    /// Faults injected into this lane so far, in injection order (the
+    /// dead-letter message renders the same history).
+    pub fn fault_events(&self) -> &[FaultEvent] {
+        self.faults.as_ref().map(|(s, _)| s.events.as_slice()).unwrap_or(&[])
     }
 
     pub fn n_dpus(&self) -> usize {
@@ -400,6 +431,7 @@ impl PimMachine {
         exec.write_rows(&mut self.banks, addr, row_len, fill)?;
         let n = self.banks.len();
         let t = transfer_seconds(&self.cfg, XferKind::Parallel, n, row_len as u64);
+        self.guard_transfer(t, None, "sharded row scatter")?;
         self.timeline.host_to_pim_s += t;
         self.timeline.bytes_h2p += (n * row_len) as u64;
         Ok(())
@@ -430,6 +462,7 @@ impl PimMachine {
         let out = exec.read_rows(&self.banks, addr, take)?;
         let n = self.banks.len();
         let t = transfer_seconds(&self.cfg, XferKind::Parallel, n, row_len);
+        self.guard_transfer(t, None, "sharded row gather")?;
         self.timeline.pim_to_host_s += t;
         self.timeline.bytes_p2h += n as u64 * row_len;
         Ok(out)
@@ -599,6 +632,7 @@ impl PimMachine {
             self.bank_mut(dpu)?.write(addr, buf)?;
         }
         let t = transfer_seconds(&self.cfg, XferKind::Parallel, per_dpu.len(), len as u64);
+        self.guard_transfer(t, Some(first), "parallel push")?;
         self.timeline.host_to_pim_s += t;
         self.timeline.bytes_h2p += (per_dpu.len() * len) as u64;
         Ok(())
@@ -612,6 +646,7 @@ impl PimMachine {
             out.push(self.bank(dpu)?.read(addr, len)?.to_vec());
         }
         let t = transfer_seconds(&self.cfg, XferKind::Parallel, n_dpus, len);
+        self.guard_transfer(t, out.first().map(|b| b.as_slice()), "parallel pull")?;
         self.timeline.pim_to_host_s += t;
         self.timeline.bytes_p2h += n_dpus as u64 * len;
         Ok(out)
@@ -624,6 +659,7 @@ impl PimMachine {
         }
         let t =
             transfer_seconds(&self.cfg, XferKind::Broadcast, self.n_dpus(), bytes.len() as u64);
+        self.guard_transfer(t, Some(bytes), "broadcast push")?;
         self.timeline.host_to_pim_s += t;
         self.timeline.bytes_h2p += bytes.len() as u64; // counted once
         Ok(())
@@ -634,9 +670,59 @@ impl PimMachine {
     pub fn pull_serial(&mut self, dpu: usize, addr: u64, len: u64) -> Result<Vec<u8>> {
         let out = self.bank(dpu)?.read(addr, len)?.to_vec();
         let t = transfer_seconds(&self.cfg, XferKind::Serial, 1, len);
+        self.guard_transfer(t, Some(&out), "serial pull")?;
         self.timeline.pim_to_host_s += t;
         self.timeline.bytes_p2h += len;
         Ok(out)
+    }
+
+    // ---------------------------------------------------------------
+    // Fault injection + recovery (DESIGN.md §18).  Both guards follow
+    // the same shape: with no session installed they are a single
+    // branch (faults-off stays bit- and timeline-identical); with one,
+    // each injected fault costs a reissue — the wasted attempt plus an
+    // exponentially growing backoff, charged to the retry lane — until
+    // the draw comes up clean or the budget dead-letters the op.
+    // Functional bank state is never corrupted: the model detects the
+    // fault (checksum mismatch / status word) and resends the original
+    // payload, which is why recovered runs are bit-identical to
+    // fault-free runs by construction.
+    // ---------------------------------------------------------------
+
+    /// Fault hook around one timed transfer whose successful attempt
+    /// costs `t_s` modeled seconds.  `payload` feeds the FNV checksum
+    /// check when the marshalled bytes are at hand (push/pull buffers);
+    /// row-fill paths pass `None` and detect by command timeout alone.
+    fn guard_transfer(&mut self, t_s: f64, payload: Option<&[u8]>, what: &str) -> Result<()> {
+        let Some((mut session, policy)) = self.faults.take() else { return Ok(()) };
+        let n_ranks = self.cfg.n_ranks();
+        let mut attempt: u32 = 0;
+        while let Some((kind, rank)) = session.draw_transfer(n_ranks) {
+            let detected = match (kind, payload) {
+                (FaultKind::BitFlip, Some(p)) => session.bitflip_detected(p),
+                _ => true, // stalls and draw-only sites detect by timeout
+            };
+            assert!(detected, "a single-bit flip cannot evade the FNV checksum");
+            attempt += 1;
+            self.timeline.faults_injected += 1;
+            session.record(kind, rank, self.timeline.total_s(), attempt);
+            if attempt > policy.retry_budget {
+                let msg = format!(
+                    "{what} on rank {rank} ({}) exhausted its retry budget of {}: \
+                     dead-letter (history: {})",
+                    self.cfg.topology_desc(),
+                    policy.retry_budget,
+                    session.history()
+                );
+                self.faults = Some((session, policy));
+                return Err(Error::Fault(msg));
+            }
+            let backoff = policy.backoff_base_s * (1u64 << (attempt - 1).min(32)) as f64;
+            self.timeline.retry_s += t_s + backoff;
+            self.timeline.retries += 1;
+        }
+        self.faults = Some((session, policy));
+        Ok(())
     }
 
     // ---------------------------------------------------------------
@@ -648,6 +734,55 @@ impl PimMachine {
         self.timeline.kernel_s += max_dpu_s;
         self.timeline.launch_s += self.cfg.launch_latency_s;
         self.timeline.launches += 1;
+    }
+
+    /// [`Self::charge_kernel`] behind the launch fault guard: consult
+    /// the executing backend's status word for every injected launch
+    /// failure, reissue (wasted launch overhead + backoff on the retry
+    /// lane) until the status comes back [`LaunchStatus::Ok`], then
+    /// charge the successful launch normally.  The launch sites route
+    /// through here so fault sequences are backend-invariant: every
+    /// backend surfaces the same status word for the same draw.
+    pub fn guarded_launch(&mut self, max_dpu_s: f64, backend: &dyn ExecBackend) -> Result<()> {
+        if let Some((mut session, policy)) = self.faults.take() {
+            let n_ranks = self.cfg.n_ranks();
+            let mut attempt: u32 = 0;
+            while let Some((rank, code)) = session.draw_launch(n_ranks) {
+                let status = backend.launch_status(Some(code));
+                assert!(
+                    status != LaunchStatus::Ok,
+                    "an injected fault code must surface as a non-OK launch status"
+                );
+                attempt += 1;
+                self.timeline.faults_injected += 1;
+                session.record(FaultKind::LaunchFail, rank, self.timeline.total_s(), attempt);
+                if attempt > policy.retry_budget {
+                    let msg = format!(
+                        "kernel launch on rank {rank} ({}) exhausted its retry budget \
+                         of {}: dead-letter (history: {})",
+                        self.cfg.topology_desc(),
+                        policy.retry_budget,
+                        session.history()
+                    );
+                    self.faults = Some((session, policy));
+                    return Err(Error::Fault(msg));
+                }
+                // A failed launch wastes its fixed overhead, not kernel
+                // time — the DPUs never ran the body.
+                let backoff = policy.backoff_base_s * (1u64 << (attempt - 1).min(32)) as f64;
+                self.timeline.retry_s += self.cfg.launch_latency_s + backoff;
+                self.timeline.retries += 1;
+            }
+            if let LaunchStatus::Fault(code) = backend.launch_status(None) {
+                self.faults = Some((session, policy));
+                return Err(Error::Fault(format!(
+                    "launch reported status {code:#x} without an injected fault"
+                )));
+            }
+            self.faults = Some((session, policy));
+        }
+        self.charge_kernel(max_dpu_s);
+        Ok(())
     }
 
     /// Charge host-side merge work of `elems` accumulator elements
@@ -1007,6 +1142,66 @@ mod tests {
         assert!(matches!(err, Error::Config(_)), "{err}");
         assert!(err.to_string().contains("non-adjacent"), "{err}");
         assert!(DpuSet::merge(&cfg, &[]).is_err());
+    }
+
+    #[test]
+    fn fault_guard_charges_only_the_retry_lane_and_never_the_bits() {
+        let spec = FaultSpec { seed: 11, rate: 0.6, dead_rank: None, dead_at_s: 0.0 };
+        let mut clean = machine();
+        let mut faulty = machine();
+        faulty.install_faults(
+            &spec,
+            0,
+            RecoveryPolicy { retry_budget: 64, ..RecoveryPolicy::default() },
+        );
+        let addr_c = clean.alloc(32).unwrap();
+        let addr_f = faulty.alloc(32).unwrap();
+        let bufs: Vec<Vec<u8>> = (0..4).map(|d| vec![d as u8 + 1; 32]).collect();
+        for _ in 0..8 {
+            clean.push_parallel(addr_c, &bufs).unwrap();
+            faulty.push_parallel(addr_f, &bufs).unwrap();
+        }
+        let (tc, tf) = (clean.timeline(), faulty.timeline());
+        // Phase lanes carry only the successful attempts — identical to
+        // the fault-free run; recovery cost lives on the retry lane.
+        assert_eq!(tc.host_to_pim_s, tf.host_to_pim_s);
+        assert_eq!(tc.bytes_h2p, tf.bytes_h2p);
+        assert!(tf.faults_injected > 0, "rate 0.6 over 8 pushes must fire");
+        assert_eq!(tf.retries, tf.faults_injected, "every fault was absorbed");
+        assert!(tf.retry_s > 0.0);
+        assert!((tf.total_s() - (tc.total_s() + tf.retry_s)).abs() < 1e-12);
+        assert_eq!(faulty.fault_events().len(), tf.faults_injected as usize);
+        for d in 0..4 {
+            assert_eq!(
+                clean.read_bytes(d, addr_c, 32).unwrap(),
+                faulty.read_bytes(d, addr_f, 32).unwrap(),
+                "recovered bits identical to fault-free bits"
+            );
+        }
+    }
+
+    #[test]
+    fn guarded_launch_dead_letters_when_the_budget_is_exhausted() {
+        let exec = crate::backend::make(crate::backend::BackendKind::Seq, 1).unwrap();
+        let mut m = machine();
+        let hot = FaultSpec { seed: 5, rate: 1.0, dead_rank: None, dead_at_s: 0.0 };
+        m.install_faults(&hot, 0, RecoveryPolicy { retry_budget: 3, ..RecoveryPolicy::default() });
+        let err = m.guarded_launch(0.5, exec.as_ref()).unwrap_err();
+        assert!(matches!(err, Error::Fault(_)), "{err}");
+        assert!(err.to_string().contains("dead-letter"), "{err}");
+        assert!(err.to_string().contains("rank"), "attribution in the message: {err}");
+        let t = m.timeline();
+        assert_eq!(t.faults_injected, 4, "3 absorbed + the killing fault");
+        assert_eq!(t.retries, 3);
+        assert_eq!(t.launches, 0, "the launch never succeeded");
+        assert_eq!(t.kernel_s, 0.0);
+        // With a calm plan the guard passes through to a normal charge.
+        let calm = FaultSpec { seed: 5, rate: 0.0, dead_rank: None, dead_at_s: 0.0 };
+        let mut m = machine();
+        m.install_faults(&calm, 0, RecoveryPolicy::default());
+        m.guarded_launch(0.5, exec.as_ref()).unwrap();
+        let t = m.timeline();
+        assert_eq!((t.launches, t.kernel_s, t.retry_s), (1, 0.5, 0.0));
     }
 
     #[test]

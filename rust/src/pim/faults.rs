@@ -1,0 +1,410 @@
+//! Deterministic fault injection and recovery (DESIGN.md §18).
+//!
+//! Real UPMEM deployments see transient DPU launch failures, rank
+//! stalls, and corrupted host<->PIM transfers; the PIM adoption
+//! literature names reliability as the gap between prototypes and
+//! production.  This module models those failures *deterministically*:
+//! a seeded [`FaultSpec`] drives a per-job [`FaultSession`] whose
+//! injection draws come from the crate's own [`Prng`], so the same seed
+//! always produces the same fault sequence, the same retry count, and —
+//! because injection never touches functional bank state — the same
+//! final bits as the fault-free run whenever recovery succeeds.
+//!
+//! Detection is modeled faithfully: transfers carry FNV-1a checksums
+//! ([`fnv1a`]; a single flipped bit always changes the digest, see
+//! [`FaultSession::bitflip_detected`]) and kernel launches report a
+//! status word through `ExecBackend::launch_status`.  Recovery is
+//! bounded retry with exponential backoff, charged in virtual time on
+//! the `Timeline` retry lane; budget exhaustion surfaces as
+//! [`crate::error::Error::Fault`] carrying the op's fault history — the
+//! scheduler's dead-letter path.  With no spec installed every hook is
+//! a no-op and every path stays bit- and timeline-identical to a build
+//! without this module.
+
+use crate::error::{Error, Result};
+use crate::util::prng::Prng;
+
+/// FNV-1a 64-bit offset basis.
+const FNV_OFFSET: u64 = 0xcbf29ce484222325;
+/// FNV-1a 64-bit prime (odd, so the per-byte multiply is injective
+/// mod 2^64 — the property the detection guarantee rests on).
+const FNV_PRIME: u64 = 0x100000001b3;
+
+/// FNV-1a over a byte slice — the per-transfer checksum.  Each step is
+/// `h = (h ^ byte) * prime`; xor with a fixed byte and multiplication
+/// by an odd constant are both bijections on `u64`, so two payloads
+/// differing in exactly one byte can never collide: a single bit flip
+/// is always detected.
+pub fn fnv1a(bytes: &[u8]) -> u64 {
+    let mut h = FNV_OFFSET;
+    for &b in bytes {
+        h = (h ^ b as u64).wrapping_mul(FNV_PRIME);
+    }
+    h
+}
+
+/// Order-independent checksum of a per-DPU row set: XOR of per-row
+/// FNV-1a digests (each salted with the row length), so rank-sharded
+/// backends that marshal rows in any worker order still agree on the
+/// transfer's checksum.
+pub fn checksum_rows(rows: &[Vec<u8>]) -> u64 {
+    rows.iter().fold(0u64, |acc, r| {
+        acc ^ fnv1a(r).wrapping_mul(FNV_PRIME) ^ r.len() as u64
+    })
+}
+
+/// Failure class a fault plan can inject.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultKind {
+    /// A kernel launch that never completes: the backend's status word
+    /// comes back non-zero and the launch must be reissued.
+    LaunchFail,
+    /// A per-rank transfer engine stall: the command times out and the
+    /// transfer must be reissued.
+    TransferStall,
+    /// Bit-flip corruption in flight: the FNV checksum mismatches and
+    /// the payload must be resent (bank state keeps the good bytes —
+    /// the model resends the original payload, which is exactly why
+    /// successful recovery is bit-identical by construction).
+    BitFlip,
+}
+
+impl std::fmt::Display for FaultKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            FaultKind::LaunchFail => "launch-fail",
+            FaultKind::TransferStall => "transfer-stall",
+            FaultKind::BitFlip => "bit-flip",
+        })
+    }
+}
+
+/// One injected fault, recorded for attribution (the dead-letter
+/// message and `--explain` surface these).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultEvent {
+    pub kind: FaultKind,
+    /// Rank the fault was attributed to.
+    pub rank: usize,
+    /// Virtual time on the injecting lane when the fault hit.
+    pub at_s: f64,
+    /// Retry attempt that absorbed it (1 = first reissue).
+    pub attempt: u32,
+}
+
+impl std::fmt::Display for FaultEvent {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} on rank {} at {:.3} ms (attempt {})",
+            self.kind,
+            self.rank,
+            self.at_s * 1e3,
+            self.attempt
+        )
+    }
+}
+
+/// The declared fault plan: what to inject, seeded so the whole
+/// sequence replays bit-identically.  Parsed from `--faults` /
+/// `SIMPLEPIM_FAULTS` (`off`, or `seed=7,rate=0.05[,dead-rank=1]
+/// [,dead-at=0.002]`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Seed of the injection stream (forked per job, so racing batch
+    /// workers cannot perturb each other's draws).
+    pub seed: u64,
+    /// Per-operation fault probability in `[0, 1]`.
+    pub rate: f64,
+    /// A rank declared dead: the scheduler quarantines every partition
+    /// covering it and re-admits their jobs onto healthy ranks.
+    pub dead_rank: Option<usize>,
+    /// Virtual-time point at which `dead_rank` dies (0 = before any
+    /// job starts).
+    pub dead_at_s: f64,
+}
+
+impl FaultSpec {
+    /// Parse a fault-plan declaration.  `src` names the flag or env var
+    /// for diagnostics; `off` (and the empty string) disable injection.
+    /// Unknown keys, garbage numbers, and rates outside `[0, 1]` are
+    /// hard config errors naming the source and value — the house rule:
+    /// a typo must never silently run fault-free.
+    pub fn parse(src: &str, v: &str) -> Result<Option<FaultSpec>> {
+        let v = v.trim();
+        if v.is_empty() || v == "off" {
+            return Ok(None);
+        }
+        let mut spec = FaultSpec { seed: 0, rate: 0.0, dead_rank: None, dead_at_s: 0.0 };
+        let mut saw_seed = false;
+        for part in v.split(',') {
+            let (key, val) = part.split_once('=').ok_or_else(|| {
+                Error::Config(format!(
+                    "{src} expects off or key=value pairs (seed=,rate=,dead-rank=,dead-at=), \
+                     got `{part}` in `{v}`"
+                ))
+            })?;
+            match key.trim() {
+                "seed" => {
+                    spec.seed = val.trim().parse().map_err(|_| {
+                        Error::Config(format!("{src}: seed expects an integer, got `{val}`"))
+                    })?;
+                    saw_seed = true;
+                }
+                "rate" => {
+                    spec.rate = match val.trim().parse::<f64>() {
+                        Ok(r) if r.is_finite() && (0.0..=1.0).contains(&r) => r,
+                        _ => {
+                            return Err(Error::Config(format!(
+                                "{src}: rate expects a probability in [0, 1], got `{val}`"
+                            )))
+                        }
+                    };
+                }
+                "dead-rank" => {
+                    spec.dead_rank = Some(val.trim().parse().map_err(|_| {
+                        Error::Config(format!(
+                            "{src}: dead-rank expects a rank index, got `{val}`"
+                        ))
+                    })?);
+                }
+                "dead-at" => {
+                    spec.dead_at_s = match val.trim().parse::<f64>() {
+                        Ok(t) if t.is_finite() && t >= 0.0 => t,
+                        _ => {
+                            return Err(Error::Config(format!(
+                                "{src}: dead-at expects non-negative seconds, got `{val}`"
+                            )))
+                        }
+                    };
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "{src}: unknown fault key `{other}` in `{v}` \
+                         (expected seed, rate, dead-rank, dead-at)"
+                    )))
+                }
+            }
+        }
+        if !saw_seed {
+            return Err(Error::Config(format!(
+                "{src}: a fault plan must declare seed= (determinism is the contract), \
+                 got `{v}`"
+            )));
+        }
+        Ok(Some(spec))
+    }
+
+    /// Render back to the canonical `key=value` spelling (the `info`
+    /// provenance table and report headers print this).
+    pub fn render(&self) -> String {
+        let mut s = format!("seed={},rate={}", self.seed, self.rate);
+        if let Some(r) = self.dead_rank {
+            s.push_str(&format!(",dead-rank={r}"));
+        }
+        if self.dead_at_s > 0.0 {
+            s.push_str(&format!(",dead-at={}", self.dead_at_s));
+        }
+        s
+    }
+}
+
+/// How faults are recovered: bounded retry with exponential backoff
+/// (charged on the `Timeline` retry lane) and optional rank
+/// quarantine.  Configured per service/queue; `SIMPLEPIM_FAULT_RETRIES`
+/// and `SIMPLEPIM_FAULT_BACKOFF` set the defaults.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RecoveryPolicy {
+    /// Reissues allowed per operation before it dead-letters.
+    pub retry_budget: u32,
+    /// First backoff in modeled seconds; attempt `k` waits
+    /// `backoff_base_s * 2^(k-1)`.
+    pub backoff_base_s: f64,
+    /// Whether a declared dead rank quarantines its partitions (off =
+    /// jobs on the dead rank dead-letter instead of migrating).
+    pub quarantine: bool,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> Self {
+        RecoveryPolicy { retry_budget: 3, backoff_base_s: 1e-4, quarantine: true }
+    }
+}
+
+/// One lane's live injection stream: the seeded draw state plus the
+/// fault history it has produced.  Forked from the plan per job
+/// (`FaultSession::new(spec, salt)` with the job's submission index as
+/// salt), so the sequence a job sees depends only on the plan seed and
+/// its own index — never on which worker thread or partition ran it.
+#[derive(Debug, Clone)]
+pub struct FaultSession {
+    prng: Prng,
+    rate: f64,
+    /// Every fault injected into this lane, in injection order.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultSession {
+    pub fn new(spec: &FaultSpec, salt: u64) -> FaultSession {
+        // splitmix-style spread of (seed, salt) so per-job streams are
+        // independent; same constant as `Prng::fork`.
+        let seed = spec.seed ^ salt.wrapping_mul(0x9E3779B97F4A7C15);
+        FaultSession { prng: Prng::new(seed), rate: spec.rate, events: Vec::new() }
+    }
+
+    /// Draw the launch-site injection decision: `Some((rank, code))`
+    /// when this launch faults, attributed to a rank of the `n_ranks`
+    /// the launch spans, with a non-zero device status code.
+    pub fn draw_launch(&mut self, n_ranks: usize) -> Option<(usize, u32)> {
+        if !self.prng.chance(self.rate) {
+            return None;
+        }
+        let rank = self.prng.below(n_ranks.max(1) as u64) as usize;
+        let code = (self.prng.next_u64() as u32) | 1; // never the OK word
+        Some((rank, code))
+    }
+
+    /// Draw the transfer-site injection decision: a stall or an
+    /// in-flight bit flip on one of `n_ranks` engines.
+    pub fn draw_transfer(&mut self, n_ranks: usize) -> Option<(FaultKind, usize)> {
+        if !self.prng.chance(self.rate) {
+            return None;
+        }
+        let kind = if self.prng.chance(0.5) {
+            FaultKind::TransferStall
+        } else {
+            FaultKind::BitFlip
+        };
+        let rank = self.prng.below(n_ranks.max(1) as u64) as usize;
+        Some((kind, rank))
+    }
+
+    /// Model the checksum check that catches an injected bit flip:
+    /// corrupt one prng-chosen bit of a copy of `payload` and compare
+    /// FNV digests.  Always `true` for non-empty payloads (see
+    /// [`fnv1a`]) — the guarantee that detection, and therefore
+    /// recovery, can never miss a single-bit corruption.
+    pub fn bitflip_detected(&mut self, payload: &[u8]) -> bool {
+        if payload.is_empty() {
+            return true;
+        }
+        let good = fnv1a(payload);
+        let bit = self.prng.below(payload.len() as u64 * 8);
+        let mut corrupt = payload.to_vec();
+        corrupt[(bit / 8) as usize] ^= 1 << (bit % 8);
+        fnv1a(&corrupt) != good
+    }
+
+    /// Record one absorbed fault.
+    pub fn record(&mut self, kind: FaultKind, rank: usize, at_s: f64, attempt: u32) {
+        self.events.push(FaultEvent { kind, rank, at_s, attempt });
+    }
+
+    /// Format the session's fault history for dead-letter attribution.
+    pub fn history(&self) -> String {
+        let parts: Vec<String> = self.events.iter().map(|e| e.to_string()).collect();
+        parts.join("; ")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_detects_every_single_bit_flip() {
+        let payload: Vec<u8> = (0..64u8).collect();
+        let good = fnv1a(&payload);
+        for byte in 0..payload.len() {
+            for bit in 0..8 {
+                let mut p = payload.clone();
+                p[byte] ^= 1 << bit;
+                assert_ne!(fnv1a(&p), good, "flip at {byte}:{bit} must change the digest");
+            }
+        }
+    }
+
+    #[test]
+    fn row_checksum_is_shard_order_invariant() {
+        let rows: Vec<Vec<u8>> = (0..5).map(|d| vec![d as u8; 16]).collect();
+        let mut shuffled = rows.clone();
+        shuffled.swap(0, 4);
+        shuffled.swap(1, 3);
+        assert_eq!(checksum_rows(&rows), checksum_rows(&shuffled));
+        let mut corrupted = rows.clone();
+        corrupted[2][7] ^= 0x10;
+        assert_ne!(checksum_rows(&rows), checksum_rows(&corrupted));
+    }
+
+    #[test]
+    fn spec_parses_and_renders() {
+        let s = FaultSpec::parse("--faults", "seed=7,rate=0.05").unwrap().unwrap();
+        assert_eq!(s.seed, 7);
+        assert_eq!(s.rate, 0.05);
+        assert_eq!(s.dead_rank, None);
+        let s = FaultSpec::parse("--faults", "seed=3,rate=1,dead-rank=2,dead-at=0.5")
+            .unwrap()
+            .unwrap();
+        assert_eq!(s.dead_rank, Some(2));
+        assert_eq!(s.dead_at_s, 0.5);
+        assert_eq!(s.render(), "seed=3,rate=1,dead-rank=2,dead-at=0.5");
+        assert!(FaultSpec::parse("--faults", "off").unwrap().is_none());
+        assert!(FaultSpec::parse("--faults", "").unwrap().is_none());
+    }
+
+    #[test]
+    fn spec_rejects_garbage_with_the_source() {
+        for bad in ["rate=0.5", "seed=x,rate=0.1", "seed=1,rate=2", "seed=1,bogus=3", "seed"] {
+            let err = FaultSpec::parse("SIMPLEPIM_FAULTS", bad).unwrap_err();
+            assert!(matches!(err, Error::Config(_)), "{bad}: {err}");
+            assert!(err.to_string().contains("SIMPLEPIM_FAULTS"), "{bad}: {err}");
+        }
+    }
+
+    #[test]
+    fn sessions_replay_bit_identically_from_a_seed() {
+        let spec = FaultSpec { seed: 41, rate: 0.5, dead_rank: None, dead_at_s: 0.0 };
+        let mut a = FaultSession::new(&spec, 3);
+        let mut b = FaultSession::new(&spec, 3);
+        for _ in 0..256 {
+            assert_eq!(a.draw_transfer(8), b.draw_transfer(8));
+            assert_eq!(a.draw_launch(8), b.draw_launch(8));
+        }
+        // A different salt (another job) moves the stream; compare a
+        // 64-draw fold so a chance single-draw collision cannot flake.
+        let fold = |salt: u64| {
+            let mut s = FaultSession::new(&spec, salt);
+            (0..64).fold(0u64, |acc, i| {
+                acc ^ s.draw_launch(8).map(|(r, c)| (r as u64) << 32 | c as u64).unwrap_or(i)
+            })
+        };
+        assert_ne!(fold(1), fold(2));
+    }
+
+    #[test]
+    fn bitflip_detection_never_misses() {
+        let spec = FaultSpec { seed: 9, rate: 1.0, dead_rank: None, dead_at_s: 0.0 };
+        let mut s = FaultSession::new(&spec, 0);
+        let payload: Vec<u8> = (0..200u8).cycle().take(4096).collect();
+        for _ in 0..100 {
+            assert!(s.bitflip_detected(&payload));
+        }
+        assert!(s.bitflip_detected(&[]), "empty payloads are trivially clean");
+    }
+
+    #[test]
+    fn rate_one_always_faults_rate_zero_never() {
+        let hot = FaultSpec { seed: 1, rate: 1.0, dead_rank: None, dead_at_s: 0.0 };
+        let mut s = FaultSession::new(&hot, 0);
+        for _ in 0..64 {
+            assert!(s.draw_launch(4).is_some());
+            assert!(s.draw_transfer(4).is_some());
+        }
+        let cold = FaultSpec { seed: 1, rate: 0.0, dead_rank: None, dead_at_s: 0.0 };
+        let mut s = FaultSession::new(&cold, 0);
+        for _ in 0..64 {
+            assert!(s.draw_launch(4).is_none());
+            assert!(s.draw_transfer(4).is_none());
+        }
+    }
+}

@@ -13,6 +13,7 @@
 pub mod config;
 pub mod device;
 pub mod dma;
+pub mod faults;
 pub mod isa;
 pub mod memory;
 pub mod pipeline;
@@ -21,6 +22,7 @@ pub mod xfer;
 
 pub use config::PimConfig;
 pub use device::{DpuSet, PimMachine, Timeline};
+pub use faults::{FaultEvent, FaultKind, FaultSession, FaultSpec, RecoveryPolicy};
 pub use isa::{slots, InstrMix, Op};
 pub use pipeline::{ChunkPlan, PipeSchedule, PipelineMode};
 pub use xfer::{transfer_seconds, XferKind};

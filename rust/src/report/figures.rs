@@ -9,7 +9,7 @@ use crate::coordinator::{
     ServiceConfig, SharedCacheMode, SlaClass,
 };
 use crate::error::{Error, Result};
-use crate::pim::{PimConfig, PipelineMode};
+use crate::pim::{FaultSpec, PimConfig, PipelineMode, RecoveryPolicy};
 use crate::timing::{self, latency_stats, schedule_waves, DmaPolicy, OptFlags, ReduceVariant};
 use crate::util::{prng, settings};
 use crate::workloads::{self, histogram, Impl};
@@ -290,6 +290,38 @@ fn shared_cache_knob(args: &Args) -> Result<SharedCacheMode> {
     }
 }
 
+/// Resolve the fault-injection knobs (DESIGN.md §18): `--faults` over
+/// `SIMPLEPIM_FAULTS` (default off), plus the retry budget and backoff
+/// base.  Garbage in either place is a hard config error — a typo must
+/// never silently run fault-free.
+fn fault_knobs(args: &Args) -> Result<(Option<FaultSpec>, RecoveryPolicy)> {
+    let spec = if let Some(v) = args.flag("faults") {
+        FaultSpec::parse("--faults", v)?
+    } else {
+        match std::env::var(settings::ENV_FAULTS) {
+            Ok(v) => FaultSpec::parse(settings::ENV_FAULTS, &v)?,
+            Err(_) => None,
+        }
+    };
+    let retry_budget = if let Some(v) = args.flag("fault-retries") {
+        settings::parse_retries("--fault-retries", v)?
+    } else {
+        match std::env::var(settings::ENV_FAULT_RETRIES) {
+            Ok(v) => settings::parse_retries(settings::ENV_FAULT_RETRIES, &v)?,
+            Err(_) => RecoveryPolicy::default().retry_budget,
+        }
+    };
+    let backoff_base_s = if let Some(v) = args.flag("fault-backoff") {
+        settings::parse_backoff("--fault-backoff", v)?
+    } else {
+        match std::env::var(settings::ENV_FAULT_BACKOFF) {
+            Ok(v) => settings::parse_backoff(settings::ENV_FAULT_BACKOFF, &v)?,
+            Err(_) => RecoveryPolicy::default().backoff_base_s,
+        }
+    };
+    Ok((spec, RecoveryPolicy { retry_budget, backoff_base_s, quarantine: true }))
+}
+
 /// `run ... --jobs`: the multi-tenant batch mode (DESIGN.md §14).
 /// Submits the named workloads (`all` = the six paper workloads, or a
 /// comma list) times `--jobs K` copies as independent jobs over
@@ -323,55 +355,83 @@ fn cmd_jobs(args: &Args) -> Result<()> {
         if which == "all" { all_names } else { which.split(',').collect() };
 
     let sharing = shared_cache_knob(args)?;
+    let (faults, recovery) = fault_knobs(args)?;
     let topo = topology_line(&cfg);
     let mut queue = JobQueue::new(cfg, partitions, kind, threads, pipeline)?;
     queue.set_sharing(sharing);
+    queue.set_faults(faults.clone(), recovery)?;
     println!(
-        "jobs: {} workload(s) x {copies} cop{} over {} partition(s) x {} DPUs | backend {kind} (x{threads}) | pipeline {pipeline} | shared-cache {} | topology: {topo}",
+        "jobs: {} workload(s) x {copies} cop{} over {} partition(s) x {} DPUs | backend {kind} (x{threads}) | pipeline {pipeline} | shared-cache {} | faults {} | topology: {topo}",
         names.len(),
         if copies == 1 { "y" } else { "ies" },
         queue.partitions(),
         queue.partition_dpus(),
         if sharing == SharedCacheMode::On { "on" } else { "off" },
+        match &faults {
+            Some(spec) => spec.render(),
+            None => "off".into(),
+        },
     );
+    let mut handles = Vec::new();
     for copy in 0..copies {
         for name in &names {
             let plan = workloads::job(name, elems, copy as u64)
                 .ok_or_else(|| Error::msg(format!("unknown workload `{name}`")))?;
             let label =
                 if copies == 1 { (*name).to_string() } else { format!("{name}#{copy}") };
-            queue.submit_plan(&label, plan);
+            let h = queue.submit_plan(&label, plan);
+            handles.push((label, h));
         }
     }
-    let outcomes = queue.wait_all()?;
+    // Fault-free, any failed job aborts the command (the historical
+    // contract); under injection a dead-lettered job fails its own row
+    // while the rest of the batch degrades gracefully.
+    if faults.is_none() {
+        queue.wait_all()?;
+    } else if let Err(e) = queue.wait_all() {
+        println!("  note: {e}");
+    }
     println!(
         "\n  {:<16} {:>4}  {:>11}  {:>11}  {:>11}  {:>10}",
         "job", "part", "queued(ms)", "run(ms)", "finish(ms)", "cache(h/m)"
     );
-    for o in &outcomes {
-        println!(
-            "  {:<16} {:>4}  {:>11.3}  {:>11.3}  {:>11.3}  {:>10}",
-            o.name,
-            o.partition,
-            o.queued_s() * 1e3,
-            o.duration_s() * 1e3,
-            o.finish_s * 1e3,
-            format!("{}/{}", o.cache.hits, o.cache.misses),
-        );
+    for (label, h) in &handles {
+        match queue.wait(h) {
+            Ok(o) => println!(
+                "  {:<16} {:>4}  {:>11.3}  {:>11.3}  {:>11.3}  {:>10}",
+                o.name,
+                o.partition,
+                o.queued_s() * 1e3,
+                o.duration_s() * 1e3,
+                o.finish_s * 1e3,
+                format!("{}/{}", o.cache.hits, o.cache.misses),
+            ),
+            Err(e) => println!("  {label:<16} failed: {e}"),
+        }
     }
     if args.has("explain") {
         println!("\n  per-job lanes:");
-        for o in &outcomes {
-            let t = &o.timeline;
+        for (_, h) in &handles {
+            let Ok(o) = queue.wait(h) else { continue };
+            let (name, t) = (o.name.clone(), o.timeline);
             println!(
                 "  {:<16} h2p {:.3} ms | kernel {:.3} ms ({} launches) | p2h {:.3} ms | merge {:.3} ms",
-                o.name,
+                name,
                 t.host_to_pim_s * 1e3,
                 t.kernel_s * 1e3,
                 t.launches,
                 t.pim_to_host_s * 1e3,
                 (t.host_merge_s + t.merge_s) * 1e3,
             );
+            if t.retries > 0 {
+                println!(
+                    "  {:<16}   retry lane: {:.3} ms ({} fault(s), {} retried)",
+                    "",
+                    t.retry_s * 1e3,
+                    t.faults_injected,
+                    t.retries,
+                );
+            }
             if t.bcast_dedups > 0 || t.colaunched > 0 {
                 println!(
                     "  {:<16}   shared: {} bcast dedup(s) -{:.3} ms | co-launch -{:.3} ms",
@@ -448,6 +508,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     };
     let (kind, threads, pipeline) = exec_selection(args)?;
     let sharing = shared_cache_knob(args)?;
+    let (faults, recovery) = fault_knobs(args)?;
 
     // Deterministic open-loop trace: Poisson arrivals from the seeded
     // PRNG (tag 6, so `--seed` moves the whole trace), workloads and
@@ -465,6 +526,8 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         sc.queue_depth = queue_depth;
         sc.saturation = saturation;
         sc.resize = resize;
+        sc.faults = faults.clone();
+        sc.recovery = recovery;
         PimService::new(sc)
     };
     let submit_trace = |svc: &PimService| -> Result<u64> {
@@ -518,7 +581,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     };
 
     println!(
-        "serve: {jobs} job(s) @ {rate} jobs/s over {} partition(s) x {} DPUs | resize {} | saturation {} | queue depth {queue_depth} | backend {kind} (x{threads}) | pipeline {pipeline} | shared-cache {} | topology: {}",
+        "serve: {jobs} job(s) @ {rate} jobs/s over {} partition(s) x {} DPUs | resize {} | saturation {} | queue depth {queue_depth} | backend {kind} (x{threads}) | pipeline {pipeline} | shared-cache {} | faults {} | topology: {}",
         svc.partitions(),
         svc.partition_dpus(),
         match resize {
@@ -530,6 +593,10 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
             SaturationPolicy::Block => "block",
         },
         if sharing == SharedCacheMode::On { "on" } else { "off" },
+        match &faults {
+            Some(spec) => spec.render(),
+            None => "off".into(),
+        },
         topology_line(&cfg),
     );
     println!(
@@ -612,13 +679,22 @@ pub fn cmd_run(args: &Args) -> Result<()> {
     let dpus = cfg.n_dpus;
     let mut sys = cli_system(cfg, args.has("host-only"), args)?;
     let elems = args.flag_usize("elems", 0)?;
+    let (faults, recovery) = fault_knobs(args)?;
+    if let Some(spec) = &faults {
+        // Salt 0: the single-tenant run is its own job stream.
+        sys.install_faults(spec, 0, recovery);
+    }
     println!(
-        "backend: {} ({} thread{}) | pipeline: {} | topology: {}",
+        "backend: {} ({} thread{}) | pipeline: {} | topology: {}{}",
         sys.backend_kind(),
         sys.backend_threads(),
         if sys.backend_threads() == 1 { "" } else { "s" },
         sys.pipeline_mode(),
         topology_line(&sys.machine.cfg),
+        match &faults {
+            Some(spec) => format!(" | faults: {}", spec.render()),
+            None => String::new(),
+        },
     );
     run_workload(&mut sys, &name, elems)?;
     if args.has("explain") {
@@ -647,6 +723,17 @@ pub fn cmd_run(args: &Args) -> Result<()> {
             t.pipelined_merges,
             t.pipeline_chunks + t.merge_chunks
         );
+    }
+    if t.retries > 0 {
+        println!(
+            "  retry lane: {:>10.3} ms ({} fault(s) injected, {} retried)",
+            t.retry_s * 1e3,
+            t.faults_injected,
+            t.retries,
+        );
+        for ev in sys.fault_events() {
+            println!("              {ev}");
+        }
     }
     println!("  total     : {:>10.3} ms", t.total_s() * 1e3);
     let (h2p_u, p2h_u) = crate::timing::rank_utilization(&sys.machine.cfg, &t);

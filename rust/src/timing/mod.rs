@@ -11,7 +11,8 @@ pub mod profile;
 
 pub use model::{
     choose_reduce_variant, eager_zip_kernel, latency_stats, map_kernel, plan_gangs,
-    rank_utilization, reduce_kernel, schedule_jobs, schedule_waves, DmaPolicy, GangPlan,
+    rank_utilization, reduce_kernel, schedule_jobs, schedule_jobs_masked, schedule_waves,
+    DmaPolicy, GangPlan,
     JobSchedule, KernelTiming, LatencyStats, ReduceVariant,
 };
 pub use profile::{KernelProfile, OptFlags, UNROLL_DEPTH};

@@ -231,12 +231,32 @@ impl JobSchedule {
 /// per-partition busy clocks and is advanced in place, so successive
 /// calls model a queue that keeps filling behind earlier batches.
 pub fn schedule_jobs(durations: &[f64], lanes: &mut [f64]) -> JobSchedule {
+    schedule_jobs_masked(durations, lanes, &[])
+}
+
+/// [`schedule_jobs`] with a quarantine mask (DESIGN.md §18): lanes
+/// whose `blocked` entry is `true` are never considered by the
+/// earliest-free scan, so jobs from a quarantined rank's partitions
+/// re-admit onto the healthy lanes — graceful degradation as lower
+/// throughput, never a job placed on dead hardware.  Blocked lanes
+/// keep their clocks untouched (they are masked, not pushed to
+/// infinity, so makespan stays the max over lanes that actually ran
+/// work).  An empty mask blocks nothing, which is exactly the unmasked
+/// scheduler — the faults-off bit-identity contract.
+pub fn schedule_jobs_masked(durations: &[f64], lanes: &mut [f64], blocked: &[bool]) -> JobSchedule {
     assert!(!lanes.is_empty(), "admission needs at least one partition lane");
+    assert!(
+        lanes.iter().enumerate().any(|(i, _)| !blocked.get(i).copied().unwrap_or(false)),
+        "admission needs at least one healthy partition lane"
+    );
     let mut sched = JobSchedule::default();
     for &d in durations {
-        let mut p = 0;
+        let mut p = usize::MAX;
         for (i, &clock) in lanes.iter().enumerate() {
-            if clock < lanes[p] {
+            if blocked.get(i).copied().unwrap_or(false) {
+                continue;
+            }
+            if p == usize::MAX || clock < lanes[p] {
                 p = i;
             }
         }

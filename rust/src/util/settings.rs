@@ -44,6 +44,9 @@ pub const ENV_SHARED_CACHE: &str = "SIMPLEPIM_SHARED_CACHE";
 pub const ENV_ENGINE: &str = "SIMPLEPIM_ENGINE";
 pub const ENV_ARTIFACTS: &str = "SIMPLEPIM_ARTIFACTS";
 pub const ENV_REQUIRE_BASELINE: &str = "SIMPLEPIM_REQUIRE_BASELINE";
+pub const ENV_FAULTS: &str = "SIMPLEPIM_FAULTS";
+pub const ENV_FAULT_RETRIES: &str = "SIMPLEPIM_FAULT_RETRIES";
+pub const ENV_FAULT_BACKOFF: &str = "SIMPLEPIM_FAULT_BACKOFF";
 
 /// Where a resolved value came from (the precedence chain, highest
 /// first).
@@ -98,6 +101,9 @@ pub struct Layer {
     pub shared_cache: Option<String>,
     pub engine: Option<String>,
     pub artifacts: Option<String>,
+    pub faults: Option<String>,
+    pub fault_retries: Option<String>,
+    pub fault_backoff: Option<String>,
 }
 
 /// Every `SIMPLEPIM_*` knob, resolved and typed.
@@ -119,6 +125,12 @@ pub struct Settings {
     pub artifacts: Resolved<Option<PathBuf>>,
     /// Whether the bench gate must refuse a placeholder baseline.
     pub require_baseline: Resolved<bool>,
+    /// Deterministic fault plan (DESIGN.md §18); `None` = fault-free.
+    pub faults: Resolved<Option<crate::pim::FaultSpec>>,
+    /// Retry budget per faulted operation before it dead-letters.
+    pub fault_retries: Resolved<u32>,
+    /// Base of the exponential retry backoff, in modeled seconds.
+    pub fault_backoff: Resolved<f64>,
 }
 
 impl Settings {
@@ -187,6 +199,34 @@ impl Settings {
             Ok(v) if !v.is_empty() && v != "0" => Resolved::new(true, Provenance::Env),
             _ => Resolved::new(false, Provenance::Default),
         };
+        let faults = match pick(&api.faults, &flags.faults, ENV_FAULTS, "--faults") {
+            Some((src, v, p)) => Resolved::new(crate::pim::FaultSpec::parse(&src, &v)?, p),
+            None => Resolved::new(None, Provenance::Default),
+        };
+        let fault_retries = match pick(
+            &api.fault_retries,
+            &flags.fault_retries,
+            ENV_FAULT_RETRIES,
+            "--fault-retries",
+        ) {
+            Some((src, v, p)) => Resolved::new(parse_retries(&src, &v)?, p),
+            None => Resolved::new(
+                crate::pim::RecoveryPolicy::default().retry_budget,
+                Provenance::Default,
+            ),
+        };
+        let fault_backoff = match pick(
+            &api.fault_backoff,
+            &flags.fault_backoff,
+            ENV_FAULT_BACKOFF,
+            "--fault-backoff",
+        ) {
+            Some((src, v, p)) => Resolved::new(parse_backoff(&src, &v)?, p),
+            None => Resolved::new(
+                crate::pim::RecoveryPolicy::default().backoff_base_s,
+                Provenance::Default,
+            ),
+        };
         Ok(Settings {
             backend,
             threads,
@@ -199,7 +239,21 @@ impl Settings {
             engine,
             artifacts,
             require_baseline,
+            faults,
+            fault_retries,
+            fault_backoff,
         })
+    }
+
+    /// The resolved recovery policy (retry budget + backoff; quarantine
+    /// stays on — a declared dead rank that nobody routes around would
+    /// silently compute on dead hardware).
+    pub fn recovery(&self) -> crate::pim::RecoveryPolicy {
+        crate::pim::RecoveryPolicy {
+            retry_budget: self.fault_retries.value,
+            backoff_base_s: self.fault_backoff.value,
+            quarantine: true,
+        }
     }
 
     /// Resolve from the environment alone (no API args, no CLI flags).
@@ -246,6 +300,24 @@ impl Settings {
             "require-baseline",
             if self.require_baseline.value { "1" } else { "0" }.to_string(),
             self.require_baseline.source,
+        );
+        row(
+            "faults",
+            match &self.faults.value {
+                Some(spec) => spec.render(),
+                None => "off".into(),
+            },
+            self.faults.source,
+        );
+        row(
+            "fault-retries",
+            self.fault_retries.value.to_string(),
+            self.fault_retries.source,
+        );
+        row(
+            "fault-backoff",
+            format!("{}s", self.fault_backoff.value),
+            self.fault_backoff.source,
         );
         out
     }
@@ -321,6 +393,24 @@ pub fn parse_on_off(src: &str, v: &str) -> Result<bool> {
         "on" => Ok(true),
         "off" => Ok(false),
         _ => Err(Error::Config(format!("invalid {src}=`{v}` (expected on|off)"))),
+    }
+}
+
+/// Parse a retry budget (0 is legal: fail on the first fault).
+pub fn parse_retries(src: &str, v: &str) -> Result<u32> {
+    v.parse::<u32>().map_err(|_| {
+        Error::Config(format!("invalid {src}=`{v}` (expected a retry count)"))
+    })
+}
+
+/// Parse a backoff base in modeled seconds (non-negative and finite —
+/// a negative backoff would run retries backwards in virtual time).
+pub fn parse_backoff(src: &str, v: &str) -> Result<f64> {
+    match v.parse::<f64>() {
+        Ok(b) if b.is_finite() && b >= 0.0 => Ok(b),
+        _ => Err(Error::Config(format!(
+            "invalid {src}=`{v}` (expected non-negative seconds)"
+        ))),
     }
 }
 
@@ -458,9 +548,41 @@ mod tests {
             "engine",
             "artifacts",
             "require-baseline",
+            "faults",
+            "fault-retries",
+            "fault-backoff",
         ] {
             assert!(table.contains(knob), "missing `{knob}` in:\n{table}");
         }
         assert!(table.contains("[flag]") && table.contains("[default]"), "{table}");
+    }
+
+    #[test]
+    fn fault_knobs_resolve_and_reject_garbage() {
+        let flags = Layer {
+            faults: Some("seed=7,rate=0.05,dead-rank=1".into()),
+            fault_retries: Some("5".into()),
+            fault_backoff: Some("0.002".into()),
+            ..Layer::default()
+        };
+        let s = Settings::resolve(&Layer::default(), &flags).unwrap();
+        let spec = s.faults.value.clone().expect("plan parsed");
+        assert_eq!((spec.seed, spec.dead_rank), (7, Some(1)));
+        assert_eq!(s.recovery().retry_budget, 5);
+        assert_eq!(s.recovery().backoff_base_s, 0.002);
+        assert_eq!(s.faults.source, Provenance::Flag);
+
+        // Defaults: off, and the RecoveryPolicy built-ins.
+        let s = Settings::resolve(&Layer::default(), &Layer::default()).unwrap();
+        assert!(s.faults.value.is_none());
+        assert_eq!(s.recovery().retry_budget, crate::pim::RecoveryPolicy::default().retry_budget);
+
+        // Garbage names the source — never a silent fault-free run.
+        let flags = Layer { faults: Some("rate=0.05".into()), ..Layer::default() };
+        let err = Settings::resolve(&Layer::default(), &flags).unwrap_err();
+        assert!(err.to_string().contains("seed="), "{err}");
+        let flags = Layer { fault_backoff: Some("-1".into()), ..Layer::default() };
+        let err = Settings::resolve(&Layer::default(), &flags).unwrap_err();
+        assert!(err.to_string().contains("--fault-backoff"), "{err}");
     }
 }

@@ -1,10 +1,13 @@
 //! Failure-injection tests: the framework must fail loudly and
 //! recoverably when the machine's physical limits or the API contract
-//! are violated — never corrupt state.
+//! are violated — never corrupt state.  The second half exercises the
+//! deterministic fault-injection and recovery subsystem (DESIGN.md
+//! §18): seeded replay, dead-letters, and rank quarantine.
 
-use simplepim::coordinator::{PimFunc, PimSystem, TransformKind};
-use simplepim::error::Error;
-use simplepim::pim::{PimConfig, PimMachine};
+use simplepim::backend::BackendKind;
+use simplepim::coordinator::{JobQueue, PimFunc, PimSystem, TransformKind};
+use simplepim::error::{Error, Result};
+use simplepim::pim::{FaultSpec, PimConfig, PimMachine, PipelineMode, RecoveryPolicy};
 use simplepim::util::prng::Prng;
 
 fn tiny_sys(dpus: usize) -> PimSystem {
@@ -149,4 +152,171 @@ fn missing_artifacts_directory_is_a_clear_error() {
     use simplepim::runtime::Manifest;
     let err = Manifest::load("/nonexistent/path").unwrap_err();
     assert!(err.to_string().contains("make artifacts"), "{err}");
+}
+
+// ---------------------------------------------------------------------
+// Deterministic fault injection and recovery (DESIGN.md §18).
+// ---------------------------------------------------------------------
+
+/// A scatter → affine map → gather plan: transfer + launch charges on
+/// any machine width, so every fault site is exercised.
+fn map_plan(
+    elems: usize,
+    factor: i32,
+) -> impl FnOnce(&mut PimSystem) -> Result<Vec<i32>> + Send + 'static {
+    move |sys: &mut PimSystem| {
+        let data: Vec<i32> = (0..elems as i32).collect();
+        sys.scatter("x", &data, 4)?;
+        let h = sys.create_handle(PimFunc::AffineMap, TransformKind::Map, vec![factor, 0])?;
+        sys.array_map("x", "y", &h)?;
+        sys.gather("y")
+    }
+}
+
+fn spec(s: &str) -> Option<FaultSpec> {
+    FaultSpec::parse("test", s).expect("valid spec")
+}
+
+/// Run six map jobs through a queue on the 2×4@32 machine with the
+/// given fault plan; returns per-job (output-or-error, fault counters,
+/// finish bits) plus the device report.
+fn run_batch(
+    faults: Option<FaultSpec>,
+    policy: RecoveryPolicy,
+) -> (Vec<(std::result::Result<Vec<i32>, String>, u64, u64, u64)>, simplepim::coordinator::DeviceReport)
+{
+    let cfg = PimConfig::upmem(32).with_topology(2, 4).expect("2x4@32 builds");
+    let mut q =
+        JobQueue::new(cfg, 4, BackendKind::Parallel, 4, PipelineMode::Off).expect("queue builds");
+    q.set_faults(faults, policy).expect("fault plan installs");
+    let handles: Vec<_> =
+        (1..=6i32).map(|i| q.submit(&format!("j{i}"), map_plan(2_000, i))).collect();
+    let rows = handles
+        .iter()
+        .map(|h| match q.wait(h) {
+            Ok(o) => (
+                Ok(o.output.clone()),
+                o.timeline.faults_injected,
+                o.timeline.retries,
+                o.finish_s.to_bits(),
+            ),
+            Err(e) => (Err(e.to_string()), 0, 0, 0),
+        })
+        .collect();
+    (rows, q.device_report())
+}
+
+#[test]
+fn fault_plans_replay_bit_identically_from_a_seed() {
+    let policy = RecoveryPolicy { retry_budget: 32, backoff_base_s: 1e-4, quarantine: true };
+    let (a, ra) = run_batch(spec("seed=7,rate=0.5"), policy);
+    let (b, rb) = run_batch(spec("seed=7,rate=0.5"), policy);
+    assert_eq!(a, b, "same seed: same fault sequence, retry counts, and final bits");
+    assert_eq!(
+        (ra.faults_injected, ra.retries, ra.retry_s.to_bits()),
+        (rb.faults_injected, rb.retries, rb.retry_s.to_bits()),
+    );
+    assert!(ra.faults_injected > 0, "rate 0.5 over six jobs injects faults");
+
+    let (c, _) = run_batch(spec("seed=8,rate=0.5"), policy);
+    assert_ne!(a, c, "a different seed moves the fault sequence");
+}
+
+#[test]
+fn recovered_runs_are_bit_identical_to_fault_free() {
+    let policy = RecoveryPolicy { retry_budget: 32, backoff_base_s: 1e-4, quarantine: true };
+    let (clean, clean_report) = run_batch(None, policy);
+    let (faulty, report) = run_batch(spec("seed=7,rate=0.5"), policy);
+    assert!(report.faults_injected > 0 && report.retries > 0, "faults were injected");
+    assert!(report.retry_s > 0.0, "recovery time lands on the retry lane");
+    for ((co, ..), (fo, ..)) in clean.iter().zip(&faulty) {
+        assert_eq!(co, fo, "recovery succeeded: outputs bit-identical to fault-free");
+    }
+    assert_eq!(clean_report.faults_injected, 0);
+    assert_eq!(clean_report.retry_s, 0.0, "fault-free runs never charge the retry lane");
+}
+
+#[test]
+fn exhausted_retry_budget_dead_letters_with_attribution() {
+    // rate=1.0: every guarded operation faults on every attempt, so the
+    // first one exhausts its budget and the job dead-letters.
+    let policy = RecoveryPolicy { retry_budget: 3, backoff_base_s: 1e-4, quarantine: true };
+    let cfg = PimConfig::tiny(8);
+    let mut q =
+        JobQueue::new(cfg, 2, BackendKind::Seq, 1, PipelineMode::Off).expect("queue builds");
+    q.set_faults(spec("seed=7,rate=1.0"), policy).expect("plan installs");
+    let h = q.submit("doomed", map_plan(256, 2));
+    let err = q.wait(&h).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("dead-letter"), "{msg}");
+    assert!(msg.contains("retry budget of 3"), "{msg}");
+    assert!(msg.contains("rank"), "attributed to a rank: {msg}");
+    assert!(msg.contains("partition"), "attributed to a partition: {msg}");
+    assert!(msg.contains("attempt"), "carries the fault history: {msg}");
+    let report = q.device_report();
+    assert_eq!(report.dead_letters, 1, "the dead-letter is counted");
+    assert_eq!(report.jobs, 0, "a dead-lettered job never occupies a lane");
+    assert!(report.render().contains("dead-letter"), "{}", report.render());
+}
+
+#[test]
+fn quarantine_reroutes_jobs_off_the_dead_rank_and_degrades_gracefully() {
+    let policy = RecoveryPolicy { retry_budget: 32, backoff_base_s: 1e-4, quarantine: true };
+    let (clean, clean_report) = run_batch(None, policy);
+    // Rank 0 of 2x4@32 (DPUs 0..4) is declared dead: partition 0
+    // (DPUs 0..8) quarantines; its jobs re-admit onto partitions 1-3.
+    let (faulty, report) = run_batch(spec("seed=7,rate=0.5,dead-rank=0"), policy);
+    assert_eq!(report.quarantined_partitions, 1);
+    assert_eq!(report.jobs, 6, "every job completed on the surviving partitions");
+    for ((co, ..), (fo, ..)) in clean.iter().zip(&faulty) {
+        assert_eq!(co, fo, "degraded, never wrong: outputs bit-identical to fault-free");
+    }
+    assert_eq!(report.lane_busy_s[0], 0.0, "the quarantined lane never ran a job");
+    assert!(
+        report.makespan_s > clean_report.makespan_s,
+        "six jobs on three lanes (plus retries) take longer than on four: {} vs {}",
+        report.makespan_s,
+        clean_report.makespan_s
+    );
+
+    // A dead rank that would quarantine every partition is refused.
+    let cfg = PimConfig::upmem(32).with_topology(2, 4).expect("2x4@32 builds");
+    let mut one =
+        JobQueue::new(cfg, 1, BackendKind::Seq, 1, PipelineMode::Off).expect("queue builds");
+    let err = one.set_faults(spec("seed=7,rate=0.0,dead-rank=0"), policy).unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    assert!(err.to_string().contains("no healthy partition"), "{err}");
+
+    // An out-of-range dead rank is refused with the machine's shape.
+    let cfg = PimConfig::upmem(32).with_topology(2, 4).expect("2x4@32 builds");
+    let mut q =
+        JobQueue::new(cfg, 4, BackendKind::Seq, 1, PipelineMode::Off).expect("queue builds");
+    let err = q.set_faults(spec("seed=7,rate=0.0,dead-rank=99"), policy).unwrap_err();
+    assert!(err.to_string().contains("out of range"), "{err}");
+}
+
+#[test]
+fn faults_off_is_bit_and_timeline_identical_to_the_seed_path() {
+    // The default queue (no set_faults call) and an explicit `off`
+    // plan produce byte-identical outcomes and timelines.
+    let policy = RecoveryPolicy::default();
+    let run = |install: bool| {
+        let cfg = PimConfig::upmem(32).with_topology(2, 4).expect("2x4@32 builds");
+        let mut q = JobQueue::new(cfg, 4, BackendKind::Parallel, 4, PipelineMode::Off)
+            .expect("queue builds");
+        if install {
+            q.set_faults(FaultSpec::parse("test", "off").unwrap(), policy)
+                .expect("off installs");
+        }
+        let handles: Vec<_> =
+            (1..=6i32).map(|i| q.submit(&format!("j{i}"), map_plan(2_000, i))).collect();
+        handles
+            .iter()
+            .map(|h| {
+                let o = q.wait(h).expect("fault-free jobs succeed").clone();
+                (o.output, o.timeline, o.partition, o.start_s.to_bits(), o.finish_s.to_bits())
+            })
+            .collect::<Vec<_>>()
+    };
+    assert_eq!(run(false), run(true), "`--faults off` is exactly the fault-free path");
 }

@@ -341,3 +341,88 @@ fn online_dynamic_models_20pct_lower_p99_sojourn_than_batch_drain() {
         "online makespan {online_makespan:.6}s exceeds the batch drain's {batch_makespan:.6}s"
     );
 }
+
+// ---------------------------------------------------------------------
+// Robustness: panicking jobs and ticket lifecycle edges (DESIGN.md §18).
+// ---------------------------------------------------------------------
+
+#[test]
+fn a_panicking_job_fails_its_own_ticket_never_the_service() {
+    let svc = PimService::new(ServiceConfig::new(PimConfig::tiny(8), 2)).unwrap();
+    let bad = svc
+        .submit(
+            JobSpec::builder("boom")
+                .plan(|_sys: &mut PimSystem| -> Result<Vec<i32>> {
+                    panic!("deliberate job bug")
+                })
+                .build()
+                .unwrap(),
+        )
+        .unwrap();
+    let good = svc.submit(spec("fine", 0.0, SlaClass::Standard, 64, 2)).unwrap();
+
+    // The panic is caught at the execution boundary and converted to a
+    // per-job failure naming the job — the service lock is not
+    // poisoned, so every later call still works.
+    let err = svc.wait(&bad).unwrap_err();
+    assert!(err.to_string().contains("panicked"), "{err}");
+    assert!(err.to_string().contains("boom"), "{err}");
+    let o = svc.wait(&good).expect("the sibling job is unaffected");
+    assert_eq!(o.output, (0..64).map(|x| x * 2).collect::<Vec<i32>>());
+
+    // And the service keeps admitting after the panic.
+    let later = svc.submit(spec("later", 1.0, SlaClass::Standard, 64, 3)).unwrap();
+    assert_eq!(
+        svc.wait(&later).expect("post-panic submission runs").output,
+        (0..64).map(|x| x * 3).collect::<Vec<i32>>()
+    );
+    assert_eq!(svc.device_report().jobs, 2, "the panicked job never occupied a lane");
+}
+
+#[test]
+fn a_panicking_batch_job_fails_its_handle_not_the_drain() {
+    let mut q = JobQueue::new(PimConfig::tiny(8), 2, BackendKind::Parallel, 2, PipelineMode::Off)
+        .unwrap();
+    let bad = q.submit("kaboom", |_sys: &mut PimSystem| -> Result<Vec<i32>> {
+        panic!("deliberate job bug")
+    });
+    let good = q.submit("steady", map_plan(64, 5));
+    let err = q.wait(&bad).unwrap_err();
+    assert!(err.to_string().contains("panicked"), "{err}");
+    assert!(err.to_string().contains("kaboom"), "{err}");
+    assert_eq!(
+        q.wait(&good).expect("sibling batch job survives").output,
+        (0..64).map(|x| x * 5).collect::<Vec<i32>>()
+    );
+}
+
+#[test]
+fn ticket_lifecycle_edges_return_clean_errors_never_hang() {
+    let svc = PimService::new(ServiceConfig::new(PimConfig::tiny(8), 1)).unwrap();
+    let t = svc.submit(spec("only", 0.0, SlaClass::Standard, 64, 1)).unwrap();
+
+    // wait after quiesce: the outcome is already computed and comes
+    // back from the cache; a second wait returns the identical bits.
+    svc.quiesce();
+    let first = svc.wait(&t).expect("wait after quiesce");
+    let second = svc.wait(&t).expect("double wait");
+    assert_eq!(first.output, second.output);
+    assert_eq!(first.finish_s.to_bits(), second.finish_s.to_bits());
+    assert_eq!(svc.poll(&t), simplepim::coordinator::TicketStatus::Done);
+
+    // A forged/stale ticket (minted by a busier service) is a clean
+    // Error::Config naming the id — before and after quiesce.
+    let other = PimService::new(ServiceConfig::new(PimConfig::tiny(8), 1)).unwrap();
+    for name in ["a", "b", "c"] {
+        other.submit(spec(name, 0.0, SlaClass::Standard, 64, 1)).unwrap();
+    }
+    let forged = other.submit(spec("d", 0.0, SlaClass::Standard, 64, 1)).unwrap();
+    let err = svc.wait(&forged).unwrap_err();
+    assert!(matches!(err, Error::Config(_)), "{err}");
+    assert!(err.to_string().contains(&format!("#{}", forged.id())), "{err}");
+    assert_eq!(
+        svc.poll(&forged),
+        simplepim::coordinator::TicketStatus::Pending,
+        "poll of an unknown ticket stays Pending, never panics"
+    );
+}
