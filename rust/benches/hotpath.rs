@@ -684,6 +684,69 @@ fn main() {
         }
     }
 
+    // --- static verifier (DESIGN.md §19): reduction on the seq
+    //     backend, --analyze off vs deny on a clean plan.  The
+    //     verifier only reads the recorded graph, so the modeled
+    //     totals must be *exactly* equal (hard-asserted here — this
+    //     is the zero-modeled-overhead contract rust/tests/analysis.rs
+    //     pins as bit/timeline identity) and the wall overhead should
+    //     stay under ~5%; wall is reported, not gated, like everywhere
+    //     else.  Runs in quick mode too — the gate keys land at the
+    //     next baseline refresh.
+    {
+        println!("\n-- static verifier (reduction, seq, 32 DPUs, analyze off vs deny) --");
+        use simplepim::analysis::AnalyzeMode;
+        let x = reduction::generate(prng::seed_for(2), big);
+        let (warm, iters) = if quick { (1, 2) } else { (1, 4) };
+        let mut walls: Vec<f64> = Vec::new();
+        let mut totals: Vec<f64> = Vec::new();
+        for (tag, mode) in [("off", AnalyzeMode::Off), ("deny", AnalyzeMode::Deny)] {
+            let mut sys = PimSystem::builder(PimConfig::upmem(32))
+                .backend(backend::make(BackendKind::Seq, 1).unwrap())
+                .analyze(mode)
+                .build()
+                .unwrap();
+            sys.reset_timeline();
+            let m = measure(warm, iters, || {
+                std::hint::black_box(reduction::run_simplepim(&mut sys, &x).unwrap());
+            });
+            let t = sys.timeline();
+            report(
+                &format!("reduction {big} elems [seq x1, analyze {tag}]"),
+                m,
+                Some((big as u64, "elem")),
+            );
+            walls.push(m.min_s);
+            totals.push(t.total_s());
+            rows.push(BenchRow {
+                key: format!("reduction/seq/t1/analyze-{tag}"),
+                workload: "reduction",
+                backend: "seq",
+                threads: 1,
+                elems: big as u64,
+                wall: m,
+                modeled_total_s: t.total_s(),
+                modeled_kernel_s: t.kernel_s,
+                launches: t.launches,
+            });
+        }
+        if let ([off_w, deny_w], [off_t, deny_t]) = (&walls[..], &totals[..]) {
+            assert_eq!(
+                off_t, deny_t,
+                "--analyze deny on a clean plan must add zero modeled seconds"
+            );
+            if *off_w > 0.0 {
+                println!(
+                    "    analyze deny wall overhead: {:+.1}% (min {:.3} ms vs {:.3} ms; \
+                     modeled totals exactly equal)",
+                    (deny_w / off_w - 1.0) * 100.0,
+                    deny_w * 1e3,
+                    off_w * 1e3
+                );
+            }
+        }
+    }
+
     if quick {
         write_json(&rows);
         return;

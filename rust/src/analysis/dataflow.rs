@@ -1,0 +1,655 @@
+//! Dataflow lint over plan-event programs (DESIGN.md §19).
+//!
+//! The session [`Plan`] graph records ops but not frees (and filters
+//! reads of unknown arrays at build time), so the lint runs over a
+//! slightly richer **event program**: the plan's nodes interleaved with
+//! the engine's free records in session order.  [`Program::from_graph`]
+//! builds that program from a live engine; mutation tests seed corrupt
+//! programs directly.
+//!
+//! Three passes share the IR:
+//!
+//! * [`lint`] — the per-event dataflow checks: SP001 use-after-free,
+//!   SP002 double free, SP003 read-before-scatter, SP004 shape
+//!   mismatch, SP005 element-size/alignment, SP006 dead broadcast,
+//!   SP008 dangling-zip free.
+//! * [`audit_states`] — fusion-legality over one (optimized) program:
+//!   a `Fused` node must have a recorded consumer and an `Elided`
+//!   node's bytes must never be observable (SP007).
+//! * [`audit_refinement`] — proves an optimized program refines its
+//!   input: same sources, same sinks, same side-effect order, same op
+//!   multiset (SP007).
+
+use std::collections::HashMap;
+
+use crate::coordinator::plan::{NodeState, Plan, PlanOp};
+
+use super::diag::{dangling_zip_message, Code, Diagnostic, Report};
+
+/// One event of the analyzed program: a plan op or an array free.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Event {
+    Op {
+        op: PlanOp,
+        /// Array the op produces (or reads, for sinks like `Gather`).
+        array: String,
+        /// Arrays the op reads.
+        reads: Vec<String>,
+        /// Logical length of the produced array.
+        elems: u64,
+        /// Element size in bytes; 0 when unknown to the extractor.
+        type_size: u32,
+        /// Lifecycle state (drives the fusion-legality audit).
+        state: NodeState,
+        /// Originating plan-node id, when the event came from a graph.
+        node: Option<usize>,
+    },
+    Free { array: String },
+}
+
+impl Event {
+    fn describe_op(op: &PlanOp) -> String {
+        op.name()
+    }
+}
+
+/// An ordered event program — the unit of analysis.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Program {
+    pub events: Vec<Event>,
+}
+
+impl Program {
+    pub fn new() -> Program {
+        Program::default()
+    }
+
+    /// Append an executed op event (test/builder convenience).
+    pub fn op(mut self, op: PlanOp, array: &str, reads: &[&str], elems: u64, type_size: u32) -> Program {
+        self.push_op(op, array, reads, elems, type_size, NodeState::Executed);
+        self
+    }
+
+    /// Append a free event (test/builder convenience).
+    pub fn free(mut self, array: &str) -> Program {
+        self.events.push(Event::Free { array: array.into() });
+        self
+    }
+
+    pub fn push_op(
+        &mut self,
+        op: PlanOp,
+        array: &str,
+        reads: &[&str],
+        elems: u64,
+        type_size: u32,
+        state: NodeState,
+    ) {
+        let node = Some(self.events.len());
+        self.events.push(Event::Op {
+            op,
+            array: array.into(),
+            reads: reads.iter().map(|r| r.to_string()).collect(),
+            elems,
+            type_size,
+            state,
+            node,
+        });
+    }
+
+    /// Build the program from a live plan graph plus the engine's free
+    /// records.  `frees` are `(watermark, array)` pairs where the
+    /// watermark is the graph length when the free happened, so a free
+    /// with watermark `w` is ordered before node `w`.  `type_size_of`
+    /// resolves element sizes for arrays still registered (0 when
+    /// unknown — size checks are skipped for those).
+    pub fn from_graph(
+        plan: &Plan,
+        frees: &[(usize, String)],
+        type_size_of: impl Fn(&str) -> u32,
+    ) -> Program {
+        let mut prog = Program::new();
+        let nodes = plan.nodes();
+        let mut next_free = 0usize;
+        for n in nodes {
+            while next_free < frees.len() && frees[next_free].0 <= n.id {
+                prog.events.push(Event::Free { array: frees[next_free].1.clone() });
+                next_free += 1;
+            }
+            // Resolve input node ids back to array names; a Gather sink
+            // reads the array named on the node itself.
+            let mut reads: Vec<String> =
+                n.inputs.iter().filter_map(|&i| nodes.get(i).map(|p| p.array.clone())).collect();
+            if matches!(n.op, PlanOp::Gather | PlanOp::Allreduce | PlanOp::Allgather)
+                && !reads.contains(&n.array)
+            {
+                reads.push(n.array.clone());
+            }
+            prog.events.push(Event::Op {
+                op: n.op.clone(),
+                array: n.array.clone(),
+                reads,
+                elems: n.elems,
+                type_size: type_size_of(&n.array),
+                state: n.state,
+                node: Some(n.id),
+            });
+        }
+        for (_, array) in &frees[next_free..] {
+            prog.events.push(Event::Free { array: array.clone() });
+        }
+        prog
+    }
+}
+
+/// Per-array facts tracked while walking a program.
+#[derive(Debug, Clone, Copy)]
+struct Shape {
+    elems: u64,
+    type_size: u32,
+}
+
+/// The dataflow lint: walk the program once, tracking liveness, shapes,
+/// zip constituents, and unread broadcasts.
+pub fn lint(prog: &Program) -> Report {
+    let mut out = Vec::new();
+    let mut live: HashMap<String, Shape> = HashMap::new();
+    let mut freed: HashMap<String, ()> = HashMap::new();
+    // Live lazy zips: (zip array, constituent a, constituent b).
+    let mut zips: Vec<(String, String, String)> = Vec::new();
+    // Broadcast arrays not yet read, by producing event index.
+    let mut bcast_unread: HashMap<String, usize> = HashMap::new();
+
+    for (idx, ev) in prog.events.iter().enumerate() {
+        match ev {
+            Event::Op { op, array, reads, elems, type_size, node, .. } => {
+                let opname = Event::describe_op(op);
+                for r in reads {
+                    if live.contains_key(r.as_str()) {
+                        bcast_unread.remove(r.as_str());
+                    } else if freed.contains_key(r.as_str()) {
+                        out.push(
+                            Diagnostic::new(
+                                Code::UseAfterFree,
+                                format!("{opname} reads `{r}` after it was freed"),
+                                "move the free after the last consumer, or re-register the array",
+                            )
+                            .at_node(node.unwrap_or(idx))
+                            .on_array(r.clone()),
+                        );
+                    } else {
+                        out.push(
+                            Diagnostic::new(
+                                Code::UninitializedRead,
+                                format!(
+                                    "{opname} reads `{r}`, which no scatter/broadcast/op produced \
+                                     (uninitialized MRAM)"
+                                ),
+                                format!("scatter or broadcast `{r}` before reading it"),
+                            )
+                            .at_node(node.unwrap_or(idx))
+                            .on_array(r.clone()),
+                        );
+                    }
+                }
+                if *type_size != 0 && *type_size % 4 != 0 {
+                    out.push(
+                        Diagnostic::new(
+                            Code::Misalignment,
+                            format!(
+                                "array `{array}` has element size {type_size} B — per-DPU rows \
+                                 can never satisfy the 8-byte DMA alignment rule"
+                            ),
+                            "use an element type whose size is a positive multiple of 4 bytes",
+                        )
+                        .at_node(node.unwrap_or(idx))
+                        .on_array(array.clone()),
+                    );
+                }
+                let mut produced = Shape { elems: *elems, type_size: *type_size };
+                match op {
+                    PlanOp::Zip => {
+                        if let [a, b] = &reads[..] {
+                            if let (Some(sa), Some(sb)) = (live.get(a.as_str()), live.get(b.as_str()))
+                            {
+                                if sa.elems != sb.elems {
+                                    out.push(
+                                        Diagnostic::new(
+                                            Code::ShapeMismatch,
+                                            format!(
+                                                "zip joins `{a}` ({} elems) with `{b}` ({} elems)",
+                                                sa.elems, sb.elems
+                                            ),
+                                            "zip arrays of equal length",
+                                        )
+                                        .at_node(node.unwrap_or(idx))
+                                        .on_array(array.clone()),
+                                    );
+                                }
+                                produced = Shape {
+                                    elems: sa.elems.min(sb.elems),
+                                    type_size: sa.type_size + sb.type_size,
+                                };
+                            }
+                            zips.push((array.clone(), a.clone(), b.clone()));
+                        }
+                    }
+                    PlanOp::Red { func, output_len } => {
+                        if *output_len == 0 {
+                            out.push(
+                                Diagnostic::new(
+                                    Code::ShapeMismatch,
+                                    format!("reduction `{func}` declares a zero-length accumulator"),
+                                    "declare output_len >= 1 on the red edge",
+                                )
+                                .at_node(node.unwrap_or(idx))
+                                .on_array(array.clone()),
+                            );
+                        }
+                        produced.elems = *output_len;
+                    }
+                    _ => {}
+                }
+                if !matches!(op, PlanOp::Gather) {
+                    live.insert(array.clone(), produced);
+                    freed.remove(array.as_str());
+                    if matches!(op, PlanOp::Broadcast) {
+                        bcast_unread.insert(array.clone(), idx);
+                    }
+                }
+            }
+            Event::Free { array } => {
+                if freed.contains_key(array.as_str()) {
+                    out.push(
+                        Diagnostic::new(
+                            Code::DoubleFree,
+                            format!("`{array}` freed twice"),
+                            "drop the second free",
+                        )
+                        .at_node(idx)
+                        .on_array(array.clone()),
+                    );
+                    continue;
+                }
+                if !live.contains_key(array.as_str()) {
+                    out.push(
+                        Diagnostic::new(
+                            Code::UninitializedRead,
+                            format!("free of `{array}`, which was never registered"),
+                            format!("register `{array}` before freeing it"),
+                        )
+                        .at_node(idx)
+                        .on_array(array.clone()),
+                    );
+                    continue;
+                }
+                let dangling: Vec<String> = zips
+                    .iter()
+                    .filter(|(_, a, b)| a == array || b == array)
+                    .map(|(z, _, _)| z.clone())
+                    .collect();
+                if !dangling.is_empty() {
+                    // Mirror the runtime: the free is rejected, the
+                    // array stays live, no cascading SP001s downstream.
+                    out.push(
+                        Diagnostic::new(
+                            Code::DanglingZipFree,
+                            dangling_zip_message(array, &dangling),
+                            "free (or materialize) the zip before its constituents",
+                        )
+                        .at_node(idx)
+                        .on_array(array.clone()),
+                    );
+                    continue;
+                }
+                if let Some(at) = bcast_unread.remove(array.as_str()) {
+                    out.push(
+                        Diagnostic::new(
+                            Code::DeadBroadcast,
+                            format!("broadcast `{array}` was shipped to every DPU but freed unread"),
+                            "drop the broadcast, or read it before freeing",
+                        )
+                        .at_node(at)
+                        .on_array(array.clone()),
+                    );
+                }
+                live.remove(array.as_str());
+                zips.retain(|(z, _, _)| z != array);
+                freed.insert(array.clone(), ());
+            }
+        }
+    }
+    Report::new(out)
+}
+
+/// Fusion-legality audit over one (optimized) program: every `Fused`
+/// node must have a recorded downstream consumer (its bytes were never
+/// materialized, so *something* must have folded them in), and an
+/// `Elided` node's output must never be read before the array is
+/// re-produced.  Skipped when the source graph overflowed its node
+/// bound (`dropped > 0`), since consumers may be missing by truncation.
+pub fn audit_states(prog: &Program) -> Report {
+    let mut out = Vec::new();
+    for (idx, ev) in prog.events.iter().enumerate() {
+        let Event::Op { array, state, node, op, .. } = ev else { continue };
+        match state {
+            NodeState::Fused => {
+                let consumed = prog.events[idx + 1..].iter().any(|e| match e {
+                    Event::Op { reads, .. } => reads.iter().any(|r| r == array),
+                    Event::Free { .. } => false,
+                });
+                if !consumed {
+                    out.push(
+                        Diagnostic::new(
+                            Code::IllegalFusion,
+                            format!(
+                                "{} output `{array}` is marked fused but has no recorded \
+                                 consumer — its bytes were observable yet never materialized",
+                                Event::describe_op(op)
+                            ),
+                            "execute the node, or fold it into the chain that reads it",
+                        )
+                        .at_node(node.unwrap_or(idx))
+                        .on_array(array.clone()),
+                    );
+                }
+            }
+            NodeState::Elided => {
+                for later in &prog.events[idx + 1..] {
+                    match later {
+                        Event::Op { array: a, .. } if a == array => break, // re-produced
+                        Event::Op { reads, node: n, .. } if reads.iter().any(|r| r == array) => {
+                            out.push(
+                                Diagnostic::new(
+                                    Code::IllegalFusion,
+                                    format!(
+                                        "elided node's output `{array}` is read downstream — \
+                                         elision dropped observable bytes"
+                                    ),
+                                    "only elide intermediates freed before any consumer",
+                                )
+                                .at_node(n.unwrap_or(idx))
+                                .on_array(array.clone()),
+                            );
+                            break;
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            NodeState::Pending | NodeState::Executed => {}
+        }
+    }
+    Report::new(out)
+}
+
+/// One externally observable effect of a program, in order: data in
+/// (scatter/broadcast), data out (gather/collectives), and frees.
+fn effects(prog: &Program) -> Vec<(String, String)> {
+    let mut out = Vec::new();
+    for ev in &prog.events {
+        match ev {
+            Event::Op { op, array, .. } => match op {
+                PlanOp::Scatter | PlanOp::Broadcast | PlanOp::Gather | PlanOp::Allreduce
+                | PlanOp::Allgather => out.push((op.name(), array.clone())),
+                _ => {}
+            },
+            Event::Free { array } => out.push(("free".into(), array.clone())),
+        }
+    }
+    out
+}
+
+/// Multiset of compute ops (everything that is not a pure effect).
+fn op_counts(prog: &Program) -> HashMap<(String, String), usize> {
+    let mut m = HashMap::new();
+    for ev in &prog.events {
+        if let Event::Op { op, array, .. } = ev {
+            if !matches!(
+                op,
+                PlanOp::Scatter | PlanOp::Broadcast | PlanOp::Gather | PlanOp::Allreduce
+                    | PlanOp::Allgather
+            ) {
+                *m.entry((op.name(), array.clone())).or_insert(0) += 1;
+            }
+        }
+    }
+    m
+}
+
+/// Prove `output` (the optimizer's graph) is a refinement of `input`:
+/// identical source/sink/free order, identical compute-op multiset, and
+/// `output` passes the fused/elided state legality audit.  Any
+/// divergence is an SP007 finding naming the first point of difference.
+pub fn audit_refinement(input: &Program, output: &Program) -> Report {
+    let mut out = Vec::new();
+    let (ein, eout) = (effects(input), effects(output));
+    if ein != eout {
+        let at = ein.iter().zip(&eout).position(|(a, b)| a != b).unwrap_or_else(|| ein.len().min(eout.len()));
+        let show = |e: Option<&(String, String)>| match e {
+            Some((k, a)) => format!("{k} `{a}`"),
+            None => "(nothing)".into(),
+        };
+        out.push(
+            Diagnostic::new(
+                Code::IllegalFusion,
+                format!(
+                    "optimized plan is not a refinement: side-effect #{at} diverged — input has \
+                     {}, output has {}",
+                    show(ein.get(at)),
+                    show(eout.get(at)),
+                ),
+                "fusion/elision may drop compute, never reorder or drop sources, sinks, or frees",
+            ),
+        );
+    }
+    let (cin, cout) = (op_counts(input), op_counts(output));
+    if cin != cout {
+        let missing: Vec<String> = cin
+            .iter()
+            .filter(|(k, n)| cout.get(*k).copied().unwrap_or(0) != **n)
+            .map(|((op, a), _)| format!("{op} `{a}`"))
+            .chain(
+                cout.iter()
+                    .filter(|(k, _)| !cin.contains_key(*k))
+                    .map(|((op, a), _)| format!("{op} `{a}` (invented)")),
+            )
+            .collect();
+        out.push(
+            Diagnostic::new(
+                Code::IllegalFusion,
+                format!(
+                    "optimized plan is not a refinement: compute-op multiset diverged [{}]",
+                    missing.join(", ")
+                ),
+                "every input op must survive as executed, fused, or elided — never vanish",
+            ),
+        );
+    }
+    let mut report = Report::new(out);
+    report.merge(audit_states(output));
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn map(f: &str) -> PlanOp {
+        PlanOp::Map { func: f.into() }
+    }
+
+    #[test]
+    fn clean_scatter_map_gather_lints_clean() {
+        let p = Program::new()
+            .op(PlanOp::Scatter, "in", &[], 1024, 4)
+            .op(map("Square"), "out", &["in"], 1024, 4)
+            .op(PlanOp::Gather, "out", &["out"], 1024, 4)
+            .free("in")
+            .free("out");
+        let r = lint(&p);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn use_after_free_is_sp001() {
+        let p = Program::new()
+            .op(PlanOp::Scatter, "in", &[], 1024, 4)
+            .free("in")
+            .op(map("Square"), "out", &["in"], 1024, 4);
+        let r = lint(&p);
+        assert!(r.has(Code::UseAfterFree), "{}", r.render());
+        assert!(r.diagnostics[0].array.as_deref() == Some("in"));
+    }
+
+    #[test]
+    fn double_free_is_sp002() {
+        let p = Program::new().op(PlanOp::Scatter, "in", &[], 8, 4).free("in").free("in");
+        assert!(lint(&p).has(Code::DoubleFree));
+    }
+
+    #[test]
+    fn read_before_scatter_is_sp003() {
+        let p = Program::new().op(map("Square"), "out", &["ghost"], 8, 4);
+        assert!(lint(&p).has(Code::UninitializedRead));
+    }
+
+    #[test]
+    fn zip_shape_mismatch_is_sp004() {
+        let p = Program::new()
+            .op(PlanOp::Scatter, "a", &[], 100, 4)
+            .op(PlanOp::Scatter, "b", &[], 101, 4)
+            .op(PlanOp::Zip, "ab", &["a", "b"], 100, 8);
+        assert!(lint(&p).has(Code::ShapeMismatch));
+    }
+
+    #[test]
+    fn zero_len_reduction_is_sp004() {
+        let p = Program::new()
+            .op(PlanOp::Scatter, "a", &[], 100, 4)
+            .op(PlanOp::Red { func: "Sum".into(), output_len: 0 }, "r", &["a"], 100, 4);
+        assert!(lint(&p).has(Code::ShapeMismatch));
+    }
+
+    #[test]
+    fn odd_type_size_is_sp005() {
+        let p = Program::new().op(PlanOp::Scatter, "a", &[], 100, 3);
+        assert!(lint(&p).has(Code::Misalignment));
+    }
+
+    #[test]
+    fn dead_broadcast_is_sp006_warning_only() {
+        let p = Program::new().op(PlanOp::Broadcast, "w", &[], 16, 4).free("w");
+        let r = lint(&p);
+        assert!(r.has(Code::DeadBroadcast));
+        assert_eq!(r.errors(), 0, "dead broadcast must stay a warning");
+        // A read anywhere before the free silences it.
+        let p2 = Program::new()
+            .op(PlanOp::Broadcast, "w", &[], 16, 4)
+            .op(map("AffineMap"), "y", &["w"], 16, 4)
+            .free("w");
+        assert!(!lint(&p2).has(Code::DeadBroadcast));
+    }
+
+    #[test]
+    fn dangling_zip_free_is_sp008_and_matches_runtime_wording() {
+        let p = Program::new()
+            .op(PlanOp::Scatter, "a", &[], 8, 4)
+            .op(PlanOp::Scatter, "b", &[], 8, 4)
+            .op(PlanOp::Zip, "ab", &["a", "b"], 8, 8)
+            .free("a");
+        let r = lint(&p);
+        assert!(r.has(Code::DanglingZipFree), "{}", r.render());
+        let msg = &r.diagnostics[0].message;
+        assert!(msg.contains("[SP008]") && msg.contains("ab"), "{msg}");
+        // Freeing the zip first makes the same free legal.
+        let p2 = Program::new()
+            .op(PlanOp::Scatter, "a", &[], 8, 4)
+            .op(PlanOp::Scatter, "b", &[], 8, 4)
+            .op(PlanOp::Zip, "ab", &["a", "b"], 8, 8)
+            .free("ab")
+            .free("a");
+        assert!(lint(&p2).is_clean(), "{}", lint(&p2).render());
+    }
+
+    #[test]
+    fn fused_node_without_consumer_is_sp007() {
+        let mut p = Program::new().op(PlanOp::Scatter, "in", &[], 8, 4);
+        p.push_op(map("Square"), "mid", &["in"], 8, 4, NodeState::Fused);
+        let r = audit_states(&p);
+        assert!(r.has(Code::IllegalFusion), "{}", r.render());
+        // With a consumer the same state is legal.
+        let mut p2 = Program::new().op(PlanOp::Scatter, "in", &[], 8, 4);
+        p2.push_op(map("Square"), "mid", &["in"], 8, 4, NodeState::Fused);
+        p2.push_op(map("Square"), "out", &["mid"], 8, 4, NodeState::Executed);
+        assert!(audit_states(&p2).is_clean());
+    }
+
+    #[test]
+    fn elided_node_read_downstream_is_sp007() {
+        let mut p = Program::new().op(PlanOp::Scatter, "in", &[], 8, 4);
+        p.push_op(map("Square"), "mid", &["in"], 8, 4, NodeState::Elided);
+        p.push_op(map("Square"), "out", &["mid"], 8, 4, NodeState::Executed);
+        assert!(audit_states(&p).has(Code::IllegalFusion));
+    }
+
+    #[test]
+    fn refinement_catches_dropped_sink_and_reordered_free() {
+        let input = Program::new()
+            .op(PlanOp::Scatter, "a", &[], 8, 4)
+            .op(map("Square"), "b", &["a"], 8, 4)
+            .op(PlanOp::Gather, "b", &["b"], 8, 4)
+            .free("a");
+        // Dropped gather.
+        let dropped = Program::new()
+            .op(PlanOp::Scatter, "a", &[], 8, 4)
+            .op(map("Square"), "b", &["a"], 8, 4)
+            .free("a");
+        assert!(audit_refinement(&input, &dropped).has(Code::IllegalFusion));
+        // Reordered free (before the gather).
+        let reordered = Program::new()
+            .op(PlanOp::Scatter, "a", &[], 8, 4)
+            .op(map("Square"), "b", &["a"], 8, 4)
+            .free("a")
+            .op(PlanOp::Gather, "b", &["b"], 8, 4);
+        assert!(audit_refinement(&input, &reordered).has(Code::IllegalFusion));
+        // Identity refines.
+        assert!(audit_refinement(&input, &input).is_clean());
+    }
+
+    #[test]
+    fn refinement_catches_vanished_compute_op() {
+        let input = Program::new()
+            .op(PlanOp::Scatter, "a", &[], 8, 4)
+            .op(map("Square"), "b", &["a"], 8, 4)
+            .op(PlanOp::Gather, "b", &["b"], 8, 4);
+        let vanished = Program::new()
+            .op(PlanOp::Scatter, "a", &[], 8, 4)
+            .op(PlanOp::Gather, "b", &["b"], 8, 4);
+        assert!(audit_refinement(&input, &vanished).has(Code::IllegalFusion));
+    }
+
+    #[test]
+    fn from_graph_resolves_reads_and_interleaves_frees() {
+        let mut plan = Plan::new();
+        plan.record(PlanOp::Scatter, "in", &[], 64);
+        plan.record(PlanOp::Map { func: "Square".into() }, "out", &["in"], 64);
+        plan.record(PlanOp::Gather, "out", &["out"], 64);
+        for id in 0..3 {
+            plan.set_state(id, NodeState::Executed);
+        }
+        // "in" freed after all three nodes (watermark 3).
+        let prog = Program::from_graph(&plan, &[(3, "in".into())], |_| 4);
+        assert_eq!(prog.events.len(), 4);
+        let r = lint(&prog);
+        assert!(r.is_clean(), "{}", r.render());
+        match &prog.events[1] {
+            Event::Op { reads, .. } => assert_eq!(reads, &vec!["in".to_string()]),
+            _ => panic!("expected op"),
+        }
+        // A free recorded at watermark 1 lands between scatter and map,
+        // and the lint sees the use-after-free.
+        let early = Program::from_graph(&plan, &[(1, "in".into())], |_| 4);
+        assert!(lint(&early).has(Code::UseAfterFree));
+    }
+}

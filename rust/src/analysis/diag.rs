@@ -1,0 +1,403 @@
+//! Diagnostics infrastructure for the static verifier (DESIGN.md §19).
+//!
+//! Every finding the analyzer can produce carries a **stable code**
+//! (`SP001`–`SP202`), plan-node provenance when available, and a
+//! suggested fix.  Codes never change meaning across releases so test
+//! suites and CI greps can pin them:
+//!
+//! | code  | severity | finding                                          |
+//! |-------|----------|--------------------------------------------------|
+//! | SP001 | error    | use-after-free of a registered array             |
+//! | SP002 | error    | double free                                      |
+//! | SP003 | error    | read before scatter (uninitialized MRAM)         |
+//! | SP004 | error    | shape mismatch on a zip/red edge                 |
+//! | SP005 | error    | element-size / 8-byte DMA alignment violation    |
+//! | SP006 | warning  | dead broadcast (shipped, never read)             |
+//! | SP007 | error    | illegal fusion (optimizer output not a refinement)|
+//! | SP008 | error    | free of a lazy-zip constituent (dangling iterator)|
+//! | SP101 | error    | overlapping-lane write race on an MRAM region    |
+//! | SP102 | error    | shared-region (broadcast-dedup) aliasing hazard  |
+//! | SP103 | error    | lane scheduled on a quarantined rank after dead-at|
+//! | SP104 | error    | lane double-booking (overlapping jobs on one lane)|
+//! | SP201 | error    | sanitizer: transfer checksum mismatch            |
+//! | SP202 | warning  | sanitizer: read from MRAM never written          |
+
+use std::fmt;
+
+use crate::error::{Error, Result};
+
+/// Stable diagnostic codes.  `SP0xx` are dataflow findings, `SP1xx`
+/// schedule findings, `SP2xx` runtime sanitizer findings.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Code {
+    /// SP001: an op reads an array after `free_array` released it.
+    UseAfterFree,
+    /// SP002: `free_array` called twice on the same array.
+    DoubleFree,
+    /// SP003: an op reads an array no scatter/broadcast/op produced.
+    UninitializedRead,
+    /// SP004: zip/red edge joins arrays of unequal length (or a
+    /// reduction with a zero-length accumulator).
+    ShapeMismatch,
+    /// SP005: element size is not a positive multiple of 4 bytes, so
+    /// per-row DMA can never be 8-byte alignable.
+    Misalignment,
+    /// SP006: a broadcast shipped to every DPU was freed unread.
+    DeadBroadcast,
+    /// SP007: the optimizer's output graph is not a refinement of the
+    /// input (source/sink/side-effect order diverged, or a fused/elided
+    /// node's bytes were still observable).
+    IllegalFusion,
+    /// SP008: freeing a lazy-zip constituent would dangle the zip's
+    /// iterators (same hazard `Management::free` rejects at runtime).
+    DanglingZipFree,
+    /// SP101: two lanes access an overlapping MRAM region in
+    /// overlapping windows and at least one writes.
+    LaneWriteRace,
+    /// SP102: a write aliases a shared (broadcast-dedup'd) region
+    /// while another lane reads it.
+    SharedAliasHazard,
+    /// SP103: a job is scheduled on a quarantined rank after its
+    /// declared `dead-at` time.
+    QuarantineViolation,
+    /// SP104: one lane carries two jobs with overlapping windows.
+    LaneDoubleBooking,
+    /// SP201: runtime sanitizer found a transfer checksum mismatch
+    /// (bytes changed between the recorded write and the read).
+    ChecksumMismatch,
+    /// SP202: runtime sanitizer saw a read from an MRAM address with
+    /// no recorded prior write (runtime cross-check of SP003).
+    UnwrittenRead,
+}
+
+impl Code {
+    /// The stable `SPxxx` string.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Code::UseAfterFree => "SP001",
+            Code::DoubleFree => "SP002",
+            Code::UninitializedRead => "SP003",
+            Code::ShapeMismatch => "SP004",
+            Code::Misalignment => "SP005",
+            Code::DeadBroadcast => "SP006",
+            Code::IllegalFusion => "SP007",
+            Code::DanglingZipFree => "SP008",
+            Code::LaneWriteRace => "SP101",
+            Code::SharedAliasHazard => "SP102",
+            Code::QuarantineViolation => "SP103",
+            Code::LaneDoubleBooking => "SP104",
+            Code::ChecksumMismatch => "SP201",
+            Code::UnwrittenRead => "SP202",
+        }
+    }
+
+    /// One-line title, as shown in the `analyze` code table.
+    pub fn title(self) -> &'static str {
+        match self {
+            Code::UseAfterFree => "use-after-free of a registered array",
+            Code::DoubleFree => "double free",
+            Code::UninitializedRead => "read before scatter (uninitialized MRAM)",
+            Code::ShapeMismatch => "shape mismatch on a zip/red edge",
+            Code::Misalignment => "element-size / DMA alignment violation",
+            Code::DeadBroadcast => "dead broadcast (shipped, never read)",
+            Code::IllegalFusion => "illegal fusion (output graph is not a refinement)",
+            Code::DanglingZipFree => "free of a lazy-zip constituent",
+            Code::LaneWriteRace => "overlapping-lane write race",
+            Code::SharedAliasHazard => "shared-region aliasing hazard",
+            Code::QuarantineViolation => "lane scheduled on a quarantined rank",
+            Code::LaneDoubleBooking => "lane double-booking",
+            Code::ChecksumMismatch => "sanitizer checksum mismatch",
+            Code::UnwrittenRead => "sanitizer read from unwritten MRAM",
+        }
+    }
+
+    /// Default severity for the code.
+    pub fn severity(self) -> Severity {
+        match self {
+            Code::DeadBroadcast | Code::UnwrittenRead => Severity::Warning,
+            _ => Severity::Error,
+        }
+    }
+
+    /// Every code, in table order.
+    pub fn all() -> &'static [Code] {
+        &[
+            Code::UseAfterFree,
+            Code::DoubleFree,
+            Code::UninitializedRead,
+            Code::ShapeMismatch,
+            Code::Misalignment,
+            Code::DeadBroadcast,
+            Code::IllegalFusion,
+            Code::DanglingZipFree,
+            Code::LaneWriteRace,
+            Code::SharedAliasHazard,
+            Code::QuarantineViolation,
+            Code::LaneDoubleBooking,
+            Code::ChecksumMismatch,
+            Code::UnwrittenRead,
+        ]
+    }
+}
+
+impl fmt::Display for Code {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// Finding severity.  `deny` mode fails the run only on errors;
+/// warnings are reported but never block.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Warning,
+    Error,
+}
+
+impl fmt::Display for Severity {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        })
+    }
+}
+
+/// One analyzer finding: code + message + provenance + suggested fix.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub code: Code,
+    pub severity: Severity,
+    /// What went wrong, worded for the programmer.
+    pub message: String,
+    /// Plan-node / event index the finding anchors to, when known.
+    pub node: Option<usize>,
+    /// The array involved, when the finding is about one.
+    pub array: Option<String>,
+    /// Suggested fix.
+    pub fix: String,
+}
+
+impl Diagnostic {
+    /// Build a finding with the code's default severity.
+    pub fn new(code: Code, message: impl Into<String>, fix: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            code,
+            severity: code.severity(),
+            message: message.into(),
+            node: None,
+            array: None,
+            fix: fix.into(),
+        }
+    }
+
+    pub fn at_node(mut self, node: usize) -> Diagnostic {
+        self.node = Some(node);
+        self
+    }
+
+    pub fn on_array(mut self, array: impl Into<String>) -> Diagnostic {
+        self.array = Some(array.into());
+        self
+    }
+}
+
+impl fmt::Display for Diagnostic {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}: {}", self.code, self.severity, self.message)?;
+        match (self.node, self.array.as_deref()) {
+            (Some(n), Some(a)) => write!(f, " (node #{n}, array `{a}`)")?,
+            (Some(n), None) => write!(f, " (node #{n})")?,
+            (None, Some(a)) => write!(f, " (array `{a}`)")?,
+            (None, None) => {}
+        }
+        write!(f, "; fix: {}", self.fix)
+    }
+}
+
+/// A batch of findings from one analysis pass.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Report {
+    pub diagnostics: Vec<Diagnostic>,
+}
+
+impl Report {
+    pub fn new(diagnostics: Vec<Diagnostic>) -> Report {
+        Report { diagnostics }
+    }
+
+    pub fn is_clean(&self) -> bool {
+        self.diagnostics.is_empty()
+    }
+
+    /// Number of error-severity findings (what `deny` gates on).
+    pub fn errors(&self) -> usize {
+        self.diagnostics
+            .iter()
+            .filter(|d| d.severity == Severity::Error)
+            .count()
+    }
+
+    pub fn warnings(&self) -> usize {
+        self.diagnostics.len() - self.errors()
+    }
+
+    /// Whether any finding carries `code`.
+    pub fn has(&self, code: Code) -> bool {
+        self.diagnostics.iter().any(|d| d.code == code)
+    }
+
+    pub fn merge(&mut self, other: Report) {
+        self.diagnostics.extend(other.diagnostics);
+    }
+
+    /// Human-readable rendering, one finding per line.
+    pub fn render(&self) -> String {
+        if self.is_clean() {
+            return "  clean: no findings\n".into();
+        }
+        let mut out = String::new();
+        for d in &self.diagnostics {
+            out.push_str(&format!("  {d}\n"));
+        }
+        out
+    }
+
+    /// Convert the report to a `deny`-mode verdict: an error if any
+    /// error-severity finding is present, `Ok(())` otherwise.
+    pub fn into_result(&self) -> Result<()> {
+        match self.diagnostics.iter().find(|d| d.severity == Severity::Error) {
+            Some(d) => Err(Error::Analysis(format!(
+                "{} finding(s), first: {d}",
+                self.errors()
+            ))),
+            None => Ok(()),
+        }
+    }
+}
+
+/// Analyzer enforcement mode: the `--analyze {off,warn,deny}` /
+/// `SIMPLEPIM_ANALYZE` knob.  `warn` reports findings on stderr;
+/// `deny` additionally fails the run on error-severity findings.
+/// Clean plans behave bit- and timeline-identically under all three.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum AnalyzeMode {
+    #[default]
+    Off,
+    Warn,
+    Deny,
+}
+
+impl AnalyzeMode {
+    /// Whether any checking is enabled.
+    pub fn is_on(self) -> bool {
+        self != AnalyzeMode::Off
+    }
+
+    pub fn as_str(self) -> &'static str {
+        match self {
+            AnalyzeMode::Off => "off",
+            AnalyzeMode::Warn => "warn",
+            AnalyzeMode::Deny => "deny",
+        }
+    }
+
+    /// Parse `off|warn|deny` (the CLI/env spelling).
+    pub fn parse(s: &str) -> Option<AnalyzeMode> {
+        match s {
+            "off" => Some(AnalyzeMode::Off),
+            "warn" => Some(AnalyzeMode::Warn),
+            "deny" => Some(AnalyzeMode::Deny),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for AnalyzeMode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.as_str())
+    }
+}
+
+/// The SP008 hazard message, shared verbatim between the static
+/// analyzer and `Management::free`'s runtime rejection so both paths
+/// word the same hazard identically (satellite of ISSUE 10).
+pub fn dangling_zip_message(id: &str, zips: &[String]) -> String {
+    format!(
+        "[SP008] cannot free `{id}`: it is a constituent of lazily zipped array(s) [{}] whose \
+         iterators would read dangling (or silently re-registered) data; free the zip(s) \
+         first, or map them to materialize",
+        zips.join(", ")
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_are_stable_and_unique() {
+        let all = Code::all();
+        for (i, a) in all.iter().enumerate() {
+            for b in &all[i + 1..] {
+                assert_ne!(a.as_str(), b.as_str());
+            }
+        }
+        assert_eq!(Code::UseAfterFree.as_str(), "SP001");
+        assert_eq!(Code::DanglingZipFree.as_str(), "SP008");
+        assert_eq!(Code::LaneWriteRace.as_str(), "SP101");
+        assert_eq!(Code::ChecksumMismatch.as_str(), "SP201");
+    }
+
+    #[test]
+    fn display_carries_code_provenance_and_fix() {
+        let d = Diagnostic::new(Code::UseAfterFree, "map reads `x` after free", "drop the free")
+            .at_node(3)
+            .on_array("x");
+        let s = d.to_string();
+        assert!(s.contains("[SP001]"), "{s}");
+        assert!(s.contains("node #3"), "{s}");
+        assert!(s.contains("`x`"), "{s}");
+        assert!(s.contains("fix: drop the free"), "{s}");
+    }
+
+    #[test]
+    fn deny_verdict_gates_on_errors_only() {
+        let warn_only = Report::new(vec![Diagnostic::new(
+            Code::DeadBroadcast,
+            "broadcast `b` never read",
+            "drop it",
+        )]);
+        assert!(warn_only.into_result().is_ok());
+        assert_eq!(warn_only.warnings(), 1);
+
+        let mut with_err = warn_only.clone();
+        with_err.merge(Report::new(vec![Diagnostic::new(
+            Code::DoubleFree,
+            "`x` freed twice",
+            "drop the second free",
+        )]));
+        let err = with_err.into_result().unwrap_err();
+        assert!(err.to_string().contains("SP002"), "{err}");
+        assert!(with_err.has(Code::DoubleFree));
+        assert_eq!(with_err.errors(), 1);
+    }
+
+    #[test]
+    fn mode_parses_round_trip() {
+        for m in [AnalyzeMode::Off, AnalyzeMode::Warn, AnalyzeMode::Deny] {
+            assert_eq!(AnalyzeMode::parse(m.as_str()), Some(m));
+        }
+        assert_eq!(AnalyzeMode::parse("loud"), None);
+        assert!(!AnalyzeMode::Off.is_on());
+        assert!(AnalyzeMode::Deny.is_on());
+    }
+
+    #[test]
+    fn sp008_message_names_code_array_and_zips() {
+        let m = dangling_zip_message("a", &["ab".into(), "ac".into()]);
+        assert!(m.contains("[SP008]"));
+        assert!(m.contains("`a`"));
+        assert!(m.contains("ab, ac"));
+    }
+}

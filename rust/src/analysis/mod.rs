@@ -1,0 +1,153 @@
+//! Static verifier for plan graphs and modeled schedules
+//! (DESIGN.md §19).
+//!
+//! Three analyses run between `optimize` and `execute`, all pure
+//! read-only passes (a clean plan under `--analyze deny` is bit- and
+//! timeline-identical to `off`):
+//!
+//! * [`dataflow`] — lint over the session's plan-event program:
+//!   use-after-free, double free, read-before-scatter, shape and
+//!   alignment mismatches, dead broadcasts, dangling-zip frees, and
+//!   the fusion-legality audit ([`dataflow::audit_refinement`]).
+//! * [`races`] — happens-before interval analysis over the modeled job
+//!   schedule: lane write races, shared-region aliasing, quarantine
+//!   soundness, lane double-booking.
+//! * [`audit_transfers`] — the debug **sanitizer**: when
+//!   `PimMachine::set_sanitizer(true)` is on, every coordinator-level
+//!   MRAM transfer records `(dir, addr, row_len, checksum)` via the
+//!   fault layer's FNV row digests; this audit cross-checks the static
+//!   verdicts at runtime (a read of never-written MRAM is the runtime
+//!   shadow of SP003; a digest mismatch means bytes changed behind the
+//!   coordinator's back).
+//!
+//! Findings carry stable `SPxxx` codes ([`diag::Code`]); enforcement is
+//! the [`AnalyzeMode`] knob (`--analyze {off,warn,deny}` /
+//! `SIMPLEPIM_ANALYZE`).
+
+pub mod dataflow;
+pub mod diag;
+pub mod races;
+
+pub use dataflow::{audit_refinement, audit_states, lint, Event, Program};
+pub use diag::{dangling_zip_message, AnalyzeMode, Code, Diagnostic, Report, Severity};
+pub use races::{
+    check_lanes, check_quarantine, check_schedule, verify_schedule, RegionAccess, Space,
+};
+
+/// The full static pass over one program: the dataflow lint plus the
+/// fused/elided state-legality audit.
+pub fn verify_program(prog: &Program) -> Report {
+    let mut r = lint(prog);
+    r.merge(audit_states(prog));
+    r
+}
+
+/// One transfer recorded by the runtime sanitizer
+/// (`PimMachine::set_sanitizer`): direction, MRAM base address,
+/// per-DPU row length, and the FNV digest of the rows moved.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct XferRecord {
+    /// `true` for host→PIM (and kernel materialization) writes,
+    /// `false` for PIM→host reads.
+    pub write: bool,
+    /// MRAM base address of the region.
+    pub addr: u64,
+    /// Per-DPU row bytes moved.
+    pub row_len: u64,
+    /// Shard-order-invariant digest of the rows
+    /// (`pim::faults::checksum_rows`).
+    pub digest: u64,
+    /// Which transfer path recorded it (for the report).
+    pub what: &'static str,
+}
+
+/// Cross-check a sanitizer transfer log: every read must be covered by
+/// a prior write to the same address (SP202 otherwise — the runtime
+/// shadow of SP003), and a same-shape read must reproduce the write's
+/// digest (SP201 otherwise: the bytes changed through a path the
+/// coordinator does not model).
+pub fn audit_transfers(log: &[XferRecord]) -> Report {
+    let mut out = Vec::new();
+    for (i, rec) in log.iter().enumerate() {
+        if rec.write {
+            continue;
+        }
+        let prior = log[..i].iter().rev().find(|w| w.write && w.addr == rec.addr);
+        match prior {
+            None => out.push(
+                Diagnostic::new(
+                    Code::UnwrittenRead,
+                    format!(
+                        "{} read {} B rows at {:#x} with no recorded prior write",
+                        rec.what, rec.row_len, rec.addr
+                    ),
+                    "scatter/broadcast the region before reading it (see SP003)",
+                )
+                .at_node(i),
+            ),
+            Some(w) if w.row_len == rec.row_len && w.digest != rec.digest => out.push(
+                Diagnostic::new(
+                    Code::ChecksumMismatch,
+                    format!(
+                        "{} read at {:#x} ({} B rows) does not match the digest {} wrote \
+                         ({:#018x} vs {:#018x})",
+                        rec.what, rec.addr, rec.row_len, w.what, rec.digest, w.digest
+                    ),
+                    "bytes changed outside the modeled transfer paths; audit raw MRAM writes",
+                )
+                .at_node(i),
+            ),
+            Some(_) => {}
+        }
+    }
+    Report::new(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn w(addr: u64, row_len: u64, digest: u64) -> XferRecord {
+        XferRecord { write: true, addr, row_len, digest, what: "push" }
+    }
+
+    fn r(addr: u64, row_len: u64, digest: u64) -> XferRecord {
+        XferRecord { write: false, addr, row_len, digest, what: "pull" }
+    }
+
+    #[test]
+    fn matched_roundtrip_is_clean() {
+        let log = [w(0x100, 64, 7), r(0x100, 64, 7)];
+        assert!(audit_transfers(&log).is_clean());
+    }
+
+    #[test]
+    fn unwritten_read_is_sp202_warning() {
+        let log = [r(0x200, 64, 7)];
+        let rep = audit_transfers(&log);
+        assert!(rep.has(Code::UnwrittenRead));
+        assert_eq!(rep.errors(), 0, "sanitizer cross-check warns, never blocks alone");
+    }
+
+    #[test]
+    fn digest_mismatch_is_sp201() {
+        let log = [w(0x100, 64, 7), r(0x100, 64, 8)];
+        assert!(audit_transfers(&log).has(Code::ChecksumMismatch));
+        // A later rewrite supersedes the old digest.
+        let log2 = [w(0x100, 64, 7), w(0x100, 64, 9), r(0x100, 64, 9)];
+        assert!(audit_transfers(&log2).is_clean());
+        // Different row shapes are partial reads: not comparable.
+        let log3 = [w(0x100, 64, 7), r(0x100, 32, 8)];
+        assert!(audit_transfers(&log3).is_clean());
+    }
+
+    #[test]
+    fn verify_program_combines_lint_and_state_audit() {
+        use crate::coordinator::plan::{NodeState, PlanOp};
+        let mut p = Program::new().op(PlanOp::Scatter, "in", &[], 8, 4).free("in").free("in");
+        p.push_op(PlanOp::Map { func: "Square".into() }, "mid", &["in"], 8, 4, NodeState::Fused);
+        let rep = verify_program(&p);
+        assert!(rep.has(Code::DoubleFree));
+        assert!(rep.has(Code::IllegalFusion));
+    }
+}

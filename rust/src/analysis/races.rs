@@ -1,0 +1,275 @@
+//! Happens-before race detector over the modeled job schedule
+//! (DESIGN.md §19).
+//!
+//! The multi-tenant scheduler (`schedule_jobs` / `schedule_jobs_masked`)
+//! assigns each job a partition lane and a modeled `[start, finish)`
+//! window.  Within the model, two jobs are unordered exactly when their
+//! windows overlap — there is no other synchronization edge — so a
+//! write to an MRAM region that another, window-overlapping job touches
+//! is a race in the modeled semantics:
+//!
+//! * SP101 — overlapping windows + overlapping regions in the same
+//!   partition space + at least one write;
+//! * SP102 — the same hazard on the **shared** space (broadcast-dedup'd
+//!   context regions, which are correct only because every lane treats
+//!   them as read-only);
+//! * SP103 — a job window extending past `dead-at` on a quarantined
+//!   lane (the mask soundness contract of DESIGN.md §18);
+//! * SP104 — two jobs double-booked onto one lane with overlapping
+//!   windows (list scheduling can never produce this; seeing it means
+//!   the schedule was corrupted after the fact).
+//!
+//! The checks are pure functions of schedule + access descriptors, so
+//! mutation tests can corrupt either independently, and the live
+//! integration (`ServiceCore`) feeds the real scheduler output —
+//! clean by construction, verified on every drain when `--analyze` is
+//! on.
+
+use crate::timing::JobSchedule;
+
+use super::diag::{Code, Diagnostic, Report};
+
+/// Which MRAM address space a region lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Space {
+    /// A partition's private slice of MRAM (per-lane).
+    Partition(usize),
+    /// Machine-shared regions: broadcast-dedup'd context ships, the
+    /// shared plan cache's resident artifacts.
+    Shared,
+}
+
+/// One job's access to an MRAM byte region `[lo, hi)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegionAccess {
+    /// Index of the job in the schedule.
+    pub job: usize,
+    pub space: Space,
+    pub lo: u64,
+    /// Exclusive upper bound.
+    pub hi: u64,
+    pub write: bool,
+}
+
+impl RegionAccess {
+    fn bytes_overlap(&self, other: &RegionAccess) -> bool {
+        self.space == other.space && self.lo < other.hi && other.lo < self.hi
+    }
+}
+
+/// SP101/SP102: flag every pair of accesses from different jobs whose
+/// schedule windows overlap, whose regions overlap in the same space,
+/// and where at least one side writes.
+pub fn check_schedule(sched: &JobSchedule, accesses: &[RegionAccess]) -> Report {
+    let mut out = Vec::new();
+    for (i, a) in accesses.iter().enumerate() {
+        for b in &accesses[i + 1..] {
+            if a.job == b.job || a.job >= sched.len() || b.job >= sched.len() {
+                continue;
+            }
+            if !(a.write || b.write) || !a.bytes_overlap(b) || !sched.overlaps(a.job, b.job) {
+                continue;
+            }
+            let (code, what) = match a.space {
+                Space::Shared => (
+                    Code::SharedAliasHazard,
+                    "shared (broadcast-dedup'd) region — dedup is only sound read-only",
+                ),
+                Space::Partition(_) => (Code::LaneWriteRace, "partition MRAM region"),
+            };
+            let writer = if a.write { a.job } else { b.job };
+            out.push(
+                Diagnostic::new(
+                    code,
+                    format!(
+                        "job #{} writes {what} [{:#x}, {:#x}) while job #{} touches it in an \
+                         overlapping window ([{:.3e}, {:.3e}) vs [{:.3e}, {:.3e}) s)",
+                        writer,
+                        a.lo.max(b.lo),
+                        a.hi.min(b.hi),
+                        if writer == a.job { b.job } else { a.job },
+                        sched.start_s[a.job],
+                        sched.finish_s[a.job],
+                        sched.start_s[b.job],
+                        sched.finish_s[b.job],
+                    ),
+                    "order the jobs (disjoint windows) or give the writer a private region",
+                )
+                .at_node(writer),
+            );
+        }
+    }
+    Report::new(out)
+}
+
+/// SP104: one lane, two jobs, overlapping windows.  The earliest-free
+/// list scheduler serializes each lane by construction, so any
+/// double-booking means the schedule was edited after planning.
+pub fn check_lanes(sched: &JobSchedule) -> Report {
+    let mut out = Vec::new();
+    for i in 0..sched.len() {
+        for j in i + 1..sched.len() {
+            if sched.partition[i] == sched.partition[j] && sched.overlaps(i, j) {
+                out.push(
+                    Diagnostic::new(
+                        Code::LaneDoubleBooking,
+                        format!(
+                            "jobs #{i} and #{j} are both booked on partition lane {} with \
+                             overlapping windows ([{:.3e}, {:.3e}) and [{:.3e}, {:.3e}) s)",
+                            sched.partition[i],
+                            sched.start_s[i],
+                            sched.finish_s[i],
+                            sched.start_s[j],
+                            sched.finish_s[j],
+                        ),
+                        "re-admit the batch through the list scheduler; lanes are exclusive",
+                    )
+                    .at_node(j),
+                );
+            }
+        }
+    }
+    Report::new(out)
+}
+
+/// SP103: quarantine-mask soundness.  A lane marked `blocked` models a
+/// dead rank: no job window may extend past `dead_at` on it (`None`
+/// means dead from the start, so any booking at all is a violation).
+pub fn check_quarantine(sched: &JobSchedule, blocked: &[bool], dead_at: Option<f64>) -> Report {
+    let mut out = Vec::new();
+    for i in 0..sched.len() {
+        let lane = sched.partition[i];
+        if !blocked.get(lane).copied().unwrap_or(false) {
+            continue;
+        }
+        let violates = match dead_at {
+            None => true,
+            Some(t) => sched.finish_s[i] > t,
+        };
+        if violates {
+            out.push(
+                Diagnostic::new(
+                    Code::QuarantineViolation,
+                    format!(
+                        "job #{i} is scheduled on quarantined lane {lane} with window \
+                         [{:.3e}, {:.3e}) s{}",
+                        sched.start_s[i],
+                        sched.finish_s[i],
+                        match dead_at {
+                            Some(t) => format!(", past the rank's dead-at {t:.3e} s"),
+                            None => " on a rank dead from the start".into(),
+                        },
+                    ),
+                    "admit through schedule_jobs_masked so the dead lane is never considered",
+                )
+                .at_node(i),
+            );
+        }
+    }
+    Report::new(out)
+}
+
+/// All schedule checks in one call: lane exclusivity, quarantine
+/// soundness, and region races.
+pub fn verify_schedule(
+    sched: &JobSchedule,
+    accesses: &[RegionAccess],
+    blocked: &[bool],
+    dead_at: Option<f64>,
+) -> Report {
+    let mut r = check_lanes(sched);
+    r.merge(check_quarantine(sched, blocked, dead_at));
+    r.merge(check_schedule(sched, accesses));
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::timing::schedule_jobs_masked;
+
+    fn sched(partition: &[usize], start: &[f64], finish: &[f64]) -> JobSchedule {
+        JobSchedule {
+            partition: partition.to_vec(),
+            start_s: start.to_vec(),
+            finish_s: finish.to_vec(),
+        }
+    }
+
+    fn access(job: usize, space: Space, lo: u64, hi: u64, write: bool) -> RegionAccess {
+        RegionAccess { job, space, lo, hi, write }
+    }
+
+    #[test]
+    fn overlapping_lane_write_is_sp101() {
+        // Jobs 0 and 1 run concurrently on different lanes but their
+        // descriptors claim the same partition-space region, one writing.
+        let s = sched(&[0, 1], &[0.0, 0.0], &[1.0, 1.0]);
+        let acc = [
+            access(0, Space::Partition(0), 0, 4096, true),
+            access(1, Space::Partition(0), 1024, 2048, false),
+        ];
+        let r = check_schedule(&s, &acc);
+        assert!(r.has(Code::LaneWriteRace), "{}", r.render());
+        // Read/read never races; disjoint windows never race.
+        let rr = [
+            access(0, Space::Partition(0), 0, 4096, false),
+            access(1, Space::Partition(0), 0, 4096, false),
+        ];
+        assert!(check_schedule(&s, &rr).is_clean());
+        let serial = sched(&[0, 0], &[0.0, 1.0], &[1.0, 2.0]);
+        assert!(check_schedule(&serial, &acc).is_clean());
+    }
+
+    #[test]
+    fn shared_region_write_is_sp102() {
+        let s = sched(&[0, 1], &[0.0, 0.5], &[1.0, 1.5]);
+        let acc = [
+            access(0, Space::Shared, 0, 256, true),
+            access(1, Space::Shared, 0, 256, false),
+        ];
+        let r = check_schedule(&s, &acc);
+        assert!(r.has(Code::SharedAliasHazard), "{}", r.render());
+        assert!(!r.has(Code::LaneWriteRace));
+    }
+
+    #[test]
+    fn quarantined_lane_booking_is_sp103() {
+        let s = sched(&[0, 2], &[0.0, 0.0], &[1.0, 1.0]);
+        let blocked = [false, false, true];
+        // Window [0,1) extends past dead-at 0.5 on the dead lane.
+        let r = check_quarantine(&s, &blocked, Some(0.5));
+        assert!(r.has(Code::QuarantineViolation), "{}", r.render());
+        // Finishing before the rank dies is legal…
+        assert!(check_quarantine(&s, &blocked, Some(2.0)).is_clean());
+        // …but any booking on a lane dead from the start is not.
+        assert!(check_quarantine(&s, &blocked, None).has(Code::QuarantineViolation));
+        assert!(check_quarantine(&s, &[false, false, false], Some(0.5)).is_clean());
+    }
+
+    #[test]
+    fn lane_double_booking_is_sp104() {
+        let s = sched(&[1, 1], &[0.0, 0.5], &[1.0, 1.5]);
+        assert!(check_lanes(&s).has(Code::LaneDoubleBooking));
+        let ok = sched(&[1, 1], &[0.0, 1.0], &[1.0, 2.0]);
+        assert!(check_lanes(&ok).is_clean());
+    }
+
+    #[test]
+    fn real_scheduler_output_is_clean_by_construction() {
+        // The live integration invariant: whatever the masked list
+        // scheduler emits passes every check with per-lane write
+        // descriptors and a read-only shared region.
+        let durations: Vec<f64> = (0..24).map(|i| 0.001 * (1.0 + (i % 7) as f64)).collect();
+        let mut lanes = vec![0.0; 6];
+        let blocked = [false, true, false, false, true, false];
+        let s = schedule_jobs_masked(&durations, &mut lanes, &blocked);
+        let mut acc = Vec::new();
+        for (i, &p) in s.partition.iter().enumerate() {
+            acc.push(access(i, Space::Partition(p), 0, u64::MAX, true));
+            acc.push(access(i, Space::Shared, 0, 4096, false));
+        }
+        let r = verify_schedule(&s, &acc, &blocked, Some(0.0));
+        assert!(r.is_clean(), "{}", r.render());
+    }
+}

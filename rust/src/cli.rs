@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   run <workload> [--dpus N]        run one workload end-to-end
+//!   analyze [workloads]               static-verify plan graphs (§19)
 //!   figures <fig9|fig10|fig11|ablations>   regenerate a paper figure
 //!   table1                            regenerate the LoC table
 //!   info [--dpus N]                   print the machine model
@@ -10,6 +11,7 @@
 use crate::error::{Error, Result};
 
 /// Parsed command line.
+#[derive(Debug)]
 pub struct Args {
     pub cmd: String,
     pub positional: Vec<String>,
@@ -106,6 +108,14 @@ COMMANDS:
                              --fault-backoff T (exponential backoff
                              base in modeled seconds; default 1e-4 or
                              $SIMPLEPIM_FAULT_BACKOFF)
+                             --analyze {off|warn|deny} (static verifier,
+                             DESIGN.md §19: lint the plan graph and the
+                             modeled schedule between optimize and
+                             execute; warn reports SPxxx findings on
+                             stderr, deny fails the run on any
+                             error-severity finding; clean plans are
+                             bit- and timeline-identical in all modes;
+                             default off or $SIMPLEPIM_ANALYZE)
                              --explain (dump the optimized plan: nodes,
                              which backend ran them, fusions applied,
                              plan-cache hits/misses, pipelined launches,
@@ -156,6 +166,15 @@ COMMANDS:
                              --fault-retries/--fault-backoff as in
                              `run`; serving always runs the
                              bit-identical host execution engine
+  analyze [which]   lint workloads' plan graphs without pricing a run
+                    (DESIGN.md §19): replay each named workload — or
+                    `all` (default), or a comma list — host-only as the
+                    plan recorder, then print the SPxxx findings of the
+                    dataflow lint and fusion-legality audit
+                    options: --analyze {off|warn|deny} (deny fails on
+                             any error-severity finding; reports print
+                             in every mode) --elems N (default 30000)
+                             --dpus/--channels/--ranks as in `run`
   figures <which>   regenerate a paper figure from the timing model
                     which: fig9 fig10 fig11 ablations all
                     options: --csv (emit CSV instead of tables)
@@ -186,6 +205,7 @@ pub fn run() -> Result<()> {
     match args.cmd.as_str() {
         "run" => crate::report::figures::cmd_run(&args),
         "serve" => crate::report::figures::cmd_serve(&args),
+        "analyze" => crate::report::figures::cmd_analyze(&args),
         "figures" => crate::report::figures::cmd_figures(&args),
         "table1" => crate::report::loc::cmd_table1(&args),
         "bench-gate" => crate::report::gate::cmd_bench_gate(&args),
@@ -229,6 +249,7 @@ fn cmd_info(args: &Args) -> Result<()> {
         faults: args.flag("faults").map(str::to_string),
         fault_retries: args.flag("fault-retries").map(str::to_string),
         fault_backoff: args.flag("fault-backoff").map(str::to_string),
+        analyze: args.flag("analyze").map(str::to_string),
     };
     let settings =
         crate::util::settings::Settings::resolve(&crate::util::settings::Layer::default(), &flags)?;

@@ -140,6 +140,9 @@ impl PimSystem {
     /// schedule folding the producer's input scatters, its kernel, and
     /// this gather's pull into chunked lanes (DESIGN.md §12).
     pub fn gather(&mut self, id: &str) -> Result<Vec<i32>> {
+        // Static-verifier boundary (DESIGN.md §19): read-only, no-op
+        // when --analyze is off.
+        self.verify_plan()?;
         let folded_pull = self.pipelined_gather_charge(id)?;
         self.force_array(id)?;
         let meta = self.management.lookup(id)?.clone();
@@ -247,6 +250,7 @@ impl PimSystem {
             self.charge_chain(id)?;
         }
         let meta = self.management.free(id)?;
+        self.engine.record_free(id);
         if let Some(node) = self.engine.pending.remove(id) {
             self.detach_dependents(id);
             if !node.charged {
@@ -270,6 +274,7 @@ impl PimSystem {
 /// Hot path (every scatter/gather/map marshals through this), so on
 /// little-endian targets it is a single memcpy; the portable
 /// per-element path covers big-endian.
+#[allow(unsafe_code)] // sole crate exception: LE memcpy fast path, see SAFETY
 pub(crate) fn words_to_bytes(words: &[i32]) -> Vec<u8> {
     if cfg!(target_endian = "little") {
         let mut out = vec![0u8; words.len() * 4];
@@ -296,6 +301,7 @@ pub(crate) fn words_to_bytes(words: &[i32]) -> Vec<u8> {
 /// (`out.len()` must equal `words.len() * 4`).  The allocation-free
 /// sibling of [`words_to_bytes`], used by the backend's sharded row
 /// marshalling where workers stage through arena buffers.
+#[allow(unsafe_code)] // LE memcpy fast path, see SAFETY
 pub(crate) fn words_into_bytes(words: &[i32], out: &mut [u8]) {
     debug_assert_eq!(out.len(), words.len() * 4);
     if cfg!(target_endian = "little") {
@@ -320,6 +326,7 @@ pub(crate) fn words_into_bytes(words: &[i32], out: &mut [u8]) {
 /// otherwise — callers fall back to [`bytes_to_words`].  The merge
 /// engine's pull side (DESIGN.md §13) reads every DPU's partial through
 /// this view, killing the seed's per-buffer staging copy.
+#[allow(unsafe_code)] // zero-copy aligned word view, see SAFETY
 pub(crate) fn bytes_as_words(bytes: &[u8]) -> Option<&[i32]> {
     if bytes.len() % 4 != 0 || !cfg!(target_endian = "little") {
         return None;
@@ -336,6 +343,7 @@ pub(crate) fn bytes_as_words(bytes: &[u8]) -> Option<&[i32]> {
 }
 
 /// Unpack little-endian bytes into i32 words (length must be 4-aligned).
+#[allow(unsafe_code)] // LE memcpy fast path, see SAFETY
 pub(crate) fn bytes_to_words(bytes: &[u8]) -> Vec<i32> {
     debug_assert_eq!(bytes.len() % 4, 0);
     if cfg!(target_endian = "little") {

@@ -46,6 +46,22 @@ pub enum Inputs {
     Two(Rc<Vec<Vec<i32>>>, Rc<Vec<Vec<i32>>>),
 }
 
+impl std::fmt::Debug for Inputs {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Megabytes of staged rows: render the shape, not the data.
+        match self {
+            Inputs::One(a) => {
+                f.debug_struct("Inputs::One").field("dpus", &a.len()).finish()
+            }
+            Inputs::Two(a, b) => f
+                .debug_struct("Inputs::Two")
+                .field("dpus", &a.len())
+                .field("dpus_b", &b.len())
+                .finish(),
+        }
+    }
+}
+
 impl Inputs {
     pub fn n_dpus(&self) -> usize {
         match self {
@@ -500,7 +516,7 @@ fn run_1d(
                     }
                 }
             }
-            let mut tensors: Vec<TensorRef> = vec![TensorRef::new(&xbuf, &gang_shape)];
+            let mut tensors: Vec<TensorRef<'_>> = vec![TensorRef::new(&xbuf, &gang_shape)];
             if b.is_some() {
                 tensors.push(TensorRef::new(&ybuf, &gang_shape));
             }

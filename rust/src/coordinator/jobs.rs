@@ -309,6 +309,16 @@ pub struct JobQueue {
     core: ServiceCore,
 }
 
+impl std::fmt::Debug for JobQueue {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // The engine holds boxed job closures; render the shape only.
+        f.debug_struct("JobQueue")
+            .field("partitions", &self.core.partitions())
+            .field("partition_dpus", &self.core.partition_dpus())
+            .finish_non_exhaustive()
+    }
+}
+
 impl JobQueue {
     /// Build a queue over `partitions` equal [`DpuSet`](crate::pim::DpuSet)s
     /// of `cfg`, running every job with the given backend/pipeline
@@ -324,6 +334,14 @@ impl JobQueue {
         Ok(JobQueue {
             core: ServiceCore::batch(cfg, partitions, backend, threads, pipeline)?,
         })
+    }
+
+    /// Set the static-verifier mode (DESIGN.md §19) for jobs drained
+    /// from now on: every job's system lints its plan graph, and the
+    /// drain race-checks the admitted schedule.  Defaults to
+    /// `SIMPLEPIM_ANALYZE`, or off.
+    pub fn set_analyze(&mut self, mode: crate::analysis::AnalyzeMode) {
+        self.core.set_analyze(mode);
     }
 
     /// Switch cross-tenant sharing on or off for jobs drained from now

@@ -13,14 +13,12 @@ use std::collections::BTreeMap;
 use crate::error::{Error, Result};
 
 /// Format the dependent-zip diagnostic shared by [`Management::free`]
-/// and its pre-check.
+/// and its pre-check.  The wording (and the `[SP008]` code) comes from
+/// the static analyzer so the runtime rejection and the lint finding
+/// describe the hazard identically (DESIGN.md §19).
 fn dangling_zip_error(id: &str, zips: &[&str]) -> Error {
-    Error::Config(format!(
-        "cannot free `{id}`: it is a constituent of lazily zipped array(s) [{}] whose \
-         iterators would read dangling (or silently re-registered) data; free the zip(s) \
-         first, or map them to materialize",
-        zips.join(", ")
-    ))
+    let zips: Vec<String> = zips.iter().map(|z| z.to_string()).collect();
+    Error::Config(crate::analysis::dangling_zip_message(id, &zips))
 }
 
 /// Physical placement of a registered array.

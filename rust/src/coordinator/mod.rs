@@ -108,6 +108,27 @@ pub struct PimSystem {
     pub red_variant_override: Option<ReduceVariant>,
     /// Variant + active tasklets of the most recent `array_red`.
     pub last_red_variant: Option<(ReduceVariant, u32)>,
+    /// Static-verifier enforcement (DESIGN.md §19): `Off` skips the
+    /// pass entirely; `Warn` reports findings on stderr; `Deny` refuses
+    /// plans with error-severity findings at the forcing boundaries.
+    pub(crate) analyze: crate::analysis::AnalyzeMode,
+    /// Findings already reported this session (the verifier re-lints
+    /// the whole graph at every boundary; each unique finding prints
+    /// once).
+    pub(crate) analyze_reported: std::collections::HashSet<String>,
+}
+
+impl std::fmt::Debug for PimSystem {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PimSystem")
+            .field("dpus", &self.machine.cfg.n_dpus)
+            .field("backend", &self.backend.kind())
+            .field("pipeline", &self.pipeline)
+            .field("analyze", &self.analyze)
+            .field("arrays", &self.management.ids().len())
+            .field("plan_nodes", &self.engine.graph.len())
+            .finish_non_exhaustive()
+    }
 }
 
 /// How a [`PimSystemBuilder`] decides on the AOT runtime.
@@ -152,6 +173,18 @@ pub struct PimSystemBuilder {
     backend: BackendSpec,
     pipeline: Option<PipelineMode>,
     shared: Option<Arc<SharedPlanCache>>,
+    analyze: Option<crate::analysis::AnalyzeMode>,
+}
+
+impl std::fmt::Debug for PimSystemBuilder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("PimSystemBuilder")
+            .field("dpus", &self.cfg.n_dpus)
+            .field("pipeline", &self.pipeline)
+            .field("analyze", &self.analyze)
+            .field("shared_cache", &self.shared.is_some())
+            .finish_non_exhaustive()
+    }
 }
 
 impl PimSystemBuilder {
@@ -207,6 +240,16 @@ impl PimSystemBuilder {
         self
     }
 
+    /// Select the static-verifier mode explicitly (DESIGN.md §19).
+    /// Unlike the backend knob, `SIMPLEPIM_ANALYZE` is consulted even
+    /// for explicitly-configured systems when this is not called — the
+    /// verifier is an observer that never changes results or modeled
+    /// time on clean plans, so environment opt-in is always safe.
+    pub fn analyze(mut self, mode: crate::analysis::AnalyzeMode) -> Self {
+        self.analyze = Some(mode);
+        self
+    }
+
     /// Validate the configuration and assemble the system.
     pub fn build(self) -> Result<PimSystem> {
         let runtime = match self.runtime {
@@ -232,8 +275,13 @@ impl PimSystemBuilder {
             None if explicit => PipelineMode::Off,
             None => crate::util::settings::pipeline_from_env()?,
         };
+        let analyze = match self.analyze {
+            Some(mode) => mode,
+            None => crate::util::settings::analyze_from_env()?,
+        };
         let mut sys = assemble(self.cfg, runtime, backend, self.shared);
         sys.pipeline = pipeline;
+        sys.analyze = analyze;
         Ok(sys)
     }
 }
@@ -261,6 +309,8 @@ fn assemble(
         dma_policy: DmaPolicy::Dynamic,
         red_variant_override: None,
         last_red_variant: None,
+        analyze: crate::analysis::AnalyzeMode::Off,
+        analyze_reported: std::collections::HashSet::new(),
     }
 }
 
@@ -274,6 +324,7 @@ impl PimSystem {
             backend: BackendSpec::Env,
             pipeline: None,
             shared: None,
+            analyze: None,
         }
     }
 
@@ -467,6 +518,82 @@ impl PimSystem {
     /// Faults injected into this system so far, in injection order.
     pub fn fault_events(&self) -> &[crate::pim::FaultEvent] {
         self.machine.fault_events()
+    }
+
+    /// Select the static-verifier mode (CLI: `--analyze`, DESIGN.md
+    /// §19).  A pure read-only pass at the forcing boundaries: clean
+    /// plans are bit- and timeline-identical under every mode.
+    pub fn set_analyze(&mut self, mode: crate::analysis::AnalyzeMode) {
+        self.analyze = mode;
+    }
+
+    /// The active static-verifier mode.
+    pub fn analyze_mode(&self) -> crate::analysis::AnalyzeMode {
+        self.analyze
+    }
+
+    /// Toggle the debug sanitizer (DESIGN.md §19): while on, every
+    /// coordinator-level MRAM transfer records its direction, address,
+    /// row shape, and FNV checksum for [`Self::sanitizer_report`] to
+    /// cross-check.  Functional recording only — the timeline is never
+    /// touched — but it allocates, so it stays opt-in and is *not*
+    /// implied by `deny`.
+    pub fn set_sanitizer(&mut self, on: bool) {
+        self.machine.set_sanitizer(on);
+    }
+
+    /// Audit the sanitizer's transfer log (SP201/SP202).
+    pub fn sanitizer_report(&self) -> crate::analysis::Report {
+        crate::analysis::audit_transfers(self.machine.xfer_log())
+    }
+
+    /// The analyzable event program for this session: the plan graph's
+    /// nodes interleaved with the engine's free records, with element
+    /// sizes resolved from the management registry where still known.
+    pub fn analysis_program(&self) -> crate::analysis::Program {
+        crate::analysis::Program::from_graph(&self.engine.graph, &self.engine.frees, |array| {
+            self.management.lookup(array).map(|m| m.type_size).unwrap_or(0)
+        })
+    }
+
+    /// Run every applicable static check over the current session:
+    /// dataflow lint + fusion-legality audit, plus the sanitizer audit
+    /// when its log is active.  Returns an empty report when the graph
+    /// overflowed its recording bound — a truncated program cannot be
+    /// reasoned about without false positives.
+    pub fn analysis_report(&self) -> crate::analysis::Report {
+        if self.engine.graph.dropped > 0 {
+            return crate::analysis::Report::default();
+        }
+        let mut report = crate::analysis::verify_program(&self.analysis_program());
+        if self.machine.sanitizer_enabled() {
+            report.merge(self.sanitizer_report());
+        }
+        report
+    }
+
+    /// The enforcement hook called at the forcing boundaries
+    /// ([`Self::run`], `gather`): no-op when `Off`; otherwise lint,
+    /// report each unique finding once on stderr, and under `Deny`
+    /// refuse the plan on error-severity findings.
+    pub(crate) fn verify_plan(&mut self) -> Result<()> {
+        use crate::analysis::AnalyzeMode;
+        if self.analyze == AnalyzeMode::Off {
+            return Ok(());
+        }
+        let report = self.analysis_report();
+        if report.is_clean() {
+            return Ok(());
+        }
+        for d in &report.diagnostics {
+            if self.analyze_reported.insert(d.to_string()) {
+                eprintln!("simplepim: analyze: {d}");
+            }
+        }
+        if self.analyze == AnalyzeMode::Deny {
+            report.into_result()?;
+        }
+        Ok(())
     }
 
     /// Modeled end-to-end timeline so far.

@@ -17,6 +17,14 @@
 //!    or the cross-tenant [`super::shared::SharedPlanCache`] (DESIGN.md
 //!    §16), under which N tenants racing the same key plan exactly
 //!    once.
+//!
+//! Every rewrite must be a *refinement* of the unoptimized graph: same
+//! sources, same sinks, same side-effect order, with dropped compute
+//! surviving as `Fused`/`Elided` node states.  The static verifier
+//! (DESIGN.md §19) proves this per plan via
+//! [`crate::analysis::audit_refinement`], which flags any divergence as
+//! an SP007 `IllegalFusion` finding — the tests below pin the contract
+//! from the optimizer's side.
 
 use crate::pim::PimConfig;
 use crate::timing::{self, DmaPolicy, KernelProfile, OptFlags, ReduceVariant};
@@ -194,6 +202,58 @@ mod tests {
         assert_eq!(second.variant, reference.variant);
         let s = shared.stats();
         assert_eq!((s.hits, s.misses, s.entries), (1, 1, 1));
+    }
+
+    #[test]
+    fn fusion_rewrite_is_a_refinement() {
+        // The map→red fusion this module plans, as the verifier sees
+        // it: the intermediate's node survives as `Fused`, every
+        // source/sink stays put, and SP007 stays quiet.
+        use crate::analysis::{audit_refinement, Program};
+        use crate::coordinator::plan::{NodeState, PlanOp};
+
+        let input = Program::new()
+            .op(PlanOp::Scatter, "in", &[], 4096, 4)
+            .op(PlanOp::Map { func: "AffineMap".into() }, "t", &["in"], 4096, 4)
+            .op(PlanOp::Red { func: "SumReduce".into(), output_len: 1 }, "out", &["t"], 1, 4)
+            .op(PlanOp::Gather, "out", &["out"], 1, 4);
+        let mut fused = Program::new();
+        fused.push_op(PlanOp::Scatter, "in", &[], 4096, 4, NodeState::Executed);
+        fused.push_op(
+            PlanOp::Map { func: "AffineMap".into() },
+            "t",
+            &["in"],
+            4096,
+            4,
+            NodeState::Fused,
+        );
+        fused.push_op(
+            PlanOp::Red { func: "SumReduce".into(), output_len: 1 },
+            "out",
+            &["t"],
+            1,
+            4,
+            NodeState::Executed,
+        );
+        fused.push_op(PlanOp::Gather, "out", &["out"], 1, 4, NodeState::Executed);
+        let r = audit_refinement(&input, &fused);
+        assert!(r.is_clean(), "{}", r.render());
+    }
+
+    #[test]
+    fn dropping_a_sink_is_not_a_refinement() {
+        use crate::analysis::{audit_refinement, Code, Program};
+        use crate::coordinator::plan::PlanOp;
+
+        let input = Program::new()
+            .op(PlanOp::Scatter, "in", &[], 4096, 4)
+            .op(PlanOp::Map { func: "Square".into() }, "out", &["in"], 4096, 4)
+            .op(PlanOp::Gather, "out", &["out"], 4096, 4);
+        let broken = Program::new()
+            .op(PlanOp::Scatter, "in", &[], 4096, 4)
+            .op(PlanOp::Map { func: "Square".into() }, "out", &["in"], 4096, 4);
+        let r = audit_refinement(&input, &broken);
+        assert!(r.has(Code::IllegalFusion), "{}", r.render());
     }
 
     #[test]

@@ -55,7 +55,8 @@ pub enum PlanOp {
 }
 
 impl PlanOp {
-    fn name(&self) -> String {
+    /// Display name used in `--explain` lineage and analyzer findings.
+    pub fn name(&self) -> String {
         match self {
             PlanOp::Scatter => "scatter".into(),
             PlanOp::Broadcast => "broadcast".into(),
@@ -568,6 +569,11 @@ pub struct PlanEngine {
     /// Explain-trace ring (latest `TRACE_CAP` events).
     pub(crate) trace: Vec<String>,
     pub(crate) trace_dropped: u64,
+    /// Free records for the static analyzer: `(watermark, array)` where
+    /// the watermark is the graph length at free time, so the analyzer
+    /// can interleave frees with ops in session order (the graph itself
+    /// records only ops).  Bounded like the graph.
+    pub(crate) frees: Vec<(usize, String)>,
     pub stats: PlanStats,
     /// When false, every node is forced immediately after being built
     /// and all caches/pools are bypassed — the seed's eager per-call
@@ -595,6 +601,7 @@ impl PlanEngine {
             pool: BufferPool::default(),
             trace: Vec::new(),
             trace_dropped: 0,
+            frees: Vec::new(),
             stats: PlanStats::default(),
             optimize: true,
         }
@@ -619,6 +626,13 @@ impl PlanEngine {
     ) -> NodeId {
         self.stats.nodes += 1;
         self.graph.record(op, array, inputs, elems)
+    }
+
+    /// Record a free event for the analyzer (bounded like the graph).
+    pub(crate) fn record_free(&mut self, array: &str) {
+        if self.frees.len() < MAX_RECORDED_NODES {
+            self.frees.push((self.graph.len(), array.to_string()));
+        }
     }
 
     /// Record a node that executed immediately, stamped with the
@@ -655,6 +669,11 @@ impl PimSystem {
     /// its tail is forced; upstream stages then only materialize.
     /// Materialization order is not otherwise observable.
     pub fn run(&mut self) -> Result<()> {
+        // Static-verifier boundary (DESIGN.md §19): lints the recorded
+        // session graph before anything is forced.  Read-only and a
+        // no-op under `--analyze off`, so clean plans execute with a
+        // bit- and timeline-identical schedule in every mode.
+        self.verify_plan()?;
         let mut ids: Vec<(NodeId, String)> =
             self.engine.pending.iter().map(|(k, n)| (n.node, k.clone())).collect();
         ids.sort();

@@ -165,6 +165,11 @@ pub struct ServiceConfig {
     /// How injected faults are recovered (retry budget, backoff,
     /// quarantine).
     pub recovery: RecoveryPolicy,
+    /// Static-verifier mode every job system runs under, plus the
+    /// post-drain schedule race check (DESIGN.md §19).  The `Off`
+    /// default defers to `SIMPLEPIM_ANALYZE` (resolved at
+    /// construction), mirroring the system builder's env semantics.
+    pub analyze: crate::analysis::AnalyzeMode,
 }
 
 impl ServiceConfig {
@@ -183,6 +188,7 @@ impl ServiceConfig {
             resize: ResizePolicy::Dynamic,
             faults: None,
             recovery: RecoveryPolicy::default(),
+            analyze: crate::analysis::AnalyzeMode::Off,
         }
     }
 }
@@ -195,6 +201,18 @@ pub struct JobSpec {
     class: SlaClass,
     arrival_s: f64,
     deadline_s: Option<f64>,
+}
+
+impl std::fmt::Debug for JobSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // The plan is an opaque closure; render the metadata only.
+        f.debug_struct("JobSpec")
+            .field("name", &self.name)
+            .field("class", &self.class)
+            .field("arrival_s", &self.arrival_s)
+            .field("deadline_s", &self.deadline_s)
+            .finish_non_exhaustive()
+    }
 }
 
 impl JobSpec {
@@ -218,6 +236,18 @@ pub struct JobSpecBuilder {
     class: SlaClass,
     arrival_s: f64,
     deadline_s: Option<f64>,
+}
+
+impl std::fmt::Debug for JobSpecBuilder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("JobSpecBuilder")
+            .field("name", &self.name)
+            .field("has_plan", &self.plan.is_some())
+            .field("class", &self.class)
+            .field("arrival_s", &self.arrival_s)
+            .field("deadline_s", &self.deadline_s)
+            .finish()
+    }
 }
 
 impl JobSpecBuilder {
@@ -437,6 +467,10 @@ pub(crate) struct ServiceCore {
     /// dead rank: `true` lanes never admit work (their DPUs overlap
     /// the dead rank), so their jobs re-admit onto healthy lanes.
     quarantined: Vec<bool>,
+    /// Static-verifier mode (DESIGN.md §19): threaded into every
+    /// per-job system, and gates the post-drain modeled-schedule race
+    /// check.  `Off` makes both a no-op.
+    analyze: crate::analysis::AnalyzeMode,
 }
 
 impl ServiceCore {
@@ -487,6 +521,7 @@ impl ServiceCore {
             faults: None,
             recovery: RecoveryPolicy::default(),
             quarantined: vec![false; partitions],
+            analyze: crate::util::settings::analyze_from_env()?,
         })
     }
 
@@ -573,7 +608,18 @@ impl ServiceCore {
         core.resize = sc.resize;
         core.set_sharing(sc.sharing);
         core.set_faults(sc.faults, sc.recovery)?;
+        // `Off` is the config default, under which the env resolution
+        // from `build` stands; an explicit mode overrides it.
+        if sc.analyze != crate::analysis::AnalyzeMode::Off {
+            core.analyze = sc.analyze;
+        }
         Ok(core)
+    }
+
+    /// Override the static-verifier mode for this engine and every
+    /// job system it builds (DESIGN.md §19).
+    pub(crate) fn set_analyze(&mut self, mode: crate::analysis::AnalyzeMode) {
+        self.analyze = mode;
     }
 
     pub(crate) fn set_sharing(&mut self, mode: SharedCacheMode) {
@@ -788,6 +834,7 @@ impl ServiceCore {
                 let built_sys = PimSystem::builder(cfg)
                     .backend(bk)
                     .shared_cache(self.shared.clone())
+                    .analyze(self.analyze)
                     .build();
                 match built_sys {
                     Err(e) => Err(e.to_string()),
@@ -1023,6 +1070,54 @@ impl ServiceCore {
         }
     }
 
+    /// Race-check a freshly admitted batch schedule (DESIGN.md §19).
+    ///
+    /// Each admitted job is modeled as a full-region write to its own
+    /// partition's MRAM plus, when a shared plan cache is installed, a
+    /// read of the shared broadcast window — the access pattern the
+    /// dedup pass actually aliases.  Equal partitions mean disjoint
+    /// address spaces, so a correct `schedule_jobs_masked` admission
+    /// is clean by construction; any SP101/SP103/SP104 finding here is
+    /// a scheduler bug, not a workload bug.  No-op under `Off`.
+    fn verify_batch_schedule(&self, sched: &crate::timing::JobSchedule) -> Result<()> {
+        use crate::analysis::{AnalyzeMode, RegionAccess, Space};
+        if self.analyze == AnalyzeMode::Off {
+            return Ok(());
+        }
+        let mut accesses = Vec::with_capacity(sched.len() * 2);
+        for job in 0..sched.len() {
+            accesses.push(RegionAccess {
+                job,
+                space: Space::Partition(sched.partition[job]),
+                lo: 0,
+                hi: u64::MAX,
+                write: true,
+            });
+            if self.shared.is_some() {
+                accesses.push(RegionAccess {
+                    job,
+                    space: Space::Shared,
+                    lo: 0,
+                    hi: 4096,
+                    write: false,
+                });
+            }
+        }
+        // Batch drains treat a declared dead rank as dead for the
+        // whole drain (see `set_faults`), hence `dead_at` of None.
+        let report =
+            crate::analysis::verify_schedule(sched, &accesses, &self.quarantined, None);
+        if !report.is_clean() {
+            for d in &report.diagnostics {
+                eprintln!("simplepim: analyze: {d}");
+            }
+            if self.analyze == AnalyzeMode::Deny {
+                return report.into_result();
+            }
+        }
+        Ok(())
+    }
+
     /// Execute every pending batch job, then admit the batch onto the
     /// partition lanes — PR 5's drain, verbatim.
     ///
@@ -1061,6 +1156,7 @@ impl ServiceCore {
         let shared = &self.shared;
         let faults = self.faults.clone();
         let recovery = self.recovery;
+        let analyze = self.analyze;
         let names = &self.names;
         std::thread::scope(|s| {
             for wid in 0..workers {
@@ -1081,6 +1177,7 @@ impl ServiceCore {
                             PimSystem::builder(cfg.clone())
                                 .backend(b)
                                 .shared_cache(shared.clone())
+                                .analyze(analyze)
                                 .build()
                         }) {
                             Err(e) => Err(e.to_string()),
@@ -1156,6 +1253,7 @@ impl ServiceCore {
             &mut self.lanes,
             &self.quarantined,
         );
+        self.verify_batch_schedule(&sched)?;
         let mut admitted = 0;
         for (idx, res) in done {
             let stored = match res {
@@ -1263,6 +1361,21 @@ impl ServiceCore {
 /// module docs for the model.
 pub struct PimService {
     inner: Mutex<ServiceCore>,
+}
+
+impl std::fmt::Debug for PimService {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Don't block (or propagate a poison panic) just to Debug-print:
+        // render the shape when the engine is free, a marker otherwise.
+        match self.inner.try_lock() {
+            Ok(core) => f
+                .debug_struct("PimService")
+                .field("partitions", &core.partitions())
+                .field("partition_dpus", &core.partition_dpus())
+                .finish_non_exhaustive(),
+            Err(_) => f.debug_struct("PimService").field("inner", &"<locked>").finish(),
+        }
+    }
 }
 
 impl PimService {

@@ -190,6 +190,7 @@ impl SharedPlanCache {
 
 /// The cache a reduction plan consults: the engine's private LRU
 /// (single-tenant default) or the cross-tenant shared cache.
+#[derive(Debug)]
 pub enum CacheRef<'a> {
     Private(&'a mut PlanCache),
     Shared(&'a SharedPlanCache),

@@ -64,6 +64,12 @@ pub enum Error {
     /// saturation until every deadline was already blown.
     Saturated(String),
 
+    /// The static verifier (DESIGN.md §19) found error-severity
+    /// diagnostics and the analyze mode is `deny`: the plan is refused
+    /// before execution.  Carries the finding count and the first
+    /// diagnostic with its stable `SPxxx` code.
+    Analysis(String),
+
     /// Anything else.
     Msg(String),
 }
@@ -84,6 +90,7 @@ impl fmt::Display for Error {
             Error::Fault(e) => write!(f, "fault: {e}"),
             Error::JobPanicked(name) => write!(f, "job panicked: {name}"),
             Error::Saturated(e) => write!(f, "saturated: {e}"),
+            Error::Analysis(e) => write!(f, "analysis: {e}"),
             Error::Msg(e) => write!(f, "{e}"),
         }
     }
@@ -138,6 +145,10 @@ mod tests {
             "fault: dead-letter after 3 retries"
         );
         assert_eq!(Error::JobPanicked("mlp#2".into()).to_string(), "job panicked: mlp#2");
+        assert_eq!(
+            Error::Analysis("1 finding(s), first: [SP002] ...".into()).to_string(),
+            "analysis: 1 finding(s), first: [SP002] ..."
+        );
         assert_eq!(Error::msg("plain").to_string(), "plain");
     }
 

@@ -27,6 +27,13 @@
 //! See DESIGN.md for the system inventory and the per-experiment index,
 //! and EXPERIMENTS.md for paper-vs-measured results.
 
+// Crate-wide hardening (DESIGN.md §19): unsafe code is denied except
+// for the four audited LE-marshalling fast paths and the PJRT literal
+// view, each carrying a scoped allow + SAFETY comment.
+#![deny(unsafe_code)]
+#![warn(missing_debug_implementations, rust_2018_idioms)]
+
+pub mod analysis;
 pub mod backend;
 pub mod cli;
 pub mod coordinator;
@@ -38,6 +45,7 @@ pub mod timing;
 pub mod util;
 pub mod workloads;
 
+pub use analysis::AnalyzeMode;
 pub use coordinator::PimSystem;
 pub use error::{Error, Result};
 pub use pim::PimConfig;

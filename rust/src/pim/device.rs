@@ -7,6 +7,7 @@
 //! through this type, so functional bytes and modeled seconds stay in
 //! sync by construction.
 
+use crate::analysis::XferRecord;
 use crate::backend::{ExecBackend, LaunchStatus};
 use crate::error::{Error, Result};
 
@@ -302,6 +303,12 @@ impl DpuSet {
     }
 }
 
+/// Cap on the sanitizer's transfer log.  Beyond this the machine stops
+/// recording (a sound truncation: the audit over the retained prefix
+/// never sees a read whose matching write was dropped, because drops
+/// only ever discard *later* records).
+const MAX_XFER_RECORDS: usize = 4096;
+
 /// The simulated machine.
 pub struct PimMachine {
     pub cfg: PimConfig,
@@ -312,13 +319,32 @@ pub struct PimMachine {
     /// §18).  `None` (the default) keeps every timed path exactly as
     /// it was: no draws, no checksums, no extra lanes.
     faults: Option<(FaultSession, RecoveryPolicy)>,
+    /// Sanitizer mode (DESIGN.md §19): when armed, every timed row
+    /// transfer appends an [`XferRecord`] with an FNV digest of the
+    /// rows it moved, so the analyzer's static verdicts can be
+    /// cross-checked against what the device actually saw.  Off by
+    /// default — recording never perturbs bytes or modeled seconds,
+    /// but it is debug instrumentation, not part of `--analyze`.
+    sanitize: bool,
+    xfer_log: Vec<XferRecord>,
+    /// Records discarded once the log hit [`MAX_XFER_RECORDS`].
+    xfer_dropped: u64,
 }
 
 impl PimMachine {
     pub fn new(cfg: PimConfig) -> Self {
         let banks = (0..cfg.n_dpus).map(|_| MramBank::new(cfg.mram_bytes)).collect();
         let allocator = MramAllocator::new(cfg.mram_bytes, cfg.dma_align);
-        PimMachine { cfg, banks, allocator, timeline: Timeline::default(), faults: None }
+        PimMachine {
+            cfg,
+            banks,
+            allocator,
+            timeline: Timeline::default(),
+            faults: None,
+            sanitize: false,
+            xfer_log: Vec::new(),
+            xfer_dropped: 0,
+        }
     }
 
     /// Arm fault injection on this lane: fork the plan's seeded stream
@@ -332,6 +358,51 @@ impl PimMachine {
     /// dead-letter message renders the same history).
     pub fn fault_events(&self) -> &[FaultEvent] {
         self.faults.as_ref().map(|(s, _)| s.events.as_slice()).unwrap_or(&[])
+    }
+
+    /// Arm or disarm the transfer sanitizer (DESIGN.md §19).  Arming
+    /// clears any previous log so a report covers one armed window.
+    pub fn set_sanitizer(&mut self, on: bool) {
+        if on && !self.sanitize {
+            self.xfer_log.clear();
+            self.xfer_dropped = 0;
+        }
+        self.sanitize = on;
+    }
+
+    /// Whether the transfer sanitizer is currently recording.
+    pub fn sanitizer_enabled(&self) -> bool {
+        self.sanitize
+    }
+
+    /// Recorded transfers, in device order (empty when disarmed).
+    pub fn xfer_log(&self) -> &[XferRecord] {
+        &self.xfer_log
+    }
+
+    /// Append one sanitizer record: digest the `row_len` bytes at
+    /// `addr` on every bank *as the device holds them now* — after a
+    /// write, before a read — so a static verdict of "this region is
+    /// what was shipped" can be replayed against real bank state.  A
+    /// bank too small for the row skips recording (the transfer itself
+    /// already failed loudly); a full log drops silently but counts.
+    fn sanitize_record(&mut self, write: bool, addr: u64, row_len: u64, what: &'static str) {
+        if !self.sanitize {
+            return;
+        }
+        if self.xfer_log.len() >= MAX_XFER_RECORDS {
+            self.xfer_dropped += 1;
+            return;
+        }
+        let mut rows = Vec::with_capacity(self.banks.len());
+        for bank in &self.banks {
+            match bank.read(addr, row_len) {
+                Ok(bytes) => rows.push(bytes.to_vec()),
+                Err(_) => return,
+            }
+        }
+        let digest = super::faults::checksum_rows(&rows);
+        self.xfer_log.push(XferRecord { write, addr, row_len, digest, what });
     }
 
     pub fn n_dpus(&self) -> usize {
@@ -414,7 +485,9 @@ impl PimMachine {
         exec: &dyn ExecBackend,
         fill: &(dyn Fn(usize, &mut [u8]) + Sync),
     ) -> Result<()> {
-        exec.write_rows(&mut self.banks, addr, row_len, fill)
+        exec.write_rows(&mut self.banks, addr, row_len, fill)?;
+        self.sanitize_record(true, addr, row_len as u64, "sharded row write");
+        Ok(())
     }
 
     /// Timed parallel push with on-demand row marshalling: functionally
@@ -429,6 +502,7 @@ impl PimMachine {
         fill: &(dyn Fn(usize, &mut [u8]) + Sync),
     ) -> Result<()> {
         exec.write_rows(&mut self.banks, addr, row_len, fill)?;
+        self.sanitize_record(true, addr, row_len as u64, "sharded row scatter");
         let n = self.banks.len();
         let t = transfer_seconds(&self.cfg, XferKind::Parallel, n, row_len as u64);
         self.guard_transfer(t, None, "sharded row scatter")?;
@@ -460,6 +534,7 @@ impl PimMachine {
         take: &(dyn Fn(usize) -> u64 + Sync),
     ) -> Result<Vec<Vec<i32>>> {
         let out = exec.read_rows(&self.banks, addr, take)?;
+        self.sanitize_record(false, addr, row_len, "sharded row gather");
         let n = self.banks.len();
         let t = transfer_seconds(&self.cfg, XferKind::Parallel, n, row_len);
         self.guard_transfer(t, None, "sharded row gather")?;
@@ -631,6 +706,7 @@ impl PimMachine {
         for (dpu, buf) in per_dpu.iter().enumerate() {
             self.bank_mut(dpu)?.write(addr, buf)?;
         }
+        self.sanitize_record(true, addr, len as u64, "parallel push");
         let t = transfer_seconds(&self.cfg, XferKind::Parallel, per_dpu.len(), len as u64);
         self.guard_transfer(t, Some(first), "parallel push")?;
         self.timeline.host_to_pim_s += t;
@@ -645,6 +721,7 @@ impl PimMachine {
         for dpu in 0..n_dpus {
             out.push(self.bank(dpu)?.read(addr, len)?.to_vec());
         }
+        self.sanitize_record(false, addr, len, "parallel pull");
         let t = transfer_seconds(&self.cfg, XferKind::Parallel, n_dpus, len);
         self.guard_transfer(t, out.first().map(|b| b.as_slice()), "parallel pull")?;
         self.timeline.pim_to_host_s += t;
@@ -657,6 +734,7 @@ impl PimMachine {
         for dpu in 0..self.n_dpus() {
             self.bank_mut(dpu)?.write(addr, bytes)?;
         }
+        self.sanitize_record(true, addr, bytes.len() as u64, "broadcast push");
         let t =
             transfer_seconds(&self.cfg, XferKind::Broadcast, self.n_dpus(), bytes.len() as u64);
         self.guard_transfer(t, Some(bytes), "broadcast push")?;
@@ -791,6 +869,20 @@ impl PimMachine {
         let threads = self.cfg.host_threads.max(1) as f64;
         let per_thread = elems as f64 / threads;
         self.timeline.host_merge_s += per_thread / self.cfg.host_merge_rate;
+    }
+}
+
+impl std::fmt::Debug for PimMachine {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // Compact: banks hold up to 64 MiB each; render shape, not bytes.
+        f.debug_struct("PimMachine")
+            .field("n_dpus", &self.banks.len())
+            .field("mram_used", &self.allocator.used())
+            .field("total_s", &self.timeline.total_s())
+            .field("faults", &self.faults.is_some())
+            .field("sanitize", &self.sanitize)
+            .field("xfer_records", &self.xfer_log.len())
+            .finish_non_exhaustive()
     }
 }
 
@@ -1202,6 +1294,52 @@ mod tests {
         m.guarded_launch(0.5, exec.as_ref()).unwrap();
         let t = m.timeline();
         assert_eq!((t.launches, t.kernel_s, t.retry_s), (1, 0.5, 0.0));
+    }
+
+    #[test]
+    fn sanitizer_records_transfers_without_perturbing_time_or_bytes() {
+        let mut plain = machine();
+        let mut armed = machine();
+        armed.set_sanitizer(true);
+        assert!(armed.sanitizer_enabled());
+        let addr_p = plain.alloc(16).unwrap();
+        let addr_a = armed.alloc(16).unwrap();
+        let bufs: Vec<Vec<u8>> = (0..4).map(|d| vec![d as u8 + 1; 16]).collect();
+        plain.push_parallel(addr_p, &bufs).unwrap();
+        armed.push_parallel(addr_a, &bufs).unwrap();
+        let rp = plain.pull_parallel(addr_p, 16, 4).unwrap();
+        let ra = armed.pull_parallel(addr_a, 16, 4).unwrap();
+        assert_eq!(rp, ra, "sanitizer never touches functional bytes");
+        assert_eq!(plain.timeline(), armed.timeline(), "...or modeled time");
+        assert!(plain.xfer_log().is_empty(), "disarmed machines record nothing");
+        let log = armed.xfer_log();
+        assert_eq!(log.len(), 2);
+        assert!(log[0].write && !log[1].write);
+        assert_eq!((log[0].addr, log[0].row_len), (addr_a, 16));
+        assert_eq!(log[0].digest, log[1].digest, "untouched region digests agree");
+        // Re-arming opens a fresh window.
+        armed.set_sanitizer(true);
+        assert_eq!(armed.xfer_log().len(), 2, "arming while armed keeps the log");
+        armed.set_sanitizer(false);
+        armed.set_sanitizer(true);
+        assert!(armed.xfer_log().is_empty());
+    }
+
+    #[test]
+    fn sanitizer_sees_out_of_band_corruption() {
+        let mut m = machine();
+        m.set_sanitizer(true);
+        let addr = m.alloc(16).unwrap();
+        let bufs: Vec<Vec<u8>> = (0..4).map(|_| vec![3u8; 16]).collect();
+        m.push_parallel(addr, &bufs).unwrap();
+        // write_bytes is deliberately unrecorded: it is the raw debug
+        // backdoor, so a byte smashed through it shows up as a digest
+        // mismatch on the next recorded read.
+        m.write_bytes(2, addr, &[0xFF]).unwrap();
+        m.pull_parallel(addr, 16, 4).unwrap();
+        let log = m.xfer_log();
+        assert_eq!(log.len(), 2);
+        assert_ne!(log[0].digest, log[1].digest, "corruption must change the digest");
     }
 
     #[test]

@@ -26,6 +26,16 @@ pub struct Wram {
     heap: usize,
 }
 
+impl std::fmt::Debug for Wram {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        // 64 KB of scratchpad bytes: render the shape, not the data.
+        f.debug_struct("Wram")
+            .field("bytes", &self.data.len())
+            .field("heap", &self.heap)
+            .finish()
+    }
+}
+
 impl Wram {
     pub fn new(cfg: &PimConfig) -> Self {
         Wram { data: vec![0u8; cfg.wram_bytes as usize], heap: 0 }
@@ -93,6 +103,16 @@ pub struct DpuCtx<'m> {
     pub dma: DmaLog,
 }
 
+impl std::fmt::Debug for DpuCtx<'_> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("DpuCtx")
+            .field("dpu", &self.dpu)
+            .field("wram", &self.wram)
+            .field("dma", &self.dma)
+            .finish_non_exhaustive()
+    }
+}
+
 impl<'m> DpuCtx<'m> {
     pub fn new(machine: &'m mut PimMachine, dpu: usize) -> Self {
         let wram = Wram::new(&machine.cfg.clone());
@@ -133,7 +153,7 @@ impl<'m> DpuCtx<'m> {
 /// instruction mix into kernel time.
 pub fn launch_on_all<F>(machine: &mut PimMachine, mut kernel: F) -> Result<Vec<DmaLog>>
 where
-    F: FnMut(&mut DpuCtx) -> Result<()>,
+    F: FnMut(&mut DpuCtx<'_>) -> Result<()>,
 {
     let n = machine.n_dpus();
     let mut logs = Vec::with_capacity(n);

@@ -180,10 +180,12 @@ pub fn cmd_figures(args: &Args) -> Result<()> {
 /// of the box on machines without artifacts or the `pjrt` feature).
 fn cli_system(cfg: PimConfig, host_only: bool, args: &Args) -> Result<PimSystem> {
     let (kind, threads, pipeline) = exec_selection(args)?;
+    let analyze = analyze_knob(args)?;
     let build = |cfg: PimConfig, with_runtime: bool| -> Result<PimSystem> {
         let mut b = PimSystem::builder(cfg)
             .backend(backend::make(kind, threads)?)
-            .pipeline(pipeline);
+            .pipeline(pipeline)
+            .analyze(analyze);
         if with_runtime {
             b = b.load_runtime();
         }
@@ -278,6 +280,16 @@ pub(crate) fn topology_line(cfg: &PimConfig) -> String {
 /// over `SIMPLEPIM_SHARED_CACHE`, defaulting to off (the share-nothing
 /// PR 5 scheduler).  Garbage in either place is a hard config error —
 /// house rule: zero/garbage env never silently falls back.
+/// Resolve the static-verifier mode (DESIGN.md §19): `--analyze
+/// {off,warn,deny}` over `SIMPLEPIM_ANALYZE`, defaulting to off.
+/// Garbage in either place is a hard config error.
+fn analyze_knob(args: &Args) -> Result<crate::analysis::AnalyzeMode> {
+    match args.flag("analyze") {
+        Some(v) => settings::parse_analyze("--analyze", v),
+        None => settings::analyze_from_env(),
+    }
+}
+
 fn shared_cache_knob(args: &Args) -> Result<SharedCacheMode> {
     if let Some(v) = args.flag("shared-cache") {
         return SharedCacheMode::parse(v);
@@ -358,6 +370,7 @@ fn cmd_jobs(args: &Args) -> Result<()> {
     let (faults, recovery) = fault_knobs(args)?;
     let topo = topology_line(&cfg);
     let mut queue = JobQueue::new(cfg, partitions, kind, threads, pipeline)?;
+    queue.set_analyze(analyze_knob(args)?);
     queue.set_sharing(sharing);
     queue.set_faults(faults.clone(), recovery)?;
     println!(
@@ -509,6 +522,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
     let (kind, threads, pipeline) = exec_selection(args)?;
     let sharing = shared_cache_knob(args)?;
     let (faults, recovery) = fault_knobs(args)?;
+    let analyze = analyze_knob(args)?;
 
     // Deterministic open-loop trace: Poisson arrivals from the seeded
     // PRNG (tag 6, so `--seed` moves the whole trace), workloads and
@@ -528,6 +542,7 @@ pub fn cmd_serve(args: &Args) -> Result<()> {
         sc.resize = resize;
         sc.faults = faults.clone();
         sc.recovery = recovery;
+        sc.analyze = analyze;
         PimService::new(sc)
     };
     let submit_trace = |svc: &PimService| -> Result<u64> {
@@ -760,6 +775,62 @@ pub fn cmd_run(args: &Args) -> Result<()> {
             stats.execute_s * 1e3,
             stats.readback_s * 1e3
         );
+    }
+    Ok(())
+}
+
+/// `analyze` subcommand: lint workloads' plan graphs (DESIGN.md §19)
+/// without pricing or reporting a run.  Each named workload (or `all`)
+/// is replayed host-only at a small size — functional execution is the
+/// plan recorder — and the dataflow lint + state audit runs over the
+/// recorded graph.  Under `--analyze deny` any error-severity finding
+/// fails the command; the default mode here is `warn` (an explicit
+/// `--analyze off` still prints reports, since printing them is the
+/// command's whole job).
+pub fn cmd_analyze(args: &Args) -> Result<()> {
+    use crate::analysis::AnalyzeMode;
+    let which = args.positional.first().map(|s| s.as_str()).unwrap_or("all");
+    let all_names: Vec<&'static str> = workloads::all().iter().map(|w| w.name).collect();
+    let names: Vec<&str> =
+        if which == "all" { all_names } else { which.split(',').collect() };
+    let mode = analyze_knob(args)?;
+    let cfg = machine_config(args, 16)?;
+    let elems = args.flag_usize("elems", 30_000)?;
+    println!(
+        "analyze: {} workload(s) | mode {} | topology: {}",
+        names.len(),
+        mode.as_str(),
+        topology_line(&cfg),
+    );
+    let mut errors = 0usize;
+    let mut warnings = 0usize;
+    for name in &names {
+        // Analyze mode `Off` on the recorder system: this command is
+        // the single enforcement point, so the replay itself never
+        // trips the in-run verifier.
+        let mut sys = PimSystem::builder(cfg.clone())
+            .backend(backend::make(BackendKind::Seq, 1)?)
+            .analyze(AnalyzeMode::Off)
+            .build()?;
+        run_workload(&mut sys, name, elems)?;
+        let report = sys.analysis_report();
+        errors += report.errors();
+        warnings += report.warnings();
+        println!("\n  {name}:");
+        for line in report.render().lines() {
+            println!("  {line}");
+        }
+    }
+    println!(
+        "\nanalyze: {} error(s), {} warning(s) across {} workload(s)",
+        errors,
+        warnings,
+        names.len(),
+    );
+    if mode == AnalyzeMode::Deny && errors > 0 {
+        return Err(Error::Analysis(format!(
+            "{errors} error-severity finding(s) under --analyze deny"
+        )));
     }
     Ok(())
 }

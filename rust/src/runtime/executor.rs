@@ -62,6 +62,16 @@ pub struct Runtime {
 }
 
 #[cfg(feature = "pjrt")]
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime")
+            .field("cached_executables", &self.cache.borrow().len())
+            .field("stats", &self.stats.borrow())
+            .finish_non_exhaustive()
+    }
+}
+
+#[cfg(feature = "pjrt")]
 impl Runtime {
     /// Load the manifest in `dir` and start a PJRT CPU client.
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
@@ -106,6 +116,7 @@ impl Runtime {
 
     /// Execute artifact `name` on int32 inputs; returns the flattened
     /// int32 outputs in declaration order.
+    #[allow(unsafe_code)] // zero-copy i32->byte view for the literal constructor
     pub fn execute_i32(&self, name: &str, inputs: &[TensorRef<'_>]) -> Result<Vec<Vec<i32>>> {
         use crate::error::Error;
         use std::time::Instant;
@@ -229,6 +240,13 @@ impl Runtime {
 pub struct Runtime {
     pub manifest: Manifest,
     stats: RefCell<ExecStats>,
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl std::fmt::Debug for Runtime {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Runtime").field("stats", &self.stats.borrow()).finish_non_exhaustive()
+    }
 }
 
 #[cfg(not(feature = "pjrt"))]

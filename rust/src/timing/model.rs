@@ -221,6 +221,15 @@ impl JobSchedule {
     pub fn makespan_s(&self) -> f64 {
         self.finish_s.iter().fold(0.0f64, |a, &b| a.max(b))
     }
+
+    /// Whether jobs `i` and `j` occupy overlapping time windows.
+    /// Windows are half-open `[start, finish)`, so a job starting
+    /// exactly when another finishes does not overlap it, and
+    /// zero-length windows overlap nothing — the interval algebra the
+    /// happens-before race detector (`analysis::races`) builds on.
+    pub fn overlaps(&self, i: usize, j: usize) -> bool {
+        self.start_s[i] < self.finish_s[j] && self.start_s[j] < self.finish_s[i]
+    }
 }
 
 /// Deterministic earliest-free admission (classic list scheduling):
@@ -795,6 +804,19 @@ mod tests {
         ftl.bytes_h2p = bytes;
         let (fu, _) = rank_utilization(&c, &ftl);
         assert!(fu.unwrap() < 0.2, "flat time against topo capacity");
+    }
+
+    #[test]
+    fn schedule_window_overlap_is_half_open() {
+        let s = JobSchedule {
+            partition: vec![0, 1, 0],
+            start_s: vec![0.0, 1.0, 2.0],
+            finish_s: vec![2.0, 3.0, 2.0],
+        };
+        assert!(s.overlaps(0, 1), "[0,2) and [1,3) share [1,2)");
+        assert!(!s.overlaps(1, 2), "zero-length [2,2) overlaps nothing");
+        assert!(!s.overlaps(0, 2));
+        assert!(s.overlaps(1, 1), "a real window overlaps itself");
     }
 
     #[test]

@@ -47,6 +47,7 @@ pub const ENV_REQUIRE_BASELINE: &str = "SIMPLEPIM_REQUIRE_BASELINE";
 pub const ENV_FAULTS: &str = "SIMPLEPIM_FAULTS";
 pub const ENV_FAULT_RETRIES: &str = "SIMPLEPIM_FAULT_RETRIES";
 pub const ENV_FAULT_BACKOFF: &str = "SIMPLEPIM_FAULT_BACKOFF";
+pub const ENV_ANALYZE: &str = "SIMPLEPIM_ANALYZE";
 
 /// Where a resolved value came from (the precedence chain, highest
 /// first).
@@ -104,6 +105,7 @@ pub struct Layer {
     pub faults: Option<String>,
     pub fault_retries: Option<String>,
     pub fault_backoff: Option<String>,
+    pub analyze: Option<String>,
 }
 
 /// Every `SIMPLEPIM_*` knob, resolved and typed.
@@ -131,6 +133,9 @@ pub struct Settings {
     pub fault_retries: Resolved<u32>,
     /// Base of the exponential retry backoff, in modeled seconds.
     pub fault_backoff: Resolved<f64>,
+    /// Static-verifier enforcement (DESIGN.md §19): `off`, `warn`, or
+    /// `deny`.
+    pub analyze: Resolved<crate::analysis::AnalyzeMode>,
 }
 
 impl Settings {
@@ -227,6 +232,10 @@ impl Settings {
                 Provenance::Default,
             ),
         };
+        let analyze = match pick(&api.analyze, &flags.analyze, ENV_ANALYZE, "--analyze") {
+            Some((src, v, p)) => Resolved::new(parse_analyze(&src, &v)?, p),
+            None => Resolved::new(crate::analysis::AnalyzeMode::Off, Provenance::Default),
+        };
         Ok(Settings {
             backend,
             threads,
@@ -242,6 +251,7 @@ impl Settings {
             faults,
             fault_retries,
             fault_backoff,
+            analyze,
         })
     }
 
@@ -319,6 +329,7 @@ impl Settings {
             format!("{}s", self.fault_backoff.value),
             self.fault_backoff.source,
         );
+        row("analyze", self.analyze.value.to_string(), self.analyze.source);
         out
     }
 }
@@ -424,6 +435,13 @@ pub fn parse_engine(src: &str, v: &str) -> Result<&'static str> {
     }
 }
 
+/// Parse an analyzer mode; garbage names the source and the value.
+pub fn parse_analyze(src: &str, v: &str) -> Result<crate::analysis::AnalyzeMode> {
+    crate::analysis::AnalyzeMode::parse(v).ok_or_else(|| {
+        Error::Config(format!("invalid {src}=`{v}` (expected off, warn, or deny)"))
+    })
+}
+
 // ---------------------------------------------------------------------
 // Single-knob environment reads for the legacy delegates.
 // ---------------------------------------------------------------------
@@ -475,6 +493,14 @@ pub fn require_baseline_from_env() -> bool {
     std::env::var(ENV_REQUIRE_BASELINE).map(|v| !v.is_empty() && v != "0").unwrap_or(false)
 }
 
+/// `SIMPLEPIM_ANALYZE` from the environment; `Off` when unset.
+pub fn analyze_from_env() -> Result<crate::analysis::AnalyzeMode> {
+    match std::env::var(ENV_ANALYZE) {
+        Ok(v) => parse_analyze(ENV_ANALYZE, &v),
+        Err(_) => Ok(crate::analysis::AnalyzeMode::Off),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -524,6 +550,14 @@ mod tests {
         assert!(parse_engine("SIMPLEPIM_ENGINE", "cuda").is_err());
         assert!(parse_on_off("--shared-cache", "on").unwrap());
         assert!(!parse_on_off("--shared-cache", "off").unwrap());
+        assert_eq!(
+            parse_analyze("--analyze", "deny").unwrap(),
+            crate::analysis::AnalyzeMode::Deny
+        );
+        assert_eq!(
+            parse_analyze("--analyze", "loud").unwrap_err().to_string(),
+            "config: invalid --analyze=`loud` (expected off, warn, or deny)"
+        );
     }
 
     #[test]
@@ -551,6 +585,7 @@ mod tests {
             "faults",
             "fault-retries",
             "fault-backoff",
+            "analyze",
         ] {
             assert!(table.contains(knob), "missing `{knob}` in:\n{table}");
         }

@@ -51,6 +51,7 @@ pub const RED_EPILOGUE_SIMPLEPIM_S: f64 = 1.5e-3;
 pub const RED_EPILOGUE_BASELINE_S: f64 = 1.0e-3;
 
 /// One registry entry per paper workload.
+#[derive(Debug)]
 pub struct WorkloadInfo {
     pub name: &'static str,
     /// Weak-scaling elements per DPU (paper §5.1).
